@@ -1,0 +1,81 @@
+//! Coordinator micro-benchmarks (criterion-style via util::minibench):
+//! the L3 hot-path data structures — staleness gate, replay buffer,
+//! Algorithm-1 allocation, advantage estimation, tokenizer, sampler.
+//! These must never be the bottleneck next to multi-ms XLA executions.
+
+use areal::algo::{AdvantageEstimator, Baseline};
+use areal::coordinator::batching::{dynamic_allocate, standard_allocate};
+use areal::coordinator::{ReplayBuffer, StalenessGate, Trajectory};
+use areal::tasks::Prompt;
+use areal::text::Tokenizer;
+use areal::util::minibench::{black_box, Bench};
+use areal::util::rng::{sample_logits, Rng};
+
+fn traj(version: u64, group: u64, len: usize) -> Trajectory {
+    Trajectory {
+        prompt: Prompt { text: "Q".into(), meta: "m".into(), level: 1, group },
+        tokens: vec![5; len],
+        prompt_len: 4,
+        behav_logp: vec![-0.5; len - 4],
+        segments: vec![(version, len - 4)],
+        version_born: version,
+        reward: 5.0,
+        correct: true,
+        truncated: false,
+        worker: 0,
+    }
+}
+
+fn main() {
+    let b = Bench::default();
+    println!("== coordinator micro-benchmarks ==");
+
+    let gate = StalenessGate::new(512, Some(4));
+    b.run("staleness_gate_try_submit", || {
+        black_box(gate.try_submit(black_box(1_000_000)));
+    })
+    .report();
+
+    b.run_throughput("replay_buffer_push_pop_512", 512.0, || {
+        let buf = ReplayBuffer::new();
+        for i in 0..512 {
+            buf.push(traj(i % 7, i, 64));
+        }
+        black_box(buf.pop_batch(512).unwrap());
+    })
+    .report();
+
+    let mut rng = Rng::new(1);
+    let lens: Vec<usize> = (0..512).map(|_| rng.range_usize(16, 2048)).collect();
+    b.run("dynamic_allocate_512seqs (Alg.1)", || {
+        black_box(dynamic_allocate(black_box(&lens), 32768, 4, 64));
+    })
+    .report();
+    b.run("standard_allocate_512seqs", || {
+        black_box(standard_allocate(black_box(&lens), 4, 64));
+    })
+    .report();
+
+    let est = AdvantageEstimator { baseline: Baseline::GroupMean, normalize: true };
+    let rewards: Vec<(u64, f32)> = (0..8192)
+        .map(|i| (i / 16, if i % 3 == 0 { 5.0 } else { -5.0 }))
+        .collect();
+    b.run_throughput("advantages_8192seqs", 8192.0, || {
+        black_box(est.advantages(black_box(&rewards)));
+    })
+    .report();
+
+    let tok = Tokenizer::new();
+    b.run_throughput("tokenizer_encode_decode", 21.0, || {
+        let ids = tok.encode(black_box("Q47+85=C12,13,A132E"));
+        black_box(tok.decode(&ids));
+    })
+    .report();
+
+    let logits: Vec<f32> = (0..48).map(|i| (i as f32 * 0.37).sin()).collect();
+    let mut srng = Rng::new(2);
+    b.run("sample_logits_48vocab", || {
+        black_box(sample_logits(&mut srng, black_box(&logits), 1.0));
+    })
+    .report();
+}

@@ -1,0 +1,146 @@
+//! Real-runtime benchmarks over the AOT artifacts (nano tier): per-call
+//! wall time of prefill / decode-chunk / logprob / train_step, the
+//! generation engine's tokens/s, and the Fig-6a dynamic-vs-standard
+//! train-phase comparison on the real executor. These are the numbers the
+//! §Perf pass in EXPERIMENTS.md tracks.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use areal::coordinator::GenEngine;
+use areal::runtime::{Engine, HostTensor, Manifest, ParamSet};
+use areal::tasks::{SortTask, Task};
+use areal::util::minibench::{black_box, Bench};
+use areal::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+    let spec = manifest.tier("nano")?.clone();
+    println!("== runtime benchmarks (tier nano, {} params) ==",
+             spec.config.param_count);
+    let engine = Arc::new(Engine::load(&spec)?);
+    let params = ParamSet::init(&engine, [1, 2])?;
+    let cfg = &engine.spec.config;
+    let (b, t, bt, chunk) = (cfg.gen_batch, cfg.max_seq, cfg.train_batch, cfg.chunk);
+
+    let bench = Bench::quick();
+    let mut rng = Rng::new(3);
+
+    // prefill
+    let tokens = HostTensor::i32(
+        vec![b, t],
+        (0..b * t).map(|i| ((i % 40) + 3) as i32).collect(),
+    )
+    .to_literal()?;
+    let lens = HostTensor::i32(vec![b], vec![8; b]).to_literal()?;
+    let seed = HostTensor::u32(vec![2], vec![1, 2]).to_literal()?;
+    let temp = HostTensor::scalar_f32(1.0).to_literal()?;
+    let mut inputs: Vec<&xla::Literal> = params.refs();
+    inputs.push(&tokens);
+    inputs.push(&lens);
+    inputs.push(&seed);
+    inputs.push(&temp);
+    bench
+        .run(&format!("prefill [{b}x{t}]"), || {
+            black_box(engine.run("prefill", &inputs).unwrap());
+        })
+        .report();
+
+    // decode chunk via the generation engine (includes host bookkeeping)
+    let task = SortTask;
+    let r = bench.run_throughput(
+        &format!("gen_engine decode chunk [{b} slots x {chunk} tok]"),
+        (b * chunk) as f64,
+        {
+            let engine = Arc::clone(&engine);
+            let params = Arc::clone(&params);
+            let mut gen = GenEngine::new(engine, params, 0, 1.0, 11);
+            let mut seeder = Rng::new(5);
+            move || {
+                if gen.all_empty() || gen.empty_slots() > 0 {
+                    let mut ps: Vec<_> = (0..gen.empty_slots())
+                        .map(|_| task.sample(&mut seeder, 3))
+                        .collect();
+                    gen.fill(&mut ps).unwrap();
+                }
+                if gen.needs_prefill() {
+                    gen.prefill().unwrap();
+                }
+                black_box(gen.decode_chunk().unwrap());
+            }
+        },
+    );
+    r.report();
+
+    // logprob (π_prox recompute)
+    let ttok = HostTensor::i32(
+        vec![bt, t],
+        (0..bt * t).map(|i| ((i % 40) + 3) as i32).collect(),
+    )
+    .to_literal()?;
+    let mut inputs: Vec<&xla::Literal> = params.refs();
+    inputs.push(&ttok);
+    bench
+        .run(&format!("logprob [{bt}x{t}]"), || {
+            black_box(engine.run("logprob", &inputs).unwrap());
+        })
+        .report();
+
+    // train_step full-T vs half-T (the Fig-6a routing delta)
+    for entry in ["train_step", "train_step_h"] {
+        let tt = if entry.ends_with("_h") { t / 2 } else { t };
+        let toks = HostTensor::i32(
+            vec![bt, tt],
+            (0..bt * tt).map(|i| ((i % 40) + 3) as i32).collect(),
+        )
+        .to_literal()?;
+        let mask = HostTensor::f32(vec![bt, tt], vec![1.0; bt * tt]).to_literal()?;
+        let zeros = HostTensor::f32(
+            vec![bt, tt],
+            (0..bt * tt).map(|_| rng.next_f32() * 0.1 - 0.5).collect(),
+        )
+        .to_literal()?;
+        let step = HostTensor::scalar_i32(0).to_literal()?;
+        let lr = HostTensor::scalar_f32(1e-4).to_literal()?;
+        let m: Vec<xla::Literal> = spec
+            .params
+            .iter()
+            .map(|(_, s)| HostTensor::zeros_f32(s.clone()).to_literal().unwrap())
+            .collect();
+        let v: Vec<xla::Literal> = spec
+            .params
+            .iter()
+            .map(|(_, s)| HostTensor::zeros_f32(s.clone()).to_literal().unwrap())
+            .collect();
+        let mut inputs: Vec<&xla::Literal> = params.refs();
+        inputs.extend(m.iter());
+        inputs.extend(v.iter());
+        inputs.push(&step);
+        inputs.push(&toks);
+        inputs.push(&mask);
+        inputs.push(&zeros); // adv
+        inputs.push(&zeros); // behav
+        inputs.push(&zeros); // prox
+        inputs.push(&lr);
+        bench
+            .run_throughput(&format!("{entry} [{bt}x{tt}]"), (bt * tt) as f64, || {
+                black_box(engine.run(entry, &inputs).unwrap());
+            })
+            .report();
+    }
+
+    // per-entrypoint cumulative stats
+    println!("\nper-entrypoint engine stats:");
+    for (name, s) in engine.stats() {
+        if s.calls > 0 {
+            println!(
+                "  {name:<14} {:>6} calls, mean {:>8.2} ms (compile {:>5.1} s)",
+                s.calls,
+                s.mean_s * 1e3,
+                s.p_compile_s
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Simulated paper-scale benchmarks: regenerates the Table-1 hour shape,
+//! the Fig-4 strong-scaling rows, and the Fig-6b interruptible-generation
+//! rows from the discrete-event simulator (see DESIGN.md §3 for why these
+//! experiments are simulated). Also times the simulator itself.
+
+use areal::sim::{self, SimConfig};
+use areal::util::minibench::{black_box, Bench};
+
+fn main() {
+    println!("== Table 1 shape (simulated H800 hours) ==");
+    for (m, nodes, steps) in [
+        (sim::profile::MODEL_1_5B, 16usize, 250usize),
+        (sim::profile::MODEL_7B, 24, 250),
+        (sim::profile::MODEL_14B, 32, 80),
+        (sim::profile::MODEL_32B, 48, 80),
+    ] {
+        let mut c = SimConfig::paper_default(m, nodes * 8, 32768.0);
+        c.n_steps = 6;
+        let sync = sim::run_sync(&c);
+        let asy = sim::run_async(&c);
+        let sync_h = sync.total_s / c.n_steps as f64 * steps as f64 / 3600.0;
+        let asy_h = asy.total_s / c.n_steps as f64 * steps as f64 / 3600.0;
+        println!(
+            "  {:>5} {:>2} nodes {:>3} steps: sync {:>6.1} h  areal {:>6.1} h  \
+             speedup {:.2}x",
+            m.name, nodes, steps, sync_h, asy_h, sync_h / asy_h
+        );
+    }
+
+    println!("\n== Fig 4 shape (effective ktok/s, ctx 32k) ==");
+    for m in [sim::profile::MODEL_1_5B, sim::profile::MODEL_7B] {
+        for gpus in [64usize, 128, 256, 512] {
+            let mut c = SimConfig::paper_default(m, gpus, 32768.0);
+            c.n_steps = 6;
+            let sync = sim::run_sync(&c);
+            let asy = sim::run_async(&c);
+            println!(
+                "  {:>5} @{:>3} GPUs: sync {:>8.1}  areal {:>8.1}  ({:.2}x)",
+                m.name, gpus,
+                sync.effective_tps / 1e3,
+                asy.effective_tps / 1e3,
+                asy.effective_tps / sync.effective_tps
+            );
+        }
+    }
+
+    println!("\n== Fig 6b shape (gen ktok/s, 4 nodes) ==");
+    for m in [sim::profile::MODEL_1_5B, sim::profile::MODEL_7B] {
+        let mut c = SimConfig::paper_default(m, 32, 16384.0);
+        c.n_steps = 10;
+        let with = sim::run_async(&c);
+        c.interruptible = false;
+        let without = sim::run_async(&c);
+        let a = with.gen_tokens / with.total_s;
+        let b = without.gen_tokens / without.total_s;
+        println!(
+            "  {:>5}: w/o {:.1}  w/ {:.1}  (+{:.0}%)",
+            m.name, b / 1e3, a / 1e3, 100.0 * (a / b - 1.0)
+        );
+    }
+
+    println!("\n== simulator cost itself ==");
+    let bench = Bench::quick();
+    let cfg = {
+        let mut c = SimConfig::paper_default(sim::profile::MODEL_7B, 128, 16384.0);
+        c.n_steps = 4;
+        c
+    };
+    bench
+        .run("sim_async_128gpu_4steps", || {
+            black_box(sim::run_async(black_box(&cfg)));
+        })
+        .report();
+    bench
+        .run("sim_sync_128gpu_4steps", || {
+            black_box(sim::run_sync(black_box(&cfg)));
+        })
+        .report();
+}

@@ -1,0 +1,56 @@
+//! Staleness ablation (paper §7.4 in miniature): sweep the maximum
+//! staleness η with and without the decoupled objective and print the
+//! trade-off — the real-system companion to `areal exp table2`.
+//!
+//!     cargo run --release --example ablation_staleness -- [steps=10]
+
+use areal::config::{Config, Mode};
+use areal::coordinator::System;
+
+fn main() -> anyhow::Result<()> {
+    areal::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args
+        .iter()
+        .find_map(|a| a.strip_prefix("steps=").and_then(|v| v.parse().ok()))
+        .unwrap_or(10);
+
+    println!("| objective | η | final correct | eff tok/s | mean staleness |");
+    println!("|---|---|---|---|---|");
+    for decoupled in [true, false] {
+        for eta in [Some(0u64), Some(2), Some(8), None] {
+            let mut cfg = Config::default();
+            cfg.tier = "nano".into();
+            cfg.task = "sort".into();
+            cfg.level_lo = 2;
+            cfg.level_hi = 3;
+            cfg.mode = Mode::Async;
+            cfg.max_staleness = eta;
+            cfg.decoupled = decoupled;
+            cfg.group_size = 4;
+            cfg.global_batch = 16;
+            cfg.ppo_minibatches = 2;
+            cfg.ppo_steps = steps;
+            cfg.sft_steps = 30;
+            cfg.n_rollout_workers = 1;
+            cfg.eval_samples = 0;
+            cfg.lr = 5e-4;
+            cfg.validate()?;
+            let report = System::build(cfg)?.run()?;
+            let k = report.steps.len().saturating_sub(3);
+            let fc = report.steps[k..].iter().map(|m| m.correct_frac).sum::<f64>()
+                / (report.steps.len() - k).max(1) as f64;
+            let stale = report.steps.iter().map(|m| m.mean_staleness).sum::<f64>()
+                / report.steps.len().max(1) as f64;
+            println!(
+                "| {} | {} | {:.3} | {:.0} | {:.2} |",
+                if decoupled { "decoupled" } else { "naive" },
+                eta.map_or("inf".into(), |e| e.to_string()),
+                fc,
+                report.effective_tps,
+                stale
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: train a nano model on the digit-sorting task with the fully
+//! asynchronous AReaL pipeline, then inspect a few generations.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use areal::config::{Config, Mode};
+use areal::coordinator::{evalgen, System};
+use areal::tasks::{Dataset, dataset::LevelMix, SortTask};
+
+fn main() -> anyhow::Result<()> {
+    areal::util::logging::init_from_env();
+    let mut cfg = Config::default();
+    cfg.tier = "nano".into();
+    cfg.task = "sort".into();
+    cfg.level_lo = 2;
+    cfg.level_hi = 3;
+    cfg.mode = Mode::Async;
+    cfg.max_staleness = Some(4);
+    cfg.group_size = 4;
+    cfg.global_batch = 16;
+    cfg.ppo_minibatches = 2;
+    cfg.ppo_steps = 15;
+    cfg.sft_steps = 250; // "distillation" warmup
+    cfg.n_rollout_workers = 1;
+    cfg.eval_samples = 0;
+    cfg.lr = 5e-4;
+    cfg.validate()?;
+
+    println!("building system (compiling AOT artifacts)...");
+    let sys = System::build(cfg)?;
+    let report = sys.run()?;
+
+    println!("\nreward curve (correct fraction per PPO step):");
+    for m in &report.steps {
+        let bar = "#".repeat((m.correct_frac * 40.0) as usize);
+        println!("  step {:>2}: {:.2} {}", m.step, m.correct_frac, bar);
+    }
+    println!(
+        "\n{} PPO steps in {:.1}s — effective {:.0} tok/s, {} interruptions",
+        report.steps.len(),
+        report.wall_s,
+        report.effective_tps,
+        report.trace.count(|e| matches!(e, areal::coordinator::Event::Interrupt { .. })),
+    );
+
+    // sample a few greedy generations from the trained model
+    let ds = Dataset::new(Arc::new(SortTask), 0xE7A1u64, LevelMix::single(3));
+    let prompts: Vec<_> = (0..4).map(|i| ds.prompt(i)).collect();
+    let outs = evalgen::generate_all(&sys.engine, &report.final_params, &prompts, 0.0, 7)?;
+    println!("\nsample generations:");
+    for (p, o) in prompts.iter().zip(&outs) {
+        let ok = ds.task.verify(&p.meta, o);
+        println!("  {} -> {} {}", p.text, o, if ok { "✓" } else { "✗" });
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Cluster-scale what-if analysis with the discrete-event simulator: the
+//! paper's Fig-4 strong-scaling sweep in one command, no GPUs required.
+//!
+//!     cargo run --release --example simulate_cluster -- [model=7B] [ctx=32768]
+
+use areal::sim::{self, SimConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let kv = |key: &str, default: &str| -> String {
+        args.iter()
+            .find_map(|a| a.split_once('=').filter(|(k, _)| *k == key).map(|(_, v)| v.to_string()))
+            .unwrap_or_else(|| default.to_string())
+    };
+    let model = sim::profile::model_by_name(&kv("model", "7B")).expect("model");
+    let ctx: f64 = kv("ctx", "32768").parse().expect("ctx");
+
+    println!("strong scaling — {} @ ctx {} (effective ktok/s)", model.name, ctx);
+    println!("{:>6} {:>12} {:>12} {:>9} {:>10}", "gpus", "sync", "AReaL", "speedup", "util(gen)");
+    let mut base = 0.0;
+    for (i, gpus) in [32usize, 64, 128, 256, 512].into_iter().enumerate() {
+        let mut cfg = SimConfig::paper_default(model, gpus, ctx);
+        cfg.n_steps = 6;
+        let sync = sim::run_sync(&cfg);
+        let asy = sim::run_async(&cfg);
+        if i == 0 {
+            base = asy.effective_tps / gpus as f64;
+        }
+        println!(
+            "{gpus:>6} {:>12.1} {:>12.1} {:>8.2}x {:>9.0}%  (ideal {:.1})",
+            sync.effective_tps / 1e3,
+            asy.effective_tps / 1e3,
+            asy.effective_tps / sync.effective_tps,
+            asy.gen_util * 100.0,
+            base * gpus as f64 / 1e3,
+        );
+    }
+
+    println!("\ntimelines (2 steps, 7B @ 64 GPUs):");
+    let mut cfg = SimConfig::paper_default(model, 64, ctx);
+    cfg.n_steps = 2;
+    let sync = sim::run_sync(&cfg);
+    println!("-- synchronous --");
+    print!("{}", sim::timeline::render(&sync.timeline, 70));
+    let asy = sim::run_async(&cfg);
+    println!("-- AReaL async --");
+    print!("{}", sim::timeline::render(&asy.timeline, 70));
+}

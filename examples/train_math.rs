@@ -1,0 +1,78 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full three-layer stack on a
+//! real workload — SFT-warm a tiny transformer on arithmetic
+//! chain-of-thought gold traces (the "distilled base model"), then improve
+//! it with fully-asynchronous RL (decoupled PPO, staleness η=4,
+//! interruptible generation), logging the reward curve and evaluating on
+//! the held-out Synth-MATH/AMC/AIME suites.
+//!
+//!     make artifacts && cargo run --release --example train_math -- \
+//!         [tier=tiny] [steps=40] [sft_steps=150]
+
+use areal::config::{Config, Mode};
+use areal::coordinator::System;
+use areal::util::logging::CsvWriter;
+
+fn kv(args: &[String], key: &str, default: &str) -> String {
+    args.iter()
+        .find_map(|a| a.split_once('=').filter(|(k, _)| *k == key).map(|(_, v)| v.to_string()))
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    areal::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = Config::default();
+    cfg.tier = kv(&args, "tier", "tiny");
+    cfg.task = "math".into();
+    cfg.level_lo = 1;
+    cfg.level_hi = 2;
+    cfg.mode = Mode::Async;
+    cfg.max_staleness = Some(2);
+    cfg.interruptible = true;
+    cfg.group_size = 4;
+    cfg.global_batch = 16;
+    cfg.ppo_minibatches = 2;
+    cfg.ppo_steps = kv(&args, "steps", "40").parse()?;
+    cfg.sft_steps = kv(&args, "sft_steps", "150").parse()?;
+    cfg.sft_lr = 1e-3;
+    cfg.lr = kv(&args, "lr", "1.5e-4").parse()?;
+    cfg.n_rollout_workers = 1;
+    cfg.eval_samples = 1;
+    cfg.out_dir = "runs/train_math".into();
+    cfg.validate()?;
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let out = cfg.out_dir.clone();
+
+    println!("== e2e: SFT warmup ({} steps) + async RL ({} steps) on tier {} ==",
+             cfg.sft_steps, cfg.ppo_steps, cfg.tier);
+    let sys = System::build(cfg)?;
+    let report = sys.run()?;
+
+    let mut w = CsvWriter::create(
+        out.join("loss_curve.csv"),
+        &["step", "reward", "correct", "loss", "kl", "staleness", "eff_tps"],
+    )?;
+    println!("\nPPO reward curve:");
+    for m in &report.steps {
+        w.row(&[m.step as f64, m.reward_mean, m.correct_frac, m.loss,
+                m.approx_kl, m.mean_staleness, m.effective_tps])?;
+        if m.step % 5 == 0 || m.step + 1 == report.steps.len() {
+            let bar = "#".repeat((m.correct_frac * 40.0) as usize);
+            println!("  step {:>3}: reward {:+.2} correct {:.2} {}",
+                     m.step, m.reward_mean, m.correct_frac, bar);
+        }
+    }
+    w.flush()?;
+
+    println!("\nheld-out evaluation (greedy pass@1):");
+    for r in &report.eval {
+        println!("  {:<16} {:.3}  ({} prompts, mean len {:.0})",
+                 r.suite, r.pass_at_1, r.n_prompts, r.mean_completion_len);
+    }
+    println!(
+        "\ntotals: {:.1}s wall, eff {:.0} tok/s, {} gen tokens, {} trained tokens",
+        report.wall_s, report.effective_tps, report.gen_tokens, report.train_tokens
+    );
+    println!("curve: {:?}", out.join("loss_curve.csv"));
+    Ok(())
+}

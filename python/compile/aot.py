@@ -1,0 +1,281 @@
+"""AOT compile path: lower every L2 entrypoint to HLO *text* + manifest.
+
+HLO text — NOT `lowered.compile()` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+xla_extension 0.5.1 (the version behind the published `xla` crate) rejects;
+the text parser reassigns ids and round-trips cleanly.
+
+jax applies dead-argument elimination during lowering, so the *actual* entry
+signature can differ from the Python one. This script therefore extracts the
+true signature from `XlaComputation.program_shape()`, asserts it matches the
+expected named layout, and records everything in artifacts/manifest.json for
+the Rust runtime to validate at load time.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--tiers nano,tiny,small]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import re
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .tiers import TIERS, DEFAULT_TIERS
+
+MANIFEST_VERSION = 2
+
+# metric vector layouts (must match model.py)
+TRAIN_METRICS = ["loss", "clip_frac", "ratio_mean", "approx_kl", "token_nll",
+                 "grad_norm", "w_mean", "n_tokens"]
+SFT_METRICS = ["loss", "token_acc", "grad_norm", "n_tokens"]
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(), comp
+
+
+_SHAPE_RE = re.compile(r"^([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def parse_shape(s):
+    """'f32[2,8]{1,0}' -> {"dtype": "f32", "shape": [2, 8]}."""
+    m = _SHAPE_RE.match(str(s))
+    if not m:
+        raise ValueError(f"unparseable XLA shape: {s}")
+    dtype, dims = m.group(1), m.group(2)
+    shape = [int(d) for d in dims.split(",")] if dims else []
+    return {"dtype": dtype, "shape": shape}
+
+
+def signature(comp):
+    ps = comp.program_shape()
+    ins = [parse_shape(s) for s in ps.parameter_shapes()]
+    rs = ps.result_shape()
+    outs = [parse_shape(s) for s in rs.tuple_shapes()] if rs.is_tuple() \
+        else [parse_shape(rs)]
+    return ins, outs
+
+
+def spec_of(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entrypoints(tier):
+    """name -> (fn, example_args, input_names, output_names)."""
+    V, T = tier.vocab, tier.max_seq
+    B, Bt, C, L = tier.gen_batch, tier.train_batch, tier.chunk, tier.n_layers
+    H, Dh = tier.n_heads, tier.head_dim
+    pspec = model.param_spec(tier)
+    nP = len(pspec)
+    pnames = [f"params.{n}" for n, _ in pspec]
+    pargs = [spec_of(s) for _, s in pspec]
+    kv_names = []
+    for l in range(L):
+        kv_names += [f"kv.k{l}", f"kv.v{l}"]
+    kv_args = [spec_of((B, T, H, Dh), jnp.float16) for _ in range(2 * L)]
+
+    i32 = jnp.int32
+    u32 = jnp.uint32
+    f32 = jnp.float32
+
+    eps = {}
+
+    eps["init"] = (
+        lambda seed: tuple(model.init(tier, seed)),
+        [spec_of((2,), u32)],
+        ["seed"],
+        pnames,
+    )
+
+    eps["prefill"] = (
+        lambda *a: model.prefill(tier, list(a[:nP]), a[nP], a[nP + 1],
+                                 a[nP + 2], a[nP + 3]),
+        pargs + [spec_of((B, T), i32), spec_of((B,), i32), spec_of((2,), u32),
+                 spec_of((), f32)],
+        pnames + ["tokens", "lens", "seed", "temp"],
+        kv_names + ["tok", "logp"],
+    )
+
+    eps["decode"] = (
+        lambda *a: model.decode(tier, list(a[:nP]),
+                                list(a[nP:nP + 2 * L]), a[nP + 2 * L],
+                                a[nP + 2 * L + 1], a[nP + 2 * L + 2],
+                                a[nP + 2 * L + 3]),
+        pargs + kv_args + [spec_of((B,), i32), spec_of((B,), i32),
+                           spec_of((2,), u32), spec_of((), f32)],
+        pnames + kv_names + ["lens", "tok", "seed", "temp"],
+        ["toks", "logps"] + kv_names + ["lens"],
+    )
+
+    # `_h` variants run at half context length: Algorithm-1 dynamic batching
+    # routes micro-batches whose max sequence length fits T/2 through these
+    # cheaper executables (the fixed-shape analogue of the paper's
+    # token-budget packing). The standard-batching baseline uses only the
+    # full-T variants.
+    Th = T // 2
+
+    eps["logprob"] = (
+        lambda *a: (model.token_logprob(tier, list(a[:nP]), a[nP]),),
+        pargs + [spec_of((Bt, T), i32)],
+        pnames + ["tokens"],
+        ["logp"],
+    )
+
+    eps["logprob_h"] = (
+        lambda *a: (model.token_logprob(tier, list(a[:nP]), a[nP]),),
+        pargs + [spec_of((Bt, Th), i32)],
+        pnames + ["tokens"],
+        ["logp"],
+    )
+
+    mnames = [f"adam_m.{n}" for n, _ in pspec]
+    vnames = [f"adam_v.{n}" for n, _ in pspec]
+
+    eps["train_step"] = (
+        lambda *a: model.train_step(
+            tier, list(a[:nP]), list(a[nP:2 * nP]), list(a[2 * nP:3 * nP]),
+            a[3 * nP], a[3 * nP + 1], a[3 * nP + 2], a[3 * nP + 3],
+            a[3 * nP + 4], a[3 * nP + 5], a[3 * nP + 6]),
+        pargs * 3 + [spec_of((), i32), spec_of((Bt, T), i32),
+                     spec_of((Bt, T), f32), spec_of((Bt, T), f32),
+                     spec_of((Bt, T), f32), spec_of((Bt, T), f32),
+                     spec_of((), f32)],
+        pnames + mnames + vnames + ["step", "tokens", "loss_mask", "adv",
+                                    "behav_logp", "prox_logp", "lr"],
+        pnames + mnames + vnames + ["step", "metrics"],
+    )
+
+    eps["train_step_h"] = (
+        lambda *a: model.train_step(
+            tier, list(a[:nP]), list(a[nP:2 * nP]), list(a[2 * nP:3 * nP]),
+            a[3 * nP], a[3 * nP + 1], a[3 * nP + 2], a[3 * nP + 3],
+            a[3 * nP + 4], a[3 * nP + 5], a[3 * nP + 6]),
+        pargs * 3 + [spec_of((), i32), spec_of((Bt, Th), i32),
+                     spec_of((Bt, Th), f32), spec_of((Bt, Th), f32),
+                     spec_of((Bt, Th), f32), spec_of((Bt, Th), f32),
+                     spec_of((), f32)],
+        pnames + mnames + vnames + ["step", "tokens", "loss_mask", "adv",
+                                    "behav_logp", "prox_logp", "lr"],
+        pnames + mnames + vnames + ["step", "metrics"],
+    )
+
+    eps["sft_step"] = (
+        lambda *a: model.sft_step(
+            tier, list(a[:nP]), list(a[nP:2 * nP]), list(a[2 * nP:3 * nP]),
+            a[3 * nP], a[3 * nP + 1], a[3 * nP + 2], a[3 * nP + 3]),
+        pargs * 3 + [spec_of((), i32), spec_of((Bt, T), i32),
+                     spec_of((Bt, T), f32), spec_of((), f32)],
+        pnames + mnames + vnames + ["step", "tokens", "loss_mask", "lr"],
+        pnames + mnames + vnames + ["step", "metrics"],
+    )
+
+    eps["sft_step_h"] = (
+        lambda *a: model.sft_step(
+            tier, list(a[:nP]), list(a[nP:2 * nP]), list(a[2 * nP:3 * nP]),
+            a[3 * nP], a[3 * nP + 1], a[3 * nP + 2], a[3 * nP + 3]),
+        pargs * 3 + [spec_of((), i32), spec_of((Bt, Th), i32),
+                     spec_of((Bt, Th), f32), spec_of((), f32)],
+        pnames + mnames + vnames + ["step", "tokens", "loss_mask", "lr"],
+        pnames + mnames + vnames + ["step", "metrics"],
+    )
+    return eps
+
+
+def lower_tier(tier, out_dir, quiet=False):
+    entry = {}
+    for name, (fn, args, in_names, out_names) in build_entrypoints(tier).items():
+        lowered = jax.jit(fn).lower(*args)
+        text, comp = to_hlo_text(lowered)
+        ins, outs = signature(comp)
+        if len(ins) != len(in_names):
+            raise RuntimeError(
+                f"{tier.name}/{name}: lowered entry has {len(ins)} params, "
+                f"expected {len(in_names)} ({in_names}) — an argument was "
+                f"dead-code-eliminated; every input must be used.")
+        if len(outs) != len(out_names):
+            raise RuntimeError(
+                f"{tier.name}/{name}: {len(outs)} outputs vs expected "
+                f"{len(out_names)}")
+        fname = f"{tier.name}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        sha = hashlib.sha256(text.encode()).hexdigest()[:16]
+        entry[name] = {
+            "file": fname,
+            "sha256_16": sha,
+            "inputs": [dict(name=n, **s) for n, s in zip(in_names, ins)],
+            "outputs": [dict(name=n, **s) for n, s in zip(out_names, outs)],
+        }
+        if not quiet:
+            print(f"  {tier.name}/{name}: {len(text)} chars, "
+                  f"{len(ins)} in / {len(outs)} out")
+    return entry
+
+
+def tier_manifest(tier, entry):
+    pspec = model.param_spec(tier)
+    return {
+        "config": {
+            "vocab": tier.vocab, "d_model": tier.d_model,
+            "n_layers": tier.n_layers, "n_heads": tier.n_heads,
+            "d_ff": tier.d_ff, "max_seq": tier.max_seq,
+            "gen_batch": tier.gen_batch, "chunk": tier.chunk,
+            "train_batch": tier.train_batch, "arch": tier.arch,
+            "clip_eps": tier.clip_eps, "w_max": tier.w_max,
+            "adam": list(tier.adam), "grad_clip": tier.grad_clip,
+            "param_count": tier.param_count(),
+            "paper_analogue": tier.paper_analogue,
+        },
+        "params": [{"name": n, "shape": list(s)} for n, s in pspec],
+        "entrypoints": entry,
+        "metrics": {"train_step": TRAIN_METRICS, "sft_step": SFT_METRICS},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tiers", default=",".join(DEFAULT_TIERS))
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [t for t in args.tiers.split(",") if t]
+    unknown = [t for t in names if t not in TIERS]
+    if unknown:
+        sys.exit(f"unknown tiers: {unknown}; available: {list(TIERS)}")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": MANIFEST_VERSION, "tiers": {}}
+    if os.path.exists(manifest_path):
+        try:
+            old = json.load(open(manifest_path))
+            if old.get("version") == MANIFEST_VERSION:
+                manifest = old  # incremental: keep other tiers
+        except Exception:
+            pass
+
+    for t in names:
+        tier = TIERS[t]
+        print(f"lowering tier {t} (~{tier.param_count():,} params, "
+              f"analogue of {tier.paper_analogue})")
+        entry = lower_tier(tier, args.out_dir, quiet=args.quiet)
+        manifest["tiers"][t] = tier_manifest(tier, entry)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path} with tiers: {sorted(manifest['tiers'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,180 @@
+"""Flash-style causal attention as Pallas kernels (forward + backward).
+
+This is the paper's generation/training compute hot-spot re-expressed in TPU
+idiom (see DESIGN.md §Hardware-Adaptation): instead of CUDA threadblocks and
+shared memory, the HBM<->VMEM schedule is expressed with BlockSpecs, the
+softmax is computed online per key-block in VMEM scratch, and the inner
+contractions are MXU-shaped `jnp.dot`s with f32 accumulation.
+
+Forward kernel
+--------------
+grid = (B*H, T/Bq). Each grid step holds one query block f32[Bq, Dh] plus the
+full K/V rows f32[T, Dh] in VMEM (valid for this repo's contexts, T <= 384;
+a 32k context would add a third grid dimension over key blocks — the schedule
+is written so that the key loop is already blocked, so that change is purely
+a BlockSpec change). Online softmax: running max m, denominator l, and output
+accumulator o are carried across key blocks.
+
+Backward kernel
+---------------
+grid = (B*H,). Recomputes the probability matrix for one (batch, head) pair
+in VMEM (T*T f32, <= 576 KiB at T=384) and forms dq, dk, dv with dense MXU
+contractions. This is the "T^2-in-VMEM" variant, appropriate below ~1k
+context; the flash-recompute-per-block variant would again only change the
+BlockSpecs/loop structure.
+
+Lowered with interpret=True (CPU PJRT cannot execute Mosaic custom-calls);
+on a real TPU the same kernels compile with interpret=False.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Key-block size for the online-softmax inner loop. 128 matches the TPU lane
+# width; clamped to T when sequences are shorter.
+DEFAULT_BLOCK_K = 128
+# Query-block rows per grid step. Multiple of 8 (f32 sublane width).
+DEFAULT_BLOCK_Q = 64
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, scale):
+    """One query block against all key blocks, online softmax.
+
+    q_ref: f32[Bq, Dh] (block), k_ref/v_ref: f32[T, Dh] (full rows),
+    o_ref: f32[Bq, Dh].
+    """
+    bq, dh = q_ref.shape
+    t = k_ref.shape[0]
+    qi = pl.program_id(1)  # query-block index
+    q = q_ref[...] * scale
+    # absolute query positions for causal masking
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    nblk = pl.cdiv(t, block_k)
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], j * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], j * block_k, block_k, 0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [Bq, Bk]
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dh), dtype=jnp.float32)
+    # causal: query block qi only needs key blocks j with j*block_k <= (qi+1)*bq
+    _, l, acc = jax.lax.fori_loop(0, nblk, body, (m0, l0, acc0))
+    o_ref[...] = acc / l
+
+
+def _bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *, scale):
+    """Dense backward for one (batch, head): recompute p, then dq/dk/dv."""
+    t, dh = q_ref.shape
+    q = q_ref[...] * scale
+    k = k_ref[...]
+    v = v_ref[...]
+    do = do_ref[...]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+    qpos = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    kpos = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    s = jnp.where(kpos <= qpos, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / l
+    dv_ref[...] = jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    # softmax vjp: ds = p * (dp - sum(dp * p, axis=-1))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq_ref[...] = jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale
+    dk_ref[...] = jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+
+
+def _attention_fwd_impl(q, k, v, *, block_q, block_k, interpret):
+    b, h, t, dh = q.shape
+    bq = min(block_q, t)
+    bk = min(block_k, t)
+    assert t % bq == 0, f"T={t} must be a multiple of block_q={bq}"
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.reshape(b * h, t, dh)
+    kf = k.reshape(b * h, t, dh)
+    vf = v.reshape(b * h, t, dh)
+    kernel = functools.partial(_fwd_kernel, block_k=bk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, t // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, dh), jnp.float32),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, t, dh)
+
+
+def _attention_bwd_impl(q, k, v, do, *, interpret):
+    b, h, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.reshape(b * h, t, dh)
+    kf = k.reshape(b * h, t, dh)
+    vf = v.reshape(b * h, t, dh)
+    dof = do.reshape(b * h, t, dh)
+    kernel = functools.partial(_bwd_kernel, scale=scale)
+    spec = pl.BlockSpec((None, t, dh), lambda i: (i, 0, 0))
+    shape = jax.ShapeDtypeStruct((b * h, t, dh), jnp.float32)
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec, spec],
+        out_shape=[shape, shape, shape],
+        interpret=interpret,
+    )(qf, kf, vf, dof)
+    rs = lambda x: x.reshape(b, h, t, dh)
+    return rs(dq), rs(dk), rs(dv)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def causal_attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                     interpret=True):
+    """Causal multi-head attention. q,k,v: f32[B,H,T,Dh] -> f32[B,H,T,Dh]."""
+    return _attention_fwd_impl(q, k, v, block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+
+def _vjp_fwd(q, k, v, block_q, block_k, interpret):
+    o = _attention_fwd_impl(q, k, v, block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return o, (q, k, v)
+
+
+def _vjp_bwd(block_q, block_k, interpret, res, do):
+    q, k, v = res
+    return _attention_bwd_impl(q, k, v, do, interpret=interpret)
+
+
+causal_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+def vmem_footprint_bytes(t, dh, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Estimated forward VMEM footprint per grid step (DESIGN.md §7)."""
+    bq = min(block_q, t)
+    bk = min(block_k, t)
+    # q block + full K/V rows + score block + m/l/acc carries, all f32
+    floats = bq * dh + 2 * t * dh + bq * bk + bq * (2 + dh)
+    return floats * 4

@@ -1,0 +1,65 @@
+"""Single-token decode attention over the fp16 KV cache (Pallas kernel).
+
+The serving-side hot-spot: one query vector per sequence slot attends over
+that slot's KV cache rows, masked by the slot's current length. Equivalent of
+the paper's SGLang/FlashInfer decode kernels; grid parallelism is over
+(batch-slot, head) pairs, mirroring the per-sequence paged-attention
+decomposition, with the f16->f32 upcast done in VMEM.
+
+Called inside the `decode` artifact's lax.scan (model.py), so it lowers into
+the same HLO module as the rest of the step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, scale):
+    """q_ref: f32[1, Dh]; k_ref/v_ref: f16[T, Dh]; len_ref: i32[1] (smem-like);
+    o_ref: f32[1, Dh]."""
+    t = k_ref.shape[0]
+    q = q_ref[...] * scale                      # [1, Dh]
+    k = k_ref[...].astype(jnp.float32)          # [T, Dh]
+    v = v_ref[...].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [1, T]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def decode_attention(q, k_cache, v_cache, lens, interpret=True):
+    """q: f32[B,H,Dh]; k_cache/v_cache: f16[B,T,H,Dh]; lens: i32[B].
+
+    Returns f32[B,H,Dh]. The query attends to cache positions [0, lens[b]).
+    """
+    b, h, dh = q.shape
+    t = k_cache.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    # layout: [B*H, ...] grid over slots*heads
+    qf = q.reshape(b * h, 1, dh)
+    kf = jnp.transpose(k_cache, (0, 2, 1, 3)).reshape(b * h, t, dh)
+    vf = jnp.transpose(v_cache, (0, 2, 1, 3)).reshape(b * h, t, dh)
+    lensf = jnp.repeat(lens, h).reshape(b * h, 1)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((None, 1), lambda i: (i, 0)),
+            pl.BlockSpec((None, 1, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, t, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, dh), jnp.float32),
+        interpret=interpret,
+    )(lensf, qf, kf, vf)
+    return out.reshape(b, h, dh)

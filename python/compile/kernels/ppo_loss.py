@@ -1,0 +1,97 @@
+"""Fused decoupled-PPO token loss (paper Eq. 5) as a Pallas kernel.
+
+Forward and backward are both single fused element-wise kernels over the
+flattened [B*T] token stream — the CUDA analogue would be a fused pointwise
+kernel; here the stream is blocked into VMEM-sized tiles. The backward pass
+uses the analytic gradient (see kernels/ref.py:ppo_loss_grad_ref), so no
+recomputation graph is kept alive between loss and grad.
+
+The clip epsilon and behavior-weight clip are baked at lowering time (they
+are per-artifact constants recorded in the manifest); the naive-PPO ablation
+does NOT need a separate artifact — the Rust side passes prox := behav.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tokens per grid step. 8*128 matches a (sublane, lane) f32 VMEM tile.
+BLOCK_N = 1024
+
+
+def _fwd_kernel(logp_ref, prox_ref, behav_ref, adv_ref, mask_ref, loss_ref,
+                *, clip_eps, w_max):
+    lt = logp_ref[...]
+    lp = prox_ref[...]
+    lb = behav_ref[...]
+    adv = adv_ref[...]
+    mask = mask_ref[...]
+    u = jnp.exp(lt - lp)
+    w = jnp.clip(jnp.exp(lp - lb), 0.0, w_max)
+    s1 = u * adv
+    s2 = jnp.clip(u, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    loss_ref[...] = -w * jnp.minimum(s1, s2) * mask
+
+
+def _bwd_kernel(logp_ref, prox_ref, behav_ref, adv_ref, mask_ref, g_ref,
+                dlogp_ref, *, clip_eps, w_max):
+    lt = logp_ref[...]
+    lp = prox_ref[...]
+    lb = behav_ref[...]
+    adv = adv_ref[...]
+    mask = mask_ref[...]
+    g = g_ref[...]
+    u = jnp.exp(lt - lp)
+    w = jnp.clip(jnp.exp(lp - lb), 0.0, w_max)
+    s1 = u * adv
+    s2 = jnp.clip(u, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    unclipped = s1 <= s2
+    dlogp_ref[...] = jnp.where(unclipped, -w * u * adv, 0.0) * mask * g
+
+
+def _blocked_call(kernel, n_in, x, extra=(), interpret=True):
+    """Run an elementwise kernel over 1-D inputs blocked by BLOCK_N."""
+    n = x[0].shape[0]
+    bn = min(BLOCK_N, n)
+    assert n % bn == 0, f"N={n} must be a multiple of the block ({bn})"
+    spec = pl.BlockSpec((bn,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bn,),
+        in_specs=[spec] * n_in,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(*x, *extra)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def ppo_token_loss(logp, prox, behav, adv, mask, clip_eps=0.2, w_max=5.0,
+                   interpret=True):
+    """Per-token decoupled PPO loss, f32[N] inputs -> f32[N] loss.
+
+    Differentiable in `logp` only (prox/behav/adv/mask are data).
+    """
+    kernel = functools.partial(_fwd_kernel, clip_eps=clip_eps, w_max=w_max)
+    return _blocked_call(kernel, 5, (logp, prox, behav, adv, mask),
+                         interpret=interpret)
+
+
+def _vjp_fwd(logp, prox, behav, adv, mask, clip_eps, w_max, interpret):
+    loss = ppo_token_loss(logp, prox, behav, adv, mask, clip_eps, w_max,
+                          interpret)
+    return loss, (logp, prox, behav, adv, mask)
+
+
+def _vjp_bwd(clip_eps, w_max, interpret, res, g):
+    logp, prox, behav, adv, mask = res
+    kernel = functools.partial(_bwd_kernel, clip_eps=clip_eps, w_max=w_max)
+    dlogp = _blocked_call(kernel, 6, (logp, prox, behav, adv, mask, g),
+                          interpret=interpret)
+    zeros = jnp.zeros_like(logp)
+    return dlogp, zeros, zeros, zeros, zeros
+
+
+ppo_token_loss.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,85 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything in this file is the *definition of correct*. The Pallas kernels in
+attention.py / decode_attn.py / ppo_loss.py are checked against these with
+assert_allclose (values AND gradients) in python/tests/.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def causal_attention_ref(q, k, v):
+    """Plain causal attention.
+
+    q, k, v: f32[B, H, T, Dh]  ->  f32[B, H, T, Dh]
+    Scores are scaled by 1/sqrt(Dh); position t attends to positions <= t.
+    """
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    t = q.shape[2]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lens):
+    """Single-token decode attention over a (possibly fp16) KV cache.
+
+    q:       f32[B, H, Dh]   query for the current token
+    k_cache: f16/f32[B, T, H, Dh]
+    v_cache: f16/f32[B, T, H, Dh]
+    lens:    i32[B]          number of *valid* cache positions; the query
+                             attends to cache slots [0, lens[b]).
+    returns  f32[B, H, Dh]
+
+    Convention (lives in model.py): K/V of the current token are written at
+    position p = len, and this is called with lens = p + 1 so the token
+    attends to itself.
+    """
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    dh = q.shape[-1]
+    scores = jnp.einsum("bhd,bthd->bht", q, kf) / jnp.sqrt(jnp.float32(dh))
+    t = k_cache.shape[1]
+    mask = jnp.arange(t)[None, None, :] < lens[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bht,bthd->bhd", p, vf)
+
+
+def ppo_loss_ref(logp, prox, behav, adv, mask, clip_eps, w_max):
+    """Decoupled PPO objective, paper Eq. (5), per token.
+
+    logp/prox/behav/adv/mask: f32[N] (flattened over batch*time)
+    Per-token loss:
+        u = exp(logp - prox)                  (trust-region ratio)
+        w = clip(exp(prox - behav), 0, w_max) (behavior importance weight)
+        J = w * min(u * adv, clip(u, 1-eps, 1+eps) * adv)
+        loss = -J * mask
+    Naive PPO (paper Eq. 2) is recovered by passing prox == behav.
+    Returns per-token loss f32[N].
+    """
+    u = jnp.exp(logp - prox)
+    w = jnp.clip(jnp.exp(prox - behav), 0.0, w_max)
+    s1 = u * adv
+    s2 = jnp.clip(u, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    return -w * jnp.minimum(s1, s2) * mask
+
+
+def ppo_loss_grad_ref(logp, prox, behav, adv, mask, clip_eps, w_max):
+    """Analytic d(loss)/d(logp) for the decoupled objective.
+
+    min picks the unclipped branch when u*adv <= clip(u)*adv; there the
+    derivative wrt logp is -w * u * adv (since du/dlogp = u); on the clipped
+    branch the derivative is 0.
+    """
+    u = jnp.exp(logp - prox)
+    w = jnp.clip(jnp.exp(prox - behav), 0.0, w_max)
+    s1 = u * adv
+    s2 = jnp.clip(u, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    unclipped = s1 <= s2
+    return jnp.where(unclipped, -w * u * adv, 0.0) * mask

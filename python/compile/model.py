@@ -1,0 +1,396 @@
+"""L2 — the JAX model: decoder-only transformer + PPO/SFT training steps.
+
+Build-time only: every public function here is AOT-lowered by aot.py to HLO
+text and executed from the Rust runtime; Python never runs on the
+request/training path.
+
+Parameters are a flat *list* of arrays in the fixed order given by
+`param_spec(tier)`; the Rust `ParamSet` shuttles them opaquely in the same
+order. The KV cache is a flat list of 2*L fp16 arrays [B, T, H, Dh]
+(k then v per layer), mirroring the paper's Table-3 fp16-KV-cache setting.
+
+Entrypoints (per tier; shapes fixed at lowering time, see aot.py):
+    init(seed)                                           -> params
+    prefill(params.., tokens, lens)                      -> kv.., last_logits
+    decode(params.., kv.., lens, tok, key, temp)         -> toks, logps, kv.., lens'
+    logprob(params.., tokens)                            -> logp[B,T]
+    train_step(params.., m.., v.., step, tokens, mask,
+               adv, behav_lp, prox_lp, lr)               -> params'.., m'.., v'.., step', metrics
+    sft_step(params.., m.., v.., step, tokens, mask, lr) -> params'.., m'.., v'.., step', metrics
+
+The decoupled-PPO objective (paper Eq. 5) is inside train_step via the fused
+Pallas kernel; the naive-PPO ablation is obtained by the caller passing
+prox_lp := behav_lp (no separate artifact needed). Generation samples
+*in-graph* (threefry categorical) over a lax.scan of `chunk` tokens so the
+host round-trip is amortized (DESIGN.md §1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .tiers import Tier
+from .kernels.attention import causal_attention
+from .kernels.decode_attn import decode_attention
+from .kernels.ppo_loss import ppo_token_loss
+
+# ---------------------------------------------------------------------------
+# parameter spec
+
+
+def param_spec(tier: Tier):
+    """Ordered (name, shape) list — the single source of truth for the flat
+    parameter layout shared with the Rust ParamSet."""
+    V, D, L, F = tier.vocab, tier.d_model, tier.n_layers, tier.d_ff
+    T = tier.max_seq
+    spec = [("embed", (V, D)), ("pos", (T, D))]
+    for l in range(L):
+        p = f"layer{l}."
+        if tier.arch == "llama":
+            spec += [
+                (p + "rms1_w", (D,)),
+                (p + "wq", (D, D)), (p + "wk", (D, D)),
+                (p + "wv", (D, D)), (p + "wo", (D, D)),
+                (p + "rms2_w", (D,)),
+                (p + "w1", (D, F)), (p + "w3", (D, F)), (p + "w2", (F, D)),
+            ]
+        else:
+            spec += [
+                (p + "ln1_w", (D,)), (p + "ln1_b", (D,)),
+                (p + "wq", (D, D)), (p + "wk", (D, D)),
+                (p + "wv", (D, D)), (p + "wo", (D, D)),
+                (p + "ln2_w", (D,)), (p + "ln2_b", (D,)),
+                (p + "w1", (D, F)), (p + "b1", (F,)),
+                (p + "w2", (F, D)), (p + "b2", (D,)),
+            ]
+    if tier.arch == "llama":
+        spec += [("rmsf_w", (D,))]  # head tied to embed
+    else:
+        spec += [("lnf_w", (D,)), ("lnf_b", (D,)), ("head", (D, V))]
+    return spec
+
+
+def init(tier: Tier, seed):
+    """seed: u32[2] threefry key data -> params (flat list, f32)."""
+    key = jax.random.wrap_key_data(seed.astype(jnp.uint32), impl="threefry2x32")
+    spec = param_spec(tier)
+    keys = jax.random.split(key, len(spec))
+    params = []
+    scale = 0.02
+    out_scale = scale / (2.0 * tier.n_layers) ** 0.5  # GPT-2 residual scaling
+    for (name, shape), k in zip(spec, keys):
+        base = name.split(".")[-1]
+        if base in ("ln1_w", "ln2_w", "lnf_w", "rms1_w", "rms2_w", "rmsf_w"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif base in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif base in ("wo", "w2"):
+            params.append(out_scale * jax.random.normal(k, shape, jnp.float32))
+        else:
+            params.append(scale * jax.random.normal(k, shape, jnp.float32))
+    return params
+
+
+def _index(tier: Tier):
+    """name -> flat index."""
+    return {name: i for i, (name, _) in enumerate(param_spec(tier))}
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+
+def _norm(tier, x, w, b):
+    if tier.arch == "llama":
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(var + 1e-6) * w
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * w + b
+
+
+def _mlp(tier, params, idx, l, x):
+    p = f"layer{l}."
+    if tier.arch == "llama":
+        g = jax.nn.silu(x @ params[idx[p + "w1"]]) * (x @ params[idx[p + "w3"]])
+        return g @ params[idx[p + "w2"]]
+    h = jax.nn.gelu(x @ params[idx[p + "w1"]] + params[idx[p + "b1"]])
+    return h @ params[idx[p + "w2"]] + params[idx[p + "b2"]]
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def forward_hidden(tier: Tier, params, tokens, collect_kv=False):
+    """tokens: i32[B, T] -> hidden f32[B, T, D] (pre final-norm).
+
+    With collect_kv=True also returns the per-layer fp16 K/V tensors
+    [B, T, H, Dh] in (k0, v0, k1, v1, ...) order.
+    """
+    idx = _index(tier)
+    b, t = tokens.shape
+    h = params[idx["embed"]][tokens] + params[idx["pos"]][:t][None]
+    kvs = []
+    for l in range(tier.n_layers):
+        p = f"layer{l}."
+        if tier.arch == "llama":
+            x = _norm(tier, h, params[idx[p + "rms1_w"]], None)
+        else:
+            x = _norm(tier, h, params[idx[p + "ln1_w"]], params[idx[p + "ln1_b"]])
+        q = _split_heads(x @ params[idx[p + "wq"]], tier.n_heads)
+        k = _split_heads(x @ params[idx[p + "wk"]], tier.n_heads)
+        v = _split_heads(x @ params[idx[p + "wv"]], tier.n_heads)
+        if collect_kv:
+            # cache layout [B, T, H, Dh], fp16
+            kvs.append(k.transpose(0, 2, 1, 3).astype(jnp.float16))
+            kvs.append(v.transpose(0, 2, 1, 3).astype(jnp.float16))
+        a = causal_attention(q, k, v)
+        h = h + _merge_heads(a) @ params[idx[p + "wo"]]
+        if tier.arch == "llama":
+            x = _norm(tier, h, params[idx[p + "rms2_w"]], None)
+        else:
+            x = _norm(tier, h, params[idx[p + "ln2_w"]], params[idx[p + "ln2_b"]])
+        h = h + _mlp(tier, params, idx, l, x)
+    if collect_kv:
+        return h, kvs
+    return h
+
+
+def logits_from_hidden(tier: Tier, params, h):
+    idx = _index(tier)
+    if tier.arch == "llama":
+        x = _norm(tier, h, params[idx["rmsf_w"]], None)
+        return x @ params[idx["embed"]].T  # tied head
+    x = _norm(tier, h, params[idx["lnf_w"]], params[idx["lnf_b"]])
+    return x @ params[idx["head"]]
+
+
+def forward_logits(tier: Tier, params, tokens):
+    return logits_from_hidden(tier, params, forward_hidden(tier, params, tokens))
+
+
+def token_logprob(tier: Tier, params, tokens):
+    """logp[b, t] = log p(tokens[b,t] | tokens[b,<t]); logp[:,0] = 0."""
+    logits = forward_logits(tier, params, tokens)  # [B,T,V]
+    logp_full = jax.nn.log_softmax(logits, axis=-1)
+    # token t is predicted from position t-1
+    lp = jnp.take_along_axis(logp_full[:, :-1], tokens[:, 1:, None], axis=-1)
+    lp = lp[..., 0]
+    return jnp.concatenate([jnp.zeros((tokens.shape[0], 1), jnp.float32), lp],
+                           axis=1)
+
+
+# ---------------------------------------------------------------------------
+# generation
+
+
+def prefill(tier: Tier, params, tokens, lens, seed, temp):
+    """tokens: i32[B, T] (PAD beyond lens), lens: i32[B].
+
+    Builds the fp16 KV cache over all T positions (entries at positions >=
+    lens[b] are garbage — decode overwrites them before they are ever
+    attended to) and samples the FIRST new token from the logits at position
+    lens[b]-1, in-graph, so generation hands off to `decode` with the same
+    convention: the returned token sits at position lens[b] and its KV is
+    written by the next decode step.
+
+    Used both for fresh prompts and for interruption restarts (paper §4.1:
+    on update_weights the old KV is discarded and recomputed under the new
+    weights — here, by re-prefilling prompt + committed response).
+
+    Returns (*kv, tok i32[B], logp f32[B]).
+    """
+    h, kvs = forward_hidden(tier, params, tokens, collect_kv=True)
+    logits = logits_from_hidden(tier, params, h)  # [B,T,V]
+    last = jnp.take_along_axis(
+        logits, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)[:, 0]
+    key = jax.random.wrap_key_data(seed.astype(jnp.uint32),
+                                   impl="threefry2x32")
+    tok, lp = _sample(last, key, temp)
+    return (*kvs, tok, lp)
+
+
+def _sample(logits, key, temp):
+    """Temperature sampling with greedy fallback for temp < 1e-3.
+
+    Returns (token i32[B], behavior logp f32[B] under the temp-scaled
+    distribution)."""
+    scaled = logits / jnp.maximum(temp, 1e-3)
+    logp_full = jax.nn.log_softmax(scaled, axis=-1)
+    sampled = jax.random.categorical(key, logp_full, axis=-1)
+    greedy = jnp.argmax(logits, axis=-1)
+    tok = jnp.where(temp < 1e-3, greedy, sampled).astype(jnp.int32)
+    lp = jnp.take_along_axis(logp_full, tok[:, None], axis=-1)[:, 0]
+    lp = jnp.where(temp < 1e-3, jnp.zeros_like(lp), lp)
+    return tok, lp
+
+
+def decode(tier: Tier, params, kvs, lens, tok, seed, temp):
+    """Chunked decode: `chunk` tokens per call, sampling in-graph.
+
+    kvs:  2*L fp16 arrays [B, T, H, Dh]
+    lens: i32[B]  current sequence length per slot (tok sits at lens-1...)
+          convention: `tok` is the *last committed* token, its KV is NOT yet
+          in the cache if it was freshly sampled — see below.
+    tok:  i32[B]  token to feed next (position = lens)
+    seed: u32[2]  threefry key data
+    temp: f32[]   sampling temperature (>= 1e-3 => sample; < 1e-3 => greedy)
+
+    Each step embeds `tok` at position lens, writes its K/V at cache slot
+    lens, attends over [0, lens], samples the next token, and advances lens.
+    Returns (toks i32[C,B], logps f32[C,B], *kv', lens').
+    """
+    idx = _index(tier)
+    key = jax.random.wrap_key_data(seed.astype(jnp.uint32),
+                                   impl="threefry2x32")
+    T = tier.max_seq
+    B = tok.shape[0]
+    barange = jnp.arange(B)
+
+    def step(carry, _):
+        kvs, lens, tok, key = carry
+        kvs = list(kvs)
+        pos = jnp.minimum(lens, T - 1)
+        h = params[idx["embed"]][tok] + params[idx["pos"]][pos]  # [B,D]
+        for l in range(tier.n_layers):
+            p = f"layer{l}."
+            if tier.arch == "llama":
+                x = _norm(tier, h, params[idx[p + "rms1_w"]], None)
+            else:
+                x = _norm(tier, h, params[idx[p + "ln1_w"]],
+                          params[idx[p + "ln1_b"]])
+            q = (x @ params[idx[p + "wq"]]).reshape(B, tier.n_heads, tier.head_dim)
+            k = (x @ params[idx[p + "wk"]]).reshape(B, tier.n_heads, tier.head_dim)
+            v = (x @ params[idx[p + "wv"]]).reshape(B, tier.n_heads, tier.head_dim)
+            kc = kvs[2 * l].at[barange, pos].set(k.astype(jnp.float16))
+            vc = kvs[2 * l + 1].at[barange, pos].set(v.astype(jnp.float16))
+            kvs[2 * l], kvs[2 * l + 1] = kc, vc
+            a = decode_attention(q, kc, vc, pos + 1)  # attends [0, pos]
+            h = h + a.reshape(B, -1) @ params[idx[p + "wo"]]
+            if tier.arch == "llama":
+                x = _norm(tier, h, params[idx[p + "rms2_w"]], None)
+            else:
+                x = _norm(tier, h, params[idx[p + "ln2_w"]],
+                          params[idx[p + "ln2_b"]])
+            h = h + _mlp(tier, params, idx, l, x)
+        logits = logits_from_hidden(tier, params, h[:, None, :])[:, 0]  # [B,V]
+        key, sub = jax.random.split(key)
+        nxt, lp = _sample(logits, sub, temp)
+        lens2 = jnp.minimum(lens + 1, T - 1)
+        return (tuple(kvs), lens2, nxt, key), (nxt, lp)
+
+    carry0 = (tuple(kvs), lens, tok, key)
+    (kvs, lens, tok, key), (toks, logps) = jax.lax.scan(
+        step, carry0, None, length=tier.chunk)
+    return (toks, logps, *kvs, lens)
+
+
+# ---------------------------------------------------------------------------
+# optimization (AdamW per paper Table 3; lr is a runtime input)
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads))
+
+
+def adamw_update(tier: Tier, params, m, v, step, grads, lr):
+    """AdamW with global-norm clipping. Returns params', m', v', step',
+    grad_norm."""
+    b1, b2, eps, wd = tier.adam
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, tier.grad_clip / (gnorm + 1e-12))
+    grads = [g * clip for g in grads]
+    step1 = step + 1
+    t = step1.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    new_p, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * jnp.square(g)
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + eps) + wd * p
+        new_p.append(p - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, step1, gnorm
+
+
+def train_step(tier: Tier, params, m, v, step, tokens, loss_mask, adv,
+               behav_lp, prox_lp, lr):
+    """One PPO minibatch update with the decoupled objective (Eq. 5).
+
+    tokens i32[B,T]; loss_mask/adv/behav_lp/prox_lp f32[B,T]; step i32[];
+    lr f32[]. Returns (*params', *m', *v', step', metrics f32[8]):
+    metrics = [loss, clip_frac, ratio_mean, approx_kl(prox||theta),
+               token_nll, grad_norm, w_mean, n_tokens]
+    """
+    b, t = tokens.shape
+    n = b * t
+    flat = lambda x: x.reshape(n)
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+    def loss_fn(p):
+        lp = token_logprob(tier, p, tokens)
+        per_tok = ppo_token_loss(flat(lp), flat(prox_lp), flat(behav_lp),
+                                 flat(adv), flat(loss_mask),
+                                 tier.clip_eps, tier.w_max)
+        return jnp.sum(per_tok) / denom, lp
+
+    (loss, lp), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    new_p, new_m, new_v, step1, gnorm = adamw_update(
+        tier, params, m, v, step, grads, lr)
+
+    # diagnostics (masked means)
+    msum = lambda x: jnp.sum(x * loss_mask) / denom
+    ratio = jnp.exp(lp - prox_lp)
+    clipped = jnp.logical_or(ratio > 1.0 + tier.clip_eps,
+                             ratio < 1.0 - tier.clip_eps).astype(jnp.float32)
+    w = jnp.clip(jnp.exp(prox_lp - behav_lp), 0.0, tier.w_max)
+    metrics = jnp.stack([
+        loss,
+        msum(clipped),
+        msum(ratio),
+        msum(prox_lp - lp),     # approx KL(prox || theta)
+        msum(-lp),              # token NLL under the new policy
+        gnorm,
+        msum(w),
+        jnp.sum(loss_mask),
+    ])
+    return (*new_p, *new_m, *new_v, step1, metrics)
+
+
+def sft_step(tier: Tier, params, m, v, step, tokens, loss_mask, lr):
+    """One supervised (cross-entropy) step — the "distillation" warmup that
+    stands in for the paper's SFT'd base models.
+
+    Returns (*params', *m', *v', step', metrics f32[4]):
+    metrics = [loss, token_acc, grad_norm, n_tokens]
+    """
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+    def loss_fn(p):
+        logits = forward_logits(tier, p, tokens)  # [B,T,V]
+        logp_full = jax.nn.log_softmax(logits, axis=-1)
+        lp = jnp.take_along_axis(logp_full[:, :-1], tokens[:, 1:, None],
+                                 axis=-1)[..., 0]
+        lp = jnp.concatenate(
+            [jnp.zeros((tokens.shape[0], 1), jnp.float32), lp], axis=1)
+        loss = -jnp.sum(lp * loss_mask) / denom
+        pred = jnp.argmax(logits[:, :-1], axis=-1)
+        correct = (pred == tokens[:, 1:]).astype(jnp.float32)
+        correct = jnp.concatenate(
+            [jnp.zeros((tokens.shape[0], 1), jnp.float32), correct], axis=1)
+        acc = jnp.sum(correct * loss_mask) / denom
+        return loss, acc
+
+    (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    new_p, new_m, new_v, step1, gnorm = adamw_update(
+        tier, params, m, v, step, grads, lr)
+    metrics = jnp.stack([loss, acc, gnorm, jnp.sum(loss_mask)])
+    return (*new_p, *new_m, *new_v, step1, metrics)

@@ -1,0 +1,87 @@
+"""Model tier configurations.
+
+Each tier is a scaled-down analogue of one of the paper's R1-Distilled-Qwen
+base models (1.5B..32B). The architecture (decoder-only, pre-LN, learned
+positions, GELU MLP) is shared; `llama_small` is the Table-6 generalization
+variant (RMSNorm + SiLU-gated MLP + tied embeddings, mirroring the paper's
+DeepSeek-Distilled-Llama-8B experiment).
+
+Fields
+------
+vocab:        tokenizer vocabulary size (shared with the Rust tokenizer)
+d_model/n_layers/n_heads/d_ff: transformer dims (head dim = d_model/n_heads)
+max_seq:      maximum context (prompt + generation), the paper's 32k analogue
+gen_batch:    decoding slots per rollout worker (continuous batching width)
+chunk:        tokens decoded per AOT `decode` call (in-graph lax.scan length)
+train_batch:  sequences per PPO *minibatch* (paper: global batch / 4)
+arch:         "gpt" | "llama"
+clip_eps:     PPO clip (Table 3: 0.2)
+w_max:        behavior importance-weight clip for the decoupled objective
+adam:         (beta1, beta2, eps, weight_decay) per Table 3
+paper_analogue: which paper model this tier stands in for
+"""
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class Tier:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    gen_batch: int
+    chunk: int
+    train_batch: int
+    arch: str = "gpt"
+    clip_eps: float = 0.2
+    w_max: float = 5.0
+    adam: Tuple[float, float, float, float] = (0.9, 0.95, 1e-5, 0.05)
+    grad_clip: float = 1.0
+    paper_analogue: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Approximate parameter count (used for roofline estimates)."""
+        V, D, L, F = self.vocab, self.d_model, self.n_layers, self.d_ff
+        emb = V * D + self.max_seq * D
+        if self.arch == "llama":
+            per_layer = 4 * D * D + 3 * D * F + 2 * D
+            head = 0  # tied
+        else:
+            per_layer = 4 * D * D + 2 * D * F + F + D + 4 * D
+            head = D * V
+        return emb + L * per_layer + 2 * D + head
+
+
+TIERS = {
+    "nano": Tier("nano", vocab=48, d_model=32, n_layers=2, n_heads=2, d_ff=64,
+                 max_seq=64, gen_batch=4, chunk=16, train_batch=8,
+                 paper_analogue="(ci/test only)"),
+    "tiny": Tier("tiny", vocab=48, d_model=64, n_layers=2, n_heads=2, d_ff=256,
+                 max_seq=128, gen_batch=8, chunk=16, train_batch=16,
+                 paper_analogue="R1-Distill-Qwen-1.5B"),
+    "small": Tier("small", vocab=48, d_model=128, n_layers=4, n_heads=4, d_ff=512,
+                  max_seq=256, gen_batch=8, chunk=16, train_batch=16,
+                  paper_analogue="R1-Distill-Qwen-7B"),
+    "base": Tier("base", vocab=48, d_model=192, n_layers=6, n_heads=6, d_ff=768,
+                 max_seq=256, gen_batch=8, chunk=16, train_batch=16,
+                 paper_analogue="R1-Distill-Qwen-14B"),
+    "large": Tier("large", vocab=48, d_model=256, n_layers=8, n_heads=8, d_ff=1024,
+                  max_seq=384, gen_batch=8, chunk=16, train_batch=8,
+                  paper_analogue="R1-Distill-Qwen-32B"),
+    "llama_small": Tier("llama_small", vocab=48, d_model=128, n_layers=4,
+                        n_heads=4, d_ff=512, max_seq=256, gen_batch=8, chunk=16,
+                        train_batch=16, arch="llama",
+                        paper_analogue="DeepSeek-Distill-Llama-8B"),
+}
+
+DEFAULT_TIERS = ["nano", "tiny", "small"]

@@ -1,0 +1,118 @@
+"""AOT pipeline tests: manifest shape/signature correctness.
+
+Lowers the nano tier into a temp dir (fast, ~3 s) and checks that the
+manifest the Rust runtime depends on is exactly right.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.tiers import TIERS
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    tier = TIERS["nano"]
+    entry = aot.lower_tier(tier, out, quiet=True)
+    manifest = {"version": aot.MANIFEST_VERSION,
+                "tiers": {"nano": aot.tier_manifest(tier, entry)}}
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return out, manifest
+
+
+class TestParseShape:
+    def test_basic(self):
+        assert aot.parse_shape("f32[2,8]{1,0}") == \
+            {"dtype": "f32", "shape": [2, 8]}
+
+    def test_scalar(self):
+        assert aot.parse_shape("s32[]") == {"dtype": "s32", "shape": []}
+
+    def test_f16(self):
+        assert aot.parse_shape("f16[4,64,2,16]{3,2,1,0}") == \
+            {"dtype": "f16", "shape": [4, 64, 2, 16]}
+
+    def test_reject_garbage(self):
+        with pytest.raises(ValueError):
+            aot.parse_shape("(f32[2], f32[])")
+
+
+class TestManifest:
+    def test_all_entrypoints_present(self, built):
+        _, manifest = built
+        eps = manifest["tiers"]["nano"]["entrypoints"]
+        assert set(eps) == {"init", "prefill", "decode", "logprob",
+                            "logprob_h", "train_step", "train_step_h",
+                            "sft_step", "sft_step_h"}
+
+    def test_files_exist_and_parse_as_hlo(self, built):
+        out, manifest = built
+        for name, ep in manifest["tiers"]["nano"]["entrypoints"].items():
+            path = os.path.join(out, ep["file"])
+            assert os.path.exists(path), name
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), name
+
+    def test_init_outputs_match_param_spec(self, built):
+        _, manifest = built
+        tier = TIERS["nano"]
+        spec = model.param_spec(tier)
+        outs = manifest["tiers"]["nano"]["entrypoints"]["init"]["outputs"]
+        assert len(outs) == len(spec)
+        for o, (name, shape) in zip(outs, spec):
+            assert o["name"] == f"params.{name}"
+            assert o["shape"] == list(shape)
+            assert o["dtype"] == "f32"
+
+    def test_kv_cache_is_f16(self, built):
+        _, manifest = built
+        tier = TIERS["nano"]
+        outs = manifest["tiers"]["nano"]["entrypoints"]["prefill"]["outputs"]
+        kv = [o for o in outs if o["name"].startswith("kv.")]
+        assert len(kv) == 2 * tier.n_layers
+        for o in kv:
+            assert o["dtype"] == "f16"
+            assert o["shape"] == [tier.gen_batch, tier.max_seq,
+                                  tier.n_heads, tier.head_dim]
+
+    def test_train_step_roundtrip_signature(self, built):
+        """train_step outputs (params', m', v', step') must be shape-identical
+        to the corresponding inputs — the Rust trainer feeds them back."""
+        _, manifest = built
+        ep = manifest["tiers"]["nano"]["entrypoints"]["train_step"]
+        n = len(model.param_spec(TIERS["nano"]))
+        ins, outs = ep["inputs"], ep["outputs"]
+        for i in range(3 * n + 1):  # params, m, v, step
+            assert ins[i]["name"] == outs[i]["name"]
+            assert ins[i]["shape"] == outs[i]["shape"]
+            assert ins[i]["dtype"] == outs[i]["dtype"]
+        assert outs[-1]["name"] == "metrics"
+        assert outs[-1]["shape"] == [len(aot.TRAIN_METRICS)]
+
+    def test_decode_kv_roundtrip_signature(self, built):
+        _, manifest = built
+        ep = manifest["tiers"]["nano"]["entrypoints"]["decode"]
+        ins = {i["name"]: i for i in ep["inputs"]}
+        outs = {o["name"]: o for o in ep["outputs"]}
+        for l in range(TIERS["nano"].n_layers):
+            for kv in (f"kv.k{l}", f"kv.v{l}"):
+                assert ins[kv]["shape"] == outs[kv]["shape"]
+                assert ins[kv]["dtype"] == outs[kv]["dtype"] == "f16"
+        tier = TIERS["nano"]
+        assert outs["toks"]["shape"] == [tier.chunk, tier.gen_batch]
+        assert outs["toks"]["dtype"] == "s32"
+        assert outs["logps"]["shape"] == [tier.chunk, tier.gen_batch]
+
+    def test_config_recorded(self, built):
+        _, manifest = built
+        cfg = manifest["tiers"]["nano"]["config"]
+        tier = TIERS["nano"]
+        assert cfg["vocab"] == tier.vocab
+        assert cfg["chunk"] == tier.chunk
+        assert cfg["clip_eps"] == tier.clip_eps
+        assert cfg["adam"] == list(tier.adam)

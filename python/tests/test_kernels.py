@@ -1,0 +1,247 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Values AND gradients, fixed cases plus hypothesis sweeps over shapes, dtypes
+and length patterns. These are the core correctness signal for everything the
+Rust runtime executes.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import causal_attention, vmem_footprint_bytes
+from compile.kernels.decode_attn import decode_attention
+from compile.kernels.ppo_loss import ppo_token_loss
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((scale * RNG.normal(size=shape)).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# causal attention
+
+
+class TestCausalAttention:
+    def test_forward_matches_ref(self):
+        q, k, v = (randn(2, 2, 64, 16) for _ in range(3))
+        np.testing.assert_allclose(causal_attention(q, k, v),
+                                   ref.causal_attention_ref(q, k, v),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_forward_single_head(self):
+        q, k, v = (randn(1, 1, 32, 8) for _ in range(3))
+        np.testing.assert_allclose(causal_attention(q, k, v),
+                                   ref.causal_attention_ref(q, k, v),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_causality(self):
+        """Perturbing position j must not change outputs at positions < j."""
+        q, k, v = (randn(1, 2, 32, 8) for _ in range(3))
+        o1 = causal_attention(q, k, v)
+        k2 = k.at[:, :, 20].add(100.0)
+        v2 = v.at[:, :, 20].add(-50.0)
+        o2 = causal_attention(q, k2, v2)
+        np.testing.assert_allclose(o1[:, :, :20], o2[:, :, :20],
+                                   rtol=1e-6, atol=1e-6)
+        assert not np.allclose(o1[:, :, 20:], o2[:, :, 20:])
+
+    def test_grads_match_ref(self):
+        q, k, v = (randn(2, 2, 32, 16) for _ in range(3))
+
+        def f(att):
+            return lambda q, k, v: jnp.sum(jnp.cos(att(q, k, v)))
+
+        g = jax.grad(f(causal_attention), argnums=(0, 1, 2))(q, k, v)
+        gr = jax.grad(f(ref.causal_attention_ref), argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g, gr):
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    def test_block_q_invariance(self):
+        """Different query-block sizes must give identical results."""
+        q, k, v = (randn(1, 2, 64, 16) for _ in range(3))
+        o1 = causal_attention(q, k, v, 64, 128)
+        o2 = causal_attention(q, k, v, 16, 16)
+        np.testing.assert_allclose(o1, o2, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 3), h=st.integers(1, 3),
+           tpow=st.integers(3, 6), dh=st.sampled_from([4, 8, 16]))
+    def test_forward_shape_sweep(self, b, h, tpow, dh):
+        t = 2 ** tpow
+        q, k, v = (randn(b, h, t, dh) for _ in range(3))
+        np.testing.assert_allclose(causal_attention(q, k, v),
+                                   ref.causal_attention_ref(q, k, v),
+                                   rtol=5e-5, atol=5e-5)
+
+    def test_large_scale_values_stable(self):
+        """Online softmax must survive large score magnitudes."""
+        q, k, v = (randn(1, 1, 32, 8, scale=30.0) for _ in range(3))
+        o = causal_attention(q, k, v)
+        assert np.isfinite(np.asarray(o)).all()
+        np.testing.assert_allclose(o, ref.causal_attention_ref(q, k, v),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_vmem_footprint_estimate(self):
+        # documented estimate (DESIGN.md §7) stays under a 16 MiB VMEM budget
+        assert vmem_footprint_bytes(384, 32) < 16 * 2 ** 20
+        assert vmem_footprint_bytes(128, 32) < vmem_footprint_bytes(384, 32)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+
+
+class TestDecodeAttention:
+    def test_matches_ref_f16(self):
+        b, t, h, dh = 4, 64, 2, 16
+        q = randn(b, h, dh)
+        kc = randn(b, t, h, dh, dtype=np.float16)
+        vc = randn(b, t, h, dh, dtype=np.float16)
+        lens = jnp.array([1, 5, 33, 64], jnp.int32)
+        np.testing.assert_allclose(
+            decode_attention(q, kc, vc, lens),
+            ref.decode_attention_ref(q, kc, vc, lens), rtol=2e-4, atol=2e-4)
+
+    def test_garbage_beyond_len_is_ignored(self):
+        """Cache contents at positions >= len must not affect the output."""
+        b, t, h, dh = 2, 32, 2, 8
+        q = randn(b, h, dh)
+        kc = randn(b, t, h, dh, dtype=np.float16)
+        vc = randn(b, t, h, dh, dtype=np.float16)
+        lens = jnp.array([7, 15], jnp.int32)
+        o1 = decode_attention(q, kc, vc, lens)
+        kc2 = kc.at[0, 7:].set(999.0)
+        vc2 = vc.at[0, 7:].set(-999.0)
+        o2 = decode_attention(q, kc2, vc2, lens)
+        np.testing.assert_allclose(o1, o2, rtol=1e-6, atol=1e-6)
+
+    def test_len_one(self):
+        b, t, h, dh = 2, 16, 1, 8
+        q = randn(b, h, dh)
+        kc = randn(b, t, h, dh, dtype=np.float16)
+        vc = randn(b, t, h, dh, dtype=np.float16)
+        lens = jnp.array([1, 1], jnp.int32)
+        out = decode_attention(q, kc, vc, lens)
+        # with a single valid position softmax is a delta: out == v[:, 0]
+        np.testing.assert_allclose(
+            out, vc[:, 0].astype(jnp.float32).transpose(0, 1, 2),
+            rtol=1e-3, atol=1e-3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=st.integers(1, 4), tpow=st.integers(3, 6), h=st.integers(1, 3),
+           dh=st.sampled_from([4, 8, 16]), data=st.data())
+    def test_shape_len_sweep(self, b, tpow, h, dh, data):
+        t = 2 ** tpow
+        lens = data.draw(st.lists(st.integers(1, t), min_size=b, max_size=b))
+        q = randn(b, h, dh)
+        kc = randn(b, t, h, dh, dtype=np.float16)
+        vc = randn(b, t, h, dh, dtype=np.float16)
+        lens = jnp.asarray(np.array(lens, np.int32))
+        np.testing.assert_allclose(
+            decode_attention(q, kc, vc, lens),
+            ref.decode_attention_ref(q, kc, vc, lens), rtol=3e-4, atol=3e-4)
+
+    def test_agrees_with_full_causal_attention(self):
+        """Decode at position p == row p of full causal attention."""
+        b, t, h, dh = 1, 16, 2, 8
+        q_full, k_full, v_full = (randn(b, h, t, dh) for _ in range(3))
+        o_full = ref.causal_attention_ref(q_full, k_full, v_full)
+        p = 9
+        kc = k_full.transpose(0, 2, 1, 3).astype(jnp.float16)
+        vc = v_full.transpose(0, 2, 1, 3).astype(jnp.float16)
+        od = decode_attention(q_full[:, :, p], kc, vc,
+                              jnp.array([p + 1], jnp.int32))
+        np.testing.assert_allclose(od, o_full[:, :, p], rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# decoupled PPO loss
+
+
+def loss_inputs(n, scale=0.3):
+    lp = randn(n, scale=scale)
+    px = randn(n, scale=scale)
+    bh = randn(n, scale=scale)
+    adv = randn(n)
+    mask = jnp.asarray((RNG.random(n) > 0.25).astype(np.float32))
+    return lp, px, bh, adv, mask
+
+
+class TestPPOLoss:
+    def test_forward_matches_ref(self):
+        lp, px, bh, adv, mask = loss_inputs(2048)
+        np.testing.assert_allclose(
+            ppo_token_loss(lp, px, bh, adv, mask),
+            ref.ppo_loss_ref(lp, px, bh, adv, mask, 0.2, 5.0),
+            rtol=1e-5, atol=1e-5)
+
+    def test_grad_matches_analytic(self):
+        lp, px, bh, adv, mask = loss_inputs(1024)
+        g = jax.grad(lambda x: jnp.sum(ppo_token_loss(x, px, bh, adv, mask)))(lp)
+        np.testing.assert_allclose(
+            g, ref.ppo_loss_grad_ref(lp, px, bh, adv, mask, 0.2, 5.0),
+            rtol=1e-5, atol=1e-5)
+
+    def test_grad_matches_autodiff_of_ref(self):
+        lp, px, bh, adv, mask = loss_inputs(512)
+        g = jax.grad(lambda x: jnp.sum(ppo_token_loss(x, px, bh, adv, mask)))(lp)
+        gr = jax.grad(lambda x: jnp.sum(
+            ref.ppo_loss_ref(x, px, bh, adv, mask, 0.2, 5.0)))(lp)
+        np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+    def test_naive_ppo_recovered_when_prox_equals_behav(self):
+        """prox == behav collapses Eq. 5 to the standard Eq. 2 objective."""
+        lp, px, bh, adv, mask = loss_inputs(512)
+        loss = ppo_token_loss(lp, bh, bh, adv, mask)
+        u = jnp.exp(lp - bh)
+        std = -jnp.minimum(u * adv, jnp.clip(u, 0.8, 1.2) * adv) * mask
+        np.testing.assert_allclose(loss, std, rtol=1e-5, atol=1e-5)
+
+    def test_mask_zeroes_loss(self):
+        lp, px, bh, adv, _ = loss_inputs(512)
+        zero = jnp.zeros(512, jnp.float32)
+        np.testing.assert_array_equal(
+            np.asarray(ppo_token_loss(lp, px, bh, adv, zero)), np.zeros(512))
+
+    def test_w_max_clips_importance_weight(self):
+        n = 512
+        lp = jnp.zeros(n)
+        px = jnp.full((n,), 10.0)   # exp(10) >> w_max
+        bh = jnp.zeros(n)
+        adv = jnp.ones(n)
+        mask = jnp.ones(n)
+        loss = ppo_token_loss(lp, px, bh, adv, mask, 0.2, 5.0)
+        lref = ref.ppo_loss_ref(lp, px, bh, adv, mask, 0.2, 5.0)
+        np.testing.assert_allclose(loss, lref, rtol=1e-5)
+        # w == w_max exactly; u=exp(-10), min picks u*adv
+        np.testing.assert_allclose(
+            loss, -5.0 * np.exp(-10.0) * np.ones(n), rtol=1e-4)
+
+    def test_zero_advantage_zero_grad(self):
+        lp, px, bh, _, mask = loss_inputs(512)
+        adv = jnp.zeros(512)
+        g = jax.grad(lambda x: jnp.sum(ppo_token_loss(x, px, bh, adv, mask)))(lp)
+        np.testing.assert_allclose(np.asarray(g), np.zeros(512), atol=1e-7)
+
+    @settings(max_examples=10, deadline=None)
+    @given(npow=st.integers(5, 12),
+           eps=st.sampled_from([0.1, 0.2, 0.3]),
+           wmax=st.sampled_from([2.0, 5.0, 100.0]))
+    def test_param_sweep(self, npow, eps, wmax):
+        n = 2 ** npow
+        lp, px, bh, adv, mask = loss_inputs(n)
+        np.testing.assert_allclose(
+            ppo_token_loss(lp, px, bh, adv, mask, eps, wmax),
+            ref.ppo_loss_ref(lp, px, bh, adv, mask, eps, wmax),
+            rtol=1e-5, atol=1e-5)
+        g = jax.grad(lambda x: jnp.sum(
+            ppo_token_loss(x, px, bh, adv, mask, eps, wmax)))(lp)
+        np.testing.assert_allclose(
+            g, ref.ppo_loss_grad_ref(lp, px, bh, adv, mask, eps, wmax),
+            rtol=1e-5, atol=1e-5)

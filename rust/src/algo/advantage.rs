@@ -1,0 +1,159 @@
+//! Advantage estimation per the paper's §B.1 PPO configuration:
+//!
+//! - no critic / reference model; γ = λ = 1 and the reward is terminal-only,
+//!   so every response token carries the same sequence-level advantage;
+//! - baseline: group mean over the n responses sampled per prompt
+//!   (GRPO-style, critic disabled) or leave-one-out (RLOO, Appendix C.4);
+//! - advantage normalization across the global batch (§B.1).
+
+use std::collections::HashMap;
+
+use crate::util::stats;
+
+/// Which per-group baseline to subtract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    /// advantage = r − mean(group), the paper's default (critic disabled)
+    GroupMean,
+    /// leave-one-out: advantage_i = r_i − mean(group \ {i})
+    Rloo,
+    /// no baseline (ablation)
+    None,
+}
+
+#[derive(Debug, Clone)]
+pub struct AdvantageEstimator {
+    pub baseline: Baseline,
+    /// normalize advantages over the global batch (paper §B.1: true)
+    pub normalize: bool,
+}
+
+impl Default for AdvantageEstimator {
+    fn default() -> Self {
+        AdvantageEstimator { baseline: Baseline::GroupMean, normalize: true }
+    }
+}
+
+impl AdvantageEstimator {
+    /// Compute per-sequence advantages from (group id, terminal reward)
+    /// pairs. Order is preserved.
+    pub fn advantages(&self, rewards: &[(u64, f32)]) -> Vec<f32> {
+        // group sums/counts
+        let mut sums: HashMap<u64, (f64, usize)> = HashMap::new();
+        for &(g, r) in rewards {
+            let e = sums.entry(g).or_insert((0.0, 0));
+            e.0 += r as f64;
+            e.1 += 1;
+        }
+        let mut adv: Vec<f64> = rewards
+            .iter()
+            .map(|&(g, r)| {
+                let (sum, n) = sums[&g];
+                match self.baseline {
+                    Baseline::None => r as f64,
+                    Baseline::GroupMean => r as f64 - sum / n as f64,
+                    Baseline::Rloo => {
+                        if n <= 1 {
+                            // leave-one-out undefined for singleton groups;
+                            // fall back to no baseline
+                            r as f64
+                        } else {
+                            r as f64 - (sum - r as f64) / (n - 1) as f64
+                        }
+                    }
+                }
+            })
+            .collect();
+        if self.normalize {
+            stats::normalize(&mut adv);
+        }
+        adv.into_iter().map(|a| a as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn est(b: Baseline, norm: bool) -> AdvantageEstimator {
+        AdvantageEstimator { baseline: b, normalize: norm }
+    }
+
+    #[test]
+    fn group_mean_zero_sums_per_group() {
+        let rewards = vec![(0, 5.0), (0, -5.0), (0, 5.0), (1, -5.0), (1, -5.0)];
+        let adv = est(Baseline::GroupMean, false).advantages(&rewards);
+        let g0: f32 = adv[..3].iter().sum();
+        let g1: f32 = adv[3..].iter().sum();
+        assert!(g0.abs() < 1e-5);
+        assert!(g1.abs() < 1e-5);
+        // all-wrong group: zero advantage (no gradient signal), the GRPO
+        // degenerate case
+        assert!(adv[3].abs() < 1e-5 && adv[4].abs() < 1e-5);
+    }
+
+    #[test]
+    fn rloo_matches_closed_form() {
+        let rewards = vec![(7, 5.0), (7, -5.0), (7, 5.0), (7, 5.0)];
+        let adv = est(Baseline::Rloo, false).advantages(&rewards);
+        // r0=5; others mean = (−5+5+5)/3 = 5/3
+        assert!((adv[0] - (5.0 - 5.0 / 3.0)).abs() < 1e-5);
+        // r1=−5; others mean = 5
+        assert!((adv[1] - (-5.0 - 5.0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn rloo_singleton_group_falls_back() {
+        let adv = est(Baseline::Rloo, false).advantages(&[(1, 5.0)]);
+        assert_eq!(adv, vec![5.0]);
+    }
+
+    #[test]
+    fn normalization_gives_unit_scale() {
+        let rewards: Vec<(u64, f32)> =
+            (0..16).map(|i| (i / 4, if i % 3 == 0 { 5.0 } else { -5.0 })).collect();
+        let adv = est(Baseline::GroupMean, true).advantages(&rewards);
+        let v: Vec<f64> = adv.iter().map(|&a| a as f64).collect();
+        assert!(stats::mean(&v).abs() < 1e-6);
+        assert!((stats::std(&v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_group_mean_invariant_to_reward_shift_after_norm() {
+        // shifting all rewards by a constant leaves normalized group-mean
+        // advantages unchanged
+        prop_check(50, |rng| {
+            let n_groups = rng.range_usize(2, 5);
+            let per = rng.range_usize(2, 6);
+            let mut rewards = Vec::new();
+            for g in 0..n_groups as u64 {
+                for _ in 0..per {
+                    rewards.push((g, if rng.chance(0.5) { 5.0 } else { -5.0 }));
+                }
+            }
+            // degenerate all-equal batches normalize to zeros; skip those
+            let base = est(Baseline::GroupMean, true).advantages(&rewards);
+            let shifted: Vec<(u64, f32)> =
+                rewards.iter().map(|&(g, r)| (g, r + 3.0)).collect();
+            let shifted_adv = est(Baseline::GroupMean, true).advantages(&shifted);
+            for (a, b) in base.iter().zip(&shifted_adv) {
+                crate::prop_assert!((a - b).abs() < 1e-4, "shift changed adv");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_order_preserved() {
+        prop_check(50, |rng| {
+            let n = rng.range_usize(1, 20);
+            let rewards: Vec<(u64, f32)> = (0..n)
+                .map(|i| (i as u64 % 3, rng.range_i64(-5, 5) as f32))
+                .collect();
+            let adv = est(Baseline::GroupMean, false).advantages(&rewards);
+            crate::prop_assert!(adv.len() == n, "length changed");
+            Ok(())
+        });
+    }
+}

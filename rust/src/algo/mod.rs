@@ -1,0 +1,8 @@
+//! RL algorithm pieces computed on the Rust side: advantage estimation and
+//! training-batch assembly. The loss itself lives in the AOT `train_step`
+//! artifact (decoupled PPO, Eq. 5); everything that shapes its inputs —
+//! rewards → advantages → normalization → minibatch tensors — lives here.
+
+pub mod advantage;
+
+pub use advantage::{AdvantageEstimator, Baseline};

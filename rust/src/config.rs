@@ -1,0 +1,328 @@
+//! Config system: typed configuration with JSON file loading and
+//! `key=value` CLI overrides. Defaults mirror the paper's Table 3 where the
+//! setting transfers to this testbed.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Scheduling mode — the systems compared throughout the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// classic synchronous RL (η=0, no interruption) — the verl-like baseline
+    Sync,
+    /// one-step generation/training overlap (η=1, no interruption)
+    Overlap,
+    /// fully asynchronous AReaL (configurable η, interruptible generation)
+    Async,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "sync" => Mode::Sync,
+            "overlap" => Mode::Overlap,
+            "async" => Mode::Async,
+            other => bail!("unknown mode '{other}' (sync|overlap|async)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Sync => "sync",
+            Mode::Overlap => "overlap",
+            Mode::Async => "async",
+        }
+    }
+}
+
+/// Advantage baseline selection (paper §B.1 + Appendix C.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BaselineCfg {
+    GroupMean,
+    Rloo,
+    None,
+}
+
+impl BaselineCfg {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "group" | "group_mean" | "grpo" => BaselineCfg::GroupMean,
+            "rloo" => BaselineCfg::Rloo,
+            "none" => BaselineCfg::None,
+            other => bail!("unknown baseline '{other}' (group|rloo|none)"),
+        })
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    // system
+    pub artifacts_dir: PathBuf,
+    pub tier: String,
+    pub mode: Mode,
+    /// max permitted staleness η (None = unbounded, the paper's η→∞)
+    pub max_staleness: Option<u64>,
+    /// interruptible generation (paper §4.1; ablated in Fig. 6b)
+    pub interruptible: bool,
+    pub n_rollout_workers: usize,
+    pub reward_threads: usize,
+    pub seed: u64,
+
+    // rollout
+    pub task: String,
+    /// difficulty levels sampled during training (uniform mix)
+    pub level_lo: usize,
+    pub level_hi: usize,
+    pub temperature: f32,
+    /// responses sampled per prompt (paper: 16)
+    pub group_size: usize,
+    /// fraction of empty slots that triggers a refill/prefill wave
+    pub refill_fraction: f64,
+
+    // training
+    /// sequences per PPO step (global batch)
+    pub global_batch: usize,
+    /// sequential minibatch updates per PPO step (paper: 4)
+    pub ppo_minibatches: usize,
+    pub ppo_steps: usize,
+    pub lr: f64,
+    pub baseline: BaselineCfg,
+    /// decoupled PPO objective (Eq. 5); false = naive PPO ablation
+    pub decoupled: bool,
+    /// Algorithm-1 dynamic micro-batch allocation; false = standard batching
+    pub dynamic_batching: bool,
+    /// token budget per micro-batch for Algorithm 1
+    pub token_budget: usize,
+
+    // sft warmup
+    pub sft_steps: usize,
+    pub sft_lr: f64,
+
+    // bookkeeping
+    pub out_dir: PathBuf,
+    pub checkpoint_every: usize,
+    pub eval_samples: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            tier: "tiny".into(),
+            mode: Mode::Async,
+            max_staleness: Some(4),
+            interruptible: true,
+            n_rollout_workers: 2,
+            reward_threads: 2,
+            seed: 1, // paper Appendix A: fixed seed of 1
+            task: "math".into(),
+            level_lo: 1,
+            level_hi: 3,
+            temperature: 1.0,
+            group_size: 4,
+            refill_fraction: 0.25,
+            global_batch: 32,
+            ppo_minibatches: 4, // Table 3
+            ppo_steps: 50,
+            lr: 2e-4,
+            baseline: BaselineCfg::GroupMean,
+            decoupled: true,
+            dynamic_batching: true,
+            token_budget: 2048,
+            sft_steps: 0,
+            sft_lr: 1e-3,
+            out_dir: PathBuf::from("runs/default"),
+            checkpoint_every: 0,
+            eval_samples: 4,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON file then apply `key=value` overrides.
+    pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Config> {
+        let mut cfg = Config::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)
+                .with_context(|| format!("reading config {p:?}"))?;
+            let json = Json::parse(&text).context("parsing config json")?;
+            let obj = json.as_obj().context("config root must be an object")?;
+            for (k, v) in obj {
+                cfg.set(k, &json_to_str(v))?;
+            }
+        }
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .with_context(|| format!("override '{ov}' is not key=value"))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Set a single field by name.
+    pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        let u = |v: &str| -> Result<usize> {
+            v.parse().with_context(|| format!("bad usize for {key}: {v}"))
+        };
+        let f = |v: &str| -> Result<f64> {
+            v.parse().with_context(|| format!("bad float for {key}: {v}"))
+        };
+        match key {
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(val),
+            "tier" => self.tier = val.to_string(),
+            "mode" => self.mode = Mode::parse(val)?,
+            "max_staleness" | "eta" => {
+                self.max_staleness = if val == "inf" || val == "none" {
+                    None
+                } else {
+                    Some(val.parse().with_context(|| format!("bad eta: {val}"))?)
+                }
+            }
+            "interruptible" => self.interruptible = parse_bool(val)?,
+            "n_rollout_workers" | "workers" => self.n_rollout_workers = u(val)?,
+            "reward_threads" => self.reward_threads = u(val)?,
+            "seed" => self.seed = val.parse().context("bad seed")?,
+            "task" => self.task = val.to_string(),
+            "level_lo" => self.level_lo = u(val)?,
+            "level_hi" => self.level_hi = u(val)?,
+            "temperature" => self.temperature = f(val)? as f32,
+            "group_size" => self.group_size = u(val)?,
+            "refill_fraction" => self.refill_fraction = f(val)?,
+            "global_batch" => self.global_batch = u(val)?,
+            "ppo_minibatches" => self.ppo_minibatches = u(val)?,
+            "ppo_steps" | "steps" => self.ppo_steps = u(val)?,
+            "lr" => self.lr = f(val)?,
+            "baseline" => self.baseline = BaselineCfg::parse(val)?,
+            "decoupled" => self.decoupled = parse_bool(val)?,
+            "dynamic_batching" => self.dynamic_batching = parse_bool(val)?,
+            "token_budget" => self.token_budget = u(val)?,
+            "sft_steps" => self.sft_steps = u(val)?,
+            "sft_lr" => self.sft_lr = f(val)?,
+            "out_dir" => self.out_dir = PathBuf::from(val),
+            "checkpoint_every" => self.checkpoint_every = u(val)?,
+            "eval_samples" => self.eval_samples = u(val)?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_rollout_workers == 0 {
+            bail!("n_rollout_workers must be >= 1");
+        }
+        if self.group_size == 0 || self.global_batch == 0 || self.ppo_minibatches == 0 {
+            bail!("batch sizes must be positive");
+        }
+        if self.global_batch % self.ppo_minibatches != 0 {
+            bail!(
+                "global_batch ({}) must divide evenly into ppo_minibatches ({})",
+                self.global_batch,
+                self.ppo_minibatches
+            );
+        }
+        if self.level_lo > self.level_hi {
+            bail!("level_lo > level_hi");
+        }
+        match self.mode {
+            Mode::Sync => {
+                if self.max_staleness != Some(0) && self.max_staleness.is_some() {
+                    // sync is definitionally η=0; tolerate and fix up in effective()
+                }
+            }
+            Mode::Overlap | Mode::Async => {}
+        }
+        Ok(())
+    }
+
+    /// Effective (η, interruptible) after mode semantics (Sync forces η=0
+    /// no-interrupt; Overlap forces η=1 no-interrupt).
+    pub fn effective_schedule(&self) -> (Option<u64>, bool) {
+        match self.mode {
+            Mode::Sync => (Some(0), false),
+            Mode::Overlap => (Some(1), false),
+            Mode::Async => (self.max_staleness, self.interruptible),
+        }
+    }
+
+    pub fn minibatch_size(&self) -> usize {
+        self.global_batch / self.ppo_minibatches
+    }
+}
+
+fn parse_bool(v: &str) -> Result<bool> {
+    match v {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        other => bail!("bad bool: {other}"),
+    }
+}
+
+fn json_to_str(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = Config::load(
+            None,
+            &["eta=8".into(), "mode=sync".into(), "lr=0.001".into(),
+              "decoupled=false".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.max_staleness, Some(8));
+        assert_eq!(cfg.mode, Mode::Sync);
+        assert!((cfg.lr - 1e-3).abs() < 1e-12);
+        assert!(!cfg.decoupled);
+    }
+
+    #[test]
+    fn eta_inf() {
+        let cfg = Config::load(None, &["eta=inf".into()]).unwrap();
+        assert_eq!(cfg.max_staleness, None);
+    }
+
+    #[test]
+    fn sync_mode_forces_zero_staleness() {
+        let cfg = Config::load(None, &["mode=sync".into(), "eta=9".into()]).unwrap();
+        assert_eq!(cfg.effective_schedule(), (Some(0), false));
+    }
+
+    #[test]
+    fn rejects_unknown_key_and_bad_values() {
+        assert!(Config::load(None, &["nope=1".into()]).is_err());
+        assert!(Config::load(None, &["lr=abc".into()]).is_err());
+        assert!(Config::load(None, &["global_batch=30".into(),
+                                     "ppo_minibatches=4".into()]).is_err());
+    }
+
+    #[test]
+    fn json_file_loading() {
+        let dir = std::env::temp_dir().join("areal_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"tier": "small", "eta": 2, "interruptible": false}"#)
+            .unwrap();
+        let cfg = Config::load(Some(&p), &[]).unwrap();
+        assert_eq!(cfg.tier, "small");
+        assert_eq!(cfg.max_staleness, Some(2));
+        assert!(!cfg.interruptible);
+    }
+}

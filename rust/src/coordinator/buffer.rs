@@ -1,0 +1,179 @@
+//! Replay buffer — paper §4.1: trainer workers "continuously sample from
+//! the replay buffer, accumulating data until reaching the configured
+//! training batch size"; data "is used only once"; §5.1: "we also
+//! prioritize older trajectories from the data buffer to form a training
+//! batch".
+//!
+//! Implementation: a mutex-protected vec ordered by the version the sample
+//! was born at (oldest first), with a condvar for the blocking trainer pop.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::messages::Trajectory;
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// kept sorted: oldest version_born first
+    items: VecDeque<Trajectory>,
+    pushed: u64,
+    popped: u64,
+    closed: bool,
+}
+
+pub struct ReplayBuffer {
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl Default for ReplayBuffer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplayBuffer {
+    pub fn new() -> Self {
+        ReplayBuffer { inner: Mutex::new(Inner::default()), ready: Condvar::new() }
+    }
+
+    /// Insert a finished trajectory, keeping oldest-first order.
+    pub fn push(&self, t: Trajectory) {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return;
+        }
+        // insertion sort from the back — arrivals are nearly ordered
+        let pos = g
+            .items
+            .iter()
+            .rposition(|x| x.version_born <= t.version_born)
+            .map(|p| p + 1)
+            .unwrap_or(0);
+        g.items.insert(pos, t);
+        g.pushed += 1;
+        drop(g);
+        self.ready.notify_all();
+    }
+
+    /// Blocking pop of exactly `n` oldest trajectories. Returns None if the
+    /// buffer is closed before `n` are available.
+    pub fn pop_batch(&self, n: usize) -> Option<Vec<Trajectory>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.items.len() >= n {
+                g.popped += n as u64;
+                return Some(g.items.drain(..n).collect());
+            }
+            if g.closed {
+                return None;
+            }
+            let (g2, _timeout) = self
+                .ready
+                .wait_timeout(g, Duration::from_millis(100))
+                .unwrap();
+            g = g2;
+        }
+    }
+
+    /// Non-blocking size.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn pushed(&self) -> u64 {
+        self.inner.lock().unwrap().pushed
+    }
+
+    /// Close: unblock any waiting trainer (used at shutdown).
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Prompt;
+    use std::sync::Arc;
+
+    fn traj(version: u64, group: u64) -> Trajectory {
+        Trajectory {
+            prompt: Prompt { text: "Q".into(), meta: "m".into(), level: 1, group },
+            tokens: vec![1, 2],
+            prompt_len: 1,
+            behav_logp: vec![-0.5],
+            segments: vec![(version, 1)],
+            version_born: version,
+            reward: 5.0,
+            correct: true,
+            truncated: false,
+            worker: 0,
+        }
+    }
+
+    #[test]
+    fn oldest_first_ordering() {
+        let b = ReplayBuffer::new();
+        b.push(traj(5, 0));
+        b.push(traj(1, 1));
+        b.push(traj(3, 2));
+        b.push(traj(1, 3));
+        let batch = b.pop_batch(4).unwrap();
+        let versions: Vec<u64> = batch.iter().map(|t| t.version_born).collect();
+        assert_eq!(versions, vec![1, 1, 3, 5]);
+        // FIFO within equal versions
+        assert_eq!(batch[0].prompt.group, 1);
+        assert_eq!(batch[1].prompt.group, 3);
+    }
+
+    #[test]
+    fn use_once_semantics() {
+        let b = ReplayBuffer::new();
+        for i in 0..6 {
+            b.push(traj(0, i));
+        }
+        let first = b.pop_batch(4).unwrap();
+        assert_eq!(first.len(), 4);
+        assert_eq!(b.len(), 2);
+        // popped items are gone — no reuse
+        let groups: Vec<u64> = b.pop_batch(2).unwrap().iter().map(|t| t.prompt.group).collect();
+        assert_eq!(groups, vec![4, 5]);
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push() {
+        let b = Arc::new(ReplayBuffer::new());
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.pop_batch(2));
+        std::thread::sleep(Duration::from_millis(20));
+        b.push(traj(0, 0));
+        b.push(traj(0, 1));
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got.len(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_with_none() {
+        let b = Arc::new(ReplayBuffer::new());
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || b2.pop_batch(5));
+        std::thread::sleep(Duration::from_millis(20));
+        b.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn push_after_close_ignored() {
+        let b = ReplayBuffer::new();
+        b.close();
+        b.push(traj(0, 0));
+        assert_eq!(b.len(), 0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Rollout controller — paper §4.1: "reads data from the dataset and
+//! invokes the rollout worker's generate request ... It rejects new
+//! generation requests that may violate the staleness constraint" (§5.1).
+//!
+//! The controller thread keeps the shared prompt queue stocked, submitting
+//! each prompt `group_size` times (the paper's n answers per question) and
+//! charging every submission against the Eq. 3 gate at the *current* policy
+//! version.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::tasks::Dataset;
+
+use super::gate::StalenessGate;
+use super::param_server::ParamServer;
+
+pub struct ControllerCfg {
+    pub group_size: usize,
+    /// stop after submitting this many trajectories (usually
+    /// ppo_steps * global_batch + slack); None = until stop flag
+    pub max_submissions: Option<u64>,
+}
+
+/// Body of the controller thread.
+pub fn run_controller(dataset: Dataset, gate: Arc<StalenessGate>,
+                      server: Arc<ParamServer>,
+                      queue: Arc<Mutex<VecDeque<crate::tasks::Prompt>>>,
+                      stop: Arc<AtomicBool>, cfg: ControllerCfg) {
+    let mut next_idx: u64 = 0;
+    // submit whole groups atomically so the group-mean baseline always has
+    // its n samples
+    'outer: while !stop.load(Ordering::Acquire) {
+        let version = server.version();
+        let mut submitted_any = false;
+        // keep the queue shallow: enough to refill every worker, not more
+        let queue_cap = 4 * cfg.group_size.max(8);
+        while queue.lock().unwrap().len() < queue_cap {
+            if let Some(max) = cfg.max_submissions {
+                if gate.submitted() + cfg.group_size as u64 > max {
+                    break 'outer;
+                }
+            }
+            // reserve group_size slots up front (all-or-nothing)
+            if !gate.admits(version) {
+                break;
+            }
+            let mut reserved = 0;
+            while reserved < cfg.group_size && gate.try_submit(version) {
+                reserved += 1;
+            }
+            if reserved == 0 {
+                break;
+            }
+            let prompt = dataset.prompt(next_idx);
+            next_idx += 1;
+            let mut q = queue.lock().unwrap();
+            for _ in 0..reserved {
+                q.push_back(prompt.clone());
+            }
+            submitted_any = true;
+        }
+        if !submitted_any {
+            // gated (stale) or queue full: wait for the trainer to bump the
+            // version
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{HostTensor, ParamSet};
+    use crate::runtime::executor::SendLiteral;
+    use crate::tasks::{dataset::LevelMix, AdditionTask};
+
+    fn server(v: u64) -> Arc<ParamServer> {
+        let lit = HostTensor::scalar_f32(0.0).to_literal().unwrap();
+        ParamServer::new(ParamSet::with_version(vec![SendLiteral(lit)], v))
+    }
+
+    fn pset(v: u64) -> Arc<ParamSet> {
+        let lit = HostTensor::scalar_f32(0.0).to_literal().unwrap();
+        ParamSet::with_version(vec![SendLiteral(lit)], v)
+    }
+
+    #[test]
+    fn controller_respects_gate_and_groups() {
+        let ds = Dataset::new(Arc::new(AdditionTask), 1, LevelMix::single(1));
+        let gate = Arc::new(StalenessGate::new(8, Some(0)));
+        let srv = server(0);
+        let queue = Arc::new(Mutex::new(VecDeque::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let q2 = Arc::clone(&queue);
+        let g2 = Arc::clone(&gate);
+        let s2 = Arc::clone(&srv);
+        let st2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || {
+            run_controller(
+                ds, g2, s2, q2, st2,
+                ControllerCfg { group_size: 4, max_submissions: None },
+            )
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        // η=0, B=8, version 0 → exactly 8 submissions (2 groups of 4)
+        assert_eq!(gate.submitted(), 8);
+        {
+            let q = queue.lock().unwrap();
+            assert_eq!(q.len(), 8);
+            // group members share the same prompt
+            assert_eq!(q[0].meta, q[3].meta);
+            assert_ne!(q[0].meta, q[4].meta);
+        }
+        // trainer publishes version 1 → 8 more admitted
+        srv.publish(pset(1));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(gate.submitted(), 16);
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn max_submissions_stops_controller() {
+        let ds = Dataset::new(Arc::new(AdditionTask), 1, LevelMix::single(1));
+        let gate = Arc::new(StalenessGate::new(4, None));
+        let srv = server(0);
+        let queue = Arc::new(Mutex::new(VecDeque::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let g2 = Arc::clone(&gate);
+        run_controller(
+            ds, g2, srv, queue, stop,
+            ControllerCfg { group_size: 2, max_submissions: Some(10) },
+        );
+        // stops on its own; ≤ 10 submissions
+        assert!(gate.submitted() <= 10);
+        assert!(gate.submitted() >= 8);
+    }
+}

@@ -1,0 +1,157 @@
+//! Staleness-aware submission control — paper Eq. 3:
+//!
+//! ```text
+//! ⌊(N_r − 1) / B⌋ ≤ i + η
+//! ```
+//!
+//! where N_r is the total number of trajectories submitted for generation
+//! (inflight + completed), B the training batch size, i the current policy
+//! version, and η the maximum permitted staleness. The rollout controller
+//! consults this gate before every submission; with η = 0 the system
+//! degenerates to synchronous RL (§5.1).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct StalenessGate {
+    batch_size: u64,
+    /// None = unbounded (η → ∞)
+    eta: Option<u64>,
+    submitted: AtomicU64, // N_r
+}
+
+impl StalenessGate {
+    pub fn new(batch_size: usize, eta: Option<u64>) -> Self {
+        assert!(batch_size > 0);
+        StalenessGate {
+            batch_size: batch_size as u64,
+            eta,
+            submitted: AtomicU64::new(0),
+        }
+    }
+
+    /// Would submitting one more trajectory keep Eq. 3 satisfied at policy
+    /// version `version`?
+    pub fn admits(&self, version: u64) -> bool {
+        let Some(eta) = self.eta else { return true };
+        let n_r = self.submitted.load(Ordering::Acquire) + 1; // after submit
+        (n_r - 1) / self.batch_size <= version + eta
+    }
+
+    /// Try to reserve one submission slot; true on success. (check + count
+    /// in one CAS loop so concurrent submitters cannot overshoot)
+    pub fn try_submit(&self, version: u64) -> bool {
+        let Some(eta) = self.eta else {
+            self.submitted.fetch_add(1, Ordering::AcqRel);
+            return true;
+        };
+        loop {
+            let cur = self.submitted.load(Ordering::Acquire);
+            if cur / self.batch_size > version + eta {
+                return false;
+            }
+            if self
+                .submitted
+                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Acquire)
+    }
+
+    pub fn eta(&self) -> Option<u64> {
+        self.eta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn eta_zero_is_synchronous() {
+        // η=0: exactly B submissions per version
+        let g = StalenessGate::new(8, Some(0));
+        for _ in 0..8 {
+            assert!(g.try_submit(0));
+        }
+        assert!(!g.try_submit(0));
+        // after one train step (version 1), 8 more are admitted
+        for _ in 0..8 {
+            assert!(g.try_submit(1));
+        }
+        assert!(!g.try_submit(1));
+    }
+
+    #[test]
+    fn eta_bounds_inflight_batches() {
+        let g = StalenessGate::new(4, Some(2));
+        // version 0, η=2: up to 3 batches' worth (indices 0..12 satisfy
+        // floor(n/4) <= 2)
+        let mut admitted = 0;
+        while g.try_submit(0) {
+            admitted += 1;
+            assert!(admitted < 100);
+        }
+        assert_eq!(admitted, 12);
+    }
+
+    #[test]
+    fn unbounded_never_blocks() {
+        let g = StalenessGate::new(4, None);
+        for _ in 0..1000 {
+            assert!(g.try_submit(0));
+        }
+    }
+
+    #[test]
+    fn prop_eq3_invariant() {
+        // property: after any interleaving of submits at monotone versions,
+        // every accepted submission index n satisfies floor(n/B) <= v + η
+        prop_check(100, |rng| {
+            let b = rng.range_usize(1, 8);
+            let eta = rng.range_usize(0, 4) as u64;
+            let g = StalenessGate::new(b, Some(eta));
+            let mut version = 0u64;
+            for _ in 0..200 {
+                if rng.chance(0.15) {
+                    version += 1; // trainer finished a step
+                }
+                let before = g.submitted();
+                if g.try_submit(version) {
+                    crate::prop_assert!(
+                        before / b as u64 <= version + eta,
+                        "admitted idx {before} at v={version} violates Eq.3 \
+                         (B={b}, eta={eta})"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn concurrent_submits_do_not_overshoot() {
+        use std::sync::Arc;
+        let g = Arc::new(StalenessGate::new(16, Some(1)));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let g = Arc::clone(&g);
+            handles.push(std::thread::spawn(move || {
+                let mut n = 0;
+                while g.try_submit(0) {
+                    n += 1;
+                }
+                n
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        // floor(n/16) <= 0+1 admits exactly indices 0..32
+        assert_eq!(total, 32);
+    }
+}

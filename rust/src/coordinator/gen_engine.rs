@@ -1,0 +1,463 @@
+//! Interruptible generation engine — the paper's rollout worker core
+//! (§4.1): continuous slot-based batching over the AOT `prefill`/`decode`
+//! executables, with the two requests the paper specifies:
+//!
+//! - `generate`: slots are filled with prompts; decoding proceeds in chunks
+//!   of `tier.chunk` tokens (in-graph sampling);
+//! - `update_weights`: swaps the parameter set mid-generation. The KV cache
+//!   computed under the old weights is discarded and recomputed under the
+//!   new weights by re-prefilling prompt + committed tokens ("the rollout
+//!   workers discard KV caches computed by old weights, and re-compute
+//!   them using the new weights"). Committed tokens and their behavior
+//!   logprobs are never re-sampled — each token is sampled exactly once by
+//!   whichever policy version was live, which is the bookkeeping that makes
+//!   Proposition 1's single-behavior-policy equivalence hold.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Engine, HostTensor, ParamSet, SendLiteral, Version};
+use crate::tasks::Prompt;
+use crate::text::tokenizer::{Tokenizer, BOS, EOS};
+use crate::util::rng::Rng;
+
+use super::messages::Trajectory;
+
+/// One in-flight sequence.
+#[derive(Debug)]
+struct ActiveSeq {
+    prompt: Prompt,
+    /// committed tokens: BOS + prompt + sampled-so-far (incl. the pending
+    /// token whose KV is not yet written)
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    behav_logp: Vec<f32>,
+    /// (version, tokens sampled under it)
+    segments: Vec<(Version, usize)>,
+    version_born: Version,
+}
+
+impl ActiveSeq {
+    fn push_token(&mut self, tok: i32, logp: f32, version: Version) {
+        self.tokens.push(tok);
+        self.behav_logp.push(logp);
+        match self.segments.last_mut() {
+            Some((v, n)) if *v == version => *n += 1,
+            _ => self.segments.push((version, 1)),
+        }
+    }
+
+    fn into_trajectory(self, truncated: bool, worker: usize) -> Trajectory {
+        Trajectory {
+            prompt: self.prompt,
+            tokens: self.tokens,
+            prompt_len: self.prompt_len,
+            behav_logp: self.behav_logp,
+            segments: self.segments,
+            version_born: self.version_born,
+            reward: 0.0,
+            correct: false,
+            truncated,
+            worker,
+        }
+    }
+}
+
+/// Slot-based continuous-batching generation engine.
+pub struct GenEngine {
+    engine: Arc<Engine>,
+    tokenizer: Tokenizer,
+    pub worker_id: usize,
+    b: usize,
+    t: usize,
+    chunk: usize,
+    temperature: f32,
+    slots: Vec<Option<ActiveSeq>>,
+    /// fp16 KV literals (2 * n_layers), None until the first prefill
+    kv: Option<Vec<SendLiteral>>,
+    params: Arc<ParamSet>,
+    needs_prefill: bool,
+    rng: Rng,
+    // counters
+    pub tokens_generated: u64,
+    pub chunks_run: u64,
+    pub prefills_run: u64,
+    pub interruptions: u64,
+}
+
+impl GenEngine {
+    pub fn new(engine: Arc<Engine>, params: Arc<ParamSet>, worker_id: usize,
+               temperature: f32, seed: u64) -> Self {
+        let cfg = &engine.spec.config;
+        let (b, t, chunk) = (cfg.gen_batch, cfg.max_seq, cfg.chunk);
+        GenEngine {
+            engine,
+            tokenizer: Tokenizer::new(),
+            worker_id,
+            b,
+            t,
+            chunk,
+            temperature,
+            slots: (0..b).map(|_| None).collect(),
+            kv: None,
+            params,
+            needs_prefill: false,
+            rng: Rng::new(seed),
+            tokens_generated: 0,
+            chunks_run: 0,
+            prefills_run: 0,
+            interruptions: 0,
+        }
+    }
+
+    pub fn version(&self) -> Version {
+        self.params.version
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.b
+    }
+
+    pub fn empty_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_none()).count()
+    }
+
+    pub fn active_slots(&self) -> usize {
+        self.b - self.empty_slots()
+    }
+
+    pub fn all_empty(&self) -> bool {
+        self.active_slots() == 0
+    }
+
+    /// The paper's `update_weights`: swap parameters; any in-flight
+    /// generation is interrupted (its KV will be rebuilt at the next
+    /// prefill). Returns how many sequences were interrupted mid-flight.
+    pub fn update_weights(&mut self, params: Arc<ParamSet>) -> usize {
+        assert!(params.version >= self.params.version, "weight version regressed");
+        let interrupted = self.active_slots();
+        self.params = params;
+        if interrupted > 0 {
+            self.interruptions += 1;
+            self.needs_prefill = true; // KV under old weights is invalid
+        }
+        interrupted
+    }
+
+    /// Fill empty slots with prompts; returns the number accepted.
+    pub fn fill(&mut self, prompts: &mut Vec<Prompt>) -> Result<usize> {
+        let mut accepted = 0;
+        for slot in self.slots.iter_mut() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some(p) = prompts.pop() else { break };
+            let mut tokens = self.tokenizer.encode_bos(&p.text);
+            if tokens.len() + 8 > self.t {
+                bail!(
+                    "prompt too long ({} tokens) for max_seq {}",
+                    tokens.len(),
+                    self.t
+                );
+            }
+            let prompt_len = tokens.len();
+            tokens.shrink_to_fit();
+            *slot = Some(ActiveSeq {
+                prompt: p,
+                tokens,
+                prompt_len,
+                behav_logp: Vec::new(),
+                segments: Vec::new(),
+                version_born: self.params.version,
+            });
+            accepted += 1;
+        }
+        if accepted > 0 {
+            self.needs_prefill = true;
+        }
+        Ok(accepted)
+    }
+
+    pub fn needs_prefill(&self) -> bool {
+        self.needs_prefill
+    }
+
+    /// Rebuild the KV cache for all slots and sample one token per active
+    /// slot (from the current weights). Called after fills and weight
+    /// updates.
+    pub fn prefill(&mut self) -> Result<()> {
+        let mut tok_mat = vec![0i32; self.b * self.t];
+        let mut lens = vec![1i32; self.b];
+        for (i, slot) in self.slots.iter().enumerate() {
+            let row = &mut tok_mat[i * self.t..(i + 1) * self.t];
+            match slot {
+                Some(s) => {
+                    row[..s.tokens.len()].copy_from_slice(&s.tokens);
+                    lens[i] = s.tokens.len() as i32;
+                }
+                None => row[0] = BOS, // inert row
+            }
+        }
+        let tokens_l = HostTensor::i32(vec![self.b, self.t], tok_mat).to_literal()?;
+        let lens_l = HostTensor::i32(vec![self.b], lens).to_literal()?;
+        let seed = self.rng.jax_seed();
+        let seed_l = HostTensor::u32(vec![2], seed.to_vec()).to_literal()?;
+        let temp_l = HostTensor::scalar_f32(self.temperature).to_literal()?;
+
+        let mut inputs: Vec<&xla::Literal> = self.params.refs();
+        inputs.push(&tokens_l);
+        inputs.push(&lens_l);
+        inputs.push(&seed_l);
+        inputs.push(&temp_l);
+        let mut outs = self.engine.run("prefill", &inputs).context("prefill")?;
+        // outputs: kv.. , tok, logp
+        let logp_l = outs.pop().unwrap();
+        let tok_l = outs.pop().unwrap();
+        let toks = HostTensor::from_literal(tok_l.lit())?;
+        let logps = HostTensor::from_literal(logp_l.lit())?;
+        let toks = toks.as_i32()?;
+        let logps = logps.as_f32()?;
+        let version = self.params.version;
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(s) = slot {
+                s.push_token(toks[i], logps[i], version);
+                self.tokens_generated += 1;
+            }
+        }
+        self.kv = Some(outs);
+        self.needs_prefill = false;
+        self.prefills_run += 1;
+        Ok(())
+    }
+
+    /// Decode one chunk for all slots. Returns finished trajectories
+    /// (EOS, answer-terminated, or truncated at max_seq).
+    pub fn decode_chunk(&mut self) -> Result<Vec<Trajectory>> {
+        assert!(!self.needs_prefill, "prefill required before decode");
+        let kv = self.kv.take().context("decode before first prefill")?;
+        // pending token per slot sits at position tokens.len()-1
+        let mut lens = vec![0i32; self.b];
+        let mut toks = vec![BOS; self.b];
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Some(s) = slot {
+                lens[i] = (s.tokens.len() - 1) as i32;
+                toks[i] = *s.tokens.last().unwrap();
+            }
+        }
+        let lens_l = HostTensor::i32(vec![self.b], lens).to_literal()?;
+        let toks_l = HostTensor::i32(vec![self.b], toks).to_literal()?;
+        let seed = self.rng.jax_seed();
+        let seed_l = HostTensor::u32(vec![2], seed.to_vec()).to_literal()?;
+        let temp_l = HostTensor::scalar_f32(self.temperature).to_literal()?;
+
+        let mut inputs: Vec<&xla::Literal> = self.params.refs();
+        for t in &kv {
+            inputs.push(t.lit());
+        }
+        inputs.push(&lens_l);
+        inputs.push(&toks_l);
+        inputs.push(&seed_l);
+        inputs.push(&temp_l);
+        let mut outs = self.engine.run("decode", &inputs).context("decode")?;
+        // outputs: toks [C,B], logps [C,B], kv.., lens
+        let _lens_out = outs.pop().unwrap();
+        let kv_new: Vec<SendLiteral> = outs.split_off(2);
+        let logps = HostTensor::from_literal(outs[1].lit())?;
+        let new_toks = HostTensor::from_literal(outs[0].lit())?;
+        let new_toks = new_toks.as_i32()?;
+        let logps = logps.as_f32()?;
+        self.kv = Some(kv_new);
+        self.chunks_run += 1;
+
+        let version = self.params.version;
+        let mut finished = Vec::new();
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            let Some(s) = slot.as_mut() else { continue };
+            // the pending token fed this chunk: if it was EOS... EOS is
+            // never pending (we finish on commit of EOS below).
+            let mut done: Option<bool> = None; // Some(truncated)
+            for c in 0..self.chunk {
+                let tok = new_toks[c * self.b + i];
+                let lp = logps[c * self.b + i];
+                s.push_token(tok, lp, version);
+                self.tokens_generated += 1;
+                if tok == EOS {
+                    done = Some(false);
+                    break;
+                }
+                if s.tokens.len() >= self.t {
+                    done = Some(true);
+                    break;
+                }
+            }
+            if let Some(truncated) = done {
+                let seq = slot.take().unwrap();
+                finished.push(seq.into_trajectory(truncated, self.worker_id));
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Decode completion text of a finished trajectory.
+    pub fn completion_text(&self, t: &Trajectory) -> String {
+        self.tokenizer.decode_completion(&t.tokens, t.prompt_len)
+    }
+
+    /// Drain: run prefill+decode until every active slot finishes (used by
+    /// eval and by non-interruptible weight-sync draining). Returns all
+    /// finished trajectories.
+    pub fn drain(&mut self) -> Result<Vec<Trajectory>> {
+        let mut out = Vec::new();
+        if self.all_empty() {
+            return Ok(out);
+        }
+        if self.needs_prefill {
+            self.prefill()?;
+        }
+        while !self.all_empty() {
+            out.extend(self.decode_chunk()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use crate::tasks::{AdditionTask, Task};
+    use std::path::PathBuf;
+
+    fn setup() -> (Arc<Engine>, Arc<ParamSet>) {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let m = Manifest::load(&dir).expect("run `make artifacts` first");
+        let spec = m.tier("nano").unwrap();
+        let engine =
+            Arc::new(Engine::load_subset(spec, Some(&["init", "prefill", "decode"])).unwrap());
+        let params = ParamSet::init(&engine, [1, 2]).unwrap();
+        (engine, params)
+    }
+
+    fn prompts(n: usize) -> Vec<Prompt> {
+        let task = AdditionTask;
+        let mut rng = Rng::new(3);
+        (0..n)
+            .map(|i| {
+                let mut p = task.sample(&mut rng, 1);
+                p.group = i as u64;
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn generates_trajectories_with_consistent_bookkeeping() {
+        let (engine, params) = setup();
+        let mut g = GenEngine::new(engine, params, 0, 1.0, 7);
+        let mut ps = prompts(4);
+        assert_eq!(g.fill(&mut ps).unwrap(), 4);
+        assert!(g.needs_prefill());
+        g.prefill().unwrap();
+        let mut finished = Vec::new();
+        for _ in 0..32 {
+            finished.extend(g.decode_chunk().unwrap());
+            if g.all_empty() {
+                break;
+            }
+        }
+        assert!(!finished.is_empty(), "random model should hit EOS or truncate");
+        for t in &finished {
+            assert!(t.segments_consistent(), "{t:?}");
+            assert_eq!(t.segments.len(), 1, "no interruption => single segment");
+            assert_eq!(t.segments[0].0, 0);
+            assert!(t.completion_len() > 0);
+            // behavior logps are valid logprobs
+            for &lp in &t.behav_logp {
+                assert!(lp <= 1e-4, "logp {lp} > 0");
+            }
+        }
+    }
+
+    #[test]
+    fn update_weights_interrupts_and_tags_segments() {
+        let (engine, params) = setup();
+        let mut g = GenEngine::new(engine.clone(), params.clone(), 0, 1.0, 11);
+        let mut ps = prompts(4);
+        g.fill(&mut ps).unwrap();
+        g.prefill().unwrap();
+        let _ = g.decode_chunk().unwrap();
+
+        // publish "new" weights (same tensors, bumped version)
+        let p2 = ParamSet::with_version(
+            ParamSet::init(&engine, [9, 9]).unwrap().tensors.clone_into_vec(),
+            1,
+        );
+        let interrupted = g.update_weights(p2);
+        assert!(interrupted > 0);
+        assert!(g.needs_prefill());
+        g.prefill().unwrap();
+        let mut finished = Vec::new();
+        for _ in 0..32 {
+            finished.extend(g.decode_chunk().unwrap());
+            if g.all_empty() {
+                break;
+            }
+        }
+        // every trajectory that survived the interruption has 2 segments
+        let multi: Vec<_> = finished.iter().filter(|t| t.segments.len() == 2).collect();
+        assert!(!multi.is_empty(), "some trajectory should span both versions");
+        for t in &multi {
+            assert!(t.segments_consistent());
+            assert_eq!(t.segments[0].0, 0);
+            assert_eq!(t.segments[1].0, 1);
+            assert_eq!(t.version_born, 0);
+        }
+    }
+
+    #[test]
+    fn drain_finishes_everything() {
+        let (engine, params) = setup();
+        let mut g = GenEngine::new(engine, params, 0, 1.0, 13);
+        let mut ps = prompts(3);
+        g.fill(&mut ps).unwrap();
+        let out = g.drain().unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(g.all_empty());
+    }
+
+    #[test]
+    fn greedy_is_deterministic() {
+        let (engine, params) = setup();
+        let run = |seed| {
+            let mut g = GenEngine::new(engine.clone(), params.clone(), 0, 0.0, seed);
+            let mut ps = prompts(2);
+            g.fill(&mut ps).unwrap();
+            let out = g.drain().unwrap();
+            out.into_iter().map(|t| t.tokens).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(999)); // temp=0 ignores the rng
+    }
+
+    // helper: Vec<SendLiteral> clone via literal reshape (Literal has no Clone;
+// round-trip through shape-preserving reshape gives a deep copy)
+    trait CloneTensors {
+    fn clone_into_vec(&self) -> Vec<SendLiteral>;
+}
+
+    impl CloneTensors for Vec<SendLiteral> {
+    fn clone_into_vec(&self) -> Vec<SendLiteral> {
+        self.iter()
+            .map(|t| {
+                let dims: Vec<i64> = t
+                    .lit()
+                    .array_shape()
+                    .unwrap()
+                    .dims()
+                    .to_vec();
+                SendLiteral(t.lit().reshape(&dims).unwrap())
+            })
+            .collect()
+    }
+}
+}

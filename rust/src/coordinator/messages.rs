@@ -1,0 +1,111 @@
+//! Shared data types flowing between coordinator components.
+
+use crate::runtime::Version;
+use crate::tasks::Prompt;
+
+/// A completed rollout: one prompt + one sampled response, with everything
+/// the trainer needs to build the decoupled-PPO minibatch.
+#[derive(Debug, Clone)]
+pub struct Trajectory {
+    pub prompt: Prompt,
+    /// full token sequence: BOS + prompt + completion (+ EOS), no padding
+    pub tokens: Vec<i32>,
+    /// number of leading tokens that are BOS+prompt (not trained on)
+    pub prompt_len: usize,
+    /// behavior logprob per completion token (recorded at sampling time —
+    /// the π_behav bookkeeping of Proposition 1)
+    pub behav_logp: Vec<f32>,
+    /// (policy version, #tokens) per generation segment; >1 entry iff the
+    /// generation was interrupted by an in-flight weight update
+    pub segments: Vec<(Version, usize)>,
+    /// policy version when generation of this trajectory STARTED — the
+    /// version whose staleness Eq. 3 constrains
+    pub version_born: Version,
+    /// terminal reward (+5 / −5, paper §B.1); set by the reward service
+    pub reward: f32,
+    pub correct: bool,
+    /// hit max_seq without emitting EOS
+    pub truncated: bool,
+    /// rollout worker that produced it (traces/metrics)
+    pub worker: usize,
+}
+
+impl Trajectory {
+    pub fn completion_len(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+
+    /// Staleness of this sample at trainer version `v` (paper §5.1).
+    pub fn staleness_at(&self, v: Version) -> u64 {
+        v.saturating_sub(self.version_born)
+    }
+
+    /// Segment bookkeeping must cover exactly the completion tokens.
+    pub fn segments_consistent(&self) -> bool {
+        self.segments.iter().map(|&(_, n)| n).sum::<usize>() == self.completion_len()
+            && self.behav_logp.len() == self.completion_len()
+    }
+}
+
+/// Metrics snapshot emitted once per PPO step by the trainer.
+#[derive(Debug, Clone, Default)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub version: Version,
+    pub loss: f64,
+    pub clip_frac: f64,
+    pub ratio_mean: f64,
+    pub approx_kl: f64,
+    pub grad_norm: f64,
+    pub w_mean: f64,
+    pub reward_mean: f64,
+    pub correct_frac: f64,
+    pub mean_staleness: f64,
+    pub max_staleness: u64,
+    pub interrupted_frac: f64,
+    pub tokens_consumed: usize,
+    pub mean_completion_len: f64,
+    pub wall_s: f64,
+    /// tokens consumed per second since training started (the paper's
+    /// "effective throughput" of Fig. 4/5c)
+    pub effective_tps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tasks::Prompt;
+
+    fn traj() -> Trajectory {
+        Trajectory {
+            prompt: Prompt { text: "Q1+1=".into(), meta: "add:1,1".into(), level: 1, group: 0 },
+            tokens: vec![1, 5, 6, 7, 8, 9, 2],
+            prompt_len: 4,
+            behav_logp: vec![-0.1, -0.2, -0.3],
+            segments: vec![(3, 2), (4, 1)],
+            version_born: 3,
+            reward: 5.0,
+            correct: true,
+            truncated: false,
+            worker: 0,
+        }
+    }
+
+    #[test]
+    fn staleness_math() {
+        let t = traj();
+        assert_eq!(t.staleness_at(3), 0);
+        assert_eq!(t.staleness_at(7), 4);
+        assert_eq!(t.staleness_at(1), 0); // saturating
+    }
+
+    #[test]
+    fn segment_consistency() {
+        let mut t = traj();
+        assert!(t.segments_consistent());
+        t.segments = vec![(3, 3)];
+        assert!(t.segments_consistent());
+        t.segments = vec![(3, 1)];
+        assert!(!t.segments_consistent());
+    }
+}

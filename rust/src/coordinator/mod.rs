@@ -1,0 +1,29 @@
+//! The coordinator — the paper's system contribution (Figure 2):
+//! interruptible rollout workers, rollout controller with the Eq. 3
+//! staleness gate, replay buffer with use-once/oldest-first semantics,
+//! trainer worker running decoupled-PPO minibatch updates, parameter
+//! server, Algorithm-1 dynamic micro-batching, and the mode wiring that
+//! turns the same machinery into the sync / one-step-overlap / async
+//! systems the paper compares.
+
+pub mod batching;
+pub mod buffer;
+pub mod controller;
+pub mod evalgen;
+pub mod gate;
+pub mod gen_engine;
+pub mod messages;
+pub mod param_server;
+pub mod rollout;
+pub mod system;
+pub mod trace;
+pub mod trainer;
+
+pub use buffer::ReplayBuffer;
+pub use gate::StalenessGate;
+pub use gen_engine::GenEngine;
+pub use messages::{StepMetrics, Trajectory};
+pub use param_server::ParamServer;
+pub use system::{RunReport, System};
+pub use trace::{Event, Trace};
+pub use trainer::{Trainer, TrainerCfg};

@@ -1,0 +1,102 @@
+//! Parameter server — paper §4.1: trainer workers "store the resulting
+//! parameters in distributed storage"; the rollout controller then calls the
+//! rollout workers' `update_weights`. Here: a versioned slot the trainer
+//! publishes into and rollout workers poll at chunk boundaries (the poll IS
+//! the `update_weights` request; pull-based, which composes naturally with
+//! interruptible generation).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::runtime::{ParamSet, Version};
+
+pub struct ParamServer {
+    current: RwLock<Arc<ParamSet>>,
+    version: AtomicU64,
+}
+
+impl ParamServer {
+    pub fn new(initial: Arc<ParamSet>) -> Arc<Self> {
+        let version = initial.version;
+        Arc::new(ParamServer {
+            current: RwLock::new(initial),
+            version: AtomicU64::new(version),
+        })
+    }
+
+    /// Latest published version (cheap; polled by rollout workers every
+    /// decode chunk).
+    pub fn version(&self) -> Version {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Fetch the latest weights.
+    pub fn get(&self) -> Arc<ParamSet> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// Publish new weights; must be monotone in version.
+    pub fn publish(&self, params: Arc<ParamSet>) {
+        let v = params.version;
+        {
+            let mut g = self.current.write().unwrap();
+            assert!(
+                v >= g.version,
+                "param server version must be monotone ({} -> {v})",
+                g.version
+            );
+            *g = params;
+        }
+        self.version.store(v, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::executor::SendLiteral;
+
+    fn pset(v: Version) -> Arc<ParamSet> {
+        let lit = crate::runtime::HostTensor::scalar_f32(v as f32)
+            .to_literal()
+            .unwrap();
+        ParamSet::with_version(vec![SendLiteral(lit)], v)
+    }
+
+    #[test]
+    fn publish_and_poll() {
+        let ps = ParamServer::new(pset(0));
+        assert_eq!(ps.version(), 0);
+        ps.publish(pset(1));
+        assert_eq!(ps.version(), 1);
+        assert_eq!(ps.get().version, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn rejects_version_regression() {
+        let ps = ParamServer::new(pset(5));
+        ps.publish(pset(3));
+    }
+
+    #[test]
+    fn concurrent_readers() {
+        let ps = ParamServer::new(pset(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let ps = Arc::clone(&ps);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    let p = ps.get();
+                    assert!(p.version <= ps.version());
+                }
+            }));
+        }
+        for i in 1..=10 {
+            ps.publish(pset(i));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

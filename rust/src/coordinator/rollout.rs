@@ -1,0 +1,147 @@
+//! Rollout worker thread — wraps a `GenEngine` with the async plumbing:
+//! weight-sync polling (the pull side of `update_weights`), prompt-queue
+//! refills, decode loop, and reward submission (off-thread, §6 overlap).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::reward::{RewardRequest, RewardService};
+use crate::runtime::Engine;
+use crate::tasks::Prompt;
+
+use super::buffer::ReplayBuffer;
+use super::gen_engine::GenEngine;
+use super::param_server::ParamServer;
+use super::trace::{Event, Trace};
+
+/// Everything a rollout worker shares with the rest of the system.
+pub struct RolloutShared {
+    pub server: Arc<ParamServer>,
+    pub buffer: Arc<ReplayBuffer>,
+    pub reward: Arc<RewardService>,
+    pub queue: Arc<Mutex<VecDeque<Prompt>>>,
+    pub stop: Arc<AtomicBool>,
+    pub trace: Arc<Trace>,
+    /// completion tokens generated across all workers (gen throughput)
+    pub gen_tokens: Arc<AtomicU64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RolloutCfg {
+    pub interruptible: bool,
+    pub temperature: f32,
+    /// refill when empty fraction >= this (or everything is empty)
+    pub refill_fraction: f64,
+}
+
+/// Body of one rollout worker thread.
+pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
+                          shared: RolloutShared, cfg: RolloutCfg, seed: u64)
+    -> Result<()> {
+    let params = shared.server.get();
+    let mut gen = GenEngine::new(engine, params, worker_id, cfg.temperature, seed);
+    let b = gen.n_slots();
+    // weight sync deferred until drain completes (non-interruptible mode)
+    let mut pending_sync = false;
+
+    while !shared.stop.load(Ordering::Acquire) {
+        // -- weight sync (the update_weights request) -------------------
+        let latest = shared.server.version();
+        if latest > gen.version() {
+            if cfg.interruptible || gen.all_empty() {
+                let params = shared.server.get();
+                let interrupted = gen.update_weights(Arc::clone(&params));
+                if interrupted > 0 {
+                    shared.trace.log(Event::Interrupt {
+                        worker: worker_id,
+                        version: params.version,
+                        active_slots: interrupted,
+                    });
+                } else {
+                    shared.trace.log(Event::WeightSync {
+                        worker: worker_id,
+                        version: params.version,
+                    });
+                }
+                pending_sync = false;
+            } else {
+                // finish in-flight sequences under the old weights first
+                pending_sync = true;
+            }
+        }
+
+        // -- refill ------------------------------------------------------
+        let empties = gen.empty_slots();
+        let want_refill = !pending_sync
+            && empties > 0
+            && (gen.all_empty()
+                || gen.needs_prefill()
+                || (empties as f64) >= (b as f64) * cfg.refill_fraction);
+        if want_refill {
+            let mut pulled: Vec<Prompt> = {
+                let mut q = shared.queue.lock().unwrap();
+                let n = empties.min(q.len());
+                q.drain(..n).collect()
+            };
+            if !pulled.is_empty() {
+                let n = gen.fill(&mut pulled)?;
+                debug_assert!(pulled.is_empty());
+                shared.trace.log(Event::GenStart { worker: worker_id, slots: n });
+            }
+        }
+
+        if gen.needs_prefill() && !gen.all_empty() {
+            gen.prefill()?;
+        }
+
+        // -- decode ------------------------------------------------------
+        if !gen.all_empty() && !gen.needs_prefill() {
+            let before = gen.tokens_generated;
+            let finished = gen.decode_chunk()?;
+            shared
+                .gen_tokens
+                .fetch_add(gen.tokens_generated - before, Ordering::Relaxed);
+            for traj in finished {
+                submit_for_reward(&shared, &gen, traj);
+            }
+        } else if gen.all_empty() {
+            // nothing to do: either gated by staleness control or shutting
+            // down — idle briefly (this is the idleness the paper's Fig. 1
+            // shows for synchronous systems)
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    Ok(())
+}
+
+/// Hand a finished trajectory to the reward service; the verification job
+/// fills in the reward and pushes to the replay buffer (generation never
+/// blocks on CPU-side verification — §6).
+fn submit_for_reward(shared: &RolloutShared, gen: &GenEngine,
+                     mut traj: super::messages::Trajectory) {
+    let completion = gen.completion_text(&traj);
+    let req = RewardRequest {
+        id: traj.prompt.group,
+        meta: traj.prompt.meta.clone(),
+        completion,
+    };
+    let buffer = Arc::clone(&shared.buffer);
+    let trace = Arc::clone(&shared.trace);
+    let worker = traj.worker;
+    shared.reward.submit_callback(req, move |resp| {
+        traj.reward = resp.reward;
+        traj.correct = resp.correct;
+        trace.log(Event::TrajDone {
+            worker,
+            tokens: traj.completion_len(),
+            version_born: traj.version_born,
+        });
+        trace.log(Event::RewardDone { worker, correct: resp.correct });
+        buffer.push(traj);
+    });
+}

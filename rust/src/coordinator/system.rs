@@ -1,0 +1,271 @@
+//! System wiring — builds the full AReaL topology (Figure 2) in-process and
+//! runs a training session:
+//!
+//!   controller thread ──prompt queue──▶ rollout worker threads (W×)
+//!        │ Eq.3 gate                        │ finished + reward (pool)
+//!        ▼                                  ▼
+//!   param server ◀──publish── trainer ◀── replay buffer (oldest-first)
+//!
+//! `Mode::Sync` / `Mode::Overlap` / `Mode::Async` differ ONLY in the
+//! (η, interruptible) schedule — the paper's claim that the scheduling
+//! policy is the delta is reproduced by construction.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Config;
+use crate::reward::RewardService;
+use crate::runtime::{Engine, Manifest, ParamSet, TrainState};
+use crate::tasks::{self, dataset::LevelMix, Dataset, SuiteResult};
+use crate::text::tokenizer::{Tokenizer, EOS};
+use crate::util::rng::Rng;
+
+use super::buffer::ReplayBuffer;
+use super::controller::{run_controller, ControllerCfg};
+use super::evalgen;
+use super::gate::StalenessGate;
+use super::param_server::ParamServer;
+use super::rollout::{run_rollout_worker, RolloutCfg, RolloutShared};
+use super::trace::Trace;
+use super::trainer::{Trainer, TrainerCfg};
+use super::messages::StepMetrics;
+
+/// Result of a training session.
+pub struct RunReport {
+    pub steps: Vec<StepMetrics>,
+    pub eval: Vec<SuiteResult>,
+    pub trace: Arc<Trace>,
+    pub wall_s: f64,
+    /// completion tokens generated (all workers)
+    pub gen_tokens: u64,
+    /// tokens consumed by PPO updates
+    pub train_tokens: u64,
+    /// paper Fig. 4 metric: train_tokens / wall_s
+    pub effective_tps: f64,
+    pub final_params: Arc<ParamSet>,
+}
+
+/// The assembled system.
+pub struct System {
+    pub cfg: Config,
+    pub engine: Arc<Engine>,
+    pub trace: Arc<Trace>,
+}
+
+impl System {
+    /// Load artifacts and compile executables for the configured tier.
+    pub fn build(cfg: Config) -> Result<System> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let spec = manifest.tier(&cfg.tier)?;
+        let engine = Arc::new(Engine::load(spec).context("compiling artifacts")?);
+        Ok(System { cfg, engine, trace: Arc::new(Trace::new(true)) })
+    }
+
+    fn dataset(&self) -> Result<Dataset> {
+        let task = tasks::task_by_name(&self.cfg.task)
+            .with_context(|| format!("unknown task {}", self.cfg.task))?;
+        Ok(Dataset::new(
+            Arc::from(task),
+            self.cfg.seed,
+            LevelMix::uniform(self.cfg.level_lo..=self.cfg.level_hi),
+        ))
+    }
+
+    /// SFT warmup on gold traces — produces the "distilled base model".
+    pub fn sft_warmup(&self, trainer: &mut Trainer, steps: usize,
+                      log_every: usize) -> Result<Vec<f32>> {
+        if steps == 0 {
+            return Ok(vec![]);
+        }
+        let ds = self.dataset()?;
+        let spec = &self.engine.spec;
+        let (bt, t) = (spec.config.train_batch, spec.config.max_seq);
+        let tok = Tokenizer::new();
+        let mut rng = Rng::new(self.cfg.seed ^ 0x5f7);
+        let mut last_metrics = vec![];
+        let mut idx: u64 = 1 << 40; // SFT stream disjoint from RL stream
+        for s in 0..steps {
+            let mut tokens = vec![0i32; bt * t];
+            let mut mask = vec![0f32; bt * t];
+            for row in 0..bt {
+                let p = ds.prompt(idx + rng.below(1 << 20));
+                idx += 1;
+                let gold = ds.task.gold_completion(&p.meta);
+                let mut seq = tok.encode_bos(&p.text);
+                let plen = seq.len();
+                seq.extend(tok.encode(&gold));
+                seq.push(EOS);
+                seq.truncate(t);
+                let off = row * t;
+                tokens[off..off + seq.len()].copy_from_slice(&seq);
+                for pos in plen..seq.len() {
+                    mask[off + pos] = 1.0;
+                }
+            }
+            let m = trainer.sft_step(
+                crate::runtime::HostTensor::i32(vec![bt, t], tokens),
+                crate::runtime::HostTensor::f32(vec![bt, t], mask),
+                self.cfg.sft_lr,
+            )?;
+            if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
+                crate::info!("sft", "step {s}: loss {:.4} acc {:.3}", m[0], m[1]);
+            }
+            last_metrics = m;
+        }
+        Ok(last_metrics)
+    }
+
+    /// Run the full session: optional SFT warmup, then `ppo_steps` PPO
+    /// updates with the configured schedule, then eval.
+    pub fn run(&self) -> Result<RunReport> {
+        let cfg = &self.cfg;
+        let spec = &self.engine.spec;
+        let (eta, interruptible) = cfg.effective_schedule();
+        crate::info!(
+            "system",
+            "tier={} mode={} eta={:?} interruptible={} workers={} B={} steps={}",
+            cfg.tier, cfg.mode.name(), eta, interruptible,
+            cfg.n_rollout_workers, cfg.global_batch, cfg.ppo_steps
+        );
+
+        // --- shared state ---------------------------------------------
+        let params = ParamSet::init(&self.engine, [cfg.seed as u32, 0x9e37])?;
+        let server = ParamServer::new(Arc::clone(&params));
+        let state = TrainState::fresh(spec, params)?;
+        let mut trainer = Trainer::new(
+            Arc::clone(&self.engine),
+            state,
+            Arc::clone(&server),
+            TrainerCfg::from_config(cfg),
+            cfg.baseline,
+        );
+
+        // --- SFT warmup (before rollout workers start) ------------------
+        self.sft_warmup(&mut trainer, cfg.sft_steps, 25)?;
+
+        // --- async topology ---------------------------------------------
+        let buffer = Arc::new(ReplayBuffer::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(Mutex::new(VecDeque::new()));
+        let gen_tokens = Arc::new(AtomicU64::new(0));
+        let task = tasks::task_by_name(&cfg.task).context("task")?;
+        let reward = Arc::new(RewardService::new(Arc::from(task), cfg.reward_threads));
+        let gate = Arc::new(StalenessGate::new(cfg.global_batch, eta));
+
+        let needed = (cfg.ppo_steps * cfg.global_batch) as u64;
+        // slack: trajectories lost to truncation never happen (truncated
+        // ones still count), so exact budget suffices... keep +1 group for
+        // rounding of group submissions
+        let max_submissions = Some(needed + cfg.group_size as u64);
+
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+
+        // controller thread
+        {
+            let ds = self.dataset()?;
+            let gate = Arc::clone(&gate);
+            let server = Arc::clone(&server);
+            let queue = Arc::clone(&queue);
+            let stop = Arc::clone(&stop);
+            let ccfg = ControllerCfg { group_size: cfg.group_size, max_submissions };
+            handles.push(
+                std::thread::Builder::new()
+                    .name("controller".into())
+                    .spawn(move || {
+                        run_controller(ds, gate, server, queue, stop, ccfg);
+                        Ok(())
+                    })
+                    .unwrap(),
+            );
+        }
+
+        // rollout workers
+        for w in 0..cfg.n_rollout_workers {
+            let shared = RolloutShared {
+                server: Arc::clone(&server),
+                buffer: Arc::clone(&buffer),
+                reward: Arc::clone(&reward),
+                queue: Arc::clone(&queue),
+                stop: Arc::clone(&stop),
+                trace: Arc::clone(&self.trace),
+                gen_tokens: Arc::clone(&gen_tokens),
+            };
+            let rcfg = RolloutCfg {
+                interruptible,
+                temperature: cfg.temperature,
+                refill_fraction: cfg.refill_fraction,
+            };
+            let engine = Arc::clone(&self.engine);
+            let seed = cfg.seed ^ (w as u64 + 1).wrapping_mul(0xabcd1234);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rollout-{w}"))
+                    .spawn(move || run_rollout_worker(w, engine, shared, rcfg, seed))
+                    .unwrap(),
+            );
+        }
+
+        // trainer runs on this thread
+        let mut steps = Vec::with_capacity(cfg.ppo_steps);
+        for step in 0..cfg.ppo_steps {
+            let Some(batch) = buffer.pop_batch(cfg.global_batch) else {
+                break;
+            };
+            let m = trainer.ppo_step(batch, step, &self.trace)?;
+            if step % 10 == 0 || step + 1 == cfg.ppo_steps {
+                crate::info!(
+                    "train",
+                    "step {step}: reward {:.2} correct {:.3} stale {:.2} \
+                     kl {:.4} tps {:.0}",
+                    m.reward_mean, m.correct_frac, m.mean_staleness,
+                    m.approx_kl, m.effective_tps
+                );
+            }
+            steps.push(m);
+        }
+
+        // shutdown
+        stop.store(true, Ordering::Release);
+        buffer.close();
+        for h in handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => anyhow::bail!("worker thread panicked"),
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        // --- eval ---------------------------------------------------------
+        let final_params = Arc::clone(&trainer.state.params);
+        let mut eval = Vec::new();
+        if cfg.eval_samples > 0 {
+            for suite in tasks::evalsuite::suites_for(&cfg.task) {
+                eval.push(evalgen::eval_suite(
+                    &self.engine,
+                    &final_params,
+                    &suite,
+                    cfg.eval_samples,
+                    0.0, // greedy pass@1 on this testbed
+                    cfg.seed,
+                )?);
+            }
+        }
+
+        let train_tokens = trainer.tokens_consumed_total;
+        Ok(RunReport {
+            steps,
+            eval,
+            trace: Arc::clone(&self.trace),
+            wall_s,
+            gen_tokens: gen_tokens.load(Ordering::Relaxed),
+            train_tokens,
+            effective_tps: train_tokens as f64 / wall_s,
+            final_params,
+        })
+    }
+}

@@ -1,0 +1,131 @@
+//! Event tracing for the Fig-1/Fig-3-style timelines: every component logs
+//! (time, actor, event) tuples; experiment drivers render them as ASCII
+//! timelines or CSV.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::runtime::Version;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// worker w started generating (slot refill wave)
+    GenStart { worker: usize, slots: usize },
+    /// worker w finished a trajectory of n completion tokens
+    TrajDone { worker: usize, tokens: usize, version_born: Version },
+    /// worker w interrupted generation to load version v (blue cross, Fig 3)
+    Interrupt { worker: usize, version: Version, active_slots: usize },
+    /// worker w loaded weights v without interrupting (между waves)
+    WeightSync { worker: usize, version: Version },
+    TrainStart { version: Version, batch: usize },
+    TrainEnd { version: Version, tokens: usize },
+    RewardDone { worker: usize, correct: bool },
+}
+
+#[derive(Debug, Clone)]
+pub struct Stamped {
+    pub t: f64,
+    pub event: Event,
+}
+
+pub struct Trace {
+    start: Instant,
+    events: Mutex<Vec<Stamped>>,
+    enabled: bool,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Self {
+        Trace { start: Instant::now(), events: Mutex::new(Vec::new()), enabled }
+    }
+
+    pub fn log(&self, event: Event) {
+        if !self.enabled {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        self.events.lock().unwrap().push(Stamped { t, event });
+    }
+
+    pub fn snapshot(&self) -> Vec<Stamped> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| pred(&s.event))
+            .count()
+    }
+
+    /// CSV rows: t,kind,actor,a,b
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("t,kind,actor,a,b\n");
+        for s in self.events.lock().unwrap().iter() {
+            let (kind, actor, a, b) = match &s.event {
+                Event::GenStart { worker, slots } => ("gen_start", *worker, *slots as i64, 0),
+                Event::TrajDone { worker, tokens, version_born } => {
+                    ("traj_done", *worker, *tokens as i64, *version_born as i64)
+                }
+                Event::Interrupt { worker, version, active_slots } => {
+                    ("interrupt", *worker, *version as i64, *active_slots as i64)
+                }
+                Event::WeightSync { worker, version } => {
+                    ("weight_sync", *worker, *version as i64, 0)
+                }
+                Event::TrainStart { version, batch } => {
+                    ("train_start", usize::MAX, *version as i64, *batch as i64)
+                }
+                Event::TrainEnd { version, tokens } => {
+                    ("train_end", usize::MAX, *version as i64, *tokens as i64)
+                }
+                Event::RewardDone { worker, correct } => {
+                    ("reward_done", *worker, *correct as i64, 0)
+                }
+            };
+            out.push_str(&format!("{:.6},{kind},{actor},{a},{b}\n", s.t));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_in_order() {
+        let tr = Trace::new(true);
+        tr.log(Event::GenStart { worker: 0, slots: 4 });
+        tr.log(Event::TrainStart { version: 0, batch: 16 });
+        let snap = tr.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].t <= snap[1].t);
+    }
+
+    #[test]
+    fn disabled_trace_is_free() {
+        let tr = Trace::new(false);
+        tr.log(Event::GenStart { worker: 0, slots: 4 });
+        assert!(tr.snapshot().is_empty());
+    }
+
+    #[test]
+    fn csv_renders() {
+        let tr = Trace::new(true);
+        tr.log(Event::Interrupt { worker: 2, version: 7, active_slots: 3 });
+        let csv = tr.to_csv();
+        assert!(csv.contains("interrupt,2,7,3"));
+    }
+
+    #[test]
+    fn count_filters() {
+        let tr = Trace::new(true);
+        tr.log(Event::Interrupt { worker: 0, version: 1, active_slots: 1 });
+        tr.log(Event::GenStart { worker: 0, slots: 1 });
+        tr.log(Event::Interrupt { worker: 1, version: 2, active_slots: 2 });
+        assert_eq!(tr.count(|e| matches!(e, Event::Interrupt { .. })), 2);
+    }
+}

@@ -1,0 +1,353 @@
+//! Trainer worker — paper §4.1: "continuously sample from the replay
+//! buffer, accumulating data until reaching the configured training batch
+//! size. They then perform PPO updates and store the resulting parameters".
+//!
+//! Each PPO step:
+//!   1. pop `global_batch` oldest trajectories from the replay buffer;
+//!   2. compute sequence advantages (group-mean / RLOO, normalized);
+//!   3. partition into micro-batches — Algorithm 1 under a token budget
+//!      (dynamic) or fixed chunks (standard baseline); short micro-batches
+//!      route to the half-context `train_step_h` executable;
+//!   4. recompute π_prox token logprobs with the STEP-START parameters
+//!      (paper §5.2 practical remark) — skipped in naive-PPO mode, where
+//!      prox := behav;
+//!   5. run one `train_step` update per micro-batch (the paper's sequential
+//!      minibatch updates), then publish the new version to the param
+//!      server.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::{AdvantageEstimator, Baseline};
+use crate::config::{BaselineCfg, Config};
+use crate::runtime::{Engine, HostTensor, ParamSet, TrainState};
+use crate::util::stats;
+
+use super::batching::{dynamic_allocate, standard_allocate, MicroBatch};
+
+use super::messages::{StepMetrics, Trajectory};
+use super::param_server::ParamServer;
+use super::trace::{Event, Trace};
+
+pub struct Trainer {
+    engine: Arc<Engine>,
+    pub state: TrainState,
+    server: Arc<ParamServer>,
+    cfg: TrainerCfg,
+    estimator: AdvantageEstimator,
+    has_half: bool,
+    start: Instant,
+    pub tokens_consumed_total: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainerCfg {
+    pub global_batch: usize,
+    pub ppo_minibatches: usize,
+    pub lr: f64,
+    pub decoupled: bool,
+    pub dynamic_batching: bool,
+    pub token_budget: usize,
+}
+
+impl TrainerCfg {
+    pub fn from_config(c: &Config) -> Self {
+        TrainerCfg {
+            global_batch: c.global_batch,
+            ppo_minibatches: c.ppo_minibatches,
+            lr: c.lr,
+            decoupled: c.decoupled,
+            dynamic_batching: c.dynamic_batching,
+            token_budget: c.token_budget,
+        }
+    }
+}
+
+/// Dense [rows, t] tensors for one micro-batch.
+struct MicroTensors {
+    tokens: HostTensor,
+    mask: HostTensor,
+    adv: HostTensor,
+    behav: HostTensor,
+    #[allow(dead_code)]
+    t: usize,
+    n_tokens: usize,
+    half: bool,
+}
+
+impl Trainer {
+    pub fn new(engine: Arc<Engine>, state: TrainState, server: Arc<ParamServer>,
+               cfg: TrainerCfg, baseline: BaselineCfg) -> Self {
+        let has_half = engine.entry_spec("train_step_h").is_ok();
+        let estimator = AdvantageEstimator {
+            baseline: match baseline {
+                BaselineCfg::GroupMean => Baseline::GroupMean,
+                BaselineCfg::Rloo => Baseline::Rloo,
+                BaselineCfg::None => Baseline::None,
+            },
+            normalize: true,
+        };
+        Trainer {
+            engine,
+            state,
+            server,
+            cfg,
+            estimator,
+            has_half,
+            start: Instant::now(),
+            tokens_consumed_total: 0,
+        }
+    }
+
+    /// Run one PPO step over a popped batch; publishes the new version.
+    pub fn ppo_step(&mut self, batch: Vec<Trajectory>, step_idx: usize,
+                    trace: &Trace) -> Result<StepMetrics> {
+        let t0 = Instant::now();
+        let version = self.state.params.version;
+        trace.log(Event::TrainStart { version, batch: batch.len() });
+
+        let spec = &self.engine.spec;
+        let bt = spec.config.train_batch;
+        let t_full = spec.config.max_seq;
+        for tr in &batch {
+            if !tr.segments_consistent() {
+                bail!("trajectory with inconsistent segment bookkeeping");
+            }
+        }
+
+        // 2. advantages (sequence-level; γ=λ=1, terminal reward)
+        let rewards: Vec<(u64, f32)> =
+            batch.iter().map(|t| (t.prompt.group, t.reward)).collect();
+        let advs = self.estimator.advantages(&rewards);
+
+        // 3. micro-batch allocation
+        let lens: Vec<usize> = batch.iter().map(|t| t.tokens.len()).collect();
+        let micro = if self.cfg.dynamic_batching {
+            dynamic_allocate(&lens, self.cfg.token_budget,
+                             self.cfg.ppo_minibatches, bt)
+        } else {
+            standard_allocate(&lens, self.cfg.ppo_minibatches, bt)
+        };
+
+        // build dense tensors per micro-batch
+        let mut tensors = Vec::with_capacity(micro.len());
+        for mb in &micro {
+            tensors.push(self.build_micro(&batch, &advs, mb, t_full)?);
+        }
+
+        // 4. π_prox recompute with step-start parameters (before any update)
+        let prox: Vec<HostTensor> = if self.cfg.decoupled {
+            tensors
+                .iter()
+                .map(|mt| self.recompute_logprob(mt))
+                .collect::<Result<_>>()?
+        } else {
+            tensors.iter().map(|mt| mt.behav.clone()).collect()
+        };
+
+        // 5. sequential minibatch updates
+        let lr = HostTensor::scalar_f32(self.cfg.lr as f32).to_literal()?;
+        let mut agg = MetricAgg::default();
+        for (mt, px) in tensors.iter().zip(&prox) {
+            let entry = if mt.half { "train_step_h" } else { "train_step" };
+            let tokens_l = mt.tokens.to_literal()?;
+            let mask_l = mt.mask.to_literal()?;
+            let adv_l = mt.adv.to_literal()?;
+            let behav_l = mt.behav.to_literal()?;
+            let prox_l = px.to_literal()?;
+            let step_l = HostTensor::scalar_i32(self.state.step).to_literal()?;
+
+            let mut inputs: Vec<&xla::Literal> = self.state.params.refs();
+            for m in &self.state.m {
+                inputs.push(m.lit());
+            }
+            for v in &self.state.v {
+                inputs.push(v.lit());
+            }
+            inputs.push(&step_l);
+            inputs.push(&tokens_l);
+            inputs.push(&mask_l);
+            inputs.push(&adv_l);
+            inputs.push(&behav_l);
+            inputs.push(&prox_l);
+            inputs.push(&lr);
+            let mut outs = self.engine.run(entry, &inputs).context(entry)?;
+
+            // outputs: params.., m.., v.., step, metrics
+            let metrics_l = outs.pop().unwrap();
+            let _step_l = outs.pop().unwrap();
+            let n = spec.n_params();
+            let v_new = outs.split_off(2 * n);
+            let m_new = outs.split_off(n);
+            let p_new = outs;
+            self.state.step += 1;
+            self.state.m = m_new;
+            self.state.v = v_new;
+            // keep the version number until the whole PPO step completes
+            self.state.params = ParamSet::with_version(p_new, version);
+
+            let met = HostTensor::from_literal(metrics_l.lit())?;
+            agg.add(met.as_f32()?, mt.n_tokens);
+        }
+
+        // publish version+1
+        let new_params = ParamSet::with_version(
+            std::mem::take(&mut Arc::get_mut(&mut self.state.params)
+                .expect("trainer owns params between steps")
+                .tensors),
+            version + 1,
+        );
+        self.state.params = Arc::clone(&new_params);
+        self.server.publish(new_params);
+
+        // metrics
+        let total_tokens: usize = tensors.iter().map(|m| m.n_tokens).sum();
+        self.tokens_consumed_total += total_tokens as u64;
+        trace.log(Event::TrainEnd { version: version + 1, tokens: total_tokens });
+        let stale: Vec<f64> = batch
+            .iter()
+            .map(|t| t.staleness_at(version) as f64)
+            .collect();
+        let clens: Vec<f64> = batch.iter().map(|t| t.completion_len() as f64).collect();
+        let elapsed_total = self.start.elapsed().as_secs_f64();
+        Ok(StepMetrics {
+            step: step_idx,
+            version: version + 1,
+            loss: agg.get("loss"),
+            clip_frac: agg.get("clip_frac"),
+            ratio_mean: agg.get("ratio_mean"),
+            approx_kl: agg.get("approx_kl"),
+            grad_norm: agg.get("grad_norm"),
+            w_mean: agg.get("w_mean"),
+            reward_mean: rewards.iter().map(|&(_, r)| r as f64).sum::<f64>()
+                / rewards.len() as f64,
+            correct_frac: batch.iter().filter(|t| t.correct).count() as f64
+                / batch.len() as f64,
+            mean_staleness: stats::mean(&stale),
+            max_staleness: stale.iter().cloned().fold(0.0, f64::max) as u64,
+            interrupted_frac: batch.iter().filter(|t| t.segments.len() > 1).count()
+                as f64
+                / batch.len() as f64,
+            tokens_consumed: total_tokens,
+            mean_completion_len: stats::mean(&clens),
+            wall_s: t0.elapsed().as_secs_f64(),
+            effective_tps: self.tokens_consumed_total as f64 / elapsed_total,
+        })
+    }
+
+    /// Supervised warmup step over gold traces (the "distilled base model").
+    pub fn sft_step(&mut self, tokens: HostTensor, mask: HostTensor, lr: f64)
+        -> Result<Vec<f32>> {
+        let spec = &self.engine.spec;
+        let tokens_l = tokens.to_literal()?;
+        let mask_l = mask.to_literal()?;
+        let lr_l = HostTensor::scalar_f32(lr as f32).to_literal()?;
+        let step_l = HostTensor::scalar_i32(self.state.step).to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = self.state.params.refs();
+        for m in &self.state.m {
+            inputs.push(m.lit());
+        }
+        for v in &self.state.v {
+            inputs.push(v.lit());
+        }
+        inputs.push(&step_l);
+        inputs.push(&tokens_l);
+        inputs.push(&mask_l);
+        inputs.push(&lr_l);
+        let mut outs = self.engine.run("sft_step", &inputs)?;
+        let metrics_l = outs.pop().unwrap();
+        let _ = outs.pop().unwrap();
+        let n = spec.n_params();
+        let v_new = outs.split_off(2 * n);
+        let m_new = outs.split_off(n);
+        self.state.step += 1;
+        self.state.m = m_new;
+        self.state.v = v_new;
+        let version = self.state.params.version;
+        let p = ParamSet::with_version(outs, version);
+        self.state.params = Arc::clone(&p);
+        self.server.publish(p);
+        let met = HostTensor::from_literal(metrics_l.lit())?;
+        Ok(met.as_f32()?.to_vec())
+    }
+
+    fn build_micro(&self, batch: &[Trajectory], advs: &[f32], mb: &MicroBatch,
+                   t_full: usize) -> Result<MicroTensors> {
+        let spec = &self.engine.spec;
+        let bt = spec.config.train_batch;
+        let half = self.has_half && self.cfg.dynamic_batching && mb.max_len <= t_full / 2;
+        let t = if half { t_full / 2 } else { t_full };
+        let mut tokens = vec![0i32; bt * t];
+        let mut mask = vec![0f32; bt * t];
+        let mut adv = vec![0f32; bt * t];
+        let mut behav = vec![0f32; bt * t];
+        if mb.indices.len() > bt {
+            bail!("micro-batch has {} rows, executable takes {bt}", mb.indices.len());
+        }
+        let mut n_tokens = 0usize;
+        for (row, &idx) in mb.indices.iter().enumerate() {
+            let tr = &batch[idx];
+            if tr.tokens.len() > t {
+                bail!("sequence of len {} routed to T={t} variant", tr.tokens.len());
+            }
+            let off = row * t;
+            tokens[off..off + tr.tokens.len()].copy_from_slice(&tr.tokens);
+            for (k, pos) in (tr.prompt_len..tr.tokens.len()).enumerate() {
+                mask[off + pos] = 1.0;
+                adv[off + pos] = advs[idx];
+                behav[off + pos] = tr.behav_logp[k];
+                n_tokens += 1;
+            }
+        }
+        Ok(MicroTensors {
+            tokens: HostTensor::i32(vec![bt, t], tokens),
+            mask: HostTensor::f32(vec![bt, t], mask),
+            adv: HostTensor::f32(vec![bt, t], adv),
+            behav: HostTensor::f32(vec![bt, t], behav),
+            t,
+            n_tokens,
+            half,
+        })
+    }
+
+    /// π_prox token logprobs under the current (step-start) parameters.
+    fn recompute_logprob(&self, mt: &MicroTensors) -> Result<HostTensor> {
+        let entry = if mt.half { "logprob_h" } else { "logprob" };
+        let tokens_l = mt.tokens.to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = self.state.params.refs();
+        inputs.push(&tokens_l);
+        let outs = self.engine.run(entry, &inputs).context(entry)?;
+        HostTensor::from_literal(outs[0].lit())
+    }
+}
+
+/// Token-weighted aggregation of the train_step metric vectors.
+#[derive(Default)]
+struct MetricAgg {
+    sums: std::collections::BTreeMap<&'static str, f64>,
+    weight: f64,
+}
+
+const METRIC_NAMES: [&str; 8] = [
+    "loss", "clip_frac", "ratio_mean", "approx_kl", "token_nll", "grad_norm",
+    "w_mean", "n_tokens",
+];
+
+impl MetricAgg {
+    fn add(&mut self, metrics: &[f32], n_tokens: usize) {
+        let w = n_tokens.max(1) as f64;
+        for (name, &v) in METRIC_NAMES.iter().zip(metrics) {
+            *self.sums.entry(name).or_insert(0.0) += v as f64 * w;
+        }
+        self.weight += w;
+    }
+
+    fn get(&self, name: &str) -> f64 {
+        self.sums
+            .get(name)
+            .map(|s| s / self.weight.max(1.0))
+            .unwrap_or(f64::NAN)
+    }
+}

@@ -1,0 +1,61 @@
+//! Shared experiment plumbing: real-system run helper, markdown table
+//! printing, CSV output directory.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::coordinator::{RunReport, System};
+
+pub fn out_dir() -> PathBuf {
+    let d = PathBuf::from("runs/exp");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Parse simple `key=value` overrides used by the drivers themselves
+/// (returns the value for `key` if present).
+pub fn arg(overrides: &[String], key: &str) -> Option<String> {
+    overrides.iter().find_map(|o| {
+        o.split_once('=')
+            .filter(|(k, _)| *k == key)
+            .map(|(_, v)| v.to_string())
+    })
+}
+
+pub fn arg_usize(overrides: &[String], key: &str, default: usize) -> usize {
+    arg(overrides, key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Build + run the real system: defaults → user overrides (unknown keys are
+/// driver-specific and skipped) → driver mutation `f`.
+pub fn run_real(extra: &[String], f: impl FnOnce(&mut Config)) -> Result<RunReport> {
+    let mut cfg = Config::default();
+    for o in extra {
+        if let Some((k, v)) = o.split_once('=') {
+            let _ = cfg.set(k.trim(), v.trim()); // unknown keys: driver args
+        }
+    }
+    f(&mut cfg);
+    cfg.validate()?;
+    let sys = System::build(cfg)?;
+    sys.run()
+}
+
+/// Print a markdown table.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n### {title}\n");
+    println!("| {} |", header.join(" | "));
+    println!("|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for r in rows {
+        println!("| {} |", r.join(" | "));
+    }
+    println!();
+}
+
+pub fn fmt(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}

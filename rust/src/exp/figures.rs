@@ -1,0 +1,299 @@
+//! Figure drivers (Fig 1, 3, 4, 5, 6a, 6b).
+
+use anyhow::Result;
+
+use crate::config::Mode;
+use crate::coordinator::batching::{dynamic_allocate, padded_cost, standard_allocate};
+use crate::sim::{self, SimConfig};
+use crate::util::logging::CsvWriter;
+use crate::util::rng::Rng;
+
+use super::common::{arg, arg_usize, fmt, out_dir, print_table, run_real};
+
+/// Fig 1 — execution timelines: synchronous vs one-step overlap, showing
+/// inference-device idling (simulated at paper scale).
+pub fn fig1() -> Result<()> {
+    let cfg = SimConfig::paper_default(sim::profile::MODEL_7B, 64, 16384.0);
+    let mut c = cfg.clone();
+    c.n_steps = 2;
+    let sync = sim::run_sync(&c);
+    let ovl = sim::run_overlap(&c);
+    println!("== Fig 1 (left): synchronous RL system ==");
+    print!("{}", sim::timeline::render(&sync.timeline, 72));
+    println!("gen-device utilization: {:.0}%", 100.0 * sync.gen_util);
+    println!("\n== Fig 1 (right): one-step overlap ==");
+    print!("{}", sim::timeline::render(&ovl.timeline, 72));
+    println!("gen-device utilization: {:.0}%", 100.0 * ovl.gen_util);
+    std::fs::write(out_dir().join("fig1_sync.csv"),
+                   sim::timeline::to_csv(&sync.timeline))?;
+    std::fs::write(out_dir().join("fig1_overlap.csv"),
+                   sim::timeline::to_csv(&ovl.timeline))?;
+    Ok(())
+}
+
+/// Fig 3 — AReaL generation management: interruptions (✕) at weight
+/// arrivals. Simulated at scale + a real trace from the in-process system.
+pub fn fig3(overrides: &[String]) -> Result<()> {
+    let mut c = SimConfig::paper_default(sim::profile::MODEL_7B, 64, 16384.0);
+    c.n_steps = 3;
+    let asy = sim::run_async(&c);
+    println!("== Fig 3: AReaL asynchronous generation management (sim) ==");
+    print!("{}", sim::timeline::render(&asy.timeline, 72));
+    println!(
+        "gen util {:.0}%  interrupts {}  mean staleness {:.2}",
+        100.0 * asy.gen_util, asy.interrupts, asy.mean_staleness
+    );
+
+    // real trace (nano tier, a few steps)
+    let steps = arg_usize(overrides, "steps", 3);
+    let report = run_real(overrides, |cfg| {
+        cfg.tier = arg(overrides, "tier").unwrap_or_else(|| "nano".into());
+        cfg.task = "sort".into();
+        cfg.group_size = 4;
+        cfg.global_batch = 8;
+        cfg.ppo_minibatches = 2;
+        cfg.ppo_steps = steps;
+        cfg.n_rollout_workers = 1;
+        cfg.sft_steps = 2;
+        cfg.eval_samples = 0;
+        cfg.max_staleness = Some(4);
+    })?;
+    let csv = report.trace.to_csv();
+    std::fs::write(out_dir().join("fig3_real_trace.csv"), &csv)?;
+    let interrupts = report
+        .trace
+        .count(|e| matches!(e, crate::coordinator::Event::Interrupt { .. }));
+    println!(
+        "\nreal trace ({} steps): {} events, {} in-flight interruptions, \
+         interrupted-trajectory fraction per step: {:?}",
+        steps,
+        csv.lines().count() - 1,
+        interrupts,
+        report
+            .steps
+            .iter()
+            .map(|m| (m.interrupted_frac * 100.0).round() / 100.0)
+            .collect::<Vec<_>>()
+    );
+    println!("wrote {:?}", out_dir().join("fig3_real_trace.csv"));
+    Ok(())
+}
+
+/// Fig 4 — strong scaling: effective throughput vs device count, AReaL vs
+/// synchronous (verl-like), ctx 16k and 32k, all four model sizes.
+pub fn fig4(overrides: &[String]) -> Result<()> {
+    let models = [
+        sim::profile::MODEL_1_5B,
+        sim::profile::MODEL_7B,
+        sim::profile::MODEL_14B,
+        sim::profile::MODEL_32B,
+    ];
+    let device_counts: Vec<usize> = arg(overrides, "gpus")
+        .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
+        .unwrap_or_else(|| vec![64, 128, 256, 512]);
+    let mut w = CsvWriter::create(
+        out_dir().join("fig4.csv"),
+        &["model_ctx_gpus", "sync_tps", "async_tps", "speedup", "ideal_async"],
+    )?;
+    for ctx in [16384.0, 32768.0] {
+        let mut rows = Vec::new();
+        for m in &models {
+            let mut base_async = 0.0;
+            for (i, &g) in device_counts.iter().enumerate() {
+                let mut c = SimConfig::paper_default(*m, g, ctx);
+                c.n_steps = 6;
+                let sync = sim::run_sync(&c);
+                let asy = sim::run_async(&c);
+                if i == 0 {
+                    base_async = asy.effective_tps / g as f64;
+                }
+                let ideal = base_async * g as f64;
+                rows.push(vec![
+                    m.name.to_string(),
+                    format!("{g}"),
+                    fmt(sync.effective_tps / 1e3, 1),
+                    fmt(asy.effective_tps / 1e3, 1),
+                    fmt(asy.effective_tps / sync.effective_tps, 2),
+                    fmt(ideal / 1e3, 1),
+                ]);
+                w.row_mixed(
+                    &format!("{},{},{}", m.name, ctx as usize, g),
+                    &[sync.effective_tps, asy.effective_tps,
+                      asy.effective_tps / sync.effective_tps, ideal],
+                )?;
+            }
+        }
+        print_table(
+            &format!("Fig 4 — strong scaling, ctx {} (effective ktok/s)", ctx as usize),
+            &["model", "gpus", "sync(verl-like)", "AReaL", "speedup", "ideal-linear"],
+            &rows,
+        );
+    }
+    w.flush()?;
+    println!("wrote {:?}", out_dir().join("fig4.csv"));
+    Ok(())
+}
+
+/// Fig 5 — ablation learning curves: naive vs decoupled PPO across η
+/// (real runs, reduced scale), plus effective throughput (5c).
+pub fn fig5(overrides: &[String]) -> Result<()> {
+    let steps = arg_usize(overrides, "steps", 12);
+    let etas: Vec<Option<u64>> = arg(overrides, "etas")
+        .map(|s| {
+            s.split(',')
+                .map(|x| if x == "inf" { None } else { Some(x.parse().unwrap()) })
+                .collect()
+        })
+        .unwrap_or_else(|| vec![Some(0), Some(1), Some(4)]);
+    let mut rows = Vec::new();
+    let mut w = CsvWriter::create(
+        out_dir().join("fig5_curves.csv"),
+        &["decoupled", "eta", "step", "reward", "correct", "kl", "tps"],
+    )?;
+    for decoupled in [false, true] {
+        for &eta in &etas {
+            let report = run_real(overrides, |cfg| {
+                cfg.tier = arg(overrides, "tier").unwrap_or_else(|| "nano".into());
+                cfg.task = arg(overrides, "task").unwrap_or_else(|| "sort".into());
+                cfg.mode = Mode::Async;
+                cfg.max_staleness = eta;
+                cfg.decoupled = decoupled;
+                cfg.ppo_steps = steps;
+                cfg.sft_steps = arg_usize(overrides, "sft_steps", 30);
+                cfg.group_size = 4;
+                cfg.global_batch = 16;
+                cfg.ppo_minibatches = 2;
+                cfg.n_rollout_workers = 1;
+                cfg.eval_samples = 0;
+                cfg.lr = 5e-4;
+            })?;
+            for m in &report.steps {
+                w.row_mixed(
+                    &format!("{},{}", decoupled as u8,
+                             eta.map_or("inf".into(), |e| e.to_string())),
+                    &[m.step as f64, m.reward_mean, m.correct_frac, m.approx_kl,
+                      m.effective_tps],
+                )?;
+            }
+            let k = report.steps.len().saturating_sub(4);
+            let last = &report.steps[k..];
+            let final_correct = last.iter().map(|m| m.correct_frac).sum::<f64>()
+                / last.len().max(1) as f64;
+            rows.push(vec![
+                if decoupled { "decoupled (Eq.5)" } else { "naive PPO" }.into(),
+                eta.map_or("inf".into(), |e| e.to_string()),
+                fmt(final_correct, 3),
+                fmt(report.effective_tps, 0),
+                fmt(report.wall_s, 1),
+            ]);
+        }
+    }
+    w.flush()?;
+    print_table(
+        "Fig 5 — objective × staleness (final correctness, reduced scale)",
+        &["objective", "η", "final correct", "eff. tok/s", "wall s"],
+        &rows,
+    );
+    println!("curves: {:?}", out_dir().join("fig5_curves.csv"));
+    Ok(())
+}
+
+/// Fig 6a — dynamic micro-batch allocation vs standard batching:
+/// analytic padded-cost + real train-phase wall-clock.
+pub fn fig6a(overrides: &[String]) -> Result<()> {
+    // analytic sweep over workload mixes (executable-cost model)
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(7);
+    for (name, short_frac) in [("early (short seqs)", 1.0), ("mixed", 0.6), ("late (long seqs)", 0.2)] {
+        let t = 256usize;
+        let lens: Vec<usize> = (0..64)
+            .map(|_| {
+                if rng.chance(short_frac) {
+                    rng.range_usize(16, t / 2)
+                } else {
+                    rng.range_usize(t / 2 + 1, t - 1)
+                }
+            })
+            .collect();
+        let dyn_b = dynamic_allocate(&lens, 4 * t, 4, 16);
+        let std_b = standard_allocate(&lens, 4, 16);
+        let dyn_cost = padded_cost(&dyn_b, &[t / 2, t], 16);
+        let std_cost = padded_cost(&std_b, &[t], 16);
+        rows.push(vec![
+            name.into(),
+            format!("{}", std_b.len()),
+            format!("{}", dyn_b.len()),
+            format!("{std_cost}"),
+            format!("{dyn_cost}"),
+            fmt(std_cost as f64 / dyn_cost as f64, 2),
+        ]);
+    }
+    print_table(
+        "Fig 6a — Algorithm-1 dynamic batching (analytic executable cost)",
+        &["workload", "std µbatches", "dyn µbatches", "std cost", "dyn cost",
+          "speedup"],
+        &rows,
+    );
+
+    // real measurement: identical short-completion workloads through both
+    // policies (nano tier)
+    let steps = arg_usize(overrides, "steps", 3);
+    let mut real_rows = Vec::new();
+    for dynamic in [false, true] {
+        let report = run_real(overrides, |cfg| {
+            cfg.tier = arg(overrides, "tier").unwrap_or_else(|| "nano".into());
+            cfg.task = "sort".into();
+            cfg.dynamic_batching = dynamic;
+            cfg.token_budget = 256;
+            cfg.ppo_steps = steps;
+            cfg.sft_steps = 0;
+            cfg.group_size = 4;
+            cfg.global_batch = 16;
+            cfg.ppo_minibatches = 2;
+            cfg.n_rollout_workers = 1;
+            cfg.eval_samples = 0;
+        })?;
+        let train_wall: f64 = report.steps.iter().map(|m| m.wall_s).sum();
+        let tokens: usize = report.steps.iter().map(|m| m.tokens_consumed).sum();
+        real_rows.push(vec![
+            if dynamic { "dynamic (Alg.1)" } else { "standard" }.into(),
+            fmt(train_wall, 2),
+            format!("{tokens}"),
+            fmt(tokens as f64 / train_wall, 0),
+        ]);
+    }
+    print_table(
+        "Fig 6a — real train-phase throughput (nano tier)",
+        &["policy", "train wall s", "tokens", "train tok/s"],
+        &real_rows,
+    );
+    Ok(())
+}
+
+/// Fig 6b — interruptible generation ablation (sim at 4-node scale, like
+/// the paper, plus the real coordinator counters).
+pub fn fig6b(_overrides: &[String]) -> Result<()> {
+    let mut rows = Vec::new();
+    for m in [sim::profile::MODEL_1_5B, sim::profile::MODEL_7B] {
+        let mut c = SimConfig::paper_default(m, 32, 16384.0); // 4 nodes
+        c.n_steps = 10;
+        let with = sim::run_async(&c);
+        c.interruptible = false;
+        let without = sim::run_async(&c);
+        rows.push(vec![
+            m.name.to_string(),
+            fmt(without.gen_tokens / without.total_s / 1e3, 1),
+            fmt(with.gen_tokens / with.total_s / 1e3, 1),
+            format!("+{:.0}%",
+                    100.0 * (with.gen_tokens / with.total_s
+                             / (without.gen_tokens / without.total_s) - 1.0)),
+        ]);
+    }
+    print_table(
+        "Fig 6b — interruptible generation, 4 nodes (gen ktok/s)",
+        &["model", "w/o interruption", "w/ interruption", "gain"],
+        &rows,
+    );
+    println!("(paper reports +12% for 1.5B and +17% for 7B on 4 nodes)");
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §6). Each
+//! driver prints the paper-style rows and writes CSVs under `runs/exp/`.
+
+pub mod common;
+pub mod figures;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+/// Dispatch `areal exp <id> [key=value...]`.
+pub fn run(id: &str, overrides: &[String]) -> Result<()> {
+    match id {
+        "fig1" => figures::fig1(),
+        "fig3" => figures::fig3(overrides),
+        "fig4" => figures::fig4(overrides),
+        "fig5" => figures::fig5(overrides),
+        "fig6a" => figures::fig6a(overrides),
+        "fig6b" => figures::fig6b(overrides),
+        "table1" => tables::table1(overrides),
+        "table2" => tables::table2(overrides),
+        "table45" => tables::table45(overrides),
+        "table6" => tables::table6(overrides),
+        "table7" => tables::table7(overrides),
+        "table8" => tables::table8(overrides),
+        other => bail!(
+            "unknown experiment '{other}'; available: fig1 fig3 fig4 fig5 \
+             fig6a fig6b table1 table2 table45 table6 table7 table8"
+        ),
+    }
+}

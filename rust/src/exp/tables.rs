@@ -1,0 +1,266 @@
+//! Table drivers (Table 1, 2, 4/5, 6, 7, 8).
+
+use anyhow::Result;
+
+use crate::config::{BaselineCfg, Mode};
+use crate::coordinator::evalgen;
+use crate::sim::{self, SimConfig};
+use crate::tasks::evalsuite;
+use crate::util::logging::CsvWriter;
+
+use super::common::{arg, arg_usize, fmt, out_dir, print_table, run_real};
+
+/// Table 1 — end-to-end comparison. Two parts:
+/// (a) simulated training hours at the paper's scale (1.5B..32B, H800);
+/// (b) real wall-clock sync vs async on this testbed (same steps, same
+///     budget) with final eval — the accuracy-parity claim.
+pub fn table1(overrides: &[String]) -> Result<()> {
+    // (a) simulated hours at paper scale
+    let mut rows = Vec::new();
+    for (m, nodes, steps) in [
+        (sim::profile::MODEL_1_5B, 16usize, 250usize),
+        (sim::profile::MODEL_7B, 24, 250),
+        (sim::profile::MODEL_14B, 32, 80),
+        (sim::profile::MODEL_32B, 48, 80),
+    ] {
+        let gpus = nodes * 8;
+        let mut c = SimConfig::paper_default(m, gpus, 32768.0);
+        c.n_steps = 6; // simulate a window, extrapolate per-step cost
+        let sync = sim::run_sync(&c);
+        let asy = sim::run_async(&c);
+        let sync_h = sync.total_s / c.n_steps as f64 * steps as f64 / 3600.0;
+        let asy_h = asy.total_s / c.n_steps as f64 * steps as f64 / 3600.0;
+        rows.push(vec![
+            m.name.to_string(),
+            format!("{nodes}"),
+            format!("{steps}"),
+            fmt(sync_h, 1),
+            fmt(asy_h, 1),
+            format!("{:.2}x", sync_h / asy_h),
+        ]);
+    }
+    print_table(
+        "Table 1 (sim, paper scale) — training hours",
+        &["model", "nodes", "PPO steps", "sync hours", "AReaL hours", "speedup"],
+        &rows,
+    );
+
+    // (b) real runs on this testbed
+    let steps = arg_usize(overrides, "steps", 8);
+    let tier = arg(overrides, "tier").unwrap_or_else(|| "nano".into());
+    let mut rows = Vec::new();
+    for mode in [Mode::Sync, Mode::Overlap, Mode::Async] {
+        let report = run_real(overrides, |cfg| {
+            cfg.tier = tier.clone();
+            cfg.task = arg(overrides, "task").unwrap_or_else(|| "sort".into());
+            cfg.mode = mode;
+            cfg.max_staleness = Some(4);
+            cfg.ppo_steps = steps;
+            cfg.sft_steps = arg_usize(overrides, "sft_steps", 20);
+            cfg.group_size = 4;
+            cfg.global_batch = 16;
+            cfg.ppo_minibatches = 2;
+            cfg.n_rollout_workers = 1;
+            cfg.eval_samples = 0;
+            cfg.lr = 5e-4;
+        })?;
+        let k = report.steps.len().saturating_sub(3);
+        let final_correct = report.steps[k..]
+            .iter()
+            .map(|m| m.correct_frac)
+            .sum::<f64>()
+            / (report.steps.len() - k).max(1) as f64;
+        rows.push(vec![
+            mode.name().into(),
+            format!("{steps}"),
+            fmt(report.wall_s, 1),
+            fmt(final_correct, 3),
+            fmt(report.effective_tps, 0),
+        ]);
+    }
+    print_table(
+        &format!("Table 1 (real, tier {tier}) — wall clock for {steps} PPO steps"),
+        &["system", "PPO steps", "wall s", "final correct", "eff. tok/s"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Shared machinery for Table 2 / 7 / 8: staleness sweep with a chosen
+/// objective/baseline, real runs, eval on held-out suites.
+fn staleness_sweep(overrides: &[String], decoupled: bool, baseline: BaselineCfg,
+                   title: &str) -> Result<()> {
+    let steps = arg_usize(overrides, "steps", 12);
+    let tier = arg(overrides, "tier").unwrap_or_else(|| "nano".into());
+    let task = arg(overrides, "task").unwrap_or_else(|| "sort".into());
+    let etas: Vec<Option<u64>> = arg(overrides, "etas")
+        .map(|s| {
+            s.split(',')
+                .map(|x| if x == "inf" { None } else { Some(x.parse().unwrap()) })
+                .collect()
+        })
+        .unwrap_or_else(|| vec![Some(0), Some(1), Some(4), None]);
+    let mut rows = Vec::new();
+    let mut w = CsvWriter::create(
+        out_dir().join(format!("{}.csv", title.replace(' ', "_"))),
+        &["eta", "final_correct", "tps", "wall_s", "mean_staleness"],
+    )?;
+    for &eta in &etas {
+        let report = run_real(overrides, |cfg| {
+            cfg.tier = tier.clone();
+            cfg.task = task.clone();
+            cfg.mode = Mode::Async;
+            cfg.max_staleness = eta;
+            cfg.decoupled = decoupled;
+            cfg.baseline = baseline;
+            cfg.ppo_steps = steps;
+            cfg.sft_steps = arg_usize(overrides, "sft_steps", 20);
+            cfg.group_size = 4;
+            cfg.global_batch = 16;
+            cfg.ppo_minibatches = 2;
+            cfg.n_rollout_workers = 1;
+            cfg.eval_samples = 0;
+            cfg.lr = 5e-4;
+        })?;
+        let k = report.steps.len().saturating_sub(3);
+        let final_correct = report.steps[k..]
+            .iter()
+            .map(|m| m.correct_frac)
+            .sum::<f64>()
+            / (report.steps.len() - k).max(1) as f64;
+        let mean_stale = report.steps.iter().map(|m| m.mean_staleness).sum::<f64>()
+            / report.steps.len().max(1) as f64;
+        let eta_s = eta.map_or("inf".to_string(), |e| e.to_string());
+        w.row_mixed(&eta_s, &[final_correct, report.effective_tps, report.wall_s,
+                              mean_stale])?;
+        rows.push(vec![
+            eta_s,
+            fmt(final_correct, 3),
+            fmt(report.effective_tps, 0),
+            fmt(report.wall_s, 1),
+            fmt(mean_stale, 2),
+        ]);
+    }
+    w.flush()?;
+    print_table(
+        title,
+        &["max staleness η", "final correct", "eff. tok/s", "wall s",
+          "mean staleness"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Table 2 — staleness × objective: runs BOTH naive and decoupled sweeps.
+pub fn table2(overrides: &[String]) -> Result<()> {
+    staleness_sweep(overrides, false, BaselineCfg::GroupMean,
+                    "Table 2 — naive PPO (w/o decoupled objective)")?;
+    staleness_sweep(overrides, true, BaselineCfg::GroupMean,
+                    "Table 2 — decoupled PPO objective (Eq. 5)")
+}
+
+/// Table 7 — small-scale staleness-throughput trade-off (PPO).
+pub fn table7(overrides: &[String]) -> Result<()> {
+    staleness_sweep(overrides, true, BaselineCfg::GroupMean,
+                    "Table 7 — staleness vs throughput (PPO, small scale)")
+}
+
+/// Table 8 — RLOO advantage variant.
+pub fn table8(overrides: &[String]) -> Result<()> {
+    staleness_sweep(overrides, true, BaselineCfg::Rloo,
+                    "Table 8 — staleness vs throughput (RLOO)")
+}
+
+/// Tables 4/5 — additional benchmarks: train one model per task family and
+/// evaluate on every held-out suite.
+pub fn table45(overrides: &[String]) -> Result<()> {
+    let steps = arg_usize(overrides, "steps", 12);
+    for task in ["math", "code"] {
+        let report = run_real(overrides, |cfg| {
+            cfg.tier = arg(overrides, "tier").unwrap_or_else(|| "tiny".into());
+            cfg.task = task.into();
+            cfg.level_lo = 1;
+            cfg.level_hi = 2;
+            cfg.ppo_steps = steps;
+            cfg.sft_steps = arg_usize(overrides, "sft_steps", 60);
+            cfg.group_size = 4;
+            cfg.global_batch = 16;
+            cfg.ppo_minibatches = 2;
+            cfg.n_rollout_workers = 1;
+            cfg.eval_samples = 1;
+            cfg.lr = 5e-4;
+        })?;
+        let rows: Vec<Vec<String>> = report
+            .eval
+            .iter()
+            .map(|r| {
+                vec![
+                    r.suite.to_string(),
+                    fmt(r.pass_at_1, 3),
+                    format!("{}", r.n_prompts),
+                    fmt(r.mean_completion_len, 1),
+                ]
+            })
+            .collect();
+        print_table(
+            &format!("Table 4/5 — held-out suites after RL ({task})"),
+            &["suite", "pass@1", "prompts", "mean completion len"],
+            &rows,
+        );
+    }
+    Ok(())
+}
+
+/// Table 6 — architecture generalization: llama-style variant (RMSNorm,
+/// SiLU-gated MLP, tied embeddings).
+pub fn table6(overrides: &[String]) -> Result<()> {
+    let steps = arg_usize(overrides, "steps", 10);
+    let mut rows = Vec::new();
+    for (label, tier) in [("gpt (small)", "small"), ("llama (llama_small)", "llama_small")] {
+        let report = run_real(overrides, |cfg| {
+            cfg.tier = tier.into();
+            cfg.task = "sort".into();
+            cfg.level_lo = 2;
+            cfg.level_hi = 4;
+            cfg.ppo_steps = steps;
+            cfg.sft_steps = arg_usize(overrides, "sft_steps", 30);
+            cfg.group_size = 4;
+            cfg.global_batch = 16;
+            cfg.ppo_minibatches = 2;
+            cfg.n_rollout_workers = 1;
+            cfg.eval_samples = 0;
+            cfg.lr = 5e-4;
+        })?;
+        let k = report.steps.len().saturating_sub(3);
+        let fc = report.steps[k..].iter().map(|m| m.correct_frac).sum::<f64>()
+            / (report.steps.len() - k).max(1) as f64;
+        rows.push(vec![label.into(), fmt(fc, 3), fmt(report.effective_tps, 0)]);
+    }
+    print_table(
+        "Table 6 — architecture generalization (async RL works on both)",
+        &["architecture", "final correct", "eff. tok/s"],
+        &rows,
+    );
+    Ok(())
+}
+
+/// Utility used by the CLI `eval` command.
+pub fn eval_checkpoint(tier: &str, task: &str, ckpt: &std::path::Path,
+                       artifacts: &std::path::Path, samples: usize) -> Result<()> {
+    let manifest = crate::runtime::Manifest::load(artifacts)?;
+    let spec = manifest.tier(tier)?;
+    let engine = std::sync::Arc::new(crate::runtime::Engine::load_subset(
+        spec,
+        Some(&["init", "prefill", "decode"]),
+    )?);
+    let state = crate::runtime::params::load_checkpoint(ckpt, spec)?;
+    let mut rows = Vec::new();
+    for suite in evalsuite::suites_for(task) {
+        let r = evalgen::eval_suite(&engine, &state.params, &suite, samples, 0.0, 1)?;
+        rows.push(vec![r.suite.to_string(), fmt(r.pass_at_1, 3),
+                       format!("{}", r.n_prompts)]);
+    }
+    print_table(&format!("eval: {tier}/{task} @ {ckpt:?}"),
+                &["suite", "pass@1", "prompts"], &rows);
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Expression lexer.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Token {
+    Num(i64),
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    LParen,
+    RParen,
+}
+
+/// Tokenize an expression string. Whitespace is skipped; any other
+/// character is an error (returned as its position).
+pub fn lex(s: &str) -> Result<Vec<Token>, usize> {
+    let b = s.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b' ' | b'\t' => i += 1,
+            b'+' => {
+                out.push(Token::Plus);
+                i += 1;
+            }
+            b'-' => {
+                out.push(Token::Minus);
+                i += 1;
+            }
+            b'*' => {
+                out.push(Token::Star);
+                i += 1;
+            }
+            b'/' => {
+                out.push(Token::Slash);
+                i += 1;
+            }
+            b'(' => {
+                out.push(Token::LParen);
+                i += 1;
+            }
+            b')' => {
+                out.push(Token::RParen);
+                i += 1;
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                // bounded numbers: reject absurd literals early
+                if i - start > 12 {
+                    return Err(start);
+                }
+                let n: i64 = s[start..i].parse().map_err(|_| start)?;
+                out.push(Token::Num(n));
+            }
+            _ => return Err(i),
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_expression() {
+        assert_eq!(
+            lex("12+3*(4-5)").unwrap(),
+            vec![
+                Token::Num(12),
+                Token::Plus,
+                Token::Num(3),
+                Token::Star,
+                Token::LParen,
+                Token::Num(4),
+                Token::Minus,
+                Token::Num(5),
+                Token::RParen
+            ]
+        );
+    }
+
+    #[test]
+    fn skips_whitespace() {
+        assert_eq!(lex("  7 ").unwrap(), vec![Token::Num(7)]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert_eq!(lex("1+x"), Err(2));
+    }
+
+    #[test]
+    fn rejects_huge_literal() {
+        assert!(lex("9999999999999999999").is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert_eq!(lex("").unwrap(), vec![]);
+    }
+}

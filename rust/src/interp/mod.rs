@@ -1,0 +1,16 @@
+//! Arithmetic expression interpreter — the from-scratch substrate behind the
+//! code-like task's reward: the paper's coding reward service "extracts the
+//! code and executes unit tests"; here the model emits an arithmetic
+//! expression program, and this interpreter executes it against the task's
+//! expected value (the unit test).
+//!
+//! Grammar (integer arithmetic, i64, checked):
+//!     expr   := term (('+' | '-') term)*
+//!     term   := factor (('*' | '/') factor)*
+//!     factor := NUMBER | '-' factor | '(' expr ')'
+
+pub mod lexer;
+pub mod parser;
+
+pub use lexer::{lex, Token};
+pub use parser::{eval, eval_with_numbers, parse, Ast, EvalError};

@@ -1,0 +1,18 @@
+//! AReaL: a fully asynchronous RL training system for language reasoning.
+//!
+//! Three-layer reproduction of Fu et al., "AReaL: A Large-Scale Asynchronous
+//! Reinforcement Learning System for Language Reasoning" (2025):
+//! Rust coordinator (this crate) + AOT-compiled JAX model + Pallas kernels.
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod algo;
+pub mod config;
+pub mod coordinator;
+pub mod interp;
+pub mod reward;
+pub mod runtime;
+pub mod exp;
+pub mod sim;
+pub mod tasks;
+pub mod text;
+pub mod util;

@@ -1,0 +1,145 @@
+//! `areal` — CLI for the AReaL reproduction.
+//!
+//! Subcommands:
+//!   train [key=value ...]          run a training session (see config.rs)
+//!   eval  tier=<t> task=<t> checkpoint=<path> [samples=N]
+//!   sim   model=<1.5B|7B|14B|32B> gpus=N ctx=N mode=<sync|overlap|async>
+//!   exp   <fig1|fig3|fig4|fig5|fig6a|fig6b|table1|table2|table45|table6|table7|table8> [key=value ...]
+//!
+//! No clap in the offline vendor set — arguments are `key=value` pairs.
+
+use anyhow::{bail, Context, Result};
+
+use areal::config::Config;
+use areal::coordinator::System;
+use areal::exp;
+use areal::sim::{self, SimConfig};
+use areal::util::logging;
+
+fn main() -> Result<()> {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "eval" => cmd_eval(rest),
+        "sim" => cmd_sim(rest),
+        "exp" => {
+            let Some(id) = rest.first() else {
+                bail!("usage: areal exp <id> [key=value ...]");
+            };
+            exp::run(id, &rest[1..])
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `areal help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "areal — asynchronous RL training system (AReaL reproduction)\n\n\
+         usage:\n  areal train [config=<file.json>] [key=value ...]\n  \
+         areal eval tier=<t> task=<math|code|sort> checkpoint=<p> [samples=N]\n  \
+         areal sim model=<1.5B|7B|14B|32B> gpus=N ctx=N mode=<sync|overlap|async>\n  \
+         areal exp <fig1|fig3|fig4|fig5|fig6a|fig6b|table1|table2|table45|table6|table7|table8> [key=value ...]\n\n\
+         config keys: tier mode eta interruptible workers task global_batch\n\
+         ppo_minibatches steps lr baseline decoupled dynamic_batching\n\
+         token_budget sft_steps sft_lr group_size seed out_dir ... (config.rs)"
+    );
+}
+
+fn kv(args: &[String], key: &str) -> Option<String> {
+    args.iter().find_map(|a| {
+        a.split_once('=')
+            .filter(|(k, _)| *k == key)
+            .map(|(_, v)| v.to_string())
+    })
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let config_path = kv(args, "config").map(std::path::PathBuf::from);
+    let overrides: Vec<String> = args
+        .iter()
+        .filter(|a| !a.starts_with("config="))
+        .cloned()
+        .collect();
+    let cfg = Config::load(config_path.as_deref(), &overrides)?;
+    let out_dir = cfg.out_dir.clone();
+    std::fs::create_dir_all(&out_dir)?;
+    let sys = System::build(cfg)?;
+    let report = sys.run()?;
+
+    // persist metrics + trace + checkpoint
+    let mut w = areal::util::logging::CsvWriter::create(
+        out_dir.join("metrics.csv"),
+        &["step", "version", "loss", "reward", "correct", "kl", "clip_frac",
+          "staleness", "interrupted", "tokens", "eff_tps"],
+    )?;
+    for m in &report.steps {
+        w.row(&[m.step as f64, m.version as f64, m.loss, m.reward_mean,
+                m.correct_frac, m.approx_kl, m.clip_frac, m.mean_staleness,
+                m.interrupted_frac, m.tokens_consumed as f64, m.effective_tps])?;
+    }
+    w.flush()?;
+    std::fs::write(out_dir.join("trace.csv"), report.trace.to_csv())?;
+    println!(
+        "\ndone: {} steps in {:.1}s — eff {:.0} tok/s, gen {} tok, train {} tok",
+        report.steps.len(), report.wall_s, report.effective_tps,
+        report.gen_tokens, report.train_tokens
+    );
+    for r in &report.eval {
+        println!("  {}: pass@1 {:.3} ({} prompts)", r.suite, r.pass_at_1, r.n_prompts);
+    }
+    println!("metrics: {:?}", out_dir.join("metrics.csv"));
+    Ok(())
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let tier = kv(args, "tier").context("need tier=")?;
+    let task = kv(args, "task").context("need task=")?;
+    let ckpt = kv(args, "checkpoint").context("need checkpoint=")?;
+    let samples = kv(args, "samples").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let artifacts = kv(args, "artifacts_dir").unwrap_or_else(|| "artifacts".into());
+    exp::tables::eval_checkpoint(
+        &tier, &task,
+        std::path::Path::new(&ckpt),
+        std::path::Path::new(&artifacts),
+        samples,
+    )
+}
+
+fn cmd_sim(args: &[String]) -> Result<()> {
+    let model = kv(args, "model").unwrap_or_else(|| "7B".into());
+    let m = sim::profile::model_by_name(&model)
+        .with_context(|| format!("unknown model {model}"))?;
+    let gpus: usize = kv(args, "gpus").and_then(|s| s.parse().ok()).unwrap_or(128);
+    let ctx: f64 = kv(args, "ctx").and_then(|s| s.parse().ok()).unwrap_or(32768.0);
+    let mode = kv(args, "mode").unwrap_or_else(|| "async".into());
+    let mut cfg = SimConfig::paper_default(m, gpus, ctx);
+    if let Some(eta) = kv(args, "eta") {
+        cfg.eta = if eta == "inf" { None } else { Some(eta.parse()?) };
+    }
+    if let Some(i) = kv(args, "interruptible") {
+        cfg.interruptible = i == "true" || i == "1";
+    }
+    if let Some(s) = kv(args, "steps") {
+        cfg.n_steps = s.parse()?;
+    }
+    let r = sim::run_policy(&mode, &cfg);
+    println!(
+        "policy={} model={} gpus={} ctx={}\n  total {:.1}s for {} steps — \
+         effective {:.1} ktok/s, gen util {:.0}%, interrupts {}, \
+         mean staleness {:.2}",
+        r.policy, model, gpus, ctx, r.total_s, r.steps,
+        r.effective_tps / 1e3, 100.0 * r.gen_util, r.interrupts, r.mean_staleness
+    );
+    print!("{}", sim::timeline::render(&r.timeline, 72));
+    Ok(())
+}

@@ -1,0 +1,299 @@
+//! Artifact manifest: the contract between the AOT compile path (aot.py)
+//! and the Rust runtime. Parsed from artifacts/manifest.json and validated
+//! against the loaded HLO modules.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use super::tensor::Dtype;
+
+/// One input/output slot of an entrypoint.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-lowered entrypoint.
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+impl EntrySpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|a| a.name == name)
+    }
+
+    pub fn output_index(&self, name: &str) -> Option<usize> {
+        self.outputs.iter().position(|a| a.name == name)
+    }
+}
+
+/// Model tier hyperparameters (mirror of python tiers.Tier).
+#[derive(Debug, Clone)]
+pub struct TierConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub gen_batch: usize,
+    pub chunk: usize,
+    pub train_batch: usize,
+    pub arch: String,
+    pub clip_eps: f64,
+    pub w_max: f64,
+    pub adam: [f64; 4],
+    pub grad_clip: f64,
+    pub param_count: usize,
+    pub paper_analogue: String,
+}
+
+impl TierConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+}
+
+/// Everything the runtime knows about one tier.
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    pub config: TierConfig,
+    /// flat parameter layout: (name, shape)
+    pub params: Vec<(String, Vec<usize>)>,
+    pub entrypoints: BTreeMap<String, EntrySpec>,
+    /// metric vector layouts per training entrypoint
+    pub metrics: BTreeMap<String, Vec<String>>,
+}
+
+impl TierSpec {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entrypoints
+            .get(name)
+            .with_context(|| format!("tier {} has no entrypoint '{name}'", self.config.name))
+    }
+
+    pub fn metric_index(&self, entry: &str, metric: &str) -> Option<usize> {
+        self.metrics.get(entry)?.iter().position(|m| m == metric)
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub tiers: BTreeMap<String, TierSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let version = root.get_usize("version").unwrap_or(0);
+        if version != 2 {
+            bail!("manifest version {version} unsupported (want 2); re-run `make artifacts`");
+        }
+        let mut tiers = BTreeMap::new();
+        let tier_obj = root
+            .get("tiers")
+            .and_then(Json::as_obj)
+            .context("manifest missing tiers")?;
+        for (name, tj) in tier_obj {
+            tiers.insert(name.clone(), parse_tier(name, tj, dir)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), tiers })
+    }
+
+    pub fn tier(&self, name: &str) -> Result<&TierSpec> {
+        self.tiers
+            .get(name)
+            .with_context(|| {
+                format!(
+                    "tier '{name}' not in manifest (have: {:?}); \
+                     run `make artifacts TIERS={name}`",
+                    self.tiers.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+}
+
+fn parse_args(j: &Json, what: &str) -> Result<Vec<ArgSpec>> {
+    let arr = j.as_arr().with_context(|| format!("{what}: not an array"))?;
+    arr.iter()
+        .map(|a| {
+            let name = a.get_str("name").context("arg missing name")?.to_string();
+            let dtype = Dtype::from_manifest(a.get_str("dtype").context("arg missing dtype")?)?;
+            let shape = a
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("arg missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(ArgSpec { name, dtype, shape })
+        })
+        .collect()
+}
+
+fn parse_tier(name: &str, j: &Json, dir: &Path) -> Result<TierSpec> {
+    let cfg = j.get("config").context("tier missing config")?;
+    let adam_arr = cfg
+        .get("adam")
+        .and_then(Json::as_arr)
+        .context("config missing adam")?;
+    if adam_arr.len() != 4 {
+        bail!("adam config must have 4 entries");
+    }
+    let mut adam = [0.0; 4];
+    for (i, v) in adam_arr.iter().enumerate() {
+        adam[i] = v.as_f64().context("bad adam value")?;
+    }
+    let get_usize =
+        |k: &str| cfg.get_usize(k).with_context(|| format!("config missing {k}"));
+    let config = TierConfig {
+        name: name.to_string(),
+        vocab: get_usize("vocab")?,
+        d_model: get_usize("d_model")?,
+        n_layers: get_usize("n_layers")?,
+        n_heads: get_usize("n_heads")?,
+        d_ff: get_usize("d_ff")?,
+        max_seq: get_usize("max_seq")?,
+        gen_batch: get_usize("gen_batch")?,
+        chunk: get_usize("chunk")?,
+        train_batch: get_usize("train_batch")?,
+        arch: cfg.get_str("arch").unwrap_or("gpt").to_string(),
+        clip_eps: cfg.get_f64("clip_eps").context("missing clip_eps")?,
+        w_max: cfg.get_f64("w_max").context("missing w_max")?,
+        adam,
+        grad_clip: cfg.get_f64("grad_clip").context("missing grad_clip")?,
+        param_count: get_usize("param_count")?,
+        paper_analogue: cfg.get_str("paper_analogue").unwrap_or("").to_string(),
+    };
+
+    let params = j
+        .get("params")
+        .and_then(Json::as_arr)
+        .context("tier missing params")?
+        .iter()
+        .map(|p| {
+            let pname = p.get_str("name").context("param missing name")?.to_string();
+            let shape = p
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("param missing shape")?
+                .iter()
+                .map(|d| d.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok((pname, shape))
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut entrypoints = BTreeMap::new();
+    for (ep_name, ep) in j
+        .get("entrypoints")
+        .and_then(Json::as_obj)
+        .context("tier missing entrypoints")?
+    {
+        let file = dir.join(ep.get_str("file").context("entry missing file")?);
+        if !file.exists() {
+            bail!("artifact file missing: {file:?}; re-run `make artifacts`");
+        }
+        entrypoints.insert(
+            ep_name.clone(),
+            EntrySpec {
+                name: ep_name.clone(),
+                file,
+                inputs: parse_args(ep.get("inputs").context("entry missing inputs")?, ep_name)?,
+                outputs: parse_args(ep.get("outputs").context("entry missing outputs")?, ep_name)?,
+            },
+        );
+    }
+
+    let mut metrics = BTreeMap::new();
+    if let Some(obj) = j.get("metrics").and_then(Json::as_obj) {
+        for (k, v) in obj {
+            let names = v
+                .as_arr()
+                .context("metrics not array")?
+                .iter()
+                .map(|s| Ok(s.as_str().context("metric name")?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+            metrics.insert(k.clone(), names);
+        }
+    }
+
+    Ok(TierSpec { config, params, entrypoints, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        let tier = m.tier("nano").unwrap();
+        assert_eq!(tier.config.vocab, 48);
+        assert_eq!(tier.entrypoints.len(), 9);
+        let dec = tier.entry("decode").unwrap();
+        // decode outputs start with toks/logps
+        assert_eq!(dec.outputs[0].name, "toks");
+        assert_eq!(dec.outputs[0].dtype, Dtype::I32);
+        assert_eq!(dec.outputs[1].name, "logps");
+        // kv args are f16 and appear symmetrically in inputs and outputs
+        for l in 0..tier.config.n_layers {
+            let k = format!("kv.k{l}");
+            let i = dec.input_index(&k).unwrap();
+            let o = dec.output_index(&k).unwrap();
+            assert_eq!(dec.inputs[i].dtype, Dtype::F16);
+            assert_eq!(dec.inputs[i].shape, dec.outputs[o].shape);
+        }
+    }
+
+    #[test]
+    fn param_layout_matches_init_outputs() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let tier = m.tier("nano").unwrap();
+        let init = tier.entry("init").unwrap();
+        assert_eq!(init.outputs.len(), tier.n_params());
+        for (out, (name, shape)) in init.outputs.iter().zip(&tier.params) {
+            assert_eq!(out.name, format!("params.{name}"));
+            assert_eq!(&out.shape, shape);
+        }
+    }
+
+    #[test]
+    fn unknown_tier_error_is_helpful() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let err = m.tier("huge").unwrap_err().to_string();
+        assert!(err.contains("huge"));
+    }
+
+    #[test]
+    fn metric_indices() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let tier = m.tier("nano").unwrap();
+        assert_eq!(tier.metric_index("train_step", "loss"), Some(0));
+        assert!(tier.metric_index("train_step", "nonexistent").is_none());
+    }
+}

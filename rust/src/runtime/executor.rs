@@ -1,0 +1,252 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once,
+//! and runs them from the coordinator hot paths.
+//!
+//! Thread-safety: the PJRT CPU client and loaded executables are thread-safe
+//! per the PJRT API contract, and `xla::Literal` is plain host memory with
+//! no thread affinity — but the `xla` crate wrappers hold raw pointers and
+//! are therefore `!Send` by default. `SendLiteral` / the internal exe
+//! wrapper re-assert Send/Sync; every cross-thread transfer in this codebase
+//! moves ownership or shares read-only.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::util::stats::Running;
+use super::artifacts::{EntrySpec, TierSpec};
+
+/// A Literal that may cross threads (see module docs).
+pub struct SendLiteral(pub Literal);
+
+unsafe impl Send for SendLiteral {}
+unsafe impl Sync for SendLiteral {}
+
+impl SendLiteral {
+    pub fn lit(&self) -> &Literal {
+        &self.0
+    }
+}
+
+impl From<Literal> for SendLiteral {
+    fn from(l: Literal) -> Self {
+        SendLiteral(l)
+    }
+}
+
+impl std::fmt::Debug for SendLiteral {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.0.shape() {
+            Ok(s) => write!(f, "SendLiteral({s:?})"),
+            Err(_) => write!(f, "SendLiteral(?)"),
+        }
+    }
+}
+
+struct LoadedEntry {
+    spec: EntrySpec,
+    exe: PjRtLoadedExecutable,
+    /// serializes calls into one executable (conservative; PJRT CPU execute
+    /// is reentrant but the wrapper's error handling is not documented so)
+    lock: Mutex<()>,
+}
+
+unsafe impl Send for LoadedEntry {}
+unsafe impl Sync for LoadedEntry {}
+
+/// Per-entrypoint wall-clock stats (exposed for EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_s: f64,
+    pub mean_s: f64,
+    pub p_compile_s: f64,
+}
+
+/// One tier's compiled executables on one PJRT client.
+pub struct Engine {
+    client: PjRtClient,
+    pub spec: TierSpec,
+    entries: BTreeMap<String, LoadedEntry>,
+    stats: Mutex<BTreeMap<String, (Running, f64)>>,
+    /// skip per-call output-signature validation after first success
+    validate_always: bool,
+}
+
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Compile all entrypoints of `spec` on a fresh CPU client.
+    pub fn load(spec: &TierSpec) -> Result<Engine> {
+        Self::load_subset(spec, None)
+    }
+
+    /// Compile only the listed entrypoints (rollout workers don't need
+    /// train_step; the trainer doesn't need decode).
+    pub fn load_subset(spec: &TierSpec, only: Option<&[&str]>) -> Result<Engine> {
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        let mut entries = BTreeMap::new();
+        let mut stats = BTreeMap::new();
+        for (name, espec) in &spec.entrypoints {
+            if let Some(only) = only {
+                if !only.contains(&name.as_str()) {
+                    continue;
+                }
+            }
+            let t0 = Instant::now();
+            let proto = HloModuleProto::from_text_file(
+                espec.file.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parse HLO text {:?}", espec.file))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("XLA compile of {name}"))?;
+            let compile_s = t0.elapsed().as_secs_f64();
+            crate::debug!("runtime", "compiled {}/{} in {:.2}s",
+                          spec.config.name, name, compile_s);
+            entries.insert(
+                name.clone(),
+                LoadedEntry { spec: espec.clone(), exe, lock: Mutex::new(()) },
+            );
+            stats.insert(name.clone(), (Running::new(), compile_s));
+        }
+        Ok(Engine {
+            client,
+            spec: spec.clone(),
+            entries,
+            stats: Mutex::new(stats),
+            validate_always: false,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entry_spec(&self, name: &str) -> Result<&EntrySpec> {
+        Ok(&self
+            .entries
+            .get(name)
+            .with_context(|| format!("entrypoint '{name}' not loaded"))?
+            .spec)
+    }
+
+    /// Execute an entrypoint. Inputs are borrowed literals in manifest
+    /// order; outputs come back as owned literals in manifest order.
+    pub fn run(&self, name: &str, inputs: &[&Literal]) -> Result<Vec<SendLiteral>> {
+        let entry = self
+            .entries
+            .get(name)
+            .with_context(|| format!("entrypoint '{name}' not loaded"))?;
+        if inputs.len() != entry.spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs supplied, artifact expects {} ({:?}...)",
+                inputs.len(),
+                entry.spec.inputs.len(),
+                entry.spec.inputs.iter().take(3).map(|a| &a.name).collect::<Vec<_>>()
+            );
+        }
+        let t0 = Instant::now();
+        let result = {
+            let _g = entry.lock.lock().unwrap();
+            entry
+                .exe
+                .execute::<&Literal>(inputs)
+                .with_context(|| format!("execute {name}"))?
+        };
+        // single device, single (tuple) output
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetch {name} output"))?;
+        let outs = tuple.to_tuple().with_context(|| format!("untuple {name} output"))?;
+        if outs.len() != entry.spec.outputs.len() {
+            bail!(
+                "{name}: artifact returned {} outputs, manifest says {}",
+                outs.len(),
+                entry.spec.outputs.len()
+            );
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            if let Some((r, _)) = stats.get_mut(name) {
+                r.push(dt);
+            }
+        }
+        Ok(outs.into_iter().map(SendLiteral).collect())
+    }
+
+    /// Wall-clock stats per entrypoint.
+    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
+        let stats = self.stats.lock().unwrap();
+        stats
+            .iter()
+            .map(|(k, (r, compile_s))| {
+                (
+                    k.clone(),
+                    ExecStats {
+                        calls: r.count(),
+                        total_s: r.mean() * r.count() as f64,
+                        mean_s: r.mean(),
+                        p_compile_s: *compile_s,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    pub fn set_validate_always(&mut self, v: bool) {
+        self.validate_always = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::tensor::HostTensor;
+    use std::path::PathBuf;
+
+    fn engine() -> Engine {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let m = Manifest::load(&dir).expect("run `make artifacts` first");
+        Engine::load_subset(m.tier("nano").unwrap(), Some(&["init", "logprob"])).unwrap()
+    }
+
+    #[test]
+    fn init_produces_all_params() {
+        let e = engine();
+        let seed = HostTensor::u32(vec![2], vec![1, 2]).to_literal().unwrap();
+        let outs = e.run("init", &[&seed]).unwrap();
+        assert_eq!(outs.len(), e.spec.n_params());
+        // deterministic
+        let outs2 = e.run("init", &[&seed]).unwrap();
+        let a = HostTensor::from_literal(outs[0].lit()).unwrap();
+        let b = HostTensor::from_literal(outs2[0].lit()).unwrap();
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+
+    #[test]
+    fn wrong_arity_is_an_error() {
+        let e = engine();
+        let seed = HostTensor::u32(vec![2], vec![1, 2]).to_literal().unwrap();
+        assert!(e.run("init", &[&seed, &seed]).is_err());
+        assert!(e.run("no_such_entry", &[&seed]).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let e = engine();
+        let seed = HostTensor::u32(vec![2], vec![1, 2]).to_literal().unwrap();
+        e.run("init", &[&seed]).unwrap();
+        e.run("init", &[&seed]).unwrap();
+        let s = e.stats();
+        assert_eq!(s["init"].calls, 2);
+        assert!(s["init"].mean_s > 0.0);
+        assert!(s["init"].p_compile_s > 0.0);
+    }
+}

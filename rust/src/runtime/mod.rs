@@ -1,0 +1,17 @@
+//! Runtime — the bridge between the Rust coordinator (L3) and the AOT
+//! compiled JAX/Pallas computations (L2/L1): manifest loading, PJRT
+//! compilation/execution, host tensors, versioned parameter state.
+//!
+//! Pattern: `Manifest::load` → `Engine::load(tier)` →
+//! `engine.run("decode", &inputs)`. See /opt/xla-example/load_hlo for the
+//! minimal reference this generalizes.
+
+pub mod artifacts;
+pub mod executor;
+pub mod params;
+pub mod tensor;
+
+pub use artifacts::{ArgSpec, EntrySpec, Manifest, TierConfig, TierSpec};
+pub use executor::{Engine, SendLiteral};
+pub use params::{ParamSet, TrainState, Version};
+pub use tensor::{Dtype, HostTensor};

@@ -1,0 +1,256 @@
+//! Versioned parameter sets and training state — the runtime-side analogue
+//! of the paper's parameter server + "distributed storage" for weights.
+//!
+//! A `ParamSet` is the flat list of parameter literals (manifest order) plus
+//! the policy version that produced it. `TrainState` adds the AdamW moments
+//! and step counter. Checkpoints use a simple self-describing binary format
+//! (no serde offline).
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::TierSpec;
+use super::executor::{Engine, SendLiteral};
+use super::tensor::HostTensor;
+
+/// Policy version: the number of completed PPO updates that produced these
+/// weights (the `i` of the paper's Eq. 3 staleness constraint).
+pub type Version = u64;
+
+/// Immutable, shareable parameter set.
+pub struct ParamSet {
+    pub version: Version,
+    pub tensors: Vec<SendLiteral>,
+}
+
+impl ParamSet {
+    /// Initialize from the `init` artifact with the given seed.
+    pub fn init(engine: &Engine, seed: [u32; 2]) -> Result<Arc<ParamSet>> {
+        let seed = HostTensor::u32(vec![2], vec![seed[0], seed[1]]).to_literal()?;
+        let tensors = engine.run("init", &[&seed])?;
+        Ok(Arc::new(ParamSet { version: 0, tensors }))
+    }
+
+    pub fn with_version(tensors: Vec<SendLiteral>, version: Version) -> Arc<ParamSet> {
+        Arc::new(ParamSet { version, tensors })
+    }
+
+    pub fn n(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// Borrow all tensors in order (for building execute input lists).
+    pub fn refs(&self) -> Vec<&xla::Literal> {
+        self.tensors.iter().map(|t| t.lit()).collect()
+    }
+
+    /// Total parameter count (elements).
+    pub fn element_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.lit().element_count()).sum()
+    }
+}
+
+impl std::fmt::Debug for ParamSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ParamSet(v{}, {} tensors)", self.version, self.n())
+    }
+}
+
+/// Full optimizer state held by the trainer worker.
+pub struct TrainState {
+    pub params: Arc<ParamSet>,
+    pub m: Vec<SendLiteral>,
+    pub v: Vec<SendLiteral>,
+    pub step: i32,
+}
+
+impl TrainState {
+    /// Fresh state: zero moments, step 0.
+    pub fn fresh(spec: &TierSpec, params: Arc<ParamSet>) -> Result<TrainState> {
+        let mut m = Vec::with_capacity(spec.n_params());
+        let mut v = Vec::with_capacity(spec.n_params());
+        for (_, shape) in &spec.params {
+            m.push(HostTensor::zeros_f32(shape.clone()).to_literal()?.into());
+            v.push(HostTensor::zeros_f32(shape.clone()).to_literal()?.into());
+        }
+        Ok(TrainState { params, m, v, step: 0 })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint format: "ARLCKPT2" | u32 n | per tensor: u32 name_len, name,
+// u32 ndims, u64 dims..., f32 data...   (params, then m, then v) | i64 step
+// | u64 version
+
+const MAGIC: &[u8; 8] = b"ARLCKPT2";
+
+fn write_tensor<W: Write>(w: &mut W, name: &str, lit: &xla::Literal) -> Result<()> {
+    let t = HostTensor::from_literal(lit)?;
+    let data = t.as_f32().context("checkpointing non-f32 tensor")?;
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name.as_bytes())?;
+    let shape = t.shape();
+    w.write_all(&(shape.len() as u32).to_le_bytes())?;
+    for &d in shape {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    for &x in data {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_tensor<R: Read>(r: &mut R) -> Result<(String, HostTensor)> {
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b4)?;
+    let name_len = u32::from_le_bytes(b4) as usize;
+    if name_len > 4096 {
+        bail!("corrupt checkpoint: name length {name_len}");
+    }
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let name = String::from_utf8(name).context("checkpoint name not utf-8")?;
+    r.read_exact(&mut b4)?;
+    let ndims = u32::from_le_bytes(b4) as usize;
+    if ndims > 16 {
+        bail!("corrupt checkpoint: ndims {ndims}");
+    }
+    let mut shape = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        r.read_exact(&mut b8)?;
+        shape.push(u64::from_le_bytes(b8) as usize);
+    }
+    let n: usize = shape.iter().product();
+    let mut data = vec![0f32; n];
+    for x in data.iter_mut() {
+        r.read_exact(&mut b4)?;
+        *x = f32::from_le_bytes(b4);
+    }
+    Ok((name, HostTensor::f32(shape, data)))
+}
+
+/// Save trainer state (params + moments + step + version).
+pub fn save_checkpoint(path: &Path, spec: &TierSpec, state: &TrainState) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    let n = spec.n_params() as u32;
+    w.write_all(&(3 * n).to_le_bytes())?;
+    for (group, tensors) in [
+        ("params", &state.params.tensors),
+        ("adam_m", &state.m),
+        ("adam_v", &state.v),
+    ] {
+        for ((name, _), lit) in spec.params.iter().zip(tensors.iter()) {
+            write_tensor(&mut w, &format!("{group}.{name}"), lit.lit())?;
+        }
+    }
+    w.write_all(&(state.step as i64).to_le_bytes())?;
+    w.write_all(&state.params.version.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load trainer state; validates names and shapes against the tier spec.
+pub fn load_checkpoint(path: &Path, spec: &TierSpec) -> Result<TrainState> {
+    let mut r = BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not an AReaL checkpoint");
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let total = u32::from_le_bytes(b4) as usize;
+    if total != 3 * spec.n_params() {
+        bail!(
+            "checkpoint has {total} tensors, tier {} expects {}",
+            spec.config.name,
+            3 * spec.n_params()
+        );
+    }
+    let mut groups: Vec<Vec<SendLiteral>> = vec![Vec::new(), Vec::new(), Vec::new()];
+    for g in 0..3 {
+        let prefix = ["params", "adam_m", "adam_v"][g];
+        for (name, shape) in &spec.params {
+            let (got_name, t) = read_tensor(&mut r)?;
+            if got_name != format!("{prefix}.{name}") {
+                bail!("checkpoint tensor order mismatch: {got_name}");
+            }
+            if t.shape() != shape.as_slice() {
+                bail!("checkpoint shape mismatch for {got_name}");
+            }
+            groups[g].push(t.to_literal()?.into());
+        }
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let step = i64::from_le_bytes(b8) as i32;
+    r.read_exact(&mut b8)?;
+    let version = u64::from_le_bytes(b8);
+    let mut it = groups.into_iter();
+    let params = ParamSet::with_version(it.next().unwrap(), version);
+    Ok(TrainState { params, m: it.next().unwrap(), v: it.next().unwrap(), step })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use std::path::PathBuf;
+
+    fn spec_and_engine() -> (TierSpec, Engine) {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let m = Manifest::load(&dir).expect("run `make artifacts` first");
+        let spec = m.tier("nano").unwrap().clone();
+        let engine = Engine::load_subset(&spec, Some(&["init"])).unwrap();
+        (spec, engine)
+    }
+
+    #[test]
+    fn init_and_fresh_state() {
+        let (spec, engine) = spec_and_engine();
+        let params = ParamSet::init(&engine, [1, 2]).unwrap();
+        assert_eq!(params.n(), spec.n_params());
+        assert_eq!(params.version, 0);
+        let state = TrainState::fresh(&spec, params).unwrap();
+        assert_eq!(state.step, 0);
+        assert_eq!(state.m.len(), spec.n_params());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let (spec, engine) = spec_and_engine();
+        let params = ParamSet::init(&engine, [3, 4]).unwrap();
+        let mut state = TrainState::fresh(&spec, params).unwrap();
+        state.step = 42;
+        let dir = std::env::temp_dir().join("areal_ckpt_test");
+        let path = dir.join("test.ckpt");
+        save_checkpoint(&path, &spec, &state).unwrap();
+        let loaded = load_checkpoint(&path, &spec).unwrap();
+        assert_eq!(loaded.step, 42);
+        assert_eq!(loaded.params.n(), spec.n_params());
+        // bit-exact roundtrip of the first tensor
+        let a = HostTensor::from_literal(state.params.tensors[0].lit()).unwrap();
+        let b = HostTensor::from_literal(loaded.params.tensors[0].lit()).unwrap();
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let (spec, _) = spec_and_engine();
+        let dir = std::env::temp_dir().join("areal_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_checkpoint(&path, &spec).is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Host-side tensors and Literal conversion helpers.
+//!
+//! Only the dtypes the AOT artifacts actually exchange are supported:
+//! f32, s32, u32 on the host; f16 stays opaque (device/Literal-only — the
+//! fp16 KV cache is shuttled but never interpreted host-side).
+
+use anyhow::{bail, Context, Result};
+use xla::{ArrayShape, ElementType, Literal, Shape};
+
+/// Dtype of an artifact argument, as named in manifest.json.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn from_manifest(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "f16" => Dtype::F16,
+            "s32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unsupported manifest dtype: {other}"),
+        })
+    }
+
+    pub fn element_type(self) -> ElementType {
+        match self {
+            Dtype::F32 => ElementType::F32,
+            Dtype::F16 => ElementType::F16,
+            Dtype::I32 => ElementType::S32,
+            Dtype::U32 => ElementType::U32,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            Dtype::F16 => 2,
+            _ => 4,
+        }
+    }
+}
+
+/// A host tensor (row-major).
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U32 { shape: Vec<usize>, data: Vec<u32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn u32(shape: Vec<usize>, data: Vec<u32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::U32 { shape, data }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn scalar_i32(x: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![x] }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. }
+            | HostTensor::I32 { shape, .. }
+            | HostTensor::U32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+            HostTensor::U32 { .. } => Dtype::U32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            other => bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Convert to an xla Literal.
+    pub fn to_literal(&self) -> Result<Literal> {
+        fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+            unsafe {
+                std::slice::from_raw_parts(
+                    v.as_ptr() as *const u8,
+                    std::mem::size_of_val(v),
+                )
+            }
+        }
+        let (ty, dims, bytes): (ElementType, &[usize], &[u8]) = match self {
+            HostTensor::F32 { shape, data } => (ElementType::F32, shape, bytes_of(data)),
+            HostTensor::I32 { shape, data } => (ElementType::S32, shape, bytes_of(data)),
+            HostTensor::U32 { shape, data } => (ElementType::U32, shape, bytes_of(data)),
+        };
+        Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+            .context("create literal from host tensor")
+    }
+
+    /// Convert from an xla Literal (f16 literals are upcast to f32).
+    pub fn from_literal(lit: &Literal) -> Result<Self> {
+        let ashape = lit.array_shape().context("literal is not an array")?;
+        let shape: Vec<usize> = ashape.dims().iter().map(|&d| d as usize).collect();
+        match ashape.ty() {
+            ElementType::F32 => Ok(HostTensor::F32 { shape, data: lit.to_vec::<f32>()? }),
+            ElementType::S32 => Ok(HostTensor::I32 { shape, data: lit.to_vec::<i32>()? }),
+            ElementType::U32 => Ok(HostTensor::U32 { shape, data: lit.to_vec::<u32>()? }),
+            ElementType::F16 => {
+                let up = lit.convert(ElementType::F32.primitive_type())?;
+                Ok(HostTensor::F32 { shape, data: up.to_vec::<f32>()? })
+            }
+            other => bail!("unsupported literal dtype {other:?}"),
+        }
+    }
+}
+
+/// Check a literal against an expected (dtype, shape) signature.
+pub fn check_literal(lit: &Literal, dtype: Dtype, shape: &[usize], what: &str)
+    -> Result<()> {
+    let ashape: ArrayShape = lit
+        .array_shape()
+        .with_context(|| format!("{what}: literal is not an array"))?;
+    let got: Vec<usize> = ashape.dims().iter().map(|&d| d as usize).collect();
+    if got != shape {
+        bail!("{what}: shape mismatch, got {got:?}, want {shape:?}");
+    }
+    if ashape.ty() != dtype.element_type() {
+        bail!("{what}: dtype mismatch, got {:?}, want {:?}", ashape.ty(), dtype);
+    }
+    Ok(())
+}
+
+/// Shape of a literal as usize dims (arrays only).
+pub fn literal_dims(lit: &Literal) -> Result<Vec<usize>> {
+    Ok(lit.array_shape()?.dims().iter().map(|&d| d as usize).collect())
+}
+
+/// Is this shape an array (not tuple)?
+pub fn is_array(shape: &Shape) -> bool {
+    !shape.is_tuple()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::f32(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = HostTensor::i32(vec![4], vec![-1, 0, 7, 42]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[-1, 0, 7, 42]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[] as &[usize]);
+        assert_eq!(back.as_f32().unwrap(), &[3.5]);
+    }
+
+    #[test]
+    fn check_literal_validates() {
+        let t = HostTensor::f32(vec![2, 2], vec![0.0; 4]);
+        let lit = t.to_literal().unwrap();
+        assert!(check_literal(&lit, Dtype::F32, &[2, 2], "x").is_ok());
+        assert!(check_literal(&lit, Dtype::F32, &[4], "x").is_err());
+        assert!(check_literal(&lit, Dtype::I32, &[2, 2], "x").is_err());
+    }
+
+    #[test]
+    fn dtype_from_manifest() {
+        assert_eq!(Dtype::from_manifest("f16").unwrap(), Dtype::F16);
+        assert_eq!(Dtype::from_manifest("s32").unwrap(), Dtype::I32);
+        assert!(Dtype::from_manifest("c64").is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Discrete-event cluster simulator — the substitute (DESIGN.md §3) for the
+//! paper's 64-node H800 testbed: roofline cost models for the real model
+//! sizes (1.5B..32B), heavy-tailed output-length workloads, and the three
+//! scheduling policies (synchronous, one-step overlap, fully-async AReaL
+//! with staleness control and interruptible generation).
+//!
+//! Used by the Fig 1/3/4/6b and Table 1 experiment drivers; the in-process
+//! real system (crate::coordinator) covers everything that fits on the
+//! 1-core CPU testbed.
+
+pub mod profile;
+pub mod run;
+pub mod timeline;
+pub mod workload;
+
+pub use profile::{HardwareProfile, ModelProfile, H800};
+pub use run::{run_async, run_overlap, run_policy, run_sync, SimConfig, SimReport};
+pub use workload::LenSampler;

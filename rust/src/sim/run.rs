@@ -1,0 +1,642 @@
+//! Policy simulators: synchronous, one-step overlap, and fully-async AReaL
+//! scheduling over the profile.rs cost models. Used to reproduce the
+//! at-scale experiments (Fig 1/3/4/6b, Table 1 hour shapes) that need the
+//! paper's 64-node H800 cluster.
+
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+use super::profile::{
+    decode_round_s, max_slots, prefill_s, reshard_s, train_step_s,
+    weight_broadcast_s, HardwareProfile, ModelProfile,
+};
+use super::workload::LenSampler;
+
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub model: ModelProfile,
+    pub hw: HardwareProfile,
+    pub n_gpus: usize,
+    /// generation fraction of the async split (paper: 0.75)
+    pub gen_fraction: f64,
+    /// total context (prompt + generation)
+    pub ctx: f64,
+    pub prompt_len: f64,
+    /// global batch in sequences per PPO step
+    pub batch_seqs: usize,
+    pub n_steps: usize,
+    /// max staleness η (async only; None = unbounded)
+    pub eta: Option<u64>,
+    pub interruptible: bool,
+    /// decoding slots per generation device (capped by KV memory)
+    pub slot_cap: usize,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn paper_default(model: ModelProfile, n_gpus: usize, ctx: f64) -> Self {
+        SimConfig {
+            model,
+            hw: super::profile::H800,
+            n_gpus,
+            gen_fraction: 0.75,
+            ctx,
+            prompt_len: 1024.0,
+            // paper: 512 prompts × 16 answers; scale with cluster size so
+            // per-device work stays constant in the strong-scaling sweep
+            batch_seqs: 512 * 16 * n_gpus / 512,
+            n_steps: 8,
+            eta: Some(4),
+            interruptible: true,
+            slot_cap: 256,
+            seed: 1,
+        }
+    }
+}
+
+/// Timeline interval for Fig 1/3 rendering.
+#[derive(Debug, Clone)]
+pub struct Interval {
+    pub device: String,
+    pub start: f64,
+    pub end: f64,
+    pub kind: &'static str, // "gen" | "train" | "reshard" | "interrupt"
+}
+
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub policy: &'static str,
+    pub total_s: f64,
+    pub steps: usize,
+    pub tokens_trained: f64,
+    /// paper Fig. 4 metric
+    pub effective_tps: f64,
+    pub gen_tokens: f64,
+    /// mean busy fraction of generation(-phase) devices
+    pub gen_util: f64,
+    pub interrupts: u64,
+    pub mean_staleness: f64,
+    pub max_staleness: u64,
+    pub timeline: Vec<Interval>,
+}
+
+const TIMELINE_DEVICES: usize = 4;
+const TIMELINE_STEPS: usize = 3;
+
+// ---------------------------------------------------------------------------
+// synchronous (verl-like): all devices generate, reshard, train, reshard
+
+/// Decode a fixed batch of output lengths in lockstep on one device;
+/// returns (busy seconds, per-device generated tokens).
+fn lockstep_decode(hw: &HardwareProfile, m: &ModelProfile, lens: &[f64],
+                   prompt: f64) -> (f64, f64) {
+    if lens.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut sorted = lens.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut t = prefill_s(hw, m, prompt * lens.len() as f64);
+    let mut prev = 0.0;
+    let mut active = sorted.len();
+    let mut tokens = 0.0;
+    for &l in &sorted {
+        if l > prev {
+            let ctx = prompt + (prev + l) / 2.0;
+            t += (l - prev) * decode_round_s(hw, m, active, ctx);
+            tokens += (l - prev) * active as f64;
+            prev = l;
+        }
+        active -= 1;
+    }
+    (t, tokens)
+}
+
+pub fn run_sync(cfg: &SimConfig) -> SimReport {
+    let mut rng = Rng::new(cfg.seed);
+    let sampler = LenSampler::for_context(cfg.ctx);
+    // tp GPUs form one logical serving device
+    let n = (cfg.n_gpus / cfg.model.tp).max(1);
+    let mut total = 0.0;
+    let mut tokens_trained = 0.0;
+    let mut gen_tokens = 0.0;
+    let mut busy = 0.0;
+    let mut timeline = Vec::new();
+    for step in 0..cfg.n_steps {
+        let lens = sampler.sample_n(&mut rng, cfg.batch_seqs);
+        // round-robin assignment
+        let mut dev_busy = vec![0.0; n];
+        let mut dev_tokens = vec![0.0; n];
+        for (d, chunk) in lens.chunks(cfg.batch_seqs.div_ceil(n)).enumerate() {
+            let (t, tok) = lockstep_decode(&cfg.hw, &cfg.model, chunk, cfg.prompt_len);
+            dev_busy[d] = t;
+            dev_tokens[d] = tok;
+        }
+        let gen_time = dev_busy.iter().cloned().fold(0.0, f64::max);
+        let step_tokens: f64 = lens.iter().sum();
+        let train = train_step_s(&cfg.hw, &cfg.model, step_tokens, n);
+        let reshard = reshard_s(&cfg.hw, &cfg.model);
+        if step < TIMELINE_STEPS {
+            for d in 0..TIMELINE_DEVICES.min(n) {
+                timeline.push(Interval {
+                    device: format!("gpu{d}"),
+                    start: total,
+                    end: total + dev_busy[d],
+                    kind: "gen",
+                });
+                timeline.push(Interval {
+                    device: format!("gpu{d}"),
+                    start: total + gen_time + reshard,
+                    end: total + gen_time + reshard + train,
+                    kind: "train",
+                });
+            }
+        }
+        total += gen_time + 2.0 * reshard + train;
+        busy += dev_busy.iter().sum::<f64>();
+        tokens_trained += step_tokens;
+        gen_tokens += dev_tokens.iter().sum::<f64>();
+    }
+    SimReport {
+        policy: "sync",
+        total_s: total,
+        steps: cfg.n_steps,
+        tokens_trained,
+        effective_tps: tokens_trained / total,
+        gen_tokens,
+        gen_util: busy / (n as f64 * total),
+        interrupts: 0,
+        mean_staleness: 0.0,
+        max_staleness: 0,
+        timeline,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// one-step overlap: split cluster, batch i+1 generated (whole, with the
+// previous weights) while batch i trains — staleness fixed at 1
+
+pub fn run_overlap(cfg: &SimConfig) -> SimReport {
+    let mut rng = Rng::new(cfg.seed);
+    let sampler = LenSampler::for_context(cfg.ctx);
+    let n_gen_gpus = ((cfg.n_gpus as f64) * cfg.gen_fraction).round().max(1.0) as usize;
+    let n_train = (cfg.n_gpus - n_gen_gpus).max(1);
+    let n_gen = (n_gen_gpus / cfg.model.tp).max(1);
+    let mut total = 0.0;
+    let mut tokens_trained = 0.0;
+    let mut gen_tokens = 0.0;
+    let mut gen_busy = 0.0;
+    let mut timeline = Vec::new();
+    for step in 0..cfg.n_steps {
+        let lens = sampler.sample_n(&mut rng, cfg.batch_seqs);
+        let mut dev_busy = vec![0.0; n_gen];
+        for (d, chunk) in lens.chunks(cfg.batch_seqs.div_ceil(n_gen)).enumerate() {
+            let (t, _tok) = lockstep_decode(&cfg.hw, &cfg.model, chunk, cfg.prompt_len);
+            dev_busy[d] = t;
+        }
+        let gen_time = dev_busy.iter().cloned().fold(0.0, f64::max);
+        let step_tokens: f64 = lens.iter().sum();
+        let train = train_step_s(&cfg.hw, &cfg.model, step_tokens, n_train)
+            + weight_broadcast_s(&cfg.hw, &cfg.model, n_gen);
+        // pipelined: limited by the slower stage
+        let step_time = gen_time.max(train);
+        if step < TIMELINE_STEPS {
+            for d in 0..TIMELINE_DEVICES.min(n_gen) {
+                timeline.push(Interval {
+                    device: format!("gen{d}"),
+                    start: total,
+                    end: total + dev_busy[d],
+                    kind: "gen",
+                });
+            }
+            timeline.push(Interval {
+                device: "trainer".into(),
+                start: total,
+                end: total + train,
+                kind: "train",
+            });
+        }
+        total += step_time;
+        gen_busy += dev_busy.iter().sum::<f64>();
+        tokens_trained += step_tokens;
+        gen_tokens += step_tokens;
+    }
+    SimReport {
+        policy: "overlap",
+        total_s: total,
+        steps: cfg.n_steps,
+        tokens_trained,
+        effective_tps: tokens_trained / total,
+        gen_tokens,
+        gen_util: gen_busy / (n_gen as f64 * total),
+        interrupts: 0,
+        mean_staleness: 1.0,
+        max_staleness: 1,
+        timeline,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fully-async AReaL: event-driven over gen devices + trainer
+
+#[derive(Debug, Clone)]
+struct SimSeq {
+    remaining: f64,
+    produced: f64,
+    born_version: u64,
+}
+
+struct GenDevice {
+    slots: Vec<SimSeq>,
+    /// decode paused until (prefill / interrupt recompute)
+    resume_at: f64,
+    busy_s: f64,
+    pending_weights: bool,
+}
+
+impl GenDevice {
+    fn next_completion(&self, hw: &HardwareProfile, m: &ModelProfile, now: f64,
+                       prompt: f64) -> Option<f64> {
+        if self.slots.is_empty() {
+            return None;
+        }
+        let min_rem = self
+            .slots
+            .iter()
+            .map(|s| s.remaining)
+            .fold(f64::INFINITY, f64::min);
+        let mean_ctx = prompt
+            + stats::mean(&self.slots.iter().map(|s| s.produced).collect::<Vec<_>>())
+            + min_rem / 2.0;
+        let rho = decode_round_s(hw, m, self.slots.len(), mean_ctx);
+        Some(now.max(self.resume_at) + min_rem * rho)
+    }
+
+    /// Advance decoding to `t`, producing tokens; returns completed seqs.
+    fn advance_to(&mut self, hw: &HardwareProfile, m: &ModelProfile, now: f64,
+                  t: f64, prompt: f64) -> Vec<SimSeq> {
+        let mut done = Vec::new();
+        if self.slots.is_empty() {
+            return done;
+        }
+        let start = now.max(self.resume_at);
+        if t <= start {
+            return done;
+        }
+        let mean_ctx = prompt
+            + stats::mean(&self.slots.iter().map(|s| s.produced).collect::<Vec<_>>());
+        let rho = decode_round_s(hw, m, self.slots.len(), mean_ctx);
+        let rounds = (t - start) / rho;
+        self.busy_s += t - start;
+        let mut i = 0;
+        while i < self.slots.len() {
+            let s = &mut self.slots[i];
+            s.produced += rounds.min(s.remaining);
+            s.remaining -= rounds.min(s.remaining);
+            if s.remaining <= 1e-9 {
+                done.push(self.slots.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+}
+
+pub fn run_async(cfg: &SimConfig) -> SimReport {
+    let mut rng = Rng::new(cfg.seed);
+    let sampler = LenSampler::for_context(cfg.ctx);
+    let hw = &cfg.hw;
+    let m = &cfg.model;
+    let n_gen_gpus = ((cfg.n_gpus as f64) * cfg.gen_fraction).round().max(1.0) as usize;
+    let n_train = (cfg.n_gpus - n_gen_gpus).max(1);
+    // tp GPUs form one logical generation device (weights sharded)
+    let n_gen = (n_gen_gpus / m.tp).max(1);
+    let slots_per_dev = cfg.slot_cap.min(max_slots(hw, m, cfg.ctx)).max(1);
+
+    let b = cfg.batch_seqs as u64;
+    let mut submitted: u64 = 0;
+    let mut version: u64 = 0;
+    let admits = |submitted: u64, version: u64| -> bool {
+        match cfg.eta {
+            None => true,
+            Some(eta) => submitted / b <= version + eta,
+        }
+    };
+
+    let mut devices: Vec<GenDevice> = (0..n_gen)
+        .map(|_| GenDevice {
+            slots: Vec::with_capacity(slots_per_dev),
+            resume_at: 0.0,
+            busy_s: 0.0,
+            pending_weights: false,
+        })
+        .collect();
+
+    // buffer of finished sequences: (len, born_version)
+    let mut buffer: Vec<(f64, u64)> = Vec::new();
+    let mut trainer_busy_until: Option<f64> = None;
+    let mut steps_done = 0usize;
+    let mut now = 0.0;
+    let mut tokens_trained = 0.0;
+    let mut gen_tokens = 0.0;
+    let mut interrupts = 0u64;
+    let mut staleness_samples: Vec<f64> = Vec::new();
+    let mut max_stale = 0u64;
+    let mut timeline = Vec::new();
+
+    // helper: refill a device's empty slots subject to the gate
+    let refill = |dev: &mut GenDevice, rng: &mut Rng, submitted: &mut u64,
+                  version: u64, now: f64, sampler: &LenSampler,
+                  hw: &HardwareProfile, m: &ModelProfile, prompt: f64,
+                  slots_per_dev: usize| {
+        let mut filled = 0;
+        while dev.slots.len() < slots_per_dev && admits(*submitted, version) {
+            *submitted += 1;
+            dev.slots.push(SimSeq {
+                remaining: sampler.sample(rng),
+                produced: 0.0,
+                born_version: version,
+            });
+            filled += 1;
+        }
+        if filled > 0 {
+            // prefill cost for the new prompts
+            let t = prefill_s(hw, m, prompt * filled as f64);
+            dev.resume_at = dev.resume_at.max(now) + t;
+        }
+    };
+
+    // initial fill
+    for dev in devices.iter_mut() {
+        refill(dev, &mut rng, &mut submitted, version, now, &sampler, hw, m,
+               cfg.prompt_len, slots_per_dev);
+    }
+
+    let max_iters = cfg.n_steps * cfg.batch_seqs * 4 + 10_000;
+    let mut iters = 0;
+    while steps_done < cfg.n_steps {
+        iters += 1;
+        if iters > max_iters {
+            panic!("async sim failed to converge (gate deadlock?)");
+        }
+        // start training if possible
+        if trainer_busy_until.is_none() && buffer.len() >= cfg.batch_seqs {
+            // oldest-first
+            buffer.sort_by_key(|&(_, v)| v);
+            let batch: Vec<(f64, u64)> = buffer.drain(..cfg.batch_seqs).collect();
+            let toks: f64 = batch.iter().map(|&(l, _)| l).sum();
+            for &(_, born) in &batch {
+                let s = version.saturating_sub(born);
+                staleness_samples.push(s as f64);
+                max_stale = max_stale.max(s);
+            }
+            let dur = train_step_s(hw, m, toks, n_train)
+                + weight_broadcast_s(hw, m, n_gen);
+            trainer_busy_until = Some(now + dur);
+            tokens_trained += toks;
+            if steps_done < TIMELINE_STEPS {
+                timeline.push(Interval {
+                    device: "trainer".into(),
+                    start: now,
+                    end: now + dur,
+                    kind: "train",
+                });
+            }
+        }
+
+        // next event
+        let mut t_next = f64::INFINITY;
+        for dev in devices.iter() {
+            if let Some(t) = dev.next_completion(hw, m, now, cfg.prompt_len) {
+                t_next = t_next.min(t);
+            }
+        }
+        if let Some(t) = trainer_busy_until {
+            t_next = t_next.min(t);
+        }
+        if !t_next.is_finite() {
+            // all devices empty and trainer idle: gate blocked without a
+            // pending version bump => starvation (η too small relative to
+            // inflight capacity). Advance by letting trainer wait... this
+            // state can only be escaped if buffer has data (handled above),
+            // so it is a genuine deadlock.
+            panic!(
+                "async sim starved: no device active, trainer idle \
+                 (buffer {} / batch {})",
+                buffer.len(),
+                cfg.batch_seqs
+            );
+        }
+
+        // advance all devices to t_next
+        for dev in devices.iter_mut() {
+            for done in dev.advance_to(hw, m, now, t_next, cfg.prompt_len) {
+                gen_tokens += done.produced;
+                buffer.push((done.produced, done.born_version));
+            }
+        }
+        now = t_next;
+
+        // trainer completion => new version => weight update
+        if trainer_busy_until.is_some_and(|t| t <= now + 1e-12) {
+            trainer_busy_until = None;
+            version += 1;
+            steps_done += 1;
+            for (d, dev) in devices.iter_mut().enumerate() {
+                if cfg.interruptible {
+                    if !dev.slots.is_empty() {
+                        interrupts += 1;
+                        // KV recompute of the committed context of every
+                        // in-flight sequence (the paper's interrupt cost)
+                        let committed: f64 = dev
+                            .slots
+                            .iter()
+                            .map(|s| cfg.prompt_len + s.produced)
+                            .sum();
+                        let t = prefill_s(hw, m, committed);
+                        dev.resume_at = dev.resume_at.max(now) + t;
+                        if steps_done <= TIMELINE_STEPS && d < TIMELINE_DEVICES {
+                            timeline.push(Interval {
+                                device: format!("gen{d}"),
+                                start: now,
+                                end: now + t,
+                                kind: "interrupt",
+                            });
+                        }
+                    }
+                } else {
+                    // non-interruptible: stop refilling; weights apply once
+                    // the device drains (SGLang-style update_weights)
+                    dev.pending_weights = true;
+                }
+            }
+        }
+
+        // refills
+        for dev in devices.iter_mut() {
+            if dev.pending_weights {
+                if dev.slots.is_empty() {
+                    dev.pending_weights = false; // weights applied
+                } else {
+                    continue; // draining
+                }
+            }
+            if dev.slots.len() < slots_per_dev {
+                refill(dev, &mut rng, &mut submitted, version, now, &sampler,
+                       hw, m, cfg.prompt_len, slots_per_dev);
+            }
+        }
+    }
+
+    let busy: f64 = devices.iter().map(|d| d.busy_s).sum();
+    SimReport {
+        policy: "async",
+        total_s: now,
+        steps: steps_done,
+        tokens_trained,
+        effective_tps: tokens_trained / now,
+        gen_tokens,
+        gen_util: busy / (n_gen as f64 * now),
+        interrupts,
+        mean_staleness: stats::mean(&staleness_samples),
+        max_staleness: max_stale,
+        timeline,
+    }
+}
+
+/// Run the policy named by `mode` ("sync" | "overlap" | "async").
+pub fn run_policy(mode: &str, cfg: &SimConfig) -> SimReport {
+    match mode {
+        "sync" => run_sync(cfg),
+        "overlap" => run_overlap(cfg),
+        "async" => run_async(cfg),
+        other => panic!("unknown sim policy {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profile::{MODEL_1_5B, MODEL_7B};
+
+    fn small_cfg(model: crate::sim::profile::ModelProfile) -> SimConfig {
+        // steady-state regime: enough steps that the initial inflight surge
+        // (the pre-gate warmup the paper also excludes) washes out
+        let mut c = SimConfig::paper_default(model, 64, 16384.0);
+        c.n_steps = 12;
+        c
+    }
+
+    #[test]
+    fn async_beats_sync_throughput() {
+        let cfg = small_cfg(MODEL_1_5B);
+        let sync = run_sync(&cfg);
+        let asy = run_async(&cfg);
+        assert!(
+            asy.effective_tps > 1.3 * sync.effective_tps,
+            "async {} vs sync {}",
+            asy.effective_tps,
+            sync.effective_tps
+        );
+    }
+
+    #[test]
+    fn async_beats_overlap() {
+        let cfg = small_cfg(MODEL_7B);
+        let ovl = run_overlap(&cfg);
+        let asy = run_async(&cfg);
+        assert!(asy.effective_tps > ovl.effective_tps,
+                "async {} vs overlap {}", asy.effective_tps, ovl.effective_tps);
+    }
+
+    #[test]
+    fn eta_zero_is_fully_on_policy() {
+        // η=0 degenerates to synchronous RL (paper §5.1): every consumed
+        // sample was generated by the current policy version
+        let mut cfg = small_cfg(MODEL_1_5B);
+        cfg.eta = Some(0);
+        cfg.n_steps = 4;
+        let r = run_async(&cfg);
+        assert_eq!(r.max_staleness, 0);
+        assert_eq!(r.mean_staleness, 0.0);
+    }
+
+    #[test]
+    fn staleness_grows_with_eta() {
+        // Eq. 3 gates *submission* lag; consumption staleness of stragglers
+        // can exceed η (the paper mitigates via oldest-first priority), but
+        // it must grow with η and η=1 must stay close to 1 on average
+        let mut cfg = small_cfg(MODEL_1_5B);
+        cfg.eta = Some(1);
+        let tight = run_async(&cfg);
+        cfg.eta = Some(16);
+        let loose = run_async(&cfg);
+        assert!(tight.mean_staleness < loose.mean_staleness,
+                "{} vs {}", tight.mean_staleness, loose.mean_staleness);
+        assert!(tight.mean_staleness <= 2.0, "{}", tight.mean_staleness);
+    }
+
+    #[test]
+    fn throughput_grows_with_eta_then_saturates() {
+        // the Fig-5c / Table-7 shape: η=0 is slow, moderate η much faster,
+        // large η adds little more
+        let mut cfg = small_cfg(MODEL_1_5B);
+        cfg.n_steps = 8;
+        cfg.eta = Some(0);
+        let e0 = run_async(&cfg).effective_tps;
+        cfg.eta = Some(4);
+        let e4 = run_async(&cfg).effective_tps;
+        cfg.eta = Some(16);
+        let e16 = run_async(&cfg).effective_tps;
+        assert!(e4 > 1.2 * e0, "eta=4 {e4} should beat eta=0 {e0}");
+        assert!(e16 < 1.5 * e4, "eta=16 {e16} should saturate vs eta=4 {e4}");
+    }
+
+    #[test]
+    fn sync_devices_idle_on_stragglers() {
+        // Fig 1: synchronous generation leaves straggler bubbles — devices
+        // that finish early wait for the longest output in the batch
+        let cfg = small_cfg(MODEL_1_5B);
+        let sync = run_sync(&cfg);
+        assert!(
+            sync.gen_util < 0.85,
+            "sync gen util {} should show idle bubbles",
+            sync.gen_util
+        );
+    }
+
+    #[test]
+    fn interruptible_beats_draining() {
+        // Fig 6b regime: 4 nodes, generation throughput (the paper's
+        // metric) — draining for weight sync starves the decode batch
+        let mut cfg = SimConfig::paper_default(MODEL_7B, 32, 16384.0);
+        cfg.n_steps = 10;
+        let with = run_async(&cfg);
+        cfg.interruptible = false;
+        let without = run_async(&cfg);
+        let gen_with = with.gen_tokens / with.total_s;
+        let gen_without = without.gen_tokens / without.total_s;
+        assert!(
+            gen_with > gen_without,
+            "interruptible gen tps {gen_with} vs drain {gen_without}"
+        );
+        assert!(with.interrupts > 0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = small_cfg(MODEL_1_5B);
+        let a = run_async(&cfg);
+        let b = run_async(&cfg);
+        assert_eq!(a.total_s, b.total_s);
+        assert_eq!(a.tokens_trained, b.tokens_trained);
+    }
+
+    #[test]
+    fn conservation_tokens_trained_le_generated() {
+        let cfg = small_cfg(MODEL_1_5B);
+        let r = run_async(&cfg);
+        assert!(r.tokens_trained <= r.gen_tokens + 1e-6);
+        assert_eq!(r.steps, cfg.n_steps);
+    }
+}

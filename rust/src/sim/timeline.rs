@@ -1,0 +1,91 @@
+//! ASCII timeline rendering for Fig-1 / Fig-3 style output.
+
+use super::run::Interval;
+
+/// Render intervals as an ASCII gantt chart, one row per device.
+/// `width` = characters for the time axis.
+pub fn render(intervals: &[Interval], width: usize) -> String {
+    if intervals.is_empty() {
+        return String::from("(no timeline events)\n");
+    }
+    let t_end = intervals.iter().map(|i| i.end).fold(0.0, f64::max);
+    let t_start = intervals.iter().map(|i| i.start).fold(f64::INFINITY, f64::min);
+    let span = (t_end - t_start).max(1e-9);
+    let mut devices: Vec<String> = Vec::new();
+    for i in intervals {
+        if !devices.contains(&i.device) {
+            devices.push(i.device.clone());
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "timeline: {:.1}s — {:.1}s  (█ gen, ▓ train, ▒ reshard, ✕ interrupt)\n",
+        t_start, t_end
+    ));
+    for dev in &devices {
+        let mut row = vec![' '; width];
+        for i in intervals.iter().filter(|i| &i.device == dev) {
+            let a = (((i.start - t_start) / span) * width as f64) as usize;
+            let b = ((((i.end - t_start) / span) * width as f64) as usize).min(width);
+            let ch = match i.kind {
+                "gen" => '█',
+                "train" => '▓',
+                "reshard" => '▒',
+                "interrupt" => '✕',
+                _ => '?',
+            };
+            for c in row.iter_mut().take(b.max(a + 1).min(width)).skip(a) {
+                *c = ch;
+            }
+        }
+        out.push_str(&format!("{dev:>8} |{}|\n", row.iter().collect::<String>()));
+    }
+    out
+}
+
+/// CSV dump of intervals.
+pub fn to_csv(intervals: &[Interval]) -> String {
+    let mut out = String::from("device,start,end,kind\n");
+    for i in intervals {
+        out.push_str(&format!("{},{:.6},{:.6},{}\n", i.device, i.start, i.end, i.kind));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(device: &str, start: f64, end: f64, kind: &'static str) -> Interval {
+        Interval { device: device.into(), start, end, kind }
+    }
+
+    #[test]
+    fn renders_rows_per_device() {
+        let ivs = vec![
+            iv("gpu0", 0.0, 5.0, "gen"),
+            iv("gpu1", 0.0, 2.0, "gen"),
+            iv("gpu0", 6.0, 8.0, "train"),
+        ];
+        let s = render(&ivs, 40);
+        assert!(s.contains("gpu0"));
+        assert!(s.contains("gpu1"));
+        assert!(s.contains('█'));
+        assert!(s.contains('▓'));
+        // gpu1 has idle space (the Fig-1 bubble)
+        let gpu1_row = s.lines().find(|l| l.contains("gpu1")).unwrap();
+        assert!(gpu1_row.contains(' '));
+    }
+
+    #[test]
+    fn empty_is_fine() {
+        assert!(render(&[], 40).contains("no timeline"));
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let ivs = vec![iv("a", 0.0, 1.0, "gen"), iv("b", 1.0, 2.0, "train")];
+        let csv = to_csv(&ivs);
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

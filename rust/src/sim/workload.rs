@@ -1,0 +1,80 @@
+//! Workload model: output-length distributions for the simulator.
+//!
+//! LRM outputs are heavy-tailed — the paper's Fig. 1 idle time comes from
+//! the gap between the mean and the longest output in a batch. We use a
+//! truncated lognormal, parameterized by (mean_target, sigma), capped at
+//! the context budget, matching the qualitative shape of R1-style output
+//! length histograms.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LenSampler {
+    mu: f64,
+    sigma: f64,
+    pub min_len: f64,
+    pub max_len: f64,
+}
+
+impl LenSampler {
+    /// Target mean (before truncation) and log-space sigma; lengths are
+    /// clamped to [min_len, max_len].
+    pub fn new(mean: f64, sigma: f64, min_len: f64, max_len: f64) -> Self {
+        assert!(mean > 0.0 && sigma >= 0.0 && max_len >= min_len);
+        // mean of lognormal = exp(mu + sigma^2/2)
+        let mu = mean.ln() - sigma * sigma / 2.0;
+        LenSampler { mu, sigma, min_len, max_len }
+    }
+
+    /// The paper's evaluation contexts: 16k/32k total with 1k prompts.
+    /// Mean generation ≈ ctx/4, matching long-CoT training regimes.
+    pub fn for_context(ctx: f64) -> Self {
+        let max_gen = ctx - 1024.0;
+        LenSampler::new(max_gen / 4.0, 0.9, 64.0, max_gen)
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(self.mu, self.sigma)
+            .clamp(self.min_len, self.max_len)
+    }
+
+    pub fn sample_n(&self, rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn mean_is_close_to_target() {
+        let s = LenSampler::new(2000.0, 0.5, 1.0, 1e9);
+        let mut rng = Rng::new(1);
+        let xs = s.sample_n(&mut rng, 20_000);
+        let m = stats::mean(&xs);
+        assert!((m - 2000.0).abs() / 2000.0 < 0.05, "{m}");
+    }
+
+    #[test]
+    fn truncation_respected() {
+        let s = LenSampler::for_context(16384.0);
+        let mut rng = Rng::new(2);
+        for x in s.sample_n(&mut rng, 5000) {
+            assert!((64.0..=15360.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn heavy_tail_exists() {
+        // p95 should be much larger than the median — the source of the
+        // paper's synchronous-idle problem
+        let s = LenSampler::for_context(32768.0);
+        let mut rng = Rng::new(3);
+        let xs = s.sample_n(&mut rng, 20_000);
+        let p50 = stats::percentile(&xs, 50.0);
+        let p95 = stats::percentile(&xs, 95.0);
+        assert!(p95 > 2.5 * p50, "p50={p50} p95={p95}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Multi-digit addition with chain-of-thought — the math-reasoning stand-in.
+//!
+//! Prompt:      `Q47+85=`
+//! Gold CoT:    per-column sums least-significant first, then the answer:
+//!              `C12,13,A132E`  (7+5=12 → digit 2 carry 1; 4+8+1=13 → ...)
+//! Difficulty:  level = number of digits per operand (1..=5). Output length
+//!              grows with level, giving the length variance the paper's
+//!              scheduling results depend on.
+
+use super::{extract_answer, Prompt, Task};
+use crate::util::rng::Rng;
+
+pub struct AdditionTask;
+
+impl AdditionTask {
+    fn parse_meta(meta: &str) -> Option<(u64, u64)> {
+        let rest = meta.strip_prefix("add:")?;
+        let (a, b) = rest.split_once(',')?;
+        Some((a.parse().ok()?, b.parse().ok()?))
+    }
+}
+
+impl Task for AdditionTask {
+    fn name(&self) -> &'static str {
+        "math"
+    }
+
+    fn levels(&self) -> std::ops::RangeInclusive<usize> {
+        1..=5
+    }
+
+    fn sample(&self, rng: &mut Rng, level: usize) -> Prompt {
+        let level = level.clamp(1, 5);
+        let lo = 10u64.pow(level as u32 - 1);
+        let hi = 10u64.pow(level as u32) - 1;
+        let a = rng.range_i64(lo as i64, hi as i64) as u64;
+        let b = rng.range_i64(lo as i64, hi as i64) as u64;
+        Prompt {
+            text: format!("Q{a}+{b}="),
+            meta: format!("add:{a},{b}"),
+            level,
+            group: 0,
+        }
+    }
+
+    fn gold_completion(&self, meta: &str) -> String {
+        let (a, b) = Self::parse_meta(meta).expect("bad add meta");
+        let da: Vec<u64> = digits_lsb(a);
+        let db: Vec<u64> = digits_lsb(b);
+        let n = da.len().max(db.len());
+        let mut carry = 0;
+        let mut cot = String::from("C");
+        for i in 0..n {
+            let s = da.get(i).copied().unwrap_or(0) + db.get(i).copied().unwrap_or(0) + carry;
+            cot.push_str(&s.to_string());
+            cot.push(',');
+            carry = s / 10;
+        }
+        format!("{cot}A{}E", a + b)
+    }
+
+    fn verify(&self, meta: &str, completion: &str) -> bool {
+        let Some((a, b)) = Self::parse_meta(meta) else {
+            return false;
+        };
+        let Some(ans) = extract_answer(completion) else {
+            return false;
+        };
+        let compact: String = ans.chars().filter(|c| !c.is_whitespace()).collect();
+        matches!(compact.parse::<u64>(), Ok(v) if v == a + b)
+    }
+}
+
+fn digits_lsb(mut x: u64) -> Vec<u64> {
+    if x == 0 {
+        return vec![0];
+    }
+    let mut out = Vec::new();
+    while x > 0 {
+        out.push(x % 10);
+        x /= 10;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn gold_completion_is_correct() {
+        let t = AdditionTask;
+        assert_eq!(t.gold_completion("add:47,85"), "C12,13,A132E");
+        assert_eq!(t.gold_completion("add:1,2"), "C3,A3E");
+        // final carry folds into the answer, not an extra CoT column
+        assert_eq!(t.gold_completion("add:99,1"), "C10,10,A100E");
+    }
+
+    #[test]
+    fn gold_always_verifies() {
+        let t = AdditionTask;
+        prop_check(200, |rng| {
+            let level = rng.range_usize(1, 5);
+            let p = t.sample(rng, level);
+            let gold = t.gold_completion(&p.meta);
+            crate::prop_assert!(t.verify(&p.meta, &gold),
+                                "gold failed for {}: {gold}", p.meta);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wrong_answers_rejected() {
+        let t = AdditionTask;
+        assert!(t.verify("add:47,85", "A132E"));
+        assert!(!t.verify("add:47,85", "A133E"));
+        assert!(!t.verify("add:47,85", "A132")); // no terminator
+        assert!(!t.verify("add:47,85", "garbage"));
+        assert!(!t.verify("add:47,85", "AE"));
+    }
+
+    #[test]
+    fn verify_tolerates_spaces_and_cot() {
+        let t = AdditionTask;
+        assert!(t.verify("add:47,85", "C99,A 132 E"));
+    }
+
+    #[test]
+    fn prompt_shape() {
+        let t = AdditionTask;
+        let mut rng = Rng::new(1);
+        let p = t.sample(&mut rng, 3);
+        assert!(p.text.starts_with('Q'));
+        assert!(p.text.ends_with('='));
+        assert_eq!(p.level, 3);
+        // 3-digit operands
+        let (a, b) = AdditionTask::parse_meta(&p.meta).unwrap();
+        assert!((100..=999).contains(&a));
+        assert!((100..=999).contains(&b));
+    }
+
+    #[test]
+    fn level_controls_output_length() {
+        let t = AdditionTask;
+        let mut rng = Rng::new(2);
+        let short = t.gold_completion(&t.sample(&mut rng, 1).meta).len();
+        let long = t.gold_completion(&t.sample(&mut rng, 5).meta).len();
+        assert!(long > short);
+    }
+}

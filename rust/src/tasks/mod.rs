@@ -1,0 +1,102 @@
+//! Synthetic reasoning tasks with verifiable rewards — the stand-ins for the
+//! paper's math (DeepScaleR) and coding (DeepCoder) workloads (DESIGN.md §3).
+//!
+//! Every task produces prompts whose gold chain-of-thought is algorithmically
+//! known (for the SFT "distillation" warmup) and whose final answer is
+//! checked by a rule-based verifier (the reward service): exactly the
+//! structure the paper's reward service handles (string match for math,
+//! unit-test execution for code — here, the expression interpreter).
+//!
+//! Completion format shared by all tasks: optional CoT text, then
+//! `A<answer>E`. The verifier extracts the text between the LAST 'A' marker
+//! and the following 'E'.
+
+pub mod arithmetic;
+pub mod countdown;
+pub mod dataset;
+pub mod evalsuite;
+pub mod sorting;
+
+use crate::util::rng::Rng;
+
+
+pub use arithmetic::AdditionTask;
+pub use countdown::CountdownTask;
+pub use dataset::Dataset;
+pub use evalsuite::{EvalSuite, Evaluator, SuiteResult};
+pub use sorting::SortTask;
+
+/// One sampled prompt.
+#[derive(Debug, Clone)]
+pub struct Prompt {
+    /// prompt text, e.g. "Q47+85="
+    pub text: String,
+    /// structured recipe the verifier parses, e.g. "add:47,85"
+    pub meta: String,
+    /// difficulty level it was sampled at
+    pub level: usize,
+    /// dataset index (group id for the group-mean baseline)
+    pub group: u64,
+}
+
+/// A reasoning task: prompt sampling, gold completions, verification.
+pub trait Task: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Inclusive difficulty range (e.g. number of digits).
+    fn levels(&self) -> std::ops::RangeInclusive<usize>;
+
+    /// Sample a prompt at the given difficulty level.
+    fn sample(&self, rng: &mut Rng, level: usize) -> Prompt;
+
+    /// Gold completion (CoT + `A<answer>E`) for SFT traces.
+    fn gold_completion(&self, meta: &str) -> String;
+
+    /// Rule-based verification of a model completion against the meta.
+    fn verify(&self, meta: &str, completion: &str) -> bool;
+}
+
+/// Extract the answer span: text between the LAST 'A' and the next 'E'.
+pub fn extract_answer(completion: &str) -> Option<&str> {
+    let a = completion.rfind('A')?;
+    let rest = &completion[a + 1..];
+    let e = rest.find('E')?;
+    Some(rest[..e].trim())
+}
+
+/// Construct a task by name.
+pub fn task_by_name(name: &str) -> Option<Box<dyn Task>> {
+    match name {
+        "math" | "add" => Some(Box::new(AdditionTask)),
+        "code" | "countdown" => Some(Box::new(CountdownTask)),
+        "sort" => Some(Box::new(SortTask)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn extract_answer_basic() {
+        assert_eq!(extract_answer("C12,13A132E"), Some("132"));
+        assert_eq!(extract_answer("A 7 E"), Some("7"));
+        assert_eq!(extract_answer("no markers"), None);
+        assert_eq!(extract_answer("A12"), None); // missing E
+    }
+
+    #[test]
+    fn extract_answer_uses_last_a() {
+        // CoT may itself contain 'A'-like text; last marker wins
+        assert_eq!(extract_answer("A1E junk A2E"), Some("2"));
+    }
+
+    #[test]
+    fn task_by_name_resolves() {
+        assert!(task_by_name("math").is_some());
+        assert!(task_by_name("code").is_some());
+        assert!(task_by_name("sort").is_some());
+        assert!(task_by_name("nope").is_none());
+    }
+}

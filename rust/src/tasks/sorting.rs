@@ -1,0 +1,93 @@
+//! Digit sorting — the quickstart task (shortest sequences, fastest to
+//! learn; used by examples/quickstart and CI-speed tests).
+//!
+//! Prompt: `Q835S`  →  completion `A358E` (digits sorted ascending).
+//! Difficulty: level = number of digits (2..=8).
+
+use super::{extract_answer, Prompt, Task};
+use crate::util::rng::Rng;
+
+pub struct SortTask;
+
+impl SortTask {
+    fn parse_meta(meta: &str) -> Option<&str> {
+        meta.strip_prefix("sort:")
+    }
+}
+
+impl Task for SortTask {
+    fn name(&self) -> &'static str {
+        "sort"
+    }
+
+    fn levels(&self) -> std::ops::RangeInclusive<usize> {
+        2..=8
+    }
+
+    fn sample(&self, rng: &mut Rng, level: usize) -> Prompt {
+        let n = level.clamp(2, 8);
+        let digits: String = (0..n)
+            .map(|_| char::from(b'0' + rng.range_usize(0, 9) as u8))
+            .collect();
+        Prompt {
+            text: format!("Q{digits}S"),
+            meta: format!("sort:{digits}"),
+            level: n,
+            group: 0,
+        }
+    }
+
+    fn gold_completion(&self, meta: &str) -> String {
+        let digits = Self::parse_meta(meta).expect("bad sort meta");
+        let mut chars: Vec<char> = digits.chars().collect();
+        chars.sort_unstable();
+        format!("A{}E", chars.into_iter().collect::<String>())
+    }
+
+    fn verify(&self, meta: &str, completion: &str) -> bool {
+        let Some(digits) = Self::parse_meta(meta) else {
+            return false;
+        };
+        let Some(ans) = extract_answer(completion) else {
+            return false;
+        };
+        let mut want: Vec<char> = digits.chars().collect();
+        want.sort_unstable();
+        let got: Vec<char> = ans.chars().filter(|c| !c.is_whitespace()).collect();
+        got == want
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    #[test]
+    fn gold_always_verifies() {
+        let t = SortTask;
+        prop_check(100, |rng| {
+            let level = rng.range_usize(2, 8);
+            let p = t.sample(rng, level);
+            let gold = t.gold_completion(&p.meta);
+            crate::prop_assert!(t.verify(&p.meta, &gold), "{}: {gold}", p.meta);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rejects_wrong_order_and_wrong_multiset() {
+        let t = SortTask;
+        assert!(t.verify("sort:835", "A358E"));
+        assert!(!t.verify("sort:835", "A385E")); // wrong order
+        assert!(!t.verify("sort:835", "A35E"));  // missing digit
+        assert!(!t.verify("sort:835", "A3558E")); // extra digit
+    }
+
+    #[test]
+    fn duplicates_preserved() {
+        let t = SortTask;
+        assert_eq!(t.gold_completion("sort:331"), "A133E");
+        assert!(t.verify("sort:331", "A133E"));
+    }
+}

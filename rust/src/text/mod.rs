@@ -1,0 +1,6 @@
+//! Text substrate: the fixed 48-symbol tokenizer shared with the AOT model
+//! (python/compile/tiers.py `vocab=48`) and generation post-processing.
+
+pub mod tokenizer;
+
+pub use tokenizer::{Tokenizer, EOS, BOS, PAD};

@@ -1,0 +1,156 @@
+//! Leveled logger + CSV metric writer (no `log`/`env_logger` needed).
+//!
+//! The logger is process-global, cheap, and honors `AREAL_LOG`
+//! (error|warn|info|debug|trace). Metric series are written as CSV so the
+//! experiment drivers can regenerate the paper's figures from files.
+
+use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        write!(f, "{s}")
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static SINK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("AREAL_LOG") {
+        let lvl = match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        };
+        set_level(lvl);
+    }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, target: &str, msg: fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let t = START.elapsed().as_secs_f64();
+    let _g = SINK.lock().unwrap();
+    eprintln!("[{t:9.3}s {l} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $target,
+                                   format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $target,
+                                   format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $target,
+                                   format_args!($($arg)*))
+    };
+}
+
+/// CSV writer for metric series (one header, rows of f64).
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(Self { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row arity mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.w, "{}", line.join(","))
+    }
+
+    pub fn row_mixed(&mut self, label: &str, values: &[f64]) -> std::io::Result<()> {
+        assert_eq!(values.len() + 1, self.cols, "csv row arity mismatch");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.w, "{},{}", label, line.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("areal_csv_test");
+        let path = dir.join("m.csv");
+        let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+        w.row(&[1.0, 0.5]).unwrap();
+        w.row(&[2.0, 0.25]).unwrap();
+        w.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss"));
+    }
+}

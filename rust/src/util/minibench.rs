@@ -1,0 +1,155 @@
+//! Minimal benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` and call into this module.
+//! Reports mean / std / p50 / p95 wall-clock per iteration after a warmup
+//! phase, criterion-style, plus a throughput row when an item count is
+//! given. Results can also be appended to a CSV for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub throughput: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let fmt_t = |s: f64| {
+            if s < 1e-6 {
+                format!("{:8.1} ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:8.2} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:8.3} ms", s * 1e3)
+            } else {
+                format!("{:8.3} s ", s)
+            }
+        };
+        let tp = match self.throughput {
+            Some(t) if t >= 1e6 => format!("  {:10.2} Mitem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:10.2} Kitem/s", t / 1e3),
+            Some(t) => format!("  {t:10.2} item/s"),
+            None => String::new(),
+        };
+        println!(
+            "{:<44} {} ±{} p50 {} p95 {} ({} iters){}",
+            self.name,
+            fmt_t(self.mean_s),
+            fmt_t(self.std_s),
+            fmt_t(self.p50_s),
+            fmt_t(self.p95_s),
+            self.iters,
+            tp
+        );
+    }
+}
+
+pub struct Bench {
+    /// target measurement time (default 2 s, override with AREAL_BENCH_SECS)
+    pub measure: Duration,
+    pub warmup: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        let secs = std::env::var("AREAL_BENCH_SECS")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(2.0);
+        Self {
+            measure: Duration::from_secs_f64(secs),
+            warmup: Duration::from_secs_f64((secs / 4.0).min(1.0)),
+            max_iters: 100_000,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            measure: Duration::from_millis(300),
+            warmup: Duration::from_millis(50),
+            max_iters: 10_000,
+        }
+    }
+
+    /// Time `f` repeatedly; `f` should perform one full iteration.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // measure
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: stats::mean(&samples),
+            std_s: stats::std(&samples),
+            p50_s: stats::percentile(&samples, 50.0),
+            p95_s: stats::percentile(&samples, 95.0),
+            throughput: None,
+        }
+    }
+
+    /// Like `run` but reports items/second given `items` per iteration.
+    pub fn run_throughput<F: FnMut()>(&self, name: &str, items: f64, f: F)
+        -> BenchResult {
+        let mut r = self.run(name, f);
+        r.throughput = Some(items / r.mean_s);
+        r
+    }
+}
+
+/// Prevent the optimizer from eliding a value (ptr read volatile trick).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::quick();
+        let r = b.run("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.p50_s);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let b = Bench::quick();
+        let r = b.run_throughput("tp", 1000.0, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.throughput.unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrate utilities: JSON, PRNG, statistics, logging, thread pool,
+//! benchmark harness, property-test framework. All hand-rolled — the offline
+//! vendor set has no serde/rand/rayon/criterion/proptest.
+
+pub mod json;
+pub mod logging;
+pub mod minibench;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

