@@ -1,0 +1,187 @@
+//! Serving-layer benchmarks (serve/): the headline prefix-cache
+//! prefill-token savings on a GRPO group-sampling workload vs. the
+//! cache-disabled baseline (acceptance bar: >= 1.5x at G >= 4, hit rate
+//! reported), plus micro-benchmarks of the paged-KV hot paths and the
+//! cache-aware simulated-cluster decode throughput.
+//!
+//!     cargo bench --bench bench_serve
+
+use std::collections::HashMap;
+
+use areal::serve::{BlockManager, Grow, RadixCache, Scheduler, SeqId, ServeCfg};
+use areal::sim::{self, SimConfig};
+use areal::util::minibench::{black_box, Bench};
+use areal::util::rng::Rng;
+
+struct WorkloadReport {
+    computed: u64,
+    cached: u64,
+    preemptions: u64,
+    decode_tokens: u64,
+}
+
+fn random_tokens(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.range_i64(3, 47) as i32).collect()
+}
+
+/// Drive a group-sampling workload (G siblings per prompt) through the
+/// scheduler exactly the way the engine does: admit waves, one committed
+/// token per active sequence per round, preempt on OOM, finish at target.
+#[allow(clippy::too_many_arguments)]
+fn run_group_workload(prefix_cache: bool, groups: usize, g: usize,
+                      prompt_len: usize, gen_len: usize, max_seqs: usize,
+                      num_blocks: usize, seed: u64) -> WorkloadReport {
+    let cfg = ServeCfg { block_size: 16, num_blocks, max_seqs, prefix_cache };
+    let mut s = Scheduler::new(cfg);
+    let mut rng = Rng::new(seed);
+    let mut next_id: SeqId = 0;
+    let mut targets: HashMap<SeqId, usize> = HashMap::new();
+    for _ in 0..groups {
+        let p = random_tokens(&mut rng, prompt_len);
+        for _ in 0..g {
+            assert!(s.submit(next_id, p.clone()));
+            targets.insert(next_id, prompt_len + gen_len);
+            next_id += 1;
+        }
+    }
+    let mut decode_tokens = 0u64;
+    let mut active: HashMap<SeqId, Vec<i32>> = HashMap::new();
+    loop {
+        for a in s.schedule() {
+            s.note_prefilled(a.id, &a.tokens);
+            active.insert(a.id, a.tokens);
+        }
+        if active.is_empty() {
+            assert_eq!(s.waiting_len(), 0, "workload starved");
+            break;
+        }
+        let ids: Vec<SeqId> = active.keys().copied().collect();
+        for id in ids {
+            if !active.contains_key(&id) {
+                continue; // preempted this round
+            }
+            let mut t = active.remove(&id).unwrap();
+            t.push(rng.range_i64(3, 47) as i32);
+            decode_tokens += 1;
+            loop {
+                match s.grow_to(id, t.len()) {
+                    Grow::Ok => break,
+                    Grow::Preempt(victim) => {
+                        let vt = active.remove(&victim).expect("victim active");
+                        s.preempt(victim, &vt, vt.len());
+                    }
+                    Grow::Fail => panic!("budget too small for one sequence"),
+                }
+            }
+            if t.len() >= targets[&id] {
+                s.finish(id, &t, t.len());
+            } else {
+                active.insert(id, t);
+            }
+        }
+    }
+    WorkloadReport {
+        computed: s.prefill_tokens_computed,
+        cached: s.prefill_tokens_cached,
+        preemptions: s.preemptions,
+        decode_tokens,
+    }
+}
+
+fn main() {
+    println!("== GRPO group-sampling workload: radix prefix cache vs none ==");
+    println!("   (prompt 64 tok, gen 64 tok, 8 decode slots, 512 KV blocks)");
+    for (g, groups) in [(4usize, 16usize), (8, 8), (16, 4)] {
+        let on = run_group_workload(true, groups, g, 64, 64, 8, 512, 1);
+        let off = run_group_workload(false, groups, g, 64, 64, 8, 512, 1);
+        let savings = off.computed as f64 / on.computed.max(1) as f64;
+        let hit = on.cached as f64 / (on.cached + on.computed).max(1) as f64;
+        let bar = if savings >= 1.5 { "PASS" } else { "FAIL" };
+        println!(
+            "  G={g:2}: prefill tokens {:>6} (cache) vs {:>6} (none)  \
+             savings {savings:.2}x  hit rate {:4.1}%  preemptions {}  \
+             [target >= 1.5x: {bar}]",
+            on.computed,
+            off.computed,
+            hit * 100.0,
+            on.preemptions
+        );
+    }
+
+    println!("\n== tight KV budget (preemption pressure, G=8) ==");
+    let tight = run_group_workload(true, 8, 8, 64, 96, 8, 64, 2);
+    println!(
+        "  64 blocks: prefill computed {} cached {} preemptions {}",
+        tight.computed, tight.cached, tight.preemptions
+    );
+
+    println!("\n== serve/ hot-path micro-benchmarks ==");
+    let bench = Bench::default();
+
+    // scheduler end-to-end accounting throughput (decode-side hot path)
+    let items = {
+        let r = run_group_workload(true, 4, 4, 64, 64, 8, 512, 3);
+        r.decode_tokens as f64
+    };
+    bench
+        .run_throughput("scheduler: admit+grow+finish workload", items, || {
+            black_box(run_group_workload(true, 4, 4, 64, 64, 8, 512, 3));
+        })
+        .report();
+
+    // block manager alloc/release cycle
+    bench
+        .run_throughput("blocks: alloc/release cycle", 256.0, || {
+            let mut bm = BlockManager::new(256, 16);
+            let ids: Vec<_> = (0..256).map(|_| bm.try_alloc(0).unwrap()).collect();
+            for id in ids {
+                bm.release(id);
+            }
+            black_box(bm.free_blocks());
+        })
+        .report();
+
+    // radix insert + longest-prefix match on a deep shared tree
+    {
+        let mut rng = Rng::new(5);
+        let mut bm = BlockManager::new(4096, 16);
+        let mut cache = RadixCache::new();
+        let base = random_tokens(&mut rng, 512);
+        for i in 0..32 {
+            let mut t = base[..256 + 8 * i].to_vec();
+            t.extend(random_tokens(&mut rng, 64));
+            cache.insert(&t, 0, None, &mut bm);
+        }
+        bench
+            .run_throughput("radix: match_prefix, 512-token query", 512.0, || {
+                let m = cache.match_prefix(&base, 0, &mut bm);
+                for &b in &m.blocks {
+                    bm.release(b);
+                }
+                black_box(m.tokens);
+            })
+            .report();
+    }
+
+    println!("\n== simulated cluster decode throughput (1.5B, 64 GPUs, ctx 16k) ==");
+    let mut c = SimConfig::paper_default(sim::profile::MODEL_1_5B, 64, 16384.0);
+    c.n_steps = 8;
+    let with = sim::run_async(&c);
+    c.prefix_cache = false;
+    let without = sim::run_async(&c);
+    println!(
+        "  cache on : {:.1} effective ktok/s, gen {:.1} ktok/s, prompt prefill \
+         {:.1}M tok computed, hit rate {:.1}%",
+        with.effective_tps / 1e3,
+        with.gen_tokens / with.total_s / 1e3,
+        with.prefill_tokens / 1e6,
+        with.cache_hit_rate * 100.0
+    );
+    println!(
+        "  cache off: {:.1} effective ktok/s, gen {:.1} ktok/s, prompt prefill \
+         {:.1}M tok computed",
+        without.effective_tps / 1e3,
+        without.gen_tokens / without.total_s / 1e3,
+        without.prefill_tokens / 1e6
+    );
+}

@@ -72,6 +72,14 @@ pub struct Config {
     pub reward_threads: usize,
     pub seed: u64,
 
+    // serving layer (serve/): paged KV + radix prefix cache
+    /// tokens per KV block (0 = auto from the tier's max_seq)
+    pub kv_block_size: usize,
+    /// physical KV blocks per rollout worker (0 = auto: 2x full-context slots)
+    pub kv_blocks: usize,
+    /// radix prefix cache (GRPO siblings / resumed rollouts reuse prefills)
+    pub prefix_cache: bool,
+
     // rollout
     pub task: String,
     /// difficulty levels sampled during training (uniform mix)
@@ -119,6 +127,9 @@ impl Default for Config {
             n_rollout_workers: 2,
             reward_threads: 2,
             seed: 1, // paper Appendix A: fixed seed of 1
+            kv_block_size: 0,
+            kv_blocks: 0,
+            prefix_cache: true,
             task: "math".into(),
             level_lo: 1,
             level_hi: 3,
@@ -188,6 +199,9 @@ impl Config {
             "n_rollout_workers" | "workers" => self.n_rollout_workers = u(val)?,
             "reward_threads" => self.reward_threads = u(val)?,
             "seed" => self.seed = val.parse().context("bad seed")?,
+            "kv_block_size" => self.kv_block_size = u(val)?,
+            "kv_blocks" => self.kv_blocks = u(val)?,
+            "prefix_cache" => self.prefix_cache = parse_bool(val)?,
             "task" => self.task = val.to_string(),
             "level_lo" => self.level_lo = u(val)?,
             "level_hi" => self.level_hi = u(val)?,
@@ -255,7 +269,8 @@ impl Config {
     }
 }
 
-fn parse_bool(v: &str) -> Result<bool> {
+/// Strict bool parsing shared by config keys and `key=value` CLI args.
+pub fn parse_bool(v: &str) -> Result<bool> {
     match v {
         "true" | "1" | "yes" => Ok(true),
         "false" | "0" | "no" => Ok(false),
@@ -297,6 +312,19 @@ mod tests {
     fn eta_inf() {
         let cfg = Config::load(None, &["eta=inf".into()]).unwrap();
         assert_eq!(cfg.max_staleness, None);
+    }
+
+    #[test]
+    fn serve_keys_apply() {
+        let cfg = Config::load(
+            None,
+            &["kv_block_size=32".into(), "kv_blocks=1024".into(),
+              "prefix_cache=false".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.kv_block_size, 32);
+        assert_eq!(cfg.kv_blocks, 1024);
+        assert!(!cfg.prefix_cache);
     }
 
     #[test]

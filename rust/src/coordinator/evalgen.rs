@@ -66,24 +66,27 @@ pub fn eval_suite(engine: &Arc<Engine>, params: &Arc<ParamSet>, suite: &EvalSuit
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::artifacts::test_artifacts_dir;
     use crate::runtime::Manifest;
     use crate::tasks::evalsuite::math_suites_nano;
     use crate::tasks::{AdditionTask, Task};
-    use std::path::PathBuf;
 
-    fn setup() -> (Arc<Engine>, Arc<ParamSet>) {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let m = Manifest::load(&dir).expect("run `make artifacts` first");
+    fn setup() -> Option<(Arc<Engine>, Arc<ParamSet>)> {
+        let dir = test_artifacts_dir()?;
+        let m = Manifest::load(&dir).expect("manifest load");
         let spec = m.tier("nano").unwrap();
         let engine =
             Arc::new(Engine::load_subset(spec, Some(&["init", "prefill", "decode"])).unwrap());
         let params = ParamSet::init(&engine, [1, 2]).unwrap();
-        (engine, params)
+        Some((engine, params))
     }
 
     #[test]
     fn generates_one_completion_per_prompt() {
-        let (engine, params) = setup();
+        let Some((engine, params)) = setup() else {
+            eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+            return;
+        };
         let task = AdditionTask;
         let mut rng = Rng::new(4);
         let prompts: Vec<Prompt> = (0..6).map(|_| task.sample(&mut rng, 1)).collect();
@@ -96,7 +99,10 @@ mod tests {
 
     #[test]
     fn eval_suite_runs_on_untrained_model() {
-        let (engine, params) = setup();
+        let Some((engine, params)) = setup() else {
+            eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+            return;
+        };
         let suites = math_suites_nano();
         let r = eval_suite(&engine, &params, &suites[0], 1, 0.0, 1).unwrap();
         // untrained model: accuracy ~0, but the harness must complete

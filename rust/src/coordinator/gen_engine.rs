@@ -1,9 +1,10 @@
 //! Interruptible generation engine — the paper's rollout worker core
-//! (§4.1): continuous slot-based batching over the AOT `prefill`/`decode`
-//! executables, with the two requests the paper specifies:
+//! (§4.1): continuous batching over the AOT `prefill`/`decode` executables,
+//! with the two requests the paper specifies:
 //!
-//! - `generate`: slots are filled with prompts; decoding proceeds in chunks
-//!   of `tier.chunk` tokens (in-graph sampling);
+//! - `generate`: prompts are admitted by the `serve::Scheduler`
+//!   (paged-KV admission control + radix prefix cache); decoding proceeds
+//!   in chunks of `tier.chunk` tokens (in-graph sampling);
 //! - `update_weights`: swaps the parameter set mid-generation. The KV cache
 //!   computed under the old weights is discarded and recomputed under the
 //!   new weights by re-prefilling prompt + committed tokens ("the rollout
@@ -11,13 +12,23 @@
 //!   them using the new weights"). Committed tokens and their behavior
 //!   logprobs are never re-sampled — each token is sampled exactly once by
 //!   whichever policy version was live, which is the bookkeeping that makes
-//!   Proposition 1's single-behavior-policy equivalence hold.
+//!   Proposition 1's single-behavior-policy equivalence hold. The serving
+//!   layer enforces the same rule on cached prefixes: version-tagged blocks
+//!   are invalidated on `update_weights`.
+//!
+//! The serving layer (DESIGN.md §5) supplies three things on top of the
+//! fixed-shape XLA tier: admission control against the paged KV budget,
+//! prefix-cache accounting (GRPO siblings and resumed rollouts skip the
+//! shared prefill), and preemption-on-OOM — a preempted sequence keeps its
+//! committed tokens/logprobs and resumes later, mostly from cache.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{Engine, HostTensor, ParamSet, SendLiteral, Version};
+use crate::serve::{Grow, Scheduler, SeqId, ServeCfg, ServeStats};
 use crate::tasks::Prompt;
 use crate::text::tokenizer::{Tokenizer, BOS, EOS};
 use crate::util::rng::Rng;
@@ -27,6 +38,7 @@ use super::messages::Trajectory;
 /// One in-flight sequence.
 #[derive(Debug)]
 struct ActiveSeq {
+    seq_id: SeqId,
     prompt: Prompt,
     /// committed tokens: BOS + prompt + sampled-so-far (incl. the pending
     /// token whose KV is not yet written)
@@ -64,7 +76,7 @@ impl ActiveSeq {
     }
 }
 
-/// Slot-based continuous-batching generation engine.
+/// Continuous-batching generation engine over the paged serving layer.
 pub struct GenEngine {
     engine: Arc<Engine>,
     tokenizer: Tokenizer,
@@ -79,18 +91,38 @@ pub struct GenEngine {
     params: Arc<ParamSet>,
     needs_prefill: bool,
     rng: Rng,
+    /// paged-KV admission / prefix cache / preemption (DESIGN.md §5)
+    serve: Scheduler,
+    /// prompts submitted but not yet admitted
+    pending_fresh: HashMap<SeqId, Prompt>,
+    /// preempted sequences awaiting re-admission (committed state intact)
+    parked: HashMap<SeqId, ActiveSeq>,
+    next_seq: SeqId,
     // counters
     pub tokens_generated: u64,
     pub chunks_run: u64,
     pub prefills_run: u64,
     pub interruptions: u64,
+    /// committed tokens re-prefilled because of weight-update interrupts
+    pub recompute_tokens: u64,
 }
 
 impl GenEngine {
     pub fn new(engine: Arc<Engine>, params: Arc<ParamSet>, worker_id: usize,
                temperature: f32, seed: u64) -> Self {
+        Self::with_serve(engine, params, worker_id, temperature, seed, None)
+    }
+
+    /// Like `new` but with an explicit serving configuration (block size,
+    /// KV budget, prefix cache on/off). `max_seqs` is clamped to the
+    /// engine's slot count.
+    pub fn with_serve(engine: Arc<Engine>, params: Arc<ParamSet>, worker_id: usize,
+                      temperature: f32, seed: u64, serve: Option<ServeCfg>) -> Self {
         let cfg = &engine.spec.config;
         let (b, t, chunk) = (cfg.gen_batch, cfg.max_seq, cfg.chunk);
+        let mut serve_cfg = serve
+            .unwrap_or_else(|| ServeCfg::for_engine(b, t, ServeCfg::default_block_size(t)));
+        serve_cfg.max_seqs = serve_cfg.max_seqs.min(b).max(1);
         GenEngine {
             engine,
             tokenizer: Tokenizer::new(),
@@ -104,10 +136,15 @@ impl GenEngine {
             params,
             needs_prefill: false,
             rng: Rng::new(seed),
+            serve: Scheduler::new(serve_cfg),
+            pending_fresh: HashMap::new(),
+            parked: HashMap::new(),
+            next_seq: 0,
             tokens_generated: 0,
             chunks_run: 0,
             prefills_run: 0,
             interruptions: 0,
+            recompute_tokens: 0,
         }
     }
 
@@ -131,29 +168,55 @@ impl GenEngine {
         self.active_slots() == 0
     }
 
+    /// Prompts `fill` can accept right now without over-buffering: slots
+    /// not yet spoken for by running or waiting sequences.
+    pub fn fill_capacity(&self) -> usize {
+        self.b
+            .saturating_sub(self.serve.running_len() + self.serve.waiting_len())
+    }
+
+    /// Serving-layer statistics (prefix-cache hit rate, preemptions, block
+    /// occupancy).
+    pub fn serve_stats(&self) -> ServeStats {
+        self.serve.stats()
+    }
+
+    pub fn preemptions(&self) -> u64 {
+        self.serve.preemptions
+    }
+
     /// The paper's `update_weights`: swap parameters; any in-flight
     /// generation is interrupted (its KV will be rebuilt at the next
-    /// prefill). Returns how many sequences were interrupted mid-flight.
+    /// prefill) and stale-version cache blocks are invalidated. Returns how
+    /// many sequences were interrupted mid-flight.
     pub fn update_weights(&mut self, params: Arc<ParamSet>) -> usize {
         assert!(params.version >= self.params.version, "weight version regressed");
         let interrupted = self.active_slots();
         self.params = params;
+        self.serve.on_update_weights(self.params.version);
         if interrupted > 0 {
             self.interruptions += 1;
             self.needs_prefill = true; // KV under old weights is invalid
+            // the §4.1 interrupt cost: committed context must be recomputed
+            self.recompute_tokens += self
+                .slots
+                .iter()
+                .flatten()
+                .map(|s| s.tokens.len() as u64)
+                .sum::<u64>();
         }
         interrupted
     }
 
-    /// Fill empty slots with prompts; returns the number accepted.
+    /// Submit prompts to the serving layer; returns the number accepted
+    /// (bounded by `fill_capacity`). Admission itself happens at the next
+    /// `prefill`, subject to the KV block budget.
     pub fn fill(&mut self, prompts: &mut Vec<Prompt>) -> Result<usize> {
         let mut accepted = 0;
-        for slot in self.slots.iter_mut() {
-            if slot.is_some() {
-                continue;
-            }
+        let capacity = self.fill_capacity();
+        while accepted < capacity {
             let Some(p) = prompts.pop() else { break };
-            let mut tokens = self.tokenizer.encode_bos(&p.text);
+            let tokens = self.tokenizer.encode_bos(&p.text);
             if tokens.len() + 8 > self.t {
                 bail!(
                     "prompt too long ({} tokens) for max_seq {}",
@@ -161,16 +224,16 @@ impl GenEngine {
                     self.t
                 );
             }
-            let prompt_len = tokens.len();
-            tokens.shrink_to_fit();
-            *slot = Some(ActiveSeq {
-                prompt: p,
-                tokens,
-                prompt_len,
-                behav_logp: Vec::new(),
-                segments: Vec::new(),
-                version_born: self.params.version,
-            });
+            let id = self.next_seq;
+            self.next_seq += 1;
+            if !self.serve.submit(id, tokens) {
+                bail!(
+                    "prompt does not fit the KV pool ({} blocks of {}) — raise kv_blocks",
+                    self.serve.cfg().num_blocks,
+                    self.serve.cfg().block_size
+                );
+            }
+            self.pending_fresh.insert(id, p);
             accepted += 1;
         }
         if accepted > 0 {
@@ -183,10 +246,58 @@ impl GenEngine {
         self.needs_prefill
     }
 
-    /// Rebuild the KV cache for all slots and sample one token per active
-    /// slot (from the current weights). Called after fills and weight
-    /// updates.
+    /// Ask for an admission wave at the next `prefill` (used by the rollout
+    /// loop when waiting sequences and free slots exist but no fill/preempt
+    /// set the flag — e.g. an OOM-deferred sequence after slots drained).
+    pub fn request_prefill(&mut self) {
+        self.needs_prefill = true;
+    }
+
+    /// Waiting sequences (submitted or preempted) not yet admitted.
+    pub fn waiting(&self) -> usize {
+        self.serve.waiting_len()
+    }
+
+    /// Whether the next admission wave could actually admit something (a
+    /// dense prefill wave is expensive — don't request one that admits 0).
+    pub fn admission_feasible(&self) -> bool {
+        self.empty_slots() > 0 && self.serve.admission_feasible()
+    }
+
+    /// Admit waiting sequences (through the scheduler), then rebuild the KV
+    /// cache for all slots and sample one token per active slot (from the
+    /// current weights). Called after fills and weight updates.
     pub fn prefill(&mut self) -> Result<()> {
+        // --- admission wave (paged-KV + prefix-cache aware) --------------
+        for a in self.serve.schedule() {
+            let seq = if let Some(parked) = self.parked.remove(&a.id) {
+                debug_assert_eq!(parked.tokens.len(), a.tokens.len());
+                parked
+            } else {
+                let prompt = self
+                    .pending_fresh
+                    .remove(&a.id)
+                    .context("scheduler admitted an unknown sequence")?;
+                let prompt_len = a.tokens.len();
+                ActiveSeq {
+                    seq_id: a.id,
+                    prompt,
+                    tokens: a.tokens,
+                    prompt_len,
+                    behav_logp: Vec::new(),
+                    segments: Vec::new(),
+                    version_born: self.params.version,
+                }
+            };
+            let slot = self
+                .slots
+                .iter()
+                .position(|s| s.is_none())
+                .context("scheduler admitted beyond the slot count")?;
+            self.slots[slot] = Some(seq);
+        }
+
+        // --- dense prefill over the slot batch ---------------------------
         let mut tok_mat = vec![0i32; self.b * self.t];
         let mut lens = vec![1i32; self.b];
         for (i, slot) in self.slots.iter().enumerate() {
@@ -228,7 +339,51 @@ impl GenEngine {
         self.kv = Some(outs);
         self.needs_prefill = false;
         self.prefills_run += 1;
+
+        // --- serving-layer bookkeeping: every active slot's committed KV
+        // is now valid under the current weights; fold the committed prefix
+        // (everything but the pending token) into the radix cache so GRPO
+        // siblings and resumed rollouts reuse it
+        for slot in self.slots.iter() {
+            if let Some(s) = slot {
+                let committed = &s.tokens[..s.tokens.len() - 1];
+                self.serve.note_prefilled(s.seq_id, committed);
+            }
+        }
         Ok(())
+    }
+
+    /// Extend the paged block table for `id` to `new_len`, preempting the
+    /// scheduler's chosen victims on OOM. A preempted sequence keeps its
+    /// committed tokens and logprobs in `parked` and re-enters through the
+    /// waiting queue (its prefix mostly a cache hit).
+    fn grow_with_preemption(&mut self, id: SeqId, new_len: usize) -> Result<()> {
+        loop {
+            match self.serve.grow_to(id, new_len) {
+                Grow::Ok => return Ok(()),
+                Grow::Preempt(victim) => {
+                    let vi = self
+                        .slots
+                        .iter()
+                        .position(|s| s.as_ref().is_some_and(|x| x.seq_id == victim))
+                        .context("preemption victim not in any slot")?;
+                    let vs = self.slots[vi].take().unwrap();
+                    // exclude the pending token — its KV was never computed
+                    self.serve
+                        .preempt(victim, &vs.tokens, vs.tokens.len().saturating_sub(1));
+                    self.parked.insert(victim, vs);
+                    // the freed slot refills at the next prefill wave
+                    self.needs_prefill = true;
+                }
+                Grow::Fail => bail!(
+                    "KV block budget ({} blocks of {}) cannot hold one sequence of \
+                     {} tokens — raise kv_blocks",
+                    self.serve.cfg().num_blocks,
+                    self.serve.cfg().block_size,
+                    new_len
+                ),
+            }
+        }
     }
 
     /// Decode one chunk for all slots. Returns finished trajectories
@@ -272,16 +427,17 @@ impl GenEngine {
 
         let version = self.params.version;
         let mut finished = Vec::new();
-        for (i, slot) in self.slots.iter_mut().enumerate() {
-            let Some(s) = slot.as_mut() else { continue };
-            // the pending token fed this chunk: if it was EOS... EOS is
-            // never pending (we finish on commit of EOS below).
+        for i in 0..self.b {
+            // take the sequence out of its slot so preemption of *other*
+            // slots inside the loop cannot alias it
+            let Some(mut s) = self.slots[i].take() else { continue };
             let mut done: Option<bool> = None; // Some(truncated)
             for c in 0..self.chunk {
                 let tok = new_toks[c * self.b + i];
                 let lp = logps[c * self.b + i];
                 s.push_token(tok, lp, version);
                 self.tokens_generated += 1;
+                self.grow_with_preemption(s.seq_id, s.tokens.len())?;
                 if tok == EOS {
                     done = Some(false);
                     break;
@@ -292,8 +448,13 @@ impl GenEngine {
                 }
             }
             if let Some(truncated) = done {
-                let seq = slot.take().unwrap();
-                finished.push(seq.into_trajectory(truncated, self.worker_id));
+                // the final token (EOS/truncation boundary) is committed but
+                // its KV was never computed — keep it out of the cache
+                self.serve
+                    .finish(s.seq_id, &s.tokens, s.tokens.len().saturating_sub(1));
+                finished.push(s.into_trajectory(truncated, self.worker_id));
+            } else {
+                self.slots[i] = Some(s);
             }
         }
         Ok(finished)
@@ -304,18 +465,24 @@ impl GenEngine {
         self.tokenizer.decode_completion(&t.tokens, t.prompt_len)
     }
 
-    /// Drain: run prefill+decode until every active slot finishes (used by
-    /// eval and by non-interruptible weight-sync draining). Returns all
-    /// finished trajectories.
+    /// Drain: run prefill+decode until every submitted sequence finishes
+    /// (used by eval and by non-interruptible weight-sync draining).
+    /// Returns all finished trajectories.
     pub fn drain(&mut self) -> Result<Vec<Trajectory>> {
         let mut out = Vec::new();
-        if self.all_empty() {
-            return Ok(out);
-        }
-        if self.needs_prefill {
-            self.prefill()?;
-        }
-        while !self.all_empty() {
+        loop {
+            if self.admission_feasible() {
+                self.needs_prefill = true;
+            }
+            if self.needs_prefill && (self.serve.waiting_len() > 0 || !self.all_empty()) {
+                self.prefill()?;
+            }
+            if self.all_empty() {
+                if self.serve.waiting_len() > 0 {
+                    bail!("drain stalled: waiting sequences cannot be admitted");
+                }
+                break;
+            }
             out.extend(self.decode_chunk()?);
         }
         Ok(out)
@@ -325,18 +492,31 @@ impl GenEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::artifacts::test_artifacts_dir;
     use crate::runtime::Manifest;
     use crate::tasks::{AdditionTask, Task};
-    use std::path::PathBuf;
 
-    fn setup() -> (Arc<Engine>, Arc<ParamSet>) {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let m = Manifest::load(&dir).expect("run `make artifacts` first");
+    /// None (and a graceful skip) when `make artifacts` has not been run.
+    fn setup() -> Option<(Arc<Engine>, Arc<ParamSet>)> {
+        let dir = test_artifacts_dir()?;
+        let m = Manifest::load(&dir).expect("manifest load");
         let spec = m.tier("nano").unwrap();
         let engine =
             Arc::new(Engine::load_subset(spec, Some(&["init", "prefill", "decode"])).unwrap());
         let params = ParamSet::init(&engine, [1, 2]).unwrap();
-        (engine, params)
+        Some((engine, params))
+    }
+
+    macro_rules! require_artifacts {
+        ($setup:expr) => {
+            match $setup {
+                Some(x) => x,
+                None => {
+                    eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+                    return;
+                }
+            }
+        };
     }
 
     fn prompts(n: usize) -> Vec<Prompt> {
@@ -353,7 +533,7 @@ mod tests {
 
     #[test]
     fn generates_trajectories_with_consistent_bookkeeping() {
-        let (engine, params) = setup();
+        let (engine, params) = require_artifacts!(setup());
         let mut g = GenEngine::new(engine, params, 0, 1.0, 7);
         let mut ps = prompts(4);
         assert_eq!(g.fill(&mut ps).unwrap(), 4);
@@ -381,7 +561,7 @@ mod tests {
 
     #[test]
     fn update_weights_interrupts_and_tags_segments() {
-        let (engine, params) = setup();
+        let (engine, params) = require_artifacts!(setup());
         let mut g = GenEngine::new(engine.clone(), params.clone(), 0, 1.0, 11);
         let mut ps = prompts(4);
         g.fill(&mut ps).unwrap();
@@ -396,6 +576,7 @@ mod tests {
         let interrupted = g.update_weights(p2);
         assert!(interrupted > 0);
         assert!(g.needs_prefill());
+        assert!(g.recompute_tokens > 0, "interrupt cost accounted");
         g.prefill().unwrap();
         let mut finished = Vec::new();
         for _ in 0..32 {
@@ -417,7 +598,7 @@ mod tests {
 
     #[test]
     fn drain_finishes_everything() {
-        let (engine, params) = setup();
+        let (engine, params) = require_artifacts!(setup());
         let mut g = GenEngine::new(engine, params, 0, 1.0, 13);
         let mut ps = prompts(3);
         g.fill(&mut ps).unwrap();
@@ -428,7 +609,7 @@ mod tests {
 
     #[test]
     fn greedy_is_deterministic() {
-        let (engine, params) = setup();
+        let (engine, params) = require_artifacts!(setup());
         let run = |seed| {
             let mut g = GenEngine::new(engine.clone(), params.clone(), 0, 0.0, seed);
             let mut ps = prompts(2);
@@ -439,25 +620,48 @@ mod tests {
         assert_eq!(run(1), run(999)); // temp=0 ignores the rng
     }
 
+    #[test]
+    fn group_siblings_hit_the_prefix_cache() {
+        let (engine, params) = require_artifacts!(setup());
+        // small blocks so the short nano prompts span whole cacheable blocks
+        let serve = ServeCfg { block_size: 4, num_blocks: 512, max_seqs: usize::MAX,
+                              prefix_cache: true };
+        let mut g = GenEngine::with_serve(engine, params, 0, 1.0, 17, Some(serve));
+        // one prompt sampled G times (GRPO group sampling): the first
+        // sibling pays the prompt prefill and populates the radix cache ...
+        let task = AdditionTask;
+        let mut rng = Rng::new(5);
+        let base = task.sample(&mut rng, 2);
+        let mut first = vec![base.clone()];
+        g.fill(&mut first).unwrap();
+        g.drain().unwrap();
+        assert_eq!(g.serve_stats().prefill_tokens_cached, 0);
+        // ... and the remaining siblings reuse it
+        let mut rest: Vec<Prompt> = (0..3).map(|_| base.clone()).collect();
+        g.fill(&mut rest).unwrap();
+        let out = g.drain().unwrap();
+        assert_eq!(out.len(), 3);
+        let stats = g.serve_stats();
+        assert!(
+            stats.prefill_tokens_cached > 0,
+            "siblings should reuse the shared prompt prefix: {stats:?}"
+        );
+    }
+
     // helper: Vec<SendLiteral> clone via literal reshape (Literal has no Clone;
-// round-trip through shape-preserving reshape gives a deep copy)
+    // round-trip through shape-preserving reshape gives a deep copy)
     trait CloneTensors {
-    fn clone_into_vec(&self) -> Vec<SendLiteral>;
-}
+        fn clone_into_vec(&self) -> Vec<SendLiteral>;
+    }
 
     impl CloneTensors for Vec<SendLiteral> {
-    fn clone_into_vec(&self) -> Vec<SendLiteral> {
-        self.iter()
-            .map(|t| {
-                let dims: Vec<i64> = t
-                    .lit()
-                    .array_shape()
-                    .unwrap()
-                    .dims()
-                    .to_vec();
-                SendLiteral(t.lit().reshape(&dims).unwrap())
-            })
-            .collect()
+        fn clone_into_vec(&self) -> Vec<SendLiteral> {
+            self.iter()
+                .map(|t| {
+                    let dims: Vec<i64> = t.lit().array_shape().unwrap().dims().to_vec();
+                    SendLiteral(t.lit().reshape(&dims).unwrap())
+                })
+                .collect()
+        }
     }
-}
 }

@@ -1,6 +1,9 @@
 //! Rollout worker thread — wraps a `GenEngine` with the async plumbing:
 //! weight-sync polling (the pull side of `update_weights`), prompt-queue
 //! refills, decode loop, and reward submission (off-thread, §6 overlap).
+//! The engine runs on the `serve/` paged-KV layer, so refills are sized by
+//! the scheduler's admission capacity and preemptions/cache hits surface in
+//! the trace.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -12,6 +15,7 @@ use anyhow::Result;
 
 use crate::reward::{RewardRequest, RewardService};
 use crate::runtime::Engine;
+use crate::serve::ServeCfg;
 use crate::tasks::Prompt;
 
 use super::buffer::ReplayBuffer;
@@ -37,6 +41,8 @@ pub struct RolloutCfg {
     pub temperature: f32,
     /// refill when empty fraction >= this (or everything is empty)
     pub refill_fraction: f64,
+    /// serving-layer configuration (KV block budget, prefix cache)
+    pub serve: Option<ServeCfg>,
 }
 
 /// Body of one rollout worker thread.
@@ -44,10 +50,12 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                           shared: RolloutShared, cfg: RolloutCfg, seed: u64)
     -> Result<()> {
     let params = shared.server.get();
-    let mut gen = GenEngine::new(engine, params, worker_id, cfg.temperature, seed);
+    let mut gen = GenEngine::with_serve(engine, params, worker_id, cfg.temperature,
+                                        seed, cfg.serve.clone());
     let b = gen.n_slots();
     // weight sync deferred until drain completes (non-interruptible mode)
     let mut pending_sync = false;
+    let mut seen_preemptions: u64 = 0;
 
     while !shared.stop.load(Ordering::Acquire) {
         // -- weight sync (the update_weights request) -------------------
@@ -68,6 +76,12 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                         version: params.version,
                     });
                 }
+                let stats = gen.serve_stats();
+                shared.trace.log(Event::CacheStat {
+                    worker: worker_id,
+                    cached_tokens: stats.prefill_tokens_cached,
+                    computed_tokens: stats.prefill_tokens_computed,
+                });
                 pending_sync = false;
             } else {
                 // finish in-flight sequences under the old weights first
@@ -76,26 +90,35 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
         }
 
         // -- refill ------------------------------------------------------
+        let capacity = gen.fill_capacity();
         let empties = gen.empty_slots();
-        let want_refill = !pending_sync
-            && empties > 0
+        let refill_wave = !pending_sync
             && (gen.all_empty()
                 || gen.needs_prefill()
                 || (empties as f64) >= (b as f64) * cfg.refill_fraction);
-        if want_refill {
-            let mut pulled: Vec<Prompt> = {
-                let mut q = shared.queue.lock().unwrap();
-                let n = empties.min(q.len());
-                q.drain(..n).collect()
-            };
-            if !pulled.is_empty() {
-                let n = gen.fill(&mut pulled)?;
-                debug_assert!(pulled.is_empty());
-                shared.trace.log(Event::GenStart { worker: worker_id, slots: n });
+        if refill_wave {
+            if capacity > 0 {
+                let mut pulled: Vec<Prompt> = {
+                    let mut q = shared.queue.lock().unwrap();
+                    let n = capacity.min(q.len());
+                    q.drain(..n).collect()
+                };
+                if !pulled.is_empty() {
+                    let n = gen.fill(&mut pulled)?;
+                    debug_assert!(pulled.is_empty());
+                    shared.trace.log(Event::GenStart { worker: worker_id, slots: n });
+                }
+            }
+            // OOM-deferred or preempted sequences wait in the scheduler
+            // queue even when the prompt queue is dry — give them an
+            // admission wave as soon as one could actually admit (a wave
+            // that admits 0 still pays a full dense prefill)
+            if gen.admission_feasible() {
+                gen.request_prefill();
             }
         }
 
-        if gen.needs_prefill() && !gen.all_empty() {
+        if gen.needs_prefill() && (gen.waiting() > 0 || !gen.all_empty()) {
             gen.prefill()?;
         }
 
@@ -106,10 +129,18 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
             shared
                 .gen_tokens
                 .fetch_add(gen.tokens_generated - before, Ordering::Relaxed);
+            let preemptions = gen.preemptions();
+            if preemptions > seen_preemptions {
+                shared.trace.log(Event::Preempt {
+                    worker: worker_id,
+                    seqs: (preemptions - seen_preemptions) as usize,
+                });
+                seen_preemptions = preemptions;
+            }
             for traj in finished {
                 submit_for_reward(&shared, &gen, traj);
             }
-        } else if gen.all_empty() {
+        } else if gen.all_empty() && gen.waiting() == 0 {
             // nothing to do: either gated by staleness control or shutting
             // down — idle briefly (this is the idleness the paper's Fig. 1
             // shows for synchronous systems)

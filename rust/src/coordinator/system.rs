@@ -20,6 +20,7 @@ use anyhow::{Context, Result};
 use crate::config::Config;
 use crate::reward::RewardService;
 use crate::runtime::{Engine, Manifest, ParamSet, TrainState};
+use crate::serve::ServeCfg;
 use crate::tasks::{self, dataset::LevelMix, Dataset, SuiteResult};
 use crate::text::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
@@ -184,6 +185,22 @@ impl System {
             );
         }
 
+        // serving layer: paged KV budget + prefix cache per rollout worker
+        let serve = {
+            let c = &spec.config;
+            let bs = if cfg.kv_block_size == 0 {
+                ServeCfg::default_block_size(c.max_seq)
+            } else {
+                cfg.kv_block_size
+            };
+            let mut s = ServeCfg::for_engine(c.gen_batch, c.max_seq, bs);
+            if cfg.kv_blocks > 0 {
+                s.num_blocks = cfg.kv_blocks;
+            }
+            s.prefix_cache = cfg.prefix_cache;
+            s
+        };
+
         // rollout workers
         for w in 0..cfg.n_rollout_workers {
             let shared = RolloutShared {
@@ -199,6 +216,7 @@ impl System {
                 interruptible,
                 temperature: cfg.temperature,
                 refill_fraction: cfg.refill_fraction,
+                serve: Some(serve.clone()),
             };
             let engine = Arc::clone(&self.engine);
             let seed = cfg.seed ^ (w as u64 + 1).wrapping_mul(0xabcd1234);

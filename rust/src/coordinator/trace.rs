@@ -20,6 +20,10 @@ pub enum Event {
     TrainStart { version: Version, batch: usize },
     TrainEnd { version: Version, tokens: usize },
     RewardDone { worker: usize, correct: bool },
+    /// worker w preempted sequences to free KV blocks (serve/ OOM)
+    Preempt { worker: usize, seqs: usize },
+    /// worker w prefix-cache counters at weight sync (serve/)
+    CacheStat { worker: usize, cached_tokens: u64, computed_tokens: u64 },
 }
 
 #[derive(Debug, Clone)]
@@ -83,6 +87,10 @@ impl Trace {
                 }
                 Event::RewardDone { worker, correct } => {
                     ("reward_done", *worker, *correct as i64, 0)
+                }
+                Event::Preempt { worker, seqs } => ("preempt", *worker, *seqs as i64, 0),
+                Event::CacheStat { worker, cached_tokens, computed_tokens } => {
+                    ("cache_stat", *worker, *cached_tokens as i64, *computed_tokens as i64)
                 }
             };
             out.push_str(&format!("{:.6},{kind},{actor},{a},{b}\n", s.t));

@@ -12,21 +12,30 @@ pub enum Ast {
     Div(Box<Ast>, Box<Ast>),
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EvalError {
-    #[error("lex error at byte {0}")]
     Lex(usize),
-    #[error("parse error: {0}")]
     Parse(String),
-    #[error("division by zero")]
     DivZero,
-    #[error("non-integer division")]
     NonIntegerDiv,
-    #[error("arithmetic overflow")]
     Overflow,
-    #[error("expression too deep")]
     TooDeep,
 }
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalError::Lex(pos) => write!(f, "lex error at byte {pos}"),
+            EvalError::Parse(msg) => write!(f, "parse error: {msg}"),
+            EvalError::DivZero => write!(f, "division by zero"),
+            EvalError::NonIntegerDiv => write!(f, "non-integer division"),
+            EvalError::Overflow => write!(f, "arithmetic overflow"),
+            EvalError::TooDeep => write!(f, "expression too deep"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
 
 const MAX_DEPTH: usize = 64;
 

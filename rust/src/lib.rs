@@ -11,6 +11,7 @@ pub mod coordinator;
 pub mod interp;
 pub mod reward;
 pub mod runtime;
+pub mod serve;
 pub mod exp;
 pub mod sim;
 pub mod tasks;

@@ -51,7 +51,8 @@ fn print_usage() {
          areal exp <fig1|fig3|fig4|fig5|fig6a|fig6b|table1|table2|table45|table6|table7|table8> [key=value ...]\n\n\
          config keys: tier mode eta interruptible workers task global_batch\n\
          ppo_minibatches steps lr baseline decoupled dynamic_batching\n\
-         token_budget sft_steps sft_lr group_size seed out_dir ... (config.rs)"
+         token_budget sft_steps sft_lr group_size seed out_dir\n\
+         kv_block_size kv_blocks prefix_cache ... (config.rs)"
     );
 }
 
@@ -127,18 +128,27 @@ fn cmd_sim(args: &[String]) -> Result<()> {
         cfg.eta = if eta == "inf" { None } else { Some(eta.parse()?) };
     }
     if let Some(i) = kv(args, "interruptible") {
-        cfg.interruptible = i == "true" || i == "1";
+        cfg.interruptible = areal::config::parse_bool(&i)?;
     }
     if let Some(s) = kv(args, "steps") {
         cfg.n_steps = s.parse()?;
+    }
+    if let Some(g) = kv(args, "group_size") {
+        cfg.group_size = g.parse()?;
+    }
+    if let Some(p) = kv(args, "prefix_cache") {
+        cfg.prefix_cache = areal::config::parse_bool(&p)?;
     }
     let r = sim::run_policy(&mode, &cfg);
     println!(
         "policy={} model={} gpus={} ctx={}\n  total {:.1}s for {} steps — \
          effective {:.1} ktok/s, gen util {:.0}%, interrupts {}, \
-         mean staleness {:.2}",
+         mean staleness {:.2}\n  prefill {:.2}M tok computed, {:.2}M cached \
+         (hit rate {:.1}%), {:.2}M recomputed on interrupts",
         r.policy, model, gpus, ctx, r.total_s, r.steps,
-        r.effective_tps / 1e3, 100.0 * r.gen_util, r.interrupts, r.mean_staleness
+        r.effective_tps / 1e3, 100.0 * r.gen_util, r.interrupts, r.mean_staleness,
+        r.prefill_tokens / 1e6, r.cached_prefill_tokens / 1e6,
+        100.0 * r.cache_hit_rate, r.recompute_tokens / 1e6
     );
     print!("{}", sim::timeline::render(&r.timeline, 72));
     Ok(())

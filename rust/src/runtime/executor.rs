@@ -207,19 +207,30 @@ impl Engine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::artifacts::Manifest;
+    use crate::runtime::artifacts::{test_artifacts_dir, Manifest};
     use crate::runtime::tensor::HostTensor;
-    use std::path::PathBuf;
 
-    fn engine() -> Engine {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let m = Manifest::load(&dir).expect("run `make artifacts` first");
-        Engine::load_subset(m.tier("nano").unwrap(), Some(&["init", "logprob"])).unwrap()
+    fn engine() -> Option<Engine> {
+        let dir = test_artifacts_dir()?;
+        let m = Manifest::load(&dir).expect("manifest load");
+        Some(Engine::load_subset(m.tier("nano").unwrap(), Some(&["init", "logprob"])).unwrap())
+    }
+
+    macro_rules! engine_or_skip {
+        () => {
+            match engine() {
+                Some(e) => e,
+                None => {
+                    eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+                    return;
+                }
+            }
+        };
     }
 
     #[test]
     fn init_produces_all_params() {
-        let e = engine();
+        let e = engine_or_skip!();
         let seed = HostTensor::u32(vec![2], vec![1, 2]).to_literal().unwrap();
         let outs = e.run("init", &[&seed]).unwrap();
         assert_eq!(outs.len(), e.spec.n_params());
@@ -232,7 +243,7 @@ mod tests {
 
     #[test]
     fn wrong_arity_is_an_error() {
-        let e = engine();
+        let e = engine_or_skip!();
         let seed = HostTensor::u32(vec![2], vec![1, 2]).to_literal().unwrap();
         assert!(e.run("init", &[&seed, &seed]).is_err());
         assert!(e.run("no_such_entry", &[&seed]).is_err());
@@ -240,7 +251,7 @@ mod tests {
 
     #[test]
     fn stats_accumulate() {
-        let e = engine();
+        let e = engine_or_skip!();
         let seed = HostTensor::u32(vec![2], vec![1, 2]).to_literal().unwrap();
         e.run("init", &[&seed]).unwrap();
         e.run("init", &[&seed]).unwrap();

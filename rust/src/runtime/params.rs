@@ -204,20 +204,31 @@ pub fn load_checkpoint(path: &Path, spec: &TierSpec) -> Result<TrainState> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::artifacts::Manifest;
-    use std::path::PathBuf;
+    use crate::runtime::artifacts::{test_artifacts_dir, Manifest};
 
-    fn spec_and_engine() -> (TierSpec, Engine) {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        let m = Manifest::load(&dir).expect("run `make artifacts` first");
+    fn spec_and_engine() -> Option<(TierSpec, Engine)> {
+        let dir = test_artifacts_dir()?;
+        let m = Manifest::load(&dir).expect("manifest load");
         let spec = m.tier("nano").unwrap().clone();
         let engine = Engine::load_subset(&spec, Some(&["init"])).unwrap();
-        (spec, engine)
+        Some((spec, engine))
+    }
+
+    macro_rules! setup_or_skip {
+        () => {
+            match spec_and_engine() {
+                Some(x) => x,
+                None => {
+                    eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+                    return;
+                }
+            }
+        };
     }
 
     #[test]
     fn init_and_fresh_state() {
-        let (spec, engine) = spec_and_engine();
+        let (spec, engine) = setup_or_skip!();
         let params = ParamSet::init(&engine, [1, 2]).unwrap();
         assert_eq!(params.n(), spec.n_params());
         assert_eq!(params.version, 0);
@@ -228,7 +239,7 @@ mod tests {
 
     #[test]
     fn checkpoint_roundtrip() {
-        let (spec, engine) = spec_and_engine();
+        let (spec, engine) = setup_or_skip!();
         let params = ParamSet::init(&engine, [3, 4]).unwrap();
         let mut state = TrainState::fresh(&spec, params).unwrap();
         state.step = 42;
@@ -246,7 +257,7 @@ mod tests {
 
     #[test]
     fn rejects_garbage_file() {
-        let (spec, _) = spec_and_engine();
+        let (spec, _) = setup_or_skip!();
         let dir = std::env::temp_dir().join("areal_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("garbage.ckpt");

@@ -1,0 +1,274 @@
+//! Paged KV-cache block manager (DESIGN.md §5).
+//!
+//! Physical KV memory is carved into fixed-size token blocks, the vLLM
+//! PagedAttention model: a sequence owns a list of block ids instead of a
+//! contiguous [T]-sized slab, so memory is allocated as generation proceeds
+//! and shared prefixes are shared physically. Blocks are ref-counted — the
+//! radix prefix cache and every in-flight sequence that maps a block each
+//! hold one reference — and support copy-on-write for the (rare) case of
+//! appending into a shared partial block. Each block carries the policy
+//! `Version` whose weights produced its KV values; `update_weights`
+//! invalidation (the paper's §4.1 cache-rebuild rule) is driven off this
+//! tag.
+//!
+//! This module is pure bookkeeping: on the XLA tier the KV values live in
+//! fixed-shape device literals, so the block manager is the source of truth
+//! for *placement and lifetime*, which is what the scheduler, the prefix
+//! cache, the simulator, and the benches consume.
+
+use crate::runtime::Version;
+
+/// Index of a physical KV block.
+pub type BlockId = usize;
+
+#[derive(Debug, Clone)]
+struct Block {
+    /// outstanding references (prefix cache + in-flight sequences)
+    refs: u32,
+    /// policy version whose weights produced this block's KV
+    version: Version,
+    /// valid token positions in the block (== block_size once full)
+    filled: usize,
+}
+
+/// Fixed pool of ref-counted KV blocks.
+#[derive(Debug)]
+pub struct BlockManager {
+    block_size: usize,
+    blocks: Vec<Block>,
+    free: Vec<BlockId>,
+    /// copy-on-write copies performed (shared block appended to)
+    pub cow_copies: u64,
+    peak_in_use: usize,
+}
+
+impl BlockManager {
+    pub fn new(num_blocks: usize, block_size: usize) -> Self {
+        assert!(num_blocks > 0, "need at least one KV block");
+        assert!(block_size > 0, "block size must be positive");
+        BlockManager {
+            block_size,
+            blocks: vec![Block { refs: 0, version: 0, filled: 0 }; num_blocks],
+            free: (0..num_blocks).rev().collect(),
+            cow_copies: 0,
+            peak_in_use: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.blocks.len() - self.free.len()
+    }
+
+    pub fn peak_in_use(&self) -> usize {
+        self.peak_in_use
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for_tokens(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Allocate a fresh block (refcount 1) tagged with `version`.
+    pub fn try_alloc(&mut self, version: Version) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        let b = &mut self.blocks[id];
+        debug_assert_eq!(b.refs, 0, "block on free list still referenced");
+        b.refs = 1;
+        b.version = version;
+        b.filled = 0;
+        self.peak_in_use = self.peak_in_use.max(self.blocks_in_use());
+        Some(id)
+    }
+
+    /// Add a reference to a live block.
+    pub fn retain(&mut self, id: BlockId) {
+        let b = &mut self.blocks[id];
+        assert!(b.refs > 0, "retain on free block {id}");
+        b.refs += 1;
+    }
+
+    /// Drop one reference; the block returns to the free list only when the
+    /// last reference goes away. Releasing an unreferenced block is a logic
+    /// error (the refcount can never go negative).
+    pub fn release(&mut self, id: BlockId) {
+        let b = &mut self.blocks[id];
+        assert!(b.refs > 0, "release on free block {id} (double free)");
+        b.refs -= 1;
+        if b.refs == 0 {
+            self.free.push(id);
+        }
+    }
+
+    pub fn ref_count(&self, id: BlockId) -> u32 {
+        self.blocks[id].refs
+    }
+
+    pub fn version(&self, id: BlockId) -> Version {
+        self.blocks[id].version
+    }
+
+    /// Re-tag a block after its KV was recomputed under newer weights.
+    pub fn set_version(&mut self, id: BlockId, version: Version) {
+        debug_assert!(self.blocks[id].refs > 0, "set_version on free block");
+        self.blocks[id].version = version;
+    }
+
+    pub fn filled(&self, id: BlockId) -> usize {
+        self.blocks[id].filled
+    }
+
+    pub fn set_filled(&mut self, id: BlockId, filled: usize) {
+        assert!(filled <= self.block_size);
+        debug_assert!(self.blocks[id].refs > 0, "set_filled on free block");
+        self.blocks[id].filled = filled;
+    }
+
+    /// Copy-on-write: return a block that is safe to append into. If `id`
+    /// has a single owner it is returned as-is; otherwise a fresh copy is
+    /// allocated (carrying over `filled`), the caller's reference to `id`
+    /// is dropped, and the copy is returned. `None` means out of blocks —
+    /// the caller must evict or preempt and retry.
+    pub fn make_writable(&mut self, id: BlockId, version: Version) -> Option<BlockId> {
+        assert!(self.blocks[id].refs > 0, "make_writable on free block");
+        if self.blocks[id].refs == 1 {
+            return Some(id);
+        }
+        let filled = self.blocks[id].filled;
+        let copy = self.try_alloc(version)?;
+        self.blocks[copy].filled = filled;
+        self.release(id);
+        self.cow_copies += 1;
+        Some(copy)
+    }
+
+    /// Structural invariants, for the property tests:
+    /// free list has no duplicates, holds exactly the zero-ref blocks, and
+    /// every referenced block is off the list.
+    pub fn check(&self) -> Result<(), String> {
+        let mut on_free = vec![false; self.blocks.len()];
+        for &id in &self.free {
+            if id >= self.blocks.len() {
+                return Err(format!("free list id {id} out of range"));
+            }
+            if on_free[id] {
+                return Err(format!("block {id} on free list twice"));
+            }
+            on_free[id] = true;
+            if self.blocks[id].refs != 0 {
+                return Err(format!(
+                    "referenced block {id} (refs {}) on free list",
+                    self.blocks[id].refs
+                ));
+            }
+        }
+        for (id, b) in self.blocks.iter().enumerate() {
+            if b.refs == 0 && !on_free[id] {
+                return Err(format!("unreferenced block {id} leaked (not on free list)"));
+            }
+            if b.filled > self.block_size {
+                return Err(format!("block {id} overfilled: {}", b.filled));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut bm = BlockManager::new(4, 16);
+        assert_eq!(bm.free_blocks(), 4);
+        let a = bm.try_alloc(0).unwrap();
+        let b = bm.try_alloc(0).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(bm.free_blocks(), 2);
+        assert_eq!(bm.ref_count(a), 1);
+        bm.release(a);
+        assert_eq!(bm.free_blocks(), 3);
+        bm.release(b);
+        assert_eq!(bm.free_blocks(), 4);
+        bm.check().unwrap();
+    }
+
+    #[test]
+    fn pool_exhaustion_returns_none() {
+        let mut bm = BlockManager::new(2, 16);
+        let _a = bm.try_alloc(0).unwrap();
+        let _b = bm.try_alloc(0).unwrap();
+        assert!(bm.try_alloc(0).is_none());
+        assert_eq!(bm.peak_in_use(), 2);
+    }
+
+    #[test]
+    fn refcounted_sharing() {
+        let mut bm = BlockManager::new(2, 16);
+        let a = bm.try_alloc(3).unwrap();
+        bm.retain(a);
+        assert_eq!(bm.ref_count(a), 2);
+        bm.release(a);
+        assert_eq!(bm.free_blocks(), 1, "still referenced");
+        bm.release(a);
+        assert_eq!(bm.free_blocks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_is_rejected() {
+        let mut bm = BlockManager::new(2, 16);
+        let a = bm.try_alloc(0).unwrap();
+        bm.release(a);
+        bm.release(a);
+    }
+
+    #[test]
+    fn cow_on_shared_block() {
+        let mut bm = BlockManager::new(3, 8);
+        let a = bm.try_alloc(0).unwrap();
+        bm.set_filled(a, 5);
+        // sole owner: no copy
+        assert_eq!(bm.make_writable(a, 0).unwrap(), a);
+        assert_eq!(bm.cow_copies, 0);
+        // shared: copy, original keeps one ref
+        bm.retain(a);
+        let w = bm.make_writable(a, 1).unwrap();
+        assert_ne!(w, a);
+        assert_eq!(bm.filled(w), 5);
+        assert_eq!(bm.version(w), 1);
+        assert_eq!(bm.ref_count(a), 1);
+        assert_eq!(bm.cow_copies, 1);
+        bm.check().unwrap();
+    }
+
+    #[test]
+    fn version_tagging() {
+        let mut bm = BlockManager::new(2, 8);
+        let a = bm.try_alloc(7).unwrap();
+        assert_eq!(bm.version(a), 7);
+        bm.set_version(a, 9);
+        assert_eq!(bm.version(a), 9);
+    }
+
+    #[test]
+    fn blocks_for_tokens_rounds_up() {
+        let bm = BlockManager::new(1, 16);
+        assert_eq!(bm.blocks_for_tokens(0), 0);
+        assert_eq!(bm.blocks_for_tokens(1), 1);
+        assert_eq!(bm.blocks_for_tokens(16), 1);
+        assert_eq!(bm.blocks_for_tokens(17), 2);
+    }
+}

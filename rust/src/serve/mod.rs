@@ -1,0 +1,26 @@
+//! `serve/` — the paged serving subsystem under the rollout workers
+//! (DESIGN.md §5).
+//!
+//! Three layers, engine-agnostic (token ids and lengths only):
+//!
+//! - [`blocks`]: fixed-size ref-counted KV blocks with copy-on-write and
+//!   per-block policy-version tags (the PagedAttention memory model);
+//! - [`radix`]: a radix-tree prefix cache over block-aligned token runs
+//!   with LRU eviction — GRPO sibling samples and re-queued interrupted
+//!   rollouts reuse cached prefixes instead of re-prefilling them;
+//! - [`scheduler`]: continuous batching with FIFO admission, growth on
+//!   block boundaries, preemption-on-OOM, and the paper's §4.1
+//!   `update_weights` invalidation of stale-version KV.
+//!
+//! `coordinator::GenEngine` runs its slot batch on top of a [`Scheduler`];
+//! `sim::run_async` models the same cache to make the simulated figure
+//! comparisons cache-aware; `benches/bench_serve.rs` measures the
+//! prefill-token savings on a group-sampling workload.
+
+pub mod blocks;
+pub mod radix;
+pub mod scheduler;
+
+pub use blocks::{BlockId, BlockManager};
+pub use radix::{InsertStats, PrefixMatch, RadixCache};
+pub use scheduler::{Admitted, Grow, Scheduler, SeqId, ServeCfg, ServeStats};

@@ -1,0 +1,618 @@
+//! Radix-tree prefix cache keyed by token ids (DESIGN.md §5).
+//!
+//! The SGLang idea adapted to paged KV blocks: cached prefixes live in a
+//! radix tree whose edges are block-aligned runs of token ids, one physical
+//! KV block per `block_size` tokens. Sibling samples of the same prompt
+//! (GRPO group sampling) and re-queued preempted/interrupted rollouts match
+//! their longest cached prefix instead of re-prefilling it. Properties:
+//!
+//! - edges split at block boundaries, so a block never straddles two nodes
+//!   and children are keyed by their first block's token chunk (distinct
+//!   children can therefore never collide);
+//! - the tree holds one reference per cached block; `match_prefix` retains
+//!   matched blocks for the caller, so eviction can never free a block an
+//!   in-flight sequence still maps (refcounts, not ordering, guarantee it);
+//! - eviction is LRU over leaves whose blocks are cache-only;
+//! - every node carries the policy `Version` whose weights produced its KV;
+//!   `invalidate_stale` drops all older subtrees — the paper's §4.1 rule
+//!   that KV computed under old weights is discarded on `update_weights`.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::Version;
+
+use super::blocks::{BlockId, BlockManager};
+
+type NodeId = usize;
+
+const ROOT: NodeId = 0;
+
+#[derive(Debug)]
+struct Node {
+    /// edge label from the parent: a block-aligned run of token ids
+    /// (empty only for the root)
+    key: Vec<i32>,
+    /// one physical block per `block_size` tokens of `key`
+    blocks: Vec<BlockId>,
+    /// policy version whose weights produced this KV
+    version: Version,
+    /// children keyed by their first block's token chunk
+    children: BTreeMap<Vec<i32>, NodeId>,
+    parent: NodeId,
+    /// logical LRU clock
+    last_access: u64,
+}
+
+/// Longest cached prefix of a query; `blocks` are retained for the caller
+/// (one reference each), who must `release` them when done.
+#[derive(Debug)]
+pub struct PrefixMatch {
+    pub blocks: Vec<BlockId>,
+    /// matched token count (always a multiple of the block size)
+    pub tokens: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InsertStats {
+    /// tokens newly added to the cache
+    pub new_tokens: usize,
+    /// tokens that were already cached along the inserted path
+    pub reused_tokens: usize,
+}
+
+/// Radix tree over block-aligned token prefixes.
+#[derive(Debug)]
+pub struct RadixCache {
+    nodes: Vec<Option<Node>>,
+    free_nodes: Vec<NodeId>,
+    clock: u64,
+    /// lifetime counters
+    pub hit_tokens: u64,
+    pub miss_tokens: u64,
+    pub evicted_blocks: u64,
+    pub invalidated_blocks: u64,
+}
+
+impl Default for RadixCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixCache {
+    pub fn new() -> Self {
+        let root = Node {
+            key: Vec::new(),
+            blocks: Vec::new(),
+            version: 0,
+            children: BTreeMap::new(),
+            parent: ROOT,
+            last_access: 0,
+        };
+        RadixCache {
+            nodes: vec![Some(root)],
+            free_nodes: Vec::new(),
+            clock: 0,
+            hit_tokens: 0,
+            miss_tokens: 0,
+            evicted_blocks: 0,
+            invalidated_blocks: 0,
+        }
+    }
+
+    fn node(&self, id: NodeId) -> &Node {
+        self.nodes[id].as_ref().expect("dangling node id")
+    }
+
+    fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        self.nodes[id].as_mut().expect("dangling node id")
+    }
+
+    fn alloc_node(&mut self, node: Node) -> NodeId {
+        match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = Some(node);
+                id
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.iter().flatten().count()
+    }
+
+    /// Total cached tokens (root excluded).
+    pub fn cached_tokens(&self) -> usize {
+        self.nodes.iter().flatten().map(|n| n.key.len()).sum()
+    }
+
+    /// Blocks the cache alone holds (refcount 1): what eviction could
+    /// eventually reclaim. Interior nodes count too — they become leaves as
+    /// their descendants are evicted.
+    pub fn evictable_blocks(&self, bm: &BlockManager) -> usize {
+        self.nodes
+            .iter()
+            .flatten()
+            .flat_map(|n| n.blocks.iter())
+            .filter(|&&b| bm.ref_count(b) == 1)
+            .count()
+    }
+
+    /// Count matching whole blocks along `child`'s edge starting at `pos`.
+    fn edge_match(&self, child: NodeId, tokens: &[i32], pos: usize, bs: usize) -> usize {
+        let c = self.node(child);
+        let edge_blocks = c.blocks.len();
+        let mut m = 0;
+        while m < edge_blocks {
+            let start = pos + m * bs;
+            if start + bs <= tokens.len()
+                && c.key[m * bs..(m + 1) * bs] == tokens[start..start + bs]
+            {
+                m += 1;
+            } else {
+                break;
+            }
+        }
+        m
+    }
+
+    /// Longest cached prefix of `tokens` whose KV was computed under
+    /// `version`. Matched blocks are retained for the caller.
+    pub fn match_prefix(&mut self, tokens: &[i32], version: Version,
+                        bm: &mut BlockManager) -> PrefixMatch {
+        let bs = bm.block_size();
+        self.clock += 1;
+        let clock = self.clock;
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        let mut blocks = Vec::new();
+        loop {
+            if tokens.len() - pos < bs {
+                break;
+            }
+            let Some(&child) = self.node(cur).children.get(&tokens[pos..pos + bs]) else {
+                break;
+            };
+            if self.node(child).version != version {
+                break; // stale KV is never served
+            }
+            let edge_blocks = self.node(child).blocks.len();
+            let m = self.edge_match(child, tokens, pos, bs);
+            if m == 0 {
+                break;
+            }
+            self.node_mut(child).last_access = clock;
+            for i in 0..m {
+                let b = self.node(child).blocks[i];
+                bm.retain(b);
+                blocks.push(b);
+            }
+            pos += m * bs;
+            if m < edge_blocks {
+                break;
+            }
+            cur = child;
+        }
+        self.hit_tokens += pos as u64;
+        self.miss_tokens += (tokens.len() / bs * bs - pos) as u64;
+        PrefixMatch { blocks, tokens: pos }
+    }
+
+    /// Cache the block-aligned prefix of `tokens` under `version`.
+    ///
+    /// With `source` given, the sequence's own blocks back the new nodes
+    /// (each gets an extra cache reference — zero copies, the vLLM/SGLang
+    /// arrangement where a finished sequence's pages become the cache).
+    /// Without `source`, fresh blocks are allocated, evicting LRU entries
+    /// first if the pool is short; if it is still short the insert is
+    /// truncated to what fits.
+    pub fn insert(&mut self, tokens: &[i32], version: Version,
+                  source: Option<&[BlockId]>, bm: &mut BlockManager) -> InsertStats {
+        let bs = bm.block_size();
+        let n_full = tokens.len() / bs;
+        let mut stats = InsertStats::default();
+        if n_full == 0 {
+            return stats;
+        }
+        if let Some(sb) = source {
+            debug_assert!(sb.len() >= n_full, "source blocks shorter than prefix");
+        } else {
+            let free = bm.free_blocks();
+            if free < n_full {
+                self.evict(n_full - free, bm);
+            }
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let end = n_full * bs;
+        let mut cur = ROOT;
+        let mut pos = 0usize;
+        while pos < end {
+            let child_opt = self.node(cur).children.get(&tokens[pos..pos + bs]).copied();
+            let Some(child) = child_opt else {
+                // new leaf holding tokens[pos..end]
+                let want = (end - pos) / bs;
+                let mut blks = Vec::with_capacity(want);
+                for i in 0..want {
+                    let blk = match source {
+                        Some(sb) => {
+                            let b = sb[pos / bs + i];
+                            bm.retain(b);
+                            b
+                        }
+                        None => match bm.try_alloc(version) {
+                            Some(b) => {
+                                bm.set_filled(b, bs);
+                                b
+                            }
+                            None => break, // pool exhausted: truncate
+                        },
+                    };
+                    blks.push(blk);
+                }
+                if blks.is_empty() {
+                    return stats;
+                }
+                let got = blks.len();
+                let key = tokens[pos..pos + got * bs].to_vec();
+                let first = key[..bs].to_vec();
+                let id = self.alloc_node(Node {
+                    key,
+                    blocks: blks,
+                    version,
+                    children: BTreeMap::new(),
+                    parent: cur,
+                    last_access: clock,
+                });
+                self.node_mut(cur).children.insert(first, id);
+                stats.new_tokens += got * bs;
+                return stats;
+            };
+            if self.node(child).version != version {
+                // stale subtree shadowing this path: replace it
+                let released = self.remove_subtree(child, bm);
+                self.invalidated_blocks += released as u64;
+                continue;
+            }
+            let edge_blocks = self.node(child).blocks.len();
+            let m = self.edge_match(child, tokens, pos, bs);
+            debug_assert!(m >= 1, "child key must share its first block");
+            self.node_mut(child).last_access = clock;
+            stats.reused_tokens += m * bs;
+            pos += m * bs;
+            if m == edge_blocks {
+                cur = child;
+            } else if pos < end {
+                // diverging mid-edge: split at the boundary and keep going
+                cur = self.split_edge(cur, child, m, bs);
+            } else {
+                break; // inserted prefix ends inside this edge: nothing to add
+            }
+        }
+        stats
+    }
+
+    /// Split `child`'s edge after `at` blocks, interposing a new node
+    /// between `parent` and `child`. Block references move, they are not
+    /// re-counted.
+    fn split_edge(&mut self, parent: NodeId, child: NodeId, at: usize, bs: usize) -> NodeId {
+        let (mid_key, mid_blocks, remainder_first, version, last_access) = {
+            let c = self.node(child);
+            debug_assert!(at > 0 && at < c.blocks.len());
+            (
+                c.key[..at * bs].to_vec(),
+                c.blocks[..at].to_vec(),
+                c.key[at * bs..(at + 1) * bs].to_vec(),
+                c.version,
+                c.last_access,
+            )
+        };
+        let first = mid_key[..bs].to_vec();
+        let mid = self.alloc_node(Node {
+            key: mid_key,
+            blocks: mid_blocks,
+            version,
+            children: BTreeMap::new(),
+            parent,
+            last_access,
+        });
+        {
+            let c = self.node_mut(child);
+            c.key.drain(..at * bs);
+            c.blocks.drain(..at);
+            c.parent = mid;
+        }
+        self.node_mut(mid).children.insert(remainder_first, child);
+        // mid's first chunk equals child's old first chunk: replaces in place
+        self.node_mut(parent).children.insert(first, mid);
+        mid
+    }
+
+    /// Remove `id` and its whole subtree, releasing every block reference
+    /// the cache holds on it. Returns the number of references released
+    /// (blocks still mapped by in-flight sequences survive — only their
+    /// cache reference goes away).
+    fn remove_subtree(&mut self, id: NodeId, bm: &mut BlockManager) -> usize {
+        debug_assert_ne!(id, ROOT, "cannot remove the root");
+        // detach from parent
+        let (parent, first) = {
+            let n = self.node(id);
+            let bs = n.key.len() / n.blocks.len().max(1);
+            (n.parent, n.key[..bs.min(n.key.len())].to_vec())
+        };
+        self.node_mut(parent).children.remove(&first);
+        // tear down the subtree
+        let mut released = 0usize;
+        let mut stack = vec![id];
+        while let Some(nid) = stack.pop() {
+            let node = self.nodes[nid].take().expect("dangling node in subtree");
+            self.free_nodes.push(nid);
+            for &b in &node.blocks {
+                bm.release(b);
+                released += 1;
+            }
+            stack.extend(node.children.values().copied());
+        }
+        released
+    }
+
+    /// LRU eviction: free at least `want` blocks if possible, removing
+    /// least-recently-used leaves whose blocks are cache-only (refcount 1).
+    /// Returns the number of blocks actually returned to the free list.
+    pub fn evict(&mut self, want: usize, bm: &mut BlockManager) -> usize {
+        let before = bm.free_blocks();
+        while bm.free_blocks() - before < want {
+            let mut best: Option<(u64, NodeId)> = None;
+            for (id, slot) in self.nodes.iter().enumerate() {
+                let Some(n) = slot else { continue };
+                if id == ROOT || !n.children.is_empty() {
+                    continue;
+                }
+                if n.blocks.iter().any(|&b| bm.ref_count(b) > 1) {
+                    continue; // mapped by an in-flight sequence
+                }
+                if best.map_or(true, |(la, _)| n.last_access < la) {
+                    best = Some((n.last_access, id));
+                }
+            }
+            let Some((_, victim)) = best else { break };
+            self.evicted_blocks += self.node(victim).blocks.len() as u64;
+            self.remove_subtree(victim, bm);
+        }
+        bm.free_blocks() - before
+    }
+
+    /// Drop every subtree whose KV was computed under weights older than
+    /// `current` — the `update_weights` cache-rebuild rule. Returns the
+    /// number of cache references released.
+    pub fn invalidate_stale(&mut self, current: Version, bm: &mut BlockManager) -> usize {
+        let mut stale = Vec::new();
+        let mut stack = vec![ROOT];
+        while let Some(id) = stack.pop() {
+            let children: Vec<NodeId> = self.node(id).children.values().copied().collect();
+            for c in children {
+                if self.node(c).version < current {
+                    stale.push(c);
+                } else {
+                    stack.push(c);
+                }
+            }
+        }
+        let mut released = 0;
+        for id in stale {
+            released += self.remove_subtree(id, bm);
+        }
+        self.invalidated_blocks += released as u64;
+        released
+    }
+
+    /// Structural invariants, for the property tests.
+    pub fn check(&self, bm: &BlockManager) -> Result<(), String> {
+        let bs = bm.block_size();
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let Some(n) = slot else { continue };
+            if id == ROOT {
+                if !n.key.is_empty() || !n.blocks.is_empty() {
+                    return Err("root must have an empty edge".into());
+                }
+                continue;
+            }
+            if n.key.is_empty() || n.key.len() % bs != 0 {
+                return Err(format!("node {id}: edge length {} not block-aligned", n.key.len()));
+            }
+            if n.blocks.len() != n.key.len() / bs {
+                return Err(format!("node {id}: {} blocks for {} tokens", n.blocks.len(), n.key.len()));
+            }
+            for &b in &n.blocks {
+                if bm.ref_count(b) == 0 {
+                    return Err(format!("node {id}: references freed block {b}"));
+                }
+            }
+            let parent = self.nodes[n.parent]
+                .as_ref()
+                .ok_or_else(|| format!("node {id}: dangling parent"))?;
+            match parent.children.get(&n.key[..bs]) {
+                Some(&back) if back == id => {}
+                _ => return Err(format!("node {id}: not linked from parent by first chunk")),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BS: usize = 4;
+
+    fn bm(blocks: usize) -> BlockManager {
+        BlockManager::new(blocks, BS)
+    }
+
+    fn toks(xs: &[i32]) -> Vec<i32> {
+        xs.to_vec()
+    }
+
+    #[test]
+    fn insert_then_match_longest_prefix() {
+        let mut bm = bm(16);
+        let mut c = RadixCache::new();
+        let t = toks(&[1, 2, 3, 4, 5, 6, 7, 8, 9]); // 2 full blocks + 1 token
+        let s = c.insert(&t, 0, None, &mut bm);
+        assert_eq!(s.new_tokens, 8);
+        let m = c.match_prefix(&t, 0, &mut bm);
+        assert_eq!(m.tokens, 8, "longest cached prefix is the full-block part");
+        assert_eq!(m.blocks.len(), 2);
+        for &b in &m.blocks {
+            assert_eq!(bm.ref_count(b), 2); // cache + caller
+            bm.release(b);
+        }
+        c.check(&bm).unwrap();
+    }
+
+    #[test]
+    fn sibling_prompts_share_prefix() {
+        let mut bm = bm(16);
+        let mut c = RadixCache::new();
+        let a = toks(&[1, 2, 3, 4, 9, 9, 9, 9]);
+        let b = toks(&[1, 2, 3, 4, 7, 7, 7, 7]);
+        c.insert(&a, 0, None, &mut bm);
+        let s = c.insert(&b, 0, None, &mut bm);
+        assert_eq!(s.reused_tokens, 4, "shared first block reused");
+        assert_eq!(s.new_tokens, 4);
+        // both match fully
+        let ma = c.match_prefix(&a, 0, &mut bm);
+        let mb = c.match_prefix(&b, 0, &mut bm);
+        assert_eq!(ma.tokens, 8);
+        assert_eq!(mb.tokens, 8);
+        for x in ma.blocks.iter().chain(mb.blocks.iter()) {
+            bm.release(*x);
+        }
+        // 3 distinct blocks total: split happened at the block boundary
+        assert_eq!(bm.blocks_in_use(), 3);
+        c.check(&bm).unwrap();
+    }
+
+    #[test]
+    fn mid_edge_split_preserves_both() {
+        let mut bm = bm(16);
+        let mut c = RadixCache::new();
+        // one 3-block edge, then a sibling diverging after block 1
+        let a = toks(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]);
+        let b = toks(&[1, 2, 3, 4, 50, 60, 70, 80]);
+        c.insert(&a, 0, None, &mut bm);
+        assert_eq!(c.node_count(), 2); // root + leaf
+        c.insert(&b, 0, None, &mut bm);
+        assert_eq!(c.node_count(), 4); // root + mid + two leaves
+        let ma = c.match_prefix(&a, 0, &mut bm);
+        assert_eq!(ma.tokens, 12);
+        let mb = c.match_prefix(&b, 0, &mut bm);
+        assert_eq!(mb.tokens, 8);
+        for x in ma.blocks.iter().chain(mb.blocks.iter()) {
+            bm.release(*x);
+        }
+        c.check(&bm).unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_never_matches() {
+        let mut bm = bm(8);
+        let mut c = RadixCache::new();
+        let t = toks(&[1, 2, 3, 4]);
+        c.insert(&t, 0, None, &mut bm);
+        let m = c.match_prefix(&t, 1, &mut bm);
+        assert_eq!(m.tokens, 0);
+        assert!(m.blocks.is_empty());
+    }
+
+    #[test]
+    fn invalidate_stale_frees_blocks() {
+        let mut bm = bm(8);
+        let mut c = RadixCache::new();
+        c.insert(&toks(&[1, 2, 3, 4, 5, 6, 7, 8]), 0, None, &mut bm);
+        assert_eq!(bm.blocks_in_use(), 2);
+        let released = c.invalidate_stale(1, &mut bm);
+        assert_eq!(released, 2);
+        assert_eq!(bm.blocks_in_use(), 0);
+        assert_eq!(c.node_count(), 1, "only the root survives");
+        assert_eq!(c.match_prefix(&toks(&[1, 2, 3, 4]), 0, &mut bm).tokens, 0);
+        c.check(&bm).unwrap();
+    }
+
+    #[test]
+    fn lru_eviction_prefers_oldest() {
+        let mut bm = bm(4);
+        let mut c = RadixCache::new();
+        c.insert(&toks(&[1, 1, 1, 1]), 0, None, &mut bm);
+        c.insert(&toks(&[2, 2, 2, 2]), 0, None, &mut bm);
+        // touch the first entry so the second is LRU
+        let m = c.match_prefix(&toks(&[1, 1, 1, 1]), 0, &mut bm);
+        for &b in &m.blocks {
+            bm.release(b);
+        }
+        let freed = c.evict(1, &mut bm);
+        assert_eq!(freed, 1);
+        assert_eq!(c.match_prefix(&toks(&[1, 1, 1, 1]), 0, &mut bm).tokens, 4);
+        // second entry is gone
+        assert_eq!(c.match_prefix(&toks(&[2, 2, 2, 2]), 0, &mut bm).tokens, 0);
+    }
+
+    #[test]
+    fn eviction_skips_in_flight_blocks() {
+        let mut bm = bm(4);
+        let mut c = RadixCache::new();
+        c.insert(&toks(&[1, 1, 1, 1]), 0, None, &mut bm);
+        // a sequence maps the block
+        let m = c.match_prefix(&toks(&[1, 1, 1, 1]), 0, &mut bm);
+        assert_eq!(m.blocks.len(), 1);
+        let freed = c.evict(4, &mut bm);
+        assert_eq!(freed, 0, "referenced block must not be freed");
+        assert_eq!(bm.ref_count(m.blocks[0]), 2);
+        bm.release(m.blocks[0]);
+    }
+
+    #[test]
+    fn insert_from_sequence_blocks_shares_pages() {
+        let mut bm = bm(8);
+        let mut c = RadixCache::new();
+        // a "sequence" owns two blocks
+        let b0 = bm.try_alloc(0).unwrap();
+        let b1 = bm.try_alloc(0).unwrap();
+        bm.set_filled(b0, BS);
+        bm.set_filled(b1, BS);
+        let t = toks(&[5, 6, 7, 8, 9, 10, 11, 12]);
+        let s = c.insert(&t, 0, Some(&[b0, b1]), &mut bm);
+        assert_eq!(s.new_tokens, 8);
+        assert_eq!(bm.ref_count(b0), 2, "cache shares the sequence's page");
+        // sequence finishes and releases its refs: pages stay cached
+        bm.release(b0);
+        bm.release(b1);
+        assert_eq!(bm.blocks_in_use(), 2);
+        let m = c.match_prefix(&t, 0, &mut bm);
+        assert_eq!(m.tokens, 8);
+        assert_eq!(m.blocks, vec![b0, b1]);
+        for &b in &m.blocks {
+            bm.release(b);
+        }
+    }
+
+    #[test]
+    fn oom_insert_truncates() {
+        let mut bm = bm(2);
+        let mut c = RadixCache::new();
+        let t: Vec<i32> = (0..16).collect(); // needs 4 blocks, pool has 2
+        let s = c.insert(&t, 0, None, &mut bm);
+        assert_eq!(s.new_tokens, 8, "truncated to the pool size");
+        let m = c.match_prefix(&t, 0, &mut bm);
+        assert_eq!(m.tokens, 8);
+        for &b in &m.blocks {
+            bm.release(b);
+        }
+        c.check(&bm).unwrap();
+    }
+}

@@ -1,0 +1,724 @@
+//! Continuous-batching scheduler over the paged KV pool (DESIGN.md §5).
+//!
+//! Sits between the generation engine and the block/radix layers:
+//!
+//! - **admission**: waiting sequences are admitted FIFO while both a decode
+//!   slot and enough KV blocks exist; the radix cache supplies the longest
+//!   cached prefix, so sibling samples of a GRPO group and re-queued
+//!   preempted rollouts skip most of their prefill;
+//! - **growth**: each committed token extends the sequence's block table,
+//!   allocating on block boundaries, with copy-on-write if the write target
+//!   is shared;
+//! - **preemption on OOM**: when the pool is exhausted (after LRU-evicting
+//!   cache-only blocks), the youngest running sequence is preempted — its
+//!   committed prefix is folded into the radix cache (making its eventual
+//!   resume cheap) and it returns to the front of the waiting queue. This
+//!   mirrors the interrupt semantics of §4.1: committed tokens are never
+//!   re-sampled, only their KV placement changes;
+//! - **`update_weights`**: stale-version cache entries are dropped
+//!   (`invalidate_stale`), and `note_prefilled` re-tags a sequence's blocks
+//!   once its KV has been rebuilt under the new weights.
+//!
+//! The scheduler is engine-agnostic: it sees token ids and lengths only, so
+//! the same machinery drives the XLA tier, the benches, and the tests.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::runtime::Version;
+
+use super::blocks::{BlockId, BlockManager};
+use super::radix::{PrefixMatch, RadixCache};
+
+/// Scheduler-level sequence identity (the engine maps these to slots).
+pub type SeqId = u64;
+
+#[derive(Debug, Clone)]
+pub struct ServeCfg {
+    /// tokens per KV block
+    pub block_size: usize,
+    /// physical KV blocks in the pool
+    pub num_blocks: usize,
+    /// concurrent running sequences (the engine's decode batch)
+    pub max_seqs: usize,
+    /// radix prefix cache on/off (off = every prefill pays full price)
+    pub prefix_cache: bool,
+}
+
+impl ServeCfg {
+    /// Default KV block size for a given context length: small blocks on
+    /// the short-context testbed tiers so short prompts still span whole
+    /// cacheable blocks; 16 (the vLLM default) above that.
+    pub fn default_block_size(max_seq: usize) -> usize {
+        if max_seq <= 256 {
+            8.min(max_seq.max(1))
+        } else {
+            16
+        }
+    }
+
+    /// Pool sized for an engine with `max_seqs` slots of up to
+    /// `max_seq_len` tokens: every slot can reach full context while the
+    /// prefix cache keeps an equal share of reusable pages.
+    pub fn for_engine(max_seqs: usize, max_seq_len: usize, block_size: usize) -> ServeCfg {
+        let per_seq = (max_seq_len + 1).div_ceil(block_size);
+        ServeCfg {
+            block_size,
+            num_blocks: (2 * per_seq * max_seqs).max(1),
+            max_seqs: max_seqs.max(1),
+            prefix_cache: true,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SeqState {
+    /// committed tokens (prompt + sampled so far)
+    len: usize,
+    /// block-aligned prefix served from the radix cache at admission
+    cached_tokens: usize,
+    /// cache-shared prefix blocks (one reference held per block)
+    cached_blocks: Vec<BlockId>,
+    /// privately allocated tail blocks
+    owned_blocks: Vec<BlockId>,
+    /// admission order; preemption picks the youngest victim
+    admitted_at: u64,
+}
+
+impl SeqState {
+    fn n_blocks(&self) -> usize {
+        self.cached_blocks.len() + self.owned_blocks.len()
+    }
+}
+
+/// A sequence admitted by `schedule`: the scheduler hands back the token
+/// prefix it was submitted with plus how much of it is already cached.
+#[derive(Debug)]
+pub struct Admitted {
+    pub id: SeqId,
+    pub tokens: Vec<i32>,
+    pub cached_tokens: usize,
+}
+
+/// Outcome of `grow_to`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grow {
+    /// block table covers the new length
+    Ok,
+    /// pool exhausted: preempt this (youngest other) sequence and retry
+    Preempt(SeqId),
+    /// pool exhausted and no other sequence to preempt — the budget cannot
+    /// hold even this one sequence
+    Fail,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub prefill_tokens_computed: u64,
+    pub prefill_tokens_cached: u64,
+    pub cache_hit_rate: f64,
+    pub preemptions: u64,
+    pub blocks_in_use: usize,
+    pub free_blocks: usize,
+    pub cached_tokens: usize,
+    pub cow_copies: u64,
+    pub evicted_blocks: u64,
+    pub invalidated_blocks: u64,
+}
+
+/// Continuous-batching scheduler with paged-KV admission control.
+#[derive(Debug)]
+pub struct Scheduler {
+    cfg: ServeCfg,
+    bm: BlockManager,
+    cache: RadixCache,
+    version: Version,
+    waiting: VecDeque<(SeqId, Vec<i32>)>,
+    running: BTreeMap<SeqId, SeqState>,
+    admit_clock: u64,
+    /// prompt/committed tokens whose KV had to be computed at admission
+    pub prefill_tokens_computed: u64,
+    /// prompt/committed tokens served from the prefix cache at admission
+    pub prefill_tokens_cached: u64,
+    pub preemptions: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: ServeCfg) -> Scheduler {
+        assert!(cfg.max_seqs > 0, "need at least one sequence slot");
+        let bm = BlockManager::new(cfg.num_blocks, cfg.block_size);
+        Scheduler {
+            cfg,
+            bm,
+            cache: RadixCache::new(),
+            version: 0,
+            waiting: VecDeque::new(),
+            running: BTreeMap::new(),
+            admit_clock: 0,
+            prefill_tokens_computed: 0,
+            prefill_tokens_cached: 0,
+            preemptions: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &ServeCfg {
+        &self.cfg
+    }
+
+    pub fn version(&self) -> Version {
+        self.version
+    }
+
+    pub fn block_manager(&self) -> &BlockManager {
+        &self.bm
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn is_running(&self, id: SeqId) -> bool {
+        self.running.contains_key(&id)
+    }
+
+    /// All blocks mapped by a running sequence, prefix first.
+    pub fn seq_blocks(&self, id: SeqId) -> Vec<BlockId> {
+        let st = self.running.get(&id).expect("unknown sequence");
+        st.cached_blocks.iter().chain(st.owned_blocks.iter()).copied().collect()
+    }
+
+    /// Queue a sequence (a fresh prompt, or the committed tokens of a
+    /// preempted rollout) for admission. Returns false — without queueing —
+    /// if the sequence could never fit the pool even when it is the sole
+    /// occupant (the caller should surface a configuration error).
+    #[must_use]
+    pub fn submit(&mut self, id: SeqId, tokens: Vec<i32>) -> bool {
+        if self.bm.blocks_for_tokens(tokens.len() + 1) > self.cfg.num_blocks {
+            return false;
+        }
+        self.waiting.push_back((id, tokens));
+        true
+    }
+
+    /// Could the head of the waiting queue be admitted right now (a free
+    /// slot plus enough free-or-evictable blocks)? Callers use this to
+    /// avoid paying for admission waves that cannot admit anything.
+    pub fn admission_feasible(&self) -> bool {
+        if self.running.len() >= self.cfg.max_seqs {
+            return false;
+        }
+        let Some((_, tokens)) = self.waiting.front() else { return false };
+        let needed = self.bm.blocks_for_tokens(tokens.len() + 1);
+        self.bm.free_blocks() + self.cache.evictable_blocks(&self.bm) >= needed
+    }
+
+    /// Admit waiting sequences FIFO while slots and blocks last.
+    pub fn schedule(&mut self) -> Vec<Admitted> {
+        let mut out = Vec::new();
+        while self.running.len() < self.cfg.max_seqs {
+            let Some((id, tokens)) = self.waiting.pop_front() else { break };
+            match self.try_admit(id, &tokens) {
+                Some(cached_tokens) => out.push(Admitted { id, tokens, cached_tokens }),
+                None => {
+                    // head-of-line waits for memory; FIFO order is what
+                    // keeps staleness (Eq. 3) in submission order
+                    self.waiting.push_front((id, tokens));
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    fn try_admit(&mut self, id: SeqId, tokens: &[i32]) -> Option<usize> {
+        let mut m = if self.cfg.prefix_cache {
+            self.cache.match_prefix(tokens, self.version, &mut self.bm)
+        } else {
+            PrefixMatch { blocks: Vec::new(), tokens: 0 }
+        };
+        // room for every committed token plus the next sampled one
+        let total_needed = self.bm.blocks_for_tokens(tokens.len() + 1);
+        let mut own_needed = total_needed - m.blocks.len();
+        if self.bm.free_blocks() < own_needed {
+            let short = own_needed - self.bm.free_blocks();
+            self.cache.evict(short, &mut self.bm);
+        }
+        if self.bm.free_blocks() < own_needed && !m.blocks.is_empty() {
+            // the retained match pins its own cache nodes against eviction —
+            // drop it and retry, trading the cache hit for admission progress
+            for &b in &m.blocks {
+                self.bm.release(b);
+            }
+            m = PrefixMatch { blocks: Vec::new(), tokens: 0 };
+            own_needed = total_needed;
+            if self.bm.free_blocks() < own_needed {
+                let short = own_needed - self.bm.free_blocks();
+                self.cache.evict(short, &mut self.bm);
+            }
+        }
+        if self.bm.free_blocks() < own_needed {
+            for &b in &m.blocks {
+                self.bm.release(b);
+            }
+            return None;
+        }
+        let bs = self.bm.block_size();
+        let mut owned = Vec::with_capacity(own_needed);
+        for j in 0..own_needed {
+            let b = self.bm.try_alloc(self.version).expect("free count checked");
+            let covered = (m.blocks.len() + j) * bs;
+            self.bm.set_filled(b, tokens.len().saturating_sub(covered).min(bs));
+            owned.push(b);
+        }
+        self.prefill_tokens_cached += m.tokens as u64;
+        self.prefill_tokens_computed += (tokens.len() - m.tokens) as u64;
+        self.admit_clock += 1;
+        self.running.insert(
+            id,
+            SeqState {
+                len: tokens.len(),
+                cached_tokens: m.tokens,
+                cached_blocks: m.blocks,
+                owned_blocks: owned,
+                admitted_at: self.admit_clock,
+            },
+        );
+        Some(m.tokens)
+    }
+
+    /// Extend `id`'s block table to cover `new_len` committed tokens.
+    /// `Preempt(victim)` asks the caller to `preempt(victim, ..)` and call
+    /// `grow_to` again.
+    pub fn grow_to(&mut self, id: SeqId, new_len: usize) -> Grow {
+        loop {
+            if self.try_grow(id, new_len) {
+                return Grow::Ok;
+            }
+            if self.cache.evict(1, &mut self.bm) > 0 {
+                continue;
+            }
+            let victim = self
+                .running
+                .iter()
+                .filter(|(k, _)| **k != id)
+                .max_by_key(|(_, s)| s.admitted_at)
+                .map(|(k, _)| *k);
+            return match victim {
+                Some(v) => Grow::Preempt(v),
+                None => Grow::Fail,
+            };
+        }
+    }
+
+    /// One growth attempt; false means a block is needed and the pool is
+    /// empty.
+    fn try_grow(&mut self, id: SeqId, new_len: usize) -> bool {
+        let bs = self.bm.block_size();
+        let needed = self.bm.blocks_for_tokens(new_len);
+        debug_assert!(
+            new_len >= self.running.get(&id).expect("grow on unknown sequence").len,
+            "sequences only grow"
+        );
+        while self.running[&id].n_blocks() < needed {
+            match self.bm.try_alloc(self.version) {
+                Some(b) => self.running.get_mut(&id).unwrap().owned_blocks.push(b),
+                None => return false,
+            }
+        }
+        let cached_len = self.running[&id].cached_blocks.len();
+        if needed > cached_len {
+            // copy-on-write if the write-target block is shared
+            let oi = needed - 1 - cached_len;
+            let b = self.running[&id].owned_blocks[oi];
+            if self.bm.ref_count(b) > 1 {
+                match self.bm.make_writable(b, self.version) {
+                    Some(nb) => self.running.get_mut(&id).unwrap().owned_blocks[oi] = nb,
+                    None => return false,
+                }
+            }
+            let b = self.running[&id].owned_blocks[oi];
+            self.bm.set_filled(b, new_len - (needed - 1) * bs);
+        }
+        self.running.get_mut(&id).unwrap().len = new_len;
+        true
+    }
+
+    /// The engine prefilled (or re-prefilled after a weight interrupt) this
+    /// sequence: its KV now reflects the current weights. Re-tags every
+    /// mapped block and folds the committed prefix into the radix cache so
+    /// sibling samples hit it.
+    pub fn note_prefilled(&mut self, id: SeqId, tokens: &[i32]) {
+        let blocks = self.seq_blocks(id);
+        // `tokens` may be a committed prefix of the tracked length (the
+        // engine excludes the pending token whose KV is not yet written)
+        debug_assert!(tokens.len() <= self.running[&id].len, "tokens exceed tracked len");
+        for &b in &blocks {
+            self.bm.set_version(b, self.version);
+        }
+        if self.cfg.prefix_cache {
+            self.cache.insert(tokens, self.version, Some(&blocks), &mut self.bm);
+        }
+    }
+
+    /// Sequence finished: cache its prefix (sharing its pages), release its
+    /// references. `cache_upto` bounds how many leading tokens may enter
+    /// the cache — the engine passes `len - 1` to exclude its pending token
+    /// whose KV was never computed; drivers whose tokens are all computed
+    /// pass `tokens.len()`.
+    pub fn finish(&mut self, id: SeqId, tokens: &[i32], cache_upto: usize) {
+        self.release_seq(id, tokens, cache_upto);
+    }
+
+    /// Preempt a running sequence: cache its committed prefix (so resume is
+    /// mostly a cache hit), release its blocks, and put it back at the
+    /// front of the waiting queue. `cache_upto` as in [`Self::finish`].
+    pub fn preempt(&mut self, id: SeqId, tokens: &[i32], cache_upto: usize) {
+        self.release_seq(id, tokens, cache_upto);
+        self.waiting.push_front((id, tokens.to_vec()));
+        self.preemptions += 1;
+    }
+
+    fn release_seq(&mut self, id: SeqId, tokens: &[i32], cache_upto: usize) {
+        let st = self.running.remove(&id).expect("release of unknown sequence");
+        // the engine may be one token ahead of the tracked length: a
+        // prefill-sampled pending token whose KV (and block slot) does not
+        // exist yet
+        debug_assert!(
+            tokens.len() >= st.len && tokens.len() <= st.len + 1,
+            "token/len mismatch: {} tokens vs tracked {}",
+            tokens.len(),
+            st.len
+        );
+        let all: Vec<BlockId> =
+            st.cached_blocks.iter().chain(st.owned_blocks.iter()).copied().collect();
+        if self.cfg.prefix_cache {
+            // cache only the block-covered prefix whose KV actually exists
+            let covered = cache_upto.min(st.len).min(tokens.len());
+            self.cache.insert(&tokens[..covered], self.version, Some(&all), &mut self.bm);
+        }
+        for b in all {
+            self.bm.release(b);
+        }
+    }
+
+    /// The paper's `update_weights`: KV computed under older weights is
+    /// invalid. Drops every stale cache entry; running sequences keep their
+    /// (stale-tagged) blocks until the engine re-prefills them and calls
+    /// `note_prefilled`.
+    pub fn on_update_weights(&mut self, version: Version) {
+        assert!(version >= self.version, "weight version regressed");
+        if version > self.version {
+            self.version = version;
+            self.cache.invalidate_stale(version, &mut self.bm);
+        }
+    }
+
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.prefill_tokens_computed + self.prefill_tokens_cached;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefill_tokens_cached as f64 / total as f64
+        }
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            prefill_tokens_computed: self.prefill_tokens_computed,
+            prefill_tokens_cached: self.prefill_tokens_cached,
+            cache_hit_rate: self.cache_hit_rate(),
+            preemptions: self.preemptions,
+            blocks_in_use: self.bm.blocks_in_use(),
+            free_blocks: self.bm.free_blocks(),
+            cached_tokens: self.cache.cached_tokens(),
+            cow_copies: self.bm.cow_copies,
+            evicted_blocks: self.cache.evicted_blocks,
+            invalidated_blocks: self.cache.invalidated_blocks,
+        }
+    }
+
+    /// Structural invariants, for the property tests.
+    pub fn check(&self) -> Result<(), String> {
+        self.bm.check()?;
+        self.cache.check(&self.bm)?;
+        for (id, st) in &self.running {
+            if st.n_blocks() < self.bm.blocks_for_tokens(st.len) {
+                return Err(format!("seq {id}: block table shorter than its tokens"));
+            }
+            for &b in st.cached_blocks.iter().chain(st.owned_blocks.iter()) {
+                if self.bm.ref_count(b) == 0 {
+                    return Err(format!("seq {id}: maps freed block {b}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
+
+    const BS: usize = 4;
+
+    fn cfg(num_blocks: usize, max_seqs: usize, prefix_cache: bool) -> ServeCfg {
+        ServeCfg { block_size: BS, num_blocks, max_seqs, prefix_cache }
+    }
+
+    fn prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+        (0..len).map(|_| rng.range_i64(3, 47) as i32).collect()
+    }
+
+    #[test]
+    fn admit_decode_finish_releases_everything() {
+        let mut s = Scheduler::new(cfg(16, 2, false));
+        let p: Vec<i32> = (0..8).collect();
+        assert!(s.submit(1, p.clone()));
+        let adm = s.schedule();
+        assert_eq!(adm.len(), 1);
+        assert_eq!(adm[0].cached_tokens, 0);
+        assert_eq!(s.prefill_tokens_computed, 8);
+        s.note_prefilled(1, &p);
+        let mut t = p;
+        for x in 0..6 {
+            t.push(x);
+            assert_eq!(s.grow_to(1, t.len()), Grow::Ok);
+        }
+        s.finish(1, &t, t.len());
+        assert_eq!(s.running_len(), 0);
+        assert_eq!(s.block_manager().blocks_in_use(), 0, "cache off: all freed");
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn sibling_sample_hits_prompt_prefix() {
+        let mut s = Scheduler::new(cfg(32, 1, true));
+        let p: Vec<i32> = (0..8).collect();
+        assert!(s.submit(1, p.clone()));
+        let a = s.schedule();
+        assert_eq!(a[0].cached_tokens, 0);
+        s.note_prefilled(1, &p);
+        s.finish(1, &p, p.len());
+        // sibling of the same GRPO group
+        assert!(s.submit(2, p.clone()));
+        let a = s.schedule();
+        assert_eq!(a[0].cached_tokens, 8, "whole prompt served from cache");
+        assert_eq!(s.prefill_tokens_cached, 8);
+        assert_eq!(s.prefill_tokens_computed, 8, "only the first sibling paid");
+        s.finish(2, &p, p.len());
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn admission_waits_for_memory() {
+        // 4 blocks: one 8-token sequence needs 3 (incl. next-token room)
+        let mut s = Scheduler::new(cfg(4, 4, false));
+        assert!(s.submit(1, (0..8).collect()));
+        assert!(s.submit(2, (100..108).collect()));
+        let a = s.schedule();
+        assert_eq!(a.len(), 1, "second sequence must wait for blocks");
+        assert_eq!(s.waiting_len(), 1);
+        // finishing the first frees the pool; the second now admits
+        let done: Vec<i32> = (0..8).collect();
+        s.finish(1, &done, done.len());
+        assert_eq!(s.schedule().len(), 1);
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn preemption_on_oom_and_cached_resume() {
+        let mut s = Scheduler::new(cfg(8, 2, true));
+        let p1: Vec<i32> = (0..8).collect();
+        let p2: Vec<i32> = (100..108).collect();
+        assert!(s.submit(1, p1.clone()));
+        assert!(s.submit(2, p2.clone()));
+        assert_eq!(s.schedule().len(), 2); // 3 blocks each, 2 free
+        s.note_prefilled(1, &p1);
+        s.note_prefilled(2, &p2);
+        // grow seq 1 until the pool runs dry
+        let mut t1 = p1;
+        let mut preempted = false;
+        while t1.len() < 21 {
+            t1.push(7);
+            loop {
+                match s.grow_to(1, t1.len()) {
+                    Grow::Ok => break,
+                    Grow::Preempt(victim) => {
+                        assert_eq!(victim, 2, "youngest other sequence");
+                        s.preempt(victim, &p2, p2.len());
+                        preempted = true;
+                    }
+                    Grow::Fail => panic!("pool should fit one sequence"),
+                }
+            }
+        }
+        assert!(preempted);
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(s.waiting_len(), 1);
+        assert_eq!(s.running_len(), 1);
+        s.check().unwrap();
+        // finish 1; 2 resumes with its committed prefix cached
+        s.finish(1, &t1, t1.len());
+        let a = s.schedule();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].id, 2);
+        assert_eq!(a[0].cached_tokens, 8, "resume is a prefix-cache hit");
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn update_weights_invalidates_stale_blocks() {
+        let mut s = Scheduler::new(cfg(32, 4, true));
+        let mut rng = Rng::new(11);
+        let p = prompt(&mut rng, 16);
+        assert!(s.submit(1, p.clone()));
+        s.schedule();
+        s.note_prefilled(1, &p);
+        s.finish(1, &p, p.len());
+        assert_eq!(s.block_manager().blocks_in_use(), 4, "prompt stays cached");
+        // sibling hits under the same version
+        assert!(s.submit(2, p.clone()));
+        assert_eq!(s.schedule()[0].cached_tokens, 16);
+        s.finish(2, &p, p.len());
+
+        // weight update: stale cache provably dropped and its blocks freed
+        s.on_update_weights(1);
+        assert_eq!(s.version(), 1);
+        assert_eq!(s.block_manager().blocks_in_use(), 0, "stale blocks freed");
+        assert!(s.stats().invalidated_blocks > 0);
+        // the same prompt no longer hits
+        assert!(s.submit(3, p.clone()));
+        let a = s.schedule();
+        assert_eq!(a[0].cached_tokens, 0, "stale prefix must not be served");
+        // fresh blocks carry the new version tag
+        for b in s.seq_blocks(3) {
+            assert_eq!(s.block_manager().version(b), 1);
+        }
+        s.finish(3, &p, p.len());
+        s.check().unwrap();
+    }
+
+    #[test]
+    fn note_prefilled_retags_blocks_after_interrupt() {
+        let mut s = Scheduler::new(cfg(32, 4, true));
+        let p: Vec<i32> = (0..8).collect();
+        assert!(s.submit(1, p.clone()));
+        s.schedule();
+        s.note_prefilled(1, &p);
+        let stale = s.seq_blocks(1);
+        s.on_update_weights(3);
+        // blocks still tagged with the version that computed them
+        assert!(stale.iter().any(|&b| s.block_manager().version(b) < 3));
+        // engine re-prefills, then reports it
+        s.note_prefilled(1, &p);
+        for b in s.seq_blocks(1) {
+            assert_eq!(s.block_manager().version(b), 3);
+        }
+        // and the re-cached prefix serves the new version
+        assert!(s.submit(2, p.clone()));
+        assert_eq!(s.schedule()[0].cached_tokens, 8);
+        s.finish(1, &p, p.len());
+        let p2: Vec<i32> = (0..8).collect();
+        s.finish(2, &p2, p2.len());
+        s.check().unwrap();
+    }
+
+    /// Drive a GRPO group-sampling workload through the scheduler the same
+    /// way the engine does; returns (computed, cached) prefill tokens.
+    fn run_group_workload(prefix_cache: bool, groups: usize, g: usize,
+                          prompt_len: usize, gen_len: usize) -> (u64, u64) {
+        let mut s = Scheduler::new(cfg(64, 2, prefix_cache));
+        let mut rng = Rng::new(7);
+        let mut next_id: SeqId = 0;
+        let mut targets: HashMap<SeqId, usize> = HashMap::new();
+        for _ in 0..groups {
+            let p = prompt(&mut rng, prompt_len);
+            for _ in 0..g {
+                assert!(s.submit(next_id, p.clone()));
+                targets.insert(next_id, prompt_len + gen_len);
+                next_id += 1;
+            }
+        }
+        let mut active: HashMap<SeqId, Vec<i32>> = HashMap::new();
+        loop {
+            for a in s.schedule() {
+                s.note_prefilled(a.id, &a.tokens);
+                active.insert(a.id, a.tokens);
+            }
+            if active.is_empty() {
+                assert_eq!(s.waiting_len(), 0, "workload starved");
+                break;
+            }
+            let ids: Vec<SeqId> = active.keys().copied().collect();
+            for id in ids {
+                if !active.contains_key(&id) {
+                    continue; // preempted this round
+                }
+                let mut t = active.remove(&id).unwrap();
+                t.push(rng.range_i64(3, 47) as i32);
+                loop {
+                    match s.grow_to(id, t.len()) {
+                        Grow::Ok => break,
+                        Grow::Preempt(victim) => {
+                            let vt = active.remove(&victim).expect("victim active");
+                            s.preempt(victim, &vt, vt.len());
+                        }
+                        Grow::Fail => panic!("budget too small for one sequence"),
+                    }
+                }
+                if t.len() >= targets[&id] {
+                    s.finish(id, &t, t.len());
+                } else {
+                    active.insert(id, t);
+                }
+            }
+            s.check().unwrap();
+        }
+        (s.prefill_tokens_computed, s.prefill_tokens_cached)
+    }
+
+    #[test]
+    fn group_sampling_prefill_savings_at_least_1_5x() {
+        // the acceptance bar: G >= 4 siblings per prompt, cache vs no cache
+        let (computed_on, cached_on) = run_group_workload(true, 4, 4, 16, 8);
+        let (computed_off, cached_off) = run_group_workload(false, 4, 4, 16, 8);
+        assert_eq!(cached_off, 0);
+        let savings = computed_off as f64 / computed_on as f64;
+        assert!(
+            savings >= 1.5,
+            "prefill-token savings {savings:.2}x < 1.5x \
+             (computed on={computed_on} off={computed_off})"
+        );
+        let hit = cached_on as f64 / (cached_on + computed_on) as f64;
+        assert!(hit > 0.25, "hit rate {hit:.2} too low");
+    }
+
+    #[test]
+    fn grow_without_room_for_anyone_fails() {
+        // a single sequence that outgrows the whole pool
+        let mut s = Scheduler::new(cfg(3, 1, false));
+        let p: Vec<i32> = (0..8).collect();
+        assert!(s.submit(1, p.clone()));
+        assert_eq!(s.schedule().len(), 1);
+        let mut t = p;
+        let mut failed = false;
+        for x in 0..8 {
+            t.push(x);
+            match s.grow_to(1, t.len()) {
+                Grow::Ok => {}
+                Grow::Fail => {
+                    failed = true;
+                    break;
+                }
+                Grow::Preempt(_) => panic!("no other sequence exists"),
+            }
+        }
+        assert!(failed, "3-block pool cannot hold 13+ tokens");
+    }
+}

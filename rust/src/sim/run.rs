@@ -30,6 +30,13 @@ pub struct SimConfig {
     pub interruptible: bool,
     /// decoding slots per generation device (capped by KV memory)
     pub slot_cap: usize,
+    /// responses per prompt (GRPO group sampling; siblings share the
+    /// prompt prefix — paper Table 3: 16)
+    pub group_size: usize,
+    /// serve/-style radix prefix cache on generation devices: sibling
+    /// prompts skip the shared prefill; version-tagged entries are
+    /// invalidated on every weight update (async policy only)
+    pub prefix_cache: bool,
     pub seed: u64,
 }
 
@@ -49,6 +56,8 @@ impl SimConfig {
             eta: Some(4),
             interruptible: true,
             slot_cap: 256,
+            group_size: 16,
+            prefix_cache: true,
             seed: 1,
         }
     }
@@ -77,6 +86,14 @@ pub struct SimReport {
     pub interrupts: u64,
     pub mean_staleness: f64,
     pub max_staleness: u64,
+    /// prompt prefill tokens actually computed
+    pub prefill_tokens: f64,
+    /// prompt prefill tokens skipped via the radix prefix cache
+    pub cached_prefill_tokens: f64,
+    /// committed-context tokens recomputed after weight-update interrupts
+    pub recompute_tokens: f64,
+    /// cached / (cached + computed) prompt prefill tokens
+    pub cache_hit_rate: f64,
     pub timeline: Vec<Interval>,
 }
 
@@ -167,6 +184,10 @@ pub fn run_sync(cfg: &SimConfig) -> SimReport {
         interrupts: 0,
         mean_staleness: 0.0,
         max_staleness: 0,
+        prefill_tokens: cfg.prompt_len * (cfg.n_steps * cfg.batch_seqs) as f64,
+        cached_prefill_tokens: 0.0,
+        recompute_tokens: 0.0,
+        cache_hit_rate: 0.0,
         timeline,
     }
 }
@@ -231,6 +252,10 @@ pub fn run_overlap(cfg: &SimConfig) -> SimReport {
         interrupts: 0,
         mean_staleness: 1.0,
         max_staleness: 1,
+        prefill_tokens: cfg.prompt_len * (cfg.n_steps * cfg.batch_seqs) as f64,
+        cached_prefill_tokens: 0.0,
+        recompute_tokens: 0.0,
+        cache_hit_rate: 0.0,
         timeline,
     }
 }
@@ -251,6 +276,61 @@ struct GenDevice {
     resume_at: f64,
     busy_s: f64,
     pending_weights: bool,
+    /// siblings remaining in the GRPO group this device is sampling
+    group_left: usize,
+    /// weight version under which the current group's prompt prefix sits
+    /// in the (serve/-style) radix cache; a mismatch is a cache miss —
+    /// update_weights invalidates version-tagged blocks
+    group_cached_version: Option<u64>,
+}
+
+/// Prompt-prefill accounting for one refill wave.
+struct RefillOutcome {
+    paid_prompt_tokens: f64,
+    cached_prompt_tokens: f64,
+}
+
+/// Refill a device's empty slots subject to the Eq. 3 gate, paying prompt
+/// prefill only for cache misses (group leaders and post-update re-caches).
+#[allow(clippy::too_many_arguments)]
+fn refill_device(dev: &mut GenDevice, rng: &mut Rng, submitted: &mut u64,
+                 version: u64, now: f64, sampler: &LenSampler, cfg: &SimConfig,
+                 slots_per_dev: usize) -> RefillOutcome {
+    let b = cfg.batch_seqs as u64;
+    let admits = |submitted: u64| match cfg.eta {
+        None => true,
+        Some(eta) => submitted / b <= version + eta,
+    };
+    let mut paid = 0.0;
+    let mut cached = 0.0;
+    while dev.slots.len() < slots_per_dev && admits(*submitted) {
+        *submitted += 1;
+        if dev.group_left == 0 {
+            // next GRPO group: a fresh prompt, not yet cached
+            dev.group_left = cfg.group_size.max(1);
+            dev.group_cached_version = None;
+        }
+        dev.group_left -= 1;
+        if cfg.prefix_cache && dev.group_cached_version == Some(version) {
+            cached += cfg.prompt_len;
+        } else {
+            paid += cfg.prompt_len;
+            if cfg.prefix_cache {
+                dev.group_cached_version = Some(version);
+            }
+        }
+        dev.slots.push(SimSeq {
+            remaining: sampler.sample(rng),
+            produced: 0.0,
+            born_version: version,
+        });
+    }
+    if paid > 0.0 {
+        // prefill cost for the uncached prompt tokens only
+        let t = prefill_s(&cfg.hw, &cfg.model, paid);
+        dev.resume_at = dev.resume_at.max(now) + t;
+    }
+    RefillOutcome { paid_prompt_tokens: paid, cached_prompt_tokens: cached }
 }
 
 impl GenDevice {
@@ -313,15 +393,8 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
     let n_gen = (n_gen_gpus / m.tp).max(1);
     let slots_per_dev = cfg.slot_cap.min(max_slots(hw, m, cfg.ctx)).max(1);
 
-    let b = cfg.batch_seqs as u64;
     let mut submitted: u64 = 0;
     let mut version: u64 = 0;
-    let admits = |submitted: u64, version: u64| -> bool {
-        match cfg.eta {
-            None => true,
-            Some(eta) => submitted / b <= version + eta,
-        }
-    };
 
     let mut devices: Vec<GenDevice> = (0..n_gen)
         .map(|_| GenDevice {
@@ -329,6 +402,8 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
             resume_at: 0.0,
             busy_s: 0.0,
             pending_weights: false,
+            group_left: 0,
+            group_cached_version: None,
         })
         .collect();
 
@@ -343,33 +418,16 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
     let mut staleness_samples: Vec<f64> = Vec::new();
     let mut max_stale = 0u64;
     let mut timeline = Vec::new();
-
-    // helper: refill a device's empty slots subject to the gate
-    let refill = |dev: &mut GenDevice, rng: &mut Rng, submitted: &mut u64,
-                  version: u64, now: f64, sampler: &LenSampler,
-                  hw: &HardwareProfile, m: &ModelProfile, prompt: f64,
-                  slots_per_dev: usize| {
-        let mut filled = 0;
-        while dev.slots.len() < slots_per_dev && admits(*submitted, version) {
-            *submitted += 1;
-            dev.slots.push(SimSeq {
-                remaining: sampler.sample(rng),
-                produced: 0.0,
-                born_version: version,
-            });
-            filled += 1;
-        }
-        if filled > 0 {
-            // prefill cost for the new prompts
-            let t = prefill_s(hw, m, prompt * filled as f64);
-            dev.resume_at = dev.resume_at.max(now) + t;
-        }
-    };
+    let mut prefill_tokens = 0.0;
+    let mut cached_prefill_tokens = 0.0;
+    let mut recompute_tokens = 0.0;
 
     // initial fill
     for dev in devices.iter_mut() {
-        refill(dev, &mut rng, &mut submitted, version, now, &sampler, hw, m,
-               cfg.prompt_len, slots_per_dev);
+        let o = refill_device(dev, &mut rng, &mut submitted, version, now,
+                              &sampler, cfg, slots_per_dev);
+        prefill_tokens += o.paid_prompt_tokens;
+        cached_prefill_tokens += o.cached_prompt_tokens;
     }
 
     let max_iters = cfg.n_steps * cfg.batch_seqs * 4 + 10_000;
@@ -453,6 +511,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                             .iter()
                             .map(|s| cfg.prompt_len + s.produced)
                             .sum();
+                        recompute_tokens += committed;
                         let t = prefill_s(hw, m, committed);
                         dev.resume_at = dev.resume_at.max(now) + t;
                         if steps_done <= TIMELINE_STEPS && d < TIMELINE_DEVICES {
@@ -482,13 +541,16 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                 }
             }
             if dev.slots.len() < slots_per_dev {
-                refill(dev, &mut rng, &mut submitted, version, now, &sampler,
-                       hw, m, cfg.prompt_len, slots_per_dev);
+                let o = refill_device(dev, &mut rng, &mut submitted, version, now,
+                                      &sampler, cfg, slots_per_dev);
+                prefill_tokens += o.paid_prompt_tokens;
+                cached_prefill_tokens += o.cached_prompt_tokens;
             }
         }
     }
 
     let busy: f64 = devices.iter().map(|d| d.busy_s).sum();
+    let prompt_total = prefill_tokens + cached_prefill_tokens;
     SimReport {
         policy: "async",
         total_s: now,
@@ -500,6 +562,14 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         interrupts,
         mean_staleness: stats::mean(&staleness_samples),
         max_staleness: max_stale,
+        prefill_tokens,
+        cached_prefill_tokens,
+        recompute_tokens,
+        cache_hit_rate: if prompt_total > 0.0 {
+            cached_prefill_tokens / prompt_total
+        } else {
+            0.0
+        },
         timeline,
     }
 }
@@ -630,6 +700,56 @@ mod tests {
         let b = run_async(&cfg);
         assert_eq!(a.total_s, b.total_s);
         assert_eq!(a.tokens_trained, b.tokens_trained);
+        assert_eq!(a.cache_hit_rate, b.cache_hit_rate);
+    }
+
+    #[test]
+    fn prefix_cache_reduces_prompt_prefill() {
+        // serve/'s radix cache in the cost model: G-sibling groups share
+        // the prompt prefill, so the cached run computes far fewer prompt
+        // tokens and is at least as fast
+        let mut cfg = small_cfg(MODEL_1_5B);
+        let with = run_async(&cfg);
+        cfg.prefix_cache = false;
+        let without = run_async(&cfg);
+        assert_eq!(without.cache_hit_rate, 0.0);
+        assert_eq!(without.cached_prefill_tokens, 0.0);
+        assert!(
+            with.cache_hit_rate > 0.5,
+            "G={} groups should mostly hit: {}",
+            cfg.group_size,
+            with.cache_hit_rate
+        );
+        assert!(
+            with.prefill_tokens < 0.5 * without.prefill_tokens,
+            "cached prefill {} vs uncached {}",
+            with.prefill_tokens,
+            without.prefill_tokens
+        );
+        assert!(
+            with.effective_tps > 0.99 * without.effective_tps,
+            "cache must not slow the system: {} vs {}",
+            with.effective_tps,
+            without.effective_tps
+        );
+    }
+
+    #[test]
+    fn weight_updates_invalidate_sim_cache() {
+        // version-tagged cache entries die on update_weights: the hit rate
+        // stays strictly below the ideal (G-1)/G of an uninterrupted stream
+        let cfg = small_cfg(MODEL_1_5B);
+        let r = run_async(&cfg);
+        let ideal = (cfg.group_size - 1) as f64 / cfg.group_size as f64;
+        assert!(r.cache_hit_rate > 0.0);
+        assert!(
+            r.cache_hit_rate < ideal,
+            "hit rate {} should lose some hits to weight-update invalidation \
+             (ideal {ideal})",
+            r.cache_hit_rate
+        );
+        // interrupts force committed-context recompute, never cached
+        assert!(r.recompute_tokens > 0.0);
     }
 
     #[test]

@@ -2,21 +2,35 @@
 //! the Rust-side counterparts of the python test_model invariants, plus
 //! checkpoint/resume and failure injection. Requires `make artifacts`.
 
-use std::path::PathBuf;
 use std::sync::Arc;
 
 use areal::coordinator::GenEngine;
+use areal::runtime::artifacts::test_artifacts_dir;
 use areal::runtime::{params, Engine, HostTensor, Manifest, ParamSet, TrainState};
 use areal::tasks::{SortTask, Task};
 use areal::util::rng::Rng;
 
-fn manifest() -> Manifest {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Manifest::load(&dir).expect("run `make artifacts` first")
+fn manifest() -> Option<Manifest> {
+    let dir = test_artifacts_dir()?;
+    Some(Manifest::load(&dir).expect("manifest load"))
 }
 
-fn engine_full() -> Arc<Engine> {
-    Arc::new(Engine::load(manifest().tier("nano").unwrap()).unwrap())
+fn engine_full() -> Option<Arc<Engine>> {
+    Some(Arc::new(
+        Engine::load(manifest()?.tier("nano").unwrap()).unwrap(),
+    ))
+}
+
+macro_rules! or_skip {
+    ($opt:expr) => {
+        match $opt {
+            Some(x) => x,
+            None => {
+                eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+                return;
+            }
+        }
+    };
 }
 
 #[test]
@@ -26,7 +40,7 @@ fn behav_logps_match_logprob_artifact() {
     // teacher-forced logprobs the trainer's `logprob` artifact recomputes
     // for the same tokens (this is exactly what makes prox-recompute and
     // importance ratios correct).
-    let engine = engine_full();
+    let engine = or_skip!(engine_full());
     let spec = engine.spec.clone();
     let params = ParamSet::init(&engine, [5, 6]).unwrap();
     let mut gen = GenEngine::new(Arc::clone(&engine), Arc::clone(&params), 0, 1.0, 42);
@@ -67,7 +81,7 @@ fn behav_logps_match_logprob_artifact() {
 fn checkpoint_resume_is_bit_identical() {
     // training N sft steps, checkpointing, reloading, and training one more
     // step must equal training N+1 steps directly
-    let engine = engine_full();
+    let engine = or_skip!(engine_full());
     let spec = engine.spec.clone();
     let (bt, t) = (spec.config.train_batch, spec.config.max_seq);
     let tokens = HostTensor::i32(
@@ -131,7 +145,7 @@ fn checkpoint_resume_is_bit_identical() {
 fn sft_improves_gold_trace_likelihood() {
     // cross-artifact: sft_step updates must increase the logprob artifact's
     // score of the gold traces it trained on
-    let engine = engine_full();
+    let engine = or_skip!(engine_full());
     let spec = engine.spec.clone();
     let (bt, t) = (spec.config.train_batch, spec.config.max_seq);
     let task = SortTask;
@@ -208,7 +222,7 @@ fn engine_rejects_malformed_artifact() {
     // failure injection: a corrupted HLO file must fail cleanly at load
     let dir = std::env::temp_dir().join("areal_bad_artifacts");
     std::fs::create_dir_all(&dir).unwrap();
-    let m = manifest();
+    let m = or_skip!(manifest());
     let spec = m.tier("nano").unwrap();
     // copy manifest dir layout with one truncated file
     let mut bad = spec.clone();

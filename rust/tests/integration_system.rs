@@ -6,6 +6,16 @@ use std::path::PathBuf;
 
 use areal::config::{Config, Mode};
 use areal::coordinator::{Event, System};
+use areal::runtime::artifacts::test_artifacts_dir;
+
+macro_rules! require_artifacts {
+    () => {
+        if test_artifacts_dir().is_none() {
+            eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
 
 fn base_cfg() -> Config {
     let mut cfg = Config::default();
@@ -29,6 +39,7 @@ fn base_cfg() -> Config {
 
 #[test]
 fn async_mode_runs_end_to_end() {
+    require_artifacts!();
     let mut cfg = base_cfg();
     cfg.mode = Mode::Async;
     cfg.max_staleness = Some(4);
@@ -55,6 +66,7 @@ fn async_mode_runs_end_to_end() {
 
 #[test]
 fn sync_mode_has_zero_staleness() {
+    require_artifacts!();
     let mut cfg = base_cfg();
     cfg.mode = Mode::Sync;
     cfg.ppo_steps = 2;
@@ -69,6 +81,7 @@ fn sync_mode_has_zero_staleness() {
 
 #[test]
 fn async_interruptions_produce_multi_segment_trajectories() {
+    require_artifacts!();
     let mut cfg = base_cfg();
     cfg.mode = Mode::Async;
     cfg.max_staleness = Some(8);

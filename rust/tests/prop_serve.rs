@@ -1,0 +1,286 @@
+//! Property tests for the serve/ subsystem (via util::prop): block-manager
+//! and radix-tree invariants under random operation sequences.
+//!
+//! The three invariants the ISSUE pins down:
+//! - ref-counts never go negative (enforced structurally: release on a free
+//!   block panics; the shadow-model test proves counts stay exact);
+//! - eviction never frees a block an in-flight sequence still references;
+//! - insert-then-match returns the longest cached prefix (the block-aligned
+//!   prefix of what was inserted).
+
+use std::collections::HashMap;
+
+use areal::prop_assert;
+use areal::serve::{BlockId, BlockManager, RadixCache, Scheduler, SeqId, ServeCfg};
+use areal::util::prop::prop_check;
+use areal::util::rng::Rng;
+
+fn random_tokens(rng: &mut Rng, len: usize) -> Vec<i32> {
+    (0..len).map(|_| rng.range_i64(3, 47) as i32).collect()
+}
+
+#[test]
+fn block_manager_refcounts_match_shadow_model() {
+    prop_check(300, |rng| {
+        let num_blocks = rng.range_usize(1, 24);
+        let mut bm = BlockManager::new(num_blocks, rng.range_usize(1, 16));
+        // our handles: block id -> references we hold (we are the only user,
+        // so this must equal the manager's refcount exactly)
+        let mut held: HashMap<BlockId, u32> = HashMap::new();
+        for _ in 0..rng.range_usize(0, 120) {
+            let ids: Vec<BlockId> = held.keys().copied().collect();
+            match rng.range_usize(0, 3) {
+                0 => {
+                    if let Some(id) = bm.try_alloc(rng.range_i64(0, 4) as u64) {
+                        prop_assert!(
+                            !held.contains_key(&id),
+                            "alloc handed out a block we already hold"
+                        );
+                        held.insert(id, 1);
+                    } else {
+                        prop_assert!(
+                            bm.free_blocks() == 0,
+                            "alloc failed with {} free blocks",
+                            bm.free_blocks()
+                        );
+                    }
+                }
+                1 => {
+                    if let Some(&id) = ids.first() {
+                        bm.retain(id);
+                        *held.get_mut(&id).unwrap() += 1;
+                    }
+                }
+                2 => {
+                    if let Some(&id) = ids.last() {
+                        bm.release(id);
+                        let c = held.get_mut(&id).unwrap();
+                        *c -= 1;
+                        if *c == 0 {
+                            held.remove(&id);
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(&id) = ids.first() {
+                        let before = *held.get(&id).unwrap();
+                        if let Some(nid) = bm.make_writable(id, 9) {
+                            if nid == id {
+                                prop_assert!(before == 1, "COW skipped a shared block");
+                            } else {
+                                // one of our references moved to the copy
+                                let c = held.get_mut(&id).unwrap();
+                                *c -= 1;
+                                if *c == 0 {
+                                    held.remove(&id);
+                                }
+                                held.insert(nid, 1);
+                            }
+                        }
+                    }
+                }
+            }
+            if let Err(e) = bm.check() {
+                return Err(e);
+            }
+            for (&id, &c) in &held {
+                prop_assert!(
+                    bm.ref_count(id) == c,
+                    "block {id}: manager says {} refs, model says {c}",
+                    bm.ref_count(id)
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eviction_never_frees_a_referenced_block() {
+    prop_check(200, |rng| {
+        let bs = rng.range_usize(2, 6);
+        let mut bm = BlockManager::new(rng.range_usize(8, 48), bs);
+        let mut cache = RadixCache::new();
+        // block id -> references WE hold (from match_prefix)
+        let mut held: HashMap<BlockId, u32> = HashMap::new();
+        let mut inserted: Vec<Vec<i32>> = Vec::new();
+        for _ in 0..rng.range_usize(1, 60) {
+            match rng.range_usize(0, 3) {
+                0 => {
+                    let t = random_tokens(rng, rng.range_usize(0, 4 * bs + 2));
+                    cache.insert(&t, 0, None, &mut bm);
+                    inserted.push(t);
+                }
+                1 => {
+                    if let Some(t) = inserted.last() {
+                        let m = cache.match_prefix(t, 0, &mut bm);
+                        for b in m.blocks {
+                            *held.entry(b).or_insert(0) += 1;
+                        }
+                    }
+                }
+                2 => {
+                    cache.evict(rng.range_usize(1, 8), &mut bm);
+                }
+                _ => {
+                    // release one of our held references
+                    if let Some(&id) = held.keys().next() {
+                        bm.release(id);
+                        let c = held.get_mut(&id).unwrap();
+                        *c -= 1;
+                        if *c == 0 {
+                            held.remove(&id);
+                        }
+                    }
+                }
+            }
+            if let Err(e) = bm.check() {
+                return Err(e);
+            }
+            if let Err(e) = cache.check(&bm) {
+                return Err(e);
+            }
+            // THE invariant: every block an in-flight user still references
+            // is alive, no matter what eviction did
+            for (&id, &c) in &held {
+                prop_assert!(
+                    bm.ref_count(id) >= c,
+                    "evicted block {id} out from under {c} live references"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn insert_then_match_returns_longest_cached_prefix() {
+    prop_check(300, |rng| {
+        let bs = rng.range_usize(1, 8);
+        let mut bm = BlockManager::new(64, bs);
+        let mut cache = RadixCache::new();
+        let len = rng.range_usize(0, 40);
+        let t = random_tokens(rng, len);
+        cache.insert(&t, 0, None, &mut bm);
+        let full = len / bs * bs;
+
+        // exact query: the whole block-aligned prefix
+        let m = cache.match_prefix(&t, 0, &mut bm);
+        prop_assert!(
+            m.tokens == full,
+            "inserted {len} tokens (bs {bs}), matched {} != {full}",
+            m.tokens
+        );
+        prop_assert!(m.blocks.len() == full / bs.max(1), "block count mismatch");
+        for &b in &m.blocks {
+            bm.release(b);
+        }
+
+        // shorter query: its own block-aligned length
+        let cut = rng.range_usize(0, len);
+        let m = cache.match_prefix(&t[..cut], 0, &mut bm);
+        prop_assert!(
+            m.tokens == cut / bs * bs,
+            "prefix query of {cut} matched {}",
+            m.tokens
+        );
+        for &b in &m.blocks {
+            bm.release(b);
+        }
+
+        // extended query: still the inserted prefix (an extension may match
+        // at most what is cached)
+        let mut ext = t.clone();
+        ext.extend(random_tokens(rng, bs));
+        let m = cache.match_prefix(&ext, 0, &mut bm);
+        prop_assert!(
+            m.tokens == full,
+            "extension query matched {} != {full}",
+            m.tokens
+        );
+        for &b in &m.blocks {
+            bm.release(b);
+        }
+
+        if let Err(e) = cache.check(&bm) {
+            return Err(e);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduler_random_walk_preserves_invariants() {
+    prop_check(60, |rng| {
+        let bs = rng.range_usize(2, 6);
+        let cfg = ServeCfg {
+            block_size: bs,
+            num_blocks: rng.range_usize(16, 64),
+            max_seqs: rng.range_usize(1, 4),
+            prefix_cache: rng.chance(0.7),
+        };
+        // every sequence must individually fit the pool
+        let max_len = (cfg.num_blocks * bs - bs).min(6 * bs);
+        let mut s = Scheduler::new(cfg);
+        let mut next_id: SeqId = 0;
+        let mut active: HashMap<SeqId, Vec<i32>> = HashMap::new();
+        for _ in 0..rng.range_usize(1, 80) {
+            match rng.range_usize(0, 3) {
+                0 => {
+                    let t = random_tokens(rng, rng.range_usize(1, max_len / 2));
+                    assert!(s.submit(next_id, t));
+                    next_id += 1;
+                }
+                1 => {
+                    for a in s.schedule() {
+                        s.note_prefilled(a.id, &a.tokens);
+                        active.insert(a.id, a.tokens);
+                    }
+                }
+                2 => {
+                    // grow one active sequence by one token
+                    let Some(&id) = active.keys().next() else { continue };
+                    let t = active.get_mut(&id).unwrap();
+                    if t.len() >= max_len {
+                        let t = active.remove(&id).unwrap();
+                        s.finish(id, &t, t.len());
+                        continue;
+                    }
+                    t.push(rng.range_i64(3, 47) as i32);
+                    let new_len = t.len();
+                    loop {
+                        match s.grow_to(id, new_len) {
+                            areal::serve::Grow::Ok => break,
+                            areal::serve::Grow::Preempt(v) => {
+                                let vt = active.remove(&v).unwrap();
+                                s.preempt(v, &vt, vt.len());
+                            }
+                            areal::serve::Grow::Fail => {
+                                return Err("pool cannot hold one bounded sequence".into())
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    if let Some(&id) = active.keys().next() {
+                        let t = active.remove(&id).unwrap();
+                        s.finish(id, &t, t.len());
+                    }
+                }
+            }
+            if let Err(e) = s.check() {
+                return Err(e);
+            }
+        }
+        // drain: finish everything; all non-cache references must unwind
+        let ids: Vec<SeqId> = active.keys().copied().collect();
+        for id in ids {
+            let t = active.remove(&id).unwrap();
+            s.finish(id, &t, t.len());
+        }
+        if let Err(e) = s.check() {
+            return Err(e);
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,184 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access to crates.io, so this crate
+//! reimplements the small API surface the workspace actually uses: `Result`,
+//! `Error` (a context chain of messages), the `Context` extension trait for
+//! `Result`/`Option`, and the `anyhow!`/`bail!`/`ensure!` macros. Semantics
+//! mirror upstream anyhow where they matter here: `Display` prints the
+//! outermost context, `{:#}` prints the whole chain separated by ": ", and
+//! `Debug` prints the chain in the multi-line "Caused by" style.
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error wrapping a chain of context messages (outermost first).
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error in an additional layer of context.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out.into_iter()
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(c) = cur.cause.as_deref() {
+            cur = c;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let chain: Vec<&str> = self.chain().collect();
+            write!(f, "{}", chain.join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for (i, m) in self.chain().skip(1).enumerate() {
+                write!(f, "\n    {i}: {m}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like upstream anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Box<Error>> = None;
+        while let Some(m) = msgs.pop() {
+            err = Some(Box::new(Error { msg: m, cause: err }));
+        }
+        *err.expect("at least one message")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*).into()) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn context_layers() {
+        let r: Result<()> = Err(io_err()).context("opening file");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "opening file");
+        assert_eq!(format!("{e:#}"), "opening file: missing");
+        assert_eq!(e.root_cause(), "missing");
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("nothing here");
+        assert_eq!(r.unwrap_err().to_string(), "nothing here");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(x: usize) -> Result<()> {
+            if x > 3 {
+                bail!("x too big ({x} > 3)");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(9).unwrap_err().to_string(), "x too big (9 > 3)");
+    }
+
+    #[test]
+    fn debug_prints_chain() {
+        let e: Error = Error::from(io_err()).context("layer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("layer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("missing"));
+    }
+}

@@ -1,0 +1,483 @@
+//! Offline host-side stand-in for the `xla` crate (xla-rs PJRT bindings).
+//!
+//! The real crate links libxla_extension (PJRT + XLA compiler), which is not
+//! available in this build environment. This stub keeps the same API surface
+//! so the coordinator compiles and every pure-host code path works:
+//!
+//! - `Literal` is fully functional host memory (create / to_vec / reshape /
+//!   convert / tuple), including f16 → f32 upcasting;
+//! - `PjRtClient::compile` and executable execution return a descriptive
+//!   error — executing AOT HLO artifacts requires the real backend, and the
+//!   runtime layer already reports "run `make artifacts` first" before any
+//!   execution can be attempted.
+//!
+//! Swapping the real `xla` crate back in is a Cargo.toml-only change.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+const UNAVAILABLE: &str =
+    "PJRT execution is unavailable in the offline xla stub (link the real \
+     xla-rs backend to run AOT artifacts)";
+
+// ---------------------------------------------------------------------------
+// dtypes
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    pub fn primitive_type(self) -> PrimitiveType {
+        match self {
+            ElementType::Pred => PrimitiveType::Pred,
+            ElementType::S8 => PrimitiveType::S8,
+            ElementType::S16 => PrimitiveType::S16,
+            ElementType::S32 => PrimitiveType::S32,
+            ElementType::S64 => PrimitiveType::S64,
+            ElementType::U8 => PrimitiveType::U8,
+            ElementType::U16 => PrimitiveType::U16,
+            ElementType::U32 => PrimitiveType::U32,
+            ElementType::U64 => PrimitiveType::U64,
+            ElementType::F16 => PrimitiveType::F16,
+            ElementType::Bf16 => PrimitiveType::Bf16,
+            ElementType::F32 => PrimitiveType::F32,
+            ElementType::F64 => PrimitiveType::F64,
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::S16 | ElementType::U16 | ElementType::F16 | ElementType::Bf16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+impl PrimitiveType {
+    pub fn element_type(self) -> ElementType {
+        match self {
+            PrimitiveType::Pred => ElementType::Pred,
+            PrimitiveType::S8 => ElementType::S8,
+            PrimitiveType::S16 => ElementType::S16,
+            PrimitiveType::S32 => ElementType::S32,
+            PrimitiveType::S64 => ElementType::S64,
+            PrimitiveType::U8 => ElementType::U8,
+            PrimitiveType::U16 => ElementType::U16,
+            PrimitiveType::U32 => ElementType::U32,
+            PrimitiveType::U64 => ElementType::U64,
+            PrimitiveType::F16 => ElementType::F16,
+            PrimitiveType::Bf16 => ElementType::Bf16,
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::F64 => ElementType::F64,
+        }
+    }
+}
+
+/// Host types that map 1:1 onto an `ElementType`.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le(bytes: &[u8]) -> Self;
+    fn write_le(self, out: &mut Vec<u8>);
+}
+
+macro_rules! native {
+    ($t:ty, $et:expr) => {
+        impl NativeType for $t {
+            const ELEMENT_TYPE: ElementType = $et;
+            fn from_le(bytes: &[u8]) -> Self {
+                Self::from_le_bytes(bytes.try_into().expect("element width"))
+            }
+            fn write_le(self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+    };
+}
+
+native!(f32, ElementType::F32);
+native!(f64, ElementType::F64);
+native!(i32, ElementType::S32);
+native!(i64, ElementType::S64);
+native!(u32, ElementType::U32);
+native!(u64, ElementType::U64);
+
+// ---------------------------------------------------------------------------
+// shapes
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    ty: ElementType,
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn new(ty: ElementType, dims: Vec<i64>) -> Self {
+        ArrayShape { ty, dims }
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().map(|&d| d as usize).product()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+impl Shape {
+    pub fn is_tuple(&self) -> bool {
+        matches!(self, Shape::Tuple(_))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literals (fully functional host memory)
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Array { ty: ElementType, dims: Vec<i64>, data: Vec<u8> },
+    Tuple(Vec<Literal>),
+}
+
+/// Host tensor value, API-compatible with xla-rs `Literal`.
+#[derive(Debug, Clone)]
+pub struct Literal(Repr);
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let n: usize = dims.iter().product();
+        if data.len() != n * ty.size_bytes() {
+            return err(format!(
+                "untyped data of {} bytes does not match {:?}{:?} ({} bytes)",
+                data.len(),
+                ty,
+                dims,
+                n * ty.size_bytes()
+            ));
+        }
+        Ok(Literal(Repr::Array {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            data: data.to_vec(),
+        }))
+    }
+
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal(Repr::Tuple(elements))
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(match &self.0 {
+            Repr::Array { ty, dims, .. } => Shape::Array(ArrayShape::new(*ty, dims.clone())),
+            Repr::Tuple(els) => {
+                Shape::Tuple(els.iter().map(|e| e.shape()).collect::<Result<_>>()?)
+            }
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.0 {
+            Repr::Array { ty, dims, .. } => Ok(ArrayShape::new(*ty, dims.clone())),
+            Repr::Tuple(_) => err("literal is a tuple, not an array"),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.0 {
+            Repr::Array { dims, .. } => dims.iter().map(|&d| d as usize).product(),
+            Repr::Tuple(els) => els.iter().map(|e| e.element_count()).sum(),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.0 {
+            Repr::Array { ty, data, .. } => {
+                if *ty != T::ELEMENT_TYPE {
+                    return err(format!(
+                        "to_vec of {:?} literal as {:?}",
+                        ty,
+                        T::ELEMENT_TYPE
+                    ));
+                }
+                let w = ty.size_bytes();
+                Ok(data.chunks_exact(w).map(T::from_le).collect())
+            }
+            Repr::Tuple(_) => err("to_vec on tuple literal"),
+        }
+    }
+
+    /// Dtype conversion. Identity plus the f16/bf16 → f32 upcasts the
+    /// runtime layer needs (the fp16 KV cache is opaque elsewhere).
+    pub fn convert(&self, target: PrimitiveType) -> Result<Literal> {
+        let target = target.element_type();
+        let Repr::Array { ty, dims, data } = &self.0 else {
+            return err("convert on tuple literal");
+        };
+        if *ty == target {
+            return Ok(self.clone());
+        }
+        let decode: fn(&[u8]) -> f32 = match ty {
+            ElementType::F16 => half_to_f32,
+            ElementType::Bf16 => bf16_to_f32,
+            _ => return err(format!("convert {ty:?} -> {target:?} unsupported in stub")),
+        };
+        if target != ElementType::F32 {
+            return err(format!("convert {ty:?} -> {target:?} unsupported in stub"));
+        }
+        let mut out = Vec::with_capacity(data.len() * 2);
+        for ch in data.chunks_exact(2) {
+            out.extend_from_slice(&decode(ch).to_le_bytes());
+        }
+        Ok(Literal(Repr::Array { ty: ElementType::F32, dims: dims.clone(), data: out }))
+    }
+
+    /// Shape change with identical element count (deep copy).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let Repr::Array { ty, data, dims: old } = &self.0 else {
+            return err("reshape on tuple literal");
+        };
+        let n_new: i64 = dims.iter().product();
+        let n_old: i64 = old.iter().product();
+        if n_new != n_old {
+            return err(format!("reshape {old:?} -> {dims:?}: element count mismatch"));
+        }
+        Ok(Literal(Repr::Array { ty: *ty, dims: dims.to_vec(), data: data.clone() }))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.0 {
+            Repr::Tuple(els) => Ok(els),
+            Repr::Array { .. } => err("to_tuple on array literal"),
+        }
+    }
+}
+
+fn half_to_f32(b: &[u8]) -> f32 {
+    let bits = u16::from_le_bytes([b[0], b[1]]);
+    let sign = ((bits >> 15) & 1) as u32;
+    let exp = ((bits >> 10) & 0x1f) as u32;
+    let frac = (bits & 0x3ff) as u32;
+    let f32_bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31 // signed zero
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((f & 0x3ff) << 13)
+        }
+    } else if exp == 0x1f {
+        (sign << 31) | (0xff << 23) | (frac << 13) // inf / nan
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(f32_bits)
+}
+
+fn bf16_to_f32(b: &[u8]) -> f32 {
+    f32::from_bits((u16::from_le_bytes([b[0], b[1]]) as u32) << 16)
+}
+
+// ---------------------------------------------------------------------------
+// HLO + PJRT facade (compile/execute unavailable offline)
+
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        err(UNAVAILABLE)
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        err(UNAVAILABLE)
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        err(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let data: Vec<u8> = [1.0f32, 2.0, 3.0, 4.0]
+            .iter()
+            .flat_map(|x| x.to_le_bytes())
+            .collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &data)
+                .unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let data: Vec<u8> = [1i32, 2, 3, 4, 5, 6].iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2, 3], &data)
+                .unwrap();
+        let r = lit.reshape(&[6]).unwrap();
+        assert_eq!(r.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4, 5, 6]);
+        assert!(lit.reshape(&[4]).is_err());
+    }
+
+    #[test]
+    fn half_conversion() {
+        // 1.0 = 0x3c00, -2.0 = 0xc000, 0.5 = 0x3800
+        let halves: [u16; 3] = [0x3c00, 0xc000, 0x3800];
+        let data: Vec<u8> = halves.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F16, &[3], &data)
+                .unwrap();
+        let up = lit.convert(PrimitiveType::F32).unwrap();
+        assert_eq!(up.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 0.5]);
+    }
+
+    #[test]
+    fn tuple_untuple() {
+        let a = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[1],
+            &1.0f32.to_le_bytes(),
+        )
+        .unwrap();
+        let t = Literal::tuple(vec![a.clone(), a]);
+        assert!(t.shape().unwrap().is_tuple());
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn execution_is_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation { _private: () };
+        assert!(client.compile(&comp).is_err());
+    }
+
+    #[test]
+    fn shape_size_mismatch_rejected() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &[0u8; 8]
+        )
+        .is_err());
+    }
+}
