@@ -1,15 +1,23 @@
 //! Serving-layer benchmarks (serve/): the headline prefix-cache
 //! prefill-token savings on a GRPO group-sampling workload vs. the
 //! cache-disabled baseline (acceptance bar: >= 1.5x at G >= 4, hit rate
-//! reported), plus micro-benchmarks of the paged-KV hot paths and the
-//! cache-aware simulated-cluster decode throughput.
+//! reported), the router policy sweep (affinity vs fifo placement over W
+//! replica schedulers), micro-benchmarks of the paged-KV hot paths, and
+//! the cache-aware simulated-cluster decode throughput.
+//!
+//! Emits `BENCH_serve.json` (tokens, hit rate, policy per workload) so the
+//! perf trajectory is machine-readable across PRs.
 //!
 //!     cargo bench --bench bench_serve
 
 use std::collections::HashMap;
 
-use areal::serve::{BlockManager, Grow, RadixCache, Scheduler, SeqId, ServeCfg};
+use areal::serve::{
+    BlockManager, Grow, RadixCache, Request, RoutePolicy, Router, RouterCfg, Scheduler,
+    SeqId, ServeCfg,
+};
 use areal::sim::{self, SimConfig};
+use areal::util::json::Json;
 use areal::util::minibench::{black_box, Bench};
 use areal::util::rng::Rng;
 
@@ -88,7 +96,83 @@ fn run_group_workload(prefix_cache: bool, groups: usize, g: usize,
     }
 }
 
+/// Drive W replica schedulers behind a `serve::Router`: groups are routed
+/// by `policy`, each replica serves its inbox with the engine's refill
+/// pattern (admit waves sized by free capacity), stealing when dry.
+/// Returns aggregate (computed, cached) prefill tokens over the fleet.
+fn run_routed_fleet(policy: RoutePolicy, replicas: usize, groups: usize, g: usize,
+                    prompt_len: usize, gen_len: usize, seed: u64) -> (u64, u64) {
+    let router: Router<()> = Router::new(replicas, RouterCfg::new(policy, 16, 0));
+    let mut rng = Rng::new(seed);
+    for gid in 0..groups as u64 {
+        let p = random_tokens(&mut rng, prompt_len);
+        for _ in 0..g {
+            router.submit(Request { group: gid, tokens: p.clone(), payload: () });
+        }
+    }
+    let mut computed = 0u64;
+    let mut cached = 0u64;
+    for w in 0..replicas {
+        // admission waves smaller than G: the wave's own siblings cannot
+        // hit (cache inserts land after the wave), later waves can
+        let cfg = ServeCfg {
+            block_size: 16,
+            num_blocks: 8 * (prompt_len + gen_len),
+            max_seqs: 2,
+            prefix_cache: true,
+        };
+        let mut s = Scheduler::new(cfg);
+        let mut next_id: SeqId = 0;
+        let mut targets: HashMap<SeqId, usize> = HashMap::new();
+        let mut active: HashMap<SeqId, Vec<i32>> = HashMap::new();
+        loop {
+            let cap = 4usize.saturating_sub(s.running_len() + s.waiting_len());
+            for q in router.pull(w, cap).reqs {
+                assert!(s.submit(next_id, q.tokens));
+                targets.insert(next_id, prompt_len + gen_len);
+                next_id += 1;
+            }
+            for a in s.schedule() {
+                s.note_prefilled(a.id, &a.tokens);
+                active.insert(a.id, a.tokens);
+            }
+            if active.is_empty() {
+                assert_eq!(s.waiting_len(), 0, "replica starved");
+                if router.queued(w) == 0 {
+                    break;
+                }
+                continue;
+            }
+            let ids: Vec<SeqId> = active.keys().copied().collect();
+            for id in ids {
+                let Some(mut t) = active.remove(&id) else { continue };
+                t.push(rng.range_i64(3, 47) as i32);
+                loop {
+                    match s.grow_to(id, t.len()) {
+                        Grow::Ok => break,
+                        Grow::Preempt(victim) => {
+                            let vt = active.remove(&victim).expect("victim active");
+                            s.preempt(victim, &vt, vt.len());
+                        }
+                        Grow::Fail => panic!("budget too small for one sequence"),
+                    }
+                }
+                if t.len() >= targets[&id] {
+                    s.finish(id, &t, t.len());
+                    router.complete(w, prompt_len);
+                } else {
+                    active.insert(id, t);
+                }
+            }
+        }
+        computed += s.prefill_tokens_computed;
+        cached += s.prefill_tokens_cached;
+    }
+    (computed, cached)
+}
+
 fn main() {
+    let mut records: Vec<Json> = Vec::new();
     println!("== GRPO group-sampling workload: radix prefix cache vs none ==");
     println!("   (prompt 64 tok, gen 64 tok, 8 decode slots, 512 KV blocks)");
     for (g, groups) in [(4usize, 16usize), (8, 8), (16, 4)] {
@@ -105,6 +189,46 @@ fn main() {
             off.computed,
             hit * 100.0,
             on.preemptions
+        );
+        records.push(Json::obj(vec![
+            ("name", Json::str("group_cache")),
+            ("group_size", Json::num(g as f64)),
+            ("computed_tokens", Json::num(on.computed as f64)),
+            ("computed_tokens_nocache", Json::num(off.computed as f64)),
+            ("cached_tokens", Json::num(on.cached as f64)),
+            ("hit_rate", Json::num(hit)),
+            ("savings", Json::num(savings)),
+        ]));
+    }
+
+    println!("\n== router policy sweep: affinity vs fifo over W replicas ==");
+    println!("   (16 groups x G=4 siblings, prompt 64 tok, gen 64 tok)");
+    for replicas in [2usize, 4] {
+        let mut by_policy = Vec::new();
+        for policy in [RoutePolicy::Fifo, RoutePolicy::Affinity] {
+            let (computed, cached) =
+                run_routed_fleet(policy, replicas, 16, 4, 64, 64, 9);
+            let hit = cached as f64 / (cached + computed).max(1) as f64;
+            records.push(Json::obj(vec![
+                ("name", Json::str("router")),
+                ("policy", Json::str(policy.name())),
+                ("replicas", Json::num(replicas as f64)),
+                ("group_size", Json::num(4.0)),
+                ("computed_tokens", Json::num(computed as f64)),
+                ("cached_tokens", Json::num(cached as f64)),
+                ("hit_rate", Json::num(hit)),
+            ]));
+            by_policy.push((policy, computed, cached, hit));
+        }
+        let (_, fifo_computed, ..) = by_policy[0];
+        let (_, aff_computed, _, aff_hit) = by_policy[1];
+        let bar = if aff_computed < fifo_computed { "PASS" } else { "FAIL" };
+        println!(
+            "  W={replicas}: affinity {:>6} computed ({:4.1}% hit) vs fifo {:>6}  \
+             [affinity < fifo: {bar}]",
+            aff_computed,
+            aff_hit * 100.0,
+            fifo_computed
         );
     }
 
@@ -184,4 +308,23 @@ fn main() {
         without.gen_tokens / without.total_s / 1e3,
         without.prefill_tokens / 1e6
     );
+    records.push(Json::obj(vec![
+        ("name", Json::str("sim_cluster")),
+        ("policy", Json::str(with.route_policy)),
+        ("computed_tokens", Json::num(with.prefill_tokens)),
+        ("cached_tokens", Json::num(with.cached_prefill_tokens)),
+        ("hit_rate", Json::num(with.cache_hit_rate)),
+        ("effective_tps", Json::num(with.effective_tps)),
+        ("effective_tps_nocache", Json::num(without.effective_tps)),
+    ]));
+
+    // machine-readable perf trajectory, tracked across PRs
+    let n = records.len();
+    let out = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("BENCH_serve.json", format!("{out}\n"))
+        .expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json ({n} records)");
 }

@@ -36,6 +36,22 @@ fn main() {
         );
     }
 
+    println!("\nrequest routing across replicas — {} @ 64 GPUs (W-replica sweep)", model.name);
+    println!("{:>10} {:>14} {:>12} {:>12}", "policy", "prefill Mtok", "hit rate", "ktok/s");
+    for policy in [areal::serve::RoutePolicy::Fifo, areal::serve::RoutePolicy::Affinity] {
+        let mut cfg = SimConfig::paper_default(model, 64, ctx);
+        cfg.n_steps = 6;
+        cfg.route_policy = policy;
+        let r = sim::run_async(&cfg);
+        println!(
+            "{:>10} {:>14.2} {:>11.1}% {:>12.1}",
+            r.route_policy,
+            r.prefill_tokens / 1e6,
+            r.cache_hit_rate * 100.0,
+            r.effective_tps / 1e3,
+        );
+    }
+
     println!("\ntimelines (2 steps, 7B @ 64 GPUs):");
     let mut cfg = SimConfig::paper_default(model, 64, ctx);
     cfg.n_steps = 2;

@@ -6,6 +6,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::serve::RoutePolicy;
 use crate::util::json::Json;
 
 /// Scheduling mode — the systems compared throughout the paper.
@@ -79,6 +80,11 @@ pub struct Config {
     pub kv_blocks: usize,
     /// radix prefix cache (GRPO siblings / resumed rollouts reuse prefills)
     pub prefix_cache: bool,
+    /// request routing across rollout replicas: `fifo` (round-robin
+    /// baseline) or `affinity` (sticky prefix affinity, the default)
+    pub route_policy: RoutePolicy,
+    /// max requests a dry replica may steal per refill (0 = no stealing)
+    pub route_steal_max: usize,
 
     // rollout
     pub task: String,
@@ -130,6 +136,8 @@ impl Default for Config {
             kv_block_size: 0,
             kv_blocks: 0,
             prefix_cache: true,
+            route_policy: RoutePolicy::Affinity,
+            route_steal_max: 4,
             task: "math".into(),
             level_lo: 1,
             level_hi: 3,
@@ -202,6 +210,11 @@ impl Config {
             "kv_block_size" => self.kv_block_size = u(val)?,
             "kv_blocks" => self.kv_blocks = u(val)?,
             "prefix_cache" => self.prefix_cache = parse_bool(val)?,
+            "route_policy" => {
+                self.route_policy = RoutePolicy::parse(val)
+                    .with_context(|| format!("unknown route_policy '{val}' (fifo|affinity)"))?
+            }
+            "route_steal_max" => self.route_steal_max = u(val)?,
             "task" => self.task = val.to_string(),
             "level_lo" => self.level_lo = u(val)?,
             "level_hi" => self.level_hi = u(val)?,
@@ -325,6 +338,19 @@ mod tests {
         assert_eq!(cfg.kv_block_size, 32);
         assert_eq!(cfg.kv_blocks, 1024);
         assert!(!cfg.prefix_cache);
+    }
+
+    #[test]
+    fn route_keys_apply() {
+        let cfg = Config::load(
+            None,
+            &["route_policy=fifo".into(), "route_steal_max=0".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.route_policy, RoutePolicy::Fifo);
+        assert_eq!(cfg.route_steal_max, 0);
+        assert_eq!(Config::default().route_policy, RoutePolicy::Affinity);
+        assert!(Config::load(None, &["route_policy=bogus".into()]).is_err());
     }
 
     #[test]

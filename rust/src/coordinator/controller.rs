@@ -2,20 +2,27 @@
 //! invokes the rollout worker's generate request ... It rejects new
 //! generation requests that may violate the staleness constraint" (§5.1).
 //!
-//! The controller thread keeps the shared prompt queue stocked, submitting
-//! each prompt `group_size` times (the paper's n answers per question) and
-//! charging every submission against the Eq. 3 gate at the *current* policy
-//! version.
+//! The controller thread is the submission side of the request-routed
+//! rollout plane: it tokenizes each prompt once, charges every submission
+//! against the Eq. 3 gate at the *current* policy version, and hands the
+//! whole GRPO group (the paper's n answers per question) to the
+//! `serve::Router`, which places the siblings on engine replicas by the
+//! configured policy. With `affinity` routing the G siblings land on one
+//! replica, so that replica's radix prefix cache serves G−1 of the prompt
+//! prefills.
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::serve::Request;
 use crate::tasks::Dataset;
+use crate::text::tokenizer::Tokenizer;
 
 use super::gate::StalenessGate;
+use super::messages::GenRouter;
 use super::param_server::ParamServer;
+use super::trace::{Event, Trace};
 
 pub struct ControllerCfg {
     pub group_size: usize,
@@ -26,18 +33,19 @@ pub struct ControllerCfg {
 
 /// Body of the controller thread.
 pub fn run_controller(dataset: Dataset, gate: Arc<StalenessGate>,
-                      server: Arc<ParamServer>,
-                      queue: Arc<Mutex<VecDeque<crate::tasks::Prompt>>>,
-                      stop: Arc<AtomicBool>, cfg: ControllerCfg) {
+                      server: Arc<ParamServer>, router: Arc<GenRouter>,
+                      stop: Arc<AtomicBool>, cfg: ControllerCfg,
+                      trace: Arc<Trace>) {
+    let tokenizer = Tokenizer::new();
     let mut next_idx: u64 = 0;
     // submit whole groups atomically so the group-mean baseline always has
     // its n samples
     'outer: while !stop.load(Ordering::Acquire) {
         let version = server.version();
         let mut submitted_any = false;
-        // keep the queue shallow: enough to refill every worker, not more
-        let queue_cap = 4 * cfg.group_size.max(8);
-        while queue.lock().unwrap().len() < queue_cap {
+        // keep the inboxes shallow: enough to refill every replica, not more
+        let queue_cap = 2 * router.n_replicas() * cfg.group_size.max(8);
+        while router.queued_total() < queue_cap {
             if let Some(max) = cfg.max_submissions {
                 if gate.submitted() + cfg.group_size as u64 > max {
                     break 'outer;
@@ -56,15 +64,24 @@ pub fn run_controller(dataset: Dataset, gate: Arc<StalenessGate>,
             }
             let prompt = dataset.prompt(next_idx);
             next_idx += 1;
-            let mut q = queue.lock().unwrap();
+            let tokens = tokenizer.encode_bos(&prompt.text);
             for _ in 0..reserved {
-                q.push_back(prompt.clone());
+                let replica = router.submit(Request {
+                    group: prompt.group,
+                    tokens: tokens.clone(),
+                    payload: prompt.clone(),
+                });
+                trace.log(Event::Route {
+                    replica,
+                    group: prompt.group,
+                    queued: router.queued(replica),
+                });
             }
             submitted_any = true;
         }
         if !submitted_any {
-            // gated (stale) or queue full: wait for the trainer to bump the
-            // version
+            // gated (stale) or inboxes full: wait for the trainer to bump
+            // the version
             std::thread::sleep(Duration::from_millis(2));
         }
     }
@@ -73,9 +90,11 @@ pub fn run_controller(dataset: Dataset, gate: Arc<StalenessGate>,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{HostTensor, ParamSet};
     use crate::runtime::executor::SendLiteral;
+    use crate::runtime::{HostTensor, ParamSet};
+    use crate::serve::{RoutePolicy, RouterCfg};
     use crate::tasks::{dataset::LevelMix, AdditionTask};
+    use std::collections::HashMap;
 
     fn server(v: u64) -> Arc<ParamServer> {
         let lit = HostTensor::scalar_f32(0.0).to_literal().unwrap();
@@ -87,32 +106,49 @@ mod tests {
         ParamSet::with_version(vec![SendLiteral(lit)], v)
     }
 
+    fn router(n: usize) -> Arc<GenRouter> {
+        Arc::new(GenRouter::new(n, RouterCfg::new(RoutePolicy::Affinity, 8, 0)))
+    }
+
     #[test]
     fn controller_respects_gate_and_groups() {
         let ds = Dataset::new(Arc::new(AdditionTask), 1, LevelMix::single(1));
         let gate = Arc::new(StalenessGate::new(8, Some(0)));
         let srv = server(0);
-        let queue = Arc::new(Mutex::new(VecDeque::new()));
+        let router = router(2);
         let stop = Arc::new(AtomicBool::new(false));
-        let q2 = Arc::clone(&queue);
+        let trace = Arc::new(Trace::new(true));
+        let r2 = Arc::clone(&router);
         let g2 = Arc::clone(&gate);
         let s2 = Arc::clone(&srv);
         let st2 = Arc::clone(&stop);
+        let t2 = Arc::clone(&trace);
         let h = std::thread::spawn(move || {
             run_controller(
-                ds, g2, s2, q2, st2,
+                ds, g2, s2, r2, st2,
                 ControllerCfg { group_size: 4, max_submissions: None },
+                t2,
             )
         });
         std::thread::sleep(Duration::from_millis(50));
         // η=0, B=8, version 0 → exactly 8 submissions (2 groups of 4)
         assert_eq!(gate.submitted(), 8);
-        {
-            let q = queue.lock().unwrap();
-            assert_eq!(q.len(), 8);
-            // group members share the same prompt
-            assert_eq!(q[0].meta, q[3].meta);
-            assert_ne!(q[0].meta, q[4].meta);
+        assert_eq!(router.queued_total(), 8);
+        // every submission was traced with its replica placement
+        assert_eq!(trace.count(|e| matches!(e, Event::Route { .. })), 8);
+        // whole groups travel together: 2 groups × 4 identical siblings,
+        // each group entirely on one replica (affinity policy)
+        let mut groups: HashMap<u64, Vec<(usize, String)>> = HashMap::new();
+        for w in 0..2 {
+            for q in router.pull(w, 64).reqs {
+                groups.entry(q.group).or_default().push((w, q.payload.meta));
+            }
+        }
+        assert_eq!(groups.len(), 2);
+        for members in groups.values() {
+            assert_eq!(members.len(), 4);
+            assert!(members.iter().all(|(w, _)| *w == members[0].0), "co-located");
+            assert!(members.iter().all(|(_, m)| *m == members[0].1), "same prompt");
         }
         // trainer publishes version 1 → 8 more admitted
         srv.publish(pset(1));
@@ -127,12 +163,12 @@ mod tests {
         let ds = Dataset::new(Arc::new(AdditionTask), 1, LevelMix::single(1));
         let gate = Arc::new(StalenessGate::new(4, None));
         let srv = server(0);
-        let queue = Arc::new(Mutex::new(VecDeque::new()));
         let stop = Arc::new(AtomicBool::new(false));
         let g2 = Arc::clone(&gate);
         run_controller(
-            ds, g2, srv, queue, stop,
+            ds, g2, srv, router(2), stop,
             ControllerCfg { group_size: 2, max_submissions: Some(10) },
+            Arc::new(Trace::new(false)),
         );
         // stops on its own; ≤ 10 submissions
         assert!(gate.submitted() <= 10);

@@ -154,4 +154,46 @@ mod tests {
         // floor(n/16) <= 0+1 admits exactly indices 0..32
         assert_eq!(total, 32);
     }
+
+    #[test]
+    fn hammered_cas_loop_never_overshoots_eq3() {
+        // N threads hammering try_submit at a FIXED version must admit
+        // exactly B*(v+η+1) submissions in total — the CAS loop makes the
+        // check and the count one atomic step, so no interleaving can
+        // overshoot Eq. 3, and losing the race must never under-admit
+        // either. Swept over (B, η, v, N) shapes, each thread spinning far
+        // past the bound to maximize contention.
+        use std::sync::Arc;
+        for (b, eta, version, n_threads) in
+            [(1usize, 0u64, 0u64, 8usize), (3, 2, 1, 8), (16, 1, 0, 4),
+             (5, 0, 7, 6), (7, 3, 2, 12)]
+        {
+            let bound = b as u64 * (version + eta + 1);
+            let g = Arc::new(StalenessGate::new(b, Some(eta)));
+            let mut handles = Vec::new();
+            for _ in 0..n_threads {
+                let g = Arc::clone(&g);
+                handles.push(std::thread::spawn(move || {
+                    let mut admitted = 0u64;
+                    // keep hammering after rejections: a stale rejection
+                    // must never be sticky while slots remain
+                    for _ in 0..(2 * bound + 64) {
+                        if g.try_submit(version) {
+                            admitted += 1;
+                        }
+                    }
+                    admitted
+                }));
+            }
+            let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            assert_eq!(
+                total, bound,
+                "B={b} eta={eta} v={version} threads={n_threads}: \
+                 admitted {total}, Eq. 3 bound {bound}"
+            );
+            assert_eq!(g.submitted(), bound, "counter matches admissions");
+            // and the gate stays closed afterwards at this version
+            assert!(!g.try_submit(version));
+        }
+    }
 }

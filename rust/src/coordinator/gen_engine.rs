@@ -33,7 +33,7 @@ use crate::tasks::Prompt;
 use crate::text::tokenizer::{Tokenizer, BOS, EOS};
 use crate::util::rng::Rng;
 
-use super::messages::Trajectory;
+use super::messages::{GenRequest, Trajectory};
 
 /// One in-flight sequence.
 #[derive(Debug)]
@@ -208,38 +208,55 @@ impl GenEngine {
         interrupted
     }
 
-    /// Submit prompts to the serving layer; returns the number accepted
-    /// (bounded by `fill_capacity`). Admission itself happens at the next
-    /// `prefill`, subject to the KV block budget.
-    pub fn fill(&mut self, prompts: &mut Vec<Prompt>) -> Result<usize> {
-        let mut accepted = 0;
+    /// Serve routed `generate` requests (already tokenized once by the
+    /// controller frontend); returns the number accepted. Callers size
+    /// their router `pull` by `fill_capacity`, so every delivered request
+    /// must fit — over-delivery is a routing bug, not back-pressure.
+    /// Admission itself happens at the next `prefill`, subject to the KV
+    /// block budget.
+    pub fn fill_requests(&mut self, reqs: Vec<GenRequest>) -> Result<usize> {
         let capacity = self.fill_capacity();
-        while accepted < capacity {
-            let Some(p) = prompts.pop() else { break };
-            let tokens = self.tokenizer.encode_bos(&p.text);
-            if tokens.len() + 8 > self.t {
+        let n = reqs.len();
+        if n > capacity {
+            bail!("router delivered {n} requests for {capacity} free slots");
+        }
+        for r in reqs {
+            if r.tokens.len() + 8 > self.t {
                 bail!(
                     "prompt too long ({} tokens) for max_seq {}",
-                    tokens.len(),
+                    r.tokens.len(),
                     self.t
                 );
             }
             let id = self.next_seq;
             self.next_seq += 1;
-            if !self.serve.submit(id, tokens) {
+            if !self.serve.submit(id, r.tokens) {
                 bail!(
                     "prompt does not fit the KV pool ({} blocks of {}) — raise kv_blocks",
                     self.serve.cfg().num_blocks,
                     self.serve.cfg().block_size
                 );
             }
-            self.pending_fresh.insert(id, p);
-            accepted += 1;
+            self.pending_fresh.insert(id, r.payload);
         }
-        if accepted > 0 {
+        if n > 0 {
             self.needs_prefill = true;
         }
-        Ok(accepted)
+        Ok(n)
+    }
+
+    /// Submit raw prompts (bounded by `fill_capacity`; surplus stays in
+    /// `prompts`). Convenience wrapper over [`Self::fill_requests`] for
+    /// eval generation and tests that bypass the router frontend.
+    pub fn fill(&mut self, prompts: &mut Vec<Prompt>) -> Result<usize> {
+        let capacity = self.fill_capacity();
+        let mut reqs = Vec::new();
+        while reqs.len() < capacity {
+            let Some(p) = prompts.pop() else { break };
+            let tokens = self.tokenizer.encode_bos(&p.text);
+            reqs.push(GenRequest { group: p.group, tokens, payload: p });
+        }
+        self.fill_requests(reqs)
     }
 
     pub fn needs_prefill(&self) -> bool {

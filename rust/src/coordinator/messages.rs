@@ -3,6 +3,17 @@
 use crate::runtime::Version;
 use crate::tasks::Prompt;
 
+/// A typed `generate` request as it travels the router frontend: token ids
+/// (BOS + prompt, tokenized once by the controller), the GRPO group id the
+/// router fingerprints, and the originating `Prompt` as payload.
+pub type GenRequest = crate::serve::Request<Prompt>;
+
+/// The coordinator's instantiation of the `serve::Router` dispatch plane:
+/// the controller submits [`GenRequest`]s, rollout workers serve their
+/// per-replica inboxes, and `update_weights`/drain control fans out
+/// through the same frontend.
+pub type GenRouter = crate::serve::Router<Prompt>;
+
 /// A completed rollout: one prompt + one sampled response, with everything
 /// the trainer needs to build the decoupled-PPO minibatch.
 #[derive(Debug, Clone)]

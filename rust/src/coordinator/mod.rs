@@ -22,7 +22,7 @@ pub mod trainer;
 pub use buffer::ReplayBuffer;
 pub use gate::StalenessGate;
 pub use gen_engine::GenEngine;
-pub use messages::{StepMetrics, Trajectory};
+pub use messages::{GenRequest, GenRouter, StepMetrics, Trajectory};
 pub use param_server::ParamServer;
 pub use system::{RunReport, System};
 pub use trace::{Event, Trace};

@@ -1,25 +1,26 @@
-//! Rollout worker thread — wraps a `GenEngine` with the async plumbing:
-//! weight-sync polling (the pull side of `update_weights`), prompt-queue
-//! refills, decode loop, and reward submission (off-thread, §6 overlap).
-//! The engine runs on the `serve/` paged-KV layer, so refills are sized by
-//! the scheduler's admission capacity and preemptions/cache hits surface in
-//! the trace.
+//! Rollout worker thread — a request server over its router inbox: the
+//! worker wraps a `GenEngine` and serves the two requests of the paper's
+//! §4.1 worker (`generate`, `update_weights`), both delivered through the
+//! `serve::Router` frontend. Refills pull typed requests from this
+//! replica's inbox (stealing a bounded batch from a hot sibling when dry),
+//! weight-sync and drain arrive as control messages, and reward submission
+//! stays off-thread (§6 overlap). The engine runs on the `serve/` paged-KV
+//! layer, so refills are sized by the scheduler's admission capacity and
+//! preemptions/cache hits surface in the trace.
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::reward::{RewardRequest, RewardService};
 use crate::runtime::Engine;
-use crate::serve::ServeCfg;
-use crate::tasks::Prompt;
+use crate::serve::{Control, ServeCfg};
 
 use super::buffer::ReplayBuffer;
 use super::gen_engine::GenEngine;
+use super::messages::GenRouter;
 use super::param_server::ParamServer;
 use super::trace::{Event, Trace};
 
@@ -28,7 +29,7 @@ pub struct RolloutShared {
     pub server: Arc<ParamServer>,
     pub buffer: Arc<ReplayBuffer>,
     pub reward: Arc<RewardService>,
-    pub queue: Arc<Mutex<VecDeque<Prompt>>>,
+    pub router: Arc<GenRouter>,
     pub stop: Arc<AtomicBool>,
     pub trace: Arc<Trace>,
     /// completion tokens generated across all workers (gen throughput)
@@ -56,11 +57,22 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
     // weight sync deferred until drain completes (non-interruptible mode)
     let mut pending_sync = false;
     let mut seen_preemptions: u64 = 0;
+    // highest weight version the frontend has announced; the worker never
+    // polls the parameter store — `update_weights` arrives as a request
+    let mut announced = shared.server.version();
+    let mut draining = false;
 
     while !shared.stop.load(Ordering::Acquire) {
+        // -- control plane: update_weights fan-out + drain ---------------
+        for c in shared.router.take_control(worker_id) {
+            match c {
+                Control::UpdateWeights(v) => announced = announced.max(v),
+                Control::Drain => draining = true,
+            }
+        }
+
         // -- weight sync (the update_weights request) -------------------
-        let latest = shared.server.version();
-        if latest > gen.version() {
+        if announced > gen.version() {
             if cfg.interruptible || gen.all_empty() {
                 let params = shared.server.get();
                 let interrupted = gen.update_weights(Arc::clone(&params));
@@ -89,7 +101,7 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
             }
         }
 
-        // -- refill ------------------------------------------------------
+        // -- refill: serve this replica's inbox --------------------------
         let capacity = gen.fill_capacity();
         let empties = gen.empty_slots();
         let refill_wave = !pending_sync
@@ -97,22 +109,20 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                 || gen.needs_prefill()
                 || (empties as f64) >= (b as f64) * cfg.refill_fraction);
         if refill_wave {
-            if capacity > 0 {
-                let mut pulled: Vec<Prompt> = {
-                    let mut q = shared.queue.lock().unwrap();
-                    let n = capacity.min(q.len());
-                    q.drain(..n).collect()
-                };
-                if !pulled.is_empty() {
-                    let n = gen.fill(&mut pulled)?;
-                    debug_assert!(pulled.is_empty());
+            if capacity > 0 && !draining {
+                let pulled = shared.router.pull(worker_id, capacity);
+                if let Some((victim, reqs)) = pulled.stolen {
+                    shared.trace.log(Event::Steal { thief: worker_id, victim, reqs });
+                }
+                if !pulled.reqs.is_empty() {
+                    let n = gen.fill_requests(pulled.reqs)?;
                     shared.trace.log(Event::GenStart { worker: worker_id, slots: n });
                 }
             }
             // OOM-deferred or preempted sequences wait in the scheduler
-            // queue even when the prompt queue is dry — give them an
-            // admission wave as soon as one could actually admit (a wave
-            // that admits 0 still pays a full dense prefill)
+            // queue even when the inbox is dry — give them an admission
+            // wave as soon as one could actually admit (a wave that admits
+            // 0 still pays a full dense prefill)
             if gen.admission_feasible() {
                 gen.request_prefill();
             }
@@ -138,9 +148,16 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                 seen_preemptions = preemptions;
             }
             for traj in finished {
+                // release the router's load charge for the served request
+                shared.router.complete(worker_id, traj.prompt_len);
                 submit_for_reward(&shared, &gen, traj);
             }
         } else if gen.all_empty() && gen.waiting() == 0 {
+            if draining {
+                // in-flight work finished; anything still queued is surplus
+                // past the training budget — the frontend said stop
+                break;
+            }
             // nothing to do: either gated by staleness control or shutting
             // down — idle briefly (this is the idleness the paper's Fig. 1
             // shows for synchronous systems)

@@ -1,18 +1,20 @@
 //! System wiring — builds the full AReaL topology (Figure 2) in-process and
 //! runs a training session:
 //!
-//!   controller thread ──prompt queue──▶ rollout worker threads (W×)
-//!        │ Eq.3 gate                        │ finished + reward (pool)
-//!        ▼                                  ▼
-//!   param server ◀──publish── trainer ◀── replay buffer (oldest-first)
+//!   controller thread ──route──▶ serve::Router ──inbox──▶ rollout workers (W×)
+//!        │ Eq.3 gate                  ▲ update_weights / drain fan-out
+//!        ▼                            │                      │
+//!   param server ◀──publish── trainer ┴─◀── replay buffer (oldest-first)
 //!
-//! `Mode::Sync` / `Mode::Overlap` / `Mode::Async` differ ONLY in the
-//! (η, interruptible) schedule — the paper's claim that the scheduling
+//! The controller submits typed `generate` requests through the router
+//! (cache-affinity placement across replicas); the trainer's
+//! `update_weights` and the shutdown drain fan out through the same
+//! frontend. `Mode::Sync` / `Mode::Overlap` / `Mode::Async` differ ONLY in
+//! the (η, interruptible) schedule — the paper's claim that the scheduling
 //! policy is the delta is reproduced by construction.
 
-use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -20,7 +22,7 @@ use anyhow::{Context, Result};
 use crate::config::Config;
 use crate::reward::RewardService;
 use crate::runtime::{Engine, Manifest, ParamSet, TrainState};
-use crate::serve::ServeCfg;
+use crate::serve::{Control, RouterCfg, ServeCfg};
 use crate::tasks::{self, dataset::LevelMix, Dataset, SuiteResult};
 use crate::text::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
@@ -33,7 +35,7 @@ use super::param_server::ParamServer;
 use super::rollout::{run_rollout_worker, RolloutCfg, RolloutShared};
 use super::trace::Trace;
 use super::trainer::{Trainer, TrainerCfg};
-use super::messages::StepMetrics;
+use super::messages::{GenRouter, StepMetrics};
 
 /// Result of a training session.
 pub struct RunReport {
@@ -151,7 +153,6 @@ impl System {
         // --- async topology ---------------------------------------------
         let buffer = Arc::new(ReplayBuffer::new());
         let stop = Arc::new(AtomicBool::new(false));
-        let queue = Arc::new(Mutex::new(VecDeque::new()));
         let gen_tokens = Arc::new(AtomicU64::new(0));
         let task = tasks::task_by_name(&cfg.task).context("task")?;
         let reward = Arc::new(RewardService::new(Arc::from(task), cfg.reward_threads));
@@ -162,28 +163,6 @@ impl System {
         // ones still count), so exact budget suffices... keep +1 group for
         // rounding of group submissions
         let max_submissions = Some(needed + cfg.group_size as u64);
-
-        let t0 = Instant::now();
-        let mut handles = Vec::new();
-
-        // controller thread
-        {
-            let ds = self.dataset()?;
-            let gate = Arc::clone(&gate);
-            let server = Arc::clone(&server);
-            let queue = Arc::clone(&queue);
-            let stop = Arc::clone(&stop);
-            let ccfg = ControllerCfg { group_size: cfg.group_size, max_submissions };
-            handles.push(
-                std::thread::Builder::new()
-                    .name("controller".into())
-                    .spawn(move || {
-                        run_controller(ds, gate, server, queue, stop, ccfg);
-                        Ok(())
-                    })
-                    .unwrap(),
-            );
-        }
 
         // serving layer: paged KV budget + prefix cache per rollout worker
         let serve = {
@@ -201,13 +180,42 @@ impl System {
             s
         };
 
+        // request-routed rollout plane: the router fingerprints prompts at
+        // the same block alignment the replicas' radix caches use
+        let router = Arc::new(GenRouter::new(
+            cfg.n_rollout_workers,
+            RouterCfg::new(cfg.route_policy, serve.block_size, cfg.route_steal_max),
+        ));
+
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+
+        // controller thread (joined after the workers drain — it exits on
+        // the stop flag, workers exit on the frontend's Drain)
+        let controller_handle = {
+            let ds = self.dataset()?;
+            let gate = Arc::clone(&gate);
+            let server = Arc::clone(&server);
+            let router = Arc::clone(&router);
+            let stop = Arc::clone(&stop);
+            let trace = Arc::clone(&self.trace);
+            let ccfg = ControllerCfg { group_size: cfg.group_size, max_submissions };
+            std::thread::Builder::new()
+                .name("controller".into())
+                .spawn(move || -> Result<()> {
+                    run_controller(ds, gate, server, router, stop, ccfg, trace);
+                    Ok(())
+                })
+                .unwrap()
+        };
+
         // rollout workers
         for w in 0..cfg.n_rollout_workers {
             let shared = RolloutShared {
                 server: Arc::clone(&server),
                 buffer: Arc::clone(&buffer),
                 reward: Arc::clone(&reward),
-                queue: Arc::clone(&queue),
+                router: Arc::clone(&router),
                 stop: Arc::clone(&stop),
                 trace: Arc::clone(&self.trace),
                 gen_tokens: Arc::clone(&gen_tokens),
@@ -235,6 +243,9 @@ impl System {
                 break;
             };
             let m = trainer.ppo_step(batch, step, &self.trace)?;
+            // fan the paper's update_weights out through the frontend —
+            // workers serve it from their inboxes like any other request
+            router.broadcast(Control::UpdateWeights(server.version()));
             if step % 10 == 0 || step + 1 == cfg.ppo_steps {
                 crate::info!(
                     "train",
@@ -247,16 +258,48 @@ impl System {
             steps.push(m);
         }
 
-        // shutdown
-        stop.store(true, Ordering::Release);
+        // training is over — snapshot the Fig. 4-style throughput metrics
+        // before the drain, so the surplus tail decode (whose trajectories
+        // cannot be consumed once the buffer closes) skews neither wall_s
+        // nor gen_tokens
+        let wall_s = t0.elapsed().as_secs_f64();
+        let gen_tokens_total = gen_tokens.load(Ordering::Relaxed);
+
+        // shutdown: drain through the frontend — each worker finishes its
+        // in-flight sequences and exits on its own; only then is the
+        // controller hard-stopped (setting stop first would kill workers
+        // at the next loop check and skip the drain entirely). Join errors
+        // are collected, not early-returned, so the stop flag is always
+        // raised and no thread outlives this call.
+        router.broadcast(Control::Drain);
         buffer.close();
+        let mut first_err: Option<anyhow::Error> = None;
         for h in handles {
             match h.join() {
-                Ok(r) => r?,
-                Err(_) => anyhow::bail!("worker thread panicked"),
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow::anyhow!("worker thread panicked"));
+                }
             }
         }
-        let wall_s = t0.elapsed().as_secs_f64();
+        stop.store(true, Ordering::Release);
+        let controller_res = controller_handle.join();
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        match controller_res {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("controller thread panicked"),
+        }
+        let rstats = router.stats();
+        crate::info!(
+            "system",
+            "router: policy={} routed={:?} steals={} stolen_reqs={}",
+            cfg.route_policy.name(), rstats.routed, rstats.steals, rstats.stolen_reqs
+        );
 
         // --- eval ---------------------------------------------------------
         let final_params = Arc::clone(&trainer.state.params);
@@ -280,7 +323,7 @@ impl System {
             eval,
             trace: Arc::clone(&self.trace),
             wall_s,
-            gen_tokens: gen_tokens.load(Ordering::Relaxed),
+            gen_tokens: gen_tokens_total,
             train_tokens,
             effective_tps: train_tokens as f64 / wall_s,
             final_params,

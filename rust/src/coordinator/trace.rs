@@ -24,6 +24,11 @@ pub enum Event {
     Preempt { worker: usize, seqs: usize },
     /// worker w prefix-cache counters at weight sync (serve/)
     CacheStat { worker: usize, cached_tokens: u64, computed_tokens: u64 },
+    /// router placed a request of group g on a replica; `queued` is that
+    /// replica's inbox depth after placement (imbalance signal)
+    Route { replica: usize, group: u64, queued: usize },
+    /// dry replica stole requests from the back of a victim's inbox
+    Steal { thief: usize, victim: usize, reqs: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -92,6 +97,12 @@ impl Trace {
                 Event::CacheStat { worker, cached_tokens, computed_tokens } => {
                     ("cache_stat", *worker, *cached_tokens as i64, *computed_tokens as i64)
                 }
+                Event::Route { replica, group, queued } => {
+                    ("route", *replica, *group as i64, *queued as i64)
+                }
+                Event::Steal { thief, victim, reqs } => {
+                    ("steal", *thief, *victim as i64, *reqs as i64)
+                }
             };
             out.push_str(&format!("{:.6},{kind},{actor},{a},{b}\n", s.t));
         }
@@ -126,6 +137,16 @@ mod tests {
         tr.log(Event::Interrupt { worker: 2, version: 7, active_slots: 3 });
         let csv = tr.to_csv();
         assert!(csv.contains("interrupt,2,7,3"));
+    }
+
+    #[test]
+    fn routing_events_render() {
+        let tr = Trace::new(true);
+        tr.log(Event::Route { replica: 1, group: 42, queued: 3 });
+        tr.log(Event::Steal { thief: 0, victim: 1, reqs: 2 });
+        let csv = tr.to_csv();
+        assert!(csv.contains("route,1,42,3"));
+        assert!(csv.contains("steal,0,1,2"));
     }
 
     #[test]

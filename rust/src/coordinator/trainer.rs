@@ -71,8 +71,6 @@ struct MicroTensors {
     mask: HostTensor,
     adv: HostTensor,
     behav: HostTensor,
-    #[allow(dead_code)]
-    t: usize,
     n_tokens: usize,
     half: bool,
 }
@@ -306,7 +304,6 @@ impl Trainer {
             mask: HostTensor::f32(vec![bt, t], mask),
             adv: HostTensor::f32(vec![bt, t], adv),
             behav: HostTensor::f32(vec![bt, t], behav),
-            t,
             n_tokens,
             half,
         })

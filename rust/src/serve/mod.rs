@@ -10,17 +10,26 @@
 //!   rollouts reuse cached prefixes instead of re-prefilling them;
 //! - [`scheduler`]: continuous batching with FIFO admission, growth on
 //!   block boundaries, preemption-on-OOM, and the paper's §4.1
-//!   `update_weights` invalidation of stale-version KV.
+//!   `update_weights` invalidation of stale-version KV;
+//! - [`router`]: the request-routed dispatch plane over W engine replicas —
+//!   typed `generate` requests flow into per-replica inboxes chosen by a
+//!   pluggable policy (`fifo` baseline, sticky prefix-`affinity` default
+//!   with least-outstanding fallback and bounded work-stealing), and
+//!   `update_weights`/drain control fan out through the same frontend.
 //!
 //! `coordinator::GenEngine` runs its slot batch on top of a [`Scheduler`];
-//! `sim::run_async` models the same cache to make the simulated figure
-//! comparisons cache-aware; `benches/bench_serve.rs` measures the
-//! prefill-token savings on a group-sampling workload.
+//! the controller submits through a [`Router`] and rollout workers serve
+//! their inboxes; `sim::run_async` models the same cache and routing
+//! policies to make the simulated figure comparisons cache-aware;
+//! `benches/bench_serve.rs` measures the prefill-token savings on a
+//! group-sampling workload and emits `BENCH_serve.json`.
 
 pub mod blocks;
 pub mod radix;
+pub mod router;
 pub mod scheduler;
 
 pub use blocks::{BlockId, BlockManager};
 pub use radix::{InsertStats, PrefixMatch, RadixCache};
+pub use router::{Control, Pulled, Request, RoutePolicy, Router, RouterCfg, RouterStats};
 pub use scheduler::{Admitted, Grow, Scheduler, SeqId, ServeCfg, ServeStats};

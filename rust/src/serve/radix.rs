@@ -160,16 +160,16 @@ impl RadixCache {
         m
     }
 
-    /// Longest cached prefix of `tokens` whose KV was computed under
-    /// `version`. Matched blocks are retained for the caller.
-    pub fn match_prefix(&mut self, tokens: &[i32], version: Version,
-                        bm: &mut BlockManager) -> PrefixMatch {
-        let bs = bm.block_size();
-        self.clock += 1;
-        let clock = self.clock;
+    /// Shared longest-prefix descent under `version`: the nodes on the
+    /// matched path with their matched block counts, plus the matched
+    /// token length. Read-only — `match_prefix` layers retention and LRU
+    /// touches on top, `probe_prefix` uses it bare, so the two can never
+    /// disagree about what admission would serve.
+    fn walk_prefix(&self, tokens: &[i32], version: Version, bs: usize)
+        -> (Vec<(NodeId, usize)>, usize) {
         let mut cur = ROOT;
         let mut pos = 0usize;
-        let mut blocks = Vec::new();
+        let mut path = Vec::new();
         loop {
             if tokens.len() - pos < bs {
                 break;
@@ -185,21 +185,45 @@ impl RadixCache {
             if m == 0 {
                 break;
             }
-            self.node_mut(child).last_access = clock;
-            for i in 0..m {
-                let b = self.node(child).blocks[i];
-                bm.retain(b);
-                blocks.push(b);
-            }
+            path.push((child, m));
             pos += m * bs;
             if m < edge_blocks {
                 break;
             }
             cur = child;
         }
+        (path, pos)
+    }
+
+    /// Longest cached prefix of `tokens` whose KV was computed under
+    /// `version`. Matched blocks are retained for the caller.
+    pub fn match_prefix(&mut self, tokens: &[i32], version: Version,
+                        bm: &mut BlockManager) -> PrefixMatch {
+        let bs = bm.block_size();
+        let (path, pos) = self.walk_prefix(tokens, version, bs);
+        self.clock += 1;
+        let clock = self.clock;
+        let mut blocks = Vec::new();
+        for &(node, m) in &path {
+            self.node_mut(node).last_access = clock;
+            for i in 0..m {
+                let b = self.node(node).blocks[i];
+                bm.retain(b);
+                blocks.push(b);
+            }
+        }
         self.hit_tokens += pos as u64;
         self.miss_tokens += (tokens.len() / bs * bs - pos) as u64;
         PrefixMatch { blocks, tokens: pos }
+    }
+
+    /// Non-retaining longest-prefix probe: how many leading tokens of
+    /// `tokens` a `match_prefix` under `version` would serve right now.
+    /// Touches neither the LRU clock nor block refcounts — the
+    /// cache-probe hook routing policies consult without perturbing the
+    /// cache they are probing.
+    pub fn probe_prefix(&self, tokens: &[i32], version: Version, bs: usize) -> usize {
+        self.walk_prefix(tokens, version, bs).1
     }
 
     /// Cache the block-aligned prefix of `tokens` under `version`.

@@ -1,0 +1,605 @@
+//! Request-routed rollout frontend (DESIGN.md §5) — the dispatch plane
+//! between the controller and the engine replicas.
+//!
+//! The paper's controller "invokes the rollout worker's generate request"
+//! (§4.1); this module is that invocation path. Instead of W workers
+//! blindly draining one shared prompt FIFO, typed requests flow through a
+//! [`Router`] into per-replica inboxes chosen by a [`RoutePolicy`]:
+//!
+//! - **`fifo`** — the shared-queue baseline: requests round-robin across
+//!   replicas in submission order, so the G siblings of a GRPO group
+//!   scatter and each replica pays its own prompt prefill;
+//! - **`affinity`** (default) — sticky prefix affinity: each request is
+//!   fingerprinted by the block-aligned prefix of its token ids (the same
+//!   alignment the radix cache uses, so equal fingerprints mean a shared
+//!   cacheable prefix) and routed to the replica that owns that
+//!   fingerprint. First sight of a fingerprint picks the replica with the
+//!   fewest outstanding tokens, and an owner that grows severely
+//!   overloaded sheds the prefix to the least-loaded replica (one extra
+//!   prefill, then locality resumes) — per-replica radix caches become
+//!   realized savings at W ≥ 2 without a hot prefix pinning the fleet.
+//!
+//! A replica whose inbox runs dry may steal up to `steal_max` requests
+//! from the back of the fullest other inbox (bounded work-stealing: a hot
+//! replica cannot starve the fleet, and stealing newest-first preserves
+//! the victim's cache locality at its queue head).
+//!
+//! Control traffic — the paper's `update_weights` fan-out plus
+//! drain/abort — travels through the same frontend (`broadcast` /
+//! `take_control`), so the rollout worker is a pure request server over
+//! its inbox.
+//!
+//! The router is engine-agnostic like the rest of `serve/`: requests carry
+//! token ids, a group id, and an opaque payload (the coordinator threads
+//! its `Prompt` through; tests use `()`).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::Version;
+
+/// Routing policy over the replica inboxes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// round-robin in submission order (the shared-FIFO baseline)
+    Fifo,
+    /// sticky block-aligned prefix affinity, least-outstanding fallback
+    Affinity,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<RoutePolicy> {
+        match s {
+            "fifo" => Some(RoutePolicy::Fifo),
+            "affinity" => Some(RoutePolicy::Affinity),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::Fifo => "fifo",
+            RoutePolicy::Affinity => "affinity",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RouterCfg {
+    pub policy: RoutePolicy,
+    /// fingerprint alignment: must match the replicas' KV block size so
+    /// equal fingerprints imply a shared cacheable prefix
+    pub block_size: usize,
+    /// max requests a dry replica may steal per pull (0 = no stealing)
+    pub steal_max: usize,
+}
+
+impl RouterCfg {
+    pub fn new(policy: RoutePolicy, block_size: usize, steal_max: usize) -> RouterCfg {
+        RouterCfg { policy, block_size: block_size.max(1), steal_max }
+    }
+}
+
+/// One typed `generate` request: token ids (BOS + prompt), the GRPO group
+/// it belongs to, and an opaque payload for the caller.
+#[derive(Debug)]
+pub struct Request<T> {
+    pub group: u64,
+    pub tokens: Vec<i32>,
+    pub payload: T,
+}
+
+/// Control traffic fanned out through the frontend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    /// the paper's `update_weights`: version `v` is published, sync when
+    /// your interrupt policy allows
+    UpdateWeights(Version),
+    /// finish in-flight work, then stop serving
+    Drain,
+}
+
+/// What a `pull` returned: the requests plus where any of them were stolen
+/// from (for the `Steal` trace event).
+#[derive(Debug)]
+pub struct Pulled<T> {
+    pub reqs: Vec<Request<T>>,
+    /// Some((victim, n)) if `n` trailing requests were stolen from `victim`
+    pub stolen: Option<(usize, usize)>,
+}
+
+struct Inbox<T> {
+    reqs: VecDeque<Request<T>>,
+    ctrl: VecDeque<Control>,
+}
+
+/// Aggregate routing statistics (imbalance diagnostics).
+#[derive(Debug, Clone, Default)]
+pub struct RouterStats {
+    /// requests routed to each replica (submission-time placement)
+    pub routed: Vec<u64>,
+    /// pull calls that resorted to stealing
+    pub steals: u64,
+    /// requests moved by stealing
+    pub stolen_reqs: u64,
+    /// currently queued requests per replica
+    pub queued: Vec<usize>,
+}
+
+/// Cache-affinity request router over W engine replicas.
+pub struct Router<T> {
+    cfg: RouterCfg,
+    inboxes: Vec<Mutex<Inbox<T>>>,
+    /// queued-request count per replica, readable without the inbox lock
+    queued: Vec<AtomicUsize>,
+    /// tokens routed to each replica and not yet reported complete
+    outstanding: Vec<AtomicU64>,
+    /// fingerprint -> owning replica (affinity stickiness)
+    sticky: Mutex<HashMap<u64, usize>>,
+    rr: AtomicUsize,
+    routed: Vec<AtomicU64>,
+    steals: AtomicU64,
+    stolen_reqs: AtomicU64,
+}
+
+/// Sticky-map size bound; beyond this the map is cleared (affinity simply
+/// re-learns placements, it never blocks routing).
+const STICKY_CAP: usize = 1 << 16;
+
+/// Overload migration slack, in requests' worth of tokens: a sticky owner
+/// keeps its prefix while its outstanding tokens stay within 2× the
+/// least-loaded replica plus this slack; beyond that the prefix migrates
+/// there (one extra prefill, then locality resumes). Without this, a
+/// workload with fewer distinct prefixes than replicas would pin all
+/// traffic to one replica forever.
+const MIGRATE_SLACK_REQS: u64 = 4;
+
+impl<T> Router<T> {
+    pub fn new(n_replicas: usize, cfg: RouterCfg) -> Router<T> {
+        assert!(n_replicas > 0, "need at least one replica");
+        Router {
+            cfg,
+            inboxes: (0..n_replicas)
+                .map(|_| Mutex::new(Inbox { reqs: VecDeque::new(), ctrl: VecDeque::new() }))
+                .collect(),
+            queued: (0..n_replicas).map(|_| AtomicUsize::new(0)).collect(),
+            outstanding: (0..n_replicas).map(|_| AtomicU64::new(0)).collect(),
+            sticky: Mutex::new(HashMap::new()),
+            rr: AtomicUsize::new(0),
+            routed: (0..n_replicas).map(|_| AtomicU64::new(0)).collect(),
+            steals: AtomicU64::new(0),
+            stolen_reqs: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.inboxes.len()
+    }
+
+    pub fn policy(&self) -> RoutePolicy {
+        self.cfg.policy
+    }
+
+    /// FNV-1a over the block-aligned prefix of `tokens` (whole slice when
+    /// shorter than one block) — the unit the radix cache can actually
+    /// share, so equal fingerprints mean a shared cacheable prefix.
+    pub fn fingerprint(&self, tokens: &[i32]) -> u64 {
+        let bs = self.cfg.block_size;
+        let aligned = tokens.len() / bs * bs;
+        let prefix = if aligned == 0 { tokens } else { &tokens[..aligned] };
+        let mut h: u64 = 0xcbf29ce484222325;
+        for &t in prefix {
+            h ^= t as u32 as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    fn pick_replica(&self, tokens: &[i32]) -> usize {
+        let n = self.inboxes.len();
+        match self.cfg.policy {
+            RoutePolicy::Fifo => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RoutePolicy::Affinity => {
+                let fp = self.fingerprint(tokens);
+                let mut sticky = self.sticky.lock().unwrap();
+                let least = (0..n)
+                    .min_by_key(|&i| self.outstanding[i].load(Ordering::Relaxed))
+                    .unwrap();
+                if let Some(&owner) = sticky.get(&fp) {
+                    // sticky — unless the owner is severely overloaded
+                    // relative to the least-loaded replica, in which case
+                    // the prefix migrates there: a single hot prefix must
+                    // not pin the whole fleet to one replica
+                    let owner_load = self.outstanding[owner].load(Ordering::Relaxed);
+                    let least_load = self.outstanding[least].load(Ordering::Relaxed);
+                    let slack = MIGRATE_SLACK_REQS * tokens.len() as u64;
+                    if owner == least || owner_load <= 2 * least_load + slack {
+                        return owner;
+                    }
+                    sticky.insert(fp, least);
+                    return least;
+                }
+                // least-outstanding-tokens fallback for a fresh prefix
+                if sticky.len() >= STICKY_CAP {
+                    sticky.clear();
+                }
+                sticky.insert(fp, least);
+                least
+            }
+        }
+    }
+
+    /// Route one request; returns the chosen replica.
+    pub fn submit(&self, req: Request<T>) -> usize {
+        let r = self.pick_replica(&req.tokens);
+        self.outstanding[r].fetch_add(req.tokens.len() as u64, Ordering::Relaxed);
+        self.routed[r].fetch_add(1, Ordering::Relaxed);
+        let mut inbox = self.inboxes[r].lock().unwrap();
+        inbox.reqs.push_back(req);
+        self.queued[r].fetch_add(1, Ordering::Relaxed);
+        r
+    }
+
+    /// Pop up to `max_n` requests for `replica` — own inbox first, then a
+    /// bounded steal from the back of the fullest other inbox.
+    pub fn pull(&self, replica: usize, max_n: usize) -> Pulled<T> {
+        let mut out = Vec::new();
+        if max_n == 0 {
+            return Pulled { reqs: out, stolen: None };
+        }
+        {
+            let mut inbox = self.inboxes[replica].lock().unwrap();
+            while out.len() < max_n {
+                let Some(r) = inbox.reqs.pop_front() else { break };
+                out.push(r);
+            }
+        }
+        if !out.is_empty() {
+            self.queued[replica].fetch_sub(out.len(), Ordering::Relaxed);
+            return Pulled { reqs: out, stolen: None };
+        }
+        // dry inbox: steal from the fullest other replica, newest-first so
+        // the victim keeps the locality at its queue head
+        let budget = self.cfg.steal_max.min(max_n);
+        if budget == 0 {
+            return Pulled { reqs: out, stolen: None };
+        }
+        let victim = (0..self.inboxes.len())
+            .filter(|&i| i != replica)
+            .max_by_key(|&i| self.queued[i].load(Ordering::Relaxed));
+        let Some(victim) = victim else {
+            return Pulled { reqs: out, stolen: None };
+        };
+        {
+            let mut inbox = self.inboxes[victim].lock().unwrap();
+            while out.len() < budget {
+                let Some(r) = inbox.reqs.pop_back() else { break };
+                out.push(r);
+            }
+        }
+        if out.is_empty() {
+            return Pulled { reqs: out, stolen: None };
+        }
+        let n = out.len();
+        self.queued[victim].fetch_sub(n, Ordering::Relaxed);
+        // transfer the load charge from victim to thief
+        let tokens: u64 = out.iter().map(|r| r.tokens.len() as u64).sum();
+        sat_sub(&self.outstanding[victim], tokens);
+        self.outstanding[replica].fetch_add(tokens, Ordering::Relaxed);
+        self.steals.fetch_add(1, Ordering::Relaxed);
+        self.stolen_reqs.fetch_add(n as u64, Ordering::Relaxed);
+        Pulled { reqs: out, stolen: Some((victim, n)) }
+    }
+
+    /// Drain pending control messages for `replica`.
+    pub fn take_control(&self, replica: usize) -> Vec<Control> {
+        let mut inbox = self.inboxes[replica].lock().unwrap();
+        inbox.ctrl.drain(..).collect()
+    }
+
+    /// Fan a control message out to every replica inbox.
+    pub fn broadcast(&self, c: Control) {
+        for inbox in &self.inboxes {
+            inbox.lock().unwrap().ctrl.push_back(c);
+        }
+    }
+
+    /// A replica finished serving a request it pulled: release its load
+    /// charge (`tokens` = the request's token count).
+    pub fn complete(&self, replica: usize, tokens: usize) {
+        sat_sub(&self.outstanding[replica], tokens as u64);
+    }
+
+    pub fn queued(&self, replica: usize) -> usize {
+        self.queued[replica].load(Ordering::Relaxed)
+    }
+
+    pub fn queued_total(&self) -> usize {
+        self.queued.iter().map(|q| q.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn outstanding_tokens(&self, replica: usize) -> u64 {
+        self.outstanding[replica].load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> RouterStats {
+        RouterStats {
+            routed: self.routed.iter().map(|r| r.load(Ordering::Relaxed)).collect(),
+            steals: self.steals.load(Ordering::Relaxed),
+            stolen_reqs: self.stolen_reqs.load(Ordering::Relaxed),
+            queued: self.queued.iter().map(|q| q.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Saturating atomic subtract (completion reports can race steals).
+fn sat_sub(a: &AtomicU64, v: u64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_sub(v);
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{Grow, Scheduler, SeqId, ServeCfg};
+    use std::collections::HashMap;
+
+    const BS: usize = 4;
+
+    fn router(n: usize, policy: RoutePolicy, steal_max: usize) -> Router<()> {
+        Router::new(n, RouterCfg::new(policy, BS, steal_max))
+    }
+
+    fn req(group: u64, tokens: Vec<i32>) -> Request<()> {
+        Request { group, tokens, payload: () }
+    }
+
+    /// G sibling requests of one GRPO group (identical prompt tokens).
+    fn group_reqs(group: u64, g: usize, prompt_len: usize) -> Vec<Request<()>> {
+        let tokens: Vec<i32> =
+            (0..prompt_len).map(|i| (group as i32 * 31 + i as i32) % 97 + 3).collect();
+        (0..g).map(|_| req(group, tokens.clone())).collect()
+    }
+
+    #[test]
+    fn affinity_colocates_group_siblings_fifo_scatters() {
+        // the deterministic W=2, G=4 acceptance test: affinity puts all
+        // siblings of a group on one replica, fifo provably does not
+        for (policy, colocated) in
+            [(RoutePolicy::Affinity, true), (RoutePolicy::Fifo, false)]
+        {
+            let r = router(2, policy, 0);
+            let mut homes: HashMap<u64, Vec<usize>> = HashMap::new();
+            for gid in 0..4u64 {
+                for q in group_reqs(gid, 4, 16) {
+                    let replica = r.submit(q);
+                    homes.entry(gid).or_default().push(replica);
+                }
+            }
+            for (gid, replicas) in &homes {
+                let all_same = replicas.iter().all(|&x| x == replicas[0]);
+                assert_eq!(
+                    all_same, colocated,
+                    "{} group {gid} placement {replicas:?}",
+                    policy.name()
+                );
+            }
+            if policy == RoutePolicy::Fifo {
+                // round-robin: exactly half of each group per replica
+                for replicas in homes.values() {
+                    assert_eq!(replicas.iter().filter(|&&x| x == 0).count(), 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_balances_distinct_groups_by_outstanding_tokens() {
+        let r = router(2, RoutePolicy::Affinity, 0);
+        for gid in 0..6u64 {
+            for q in group_reqs(gid, 4, 16) {
+                r.submit(q);
+            }
+        }
+        // 6 groups x 4 siblings x 16 tokens, least-outstanding fallback:
+        // whole groups alternate between the two replicas
+        assert_eq!(r.queued(0), 12);
+        assert_eq!(r.queued(1), 12);
+        assert_eq!(r.outstanding_tokens(0), r.outstanding_tokens(1));
+    }
+
+    #[test]
+    fn pull_is_fifo_within_a_replica() {
+        let r = router(1, RoutePolicy::Fifo, 0);
+        for gid in 0..3u64 {
+            for q in group_reqs(gid, 2, 8) {
+                r.submit(q);
+            }
+        }
+        let p = r.pull(0, 4);
+        assert_eq!(p.reqs.len(), 4);
+        assert!(p.stolen.is_none());
+        assert_eq!(p.reqs.iter().map(|q| q.group).collect::<Vec<_>>(), vec![0, 0, 1, 1]);
+        assert_eq!(r.queued(0), 2);
+    }
+
+    #[test]
+    fn stealing_is_bounded_and_transfers_charge() {
+        let r = router(2, RoutePolicy::Affinity, 2);
+        // all 4 siblings stick to one replica (same fingerprint, load
+        // below the overload-migration threshold)
+        for q in group_reqs(7, 4, 16) {
+            assert_eq!(r.submit(q), 0);
+        }
+        let before = r.outstanding_tokens(0);
+        // replica 1 is dry: it may steal, but no more than steal_max
+        let p = r.pull(1, 6);
+        assert_eq!(p.reqs.len(), 2, "steal bounded by steal_max");
+        assert_eq!(p.stolen, Some((0, 2)));
+        assert_eq!(r.queued(0), 2);
+        assert_eq!(r.outstanding_tokens(0), before - 32);
+        assert_eq!(r.outstanding_tokens(1), 32);
+        let stats = r.stats();
+        assert_eq!(stats.steals, 1);
+        assert_eq!(stats.stolen_reqs, 2);
+        // completion releases the thief's charge
+        for q in &p.reqs {
+            r.complete(1, q.tokens.len());
+        }
+        assert_eq!(r.outstanding_tokens(1), 0);
+    }
+
+    #[test]
+    fn hot_prefix_migrates_when_owner_overloaded() {
+        let r = router(2, RoutePolicy::Affinity, 0);
+        // one hot prompt repeated far past the overload threshold: the
+        // sticky owner takes the first wave, then the prefix migrates to
+        // the idle replica instead of pinning the fleet to replica 0
+        let placements: Vec<usize> =
+            group_reqs(1, 12, 16).into_iter().map(|q| r.submit(q)).collect();
+        assert_eq!(placements[0], 0, "first sight goes to the least-loaded");
+        assert!(placements.contains(&1), "overloaded owner must shed load");
+        // stickiness still dominates: one clean migration, no ping-pong
+        assert!(r.queued(0) >= 4 && r.queued(1) >= 4, "{placements:?}");
+    }
+
+    #[test]
+    fn steal_disabled_leaves_victim_alone() {
+        let r = router(2, RoutePolicy::Affinity, 0);
+        for q in group_reqs(3, 4, 8) {
+            r.submit(q);
+        }
+        let dry = if r.queued(0) == 0 { 0 } else { 1 };
+        let p = r.pull(dry, 4);
+        assert!(p.reqs.is_empty());
+        assert!(p.stolen.is_none());
+        assert_eq!(r.queued_total(), 4);
+    }
+
+    #[test]
+    fn control_broadcast_reaches_every_replica() {
+        let r = router(3, RoutePolicy::Affinity, 0);
+        r.broadcast(Control::UpdateWeights(5));
+        r.broadcast(Control::Drain);
+        for w in 0..3 {
+            assert_eq!(
+                r.take_control(w),
+                vec![Control::UpdateWeights(5), Control::Drain]
+            );
+            assert!(r.take_control(w).is_empty(), "control is consumed");
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_block_aligned() {
+        let r = router(2, RoutePolicy::Affinity, 0);
+        // same aligned prefix, different unaligned tail => same fingerprint
+        let a: Vec<i32> = vec![1, 2, 3, 4, 9];
+        let b: Vec<i32> = vec![1, 2, 3, 4, 7];
+        assert_eq!(r.fingerprint(&a), r.fingerprint(&b));
+        let c: Vec<i32> = vec![5, 2, 3, 4, 9];
+        assert_ne!(r.fingerprint(&a), r.fingerprint(&c));
+        // sub-block prompts fall back to the whole sequence
+        assert_ne!(r.fingerprint(&[1, 2]), r.fingerprint(&[1, 3]));
+    }
+
+    /// Drive W replica schedulers through the router: every replica pulls
+    /// waves from its inbox and runs the admitted sequences to completion.
+    /// Returns aggregate (computed, cached) prefill tokens over the fleet.
+    fn run_routed_fleet(policy: RoutePolicy, replicas: usize, groups: usize,
+                        g: usize, prompt_len: usize, gen_len: usize) -> (u64, u64) {
+        let router: Router<()> = Router::new(replicas, RouterCfg::new(policy, BS, 0));
+        for gid in 0..groups as u64 {
+            for q in group_reqs(gid, g, prompt_len) {
+                router.submit(q);
+            }
+        }
+        let mut computed = 0u64;
+        let mut cached = 0u64;
+        for w in 0..replicas {
+            let cfg = ServeCfg {
+                block_size: BS,
+                num_blocks: 16 * (prompt_len + gen_len),
+                max_seqs: 2,
+                prefix_cache: true,
+            };
+            let mut s = Scheduler::new(cfg);
+            let mut next_id: SeqId = 0;
+            let mut targets: HashMap<SeqId, usize> = HashMap::new();
+            let mut active: HashMap<SeqId, Vec<i32>> = HashMap::new();
+            loop {
+                // request-serving loop: top the scheduler up from the inbox
+                let cap = 4usize.saturating_sub(s.running_len() + s.waiting_len());
+                for q in router.pull(w, cap).reqs {
+                    assert!(s.submit(next_id, q.tokens));
+                    targets.insert(next_id, prompt_len + gen_len);
+                    next_id += 1;
+                }
+                for a in s.schedule() {
+                    s.note_prefilled(a.id, &a.tokens);
+                    active.insert(a.id, a.tokens);
+                }
+                if active.is_empty() {
+                    assert_eq!(s.waiting_len(), 0, "replica {w} starved");
+                    if router.queued(w) == 0 {
+                        break;
+                    }
+                    continue;
+                }
+                let ids: Vec<SeqId> = active.keys().copied().collect();
+                for id in ids {
+                    let Some(mut t) = active.remove(&id) else { continue };
+                    t.push((id % 41) as i32 + 3);
+                    loop {
+                        match s.grow_to(id, t.len()) {
+                            Grow::Ok => break,
+                            Grow::Preempt(v) => {
+                                let vt = active.remove(&v).expect("victim active");
+                                s.preempt(v, &vt, vt.len());
+                            }
+                            Grow::Fail => panic!("pool too small"),
+                        }
+                    }
+                    if t.len() >= targets[&id] {
+                        s.finish(id, &t, t.len());
+                        router.complete(w, prompt_len);
+                    } else {
+                        active.insert(id, t);
+                    }
+                }
+            }
+            computed += s.prefill_tokens_computed;
+            cached += s.prefill_tokens_cached;
+        }
+        (computed, cached)
+    }
+
+    #[test]
+    fn affinity_beats_fifo_on_computed_prefill_tokens() {
+        // the acceptance bar: W >= 2 replicas, G >= 4 siblings — affinity
+        // routing must compute strictly fewer prefill tokens (higher
+        // aggregate hit rate) than the scattered fifo baseline
+        let (aff_computed, aff_cached) =
+            run_routed_fleet(RoutePolicy::Affinity, 2, 8, 4, 16, 8);
+        let (fifo_computed, fifo_cached) =
+            run_routed_fleet(RoutePolicy::Fifo, 2, 8, 4, 16, 8);
+        assert!(
+            aff_computed < fifo_computed,
+            "affinity computed {aff_computed} !< fifo computed {fifo_computed}"
+        );
+        let hit = |c: u64, h: u64| h as f64 / (c + h).max(1) as f64;
+        assert!(
+            hit(aff_computed, aff_cached) > hit(fifo_computed, fifo_cached),
+            "affinity hit rate {:.3} !> fifo {:.3}",
+            hit(aff_computed, aff_cached),
+            hit(fifo_computed, fifo_cached)
+        );
+    }
+}

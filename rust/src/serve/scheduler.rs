@@ -191,6 +191,24 @@ impl Scheduler {
         st.cached_blocks.iter().chain(st.owned_blocks.iter()).copied().collect()
     }
 
+    /// Cache-probe hook (router frontend): how many leading tokens of
+    /// `tokens` the prefix cache would serve at admission right now.
+    /// Non-mutating — neither retains blocks nor touches LRU state.
+    pub fn probe_cached_tokens(&self, tokens: &[i32]) -> usize {
+        if !self.cfg.prefix_cache {
+            return 0;
+        }
+        self.cache.probe_prefix(tokens, self.version, self.bm.block_size())
+    }
+
+    /// Load-probe hook (router frontend): committed tokens of running
+    /// sequences plus queued tokens of waiting ones — this replica's
+    /// outstanding work in the router's least-outstanding-tokens sense.
+    pub fn outstanding_tokens(&self) -> usize {
+        self.running.values().map(|s| s.len).sum::<usize>()
+            + self.waiting.iter().map(|(_, t)| t.len()).sum::<usize>()
+    }
+
     /// Queue a sequence (a fresh prompt, or the committed tokens of a
     /// preempted rollout) for admission. Returns false — without queueing —
     /// if the sequence could never fit the pool even when it is the sole
@@ -513,6 +531,32 @@ mod tests {
         assert_eq!(s.prefill_tokens_computed, 8, "only the first sibling paid");
         s.finish(2, &p, p.len());
         s.check().unwrap();
+    }
+
+    #[test]
+    fn probe_hooks_are_non_mutating_and_accurate() {
+        let mut s = Scheduler::new(cfg(32, 2, true));
+        let p: Vec<i32> = (0..8).collect();
+        assert_eq!(s.probe_cached_tokens(&p), 0);
+        assert_eq!(s.outstanding_tokens(), 0);
+        assert!(s.submit(1, p.clone()));
+        assert_eq!(s.outstanding_tokens(), 8, "waiting tokens count as load");
+        s.schedule();
+        s.note_prefilled(1, &p);
+        assert_eq!(s.outstanding_tokens(), 8, "running tokens count as load");
+        // the probe sees exactly what the next admission would hit ...
+        assert_eq!(s.probe_cached_tokens(&p), 8);
+        // ... without retaining anything or perturbing the accounting
+        assert_eq!(s.prefill_tokens_cached, 0);
+        s.finish(1, &p, p.len());
+        assert_eq!(s.outstanding_tokens(), 0);
+        assert!(s.submit(2, p.clone()));
+        assert_eq!(s.schedule()[0].cached_tokens, 8, "probe matched reality");
+        s.finish(2, &p, p.len());
+        s.check().unwrap();
+        // stale probes never hit
+        s.on_update_weights(1);
+        assert_eq!(s.probe_cached_tokens(&p), 0);
     }
 
     #[test]
