@@ -1,14 +1,19 @@
 //! Coordinator micro-benchmarks (criterion-style via util::minibench):
-//! the L3 hot-path data structures — staleness gate, replay buffer,
-//! Algorithm-1 allocation, advantage estimation, tokenizer, sampler.
-//! These must never be the bottleneck next to multi-ms XLA executions.
+//! the L3 hot-path data structures — staleness gate (single-slot and
+//! whole-group reservations), replay buffer, Algorithm-1 allocation,
+//! advantage estimation, tokenizer, sampler. These must never be the
+//! bottleneck next to multi-ms XLA executions.
+//!
+//! Emits `BENCH_coordinator.json` (mean/p50/p95 seconds + throughput per
+//! record) so the perf trajectory is machine-readable across PRs.
 
 use areal::algo::{AdvantageEstimator, Baseline};
 use areal::coordinator::batching::{dynamic_allocate, standard_allocate};
 use areal::coordinator::{ReplayBuffer, StalenessGate, Trajectory};
 use areal::tasks::Prompt;
 use areal::text::Tokenizer;
-use areal::util::minibench::{black_box, Bench};
+use areal::util::json::Json;
+use areal::util::minibench::{black_box, Bench, BenchResult};
 use areal::util::rng::{sample_logits, Rng};
 
 fn traj(version: u64, group: u64, len: usize) -> Trajectory {
@@ -26,56 +31,81 @@ fn traj(version: u64, group: u64, len: usize) -> Trajectory {
     }
 }
 
+/// Machine-readable record of one bench result (shared shape across the
+/// BENCH_*.json files).
+fn record(r: &BenchResult) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&r.name)),
+        ("mean_s", Json::num(r.mean_s)),
+        ("p50_s", Json::num(r.p50_s)),
+        ("p95_s", Json::num(r.p95_s)),
+        ("throughput", Json::num(r.throughput.unwrap_or(0.0))),
+    ])
+}
+
 fn main() {
     let b = Bench::default();
+    let mut records: Vec<Json> = Vec::new();
+    let mut keep = |r: BenchResult| {
+        r.report();
+        records.push(record(&r));
+    };
     println!("== coordinator micro-benchmarks ==");
 
     let gate = StalenessGate::new(512, Some(4));
-    b.run("staleness_gate_try_submit", || {
+    keep(b.run("staleness_gate_try_submit", || {
         black_box(gate.try_submit(black_box(1_000_000)));
-    })
-    .report();
+    }));
 
-    b.run_throughput("replay_buffer_push_pop_512", 512.0, || {
+    let group_gate = StalenessGate::new(512, Some(4));
+    keep(b.run("staleness_gate_try_submit_n16 (whole group)", || {
+        black_box(group_gate.try_submit_n(black_box(1_000_000), 16));
+    }));
+
+    keep(b.run_throughput("replay_buffer_push_pop_512", 512.0, || {
         let buf = ReplayBuffer::new();
         for i in 0..512 {
             buf.push(traj(i % 7, i, 64));
         }
         black_box(buf.pop_batch(512).unwrap());
-    })
-    .report();
+    }));
 
     let mut rng = Rng::new(1);
     let lens: Vec<usize> = (0..512).map(|_| rng.range_usize(16, 2048)).collect();
-    b.run("dynamic_allocate_512seqs (Alg.1)", || {
+    keep(b.run("dynamic_allocate_512seqs (Alg.1)", || {
         black_box(dynamic_allocate(black_box(&lens), 32768, 4, 64));
-    })
-    .report();
-    b.run("standard_allocate_512seqs", || {
+    }));
+    keep(b.run("standard_allocate_512seqs", || {
         black_box(standard_allocate(black_box(&lens), 4, 64));
-    })
-    .report();
+    }));
 
     let est = AdvantageEstimator { baseline: Baseline::GroupMean, normalize: true };
     let rewards: Vec<(u64, f32)> = (0..8192)
         .map(|i| (i / 16, if i % 3 == 0 { 5.0 } else { -5.0 }))
         .collect();
-    b.run_throughput("advantages_8192seqs", 8192.0, || {
+    keep(b.run_throughput("advantages_8192seqs", 8192.0, || {
         black_box(est.advantages(black_box(&rewards)));
-    })
-    .report();
+    }));
 
     let tok = Tokenizer::new();
-    b.run_throughput("tokenizer_encode_decode", 21.0, || {
+    keep(b.run_throughput("tokenizer_encode_decode", 21.0, || {
         let ids = tok.encode(black_box("Q47+85=C12,13,A132E"));
         black_box(tok.decode(&ids));
-    })
-    .report();
+    }));
 
     let logits: Vec<f32> = (0..48).map(|i| (i as f32 * 0.37).sin()).collect();
     let mut srng = Rng::new(2);
-    b.run("sample_logits_48vocab", || {
+    keep(b.run("sample_logits_48vocab", || {
         black_box(sample_logits(&mut srng, black_box(&logits), 1.0));
-    })
-    .report();
+    }));
+
+    // machine-readable perf trajectory, tracked across PRs
+    let n = records.len();
+    let out = Json::obj(vec![
+        ("bench", Json::str("coordinator")),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("BENCH_coordinator.json", format!("{out}\n"))
+        .expect("write BENCH_coordinator.json");
+    println!("\nwrote BENCH_coordinator.json ({n} records)");
 }

@@ -1,9 +1,11 @@
 //! Serving-layer benchmarks (serve/): the headline prefix-cache
 //! prefill-token savings on a GRPO group-sampling workload vs. the
 //! cache-disabled baseline (acceptance bar: >= 1.5x at G >= 4, hit rate
-//! reported), the router policy sweep (affinity vs fifo placement over W
-//! replica schedulers), micro-benchmarks of the paged-KV hot paths, and
-//! the cache-aware simulated-cluster decode throughput.
+//! reported), the three-policy router sweep (fifo vs affinity vs
+//! probe placement over W probed replica schedulers under a
+//! steal-inducing family workload), the membership-lifecycle requeue
+//! cost, micro-benchmarks of the paged-KV hot paths, and the cache-aware
+//! simulated-cluster decode throughput.
 //!
 //! Emits `BENCH_serve.json` (tokens, hit rate, policy per workload) so the
 //! perf trajectory is machine-readable across PRs.
@@ -11,6 +13,7 @@
 //!     cargo bench --bench bench_serve
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use areal::serve::{
     BlockManager, Grow, RadixCache, Request, RoutePolicy, Router, RouterCfg, Scheduler,
@@ -96,79 +99,121 @@ fn run_group_workload(prefix_cache: bool, groups: usize, g: usize,
     }
 }
 
-/// Drive W replica schedulers behind a `serve::Router`: groups are routed
-/// by `policy`, each replica serves its inbox with the engine's refill
-/// pattern (admit waves sized by free capacity), stealing when dry.
-/// Returns aggregate (computed, cached) prefill tokens over the fleet.
+/// Serve up to `rounds` service waves on replica `w` of a probed fleet:
+/// pull, admit, decode one token per active sequence, finish at target.
+#[allow(clippy::too_many_arguments)]
+fn serve_rounds(router: &Router<()>, sched: &Mutex<Scheduler>, w: usize,
+                rounds: usize, next_id: &mut SeqId,
+                targets: &mut HashMap<SeqId, (usize, usize)>,
+                active: &mut HashMap<SeqId, Vec<i32>>, target_len: usize) {
+    for _ in 0..rounds {
+        let cap = {
+            let s = sched.lock().unwrap();
+            4usize.saturating_sub(s.running_len() + s.waiting_len())
+        };
+        for q in router.pull(w, cap).reqs {
+            let mut s = sched.lock().unwrap();
+            let plen = q.tokens.len();
+            assert!(s.submit(*next_id, q.tokens));
+            targets.insert(*next_id, (target_len.max(plen + 1), plen));
+            *next_id += 1;
+        }
+        let mut s = sched.lock().unwrap();
+        for a in s.schedule() {
+            s.note_prefilled(a.id, &a.tokens);
+            active.insert(a.id, a.tokens);
+        }
+        let ids: Vec<SeqId> = active.keys().copied().collect();
+        for id in ids {
+            let Some(mut t) = active.remove(&id) else { continue };
+            t.push((id % 41) as i32 + 3);
+            loop {
+                match s.grow_to(id, t.len()) {
+                    Grow::Ok => break,
+                    Grow::Preempt(victim) => {
+                        let vt = active.remove(&victim).expect("victim active");
+                        s.preempt(victim, &vt, vt.len());
+                    }
+                    Grow::Fail => panic!("budget too small for one sequence"),
+                }
+            }
+            let (target, plen) = targets[&id];
+            if t.len() >= target {
+                s.finish(id, &t, t.len());
+                router.complete(w, plen);
+            } else {
+                active.insert(id, t);
+            }
+        }
+    }
+}
+
+/// Drive W probed replica schedulers behind a `serve::Router` under the
+/// steal-inducing family workload: prompts share a long family prefix
+/// plus a per-group tail, KV pools retain only one family's prefix,
+/// replica 0 serves faster than the rest and steals when dry. Probes are
+/// registered, so the `probe` policy routes by measured cache state.
+/// Returns aggregate (computed, cached) prefill tokens and steal count.
 fn run_routed_fleet(policy: RoutePolicy, replicas: usize, groups: usize, g: usize,
-                    prompt_len: usize, gen_len: usize, seed: u64) -> (u64, u64) {
-    let router: Router<()> = Router::new(replicas, RouterCfg::new(policy, 16, 0));
+                    steal_max: usize, seed: u64) -> (u64, u64, u64) {
+    const BS: usize = 4;
+    const FAMILY_LEN: usize = 64;
+    const TAIL_LEN: usize = 4;
+    const GEN_LEN: usize = 4;
+    let prompt_len = FAMILY_LEN + TAIL_LEN;
+    let target_len = prompt_len + GEN_LEN;
+    let router: Router<()> = Router::new(replicas, RouterCfg::new(policy, BS, steal_max));
+    let num_blocks = 2 * (target_len + 1).div_ceil(BS) + 2;
+    let scheds: Vec<Arc<Mutex<Scheduler>>> = (0..replicas)
+        .map(|w| {
+            let cfg = ServeCfg { block_size: BS, num_blocks, max_seqs: 2,
+                                 prefix_cache: true };
+            let s = Arc::new(Mutex::new(Scheduler::new(cfg)));
+            router.register_probe(w, s.clone());
+            s
+        })
+        .collect();
+    let n_families = replicas as u64;
     let mut rng = Rng::new(seed);
+    let mut next_id: SeqId = 0;
+    let mut targets: Vec<HashMap<SeqId, (usize, usize)>> =
+        (0..replicas).map(|_| HashMap::new()).collect();
+    let mut active: Vec<HashMap<SeqId, Vec<i32>>> =
+        (0..replicas).map(|_| HashMap::new()).collect();
     for gid in 0..groups as u64 {
-        let p = random_tokens(&mut rng, prompt_len);
+        let family = rng.below(n_families);
+        let mut tokens: Vec<i32> =
+            (0..FAMILY_LEN).map(|i| (family as i32 * 13 + i as i32) % 43 + 3).collect();
+        tokens.extend((0..TAIL_LEN).map(|i| (gid as i32 * 29 + i as i32) % 89 + 3));
         for _ in 0..g {
-            router.submit(Request { group: gid, tokens: p.clone(), payload: () });
+            router.submit(Request { group: gid, tokens: tokens.clone(), payload: () });
+        }
+        for w in 0..replicas {
+            let rounds = if w == 0 { 6 } else { 3 };
+            serve_rounds(&router, &scheds[w], w, rounds, &mut next_id,
+                         &mut targets[w], &mut active[w], target_len);
+        }
+    }
+    loop {
+        for w in 0..replicas {
+            serve_rounds(&router, &scheds[w], w, 4, &mut next_id,
+                         &mut targets[w], &mut active[w], target_len);
+        }
+        let idle = (0..replicas).all(|w| {
+            active[w].is_empty() && scheds[w].lock().unwrap().waiting_len() == 0
+        });
+        if idle && router.queued_total() == 0 {
+            break;
         }
     }
     let mut computed = 0u64;
     let mut cached = 0u64;
-    for w in 0..replicas {
-        // admission waves smaller than G: the wave's own siblings cannot
-        // hit (cache inserts land after the wave), later waves can
-        let cfg = ServeCfg {
-            block_size: 16,
-            num_blocks: 8 * (prompt_len + gen_len),
-            max_seqs: 2,
-            prefix_cache: true,
-        };
-        let mut s = Scheduler::new(cfg);
-        let mut next_id: SeqId = 0;
-        let mut targets: HashMap<SeqId, usize> = HashMap::new();
-        let mut active: HashMap<SeqId, Vec<i32>> = HashMap::new();
-        loop {
-            let cap = 4usize.saturating_sub(s.running_len() + s.waiting_len());
-            for q in router.pull(w, cap).reqs {
-                assert!(s.submit(next_id, q.tokens));
-                targets.insert(next_id, prompt_len + gen_len);
-                next_id += 1;
-            }
-            for a in s.schedule() {
-                s.note_prefilled(a.id, &a.tokens);
-                active.insert(a.id, a.tokens);
-            }
-            if active.is_empty() {
-                assert_eq!(s.waiting_len(), 0, "replica starved");
-                if router.queued(w) == 0 {
-                    break;
-                }
-                continue;
-            }
-            let ids: Vec<SeqId> = active.keys().copied().collect();
-            for id in ids {
-                let Some(mut t) = active.remove(&id) else { continue };
-                t.push(rng.range_i64(3, 47) as i32);
-                loop {
-                    match s.grow_to(id, t.len()) {
-                        Grow::Ok => break,
-                        Grow::Preempt(victim) => {
-                            let vt = active.remove(&victim).expect("victim active");
-                            s.preempt(victim, &vt, vt.len());
-                        }
-                        Grow::Fail => panic!("budget too small for one sequence"),
-                    }
-                }
-                if t.len() >= targets[&id] {
-                    s.finish(id, &t, t.len());
-                    router.complete(w, prompt_len);
-                } else {
-                    active.insert(id, t);
-                }
-            }
-        }
+    for s in &scheds {
+        let s = s.lock().unwrap();
         computed += s.prefill_tokens_computed;
         cached += s.prefill_tokens_cached;
     }
-    (computed, cached)
+    (computed, cached, router.stats().stolen_reqs)
 }
 
 fn main() {
@@ -201,13 +246,14 @@ fn main() {
         ]));
     }
 
-    println!("\n== router policy sweep: affinity vs fifo over W replicas ==");
-    println!("   (16 groups x G=4 siblings, prompt 64 tok, gen 64 tok)");
+    println!("\n== router policy sweep: fifo vs affinity vs probe over W replicas ==");
+    println!("   (family workload: 64-tok family prefix + 4-tok tail, G=4 siblings,");
+    println!("    tight KV pools, skewed service, steal_max=2, probes registered)");
     for replicas in [2usize, 4] {
         let mut by_policy = Vec::new();
-        for policy in [RoutePolicy::Fifo, RoutePolicy::Affinity] {
-            let (computed, cached) =
-                run_routed_fleet(policy, replicas, 16, 4, 64, 64, 9);
+        for policy in [RoutePolicy::Fifo, RoutePolicy::Affinity, RoutePolicy::Probe] {
+            let (computed, cached, stolen) =
+                run_routed_fleet(policy, replicas, 24, 4, 2, 9);
             let hit = cached as f64 / (cached + computed).max(1) as f64;
             records.push(Json::obj(vec![
                 ("name", Json::str("router")),
@@ -217,19 +263,56 @@ fn main() {
                 ("computed_tokens", Json::num(computed as f64)),
                 ("cached_tokens", Json::num(cached as f64)),
                 ("hit_rate", Json::num(hit)),
+                ("stolen_reqs", Json::num(stolen as f64)),
             ]));
             by_policy.push((policy, computed, cached, hit));
         }
         let (_, fifo_computed, ..) = by_policy[0];
         let (_, aff_computed, _, aff_hit) = by_policy[1];
-        let bar = if aff_computed < fifo_computed { "PASS" } else { "FAIL" };
+        let (_, probe_computed, _, probe_hit) = by_policy[2];
+        let bar_aff = if aff_computed < fifo_computed { "PASS" } else { "FAIL" };
+        let bar_probe = if probe_computed < aff_computed { "PASS" } else { "FAIL" };
         println!(
-            "  W={replicas}: affinity {:>6} computed ({:4.1}% hit) vs fifo {:>6}  \
-             [affinity < fifo: {bar}]",
+            "  W={replicas}: probe {:>6} ({:4.1}% hit)  affinity {:>6} ({:4.1}% hit)  \
+             fifo {:>6}  [affinity < fifo: {bar_aff}] [probe < affinity: {bar_probe}]",
+            probe_computed,
+            probe_hit * 100.0,
             aff_computed,
             aff_hit * 100.0,
             fifo_computed
         );
+    }
+
+    println!("\n== membership lifecycle: remove_replica requeue (zero lost) ==");
+    {
+        let bench_once = || {
+            let router: Router<()> =
+                Router::new(4, RouterCfg::new(RoutePolicy::Affinity, 4, 0));
+            let mut rng = Rng::new(11);
+            for gid in 0..64u64 {
+                let p = random_tokens(&mut rng, 32);
+                for _ in 0..4 {
+                    router.submit(Request { group: gid, tokens: p.clone(), payload: () });
+                }
+            }
+            let before = router.queued_total();
+            let requeued = router.remove_replica(1).expect("removable");
+            assert_eq!(router.queued_total(), before, "zero requests lost");
+            requeued
+        };
+        let requeued = bench_once();
+        let b = Bench::default();
+        b.run_throughput("router: remove_replica requeue (256 reqs queued)",
+                         requeued as f64, || {
+            black_box(bench_once());
+        })
+        .report();
+        records.push(Json::obj(vec![
+            ("name", Json::str("membership")),
+            ("replicas", Json::num(4.0)),
+            ("requeued", Json::num(requeued as f64)),
+            ("lost", Json::num(0.0)),
+        ]));
     }
 
     println!("\n== tight KV budget (preemption pressure, G=8) ==");

@@ -2,11 +2,17 @@
 //! the Fig-4 strong-scaling rows, and the Fig-6b interruptible-generation
 //! rows from the discrete-event simulator (see DESIGN.md §3 for why these
 //! experiments are simulated). Also times the simulator itself.
+//!
+//! Emits `BENCH_sim.json` (per-row throughputs and speedups) so the perf
+//! trajectory is machine-readable across PRs.
 
 use areal::sim::{self, SimConfig};
+use areal::util::json::Json;
 use areal::util::minibench::{black_box, Bench};
 
 fn main() {
+    let mut records: Vec<Json> = Vec::new();
+
     println!("== Table 1 shape (simulated H800 hours) ==");
     for (m, nodes, steps) in [
         (sim::profile::MODEL_1_5B, 16usize, 250usize),
@@ -25,6 +31,14 @@ fn main() {
              speedup {:.2}x",
             m.name, nodes, steps, sync_h, asy_h, sync_h / asy_h
         );
+        records.push(Json::obj(vec![
+            ("name", Json::str("table1")),
+            ("model", Json::str(m.name)),
+            ("nodes", Json::num(nodes as f64)),
+            ("sync_hours", Json::num(sync_h)),
+            ("areal_hours", Json::num(asy_h)),
+            ("speedup", Json::num(sync_h / asy_h)),
+        ]));
     }
 
     println!("\n== Fig 4 shape (effective ktok/s, ctx 32k) ==");
@@ -41,6 +55,14 @@ fn main() {
                 asy.effective_tps / 1e3,
                 asy.effective_tps / sync.effective_tps
             );
+            records.push(Json::obj(vec![
+                ("name", Json::str("fig4")),
+                ("model", Json::str(m.name)),
+                ("gpus", Json::num(gpus as f64)),
+                ("sync_tps", Json::num(sync.effective_tps)),
+                ("areal_tps", Json::num(asy.effective_tps)),
+                ("speedup", Json::num(asy.effective_tps / sync.effective_tps)),
+            ]));
         }
     }
 
@@ -57,6 +79,12 @@ fn main() {
             "  {:>5}: w/o {:.1}  w/ {:.1}  (+{:.0}%)",
             m.name, b / 1e3, a / 1e3, 100.0 * (a / b - 1.0)
         );
+        records.push(Json::obj(vec![
+            ("name", Json::str("fig6b")),
+            ("model", Json::str(m.name)),
+            ("gen_tps_interruptible", Json::num(a)),
+            ("gen_tps_drain", Json::num(b)),
+        ]));
     }
 
     println!("\n== simulator cost itself ==");
@@ -66,14 +94,29 @@ fn main() {
         c.n_steps = 4;
         c
     };
-    bench
-        .run("sim_async_128gpu_4steps", || {
-            black_box(sim::run_async(black_box(&cfg)));
-        })
-        .report();
-    bench
-        .run("sim_sync_128gpu_4steps", || {
-            black_box(sim::run_sync(black_box(&cfg)));
-        })
-        .report();
+    let r_async = bench.run("sim_async_128gpu_4steps", || {
+        black_box(sim::run_async(black_box(&cfg)));
+    });
+    r_async.report();
+    let r_sync = bench.run("sim_sync_128gpu_4steps", || {
+        black_box(sim::run_sync(black_box(&cfg)));
+    });
+    r_sync.report();
+    for r in [&r_async, &r_sync] {
+        records.push(Json::obj(vec![
+            ("name", Json::str(&r.name)),
+            ("mean_s", Json::num(r.mean_s)),
+            ("p50_s", Json::num(r.p50_s)),
+            ("p95_s", Json::num(r.p95_s)),
+        ]));
+    }
+
+    // machine-readable perf trajectory, tracked across PRs
+    let n = records.len();
+    let out = Json::obj(vec![
+        ("bench", Json::str("sim")),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("BENCH_sim.json", format!("{out}\n")).expect("write BENCH_sim.json");
+    println!("\nwrote BENCH_sim.json ({n} records)");
 }

@@ -37,11 +37,19 @@ fn main() {
     }
 
     println!("\nrequest routing across replicas — {} @ 64 GPUs (W-replica sweep)", model.name);
+    println!("   (4 prompt families sharing half their tokens, bounded stealing)");
     println!("{:>10} {:>14} {:>12} {:>12}", "policy", "prefill Mtok", "hit rate", "ktok/s");
-    for policy in [areal::serve::RoutePolicy::Fifo, areal::serve::RoutePolicy::Affinity] {
+    for policy in [
+        areal::serve::RoutePolicy::Fifo,
+        areal::serve::RoutePolicy::Affinity,
+        areal::serve::RoutePolicy::Probe,
+    ] {
         let mut cfg = SimConfig::paper_default(model, 64, ctx);
         cfg.n_steps = 6;
         cfg.route_policy = policy;
+        cfg.n_prompt_families = 4;
+        cfg.family_prefix_frac = 0.5;
+        cfg.route_steal_max = 2;
         let r = sim::run_async(&cfg);
         println!(
             "{:>10} {:>14.2} {:>11.1}% {:>12.1}",

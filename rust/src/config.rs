@@ -81,10 +81,14 @@ pub struct Config {
     /// radix prefix cache (GRPO siblings / resumed rollouts reuse prefills)
     pub prefix_cache: bool,
     /// request routing across rollout replicas: `fifo` (round-robin
-    /// baseline) or `affinity` (sticky prefix affinity, the default)
+    /// baseline), `affinity` (sticky prefix affinity) or `probe`
+    /// (measured cached-prefix minus load penalty, the default)
     pub route_policy: RoutePolicy,
     /// max requests a dry replica may steal per refill (0 = no stealing)
     pub route_steal_max: usize,
+    /// `probe` routing: load penalty per outstanding token (score =
+    /// cached_tokens − penalty × outstanding); higher spills load sooner
+    pub route_probe_penalty: f64,
 
     // rollout
     pub task: String,
@@ -136,8 +140,9 @@ impl Default for Config {
             kv_block_size: 0,
             kv_blocks: 0,
             prefix_cache: true,
-            route_policy: RoutePolicy::Affinity,
+            route_policy: RoutePolicy::Probe,
             route_steal_max: 4,
+            route_probe_penalty: 0.05,
             task: "math".into(),
             level_lo: 1,
             level_hi: 3,
@@ -211,10 +216,12 @@ impl Config {
             "kv_blocks" => self.kv_blocks = u(val)?,
             "prefix_cache" => self.prefix_cache = parse_bool(val)?,
             "route_policy" => {
-                self.route_policy = RoutePolicy::parse(val)
-                    .with_context(|| format!("unknown route_policy '{val}' (fifo|affinity)"))?
+                self.route_policy = RoutePolicy::parse(val).with_context(|| {
+                    format!("unknown route_policy '{val}' (fifo|affinity|probe)")
+                })?
             }
             "route_steal_max" => self.route_steal_max = u(val)?,
+            "route_probe_penalty" => self.route_probe_penalty = f(val)?,
             "task" => self.task = val.to_string(),
             "level_lo" => self.level_lo = u(val)?,
             "level_hi" => self.level_hi = u(val)?,
@@ -255,6 +262,22 @@ impl Config {
         }
         if self.level_lo > self.level_hi {
             bail!("level_lo > level_hi");
+        }
+        // whole GRPO groups are reserved atomically against the Eq. 3 gate
+        // (⌊i/B⌋ ≤ v + η for every reserved index): a group larger than
+        // B·(η+1) can never be admitted at any version, which would stall
+        // the controller forever instead of shipping a partial group
+        let (eta, _) = self.effective_schedule();
+        if let Some(eta) = eta {
+            let ceiling = self.global_batch as u64 * (eta + 1);
+            if self.group_size as u64 > ceiling {
+                bail!(
+                    "group_size ({}) exceeds the Eq. 3 admission ceiling \
+                     global_batch*(eta+1) = {} — no whole group could ever be admitted",
+                    self.group_size,
+                    ceiling
+                );
+            }
         }
         match self.mode {
             Mode::Sync => {
@@ -344,12 +367,22 @@ mod tests {
     fn route_keys_apply() {
         let cfg = Config::load(
             None,
-            &["route_policy=fifo".into(), "route_steal_max=0".into()],
+            &["route_policy=fifo".into(), "route_steal_max=0".into(),
+              "route_probe_penalty=0.2".into()],
         )
         .unwrap();
         assert_eq!(cfg.route_policy, RoutePolicy::Fifo);
         assert_eq!(cfg.route_steal_max, 0);
-        assert_eq!(Config::default().route_policy, RoutePolicy::Affinity);
+        assert!((cfg.route_probe_penalty - 0.2).abs() < 1e-12);
+        assert_eq!(Config::default().route_policy, RoutePolicy::Probe);
+        assert_eq!(
+            Config::load(None, &["route_policy=probe".into()]).unwrap().route_policy,
+            RoutePolicy::Probe
+        );
+        assert_eq!(
+            Config::load(None, &["route_policy=affinity".into()]).unwrap().route_policy,
+            RoutePolicy::Affinity
+        );
         assert!(Config::load(None, &["route_policy=bogus".into()]).is_err());
     }
 
@@ -365,6 +398,37 @@ mod tests {
         assert!(Config::load(None, &["lr=abc".into()]).is_err());
         assert!(Config::load(None, &["global_batch=30".into(),
                                      "ppo_minibatches=4".into()]).is_err());
+    }
+
+    #[test]
+    fn rejects_group_larger_than_gate_ceiling() {
+        // a whole-group reservation can never pass Eq. 3 when
+        // group_size > global_batch*(eta+1): reject at load time instead
+        // of stalling the controller forever
+        assert!(Config::load(
+            None,
+            &["group_size=64".into(), "global_batch=32".into(), "eta=0".into()]
+        )
+        .is_err());
+        // at eta=1 the same group fits the ceiling (64 = 32*2)
+        assert!(Config::load(
+            None,
+            &["group_size=64".into(), "global_batch=32".into(), "eta=1".into()]
+        )
+        .is_ok());
+        // mode=sync forces eta=0 regardless of the configured eta
+        assert!(Config::load(
+            None,
+            &["group_size=64".into(), "global_batch=32".into(), "eta=4".into(),
+              "mode=sync".into()]
+        )
+        .is_err());
+        // unbounded staleness admits any group size
+        assert!(Config::load(
+            None,
+            &["group_size=512".into(), "global_batch=32".into(), "eta=inf".into()]
+        )
+        .is_ok());
     }
 
     #[test]

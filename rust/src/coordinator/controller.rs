@@ -31,6 +31,15 @@ pub struct ControllerCfg {
     pub max_submissions: Option<u64>,
 }
 
+/// Inbox-depth bound the controller submits against: enough queued work to
+/// refill every live replica twice over, floored at 8 requests so tiny
+/// fleets/groups still pipeline. The floor applies to the *product* —
+/// `(2·W·G).max(8)` — not to G alone, which would over-inflate the bound
+/// for small groups and deepen inboxes past the staleness-friendly depth.
+pub fn queue_cap(n_replicas: usize, group_size: usize) -> usize {
+    (2 * n_replicas * group_size).max(8)
+}
+
 /// Body of the controller thread.
 pub fn run_controller(dataset: Dataset, gate: Arc<StalenessGate>,
                       server: Arc<ParamServer>, router: Arc<GenRouter>,
@@ -44,28 +53,23 @@ pub fn run_controller(dataset: Dataset, gate: Arc<StalenessGate>,
         let version = server.version();
         let mut submitted_any = false;
         // keep the inboxes shallow: enough to refill every replica, not more
-        let queue_cap = 2 * router.n_replicas() * cfg.group_size.max(8);
-        while router.queued_total() < queue_cap {
+        let cap = queue_cap(router.n_alive(), cfg.group_size);
+        while router.queued_total() < cap {
             if let Some(max) = cfg.max_submissions {
                 if gate.submitted() + cfg.group_size as u64 > max {
                     break 'outer;
                 }
             }
-            // reserve group_size slots up front (all-or-nothing)
-            if !gate.admits(version) {
-                break;
-            }
-            let mut reserved = 0;
-            while reserved < cfg.group_size && gate.try_submit(version) {
-                reserved += 1;
-            }
-            if reserved == 0 {
+            // reserve the whole group atomically: G slots or none — a gate
+            // closing mid-reservation must never strand a partial group,
+            // or the GRPO group-mean baseline is starved of its n samples
+            if !gate.try_submit_n(version, cfg.group_size) {
                 break;
             }
             let prompt = dataset.prompt(next_idx);
             next_idx += 1;
             let tokens = tokenizer.encode_bos(&prompt.text);
-            for _ in 0..reserved {
+            for _ in 0..cfg.group_size {
                 let replica = router.submit(Request {
                     group: prompt.group,
                     tokens: tokens.clone(),
@@ -78,6 +82,13 @@ pub fn run_controller(dataset: Dataset, gate: Arc<StalenessGate>,
                 });
             }
             submitted_any = true;
+        }
+        // submission budget exhausted: done, even while the inboxes are
+        // full (workers drain them on their own)
+        if let Some(max) = cfg.max_submissions {
+            if gate.submitted() + cfg.group_size as u64 > max {
+                break;
+            }
         }
         if !submitted_any {
             // gated (stale) or inboxes full: wait for the trainer to bump
@@ -167,11 +178,82 @@ mod tests {
         let g2 = Arc::clone(&gate);
         run_controller(
             ds, g2, srv, router(2), stop,
-            ControllerCfg { group_size: 2, max_submissions: Some(10) },
+            ControllerCfg { group_size: 2, max_submissions: Some(9) },
             Arc::new(Trace::new(false)),
         );
-        // stops on its own; ≤ 10 submissions
-        assert!(gate.submitted() <= 10);
-        assert!(gate.submitted() >= 8);
+        // stops on its own: 4 whole groups fit the budget of 9, and no
+        // partial group chases the ninth slot
+        assert_eq!(gate.submitted(), 8);
+    }
+
+    #[test]
+    fn partial_group_never_submitted() {
+        // regression (ISSUE 3): η=0, B=6 not divisible by G=4 — the gate
+        // closes mid-reservation, and the old slot-at-a-time loop shipped
+        // a 2-sample partial group, starving the group-mean baseline
+        let ds = Dataset::new(Arc::new(AdditionTask), 1, LevelMix::single(1));
+        let gate = Arc::new(StalenessGate::new(6, Some(0)));
+        let srv = server(0);
+        let router = router(2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let trace = Arc::new(Trace::new(true));
+        let r2 = Arc::clone(&router);
+        let g2 = Arc::clone(&gate);
+        let st2 = Arc::clone(&stop);
+        let t2 = Arc::clone(&trace);
+        let h = std::thread::spawn(move || {
+            run_controller(
+                ds, g2, srv, r2, st2,
+                ControllerCfg { group_size: 4, max_submissions: None },
+                t2,
+            )
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        // exactly one whole group: 4 submissions, never 6
+        assert_eq!(gate.submitted(), 4, "partial group must not be reserved");
+        assert_eq!(gate.submitted() % 4, 0);
+        let mut groups: HashMap<u64, usize> = HashMap::new();
+        for w in 0..2 {
+            for q in router.pull(w, 64).reqs {
+                *groups.entry(q.group).or_default() += 1;
+            }
+        }
+        for (gid, n) in &groups {
+            assert_eq!(*n, 4, "group {gid} shipped with {n} != 4 samples");
+        }
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn queue_cap_floors_the_product_not_group_size() {
+        // regression (ISSUE 3): the floor belongs to the whole product —
+        // (2·W·G).max(8) — not to G, which inflated small-group caps
+        assert_eq!(queue_cap(2, 1), 8, "floor applies when the product is small");
+        assert_eq!(queue_cap(2, 2), 8);
+        assert_eq!(queue_cap(2, 4), 16, "large products are not floored");
+        assert_eq!(queue_cap(4, 16), 128);
+
+        // behavioral: an unbounded gate with G=1 fills the inboxes only to
+        // the fixed cap (the old formula queued 2·W·8 = 32)
+        let ds = Dataset::new(Arc::new(AdditionTask), 1, LevelMix::single(1));
+        let gate = Arc::new(StalenessGate::new(4, None));
+        let srv = server(0);
+        let router = router(2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let r2 = Arc::clone(&router);
+        let g2 = Arc::clone(&gate);
+        let st2 = Arc::clone(&stop);
+        let h = std::thread::spawn(move || {
+            run_controller(
+                ds, g2, srv, r2, st2,
+                ControllerCfg { group_size: 1, max_submissions: None },
+                Arc::new(Trace::new(false)),
+            )
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(router.queued_total(), 8, "inbox depth bounded by (2WG).max(8)");
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
     }
 }

@@ -40,18 +40,32 @@ impl StalenessGate {
     /// Try to reserve one submission slot; true on success. (check + count
     /// in one CAS loop so concurrent submitters cannot overshoot)
     pub fn try_submit(&self, version: u64) -> bool {
+        self.try_submit_n(version, 1)
+    }
+
+    /// Reserve `n` submission slots atomically — all of them or none.
+    /// Every reserved index `i` in `cur..cur+n` must satisfy Eq. 3
+    /// (`⌊i/B⌋ ≤ v + η`), which reduces to checking the last one. This is
+    /// the all-or-nothing reservation the controller needs for GRPO
+    /// groups: a gate that closes mid-group must not strand a partial
+    /// group (the group-mean baseline needs all G samples).
+    pub fn try_submit_n(&self, version: u64, n: usize) -> bool {
+        if n == 0 {
+            return true;
+        }
+        let n = n as u64;
         let Some(eta) = self.eta else {
-            self.submitted.fetch_add(1, Ordering::AcqRel);
+            self.submitted.fetch_add(n, Ordering::AcqRel);
             return true;
         };
         loop {
             let cur = self.submitted.load(Ordering::Acquire);
-            if cur / self.batch_size > version + eta {
+            if (cur + n - 1) / self.batch_size > version + eta {
                 return false;
             }
             if self
                 .submitted
-                .compare_exchange(cur, cur + 1, Ordering::AcqRel, Ordering::Acquire)
+                .compare_exchange(cur, cur + n, Ordering::AcqRel, Ordering::Acquire)
                 .is_ok()
             {
                 return true;
@@ -153,6 +167,63 @@ mod tests {
         let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
         // floor(n/16) <= 0+1 admits exactly indices 0..32
         assert_eq!(total, 32);
+    }
+
+    #[test]
+    fn group_reservation_is_all_or_nothing() {
+        // regression (ISSUE 3): B not divisible by G, η=0 — the gate
+        // closes mid-group, and the old one-slot-at-a-time reservation
+        // stranded a partial group. try_submit_n must reserve G or nothing.
+        let g = StalenessGate::new(6, Some(0));
+        assert!(g.try_submit_n(0, 4), "first whole group fits (indices 0..4)");
+        assert_eq!(g.submitted(), 4);
+        // 2 slots remain under Eq. 3, but not 4: the reservation must fail
+        // without taking any of them
+        assert!(!g.try_submit_n(0, 4));
+        assert_eq!(g.submitted(), 4, "failed reservation takes nothing");
+        assert_eq!(g.submitted() % 4, 0, "no partial group ever reserved");
+        // the version bump reopens the gate for a whole group
+        assert!(g.try_submit_n(1, 4));
+        assert_eq!(g.submitted(), 8);
+        // n=0 is a no-op, unbounded gates always admit
+        assert!(g.try_submit_n(1, 0));
+        assert_eq!(g.submitted(), 8);
+        let unbounded = StalenessGate::new(4, None);
+        assert!(unbounded.try_submit_n(0, 64));
+        assert_eq!(unbounded.submitted(), 64);
+    }
+
+    #[test]
+    fn concurrent_group_reservations_never_strand_partials() {
+        use std::sync::Arc;
+        // threads hammer whole-group reservations at a fixed version; the
+        // admitted total must land exactly on the largest multiple of G
+        // under the Eq. 3 bound, and stay G-aligned at every step
+        for (b, g_size, eta) in [(12usize, 3usize, 0u64), (16, 4, 1), (10, 4, 0)] {
+            let g = Arc::new(StalenessGate::new(b, Some(eta)));
+            let mut handles = Vec::new();
+            for _ in 0..4 {
+                let g = Arc::clone(&g);
+                handles.push(std::thread::spawn(move || {
+                    let mut groups = 0u64;
+                    for _ in 0..200 {
+                        if g.try_submit_n(0, g_size) {
+                            groups += 1;
+                        }
+                    }
+                    groups
+                }));
+            }
+            let groups: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+            let bound = b as u64 * (eta + 1);
+            let expect_groups = bound / g_size as u64;
+            assert_eq!(
+                groups, expect_groups,
+                "B={b} G={g_size} eta={eta}: {groups} groups vs bound {bound}"
+            );
+            assert_eq!(g.submitted(), expect_groups * g_size as u64);
+            assert_eq!(g.submitted() % g_size as u64, 0, "G-aligned");
+        }
     }
 
     #[test]

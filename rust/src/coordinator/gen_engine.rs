@@ -23,12 +23,12 @@
 //! committed tokens/logprobs and resumes later, mostly from cache.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{Engine, HostTensor, ParamSet, SendLiteral, Version};
-use crate::serve::{Grow, Scheduler, SeqId, ServeCfg, ServeStats};
+use crate::serve::{Grow, ReplicaProbe, Scheduler, SeqId, ServeCfg, ServeStats};
 use crate::tasks::Prompt;
 use crate::text::tokenizer::{Tokenizer, BOS, EOS};
 use crate::util::rng::Rng;
@@ -91,8 +91,11 @@ pub struct GenEngine {
     params: Arc<ParamSet>,
     needs_prefill: bool,
     rng: Rng,
-    /// paged-KV admission / prefix cache / preemption (DESIGN.md §5)
-    serve: Scheduler,
+    /// paged-KV admission / prefix cache / preemption (DESIGN.md §5).
+    /// Shared behind a mutex so the router's `probe` policy can read the
+    /// measured cache/load state through [`GenEngine::probe`] while the
+    /// worker thread serves requests.
+    serve: Arc<Mutex<Scheduler>>,
     /// prompts submitted but not yet admitted
     pending_fresh: HashMap<SeqId, Prompt>,
     /// preempted sequences awaiting re-admission (committed state intact)
@@ -136,7 +139,7 @@ impl GenEngine {
             params,
             needs_prefill: false,
             rng: Rng::new(seed),
-            serve: Scheduler::new(serve_cfg),
+            serve: Arc::new(Mutex::new(Scheduler::new(serve_cfg))),
             pending_fresh: HashMap::new(),
             parked: HashMap::new(),
             next_seq: 0,
@@ -171,18 +174,25 @@ impl GenEngine {
     /// Prompts `fill` can accept right now without over-buffering: slots
     /// not yet spoken for by running or waiting sequences.
     pub fn fill_capacity(&self) -> usize {
-        self.b
-            .saturating_sub(self.serve.running_len() + self.serve.waiting_len())
+        let s = self.serve.lock().unwrap();
+        self.b.saturating_sub(s.running_len() + s.waiting_len())
     }
 
     /// Serving-layer statistics (prefix-cache hit rate, preemptions, block
     /// occupancy).
     pub fn serve_stats(&self) -> ServeStats {
-        self.serve.stats()
+        self.serve.lock().unwrap().stats()
     }
 
     pub fn preemptions(&self) -> u64 {
-        self.serve.preemptions
+        self.serve.lock().unwrap().preemptions
+    }
+
+    /// This replica's live-measurement handle for the router's `probe`
+    /// routing policy (`Router::register_probe`): the scheduler itself,
+    /// answering `probe_cached_tokens` / `outstanding_tokens`.
+    pub fn probe(&self) -> Arc<dyn ReplicaProbe> {
+        Arc::clone(&self.serve) as Arc<dyn ReplicaProbe>
     }
 
     /// The paper's `update_weights`: swap parameters; any in-flight
@@ -193,7 +203,7 @@ impl GenEngine {
         assert!(params.version >= self.params.version, "weight version regressed");
         let interrupted = self.active_slots();
         self.params = params;
-        self.serve.on_update_weights(self.params.version);
+        self.serve.lock().unwrap().on_update_weights(self.params.version);
         if interrupted > 0 {
             self.interruptions += 1;
             self.needs_prefill = true; // KV under old weights is invalid
@@ -230,12 +240,15 @@ impl GenEngine {
             }
             let id = self.next_seq;
             self.next_seq += 1;
-            if !self.serve.submit(id, r.tokens) {
-                bail!(
-                    "prompt does not fit the KV pool ({} blocks of {}) — raise kv_blocks",
-                    self.serve.cfg().num_blocks,
-                    self.serve.cfg().block_size
-                );
+            {
+                let mut s = self.serve.lock().unwrap();
+                if !s.submit(id, r.tokens) {
+                    bail!(
+                        "prompt does not fit the KV pool ({} blocks of {}) — raise kv_blocks",
+                        s.cfg().num_blocks,
+                        s.cfg().block_size
+                    );
+                }
             }
             self.pending_fresh.insert(id, r.payload);
         }
@@ -259,6 +272,40 @@ impl GenEngine {
         self.fill_requests(reqs)
     }
 
+    /// Surrender every request this engine still holds — queued-fresh,
+    /// parked (preempted), and in-flight — rebuilt as fresh `generate`
+    /// requests over their original prompt tokens, so a dying worker can
+    /// hand them back to the router and no GRPO group is left partial.
+    /// Sampled-so-far tokens are discarded (they were never delivered, so
+    /// resampling on a survivor keeps the Proposition-1 bookkeeping
+    /// intact). Leaves the engine empty.
+    pub fn salvage_requests(&mut self) -> Vec<GenRequest> {
+        let mut out = Vec::new();
+        for (_, prompt) in self.pending_fresh.drain() {
+            // the token copy went to the scheduler; re-encode (the same
+            // deterministic encoding the controller used)
+            let tokens = self.tokenizer.encode_bos(&prompt.text);
+            out.push(GenRequest { group: prompt.group, tokens, payload: prompt });
+        }
+        for (_, s) in self.parked.drain() {
+            out.push(GenRequest {
+                group: s.prompt.group,
+                tokens: s.tokens[..s.prompt_len].to_vec(),
+                payload: s.prompt,
+            });
+        }
+        for slot in self.slots.iter_mut() {
+            if let Some(s) = slot.take() {
+                out.push(GenRequest {
+                    group: s.prompt.group,
+                    tokens: s.tokens[..s.prompt_len].to_vec(),
+                    payload: s.prompt,
+                });
+            }
+        }
+        out
+    }
+
     pub fn needs_prefill(&self) -> bool {
         self.needs_prefill
     }
@@ -272,13 +319,13 @@ impl GenEngine {
 
     /// Waiting sequences (submitted or preempted) not yet admitted.
     pub fn waiting(&self) -> usize {
-        self.serve.waiting_len()
+        self.serve.lock().unwrap().waiting_len()
     }
 
     /// Whether the next admission wave could actually admit something (a
     /// dense prefill wave is expensive — don't request one that admits 0).
     pub fn admission_feasible(&self) -> bool {
-        self.empty_slots() > 0 && self.serve.admission_feasible()
+        self.empty_slots() > 0 && self.serve.lock().unwrap().admission_feasible()
     }
 
     /// Admit waiting sequences (through the scheduler), then rebuild the KV
@@ -286,7 +333,8 @@ impl GenEngine {
     /// current weights). Called after fills and weight updates.
     pub fn prefill(&mut self) -> Result<()> {
         // --- admission wave (paged-KV + prefix-cache aware) --------------
-        for a in self.serve.schedule() {
+        let admitted = self.serve.lock().unwrap().schedule();
+        for a in admitted {
             let seq = if let Some(parked) = self.parked.remove(&a.id) {
                 debug_assert_eq!(parked.tokens.len(), a.tokens.len());
                 parked
@@ -361,10 +409,13 @@ impl GenEngine {
         // is now valid under the current weights; fold the committed prefix
         // (everything but the pending token) into the radix cache so GRPO
         // siblings and resumed rollouts reuse it
-        for slot in self.slots.iter() {
-            if let Some(s) = slot {
-                let committed = &s.tokens[..s.tokens.len() - 1];
-                self.serve.note_prefilled(s.seq_id, committed);
+        {
+            let mut serve = self.serve.lock().unwrap();
+            for slot in self.slots.iter() {
+                if let Some(s) = slot {
+                    let committed = &s.tokens[..s.tokens.len() - 1];
+                    serve.note_prefilled(s.seq_id, committed);
+                }
             }
         }
         Ok(())
@@ -376,7 +427,10 @@ impl GenEngine {
     /// waiting queue (its prefix mostly a cache hit).
     fn grow_with_preemption(&mut self, id: SeqId, new_len: usize) -> Result<()> {
         loop {
-            match self.serve.grow_to(id, new_len) {
+            // bind the outcome so the scheduler lock is released before
+            // the arms take it again
+            let grow = self.serve.lock().unwrap().grow_to(id, new_len);
+            match grow {
                 Grow::Ok => return Ok(()),
                 Grow::Preempt(victim) => {
                     let vi = self
@@ -386,19 +440,28 @@ impl GenEngine {
                         .context("preemption victim not in any slot")?;
                     let vs = self.slots[vi].take().unwrap();
                     // exclude the pending token — its KV was never computed
-                    self.serve
-                        .preempt(victim, &vs.tokens, vs.tokens.len().saturating_sub(1));
+                    self.serve.lock().unwrap().preempt(
+                        victim,
+                        &vs.tokens,
+                        vs.tokens.len().saturating_sub(1),
+                    );
                     self.parked.insert(victim, vs);
                     // the freed slot refills at the next prefill wave
                     self.needs_prefill = true;
                 }
-                Grow::Fail => bail!(
-                    "KV block budget ({} blocks of {}) cannot hold one sequence of \
-                     {} tokens — raise kv_blocks",
-                    self.serve.cfg().num_blocks,
-                    self.serve.cfg().block_size,
-                    new_len
-                ),
+                Grow::Fail => {
+                    let (num_blocks, block_size) = {
+                        let s = self.serve.lock().unwrap();
+                        (s.cfg().num_blocks, s.cfg().block_size)
+                    };
+                    bail!(
+                        "KV block budget ({} blocks of {}) cannot hold one sequence of \
+                         {} tokens — raise kv_blocks",
+                        num_blocks,
+                        block_size,
+                        new_len
+                    )
+                }
             }
         }
     }
@@ -467,8 +530,11 @@ impl GenEngine {
             if let Some(truncated) = done {
                 // the final token (EOS/truncation boundary) is committed but
                 // its KV was never computed — keep it out of the cache
-                self.serve
-                    .finish(s.seq_id, &s.tokens, s.tokens.len().saturating_sub(1));
+                self.serve.lock().unwrap().finish(
+                    s.seq_id,
+                    &s.tokens,
+                    s.tokens.len().saturating_sub(1),
+                );
                 finished.push(s.into_trajectory(truncated, self.worker_id));
             } else {
                 self.slots[i] = Some(s);
@@ -491,11 +557,11 @@ impl GenEngine {
             if self.admission_feasible() {
                 self.needs_prefill = true;
             }
-            if self.needs_prefill && (self.serve.waiting_len() > 0 || !self.all_empty()) {
+            if self.needs_prefill && (self.waiting() > 0 || !self.all_empty()) {
                 self.prefill()?;
             }
             if self.all_empty() {
-                if self.serve.waiting_len() > 0 {
+                if self.waiting() > 0 {
                     bail!("drain stalled: waiting sequences cannot be admitted");
                 }
                 break;
@@ -611,6 +677,28 @@ mod tests {
             assert_eq!(t.segments[1].0, 1);
             assert_eq!(t.version_born, 0);
         }
+    }
+
+    #[test]
+    fn salvage_surrenders_every_held_request() {
+        // a dying worker hands back everything it holds: queued-fresh,
+        // admitted/in-flight, all rebuilt over their original prompt
+        // tokens so the router can re-route whole groups (no partial GRPO
+        // groups from a replica loss)
+        let (engine, params) = require_artifacts!(setup());
+        let mut g = GenEngine::new(engine, params, 0, 1.0, 23);
+        let mut ps = prompts(4);
+        let accepted = g.fill(&mut ps).unwrap();
+        assert!(accepted > 0);
+        g.prefill().unwrap(); // some of them now in flight
+        let salvaged = g.salvage_requests();
+        assert_eq!(salvaged.len(), accepted, "every request surrendered");
+        for q in &salvaged {
+            assert!(!q.tokens.is_empty());
+            assert_eq!(q.tokens[0], BOS, "original prompt tokens, no sampled tail");
+        }
+        assert!(g.all_empty(), "engine left empty");
+        assert_eq!(g.salvage_requests().len(), 0, "salvage is idempotent");
     }
 
     #[test]

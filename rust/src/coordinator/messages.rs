@@ -10,9 +10,15 @@ pub type GenRequest = crate::serve::Request<Prompt>;
 
 /// The coordinator's instantiation of the `serve::Router` dispatch plane:
 /// the controller submits [`GenRequest`]s, rollout workers serve their
-/// per-replica inboxes, and `update_weights`/drain control fans out
-/// through the same frontend.
+/// per-replica inboxes (registering their scheduler as a [`ReplicaProbe`]
+/// so `probe` routing can read measured cache/load state), and
+/// `update_weights`/drain control fans out through the same frontend.
 pub type GenRouter = crate::serve::Router<Prompt>;
+
+/// Measured replica state a rollout worker exposes to the router
+/// (re-exported so coordinator code names the frontend contract in one
+/// place).
+pub use crate::serve::ReplicaProbe;
 
 /// A completed rollout: one prompt + one sampled response, with everything
 /// the trainer needs to build the decoupled-PPO minibatch.

@@ -53,6 +53,50 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
     let params = shared.server.get();
     let mut gen = GenEngine::with_serve(engine, params, worker_id, cfg.temperature,
                                         seed, cfg.serve.clone());
+    // expose this replica's measured cache/load state to the router's
+    // probe policy, and capture our membership epoch: if this slot is ever
+    // removed and revived for a successor, our pulls fence out
+    let epoch = shared.router.epoch(worker_id);
+    shared.router.register_probe(worker_id, gen.probe());
+    shared.trace.log(Event::ReplicaUp { replica: worker_id, epoch });
+    // a panic inside the loop is a replica loss like any other error —
+    // catch it so the failure path below still runs (salvage only touches
+    // the engine's plain request maps, which stay structurally sound)
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_loop(worker_id, &mut gen, &shared, &cfg, epoch)
+    }))
+    .unwrap_or_else(|_| Err(anyhow::anyhow!("rollout worker {worker_id} panicked")));
+    if res.is_err() {
+        // this replica is done for: retire it FIRST so nothing routes back
+        // here, then hand back every request the engine still holds —
+        // remove_replica requeues the inbox, and the salvage below covers
+        // the in-flight/parked/pending requests, so no GRPO group is left
+        // partial by the loss.
+        match shared.router.remove_replica(worker_id) {
+            Some(inbox_requeued) => {
+                let mut requeued = inbox_requeued;
+                for q in gen.salvage_requests() {
+                    shared.router.submit(q);
+                    requeued += 1;
+                }
+                shared.trace.log(Event::ReplicaDown { replica: worker_id, requeued });
+            }
+            None => {
+                // we are the last replica: nothing is left to serve any
+                // request — close the buffer so the trainer fails fast on
+                // a short batch instead of blocking in pop_batch forever
+                shared.buffer.close();
+            }
+        }
+    }
+    res
+}
+
+/// The worker's request-serving loop; every error funnels back to
+/// [`run_rollout_worker`], which retires the replica and salvages its
+/// remaining requests.
+fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
+              cfg: &RolloutCfg, epoch: u64) -> Result<()> {
     let b = gen.n_slots();
     // weight sync deferred until drain completes (non-interruptible mode)
     let mut pending_sync = false;
@@ -110,7 +154,7 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                 || (empties as f64) >= (b as f64) * cfg.refill_fraction);
         if refill_wave {
             if capacity > 0 && !draining {
-                let pulled = shared.router.pull(worker_id, capacity);
+                let pulled = shared.router.pull_at(worker_id, epoch, capacity);
                 if let Some((victim, reqs)) = pulled.stolen {
                     shared.trace.log(Event::Steal { thief: worker_id, victim, reqs });
                 }
@@ -150,7 +194,7 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
             for traj in finished {
                 // release the router's load charge for the served request
                 shared.router.complete(worker_id, traj.prompt_len);
-                submit_for_reward(&shared, &gen, traj);
+                submit_for_reward(shared, gen, traj);
             }
         } else if gen.all_empty() && gen.waiting() == 0 {
             if draining {

@@ -33,9 +33,70 @@ use super::evalgen;
 use super::gate::StalenessGate;
 use super::param_server::ParamServer;
 use super::rollout::{run_rollout_worker, RolloutCfg, RolloutShared};
-use super::trace::Trace;
+use super::trace::{Event, Trace};
 use super::trainer::{Trainer, TrainerCfg};
 use super::messages::{GenRouter, StepMetrics};
+
+/// Shutdown path shared by every exit from [`System::run`] — the clean
+/// finish AND the trainer-error path: drain through the frontend (each
+/// live worker finishes its in-flight sequences and exits on its own),
+/// join the workers, and only then hard-stop the controller (raising
+/// `stop` first would kill workers at their next loop check and skip the
+/// drain entirely). Join errors are collected, not early-returned, so the
+/// stop flag is always raised and no thread outlives this call.
+fn drain_and_join(router: &GenRouter, buffer: &ReplayBuffer,
+                  stop: &AtomicBool,
+                  handles: Vec<std::thread::JoinHandle<Result<()>>>,
+                  controller: std::thread::JoinHandle<Result<()>>) -> Result<()> {
+    router.broadcast(Control::Drain);
+    buffer.close();
+    let mut first_err: Option<anyhow::Error> = None;
+    for h in handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                first_err.get_or_insert(e);
+            }
+            Err(_) => {
+                first_err.get_or_insert(anyhow::anyhow!("worker thread panicked"));
+            }
+        }
+    }
+    stop.store(true, Ordering::Release);
+    let controller_res = controller.join();
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    match controller_res {
+        Ok(r) => r,
+        Err(_) => anyhow::bail!("controller thread panicked"),
+    }
+}
+
+/// Backstop drop guard for replica retirement. `run_rollout_worker`
+/// handles every expected failure itself (it catches panics, retires the
+/// replica, and salvages its in-flight requests), after which removal
+/// here returns `None` and the guard stays silent — the transition is
+/// traced exactly once. The guard only acts if an unwind escapes that
+/// handling entirely, so a stranded-but-alive inbox can never keep
+/// attracting requests nobody serves.
+struct ReplicaGuard {
+    router: Arc<GenRouter>,
+    trace: Arc<Trace>,
+    worker: usize,
+    armed: bool,
+}
+
+impl Drop for ReplicaGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Some(requeued) = self.router.remove_replica(self.worker) {
+            self.trace.log(Event::ReplicaDown { replica: self.worker, requeued });
+        }
+    }
+}
 
 /// Result of a training session.
 pub struct RunReport {
@@ -184,7 +245,8 @@ impl System {
         // the same block alignment the replicas' radix caches use
         let router = Arc::new(GenRouter::new(
             cfg.n_rollout_workers,
-            RouterCfg::new(cfg.route_policy, serve.block_size, cfg.route_steal_max),
+            RouterCfg::new(cfg.route_policy, serve.block_size, cfg.route_steal_max)
+                .probe_penalty(cfg.route_probe_penalty),
         ));
 
         let t0 = Instant::now();
@@ -209,7 +271,10 @@ impl System {
                 .unwrap()
         };
 
-        // rollout workers
+        // rollout workers. A worker that dies on an error removes itself
+        // from the router's membership first: its queued requests requeue
+        // onto the survivors (zero lost), its outstanding/sticky state is
+        // released, and the rest of the fleet keeps serving.
         for w in 0..cfg.n_rollout_workers {
             let shared = RolloutShared {
                 server: Arc::clone(&server),
@@ -228,34 +293,62 @@ impl System {
             };
             let engine = Arc::clone(&self.engine);
             let seed = cfg.seed ^ (w as u64 + 1).wrapping_mul(0xabcd1234);
+            let router_w = Arc::clone(&router);
+            let trace_w = Arc::clone(&self.trace);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("rollout-{w}"))
-                    .spawn(move || run_rollout_worker(w, engine, shared, rcfg, seed))
+                    .spawn(move || {
+                        // armed until a clean exit: Err returns AND panics
+                        // both retire the replica and requeue its inbox
+                        let mut guard = ReplicaGuard {
+                            router: router_w,
+                            trace: trace_w,
+                            worker: w,
+                            armed: true,
+                        };
+                        let res = run_rollout_worker(w, engine, shared, rcfg, seed);
+                        if res.is_ok() {
+                            guard.armed = false;
+                        }
+                        res
+                    })
                     .unwrap(),
             );
         }
 
-        // trainer runs on this thread
+        // trainer runs on this thread; an error does NOT return early — it
+        // falls through to the same drain/join shutdown as a clean exit,
+        // so rollout workers and the controller never leak or spin forever
+        // on a trainer failure
         let mut steps = Vec::with_capacity(cfg.ppo_steps);
+        let mut train_err: Option<anyhow::Error> = None;
         for step in 0..cfg.ppo_steps {
             let Some(batch) = buffer.pop_batch(cfg.global_batch) else {
                 break;
             };
-            let m = trainer.ppo_step(batch, step, &self.trace)?;
-            // fan the paper's update_weights out through the frontend —
-            // workers serve it from their inboxes like any other request
-            router.broadcast(Control::UpdateWeights(server.version()));
-            if step % 10 == 0 || step + 1 == cfg.ppo_steps {
-                crate::info!(
-                    "train",
-                    "step {step}: reward {:.2} correct {:.3} stale {:.2} \
-                     kl {:.4} tps {:.0}",
-                    m.reward_mean, m.correct_frac, m.mean_staleness,
-                    m.approx_kl, m.effective_tps
-                );
+            match trainer.ppo_step(batch, step, &self.trace) {
+                Ok(m) => {
+                    // fan the paper's update_weights out through the
+                    // frontend — workers serve it from their inboxes like
+                    // any other request
+                    router.broadcast(Control::UpdateWeights(server.version()));
+                    if step % 10 == 0 || step + 1 == cfg.ppo_steps {
+                        crate::info!(
+                            "train",
+                            "step {step}: reward {:.2} correct {:.3} stale {:.2} \
+                             kl {:.4} tps {:.0}",
+                            m.reward_mean, m.correct_frac, m.mean_staleness,
+                            m.approx_kl, m.effective_tps
+                        );
+                    }
+                    steps.push(m);
+                }
+                Err(e) => {
+                    train_err = Some(e.context(format!("ppo step {step}")));
+                    break;
+                }
             }
-            steps.push(m);
         }
 
         // training is over — snapshot the Fig. 4-style throughput metrics
@@ -265,35 +358,13 @@ impl System {
         let wall_s = t0.elapsed().as_secs_f64();
         let gen_tokens_total = gen_tokens.load(Ordering::Relaxed);
 
-        // shutdown: drain through the frontend — each worker finishes its
-        // in-flight sequences and exits on its own; only then is the
-        // controller hard-stopped (setting stop first would kill workers
-        // at the next loop check and skip the drain entirely). Join errors
-        // are collected, not early-returned, so the stop flag is always
-        // raised and no thread outlives this call.
-        router.broadcast(Control::Drain);
-        buffer.close();
-        let mut first_err: Option<anyhow::Error> = None;
-        for h in handles {
-            match h.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => {
-                    first_err.get_or_insert(e);
-                }
-                Err(_) => {
-                    first_err.get_or_insert(anyhow::anyhow!("worker thread panicked"));
-                }
-            }
-        }
-        stop.store(true, Ordering::Release);
-        let controller_res = controller_handle.join();
-        if let Some(e) = first_err {
+        let join_res =
+            drain_and_join(&router, &buffer, &stop, handles, controller_handle);
+        // the root cause outranks secondary join noise in the report
+        if let Some(e) = train_err {
             return Err(e);
         }
-        match controller_res {
-            Ok(r) => r?,
-            Err(_) => anyhow::bail!("controller thread panicked"),
-        }
+        join_res?;
         let rstats = router.stats();
         crate::info!(
             "system",
@@ -328,5 +399,85 @@ impl System {
             effective_tps: train_tokens as f64 / wall_s,
             final_params,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::executor::SendLiteral;
+    use crate::runtime::HostTensor;
+    use crate::serve::RoutePolicy;
+    use crate::tasks::{dataset::LevelMix, AdditionTask};
+    use std::time::Duration;
+
+    #[test]
+    fn trainer_error_path_drains_and_joins_all_threads() {
+        // regression (ISSUE 3): `trainer.ppo_step(..)?` used to early-
+        // return from run() without broadcasting Drain, closing the
+        // buffer, or raising stop — rollout workers and the controller
+        // thread leaked and spun forever on a trainer error. run() now
+        // routes the error through `drain_and_join`; this drives that
+        // exact helper over a live controller + worker topology: if it
+        // forgot the Drain broadcast or the stop flag, a join below would
+        // hang and the test would time out.
+        let gate = Arc::new(StalenessGate::new(8, None));
+        let lit = HostTensor::scalar_f32(0.0).to_literal().unwrap();
+        let server = ParamServer::new(ParamSet::with_version(vec![SendLiteral(lit)], 0));
+        let router: Arc<GenRouter> =
+            Arc::new(GenRouter::new(2, RouterCfg::new(RoutePolicy::Affinity, 8, 0)));
+        let buffer = Arc::new(ReplayBuffer::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let ds = Dataset::new(Arc::new(AdditionTask), 1, LevelMix::single(1));
+
+        let controller = {
+            let gate = Arc::clone(&gate);
+            let server = Arc::clone(&server);
+            let router = Arc::clone(&router);
+            let stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("controller".into())
+                .spawn(move || -> Result<()> {
+                    run_controller(
+                        ds, gate, server, router, stop,
+                        ControllerCfg { group_size: 4, max_submissions: None },
+                        Arc::new(Trace::new(false)),
+                    );
+                    Ok(())
+                })
+                .unwrap()
+        };
+        // worker threads: pure request servers over their inboxes that
+        // stop refilling and exit once the frontend says Drain — the
+        // rollout worker's shutdown contract
+        let mut handles = Vec::new();
+        for w in 0..2 {
+            let router = Arc::clone(&router);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rollout-{w}"))
+                    .spawn(move || -> Result<()> {
+                        loop {
+                            if router
+                                .take_control(w)
+                                .iter()
+                                .any(|c| *c == Control::Drain)
+                            {
+                                return Ok(());
+                            }
+                            for q in router.pull(w, 4).reqs {
+                                router.complete(w, q.tokens.len());
+                            }
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                    })
+                    .unwrap(),
+            );
+        }
+        std::thread::sleep(Duration::from_millis(30)); // let traffic flow
+        // the trainer "failed" here: the error path must still shut the
+        // whole topology down
+        drain_and_join(&router, &buffer, &stop, handles, controller).unwrap();
+        assert!(stop.load(Ordering::Acquire), "stop raised for the controller");
     }
 }

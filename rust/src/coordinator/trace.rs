@@ -29,6 +29,11 @@ pub enum Event {
     Route { replica: usize, group: u64, queued: usize },
     /// dry replica stole requests from the back of a victim's inbox
     Steal { thief: usize, victim: usize, reqs: usize },
+    /// replica left the fleet (error/scale-down); `requeued` of its queued
+    /// requests were re-routed onto the survivors (zero lost)
+    ReplicaDown { replica: usize, requeued: usize },
+    /// replica slot joined (or rejoined) the fleet at membership `epoch`
+    ReplicaUp { replica: usize, epoch: u64 },
 }
 
 #[derive(Debug, Clone)]
@@ -103,6 +108,12 @@ impl Trace {
                 Event::Steal { thief, victim, reqs } => {
                     ("steal", *thief, *victim as i64, *reqs as i64)
                 }
+                Event::ReplicaDown { replica, requeued } => {
+                    ("replica_down", *replica, *requeued as i64, 0)
+                }
+                Event::ReplicaUp { replica, epoch } => {
+                    ("replica_up", *replica, *epoch as i64, 0)
+                }
             };
             out.push_str(&format!("{:.6},{kind},{actor},{a},{b}\n", s.t));
         }
@@ -147,6 +158,16 @@ mod tests {
         let csv = tr.to_csv();
         assert!(csv.contains("route,1,42,3"));
         assert!(csv.contains("steal,0,1,2"));
+    }
+
+    #[test]
+    fn membership_events_render() {
+        let tr = Trace::new(true);
+        tr.log(Event::ReplicaDown { replica: 2, requeued: 7 });
+        tr.log(Event::ReplicaUp { replica: 2, epoch: 3 });
+        let csv = tr.to_csv();
+        assert!(csv.contains("replica_down,2,7,0"));
+        assert!(csv.contains("replica_up,2,3,0"));
     }
 
     #[test]

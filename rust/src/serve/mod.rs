@@ -11,11 +11,15 @@
 //! - [`scheduler`]: continuous batching with FIFO admission, growth on
 //!   block boundaries, preemption-on-OOM, and the paper's §4.1
 //!   `update_weights` invalidation of stale-version KV;
-//! - [`router`]: the request-routed dispatch plane over W engine replicas —
-//!   typed `generate` requests flow into per-replica inboxes chosen by a
-//!   pluggable policy (`fifo` baseline, sticky prefix-`affinity` default
-//!   with least-outstanding fallback and bounded work-stealing), and
-//!   `update_weights`/drain control fan out through the same frontend.
+//! - [`router`]: the request-routed dispatch plane over a dynamic fleet of
+//!   engine replicas — typed `generate` requests flow into epoch-tagged
+//!   per-replica inboxes chosen by a pluggable policy (`fifo` baseline,
+//!   sticky prefix-`affinity`, measured cache-`probe` default scoring
+//!   registered [`ReplicaProbe`]s), with bounded work-stealing that
+//!   re-points sticky ownership at the thief, an `add_replica` /
+//!   `remove_replica` membership lifecycle that requeues a lost replica's
+//!   inbox with zero requests lost, and `update_weights`/drain control
+//!   fan-out through the same frontend.
 //!
 //! `coordinator::GenEngine` runs its slot batch on top of a [`Scheduler`];
 //! the controller submits through a [`Router`] and rollout workers serve
@@ -31,5 +35,7 @@ pub mod scheduler;
 
 pub use blocks::{BlockId, BlockManager};
 pub use radix::{InsertStats, PrefixMatch, RadixCache};
-pub use router::{Control, Pulled, Request, RoutePolicy, Router, RouterCfg, RouterStats};
+pub use router::{
+    Control, Pulled, ReplicaProbe, Request, RoutePolicy, Router, RouterCfg, RouterStats,
+};
 pub use scheduler::{Admitted, Grow, Scheduler, SeqId, ServeCfg, ServeStats};

@@ -9,20 +9,37 @@
 //! - **`fifo`** — the shared-queue baseline: requests round-robin across
 //!   replicas in submission order, so the G siblings of a GRPO group
 //!   scatter and each replica pays its own prompt prefill;
-//! - **`affinity`** (default) — sticky prefix affinity: each request is
+//! - **`affinity`** — sticky prefix affinity: each request is
 //!   fingerprinted by the block-aligned prefix of its token ids (the same
 //!   alignment the radix cache uses, so equal fingerprints mean a shared
 //!   cacheable prefix) and routed to the replica that owns that
 //!   fingerprint. First sight of a fingerprint picks the replica with the
 //!   fewest outstanding tokens, and an owner that grows severely
-//!   overloaded sheds the prefix to the least-loaded replica (one extra
-//!   prefill, then locality resumes) — per-replica radix caches become
-//!   realized savings at W ≥ 2 without a hot prefix pinning the fleet.
+//!   overloaded sheds the prefix to the least-loaded replica;
+//! - **`probe`** (default) — measured cache-aware placement: every
+//!   submission scores each live replica by its *probed* cached-prefix
+//!   tokens (the replica's scheduler answers through a registered
+//!   [`ReplicaProbe`]) minus an outstanding-token load penalty. The sticky
+//!   fingerprint map is demoted to a hint — a predicted-cache bonus for
+//!   the replica that already holds queued-but-unserved siblings — so
+//!   cold-start groups still colocate, while measured state (partial
+//!   prefix overlap across groups, post-steal warmth, post-eviction
+//!   coldness) overrides a stale hint the moment it diverges.
 //!
 //! A replica whose inbox runs dry may steal up to `steal_max` requests
 //! from the back of the fullest other inbox (bounded work-stealing: a hot
 //! replica cannot starve the fleet, and stealing newest-first preserves
-//! the victim's cache locality at its queue head).
+//! the victim's cache locality at its queue head). Stealing re-points the
+//! stolen fingerprints' sticky ownership at the thief, so later siblings
+//! follow the work instead of prefilling cold on the victim.
+//!
+//! The fleet is not fixed: [`Router::add_replica`] /
+//! [`Router::remove_replica`] implement a membership lifecycle over
+//! epoch-tagged inboxes. Removing a replica requeues its queued requests
+//! through normal routing (zero requests lost), releases its outstanding
+//! load charges and sticky ownership, and bumps the slot's epoch so a
+//! stale worker for a revived slot can never serve the new epoch's
+//! requests ([`Router::pull_at`]).
 //!
 //! Control traffic — the paper's `update_weights` fan-out plus
 //! drain/abort — travels through the same frontend (`broadcast` /
@@ -34,8 +51,8 @@
 //! its `Prompt` through; tests use `()`).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::runtime::Version;
 
@@ -46,6 +63,9 @@ pub enum RoutePolicy {
     Fifo,
     /// sticky block-aligned prefix affinity, least-outstanding fallback
     Affinity,
+    /// probed cached-prefix tokens minus an outstanding-token load
+    /// penalty; sticky fingerprints demoted to a colocation hint
+    Probe,
 }
 
 impl RoutePolicy {
@@ -53,6 +73,7 @@ impl RoutePolicy {
         match s {
             "fifo" => Some(RoutePolicy::Fifo),
             "affinity" => Some(RoutePolicy::Affinity),
+            "probe" => Some(RoutePolicy::Probe),
             _ => None,
         }
     }
@@ -61,8 +82,23 @@ impl RoutePolicy {
         match self {
             RoutePolicy::Fifo => "fifo",
             RoutePolicy::Affinity => "affinity",
+            RoutePolicy::Probe => "probe",
         }
     }
+}
+
+/// Measured per-replica serving state, answered by the replica's
+/// scheduler. Rollout workers register one per slot
+/// ([`Router::register_probe`]); the `probe` policy scores placements with
+/// it. `Mutex<Scheduler>` implements this directly (see `serve/scheduler`),
+/// so a worker shares its scheduler handle as its probe.
+pub trait ReplicaProbe: Send + Sync {
+    /// Longest prefix of `tokens` this replica's cache would serve at
+    /// admission right now, in tokens (non-mutating).
+    fn probe_cached_tokens(&self, tokens: &[i32]) -> usize;
+    /// This replica's measured outstanding work (running + waiting
+    /// tokens), the load term of the probe score.
+    fn probe_outstanding_tokens(&self) -> u64;
 }
 
 #[derive(Debug, Clone)]
@@ -73,11 +109,24 @@ pub struct RouterCfg {
     pub block_size: usize,
     /// max requests a dry replica may steal per pull (0 = no stealing)
     pub steal_max: usize,
+    /// `probe` policy: score = cached_tokens − penalty × outstanding
+    /// tokens; higher values spill load sooner at the cost of locality
+    pub probe_load_penalty: f64,
 }
 
 impl RouterCfg {
     pub fn new(policy: RoutePolicy, block_size: usize, steal_max: usize) -> RouterCfg {
-        RouterCfg { policy, block_size: block_size.max(1), steal_max }
+        RouterCfg {
+            policy,
+            block_size: block_size.max(1),
+            steal_max,
+            probe_load_penalty: 0.05,
+        }
+    }
+
+    pub fn probe_penalty(mut self, p: f64) -> RouterCfg {
+        self.probe_load_penalty = p.max(0.0);
+        self
     }
 }
 
@@ -114,6 +163,35 @@ struct Inbox<T> {
     ctrl: VecDeque<Control>,
 }
 
+/// One replica slot: inbox + lock-free accounting + membership state.
+struct Replica<T> {
+    inbox: Mutex<Inbox<T>>,
+    /// queued-request count, readable without the inbox lock
+    queued: AtomicUsize,
+    /// tokens routed here and not yet reported complete
+    outstanding: AtomicU64,
+    routed: AtomicU64,
+    /// dead slots refuse new requests and are skipped by routing/steals
+    alive: AtomicBool,
+    /// bumped on every remove/revive; `pull_at` fences stale workers
+    epoch: AtomicU64,
+    probe: RwLock<Option<Arc<dyn ReplicaProbe>>>,
+}
+
+impl<T> Replica<T> {
+    fn new() -> Replica<T> {
+        Replica {
+            inbox: Mutex::new(Inbox { reqs: VecDeque::new(), ctrl: VecDeque::new() }),
+            queued: AtomicUsize::new(0),
+            outstanding: AtomicU64::new(0),
+            routed: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+            epoch: AtomicU64::new(0),
+            probe: RwLock::new(None),
+        }
+    }
+}
+
 /// Aggregate routing statistics (imbalance diagnostics).
 #[derive(Debug, Clone, Default)]
 pub struct RouterStats {
@@ -125,22 +203,26 @@ pub struct RouterStats {
     pub stolen_reqs: u64,
     /// currently queued requests per replica
     pub queued: Vec<usize>,
+    /// membership: which slots are currently alive
+    pub alive: Vec<bool>,
+    /// replicas removed over the router's lifetime
+    pub removed: u64,
+    /// requests requeued by replica removals (all re-routed, none lost)
+    pub requeued: u64,
 }
 
-/// Cache-affinity request router over W engine replicas.
+/// Cache-aware request router over a dynamic fleet of engine replicas.
 pub struct Router<T> {
     cfg: RouterCfg,
-    inboxes: Vec<Mutex<Inbox<T>>>,
-    /// queued-request count per replica, readable without the inbox lock
-    queued: Vec<AtomicUsize>,
-    /// tokens routed to each replica and not yet reported complete
-    outstanding: Vec<AtomicU64>,
-    /// fingerprint -> owning replica (affinity stickiness)
+    replicas: RwLock<Vec<Arc<Replica<T>>>>,
+    /// fingerprint -> replica: ownership under `affinity`, a colocation
+    /// hint under `probe`; refreshed on steal and dropped on removal
     sticky: Mutex<HashMap<u64, usize>>,
     rr: AtomicUsize,
-    routed: Vec<AtomicU64>,
     steals: AtomicU64,
     stolen_reqs: AtomicU64,
+    removed: AtomicU64,
+    requeued: AtomicU64,
 }
 
 /// Sticky-map size bound; beyond this the map is cleared (affinity simply
@@ -160,25 +242,130 @@ impl<T> Router<T> {
         assert!(n_replicas > 0, "need at least one replica");
         Router {
             cfg,
-            inboxes: (0..n_replicas)
-                .map(|_| Mutex::new(Inbox { reqs: VecDeque::new(), ctrl: VecDeque::new() }))
-                .collect(),
-            queued: (0..n_replicas).map(|_| AtomicUsize::new(0)).collect(),
-            outstanding: (0..n_replicas).map(|_| AtomicU64::new(0)).collect(),
+            replicas: RwLock::new((0..n_replicas).map(|_| Arc::new(Replica::new())).collect()),
             sticky: Mutex::new(HashMap::new()),
             rr: AtomicUsize::new(0),
-            routed: (0..n_replicas).map(|_| AtomicU64::new(0)).collect(),
             steals: AtomicU64::new(0),
             stolen_reqs: AtomicU64::new(0),
+            removed: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
         }
     }
 
+    /// Total replica slots ever created (alive + dead).
     pub fn n_replicas(&self) -> usize {
-        self.inboxes.len()
+        self.replicas.read().unwrap().len()
+    }
+
+    /// Currently alive replicas.
+    pub fn n_alive(&self) -> usize {
+        self.replicas
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|r| r.alive.load(Ordering::Acquire))
+            .count()
+    }
+
+    pub fn is_alive(&self, replica: usize) -> bool {
+        self.replica(replica)
+            .is_some_and(|r| r.alive.load(Ordering::Acquire))
+    }
+
+    /// The slot's current epoch (bumped on every removal/revival).
+    pub fn epoch(&self, replica: usize) -> u64 {
+        self.replica(replica)
+            .map(|r| r.epoch.load(Ordering::Acquire))
+            .unwrap_or(0)
     }
 
     pub fn policy(&self) -> RoutePolicy {
         self.cfg.policy
+    }
+
+    fn replica(&self, i: usize) -> Option<Arc<Replica<T>>> {
+        self.replicas.read().unwrap().get(i).cloned()
+    }
+
+    fn snapshot(&self) -> Vec<Arc<Replica<T>>> {
+        self.replicas.read().unwrap().clone()
+    }
+
+    /// Register the replica's measured-state probe (its scheduler handle).
+    /// The `probe` policy consults it on every submission.
+    pub fn register_probe(&self, replica: usize, probe: Arc<dyn ReplicaProbe>) {
+        if let Some(r) = self.replica(replica) {
+            *r.probe.write().unwrap() = Some(probe);
+        }
+    }
+
+    /// Join the fleet: revives the lowest dead slot (epoch bumped, probe
+    /// cleared by the removal) or appends a fresh one. Returns
+    /// `(replica, epoch)`; workers serve with [`Router::pull_at`] under
+    /// that epoch.
+    pub fn add_replica(&self) -> (usize, u64) {
+        let mut reps = self.replicas.write().unwrap();
+        for (i, r) in reps.iter().enumerate() {
+            if !r.alive.load(Ordering::Acquire) {
+                let epoch = r.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+                r.alive.store(true, Ordering::Release);
+                return (i, epoch);
+            }
+        }
+        reps.push(Arc::new(Replica::new()));
+        (reps.len() - 1, 0)
+    }
+
+    /// A replica left the fleet (crash, scale-down): mark the slot dead,
+    /// bump its epoch, release its outstanding charges, sticky ownership
+    /// and probe, and requeue its queued requests through normal routing.
+    /// Returns the number of requests requeued, or `None` if the replica
+    /// is already dead or is the last one alive (refused — its requests
+    /// would have nowhere to go).
+    pub fn remove_replica(&self, replica: usize) -> Option<usize> {
+        // check-and-flip under the membership write lock: concurrent
+        // removals of the last two replicas must not both pass the
+        // last-alive guard and leave the fleet empty
+        let r = {
+            let reps = self.replicas.write().unwrap();
+            let r = reps.get(replica)?.clone();
+            if !r.alive.load(Ordering::Acquire) {
+                return None;
+            }
+            let alive = reps.iter().filter(|x| x.alive.load(Ordering::Acquire)).count();
+            if alive <= 1 {
+                return None;
+            }
+            // flip the flag before draining: `submit` re-checks it under
+            // the inbox lock, so every request either drains below or is
+            // re-routed by its submitter — none can strand in a dead inbox
+            r.alive.store(false, Ordering::Release);
+            r.epoch.fetch_add(1, Ordering::AcqRel);
+            r
+        };
+        let orphans: Vec<Request<T>> = {
+            let mut inbox = r.inbox.lock().unwrap();
+            inbox.ctrl.clear();
+            let v: Vec<Request<T>> = inbox.reqs.drain(..).collect();
+            // decrement (not store(0)) and do it under the inbox lock:
+            // every queued-counter update is serialized with its inbox, so
+            // a racing pull/steal can never wrap the counter
+            if !v.is_empty() {
+                r.queued.fetch_sub(v.len(), Ordering::Relaxed);
+            }
+            v
+        };
+        // in-flight work died with the replica; its load charge goes too
+        r.outstanding.store(0, Ordering::Release);
+        *r.probe.write().unwrap() = None;
+        self.sticky.lock().unwrap().retain(|_, owner| *owner != replica);
+        self.removed.fetch_add(1, Ordering::Relaxed);
+        let n = orphans.len();
+        for req in orphans {
+            self.submit(req);
+        }
+        self.requeued.fetch_add(n as u64, Ordering::Relaxed);
+        Some(n)
     }
 
     /// FNV-1a over the block-aligned prefix of `tokens` (whole slice when
@@ -196,23 +383,49 @@ impl<T> Router<T> {
         h
     }
 
-    fn pick_replica(&self, tokens: &[i32]) -> usize {
-        let n = self.inboxes.len();
+    /// Length of the fingerprinted (block-aligned) prefix — the cache unit
+    /// a colocation hint predicts.
+    fn aligned_len(&self, tokens: &[i32]) -> usize {
+        let bs = self.cfg.block_size;
+        let aligned = tokens.len() / bs * bs;
+        if aligned == 0 {
+            tokens.len()
+        } else {
+            aligned
+        }
+    }
+
+    fn pick_replica(&self, reps: &[Arc<Replica<T>>], tokens: &[i32]) -> usize {
+        let alive: Vec<usize> = reps
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.alive.load(Ordering::Acquire))
+            .map(|(i, _)| i)
+            .collect();
+        assert!(!alive.is_empty(), "no alive replicas to route to");
+        let n = alive.len();
         match self.cfg.policy {
-            RoutePolicy::Fifo => self.rr.fetch_add(1, Ordering::Relaxed) % n,
+            RoutePolicy::Fifo => alive[self.rr.fetch_add(1, Ordering::Relaxed) % n],
             RoutePolicy::Affinity => {
                 let fp = self.fingerprint(tokens);
                 let mut sticky = self.sticky.lock().unwrap();
-                let least = (0..n)
-                    .min_by_key(|&i| self.outstanding[i].load(Ordering::Relaxed))
+                let least = alive
+                    .iter()
+                    .copied()
+                    .min_by_key(|&i| reps[i].outstanding.load(Ordering::Relaxed))
                     .unwrap();
-                if let Some(&owner) = sticky.get(&fp) {
+                // a sticky owner that died (removal races the sticky map)
+                // is treated as a fresh prefix, never returned
+                let owner = sticky.get(&fp).copied().filter(|&o| {
+                    reps.get(o).is_some_and(|r| r.alive.load(Ordering::Acquire))
+                });
+                if let Some(owner) = owner {
                     // sticky — unless the owner is severely overloaded
                     // relative to the least-loaded replica, in which case
                     // the prefix migrates there: a single hot prefix must
                     // not pin the whole fleet to one replica
-                    let owner_load = self.outstanding[owner].load(Ordering::Relaxed);
-                    let least_load = self.outstanding[least].load(Ordering::Relaxed);
+                    let owner_load = reps[owner].outstanding.load(Ordering::Relaxed);
+                    let least_load = reps[least].outstanding.load(Ordering::Relaxed);
                     let slack = MIGRATE_SLACK_REQS * tokens.len() as u64;
                     if owner == least || owner_load <= 2 * least_load + slack {
                         return owner;
@@ -227,108 +440,245 @@ impl<T> Router<T> {
                 sticky.insert(fp, least);
                 least
             }
+            RoutePolicy::Probe => {
+                // measure first (probes lock replica schedulers), then
+                // take the sticky lock — never hold both at once
+                let measured: Vec<(usize, f64, f64)> = alive
+                    .iter()
+                    .map(|&i| {
+                        let probe = reps[i].probe.read().unwrap().clone();
+                        // the router's own charge (submit → complete) sees
+                        // inbox-queued work the scheduler hasn't pulled
+                        // yet; the probe sees the scheduler's measured
+                        // running+waiting state. Their windows overlap, so
+                        // the max is the safe load estimate.
+                        let charged = reps[i].outstanding.load(Ordering::Relaxed) as f64;
+                        let (cached, load) = match probe {
+                            Some(p) => (
+                                p.probe_cached_tokens(tokens) as f64,
+                                (p.probe_outstanding_tokens() as f64).max(charged),
+                            ),
+                            // unprobed replica: no cache signal
+                            None => (0.0, charged),
+                        };
+                        (i, cached, load)
+                    })
+                    .collect();
+                let fp = self.fingerprint(tokens);
+                let bonus = self.aligned_len(tokens) as f64;
+                let mut sticky = self.sticky.lock().unwrap();
+                let hint = sticky.get(&fp).copied().filter(|&h| {
+                    reps.get(h).is_some_and(|r| r.alive.load(Ordering::Acquire))
+                });
+                // score = measured cached prefix + predicted cache for the
+                // hinted replica (its queued siblings will warm it) −
+                // load penalty; the hint only wins while nothing measured
+                // beats it, which is exactly "demoted to a hint"
+                let mut best = alive[0];
+                let mut best_score = f64::NEG_INFINITY;
+                for &(i, cached, load) in &measured {
+                    let predicted = if hint == Some(i) { cached.max(bonus) } else { cached };
+                    let score = predicted - self.cfg.probe_load_penalty * load;
+                    if score > best_score {
+                        best = i;
+                        best_score = score;
+                    }
+                }
+                if sticky.len() >= STICKY_CAP {
+                    sticky.clear();
+                }
+                sticky.insert(fp, best);
+                best
+            }
         }
     }
 
     /// Route one request; returns the chosen replica.
     pub fn submit(&self, req: Request<T>) -> usize {
-        let r = self.pick_replica(&req.tokens);
-        self.outstanding[r].fetch_add(req.tokens.len() as u64, Ordering::Relaxed);
-        self.routed[r].fetch_add(1, Ordering::Relaxed);
-        let mut inbox = self.inboxes[r].lock().unwrap();
-        inbox.reqs.push_back(req);
-        self.queued[r].fetch_add(1, Ordering::Relaxed);
-        r
+        let mut slot = Some(req);
+        loop {
+            // fresh snapshot per attempt: a retry after racing a removal
+            // must see replicas added since, not spin over a stale fleet
+            let reps = self.snapshot();
+            let req = slot.take().expect("request in flight");
+            let tokens = req.tokens.len() as u64;
+            let r = self.pick_replica(&reps, &req.tokens);
+            reps[r].outstanding.fetch_add(tokens, Ordering::Relaxed);
+            {
+                let mut inbox = reps[r].inbox.lock().unwrap();
+                // linearize against `remove_replica`: it flips the flag
+                // before draining under this same lock, so either we land
+                // before the drain (and get requeued) or we see the flag
+                if reps[r].alive.load(Ordering::Acquire) {
+                    inbox.reqs.push_back(req);
+                    reps[r].queued.fetch_add(1, Ordering::Relaxed);
+                    reps[r].routed.fetch_add(1, Ordering::Relaxed);
+                    return r;
+                }
+            }
+            // picked a replica that died mid-flight: undo and re-route
+            sat_sub(&reps[r].outstanding, tokens);
+            slot = Some(req);
+        }
     }
 
     /// Pop up to `max_n` requests for `replica` — own inbox first, then a
-    /// bounded steal from the back of the fullest other inbox.
+    /// bounded steal from the back of the fullest other inbox. A dead
+    /// replica pulls nothing.
     pub fn pull(&self, replica: usize, max_n: usize) -> Pulled<T> {
+        let epoch = self.epoch(replica);
+        self.pull_at(replica, epoch, max_n)
+    }
+
+    /// Epoch-fenced pull: serves only while `epoch` matches the slot's
+    /// current epoch, so a worker whose slot was removed (and possibly
+    /// revived for a successor) can never serve the new epoch's requests.
+    pub fn pull_at(&self, replica: usize, epoch: u64, max_n: usize) -> Pulled<T> {
         let mut out = Vec::new();
-        if max_n == 0 {
+        let reps = self.snapshot();
+        let Some(me) = reps.get(replica) else {
+            return Pulled { reqs: out, stolen: None };
+        };
+        if max_n == 0
+            || !me.alive.load(Ordering::Acquire)
+            || me.epoch.load(Ordering::Acquire) != epoch
+        {
             return Pulled { reqs: out, stolen: None };
         }
         {
-            let mut inbox = self.inboxes[replica].lock().unwrap();
+            let mut inbox = me.inbox.lock().unwrap();
+            // re-check the fence under the lock: removal/revival bumps the
+            // epoch before draining under this same lock, so a stale
+            // worker that passed the fast-path check above cannot slip in
+            // and drain a successor's requests
+            if !me.alive.load(Ordering::Acquire)
+                || me.epoch.load(Ordering::Acquire) != epoch
+            {
+                return Pulled { reqs: out, stolen: None };
+            }
             while out.len() < max_n {
                 let Some(r) = inbox.reqs.pop_front() else { break };
                 out.push(r);
             }
+            // counter updates stay under the inbox lock (see remove_replica)
+            if !out.is_empty() {
+                me.queued.fetch_sub(out.len(), Ordering::Relaxed);
+            }
         }
         if !out.is_empty() {
-            self.queued[replica].fetch_sub(out.len(), Ordering::Relaxed);
             return Pulled { reqs: out, stolen: None };
         }
-        // dry inbox: steal from the fullest other replica, newest-first so
-        // the victim keeps the locality at its queue head
+        // dry inbox: steal from the fullest other alive replica,
+        // newest-first so the victim keeps the locality at its queue head
         let budget = self.cfg.steal_max.min(max_n);
         if budget == 0 {
             return Pulled { reqs: out, stolen: None };
         }
-        let victim = (0..self.inboxes.len())
-            .filter(|&i| i != replica)
-            .max_by_key(|&i| self.queued[i].load(Ordering::Relaxed));
+        let victim = (0..reps.len())
+            .filter(|&i| i != replica && reps[i].alive.load(Ordering::Acquire))
+            .max_by_key(|&i| reps[i].queued.load(Ordering::Relaxed));
         let Some(victim) = victim else {
             return Pulled { reqs: out, stolen: None };
         };
         {
-            let mut inbox = self.inboxes[victim].lock().unwrap();
+            let mut inbox = reps[victim].inbox.lock().unwrap();
             while out.len() < budget {
                 let Some(r) = inbox.reqs.pop_back() else { break };
                 out.push(r);
+            }
+            // re-check the thief's own fence before committing the steal:
+            // a replica removed between the top fence and here must not
+            // walk off with live requests — restore them to the victim
+            // (reverse of the pop order) and report dry
+            if !me.alive.load(Ordering::Acquire)
+                || me.epoch.load(Ordering::Acquire) != epoch
+            {
+                for r in out.drain(..).rev() {
+                    inbox.reqs.push_back(r);
+                }
+                return Pulled { reqs: out, stolen: None };
+            }
+            // counter updates stay under the inbox lock (see remove_replica)
+            if !out.is_empty() {
+                reps[victim].queued.fetch_sub(out.len(), Ordering::Relaxed);
             }
         }
         if out.is_empty() {
             return Pulled { reqs: out, stolen: None };
         }
         let n = out.len();
-        self.queued[victim].fetch_sub(n, Ordering::Relaxed);
         // transfer the load charge from victim to thief
         let tokens: u64 = out.iter().map(|r| r.tokens.len() as u64).sum();
-        sat_sub(&self.outstanding[victim], tokens);
-        self.outstanding[replica].fetch_add(tokens, Ordering::Relaxed);
+        sat_sub(&reps[victim].outstanding, tokens);
+        me.outstanding.fetch_add(tokens, Ordering::Relaxed);
         self.steals.fetch_add(1, Ordering::Relaxed);
         self.stolen_reqs.fetch_add(n as u64, Ordering::Relaxed);
+        // the work moved, so the sticky owner moves with it: later
+        // siblings of a stolen group must follow the thief's warm cache,
+        // not prefill cold on the victim
+        if self.cfg.policy != RoutePolicy::Fifo {
+            let mut sticky = self.sticky.lock().unwrap();
+            for r in &out {
+                sticky.insert(self.fingerprint(&r.tokens), replica);
+            }
+        }
         Pulled { reqs: out, stolen: Some((victim, n)) }
     }
 
     /// Drain pending control messages for `replica`.
     pub fn take_control(&self, replica: usize) -> Vec<Control> {
-        let mut inbox = self.inboxes[replica].lock().unwrap();
-        inbox.ctrl.drain(..).collect()
+        match self.replica(replica) {
+            Some(r) => r.inbox.lock().unwrap().ctrl.drain(..).collect(),
+            None => Vec::new(),
+        }
     }
 
-    /// Fan a control message out to every replica inbox.
+    /// Fan a control message out to every alive replica inbox.
     pub fn broadcast(&self, c: Control) {
-        for inbox in &self.inboxes {
-            inbox.lock().unwrap().ctrl.push_back(c);
+        for r in self.snapshot() {
+            if r.alive.load(Ordering::Acquire) {
+                r.inbox.lock().unwrap().ctrl.push_back(c);
+            }
         }
     }
 
     /// A replica finished serving a request it pulled: release its load
     /// charge (`tokens` = the request's token count).
     pub fn complete(&self, replica: usize, tokens: usize) {
-        sat_sub(&self.outstanding[replica], tokens as u64);
+        if let Some(r) = self.replica(replica) {
+            sat_sub(&r.outstanding, tokens as u64);
+        }
     }
 
     pub fn queued(&self, replica: usize) -> usize {
-        self.queued[replica].load(Ordering::Relaxed)
+        self.replica(replica)
+            .map(|r| r.queued.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     pub fn queued_total(&self) -> usize {
-        self.queued.iter().map(|q| q.load(Ordering::Relaxed)).sum()
+        self.snapshot()
+            .iter()
+            .map(|r| r.queued.load(Ordering::Relaxed))
+            .sum()
     }
 
     pub fn outstanding_tokens(&self, replica: usize) -> u64 {
-        self.outstanding[replica].load(Ordering::Relaxed)
+        self.replica(replica)
+            .map(|r| r.outstanding.load(Ordering::Relaxed))
+            .unwrap_or(0)
     }
 
     pub fn stats(&self) -> RouterStats {
+        let reps = self.snapshot();
         RouterStats {
-            routed: self.routed.iter().map(|r| r.load(Ordering::Relaxed)).collect(),
+            routed: reps.iter().map(|r| r.routed.load(Ordering::Relaxed)).collect(),
             steals: self.steals.load(Ordering::Relaxed),
             stolen_reqs: self.stolen_reqs.load(Ordering::Relaxed),
-            queued: self.queued.iter().map(|q| q.load(Ordering::Relaxed)).collect(),
+            queued: reps.iter().map(|r| r.queued.load(Ordering::Relaxed)).collect(),
+            alive: reps.iter().map(|r| r.alive.load(Ordering::Acquire)).collect(),
+            removed: self.removed.load(Ordering::Relaxed),
+            requeued: self.requeued.load(Ordering::Relaxed),
         }
     }
 }
@@ -401,6 +751,28 @@ mod tests {
     }
 
     #[test]
+    fn probe_colocates_cold_groups_via_hint() {
+        // with no probes registered and cold caches, the sticky hint must
+        // still colocate a group's siblings (probe degrades to affinity,
+        // not to fifo scatter)
+        let r = router(2, RoutePolicy::Probe, 0);
+        let mut homes: HashMap<u64, Vec<usize>> = HashMap::new();
+        for gid in 0..4u64 {
+            for q in group_reqs(gid, 4, 16) {
+                homes.entry(gid).or_default().push(r.submit(q));
+            }
+        }
+        for (gid, replicas) in &homes {
+            assert!(
+                replicas.iter().all(|&x| x == replicas[0]),
+                "probe group {gid} scattered: {replicas:?}"
+            );
+        }
+        // and distinct groups still balance across the fleet
+        assert!(r.queued(0) > 0 && r.queued(1) > 0, "all groups on one replica");
+    }
+
+    #[test]
     fn affinity_balances_distinct_groups_by_outstanding_tokens() {
         let r = router(2, RoutePolicy::Affinity, 0);
         for gid in 0..6u64 {
@@ -457,6 +829,29 @@ mod tests {
     }
 
     #[test]
+    fn steal_moves_sticky_ownership_to_thief() {
+        // regression (ISSUE 3): stealing used to leave the fingerprint's
+        // sticky owner at the victim, so later siblings of a stolen group
+        // prefilled cold on the victim while the stolen siblings sat warm
+        // on the thief. Ownership must follow the work.
+        let r = router(2, RoutePolicy::Affinity, 4);
+        for q in group_reqs(7, 4, 16) {
+            assert_eq!(r.submit(q), 0, "whole group starts on replica 0");
+        }
+        // replica 1 steals the whole queued group before replica 0 serves
+        // any of it — replica 0's cache never sees this prefix
+        let p = r.pull(1, 4);
+        assert_eq!(p.stolen, Some((0, 4)));
+        assert_eq!(r.queued(0), 0);
+        // later siblings of the same group must now route to the thief
+        for q in group_reqs(7, 4, 16) {
+            assert_eq!(r.submit(q), 1, "sibling must follow the stolen work");
+        }
+        assert_eq!(r.queued(1), 4);
+        assert_eq!(r.queued(0), 0);
+    }
+
+    #[test]
     fn hot_prefix_migrates_when_owner_overloaded() {
         let r = router(2, RoutePolicy::Affinity, 0);
         // one hot prompt repeated far past the overload threshold: the
@@ -508,6 +903,291 @@ mod tests {
         assert_ne!(r.fingerprint(&a), r.fingerprint(&c));
         // sub-block prompts fall back to the whole sequence
         assert_ne!(r.fingerprint(&[1, 2]), r.fingerprint(&[1, 3]));
+    }
+
+    // ---------------------------------------------------------------
+    // membership lifecycle
+
+    #[test]
+    fn remove_replica_requeues_without_loss() {
+        let r = router(3, RoutePolicy::Affinity, 0);
+        for gid in 0..6u64 {
+            for q in group_reqs(gid, 4, 16) {
+                r.submit(q);
+            }
+        }
+        let total_before = r.queued_total();
+        assert_eq!(total_before, 24);
+        let victim_queued = r.queued(1);
+        assert!(victim_queued > 0, "least-outstanding fallback spreads groups");
+        let requeued = r.remove_replica(1).expect("removable");
+        assert_eq!(requeued, victim_queued);
+        // zero lost requests: everything requeued onto the survivors
+        assert_eq!(r.queued_total(), total_before);
+        assert_eq!(r.queued(1), 0);
+        assert!(!r.is_alive(1));
+        assert_eq!(r.n_alive(), 2);
+        // charges and sticky ownership released
+        assert_eq!(r.outstanding_tokens(1), 0);
+        for q in group_reqs(0, 1, 16) {
+            assert_ne!(r.submit(q), 1, "dead replica must not receive requests");
+        }
+        // a dead replica pulls nothing and hears no control
+        r.broadcast(Control::Drain);
+        assert!(r.take_control(1).is_empty());
+        assert!(r.pull(1, 8).reqs.is_empty());
+        let stats = r.stats();
+        assert_eq!(stats.removed, 1);
+        assert_eq!(stats.requeued as usize, requeued);
+        assert_eq!(stats.alive, vec![true, false, true]);
+    }
+
+    #[test]
+    fn remove_last_replica_is_refused() {
+        let r = router(2, RoutePolicy::Affinity, 0);
+        assert!(r.remove_replica(0).is_some());
+        assert_eq!(r.remove_replica(1), None, "last alive replica must stay");
+        assert!(r.is_alive(1));
+        // double-removal of a dead slot is also refused
+        assert_eq!(r.remove_replica(0), None);
+    }
+
+    #[test]
+    fn add_replica_revives_slot_with_new_epoch() {
+        let r = router(2, RoutePolicy::Affinity, 0);
+        assert_eq!(r.epoch(0), 0);
+        r.remove_replica(0).unwrap();
+        let e_dead = r.epoch(0);
+        assert_eq!(e_dead, 1, "removal bumps the epoch");
+        let (slot, epoch) = r.add_replica();
+        assert_eq!(slot, 0, "lowest dead slot is revived");
+        assert_eq!(epoch, 2, "revival bumps it again");
+        assert!(r.is_alive(0));
+        assert_eq!(r.n_alive(), 2);
+        // a brand-new slot appends instead
+        let (slot2, epoch2) = r.add_replica();
+        assert_eq!(slot2, 2);
+        assert_eq!(epoch2, 0);
+        assert_eq!(r.n_replicas(), 3);
+    }
+
+    #[test]
+    fn stale_epoch_pull_is_fenced() {
+        let r = router(2, RoutePolicy::Affinity, 0);
+        let old_epoch = r.epoch(0);
+        r.remove_replica(0).unwrap();
+        let (slot, new_epoch) = r.add_replica();
+        assert_eq!(slot, 0);
+        // the successor's requests land in the revived slot
+        for q in group_reqs(9, 2, 8) {
+            r.submit(q);
+        }
+        // ensure at least one request is on slot 0 for the fence to matter
+        if r.queued(0) > 0 {
+            // the dead worker's pull (old epoch) must never serve them
+            assert!(r.pull_at(0, old_epoch, 8).reqs.is_empty());
+            // the successor (new epoch) serves normally
+            assert!(!r.pull_at(0, new_epoch, 8).reqs.is_empty());
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // probe routing
+
+    /// Register W scheduler-backed probes on the router.
+    fn make_probed_scheds(
+        r: &Router<()>, replicas: usize, num_blocks: usize,
+    ) -> Vec<std::sync::Arc<std::sync::Mutex<Scheduler>>> {
+        (0..replicas)
+            .map(|w| {
+                let cfg = ServeCfg {
+                    block_size: BS,
+                    num_blocks,
+                    max_seqs: 2,
+                    prefix_cache: true,
+                };
+                let s = std::sync::Arc::new(std::sync::Mutex::new(Scheduler::new(cfg)));
+                r.register_probe(w, s.clone());
+                s
+            })
+            .collect()
+    }
+
+    /// Serve up to `rounds` service waves on replica `w`: pull, admit,
+    /// decode one token per active sequence, finish at target. Mirrors the
+    /// rollout worker's loop at scheduler granularity. `targets` maps a
+    /// sequence to (finish length, router-charged prompt tokens).
+    #[allow(clippy::too_many_arguments)]
+    fn serve_rounds(
+        router: &Router<()>, sched: &std::sync::Mutex<Scheduler>, w: usize,
+        rounds: usize, next_id: &mut SeqId,
+        targets: &mut HashMap<SeqId, (usize, usize)>,
+        active: &mut HashMap<SeqId, Vec<i32>>, target_len: usize,
+    ) {
+        for _ in 0..rounds {
+            let cap = {
+                let s = sched.lock().unwrap();
+                4usize.saturating_sub(s.running_len() + s.waiting_len())
+            };
+            for q in router.pull(w, cap).reqs {
+                let mut s = sched.lock().unwrap();
+                let plen = q.tokens.len();
+                assert!(s.submit(*next_id, q.tokens));
+                targets.insert(*next_id, (target_len.max(plen + 1), plen));
+                *next_id += 1;
+            }
+            let mut s = sched.lock().unwrap();
+            for a in s.schedule() {
+                s.note_prefilled(a.id, &a.tokens);
+                active.insert(a.id, a.tokens);
+            }
+            let ids: Vec<SeqId> = active.keys().copied().collect();
+            for id in ids {
+                let Some(mut t) = active.remove(&id) else { continue };
+                t.push((id % 41) as i32 + 3);
+                loop {
+                    match s.grow_to(id, t.len()) {
+                        Grow::Ok => break,
+                        Grow::Preempt(v) => {
+                            let vt = active.remove(&v).expect("victim active");
+                            s.preempt(v, &vt, vt.len());
+                        }
+                        Grow::Fail => panic!("pool too small"),
+                    }
+                }
+                let (target, plen) = targets[&id];
+                if t.len() >= target {
+                    s.finish(id, &t, t.len());
+                    router.complete(w, plen);
+                } else {
+                    active.insert(id, t);
+                }
+            }
+        }
+    }
+
+    /// Drive W replica schedulers through the router under the ISSUE-3
+    /// acceptance workload: two (or W) prompt *families* that share a long
+    /// block-aligned family prefix plus a short per-group tail, submitted
+    /// in a skewed interleaving, over schedulers whose KV pools are too
+    /// small to keep more than one family's prefix resident. Replica 0
+    /// serves faster than the rest, runs dry, and steals. Sticky-
+    /// fingerprint affinity is family-blind (fingerprints cover the whole
+    /// prompt), so load-driven placement interleaves families on a replica
+    /// and thrashes its radix cache; probe routing measures the surviving
+    /// prefix and partitions families onto steady replicas. Returns
+    /// aggregate (computed, cached) prefill tokens.
+    fn run_family_fleet(policy: RoutePolicy, replicas: usize, groups: usize,
+                        g: usize, steal_max: usize) -> (u64, u64) {
+        const FAMILY_LEN: usize = 64;
+        const TAIL_LEN: usize = 4;
+        const GEN_LEN: usize = 4;
+        let prompt_len = FAMILY_LEN + TAIL_LEN;
+        let target_len = prompt_len + GEN_LEN;
+        let router: Router<()> =
+            Router::new(replicas, RouterCfg::new(policy, BS, steal_max));
+        // pool sized so one family prefix stays resident but a cold
+        // admission wave of the other family evicts it (thrash pressure)
+        let num_blocks = 2 * (target_len + 1).div_ceil(BS) + 2;
+        let scheds = make_probed_scheds(&router, replicas, num_blocks);
+        let n_families = replicas as u64;
+        let mut rng = crate::util::rng::Rng::new(0x5eed ^ replicas as u64);
+        let mut next_id: SeqId = 0;
+        let mut targets: Vec<HashMap<SeqId, (usize, usize)>> =
+            (0..replicas).map(|_| HashMap::new()).collect();
+        let mut active: Vec<HashMap<SeqId, Vec<i32>>> =
+            (0..replicas).map(|_| HashMap::new()).collect();
+        // interleave submission with skewed serving so caches warm (and
+        // evict) while requests are still being placed, and steals move
+        // work between replicas
+        for gid in 0..groups as u64 {
+            // irregular family order: placement cannot luck into a
+            // family partition by submission parity alone
+            let family = rng.below(n_families);
+            let mut tokens: Vec<i32> =
+                (0..FAMILY_LEN).map(|i| (family as i32 * 13 + i as i32) % 43 + 3).collect();
+            tokens.extend((0..TAIL_LEN).map(|i| (gid as i32 * 29 + i as i32) % 89 + 3));
+            for _ in 0..g {
+                router.submit(Request { group: gid, tokens: tokens.clone(), payload: () });
+            }
+            for w in 0..replicas {
+                // replica 0 is faster: it drains its inbox, then steals
+                let rounds = if w == 0 { 6 } else { 3 };
+                serve_rounds(&router, &scheds[w], w, rounds, &mut next_id,
+                             &mut targets[w], &mut active[w], target_len);
+            }
+        }
+        // run the fleet dry
+        loop {
+            for w in 0..replicas {
+                serve_rounds(&router, &scheds[w], w, 4, &mut next_id,
+                             &mut targets[w], &mut active[w], target_len);
+            }
+            let idle = (0..replicas).all(|w| {
+                active[w].is_empty() && scheds[w].lock().unwrap().waiting_len() == 0
+            });
+            if idle && router.queued_total() == 0 {
+                break;
+            }
+        }
+        let mut computed = 0u64;
+        let mut cached = 0u64;
+        for s in &scheds {
+            let s = s.lock().unwrap();
+            computed += s.prefill_tokens_computed;
+            cached += s.prefill_tokens_cached;
+        }
+        (computed, cached)
+    }
+
+    #[test]
+    fn probe_beats_affinity_under_steal_skew() {
+        // the ISSUE-3 acceptance bar: W >= 2, G >= 4, a steal-inducing
+        // skewed workload — probe routing (measured cache state) must
+        // compute strictly fewer prefill tokens than sticky-fingerprint
+        // affinity, whose placements go stale the moment eviction or a
+        // steal moves the real cache state out from under the sticky map
+        for replicas in [2usize, 3] {
+            let (probe_c, probe_h) =
+                run_family_fleet(RoutePolicy::Probe, replicas, 24, 4, 1);
+            let (aff_c, aff_h) =
+                run_family_fleet(RoutePolicy::Affinity, replicas, 24, 4, 1);
+            assert!(
+                probe_c < aff_c,
+                "W={replicas}: probe computed {probe_c} !< affinity {aff_c}"
+            );
+            let hit = |c: u64, h: u64| h as f64 / (c + h).max(1) as f64;
+            assert!(
+                hit(probe_c, probe_h) > hit(aff_c, aff_h),
+                "W={replicas}: probe hit {:.3} !> affinity {:.3}",
+                hit(probe_c, probe_h),
+                hit(aff_c, aff_h)
+            );
+        }
+    }
+
+    #[test]
+    fn probe_spills_to_cold_replica_when_owner_overloaded() {
+        // the load-penalty term: with a high penalty, a measured-warm but
+        // deeply loaded replica loses to an idle cold one
+        let r: Router<()> =
+            Router::new(2, RouterCfg::new(RoutePolicy::Probe, BS, 0).probe_penalty(10.0));
+        let scheds = make_probed_scheds(&r, 2, 1024);
+        let p: Vec<i32> = (0..16).collect();
+        // replica 0: warm cache for p, but heavy outstanding load
+        {
+            let mut s = scheds[0].lock().unwrap();
+            assert!(s.submit(0, p.clone()));
+            s.schedule();
+            s.note_prefilled(0, &p);
+            s.finish(0, &p, p.len());
+            for i in 1..20 {
+                assert!(s.submit(i, (0..64).map(|x| x + i as i32).collect()));
+            }
+        }
+        assert!(scheds[0].lock().unwrap().probe_cached_tokens(&p) > 0);
+        let placed = r.submit(req(1, p));
+        assert_eq!(placed, 1, "penalty must override the warm-but-loaded owner");
     }
 
     /// Drive W replica schedulers through the router: every replica pulls

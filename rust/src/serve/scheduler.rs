@@ -477,6 +477,31 @@ impl Scheduler {
     }
 }
 
+/// A scheduler behind a mutex *is* a live replica probe: the rollout
+/// worker shares its scheduler handle with the router
+/// (`Router::register_probe`), and the `probe` routing policy reads the
+/// measured cache/load state through it on every placement.
+impl super::router::ReplicaProbe for std::sync::Mutex<Scheduler> {
+    fn probe_cached_tokens(&self, tokens: &[i32]) -> usize {
+        // a poisoned lock means the owning worker panicked mid-serve; the
+        // replica is about to be retired, so measure it as stone cold
+        // rather than crashing the routing thread
+        match self.lock() {
+            Ok(s) => s.probe_cached_tokens(tokens),
+            Err(_) => 0,
+        }
+    }
+
+    fn probe_outstanding_tokens(&self) -> u64 {
+        // poisoned => report infinite load so routing never picks the
+        // dying replica
+        match self.lock() {
+            Ok(s) => s.outstanding_tokens() as u64,
+            Err(_) => u64::MAX,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

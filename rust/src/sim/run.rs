@@ -44,8 +44,27 @@ pub struct SimConfig {
     /// serve::Router request placement across the W generation replicas
     /// (async policy only): `Affinity` keeps a GRPO group's siblings on
     /// one replica so its prompt cache serves G−1 of them; `Fifo` is the
-    /// shared-queue baseline that scatters siblings round-robin
+    /// shared-queue baseline that scatters siblings round-robin; `Probe`
+    /// scores replicas by measured cached-prefix state minus a load
+    /// penalty (the router's probe policy)
     pub route_policy: RoutePolicy,
+    /// max requests a dry replica steals from the fullest other inbox per
+    /// refill pass once the gate blocks fresh submissions (0 = disabled)
+    pub route_steal_max: usize,
+    /// `probe` scoring: load penalty per outstanding token
+    pub probe_load_penalty: f64,
+    /// prompts fall into this many families sharing a family-wide prefix;
+    /// a device's KV pool holds at most one family prefix at a time (the
+    /// serve/-layer eviction pressure, abstracted)
+    pub n_prompt_families: usize,
+    /// fraction of the prompt covered by the family-shared prefix
+    /// (0.0 = no family structure; every prompt fully distinct)
+    pub family_prefix_frac: f64,
+    /// replica-failure sweep: remove generation device `.0` when the
+    /// trainer publishes version `.1` — its queued and in-flight requests
+    /// requeue through the router onto the survivors (zero lost, no
+    /// double-charge against the Eq. 3 gate)
+    pub fail_replica: Option<(usize, u64)>,
     pub seed: u64,
 }
 
@@ -68,7 +87,21 @@ impl SimConfig {
             group_size: 16,
             prefix_cache: true,
             route_policy: RoutePolicy::Affinity,
+            route_steal_max: 0,
+            probe_load_penalty: 0.05,
+            n_prompt_families: 1,
+            family_prefix_frac: 0.0,
+            fail_replica: None,
             seed: 1,
+        }
+    }
+
+    /// Tokens of a prompt covered by its family-shared prefix.
+    fn family_prefix_len(&self) -> f64 {
+        if self.n_prompt_families > 1 {
+            (self.family_prefix_frac.clamp(0.0, 1.0)) * self.prompt_len
+        } else {
+            0.0
         }
     }
 }
@@ -107,6 +140,13 @@ pub struct SimReport {
     /// request placement policy across replicas ("n/a" for the lockstep
     /// sync/overlap policies, which have no routing plane)
     pub route_policy: &'static str,
+    /// requests a dry replica stole from a sibling inbox
+    pub stolen_requests: u64,
+    /// generation replicas removed mid-run (failure sweep)
+    pub failed_replicas: u64,
+    /// queued/in-flight requests requeued by replica removals — every one
+    /// re-routed onto a survivor, none lost
+    pub requeued_requests: u64,
     pub timeline: Vec<Interval>,
 }
 
@@ -202,6 +242,9 @@ pub fn run_sync(cfg: &SimConfig) -> SimReport {
         recompute_tokens: 0.0,
         cache_hit_rate: 0.0,
         route_policy: "n/a",
+        stolen_requests: 0,
+        failed_replicas: 0,
+        requeued_requests: 0,
         timeline,
     }
 }
@@ -271,6 +314,9 @@ pub fn run_overlap(cfg: &SimConfig) -> SimReport {
         recompute_tokens: 0.0,
         cache_hit_rate: 0.0,
         route_policy: "n/a",
+        stolen_requests: 0,
+        failed_replicas: 0,
+        requeued_requests: 0,
         timeline,
     }
 }
@@ -280,6 +326,8 @@ pub fn run_overlap(cfg: &SimConfig) -> SimReport {
 
 #[derive(Debug, Clone)]
 struct SimSeq {
+    /// GRPO group this request belongs to (requeued on replica failure)
+    gid: u64,
     remaining: f64,
     produced: f64,
     born_version: u64,
@@ -296,15 +344,22 @@ struct GenDevice {
     /// a version mismatch is a cache miss — update_weights invalidates
     /// version-tagged blocks
     cached: HashMap<u64, u64>,
+    /// the one prompt-family prefix this device's pool currently retains
+    /// (family, version) — the serve/ layer's eviction pressure abstracted
+    /// to a single-entry cache; serving another family displaces it
+    family_cached: Option<(u64, u64)>,
 }
 
 /// The serve::Router model: whole GRPO groups are submitted through the
 /// frontend and placed into per-replica inboxes by the routing policy —
-/// `Affinity` co-locates a group's G siblings on the least-queued replica,
-/// `Fifo` scatters them round-robin in submission order (the shared-queue
-/// baseline).
+/// `Affinity` co-locates a group's G siblings on the least-queued alive
+/// replica, `Fifo` scatters them round-robin (the shared-queue baseline),
+/// and `Probe` scores alive replicas by measured family-prefix warmth
+/// minus an outstanding-token load penalty. Replica loss flips `alive`;
+/// the dead inbox requeues through the same placement.
 struct SimRouter {
     inboxes: Vec<VecDeque<u64>>,
+    alive: Vec<bool>,
     next_group: u64,
     rr: usize,
     policy: RoutePolicy,
@@ -314,41 +369,124 @@ impl SimRouter {
     fn new(n: usize, policy: RoutePolicy) -> SimRouter {
         SimRouter {
             inboxes: (0..n).map(|_| VecDeque::new()).collect(),
+            alive: vec![true; n],
             next_group: 0,
             rr: 0,
             policy,
         }
     }
 
-    /// Route one whole group of `g` sibling requests.
-    fn submit_group(&mut self, g: usize) {
-        let gid = self.next_group;
-        self.next_group += 1;
+    fn family_of(gid: u64, cfg: &SimConfig) -> u64 {
+        gid % cfg.n_prompt_families.max(1) as u64
+    }
+
+    /// Place one request of group `gid` on an alive replica.
+    fn route_one(&mut self, gid: u64, devices: &[GenDevice], version: u64,
+                 cfg: &SimConfig) -> usize {
         let n = self.inboxes.len();
+        let start = self.rr % n;
+        self.rr += 1;
         match self.policy {
-            RoutePolicy::Affinity => {
-                // least-queued replica, round-robin tie-break
-                let start = self.rr % n;
-                self.rr += 1;
-                let mut best = start;
-                for k in 1..n {
+            RoutePolicy::Fifo => {
+                // round-robin over the alive replicas
+                for k in 0..n {
                     let i = (start + k) % n;
-                    if self.inboxes[i].len() < self.inboxes[best].len() {
-                        best = i;
+                    if self.alive[i] {
+                        return i;
                     }
                 }
-                for _ in 0..g {
-                    self.inboxes[best].push_back(gid);
-                }
+                unreachable!("no alive replicas");
             }
+            RoutePolicy::Affinity => {
+                // least-queued alive replica, round-robin tie-break
+                let mut best: Option<usize> = None;
+                for k in 0..n {
+                    let i = (start + k) % n;
+                    if !self.alive[i] {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => self.inboxes[i].len() < self.inboxes[b].len(),
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                best.expect("no alive replicas")
+            }
+            RoutePolicy::Probe => {
+                // measured family-prefix warmth minus a load penalty, the
+                // router's probe score over the simulated fleet
+                let fam = Self::family_of(gid, cfg);
+                let shared = cfg.family_prefix_len();
+                let mut best: Option<(usize, f64)> = None;
+                for k in 0..n {
+                    let i = (start + k) % n;
+                    if !self.alive[i] {
+                        continue;
+                    }
+                    let cached = match devices[i].cached.get(&gid) {
+                        Some(&v) if v == version && cfg.prefix_cache => cfg.prompt_len,
+                        _ => match devices[i].family_cached {
+                            Some((f, v)) if f == fam && v == version && cfg.prefix_cache => {
+                                shared
+                            }
+                            _ => 0.0,
+                        },
+                    };
+                    let load = (self.inboxes[i].len() + devices[i].slots.len()) as f64
+                        * cfg.prompt_len;
+                    let score = cached - cfg.probe_load_penalty * load;
+                    let better = match best {
+                        None => true,
+                        Some((_, s)) => score > s,
+                    };
+                    if better {
+                        best = Some((i, score));
+                    }
+                }
+                best.expect("no alive replicas").0
+            }
+        }
+    }
+
+    /// Route one whole group of `g` sibling requests.
+    fn submit_group(&mut self, g: usize, devices: &[GenDevice], version: u64,
+                    cfg: &SimConfig) {
+        let gid = self.next_group;
+        self.next_group += 1;
+        match self.policy {
             RoutePolicy::Fifo => {
                 for _ in 0..g {
-                    let i = self.rr % n;
-                    self.rr += 1;
+                    let i = self.route_one(gid, devices, version, cfg);
+                    self.inboxes[i].push_back(gid);
+                }
+            }
+            _ => {
+                // affinity/probe co-locate the whole group
+                let i = self.route_one(gid, devices, version, cfg);
+                for _ in 0..g {
                     self.inboxes[i].push_back(gid);
                 }
             }
         }
+    }
+
+    /// Remove replica `d` from the fleet: requeue its queued requests onto
+    /// the survivors via normal placement. Returns how many were requeued
+    /// (none lost, none re-charged against the gate).
+    fn remove_replica(&mut self, d: usize, orphans: Vec<u64>,
+                      devices: &[GenDevice], version: u64, cfg: &SimConfig) -> u64 {
+        self.alive[d] = false;
+        let queued: Vec<u64> = self.inboxes[d].drain(..).collect();
+        let mut n = 0;
+        for gid in queued.into_iter().chain(orphans) {
+            let i = self.route_one(gid, devices, version, cfg);
+            self.inboxes[i].push_back(gid);
+            n += 1;
+        }
+        n
     }
 }
 
@@ -356,53 +494,84 @@ impl SimRouter {
 struct RefillOutcome {
     paid_prompt_tokens: f64,
     cached_prompt_tokens: f64,
+    stolen: u64,
 }
 
-/// Refill replica `d`'s empty slots from its router inbox, submitting
-/// fresh groups through the frontend (whole-group reservation against the
-/// Eq. 3 gate, as the real controller does) when the inbox runs dry.
-/// Prompt prefill is paid only on cache misses — siblings already served
-/// on this replica under the current weights ride the radix cache.
+/// Refill replica `d`'s empty slots from its router inbox. When the inbox
+/// runs dry, first ask the frontend for a fresh group — reserved against
+/// the Eq. 3 gate atomically, whole group or nothing, exactly as the real
+/// controller does — and once the gate blocks, steal a bounded batch from
+/// the back of the fullest sibling inbox. Prompt prefill is paid only on
+/// cache misses: a group already served on this replica under the current
+/// weights rides the per-group radix entry, and a same-family prompt
+/// rides the family prefix while the pool retains it (serving another
+/// family displaces it — the eviction pressure that makes measured
+/// probing matter).
 #[allow(clippy::too_many_arguments)]
-fn refill_device(d: usize, dev: &mut GenDevice, router: &mut SimRouter,
+fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
                  rng: &mut Rng, submitted: &mut u64, version: u64, now: f64,
                  sampler: &LenSampler, cfg: &SimConfig,
                  slots_per_dev: usize) -> RefillOutcome {
     let b = cfg.batch_seqs as u64;
-    let admits = |submitted: u64| match cfg.eta {
+    // atomic whole-group reservation: every index in submitted..+g must
+    // satisfy Eq. 3, which reduces to checking the last one
+    let admits_group = |submitted: u64, g: u64| match cfg.eta {
         None => true,
-        Some(eta) => submitted / b <= version + eta,
+        Some(eta) => (submitted + g - 1) / b <= version + eta,
     };
-    let g = cfg.group_size.max(1);
+    let g = cfg.group_size.max(1) as u64;
     let mut paid = 0.0;
     let mut cached = 0.0;
-    while dev.slots.len() < slots_per_dev {
+    let mut stolen = 0u64;
+    let mut steal_budget = cfg.route_steal_max;
+    while devices[d].slots.len() < slots_per_dev {
         let Some(gid) = router.inboxes[d].pop_front() else {
-            // inbox dry: ask the frontend for a fresh group, reserving
-            // each sibling against the Eq. 3 gate exactly as the real
-            // controller does (partial groups at the gate edge). Under
-            // fifo the siblings scatter, so a few submissions may be
-            // needed before one lands in this replica's inbox.
-            let mut take = 0;
-            while take < g && admits(*submitted) {
-                *submitted += 1;
-                take += 1;
+            // inbox dry: ask the frontend for a fresh whole group
+            if admits_group(*submitted, g) {
+                *submitted += g;
+                router.submit_group(g as usize, devices, version, cfg);
+                continue;
             }
-            if take == 0 {
+            // gate blocked: steal a bounded batch from the fullest
+            // sibling inbox (back of queue, like the real router)
+            if steal_budget == 0 {
                 break;
             }
-            router.submit_group(take);
+            let victim = (0..router.inboxes.len())
+                .filter(|&i| i != d && router.alive[i])
+                .max_by_key(|&i| router.inboxes[i].len());
+            let Some(v) = victim else { break };
+            if router.inboxes[v].is_empty() {
+                break;
+            }
+            while steal_budget > 0 {
+                let Some(sg) = router.inboxes[v].pop_back() else { break };
+                router.inboxes[d].push_back(sg);
+                steal_budget -= 1;
+                stolen += 1;
+            }
             continue;
         };
+        let dev = &mut devices[d];
+        let fam = SimRouter::family_of(gid, cfg);
+        let shared = cfg.family_prefix_len();
         if cfg.prefix_cache && dev.cached.get(&gid) == Some(&version) {
             cached += cfg.prompt_len;
         } else {
-            paid += cfg.prompt_len;
+            // family-prefix hit covers the shared head of the prompt;
+            // serving this family displaces whatever the pool held
+            let shared_hit = cfg.prefix_cache
+                && matches!(dev.family_cached, Some((f, v)) if f == fam && v == version);
+            let hit = if shared_hit { shared } else { 0.0 };
+            cached += hit;
+            paid += cfg.prompt_len - hit;
             if cfg.prefix_cache {
                 dev.cached.insert(gid, version);
+                dev.family_cached = Some((fam, version));
             }
         }
         dev.slots.push(SimSeq {
+            gid,
             remaining: sampler.sample(rng),
             produced: 0.0,
             born_version: version,
@@ -411,32 +580,38 @@ fn refill_device(d: usize, dev: &mut GenDevice, router: &mut SimRouter,
     if paid > 0.0 {
         // prefill cost for the uncached prompt tokens only
         let t = prefill_s(&cfg.hw, &cfg.model, paid);
+        let dev = &mut devices[d];
         dev.resume_at = dev.resume_at.max(now) + t;
     }
-    RefillOutcome { paid_prompt_tokens: paid, cached_prompt_tokens: cached }
+    RefillOutcome { paid_prompt_tokens: paid, cached_prompt_tokens: cached, stolen }
 }
 
-/// One refill pass over the whole fleet — every replica serves its inbox
-/// (non-interruptible replicas waiting on a weight apply are skipped
-/// until they drain).
+/// One refill pass over the whole fleet — every alive replica serves its
+/// inbox (non-interruptible replicas waiting on a weight apply are
+/// skipped until they drain).
 #[allow(clippy::too_many_arguments)]
 fn refill_all(devices: &mut [GenDevice], router: &mut SimRouter, rng: &mut Rng,
               submitted: &mut u64, version: u64, now: f64, sampler: &LenSampler,
               cfg: &SimConfig, slots_per_dev: usize) -> RefillOutcome {
-    let mut out = RefillOutcome { paid_prompt_tokens: 0.0, cached_prompt_tokens: 0.0 };
-    for (d, dev) in devices.iter_mut().enumerate() {
-        if dev.pending_weights {
-            if dev.slots.is_empty() {
-                dev.pending_weights = false; // weights applied
+    let mut out =
+        RefillOutcome { paid_prompt_tokens: 0.0, cached_prompt_tokens: 0.0, stolen: 0 };
+    for d in 0..devices.len() {
+        if !router.alive[d] {
+            continue;
+        }
+        if devices[d].pending_weights {
+            if devices[d].slots.is_empty() {
+                devices[d].pending_weights = false; // weights applied
             } else {
                 continue; // draining
             }
         }
-        if dev.slots.len() < slots_per_dev {
-            let o = refill_device(d, dev, router, rng, submitted, version, now,
+        if devices[d].slots.len() < slots_per_dev {
+            let o = refill_device(d, devices, router, rng, submitted, version, now,
                                   sampler, cfg, slots_per_dev);
             out.paid_prompt_tokens += o.paid_prompt_tokens;
             out.cached_prompt_tokens += o.cached_prompt_tokens;
+            out.stolen += o.stolen;
         }
     }
     out
@@ -512,9 +687,13 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
             busy_s: 0.0,
             pending_weights: false,
             cached: HashMap::new(),
+            family_cached: None,
         })
         .collect();
     let mut router = SimRouter::new(n_gen, cfg.route_policy);
+    let mut stolen_requests = 0u64;
+    let mut failed_replicas = 0u64;
+    let mut requeued_requests = 0u64;
 
     // buffer of finished sequences: (len, born_version)
     let mut buffer: Vec<(f64, u64)> = Vec::new();
@@ -536,6 +715,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                        version, now, &sampler, cfg, slots_per_dev);
     prefill_tokens += o.paid_prompt_tokens;
     cached_prefill_tokens += o.cached_prompt_tokens;
+    stolen_requests += o.stolen;
 
     let max_iters = cfg.n_steps * cfg.batch_seqs * 4 + 10_000;
     let mut iters = 0;
@@ -589,6 +769,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                                    slots_per_dev);
                 prefill_tokens += o.paid_prompt_tokens;
                 cached_prefill_tokens += o.cached_prompt_tokens;
+                stolen_requests += o.stolen;
                 continue;
             }
             // all devices empty, all inboxes dry, trainer idle: gate
@@ -618,10 +799,31 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
             trainer_busy_until = None;
             version += 1;
             steps_done += 1;
+            // replica-failure sweep: the scheduled device leaves the fleet
+            // now — its in-flight decode is lost (the work, not the
+            // requests), and every queued/in-flight request requeues
+            // through normal placement onto the survivors; the gate is
+            // not re-charged (they were already submitted)
+            if let Some((fd, fv)) = cfg.fail_replica {
+                if version == fv && fd < n_gen && router.alive[fd] && n_gen > 1 {
+                    let orphans: Vec<u64> =
+                        devices[fd].slots.drain(..).map(|s| s.gid).collect();
+                    requeued_requests +=
+                        router.remove_replica(fd, orphans, &devices, version, cfg);
+                    failed_replicas += 1;
+                }
+            }
             for (d, dev) in devices.iter_mut().enumerate() {
+                if !router.alive[d] {
+                    continue;
+                }
                 // update_weights invalidation: every version-tagged cache
-                // entry is now stale and can never hit again
+                // entry is now stale and can never hit again — including
+                // the resident family prefix
                 dev.cached.retain(|_, v| *v >= version);
+                if matches!(dev.family_cached, Some((_, v)) if v < version) {
+                    dev.family_cached = None;
+                }
                 if cfg.interruptible {
                     if !dev.slots.is_empty() {
                         interrupts += 1;
@@ -657,6 +859,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                            version, now, &sampler, cfg, slots_per_dev);
         prefill_tokens += o.paid_prompt_tokens;
         cached_prefill_tokens += o.cached_prompt_tokens;
+        stolen_requests += o.stolen;
     }
 
     let busy: f64 = devices.iter().map(|d| d.busy_s).sum();
@@ -681,6 +884,9 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
             0.0
         },
         route_policy: cfg.route_policy.name(),
+        stolen_requests,
+        failed_replicas,
+        requeued_requests,
         timeline,
     }
 }
@@ -880,6 +1086,75 @@ mod tests {
             aff.effective_tps,
             fifo.effective_tps
         );
+    }
+
+    #[test]
+    fn probe_routing_beats_affinity_under_families_and_steals() {
+        // the ISSUE-3 acceptance bar at cluster scale: prompts fall into
+        // families sharing half their tokens, each replica's pool retains
+        // one family prefix, and dry replicas steal once the gate blocks.
+        // Probe placement (measured family warmth − load penalty)
+        // specializes replicas by family; family-blind affinity
+        // interleaves families on every replica and thrashes the resident
+        // prefix — strictly more prompt prefill computed.
+        let mut cfg = small_cfg(MODEL_1_5B);
+        cfg.n_steps = 16;
+        cfg.n_prompt_families = 4;
+        cfg.family_prefix_frac = 0.5;
+        cfg.route_steal_max = 2;
+        cfg.route_policy = RoutePolicy::Probe;
+        let probe = run_async(&cfg);
+        cfg.route_policy = RoutePolicy::Affinity;
+        let aff = run_async(&cfg);
+        assert_eq!(probe.route_policy, "probe");
+        assert!(
+            probe.prefill_tokens < aff.prefill_tokens,
+            "probe computed {} !< affinity {}",
+            probe.prefill_tokens,
+            aff.prefill_tokens
+        );
+        assert!(
+            probe.cache_hit_rate > aff.cache_hit_rate,
+            "probe hit {} !> affinity {}",
+            probe.cache_hit_rate,
+            aff.cache_hit_rate
+        );
+        assert!(
+            probe.effective_tps >= 0.99 * aff.effective_tps,
+            "probe must not cost throughput: {} vs {}",
+            probe.effective_tps,
+            aff.effective_tps
+        );
+    }
+
+    #[test]
+    fn replica_failure_requeues_without_loss() {
+        // membership sweep: a generation replica dies mid-run under both
+        // placement policies; its queued and in-flight requests requeue
+        // onto the survivors, the run still completes every PPO step, and
+        // the accounting stays conservative (nothing trained that was
+        // never generated)
+        for policy in [RoutePolicy::Affinity, RoutePolicy::Probe] {
+            let mut cfg = small_cfg(MODEL_1_5B);
+            cfg.n_steps = 6;
+            cfg.route_policy = policy;
+            cfg.route_steal_max = 2;
+            cfg.fail_replica = Some((0, 2));
+            let r = run_async(&cfg);
+            assert_eq!(r.steps, cfg.n_steps, "{}: run must survive the loss", policy.name());
+            assert_eq!(r.failed_replicas, 1);
+            assert!(
+                r.requeued_requests > 0,
+                "{}: the lost replica held work to requeue",
+                policy.name()
+            );
+            assert!(r.tokens_trained <= r.gen_tokens + 1e-6);
+            // and the baseline without failure is unperturbed
+            cfg.fail_replica = None;
+            let clean = run_async(&cfg);
+            assert_eq!(clean.failed_replicas, 0);
+            assert_eq!(clean.requeued_requests, 0);
+        }
     }
 
     #[test]
