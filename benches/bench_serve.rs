@@ -14,10 +14,12 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use areal::serve::{
-    BlockManager, Grow, RadixCache, Request, RoutePolicy, Router, RouterCfg, Scheduler,
-    SeqId, ServeCfg,
+    BlockManager, Control, Grow, Pulled, RadixCache, ReplicaTransport, Request,
+    RoutePolicy, Router, RouterCfg, Scheduler, SeqId, ServeCfg, SocketTransport,
+    SocketWorker,
 };
 use areal::sim::{self, SimConfig};
 use areal::util::json::Json;
@@ -216,6 +218,202 @@ fn run_routed_fleet(policy: RoutePolicy, replicas: usize, groups: usize, g: usiz
     (computed, cached, router.stats().stolen_reqs)
 }
 
+/// Drive the family workload over a *live* fleet of worker threads behind
+/// either transport backend (ISSUE 4): `local` workers pull/complete
+/// through the in-process router, `socket` workers connect a
+/// `SocketWorker` to their replica's `SocketTransport` endpoint and speak
+/// the frame protocol (probe snapshots piggybacked on every pull).
+/// Returns aggregate (computed, cached) prefill tokens and the wall time
+/// from first submission to full drain.
+fn run_transport_fleet(socket: bool, replicas: usize, groups: usize,
+                       g: usize) -> (u64, u64, f64) {
+    const BS: usize = 4;
+    const FAMILY_LEN: usize = 64;
+    const TAIL_LEN: usize = 4;
+    const GEN_LEN: usize = 4;
+    let prompt_len = FAMILY_LEN + TAIL_LEN;
+    let target_len = prompt_len + GEN_LEN;
+    let num_blocks = 2 * (target_len + 1).div_ceil(BS) + 2;
+
+    let cfg = RouterCfg::new(RoutePolicy::Probe, BS, 2).probe_ttl(1_000_000);
+    let (router, endpoints): (Arc<Router<()>>, Vec<Arc<SocketTransport<()>>>) =
+        if socket {
+            let endpoints: Vec<Arc<SocketTransport<()>>> = (0..replicas)
+                .map(|_| SocketTransport::listen("127.0.0.1:0", 1 << 20).unwrap())
+                .collect();
+            let transports: Vec<Arc<dyn ReplicaTransport<()>>> = endpoints
+                .iter()
+                .map(|t| Arc::clone(t) as Arc<dyn ReplicaTransport<()>>)
+                .collect();
+            let router = Arc::new(Router::new_with(transports, cfg));
+            for (w, t) in endpoints.iter().enumerate() {
+                let weak = Arc::downgrade(&router);
+                t.set_pull_fn(Box::new(move |epoch, max_n| match weak.upgrade() {
+                    Some(r) => r.pull_at(w, epoch, max_n),
+                    None => Pulled { reqs: Vec::new(), stolen: None },
+                }));
+            }
+            (router, endpoints)
+        } else {
+            (Arc::new(Router::new(replicas, cfg)), Vec::new())
+        };
+    let scheds: Vec<Arc<Mutex<Scheduler>>> = (0..replicas)
+        .map(|w| {
+            let s = Arc::new(Mutex::new(Scheduler::new(ServeCfg {
+                block_size: BS,
+                num_blocks,
+                max_seqs: 2,
+                prefix_cache: true,
+            })));
+            if !socket {
+                router.register_probe(w, s.clone());
+            }
+            s
+        })
+        .collect();
+
+    let mut handles = Vec::new();
+    for w in 0..replicas {
+        let sched = Arc::clone(&scheds[w]);
+        let router_w = Arc::clone(&router);
+        let addr = endpoints.get(w).map(|t| t.local_addr());
+        handles.push(std::thread::spawn(move || {
+            let mut client =
+                addr.map(|a| SocketWorker::<()>::connect(&a, 1 << 20).unwrap());
+            let mut targets: HashMap<SeqId, (usize, usize)> = HashMap::new();
+            let mut active: HashMap<SeqId, Vec<i32>> = HashMap::new();
+            let mut next_id: SeqId = 0;
+            let mut draining = false;
+            loop {
+                let cap = {
+                    let s = sched.lock().unwrap();
+                    4usize.saturating_sub(s.running_len() + s.waiting_len())
+                };
+                let reqs: Vec<Request<()>> = match &mut client {
+                    Some(c) => {
+                        let snap = sched.lock().unwrap().probe_snapshot();
+                        match c.pull(cap, Some(&snap)) {
+                            Ok(p) => {
+                                if p.fenced {
+                                    break;
+                                }
+                                if p.ctrl.iter().any(|x| *x == Control::Drain) {
+                                    draining = true;
+                                }
+                                p.reqs
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    None => {
+                        for x in router_w.take_control(w) {
+                            if x == Control::Drain {
+                                draining = true;
+                            }
+                        }
+                        router_w.pull(w, cap).reqs
+                    }
+                };
+                let idle = reqs.is_empty();
+                let mut finished: Vec<usize> = Vec::new();
+                {
+                    let mut s = sched.lock().unwrap();
+                    for q in reqs {
+                        let plen = q.tokens.len();
+                        assert!(s.submit(next_id, q.tokens));
+                        targets.insert(next_id, (target_len.max(plen + 1), plen));
+                        next_id += 1;
+                    }
+                    for a in s.schedule() {
+                        s.note_prefilled(a.id, &a.tokens);
+                        active.insert(a.id, a.tokens);
+                    }
+                    let ids: Vec<SeqId> = active.keys().copied().collect();
+                    for id in ids {
+                        let Some(mut t) = active.remove(&id) else { continue };
+                        t.push((id % 41) as i32 + 3);
+                        loop {
+                            match s.grow_to(id, t.len()) {
+                                Grow::Ok => break,
+                                Grow::Preempt(v) => {
+                                    let vt = active.remove(&v).expect("victim active");
+                                    s.preempt(v, &vt, vt.len());
+                                }
+                                Grow::Fail => panic!("pool too small"),
+                            }
+                        }
+                        let (target, plen) = targets[&id];
+                        if t.len() >= target {
+                            s.finish(id, &t, t.len());
+                            finished.push(plen);
+                        } else {
+                            active.insert(id, t);
+                        }
+                    }
+                }
+                for plen in finished {
+                    match &mut client {
+                        Some(c) => {
+                            let _ = c.complete(plen);
+                        }
+                        None => router_w.complete(w, plen),
+                    }
+                }
+                if idle
+                    && active.is_empty()
+                    && sched.lock().unwrap().waiting_len() == 0
+                {
+                    if draining {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            if let Some(mut c) = client {
+                c.bye();
+            }
+        }));
+    }
+
+    let t0 = Instant::now();
+    let n_families = replicas as u64;
+    let mut rng = Rng::new(0xbead);
+    for gid in 0..groups as u64 {
+        let family = rng.below(n_families);
+        let mut tokens: Vec<i32> = (0..FAMILY_LEN)
+            .map(|i| (family as i32 * 13 + i as i32) % 43 + 3)
+            .collect();
+        tokens.extend((0..TAIL_LEN).map(|i| (gid as i32 * 29 + i as i32) % 89 + 3));
+        for _ in 0..g {
+            router.submit(Request { group: gid, tokens: tokens.clone(), payload: () });
+        }
+    }
+    // drained = every request pulled AND its completion reported back
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while router.queued_total() > 0
+        || (0..replicas).any(|w| router.outstanding_tokens(w) > 0)
+    {
+        assert!(Instant::now() < deadline, "transport fleet stalled");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    router.broadcast(Control::Drain);
+    for h in handles {
+        h.join().unwrap();
+    }
+    for e in &endpoints {
+        e.shutdown();
+    }
+    let mut computed = 0u64;
+    let mut cached = 0u64;
+    for s in &scheds {
+        let s = s.lock().unwrap();
+        computed += s.prefill_tokens_computed;
+        cached += s.prefill_tokens_cached;
+    }
+    (computed, cached, wall)
+}
+
 fn main() {
     let mut records: Vec<Json> = Vec::new();
     println!("== GRPO group-sampling workload: radix prefix cache vs none ==");
@@ -280,6 +478,38 @@ fn main() {
             aff_computed,
             aff_hit * 100.0,
             fifo_computed
+        );
+    }
+
+    println!("\n== transport sweep: local vs socket replica delivery (probe, W=2) ==");
+    println!("   (same family workload over live worker threads; socket workers");
+    println!("    speak length-prefixed JSON frames to per-replica endpoints)");
+    {
+        let mut walls = Vec::new();
+        for (name, socket) in [("local", false), ("socket", true)] {
+            let (computed, cached, wall) = run_transport_fleet(socket, 2, 24, 4);
+            let hit = cached as f64 / (cached + computed).max(1) as f64;
+            println!(
+                "  {name:>6}: prefill computed {computed:>6}  hit {:4.1}%  \
+                 end-to-end {:7.1} ms",
+                hit * 100.0,
+                wall * 1e3
+            );
+            walls.push(wall);
+            records.push(Json::obj(vec![
+                ("name", Json::str("transport")),
+                ("backend", Json::str(name)),
+                ("replicas", Json::num(2.0)),
+                ("group_size", Json::num(4.0)),
+                ("computed_tokens", Json::num(computed as f64)),
+                ("cached_tokens", Json::num(cached as f64)),
+                ("hit_rate", Json::num(hit)),
+                ("wall_s", Json::num(wall)),
+            ]));
+        }
+        println!(
+            "  socket/local wall ratio: {:.2}x (loopback frame overhead)",
+            walls[1] / walls[0].max(1e-9)
         );
     }
 

@@ -39,6 +39,33 @@ impl Mode {
     }
 }
 
+/// Replica transport backend for the rollout plane (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// in-process mutex inboxes (the single-process default)
+    Local,
+    /// per-replica loopback sockets: workers serve over length-prefixed
+    /// JSON frames (the multi-node deployment shape, exercised in-process)
+    Socket,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        Ok(match s {
+            "local" => TransportKind::Local,
+            "socket" => TransportKind::Socket,
+            other => bail!("unknown replica_transport '{other}' (local|socket)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
 /// Advantage baseline selection (paper §B.1 + Appendix C.4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BaselineCfg {
@@ -89,6 +116,22 @@ pub struct Config {
     /// `probe` routing: load penalty per outstanding token (score =
     /// cached_tokens − penalty × outstanding); higher spills load sooner
     pub route_probe_penalty: f64,
+    /// `probe` routing sampling TTL in microseconds: 0 probes every
+    /// replica scheduler live per submission; >0 scores from cached
+    /// snapshots at most this old (refreshed on worker pulls), so large
+    /// fleets are never serialized on probe locks
+    pub route_probe_ttl_us: u64,
+    /// replica delivery backend: `local` (in-process inboxes) or `socket`
+    /// (per-replica loopback sockets, the multi-node shape)
+    pub replica_transport: TransportKind,
+    /// socket transport bind address (port 0 = ephemeral per replica)
+    pub socket_addr: String,
+    /// socket transport max frame size in bytes
+    pub socket_max_frame: usize,
+    /// supervised auto-restarts per rollout worker: an erroring worker is
+    /// re-added through `add_replica` behind the epoch fence this many
+    /// times before its failure is final (0 = no restart)
+    pub replica_restarts: usize,
 
     // rollout
     pub task: String,
@@ -143,6 +186,11 @@ impl Default for Config {
             route_policy: RoutePolicy::Probe,
             route_steal_max: 4,
             route_probe_penalty: 0.05,
+            route_probe_ttl_us: 500,
+            replica_transport: TransportKind::Local,
+            socket_addr: "127.0.0.1:0".into(),
+            socket_max_frame: 1 << 20,
+            replica_restarts: 0,
             task: "math".into(),
             level_lo: 1,
             level_hi: 3,
@@ -222,6 +270,14 @@ impl Config {
             }
             "route_steal_max" => self.route_steal_max = u(val)?,
             "route_probe_penalty" => self.route_probe_penalty = f(val)?,
+            "route_probe_ttl_us" => {
+                self.route_probe_ttl_us =
+                    val.parse().with_context(|| format!("bad u64 for {key}: {val}"))?
+            }
+            "replica_transport" => self.replica_transport = TransportKind::parse(val)?,
+            "socket_addr" => self.socket_addr = val.to_string(),
+            "socket_max_frame" => self.socket_max_frame = u(val)?,
+            "replica_restarts" => self.replica_restarts = u(val)?,
             "task" => self.task = val.to_string(),
             "level_lo" => self.level_lo = u(val)?,
             "level_hi" => self.level_hi = u(val)?,
@@ -262,6 +318,25 @@ impl Config {
         }
         if self.level_lo > self.level_hi {
             bail!("level_lo > level_hi");
+        }
+        // a socket frame must hold a max-length request (tokens serialize
+        // to a handful of bytes each); far below that is a misconfiguration
+        if self.socket_max_frame < 4096 {
+            bail!("socket_max_frame ({}) must be >= 4096", self.socket_max_frame);
+        }
+        // every replica binds its own endpoint: a fixed port can only
+        // serve one worker — the second bind would fail with AddrInUse
+        if self.replica_transport == TransportKind::Socket
+            && self.n_rollout_workers > 1
+            && !self.socket_addr.ends_with(":0")
+        {
+            bail!(
+                "socket_addr '{}' pins a port but {} rollout workers each \
+                 bind their own endpoint — use an ephemeral port (e.g. \
+                 127.0.0.1:0) or a single worker",
+                self.socket_addr,
+                self.n_rollout_workers
+            );
         }
         // whole GRPO groups are reserved atomically against the Eq. 3 gate
         // (⌊i/B⌋ ≤ v + η for every reserved index): a group larger than
@@ -384,6 +459,42 @@ mod tests {
             RoutePolicy::Affinity
         );
         assert!(Config::load(None, &["route_policy=bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn transport_keys_apply() {
+        let cfg = Config::load(
+            None,
+            &["replica_transport=socket".into(), "socket_addr=127.0.0.1:7777".into(),
+              "workers=1".into(), "socket_max_frame=65536".into(),
+              "route_probe_ttl_us=2000".into(), "replica_restarts=2".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.replica_transport, TransportKind::Socket);
+        assert_eq!(cfg.socket_addr, "127.0.0.1:7777");
+        assert_eq!(cfg.socket_max_frame, 65536);
+        assert_eq!(cfg.route_probe_ttl_us, 2000);
+        assert_eq!(cfg.replica_restarts, 2);
+        // defaults: local transport, sampled probing, no restarts
+        let d = Config::default();
+        assert_eq!(d.replica_transport, TransportKind::Local);
+        assert_eq!(d.route_probe_ttl_us, 500);
+        assert_eq!(d.replica_restarts, 0);
+        assert!(Config::load(None, &["replica_transport=carrier-pigeon".into()]).is_err());
+        assert!(Config::load(None, &["socket_max_frame=16".into()]).is_err());
+        // a pinned port cannot serve multiple per-replica endpoints
+        assert!(Config::load(
+            None,
+            &["replica_transport=socket".into(), "socket_addr=127.0.0.1:7777".into(),
+              "workers=2".into()]
+        )
+        .is_err());
+        // the ephemeral default is fine at any fleet size
+        assert!(Config::load(
+            None,
+            &["replica_transport=socket".into(), "workers=4".into()]
+        )
+        .is_ok());
     }
 
     #[test]

@@ -195,6 +195,14 @@ impl GenEngine {
         Arc::clone(&self.serve) as Arc<dyn ReplicaProbe>
     }
 
+    /// Compact measured-state snapshot of this replica (cached prefixes +
+    /// outstanding load). A socket-linked worker ships this with every
+    /// pull so the remote router's `probe` policy sees fresh state without
+    /// a probe round-trip (DESIGN.md §6).
+    pub fn probe_snapshot(&self) -> crate::serve::ProbeSnapshot {
+        self.serve.lock().unwrap().probe_snapshot()
+    }
+
     /// The paper's `update_weights`: swap parameters; any in-flight
     /// generation is interrupted (its KV will be rebuilt at the next
     /// prefill) and stale-version cache blocks are invalidated. Returns how

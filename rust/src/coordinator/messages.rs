@@ -20,6 +20,30 @@ pub type GenRouter = crate::serve::Router<Prompt>;
 /// place).
 pub use crate::serve::ReplicaProbe;
 
+/// `Prompt` over the socket transport: the request payload a remote
+/// rollout worker needs to rebuild trajectories and salvage requests —
+/// the full `Prompt` travels with its request frame.
+impl crate::serve::Wire for Prompt {
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("text", Json::str(&self.text)),
+            ("meta", Json::str(&self.meta)),
+            ("level", Json::num(self.level as f64)),
+            ("group", Json::num(self.group as f64)),
+        ])
+    }
+
+    fn from_json(j: &crate::util::json::Json) -> Option<Prompt> {
+        Some(Prompt {
+            text: j.get_str("text")?.to_string(),
+            meta: j.get_str("meta")?.to_string(),
+            level: j.get_usize("level")?,
+            group: j.get_f64("group")? as u64,
+        })
+    }
+}
+
 /// A completed rollout: one prompt + one sampled response, with everything
 /// the trainer needs to build the decoupled-PPO minibatch.
 #[derive(Debug, Clone)]
@@ -106,6 +130,17 @@ mod tests {
             truncated: false,
             worker: 0,
         }
+    }
+
+    #[test]
+    fn prompt_wire_roundtrip() {
+        use crate::serve::Wire;
+        let p = Prompt { text: "Q47+85=".into(), meta: "add:47,85".into(), level: 2, group: 9 };
+        let back = Prompt::from_json(&p.to_json()).expect("roundtrip");
+        assert_eq!(back.text, p.text);
+        assert_eq!(back.meta, p.meta);
+        assert_eq!(back.level, p.level);
+        assert_eq!(back.group, p.group);
     }
 
     #[test]

@@ -7,33 +7,68 @@
 //! stays off-thread (§6 overlap). The engine runs on the `serve/` paged-KV
 //! layer, so refills are sized by the scheduler's admission capacity and
 //! preemptions/cache hits surface in the trace.
+//!
+//! **Transport link (DESIGN.md §6).** The worker's *data plane* — pull,
+//! control, completion reports, probe state — goes through a
+//! [`WorkerLink`]: `Direct` talks to the in-process router exactly as
+//! before; `Socket` speaks the frame protocol to this replica's
+//! `SocketTransport` endpoint (probe snapshots piggyback on every pull,
+//! the membership epoch arrives with the hello handshake, and a fenced
+//! reply retires the worker). The *supervision plane* — probe
+//! registration, retirement, salvage resubmission — always goes through
+//! the shared router handle: transports abstract delivery, not failure
+//! ownership.
+//!
+//! **Supervised respawn.** [`run_supervised_rollout_worker`] wraps worker
+//! lives in [`supervise_replica`]: an erroring life retires its slot and
+//! salvages its requests (as every life must), then the supervisor
+//! re-joins the fleet through `add_replica` — the epoch fence makes the
+//! revived slot safe — and serves a fresh life, up to the configured
+//! restart budget.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::reward::{RewardRequest, RewardService};
 use crate::runtime::Engine;
-use crate::serve::{Control, ServeCfg};
+use crate::serve::{Control, ProbeSnapshot, ServeCfg, SocketWorker};
 
 use super::buffer::ReplayBuffer;
 use super::gen_engine::GenEngine;
-use super::messages::GenRouter;
+use super::messages::{GenRequest, GenRouter};
 use super::param_server::ParamServer;
 use super::trace::{Event, Trace};
 
 /// Everything a rollout worker shares with the rest of the system.
+#[derive(Clone)]
 pub struct RolloutShared {
     pub server: Arc<ParamServer>,
     pub buffer: Arc<ReplayBuffer>,
     pub reward: Arc<RewardService>,
     pub router: Arc<GenRouter>,
     pub stop: Arc<AtomicBool>,
+    /// raised by the system immediately before the one-shot Drain
+    /// broadcast: supervisors must not respawn a worker into a draining
+    /// system (the respawned life's fresh inbox would never hear a
+    /// second Drain and the shutdown join would hang forever)
+    pub draining: Arc<AtomicBool>,
     pub trace: Arc<Trace>,
     /// completion tokens generated across all workers (gen throughput)
     pub gen_tokens: Arc<AtomicU64>,
+}
+
+/// How this worker reaches the dispatch plane (see module docs).
+#[derive(Debug, Clone)]
+pub enum WorkerLink {
+    /// in-process: pull/control/complete through the shared router handle
+    Direct,
+    /// socket: frame protocol against `addrs[replica]` (one endpoint per
+    /// slot, so a supervised respawn onto a revived slot reconnects to
+    /// that slot's endpoint)
+    Socket { addrs: Arc<Vec<String>>, max_frame: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -44,35 +79,210 @@ pub struct RolloutCfg {
     pub refill_fraction: f64,
     /// serving-layer configuration (KV block budget, prefix cache)
     pub serve: Option<ServeCfg>,
+    /// data-plane transport to this worker's replica endpoint
+    pub link: WorkerLink,
 }
 
-/// Body of one rollout worker thread.
+/// The worker's data-plane handle, one per life.
+enum Plane {
+    Direct {
+        /// membership epoch captured at startup; if this slot is ever
+        /// removed and revived for a successor, our pulls fence out
+        epoch: u64,
+    },
+    Socket {
+        client: SocketWorker<crate::tasks::Prompt>,
+        /// control that arrived piggybacked on a refill pull, consumed by
+        /// the next control sweep
+        pending_ctrl: Vec<Control>,
+        /// iterations since the last dedicated control poll (the wire is
+        /// only polled every [`CTRL_POLL_EVERY`] sweeps — refill pulls
+        /// already carry control, so the decode hot loop does not pay a
+        /// round-trip per chunk)
+        ctrl_tick: u32,
+    },
+}
+
+/// Socket control-poll cadence, in serve-loop iterations. Refill pulls
+/// piggyback control anyway; this bounds how long a fully-busy,
+/// never-refilling worker can go without hearing a Drain/UpdateWeights.
+const CTRL_POLL_EVERY: u32 = 8;
+
+impl Plane {
+    fn epoch(&self) -> u64 {
+        match self {
+            Plane::Direct { epoch } => *epoch,
+            Plane::Socket { client, .. } => client.epoch(),
+        }
+    }
+
+    /// Drain pending control. The direct link drains epoch-fenced (a
+    /// stale life must not eat its successor's Drain); the socket link
+    /// drains what refill pulls piggybacked and polls the wire with a
+    /// zero-width, probe-less pull only every [`CTRL_POLL_EVERY`] sweeps,
+    /// so the decode hot loop pays neither a radix-cache walk nor a
+    /// round-trip per iteration.
+    fn take_control(&mut self, shared: &RolloutShared,
+                    worker_id: usize) -> Result<Vec<Control>> {
+        match self {
+            Plane::Direct { epoch } => {
+                Ok(shared.router.take_control_at(worker_id, *epoch))
+            }
+            Plane::Socket { client, pending_ctrl, ctrl_tick } => {
+                let mut out: Vec<Control> = pending_ctrl.drain(..).collect();
+                *ctrl_tick += 1;
+                if *ctrl_tick >= CTRL_POLL_EVERY {
+                    *ctrl_tick = 0;
+                    let p = client.pull(0, None)?;
+                    if p.fenced {
+                        bail!(
+                            "replica {worker_id} fenced by the transport (slot removed)"
+                        );
+                    }
+                    out.extend(p.ctrl);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Pull up to `max_n` requests; returns `(requests, stolen)`.
+    fn pull(&mut self, shared: &RolloutShared, worker_id: usize, max_n: usize,
+            snap: impl FnOnce() -> ProbeSnapshot)
+        -> Result<(Vec<GenRequest>, Option<(usize, usize)>)> {
+        match self {
+            Plane::Direct { epoch } => {
+                let p = shared.router.pull_at(worker_id, *epoch, max_n);
+                Ok((p.reqs, p.stolen))
+            }
+            Plane::Socket { client, pending_ctrl, .. } => {
+                let p = client.pull(max_n, Some(&snap()))?;
+                if p.fenced {
+                    bail!("replica {worker_id} fenced by the transport (slot removed)");
+                }
+                pending_ctrl.extend(p.ctrl);
+                Ok((p.reqs, p.stolen))
+            }
+        }
+    }
+
+    /// Release the load charge for a served request.
+    fn complete(&mut self, shared: &RolloutShared, worker_id: usize,
+                tokens: usize) -> Result<()> {
+        match self {
+            Plane::Direct { .. } => {
+                shared.router.complete(worker_id, tokens);
+                Ok(())
+            }
+            Plane::Socket { client, .. } => client.complete(tokens),
+        }
+    }
+
+    /// Clean goodbye (socket only): a close after this is not a failure,
+    /// so no disconnect salvage fires.
+    fn bye(&mut self) {
+        if let Plane::Socket { client, .. } = self {
+            client.bye();
+        }
+    }
+}
+
+/// One worker life: link up, announce, serve until drain/stop/error.
+/// `life_epoch` reports the membership epoch this life served under, so
+/// the caller's failure path can retire exactly this life's slot tenancy
+/// (`Router::remove_replica_at`) and never a successor's.
+fn worker_life(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
+               cfg: &RolloutCfg, life_epoch: &mut u64) -> Result<()> {
+    let mut plane = match &cfg.link {
+        WorkerLink::Direct => {
+            // expose this replica's measured cache/load state to the
+            // router's probe policy
+            shared.router.register_probe(worker_id, gen.probe());
+            Plane::Direct { epoch: shared.router.epoch(worker_id) }
+        }
+        WorkerLink::Socket { addrs, max_frame } => {
+            let addr = addrs.get(worker_id).with_context(|| {
+                format!("no socket endpoint for replica {worker_id}")
+            })?;
+            // measured state piggybacks on every pull; the epoch arrives
+            // with the hello (reconnect-aware fencing)
+            let client = SocketWorker::connect(addr, *max_frame)?;
+            // start at the poll threshold so the first control sweep
+            // hears any already-broadcast Drain/UpdateWeights immediately
+            Plane::Socket {
+                client,
+                pending_ctrl: Vec::new(),
+                ctrl_tick: CTRL_POLL_EVERY,
+            }
+        }
+    };
+    *life_epoch = plane.epoch();
+    shared.trace.log(Event::ReplicaUp { replica: worker_id, epoch: plane.epoch() });
+    // a panic inside the loop is a replica loss like any other error —
+    // catch it so the caller's failure path still runs (salvage only
+    // touches the engine's plain request maps, which stay structurally
+    // sound)
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        serve_loop(worker_id, gen, shared, cfg, &mut plane)
+    }))
+    .unwrap_or_else(|_| Err(anyhow::anyhow!("rollout worker {worker_id} panicked")));
+    if r.is_ok() {
+        plane.bye();
+    }
+    r
+}
+
+/// Unwind backstop for one worker life: a panic that escapes
+/// [`run_rollout_worker`] entirely (engine construction, the failure path
+/// itself) still retires exactly this life's slot tenancy — epoch-fenced,
+/// so it can never take down a successor — and a stranded-but-alive inbox
+/// can never keep attracting requests nobody serves. Disarmed on every
+/// normal return (Ok and handled-Err alike).
+struct LifeGuard<'a> {
+    shared: &'a RolloutShared,
+    slot: usize,
+    epoch: u64,
+    armed: bool,
+}
+
+impl Drop for LifeGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        if let Some(requeued) = self.shared.router.remove_replica_at(self.slot, self.epoch)
+        {
+            self.shared.trace.log(Event::ReplicaDown { replica: self.slot, requeued });
+        }
+    }
+}
+
+/// Body of one rollout worker life.
 pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                           shared: RolloutShared, cfg: RolloutCfg, seed: u64)
     -> Result<()> {
+    // if the life dies before linking up, it served (at most) the slot's
+    // current epoch — a removal fenced there is still exactly ours
+    let mut life_epoch = shared.router.epoch(worker_id);
+    let mut guard = LifeGuard {
+        shared: &shared,
+        slot: worker_id,
+        epoch: life_epoch,
+        armed: true,
+    };
     let params = shared.server.get();
     let mut gen = GenEngine::with_serve(engine, params, worker_id, cfg.temperature,
                                         seed, cfg.serve.clone());
-    // expose this replica's measured cache/load state to the router's
-    // probe policy, and capture our membership epoch: if this slot is ever
-    // removed and revived for a successor, our pulls fence out
-    let epoch = shared.router.epoch(worker_id);
-    shared.router.register_probe(worker_id, gen.probe());
-    shared.trace.log(Event::ReplicaUp { replica: worker_id, epoch });
-    // a panic inside the loop is a replica loss like any other error —
-    // catch it so the failure path below still runs (salvage only touches
-    // the engine's plain request maps, which stay structurally sound)
-    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        serve_loop(worker_id, &mut gen, &shared, &cfg, epoch)
-    }))
-    .unwrap_or_else(|_| Err(anyhow::anyhow!("rollout worker {worker_id} panicked")));
+    let res = worker_life(worker_id, &mut gen, &shared, &cfg, &mut life_epoch);
+    guard.epoch = life_epoch;
     if res.is_err() {
         // this replica is done for: retire it FIRST so nothing routes back
         // here, then hand back every request the engine still holds —
-        // remove_replica requeues the inbox, and the salvage below covers
-        // the in-flight/parked/pending requests, so no GRPO group is left
-        // partial by the loss.
-        match shared.router.remove_replica(worker_id) {
+        // the fenced removal salvages the inbox (and refuses to act if the
+        // slot already moved past our epoch), and the engine salvage below
+        // covers the in-flight/parked/pending requests, so no GRPO group
+        // is left partial by the loss.
+        match shared.router.remove_replica_at(worker_id, life_epoch) {
             Some(inbox_requeued) => {
                 let mut requeued = inbox_requeued;
                 for q in gen.salvage_requests() {
@@ -82,13 +292,28 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                 shared.trace.log(Event::ReplicaDown { replica: worker_id, requeued });
             }
             None => {
-                // we are the last replica: nothing is left to serve any
-                // request — close the buffer so the trainer fails fast on
-                // a short batch instead of blocking in pop_batch forever
-                shared.buffer.close();
+                // either the removal was refused because we are the last
+                // alive replica (our inbox survives for a supervised
+                // respawn to serve), or someone else already retired this
+                // slot tenancy (socket disconnect supervision, a
+                // concurrent removal) and requeued its inbox with a
+                // ReplicaDown of its own. In BOTH cases the engine-held
+                // (pulled/parked/in-flight) requests exist nowhere else:
+                // hand them back through the router — last-alive routing
+                // lands them in our own still-open inbox — so no GRPO
+                // group is left partial. The buffer-close decision
+                // (trainer fail-fast once nothing will EVER serve again)
+                // belongs to the supervisor, which knows whether this
+                // failure is final.
+                for q in gen.salvage_requests() {
+                    shared.router.submit(q);
+                }
             }
         }
     }
+    // every normal exit (Ok and the handled Err above) disarms the
+    // unwind backstop; only an escaping panic leaves it armed
+    guard.armed = false;
     res
 }
 
@@ -96,7 +321,7 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
 /// [`run_rollout_worker`], which retires the replica and salvages its
 /// remaining requests.
 fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
-              cfg: &RolloutCfg, epoch: u64) -> Result<()> {
+              cfg: &RolloutCfg, plane: &mut Plane) -> Result<()> {
     let b = gen.n_slots();
     // weight sync deferred until drain completes (non-interruptible mode)
     let mut pending_sync = false;
@@ -108,7 +333,7 @@ fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
 
     while !shared.stop.load(Ordering::Acquire) {
         // -- control plane: update_weights fan-out + drain ---------------
-        for c in shared.router.take_control(worker_id) {
+        for c in plane.take_control(shared, worker_id)? {
             match c {
                 Control::UpdateWeights(v) => announced = announced.max(v),
                 Control::Drain => draining = true,
@@ -154,12 +379,13 @@ fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
                 || (empties as f64) >= (b as f64) * cfg.refill_fraction);
         if refill_wave {
             if capacity > 0 && !draining {
-                let pulled = shared.router.pull_at(worker_id, epoch, capacity);
-                if let Some((victim, reqs)) = pulled.stolen {
-                    shared.trace.log(Event::Steal { thief: worker_id, victim, reqs });
+                let (reqs, stolen) =
+                    plane.pull(shared, worker_id, capacity, || gen.probe_snapshot())?;
+                if let Some((victim, n)) = stolen {
+                    shared.trace.log(Event::Steal { thief: worker_id, victim, reqs: n });
                 }
-                if !pulled.reqs.is_empty() {
-                    let n = gen.fill_requests(pulled.reqs)?;
+                if !reqs.is_empty() {
+                    let n = gen.fill_requests(reqs)?;
                     shared.trace.log(Event::GenStart { worker: worker_id, slots: n });
                 }
             }
@@ -191,10 +417,16 @@ fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
                 });
                 seen_preemptions = preemptions;
             }
+            let mut released = 0usize;
             for traj in finished {
-                // release the router's load charge for the served request
-                shared.router.complete(worker_id, traj.prompt_len);
+                released += traj.prompt_len;
                 submit_for_reward(shared, gen, traj);
+            }
+            if released > 0 {
+                // one batched load-charge release per decode chunk: a
+                // socket round-trip per trajectory would serialize dead
+                // time into the decode hot loop
+                plane.complete(shared, worker_id, released)?;
             }
         } else if gen.all_empty() && gen.waiting() == 0 {
             if draining {
@@ -209,6 +441,103 @@ fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
         }
     }
     Ok(())
+}
+
+/// Supervised replica lifecycle (ISSUE 4 satellite): run worker lives
+/// until one exits cleanly; when a life errors — after it has retired its
+/// slot and salvaged its requests, which is every life's failure contract
+/// — re-join the fleet through `add_replica` (the epoch fence makes the
+/// revived slot safe for a successor) and run a fresh life, up to
+/// `max_restarts` times. Returns the final life's error when the restart
+/// budget is exhausted or the system is stopping/draining (the Drain
+/// broadcast is one-shot: a life spawned after it would idle forever and
+/// hang the shutdown join).
+pub fn supervise_replica(router: &GenRouter, stop: &AtomicBool,
+                         draining: &AtomicBool, slot0: usize,
+                         max_restarts: usize,
+                         mut life: impl FnMut(usize) -> Result<()>) -> Result<()> {
+    let mut slot = slot0;
+    let mut restarts = 0usize;
+    loop {
+        match life(slot) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                if restarts >= max_restarts
+                    || stop.load(Ordering::Acquire)
+                    || draining.load(Ordering::Acquire)
+                {
+                    return Err(e);
+                }
+                restarts += 1;
+                if !router.is_alive(slot) {
+                    // the failed life left the fleet; rejoin behind the
+                    // epoch fence (lowest dead slot, usually our own)
+                    let (s, epoch) = router.add_replica();
+                    slot = s;
+                    // re-validate AFTER reopening: the one-shot Drain
+                    // broadcast may have run between the check above and
+                    // the reopen — it skipped our then-closed slot, so a
+                    // life started now would never hear it. Retire the
+                    // fresh tenancy and give up instead.
+                    if draining.load(Ordering::Acquire) || stop.load(Ordering::Acquire)
+                    {
+                        let _ = router.remove_replica_at(slot, epoch);
+                        return Err(e);
+                    }
+                }
+                // else: the life died without its slot ever being removed
+                // (last-alive refusal, a link-up failure) — serve the same
+                // still-alive slot again instead of growing the fleet and
+                // stranding an inbox nobody owns
+            }
+        }
+    }
+}
+
+/// [`run_rollout_worker`] under [`supervise_replica`]: each life gets a
+/// fresh engine and a life-salted seed; `Event::ReplicaRestart` marks
+/// every respawn (and the new life logs `Event::ReplicaUp` again). When
+/// the failure is final and our still-alive slot is the fleet's last,
+/// the supervisor closes the replay buffer so the trainer fails fast
+/// instead of blocking in `pop_batch` forever.
+pub fn run_supervised_rollout_worker(worker_id: usize, engine: Arc<Engine>,
+                                     shared: RolloutShared, cfg: RolloutCfg,
+                                     seed: u64, max_restarts: usize) -> Result<()> {
+    let router = Arc::clone(&shared.router);
+    let stop = Arc::clone(&shared.stop);
+    let draining = Arc::clone(&shared.draining);
+    let trace = Arc::clone(&shared.trace);
+    let buffer = Arc::clone(&shared.buffer);
+    let router_c = Arc::clone(&router);
+    let last_slot = std::cell::Cell::new(worker_id);
+    let mut life_n = 0usize;
+    let res = supervise_replica(&router, &stop, &draining, worker_id, max_restarts, {
+        let last_slot = &last_slot;
+        move |slot| {
+            last_slot.set(slot);
+            let life = life_n;
+            life_n += 1;
+            if life > 0 {
+                trace.log(Event::ReplicaRestart {
+                    replica: slot,
+                    epoch: router_c.epoch(slot),
+                    life,
+                });
+            }
+            // life 0 keeps the configured seed (bit-identical to
+            // unsupervised runs); respawns re-salt so a deterministic
+            // crash cannot loop
+            let s = seed ^ (life as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            run_rollout_worker(slot, Arc::clone(&engine), shared.clone(), cfg.clone(), s)
+        }
+    });
+    if res.is_err() && router.is_alive(last_slot.get()) && router.n_alive() == 1 {
+        // our final life died with its slot still alive (last-alive
+        // removal refused) and nothing else serves: nothing can ever fill
+        // a batch again, so fail the trainer fast
+        buffer.close();
+    }
+    res
 }
 
 /// Hand a finished trajectory to the reward service; the verification job
@@ -236,4 +565,117 @@ fn submit_for_reward(shared: &RolloutShared, gen: &GenEngine,
         trace.log(Event::RewardDone { worker, correct: resp.correct });
         buffer.push(traj);
     });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{Request, RoutePolicy, RouterCfg};
+    use crate::tasks::Prompt;
+
+    fn preq(group: u64, tokens: Vec<i32>) -> GenRequest {
+        Request {
+            group,
+            tokens,
+            payload: Prompt {
+                text: "Q".into(),
+                meta: "m".into(),
+                level: 1,
+                group,
+            },
+        }
+    }
+
+    #[test]
+    fn supervised_replica_restarts_behind_epoch_fence() {
+        // ISSUE 4 satellite: a crashing life retires its slot; the
+        // supervisor re-adds it through add_replica and the restarted
+        // life serves requests under the new epoch, with ReplicaUp fired
+        // again (here the test life logs it, as run_rollout_worker does)
+        let router: GenRouter =
+            GenRouter::new(2, RouterCfg::new(RoutePolicy::Affinity, 4, 0));
+        let stop = AtomicBool::new(false);
+        let trace = Trace::new(true);
+        for g in 0..4u64 {
+            router.submit(preq(g, vec![1, 2, 3, 4]));
+        }
+        let total = router.queued_total();
+        let draining = AtomicBool::new(false);
+        let mut lives = 0usize;
+        let mut served = 0usize;
+        let res = supervise_replica(&router, &stop, &draining, 0, 1, |slot| {
+            let epoch = router.epoch(slot);
+            trace.log(Event::ReplicaUp { replica: slot, epoch });
+            lives += 1;
+            if lives == 1 {
+                // the failure contract: a dying life retires itself (its
+                // inbox requeues onto the survivor), then errors
+                router.remove_replica(slot);
+                bail!("injected worker crash");
+            }
+            // restarted life: the revived slot serves fresh work under
+            // the bumped epoch (a distinct prefix routes here because the
+            // survivor carries all the requeued load)
+            assert_eq!(epoch, 2, "removal + revival bumps the epoch twice");
+            for g in 10..12u64 {
+                router.submit(preq(g, vec![50 + g as i32, 51, 52, 53]));
+            }
+            loop {
+                let p = router.pull_at(slot, epoch, 8);
+                if p.reqs.is_empty() {
+                    break;
+                }
+                served += p.reqs.len();
+            }
+            Ok(())
+        });
+        res.unwrap();
+        assert_eq!(lives, 2, "exactly one restart");
+        assert!(router.is_alive(0), "slot revived");
+        assert_eq!(router.epoch(0), 2);
+        assert!(served >= 2, "restarted replica served requests: {served}");
+        // zero requests lost across the crash: the original load moved to
+        // the survivor, nothing vanished
+        assert_eq!(router.queued(1), total, "crashed slot's inbox requeued");
+        assert_eq!(
+            trace.count(|e| matches!(e, Event::ReplicaUp { .. })),
+            2,
+            "ReplicaUp fires for the original life and the respawn"
+        );
+    }
+
+    #[test]
+    fn supervise_gives_up_after_restart_budget() {
+        let router: GenRouter =
+            GenRouter::new(2, RouterCfg::new(RoutePolicy::Affinity, 4, 0));
+        let stop = AtomicBool::new(false);
+        let draining = AtomicBool::new(false);
+        let mut lives = 0usize;
+        let res = supervise_replica(&router, &stop, &draining, 0, 2, |_slot| {
+            lives += 1;
+            bail!("always failing");
+        });
+        assert!(res.is_err());
+        assert_eq!(lives, 3, "initial life + 2 restarts");
+        // a stopping system never respawns
+        let stop = AtomicBool::new(true);
+        let mut lives = 0usize;
+        let res = supervise_replica(&router, &stop, &draining, 1, 5, |_slot| {
+            lives += 1;
+            bail!("failing during shutdown");
+        });
+        assert!(res.is_err());
+        assert_eq!(lives, 1, "no respawn once stop is raised");
+        // nor does a draining one: the Drain broadcast is one-shot, so a
+        // respawned life would idle forever and hang the shutdown join
+        let stop = AtomicBool::new(false);
+        let draining = AtomicBool::new(true);
+        let mut lives = 0usize;
+        let res = supervise_replica(&router, &stop, &draining, 1, 5, |_slot| {
+            lives += 1;
+            bail!("failing during drain");
+        });
+        assert!(res.is_err());
+        assert_eq!(lives, 1, "no respawn once draining is raised");
+    }
 }

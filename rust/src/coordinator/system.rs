@@ -19,10 +19,10 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::config::Config;
+use crate::config::{Config, TransportKind};
 use crate::reward::RewardService;
 use crate::runtime::{Engine, Manifest, ParamSet, TrainState};
-use crate::serve::{Control, RouterCfg, ServeCfg};
+use crate::serve::{Control, Pulled, ReplicaTransport, RouterCfg, ServeCfg, SocketTransport};
 use crate::tasks::{self, dataset::LevelMix, Dataset, SuiteResult};
 use crate::text::tokenizer::{Tokenizer, EOS};
 use crate::util::rng::Rng;
@@ -32,7 +32,7 @@ use super::controller::{run_controller, ControllerCfg};
 use super::evalgen;
 use super::gate::StalenessGate;
 use super::param_server::ParamServer;
-use super::rollout::{run_rollout_worker, RolloutCfg, RolloutShared};
+use super::rollout::{run_supervised_rollout_worker, RolloutCfg, RolloutShared, WorkerLink};
 use super::trace::{Event, Trace};
 use super::trainer::{Trainer, TrainerCfg};
 use super::messages::{GenRouter, StepMetrics};
@@ -45,9 +45,14 @@ use super::messages::{GenRouter, StepMetrics};
 /// drain entirely). Join errors are collected, not early-returned, so the
 /// stop flag is always raised and no thread outlives this call.
 fn drain_and_join(router: &GenRouter, buffer: &ReplayBuffer,
-                  stop: &AtomicBool,
+                  stop: &AtomicBool, draining: &AtomicBool,
                   handles: Vec<std::thread::JoinHandle<Result<()>>>,
                   controller: std::thread::JoinHandle<Result<()>>) -> Result<()> {
+    // raise the draining flag BEFORE the one-shot Drain broadcast: a
+    // worker that errors after this point must not be respawned by its
+    // supervisor — the respawned life's fresh inbox would never hear a
+    // second Drain and the joins below would hang forever
+    draining.store(true, Ordering::Release);
     router.broadcast(Control::Drain);
     buffer.close();
     let mut first_err: Option<anyhow::Error> = None;
@@ -70,31 +75,6 @@ fn drain_and_join(router: &GenRouter, buffer: &ReplayBuffer,
     match controller_res {
         Ok(r) => r,
         Err(_) => anyhow::bail!("controller thread panicked"),
-    }
-}
-
-/// Backstop drop guard for replica retirement. `run_rollout_worker`
-/// handles every expected failure itself (it catches panics, retires the
-/// replica, and salvages its in-flight requests), after which removal
-/// here returns `None` and the guard stays silent — the transition is
-/// traced exactly once. The guard only acts if an unwind escapes that
-/// handling entirely, so a stranded-but-alive inbox can never keep
-/// attracting requests nobody serves.
-struct ReplicaGuard {
-    router: Arc<GenRouter>,
-    trace: Arc<Trace>,
-    worker: usize,
-    armed: bool,
-}
-
-impl Drop for ReplicaGuard {
-    fn drop(&mut self) {
-        if !self.armed {
-            return;
-        }
-        if let Some(requeued) = self.router.remove_replica(self.worker) {
-            self.trace.log(Event::ReplicaDown { replica: self.worker, requeued });
-        }
     }
 }
 
@@ -214,6 +194,7 @@ impl System {
         // --- async topology ---------------------------------------------
         let buffer = Arc::new(ReplayBuffer::new());
         let stop = Arc::new(AtomicBool::new(false));
+        let draining = Arc::new(AtomicBool::new(false));
         let gen_tokens = Arc::new(AtomicU64::new(0));
         let task = tasks::task_by_name(&cfg.task).context("task")?;
         let reward = Arc::new(RewardService::new(Arc::from(task), cfg.reward_threads));
@@ -242,12 +223,86 @@ impl System {
         };
 
         // request-routed rollout plane: the router fingerprints prompts at
-        // the same block alignment the replicas' radix caches use
-        let router = Arc::new(GenRouter::new(
-            cfg.n_rollout_workers,
-            RouterCfg::new(cfg.route_policy, serve.block_size, cfg.route_steal_max)
-                .probe_penalty(cfg.route_probe_penalty),
-        ));
+        // the same block alignment the replicas' radix caches use. The
+        // replica delivery backend is config-selected (DESIGN.md §6):
+        // in-process inboxes, or per-replica loopback sockets with the
+        // workers as remote request servers.
+        let rcfg = RouterCfg::new(cfg.route_policy, serve.block_size, cfg.route_steal_max)
+            .probe_penalty(cfg.route_probe_penalty)
+            .probe_ttl(cfg.route_probe_ttl_us);
+        let (router, link) = match cfg.replica_transport {
+            TransportKind::Local => (
+                Arc::new(GenRouter::new(cfg.n_rollout_workers, rcfg)),
+                WorkerLink::Direct,
+            ),
+            TransportKind::Socket => {
+                // one max-length request must fit a single frame (tokens
+                // serialize to <= ~8 JSON bytes each, plus prompt text and
+                // envelope): an oversized single request could never be
+                // delivered and would livelock the fleet through
+                // remove/requeue/respawn
+                let worst = 16 * spec.config.max_seq + 2048;
+                if cfg.socket_max_frame < worst {
+                    anyhow::bail!(
+                        "socket_max_frame ({}) cannot carry one max_seq={} \
+                         request (~{} bytes needed)",
+                        cfg.socket_max_frame,
+                        spec.config.max_seq,
+                        worst
+                    );
+                }
+                let mut endpoints = Vec::new();
+                let mut addrs = Vec::new();
+                for _ in 0..cfg.n_rollout_workers {
+                    let t = SocketTransport::<crate::tasks::Prompt>::listen(
+                        &cfg.socket_addr,
+                        cfg.socket_max_frame,
+                    )
+                    .context("binding replica transport socket")?;
+                    addrs.push(t.local_addr());
+                    endpoints.push(t);
+                }
+                let transports: Vec<Arc<dyn ReplicaTransport<crate::tasks::Prompt>>> =
+                    endpoints
+                        .iter()
+                        .map(|t| Arc::clone(t) as Arc<dyn ReplicaTransport<_>>)
+                        .collect();
+                let router = Arc::new(GenRouter::new_with(transports, rcfg));
+                for (w, t) in endpoints.iter().enumerate() {
+                    // remote pulls go through the fleet path (stealing
+                    // included), exactly like a local worker's
+                    let weak = Arc::downgrade(&router);
+                    t.set_pull_fn(Box::new(move |epoch, max_n| match weak.upgrade() {
+                        Some(r) => r.pull_at(w, epoch, max_n),
+                        None => Pulled { reqs: Vec::new(), stolen: None },
+                    }));
+                    // a connection that drops without a clean bye retires
+                    // the replica through the standard salvage path — its
+                    // inbox requeues with zero lost requests — fenced by
+                    // the connection's epoch so a late disconnect can
+                    // never take down a successor on a revived slot
+                    let weak = Arc::downgrade(&router);
+                    let trace = Arc::clone(&self.trace);
+                    t.set_disconnect_fn(Box::new(move |epoch, orphans| {
+                        let Some(r) = weak.upgrade() else { return };
+                        trace.log(Event::SocketDisconnect { replica: w });
+                        if let Some(requeued) = r.remove_replica_at(w, epoch) {
+                            trace.log(Event::ReplicaDown { replica: w, requeued });
+                        }
+                        for q in orphans {
+                            r.submit(q);
+                        }
+                    }));
+                }
+                (
+                    router,
+                    WorkerLink::Socket {
+                        addrs: Arc::new(addrs),
+                        max_frame: cfg.socket_max_frame,
+                    },
+                )
+            }
+        };
 
         let t0 = Instant::now();
         let mut handles = Vec::new();
@@ -282,6 +337,7 @@ impl System {
                 reward: Arc::clone(&reward),
                 router: Arc::clone(&router),
                 stop: Arc::clone(&stop),
+                draining: Arc::clone(&draining),
                 trace: Arc::clone(&self.trace),
                 gen_tokens: Arc::clone(&gen_tokens),
             };
@@ -290,28 +346,21 @@ impl System {
                 temperature: cfg.temperature,
                 refill_fraction: cfg.refill_fraction,
                 serve: Some(serve.clone()),
+                link: link.clone(),
             };
             let engine = Arc::clone(&self.engine);
             let seed = cfg.seed ^ (w as u64 + 1).wrapping_mul(0xabcd1234);
-            let router_w = Arc::clone(&router);
-            let trace_w = Arc::clone(&self.trace);
+            let restarts = cfg.replica_restarts;
+            // no thread-level drop guard here: each worker *life* carries
+            // its own epoch-fenced unwind backstop (rollout::LifeGuard),
+            // which retires the slot that life actually served — a
+            // thread-level guard keyed on the original slot id could kill
+            // another worker's replica after supervised slot migration
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("rollout-{w}"))
                     .spawn(move || {
-                        // armed until a clean exit: Err returns AND panics
-                        // both retire the replica and requeue its inbox
-                        let mut guard = ReplicaGuard {
-                            router: router_w,
-                            trace: trace_w,
-                            worker: w,
-                            armed: true,
-                        };
-                        let res = run_rollout_worker(w, engine, shared, rcfg, seed);
-                        if res.is_ok() {
-                            guard.armed = false;
-                        }
-                        res
+                        run_supervised_rollout_worker(w, engine, shared, rcfg, seed, restarts)
                     })
                     .unwrap(),
             );
@@ -359,7 +408,7 @@ impl System {
         let gen_tokens_total = gen_tokens.load(Ordering::Relaxed);
 
         let join_res =
-            drain_and_join(&router, &buffer, &stop, handles, controller_handle);
+            drain_and_join(&router, &buffer, &stop, &draining, handles, controller_handle);
         // the root cause outranks secondary join noise in the report
         if let Some(e) = train_err {
             return Err(e);
@@ -477,7 +526,9 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30)); // let traffic flow
         // the trainer "failed" here: the error path must still shut the
         // whole topology down
-        drain_and_join(&router, &buffer, &stop, handles, controller).unwrap();
+        let draining = AtomicBool::new(false);
+        drain_and_join(&router, &buffer, &stop, &draining, handles, controller).unwrap();
         assert!(stop.load(Ordering::Acquire), "stop raised for the controller");
+        assert!(draining.load(Ordering::Acquire), "draining raised before the broadcast");
     }
 }

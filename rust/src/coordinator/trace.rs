@@ -34,6 +34,12 @@ pub enum Event {
     ReplicaDown { replica: usize, requeued: usize },
     /// replica slot joined (or rejoined) the fleet at membership `epoch`
     ReplicaUp { replica: usize, epoch: u64 },
+    /// supervised respawn: an erroring worker was re-added through
+    /// `add_replica` (life = how many restarts this worker has had)
+    ReplicaRestart { replica: usize, epoch: u64, life: usize },
+    /// a socket replica's connection dropped without a clean bye; the
+    /// disconnect supervision retires the slot via `remove_replica`
+    SocketDisconnect { replica: usize },
 }
 
 #[derive(Debug, Clone)]
@@ -114,6 +120,12 @@ impl Trace {
                 Event::ReplicaUp { replica, epoch } => {
                     ("replica_up", *replica, *epoch as i64, 0)
                 }
+                Event::ReplicaRestart { replica, epoch, life } => {
+                    ("replica_restart", *replica, *epoch as i64, *life as i64)
+                }
+                Event::SocketDisconnect { replica } => {
+                    ("socket_disconnect", *replica, 0, 0)
+                }
             };
             out.push_str(&format!("{:.6},{kind},{actor},{a},{b}\n", s.t));
         }
@@ -168,6 +180,16 @@ mod tests {
         let csv = tr.to_csv();
         assert!(csv.contains("replica_down,2,7,0"));
         assert!(csv.contains("replica_up,2,3,0"));
+    }
+
+    #[test]
+    fn transport_events_render() {
+        let tr = Trace::new(true);
+        tr.log(Event::ReplicaRestart { replica: 1, epoch: 4, life: 2 });
+        tr.log(Event::SocketDisconnect { replica: 3 });
+        let csv = tr.to_csv();
+        assert!(csv.contains("replica_restart,1,4,2"));
+        assert!(csv.contains("socket_disconnect,3,0,0"));
     }
 
     #[test]

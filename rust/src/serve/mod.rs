@@ -1,7 +1,7 @@
 //! `serve/` — the paged serving subsystem under the rollout workers
-//! (DESIGN.md §5).
+//! (DESIGN.md §5–§6).
 //!
-//! Three layers, engine-agnostic (token ids and lengths only):
+//! Five layers, engine-agnostic (token ids and lengths only):
 //!
 //! - [`blocks`]: fixed-size ref-counted KV blocks with copy-on-write and
 //!   per-block policy-version tags (the PagedAttention memory model);
@@ -11,31 +11,41 @@
 //! - [`scheduler`]: continuous batching with FIFO admission, growth on
 //!   block boundaries, preemption-on-OOM, and the paper's §4.1
 //!   `update_weights` invalidation of stale-version KV;
+//! - [`transport`] / [`socket`]: the replica delivery seam — per-replica
+//!   endpoints behind the [`ReplicaTransport`] trait, with the in-process
+//!   [`LocalTransport`] mutex inbox and the cross-process
+//!   [`SocketTransport`] (length-prefixed JSON frames over loopback TCP,
+//!   reconnect-aware epoch fencing, probe snapshots piggybacked on pull);
 //! - [`router`]: the request-routed dispatch plane over a dynamic fleet of
 //!   engine replicas — typed `generate` requests flow into epoch-tagged
-//!   per-replica inboxes chosen by a pluggable policy (`fifo` baseline,
-//!   sticky prefix-`affinity`, measured cache-`probe` default scoring
-//!   registered [`ReplicaProbe`]s), with bounded work-stealing that
+//!   per-replica endpoints chosen by a pluggable policy (`fifo` baseline,
+//!   sticky prefix-`affinity`, measured cache-`probe` default over live or
+//!   TTL-sampled [`ProbeSnapshot`]s), with bounded work-stealing that
 //!   re-points sticky ownership at the thief, an `add_replica` /
-//!   `remove_replica` membership lifecycle that requeues a lost replica's
+//!   `remove_replica` membership lifecycle that salvages a lost replica's
 //!   inbox with zero requests lost, and `update_weights`/drain control
 //!   fan-out through the same frontend.
 //!
 //! `coordinator::GenEngine` runs its slot batch on top of a [`Scheduler`];
 //! the controller submits through a [`Router`] and rollout workers serve
-//! their inboxes; `sim::run_async` models the same cache and routing
-//! policies to make the simulated figure comparisons cache-aware;
-//! `benches/bench_serve.rs` measures the prefill-token savings on a
-//! group-sampling workload and emits `BENCH_serve.json`.
+//! their inboxes directly or over a [`SocketWorker`]; `sim::run_async`
+//! models the same cache, routing, and transport-latency behavior to make
+//! the simulated figure comparisons cache- and topology-aware;
+//! `benches/bench_serve.rs` measures the prefill-token savings and the
+//! local-vs-socket transport overhead and emits `BENCH_serve.json`.
 
 pub mod blocks;
 pub mod radix;
 pub mod router;
 pub mod scheduler;
+pub mod socket;
+pub mod transport;
 
 pub use blocks::{BlockId, BlockManager};
 pub use radix::{InsertStats, PrefixMatch, RadixCache};
-pub use router::{
-    Control, Pulled, ReplicaProbe, Request, RoutePolicy, Router, RouterCfg, RouterStats,
-};
+pub use router::{Pulled, RoutePolicy, Router, RouterCfg, RouterStats};
 pub use scheduler::{Admitted, Grow, Scheduler, SeqId, ServeCfg, ServeStats};
+pub use socket::{PulledWire, SocketTransport, SocketWorker};
+pub use transport::{
+    Control, LocalTransport, ProbeSnapshot, ReplicaProbe, ReplicaTransport, Request, Wire,
+};

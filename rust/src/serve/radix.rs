@@ -434,6 +434,42 @@ impl RadixCache {
         released
     }
 
+    /// Rolling-FNV enumeration of every cached block boundary valid under
+    /// `version`: `(hash of token prefix, prefix token count)` pairs, one
+    /// per block along every cached path. The transport layer packs these
+    /// into a `ProbeSnapshot` so a router (local with probe sampling, or
+    /// remote over a socket) can answer `probe_prefix`-equivalent queries
+    /// without holding the owning scheduler's lock. Exactly mirrors
+    /// `walk_prefix`: descent stops at the first version mismatch, and a
+    /// match can end on any interior block boundary.
+    pub fn prefix_hashes(&self, version: Version, bs: usize) -> Vec<(u64, usize)> {
+        use crate::serve::transport::fnv_push;
+        use crate::serve::transport::FNV_OFFSET;
+        let mut out = Vec::new();
+        // (node, rolling hash at the node's start, tokens at its start)
+        let mut stack: Vec<(NodeId, u64, usize)> = vec![(ROOT, FNV_OFFSET, 0)];
+        while let Some((id, h0, len0)) = stack.pop() {
+            let mut h = h0;
+            let mut len = len0;
+            if id != ROOT {
+                let n = self.node(id);
+                for chunk in n.key.chunks(bs) {
+                    for &t in chunk {
+                        h = fnv_push(h, t);
+                    }
+                    len += chunk.len();
+                    out.push((h, len));
+                }
+            }
+            for &child in self.node(id).children.values() {
+                if self.node(child).version == version {
+                    stack.push((child, h, len));
+                }
+            }
+        }
+        out
+    }
+
     /// Structural invariants, for the property tests.
     pub fn check(&self, bm: &BlockManager) -> Result<(), String> {
         let bs = bm.block_size();

@@ -18,13 +18,29 @@
 //!   overloaded sheds the prefix to the least-loaded replica;
 //! - **`probe`** (default) — measured cache-aware placement: every
 //!   submission scores each live replica by its *probed* cached-prefix
-//!   tokens (the replica's scheduler answers through a registered
-//!   [`ReplicaProbe`]) minus an outstanding-token load penalty. The sticky
-//!   fingerprint map is demoted to a hint — a predicted-cache bonus for
-//!   the replica that already holds queued-but-unserved siblings — so
-//!   cold-start groups still colocate, while measured state (partial
-//!   prefix overlap across groups, post-steal warmth, post-eviction
-//!   coldness) overrides a stale hint the moment it diverges.
+//!   tokens minus an outstanding-token load penalty. With
+//!   `probe_ttl_us == 0` the score reads the replica's registered
+//!   [`ReplicaProbe`] live (one scheduler lock per replica per
+//!   submission); with a TTL it reads a cached [`ProbeSnapshot`] instead
+//!   — refreshed by the worker on every pull and on demand once older
+//!   than the TTL — so a large fleet is never serialized on probe locks.
+//!   The sticky fingerprint map is demoted to a hint — a predicted-cache
+//!   bonus for the replica that already holds queued-but-unserved
+//!   siblings — so cold-start groups still colocate, while measured state
+//!   (partial prefix overlap across groups, post-steal warmth,
+//!   post-eviction coldness) overrides a stale hint the moment it
+//!   diverges.
+//!
+//! **Transport abstraction (DESIGN.md §6).** The router holds one
+//! [`ReplicaTransport`] endpoint per replica slot and talks to replicas
+//! *only* through it: placement, accounting, sticky ownership, steal
+//! victim selection, and membership epochs are router policy; queue
+//! mechanics, epoch fencing, and probe-state delivery are transport
+//! mechanics. [`Router::new`] builds the in-process
+//! [`super::transport::LocalTransport`] fleet (behavior-identical to the
+//! pre-trait router); [`Router::new_with`] accepts any mix of backends —
+//! in particular [`super::socket::SocketTransport`] endpoints whose
+//! workers live across a socket.
 //!
 //! A replica whose inbox runs dry may steal up to `steal_max` requests
 //! from the back of the fullest other inbox (bounded work-stealing: a hot
@@ -35,11 +51,11 @@
 //!
 //! The fleet is not fixed: [`Router::add_replica`] /
 //! [`Router::remove_replica`] implement a membership lifecycle over
-//! epoch-tagged inboxes. Removing a replica requeues its queued requests
-//! through normal routing (zero requests lost), releases its outstanding
-//! load charges and sticky ownership, and bumps the slot's epoch so a
-//! stale worker for a revived slot can never serve the new epoch's
-//! requests ([`Router::pull_at`]).
+//! epoch-tagged endpoints. Removing a replica salvages its queued
+//! requests through normal routing (zero requests lost), releases its
+//! outstanding load charges and sticky ownership, and bumps the slot's
+//! epoch so a stale worker for a revived slot can never serve the new
+//! epoch's requests ([`Router::pull_at`]).
 //!
 //! Control traffic — the paper's `update_weights` fan-out plus
 //! drain/abort — travels through the same frontend (`broadcast` /
@@ -50,11 +66,13 @@
 //! token ids, a group id, and an opaque payload (the coordinator threads
 //! its `Prompt` through; tests use `()`).
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use crate::runtime::Version;
+use super::transport::{fnv_tokens, LocalTransport, ReplicaTransport};
+
+pub use super::transport::{Control, ProbeSnapshot, ReplicaProbe, Request};
 
 /// Routing policy over the replica inboxes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,20 +105,6 @@ impl RoutePolicy {
     }
 }
 
-/// Measured per-replica serving state, answered by the replica's
-/// scheduler. Rollout workers register one per slot
-/// ([`Router::register_probe`]); the `probe` policy scores placements with
-/// it. `Mutex<Scheduler>` implements this directly (see `serve/scheduler`),
-/// so a worker shares its scheduler handle as its probe.
-pub trait ReplicaProbe: Send + Sync {
-    /// Longest prefix of `tokens` this replica's cache would serve at
-    /// admission right now, in tokens (non-mutating).
-    fn probe_cached_tokens(&self, tokens: &[i32]) -> usize;
-    /// This replica's measured outstanding work (running + waiting
-    /// tokens), the load term of the probe score.
-    fn probe_outstanding_tokens(&self) -> u64;
-}
-
 #[derive(Debug, Clone)]
 pub struct RouterCfg {
     pub policy: RoutePolicy,
@@ -112,6 +116,11 @@ pub struct RouterCfg {
     /// `probe` policy: score = cached_tokens − penalty × outstanding
     /// tokens; higher values spill load sooner at the cost of locality
     pub probe_load_penalty: f64,
+    /// `probe` policy sampling: 0 = probe each replica live per
+    /// submission (the exact pre-sampling behavior); >0 = score from a
+    /// cached snapshot at most this many microseconds old (refreshed on
+    /// worker pulls and on demand)
+    pub probe_ttl_us: u64,
 }
 
 impl RouterCfg {
@@ -121,6 +130,7 @@ impl RouterCfg {
             block_size: block_size.max(1),
             steal_max,
             probe_load_penalty: 0.05,
+            probe_ttl_us: 0,
         }
     }
 
@@ -128,25 +138,11 @@ impl RouterCfg {
         self.probe_load_penalty = p.max(0.0);
         self
     }
-}
 
-/// One typed `generate` request: token ids (BOS + prompt), the GRPO group
-/// it belongs to, and an opaque payload for the caller.
-#[derive(Debug)]
-pub struct Request<T> {
-    pub group: u64,
-    pub tokens: Vec<i32>,
-    pub payload: T,
-}
-
-/// Control traffic fanned out through the frontend.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Control {
-    /// the paper's `update_weights`: version `v` is published, sync when
-    /// your interrupt policy allows
-    UpdateWeights(Version),
-    /// finish in-flight work, then stop serving
-    Drain,
+    pub fn probe_ttl(mut self, us: u64) -> RouterCfg {
+        self.probe_ttl_us = us;
+        self
+    }
 }
 
 /// What a `pull` returned: the requests plus where any of them were stolen
@@ -156,40 +152,6 @@ pub struct Pulled<T> {
     pub reqs: Vec<Request<T>>,
     /// Some((victim, n)) if `n` trailing requests were stolen from `victim`
     pub stolen: Option<(usize, usize)>,
-}
-
-struct Inbox<T> {
-    reqs: VecDeque<Request<T>>,
-    ctrl: VecDeque<Control>,
-}
-
-/// One replica slot: inbox + lock-free accounting + membership state.
-struct Replica<T> {
-    inbox: Mutex<Inbox<T>>,
-    /// queued-request count, readable without the inbox lock
-    queued: AtomicUsize,
-    /// tokens routed here and not yet reported complete
-    outstanding: AtomicU64,
-    routed: AtomicU64,
-    /// dead slots refuse new requests and are skipped by routing/steals
-    alive: AtomicBool,
-    /// bumped on every remove/revive; `pull_at` fences stale workers
-    epoch: AtomicU64,
-    probe: RwLock<Option<Arc<dyn ReplicaProbe>>>,
-}
-
-impl<T> Replica<T> {
-    fn new() -> Replica<T> {
-        Replica {
-            inbox: Mutex::new(Inbox { reqs: VecDeque::new(), ctrl: VecDeque::new() }),
-            queued: AtomicUsize::new(0),
-            outstanding: AtomicU64::new(0),
-            routed: AtomicU64::new(0),
-            alive: AtomicBool::new(true),
-            epoch: AtomicU64::new(0),
-            probe: RwLock::new(None),
-        }
-    }
 }
 
 /// Aggregate routing statistics (imbalance diagnostics).
@@ -205,16 +167,19 @@ pub struct RouterStats {
     pub queued: Vec<usize>,
     /// membership: which slots are currently alive
     pub alive: Vec<bool>,
+    /// transport backend per slot ("local" / "socket")
+    pub transports: Vec<&'static str>,
     /// replicas removed over the router's lifetime
     pub removed: u64,
     /// requests requeued by replica removals (all re-routed, none lost)
     pub requeued: u64,
 }
 
-/// Cache-aware request router over a dynamic fleet of engine replicas.
+/// Cache-aware request router over a dynamic fleet of engine replicas,
+/// reached only through their [`ReplicaTransport`] endpoints.
 pub struct Router<T> {
     cfg: RouterCfg,
-    replicas: RwLock<Vec<Arc<Replica<T>>>>,
+    replicas: RwLock<Vec<Arc<dyn ReplicaTransport<T>>>>,
     /// fingerprint -> replica: ownership under `affinity`, a colocation
     /// hint under `probe`; refreshed on steal and dropped on removal
     sticky: Mutex<HashMap<u64, usize>>,
@@ -237,12 +202,26 @@ const STICKY_CAP: usize = 1 << 16;
 /// traffic to one replica forever.
 const MIGRATE_SLACK_REQS: u64 = 4;
 
-impl<T> Router<T> {
+impl<T: Send + 'static> Router<T> {
+    /// A fleet of in-process [`LocalTransport`] replicas — the default,
+    /// behavior-identical to the pre-trait router.
     pub fn new(n_replicas: usize, cfg: RouterCfg) -> Router<T> {
         assert!(n_replicas > 0, "need at least one replica");
+        let snap_on_pull = cfg.probe_ttl_us > 0;
+        let transports = (0..n_replicas)
+            .map(|_| Arc::new(LocalTransport::new(snap_on_pull)) as Arc<dyn ReplicaTransport<T>>)
+            .collect();
+        Router::new_with(transports, cfg)
+    }
+
+    /// A fleet over caller-supplied transport endpoints (any mix of
+    /// backends; see `serve::socket` for the cross-process one).
+    pub fn new_with(transports: Vec<Arc<dyn ReplicaTransport<T>>>,
+                    cfg: RouterCfg) -> Router<T> {
+        assert!(!transports.is_empty(), "need at least one replica");
         Router {
             cfg,
-            replicas: RwLock::new((0..n_replicas).map(|_| Arc::new(Replica::new())).collect()),
+            replicas: RwLock::new(transports),
             sticky: Mutex::new(HashMap::new()),
             rr: AtomicUsize::new(0),
             steals: AtomicU64::new(0),
@@ -259,105 +238,119 @@ impl<T> Router<T> {
 
     /// Currently alive replicas.
     pub fn n_alive(&self) -> usize {
-        self.replicas
-            .read()
-            .unwrap()
-            .iter()
-            .filter(|r| r.alive.load(Ordering::Acquire))
-            .count()
+        let mut n = 0;
+        self.each_open(|_, _| n += 1);
+        n
     }
 
     pub fn is_alive(&self, replica: usize) -> bool {
-        self.replica(replica)
-            .is_some_and(|r| r.alive.load(Ordering::Acquire))
+        self.transport(replica).is_some_and(|t| t.is_open())
     }
 
     /// The slot's current epoch (bumped on every removal/revival).
     pub fn epoch(&self, replica: usize) -> u64 {
-        self.replica(replica)
-            .map(|r| r.epoch.load(Ordering::Acquire))
-            .unwrap_or(0)
+        self.transport(replica).map(|t| t.epoch()).unwrap_or(0)
     }
 
     pub fn policy(&self) -> RoutePolicy {
         self.cfg.policy
     }
 
-    fn replica(&self, i: usize) -> Option<Arc<Replica<T>>> {
+    fn transport(&self, i: usize) -> Option<Arc<dyn ReplicaTransport<T>>> {
         self.replicas.read().unwrap().get(i).cloned()
     }
 
-    fn snapshot(&self) -> Vec<Arc<Replica<T>>> {
+    fn snapshot(&self) -> Vec<Arc<dyn ReplicaTransport<T>>> {
         self.replicas.read().unwrap().clone()
     }
 
+    /// The single whole-fleet iteration helper: every walk that visits
+    /// per-replica endpoints (control broadcast, alive counting) funnels
+    /// through here, so the lock discipline — membership read lock
+    /// released before any endpoint work, per-replica inbox locks taken
+    /// one at a time and never nested — is enforced in exactly one place.
+    fn each_open(&self, mut f: impl FnMut(usize, &Arc<dyn ReplicaTransport<T>>)) {
+        for (i, t) in self.snapshot().iter().enumerate() {
+            if t.is_open() {
+                f(i, t);
+            }
+        }
+    }
+
     /// Register the replica's measured-state probe (its scheduler handle).
-    /// The `probe` policy consults it on every submission.
+    /// The `probe` policy consults it on every submission (live or via
+    /// TTL-cached snapshots, per `RouterCfg::probe_ttl_us`).
     pub fn register_probe(&self, replica: usize, probe: Arc<dyn ReplicaProbe>) {
-        if let Some(r) = self.replica(replica) {
-            *r.probe.write().unwrap() = Some(probe);
+        if let Some(t) = self.transport(replica) {
+            t.register_probe(probe);
         }
     }
 
     /// Join the fleet: revives the lowest dead slot (epoch bumped, probe
-    /// cleared by the removal) or appends a fresh one. Returns
+    /// cleared by the removal) or appends a fresh in-process one. Returns
     /// `(replica, epoch)`; workers serve with [`Router::pull_at`] under
-    /// that epoch.
+    /// that epoch. A revived slot keeps its transport backend, so a
+    /// socket replica's successor reconnects to the same endpoint.
     pub fn add_replica(&self) -> (usize, u64) {
         let mut reps = self.replicas.write().unwrap();
-        for (i, r) in reps.iter().enumerate() {
-            if !r.alive.load(Ordering::Acquire) {
-                let epoch = r.epoch.fetch_add(1, Ordering::AcqRel) + 1;
-                r.alive.store(true, Ordering::Release);
+        for (i, t) in reps.iter().enumerate() {
+            if !t.is_open() {
+                let epoch = t.reopen();
                 return (i, epoch);
             }
         }
-        reps.push(Arc::new(Replica::new()));
+        let snap_on_pull = self.cfg.probe_ttl_us > 0;
+        reps.push(Arc::new(LocalTransport::new(snap_on_pull)));
         (reps.len() - 1, 0)
     }
 
-    /// A replica left the fleet (crash, scale-down): mark the slot dead,
+    /// Append a new replica slot over a caller-supplied endpoint.
+    pub fn add_replica_with(&self, t: Arc<dyn ReplicaTransport<T>>) -> (usize, u64) {
+        let mut reps = self.replicas.write().unwrap();
+        let epoch = t.epoch();
+        reps.push(t);
+        (reps.len() - 1, epoch)
+    }
+
+    /// A replica left the fleet (crash, scale-down): close its endpoint,
     /// bump its epoch, release its outstanding charges, sticky ownership
-    /// and probe, and requeue its queued requests through normal routing.
-    /// Returns the number of requests requeued, or `None` if the replica
-    /// is already dead or is the last one alive (refused — its requests
-    /// would have nowhere to go).
+    /// and probe state, and requeue its salvaged requests through normal
+    /// routing. Returns the number of requests requeued, or `None` if the
+    /// replica is already dead or is the last one alive (refused — its
+    /// requests would have nowhere to go).
     pub fn remove_replica(&self, replica: usize) -> Option<usize> {
-        // check-and-flip under the membership write lock: concurrent
+        let epoch = self.epoch(replica);
+        self.remove_replica_at(replica, epoch)
+    }
+
+    /// Epoch-fenced removal: retires the slot only while it is still at
+    /// `epoch`. Failure paths that act on behalf of a specific worker
+    /// life (a dead socket connection, a crashed worker thread) MUST use
+    /// this form with the epoch that life served under — an unfenced
+    /// removal arriving late could take down a successor replica that
+    /// reclaimed the slot in between.
+    pub fn remove_replica_at(&self, replica: usize, epoch: u64) -> Option<usize> {
+        // check-and-close under the membership write lock: concurrent
         // removals of the last two replicas must not both pass the
-        // last-alive guard and leave the fleet empty
-        let r = {
+        // last-alive guard and leave the fleet empty. close_salvage_at
+        // linearizes the epoch fence and the flip with racing submits
+        // under the endpoint's own inbox lock, so every request either
+        // drains here or is re-routed by its submitter — none can strand
+        // in a dead inbox, and a stale removal closes nothing.
+        let (t, orphans) = {
             let reps = self.replicas.write().unwrap();
-            let r = reps.get(replica)?.clone();
-            if !r.alive.load(Ordering::Acquire) {
+            let t = reps.get(replica)?.clone();
+            if !t.is_open() {
                 return None;
             }
-            let alive = reps.iter().filter(|x| x.alive.load(Ordering::Acquire)).count();
+            let alive = reps.iter().filter(|x| x.is_open()).count();
             if alive <= 1 {
                 return None;
             }
-            // flip the flag before draining: `submit` re-checks it under
-            // the inbox lock, so every request either drains below or is
-            // re-routed by its submitter — none can strand in a dead inbox
-            r.alive.store(false, Ordering::Release);
-            r.epoch.fetch_add(1, Ordering::AcqRel);
-            r
+            let orphans = t.close_salvage_at(epoch)?;
+            (t, orphans)
         };
-        let orphans: Vec<Request<T>> = {
-            let mut inbox = r.inbox.lock().unwrap();
-            inbox.ctrl.clear();
-            let v: Vec<Request<T>> = inbox.reqs.drain(..).collect();
-            // decrement (not store(0)) and do it under the inbox lock:
-            // every queued-counter update is serialized with its inbox, so
-            // a racing pull/steal can never wrap the counter
-            if !v.is_empty() {
-                r.queued.fetch_sub(v.len(), Ordering::Relaxed);
-            }
-            v
-        };
-        // in-flight work died with the replica; its load charge goes too
-        r.outstanding.store(0, Ordering::Release);
-        *r.probe.write().unwrap() = None;
+        t.clear_probe();
         self.sticky.lock().unwrap().retain(|_, owner| *owner != replica);
         self.removed.fetch_add(1, Ordering::Relaxed);
         let n = orphans.len();
@@ -375,12 +368,7 @@ impl<T> Router<T> {
         let bs = self.cfg.block_size;
         let aligned = tokens.len() / bs * bs;
         let prefix = if aligned == 0 { tokens } else { &tokens[..aligned] };
-        let mut h: u64 = 0xcbf29ce484222325;
-        for &t in prefix {
-            h ^= t as u32 as u64;
-            h = h.wrapping_mul(0x100000001b3);
-        }
-        h
+        fnv_tokens(prefix)
     }
 
     /// Length of the fingerprinted (block-aligned) prefix — the cache unit
@@ -395,11 +383,41 @@ impl<T> Router<T> {
         }
     }
 
-    fn pick_replica(&self, reps: &[Arc<Replica<T>>], tokens: &[i32]) -> usize {
+    /// Measured (cached_tokens, load) for one replica under the `probe`
+    /// policy — live when sampling is off and the endpoint can afford it,
+    /// otherwise from the freshest available snapshot.
+    fn probe_replica(&self, t: &Arc<dyn ReplicaTransport<T>>, tokens: &[i32])
+        -> (f64, f64) {
+        // the router's own charge (submit → complete) sees inbox-queued
+        // work the scheduler hasn't pulled yet; the probe sees the
+        // scheduler's measured running+waiting state. Their windows
+        // overlap, so the max is the safe load estimate.
+        let charged = t.outstanding() as f64;
+        if self.cfg.probe_ttl_us == 0 {
+            if let Some((cached, load)) = t.probe_live(tokens) {
+                return (cached as f64, (load as f64).max(charged));
+            }
+        }
+        let max_age = if self.cfg.probe_ttl_us == 0 {
+            u64::MAX // backend cannot live-probe: any snapshot beats none
+        } else {
+            self.cfg.probe_ttl_us
+        };
+        match t.probe_snapshot(max_age) {
+            Some(s) => (
+                s.cached_tokens(tokens, self.cfg.block_size) as f64,
+                (s.outstanding as f64).max(charged),
+            ),
+            // unprobed replica: no cache signal
+            None => (0.0, charged),
+        }
+    }
+
+    fn pick_replica(&self, reps: &[Arc<dyn ReplicaTransport<T>>], tokens: &[i32]) -> usize {
         let alive: Vec<usize> = reps
             .iter()
             .enumerate()
-            .filter(|(_, r)| r.alive.load(Ordering::Acquire))
+            .filter(|(_, t)| t.is_open())
             .map(|(i, _)| i)
             .collect();
         assert!(!alive.is_empty(), "no alive replicas to route to");
@@ -412,20 +430,20 @@ impl<T> Router<T> {
                 let least = alive
                     .iter()
                     .copied()
-                    .min_by_key(|&i| reps[i].outstanding.load(Ordering::Relaxed))
+                    .min_by_key(|&i| reps[i].outstanding())
                     .unwrap();
                 // a sticky owner that died (removal races the sticky map)
                 // is treated as a fresh prefix, never returned
                 let owner = sticky.get(&fp).copied().filter(|&o| {
-                    reps.get(o).is_some_and(|r| r.alive.load(Ordering::Acquire))
+                    reps.get(o).is_some_and(|t| t.is_open())
                 });
                 if let Some(owner) = owner {
                     // sticky — unless the owner is severely overloaded
                     // relative to the least-loaded replica, in which case
                     // the prefix migrates there: a single hot prefix must
                     // not pin the whole fleet to one replica
-                    let owner_load = reps[owner].outstanding.load(Ordering::Relaxed);
-                    let least_load = reps[least].outstanding.load(Ordering::Relaxed);
+                    let owner_load = reps[owner].outstanding();
+                    let least_load = reps[least].outstanding();
                     let slack = MIGRATE_SLACK_REQS * tokens.len() as u64;
                     if owner == least || owner_load <= 2 * least_load + slack {
                         return owner;
@@ -441,26 +459,12 @@ impl<T> Router<T> {
                 least
             }
             RoutePolicy::Probe => {
-                // measure first (probes lock replica schedulers), then
-                // take the sticky lock — never hold both at once
+                // measure first (live probes lock replica schedulers),
+                // then take the sticky lock — never hold both at once
                 let measured: Vec<(usize, f64, f64)> = alive
                     .iter()
                     .map(|&i| {
-                        let probe = reps[i].probe.read().unwrap().clone();
-                        // the router's own charge (submit → complete) sees
-                        // inbox-queued work the scheduler hasn't pulled
-                        // yet; the probe sees the scheduler's measured
-                        // running+waiting state. Their windows overlap, so
-                        // the max is the safe load estimate.
-                        let charged = reps[i].outstanding.load(Ordering::Relaxed) as f64;
-                        let (cached, load) = match probe {
-                            Some(p) => (
-                                p.probe_cached_tokens(tokens) as f64,
-                                (p.probe_outstanding_tokens() as f64).max(charged),
-                            ),
-                            // unprobed replica: no cache signal
-                            None => (0.0, charged),
-                        };
+                        let (cached, load) = self.probe_replica(&reps[i], tokens);
                         (i, cached, load)
                     })
                     .collect();
@@ -468,7 +472,7 @@ impl<T> Router<T> {
                 let bonus = self.aligned_len(tokens) as f64;
                 let mut sticky = self.sticky.lock().unwrap();
                 let hint = sticky.get(&fp).copied().filter(|&h| {
-                    reps.get(h).is_some_and(|r| r.alive.load(Ordering::Acquire))
+                    reps.get(h).is_some_and(|t| t.is_open())
                 });
                 // score = measured cached prefix + predicted cache for the
                 // hinted replica (its queued siblings will warm it) −
@@ -503,22 +507,15 @@ impl<T> Router<T> {
             let req = slot.take().expect("request in flight");
             let tokens = req.tokens.len() as u64;
             let r = self.pick_replica(&reps, &req.tokens);
-            reps[r].outstanding.fetch_add(tokens, Ordering::Relaxed);
-            {
-                let mut inbox = reps[r].inbox.lock().unwrap();
-                // linearize against `remove_replica`: it flips the flag
-                // before draining under this same lock, so either we land
-                // before the drain (and get requeued) or we see the flag
-                if reps[r].alive.load(Ordering::Acquire) {
-                    inbox.reqs.push_back(req);
-                    reps[r].queued.fetch_add(1, Ordering::Relaxed);
-                    reps[r].routed.fetch_add(1, Ordering::Relaxed);
-                    return r;
+            reps[r].charge(tokens);
+            match reps[r].submit(req) {
+                Ok(()) => return r,
+                // picked a replica that died mid-flight: undo and re-route
+                Err(back) => {
+                    reps[r].release(tokens);
+                    slot = Some(back);
                 }
             }
-            // picked a replica that died mid-flight: undo and re-route
-            sat_sub(&reps[r].outstanding, tokens);
-            slot = Some(req);
         }
     }
 
@@ -531,40 +528,18 @@ impl<T> Router<T> {
     }
 
     /// Epoch-fenced pull: serves only while `epoch` matches the slot's
-    /// current epoch, so a worker whose slot was removed (and possibly
-    /// revived for a successor) can never serve the new epoch's requests.
+    /// current epoch (re-checked by the endpoint under its inbox lock),
+    /// so a worker whose slot was removed (and possibly revived for a
+    /// successor) can never serve the new epoch's requests.
     pub fn pull_at(&self, replica: usize, epoch: u64, max_n: usize) -> Pulled<T> {
-        let mut out = Vec::new();
         let reps = self.snapshot();
         let Some(me) = reps.get(replica) else {
-            return Pulled { reqs: out, stolen: None };
+            return Pulled { reqs: Vec::new(), stolen: None };
         };
-        if max_n == 0
-            || !me.alive.load(Ordering::Acquire)
-            || me.epoch.load(Ordering::Acquire) != epoch
-        {
-            return Pulled { reqs: out, stolen: None };
+        if max_n == 0 || !me.is_open() || me.epoch() != epoch {
+            return Pulled { reqs: Vec::new(), stolen: None };
         }
-        {
-            let mut inbox = me.inbox.lock().unwrap();
-            // re-check the fence under the lock: removal/revival bumps the
-            // epoch before draining under this same lock, so a stale
-            // worker that passed the fast-path check above cannot slip in
-            // and drain a successor's requests
-            if !me.alive.load(Ordering::Acquire)
-                || me.epoch.load(Ordering::Acquire) != epoch
-            {
-                return Pulled { reqs: out, stolen: None };
-            }
-            while out.len() < max_n {
-                let Some(r) = inbox.reqs.pop_front() else { break };
-                out.push(r);
-            }
-            // counter updates stay under the inbox lock (see remove_replica)
-            if !out.is_empty() {
-                me.queued.fetch_sub(out.len(), Ordering::Relaxed);
-            }
-        }
+        let out = me.pull(epoch, max_n);
         if !out.is_empty() {
             return Pulled { reqs: out, stolen: None };
         }
@@ -575,42 +550,30 @@ impl<T> Router<T> {
             return Pulled { reqs: out, stolen: None };
         }
         let victim = (0..reps.len())
-            .filter(|&i| i != replica && reps[i].alive.load(Ordering::Acquire))
-            .max_by_key(|&i| reps[i].queued.load(Ordering::Relaxed));
+            .filter(|&i| i != replica && reps[i].is_open())
+            .max_by_key(|&i| reps[i].queued());
         let Some(victim) = victim else {
             return Pulled { reqs: out, stolen: None };
         };
-        {
-            let mut inbox = reps[victim].inbox.lock().unwrap();
-            while out.len() < budget {
-                let Some(r) = inbox.reqs.pop_back() else { break };
-                out.push(r);
-            }
-            // re-check the thief's own fence before committing the steal:
-            // a replica removed between the top fence and here must not
-            // walk off with live requests — restore them to the victim
-            // (reverse of the pop order) and report dry
-            if !me.alive.load(Ordering::Acquire)
-                || me.epoch.load(Ordering::Acquire) != epoch
-            {
-                for r in out.drain(..).rev() {
-                    inbox.reqs.push_back(r);
-                }
-                return Pulled { reqs: out, stolen: None };
-            }
-            // counter updates stay under the inbox lock (see remove_replica)
-            if !out.is_empty() {
-                reps[victim].queued.fetch_sub(out.len(), Ordering::Relaxed);
-            }
-        }
-        if out.is_empty() {
+        let stolen = reps[victim].steal_back(budget);
+        if stolen.is_empty() {
             return Pulled { reqs: out, stolen: None };
         }
-        let n = out.len();
+        // re-check the thief's own fence before committing the steal: a
+        // replica removed between the top fence and here must not walk
+        // off with live requests — restore them to the victim, and if the
+        // victim closed in the meantime too, re-route the refusals
+        if !me.is_open() || me.epoch() != epoch {
+            for req in reps[victim].restore_back(stolen) {
+                self.submit(req);
+            }
+            return Pulled { reqs: Vec::new(), stolen: None };
+        }
+        let n = stolen.len();
         // transfer the load charge from victim to thief
-        let tokens: u64 = out.iter().map(|r| r.tokens.len() as u64).sum();
-        sat_sub(&reps[victim].outstanding, tokens);
-        me.outstanding.fetch_add(tokens, Ordering::Relaxed);
+        let tokens: u64 = stolen.iter().map(|r| r.tokens.len() as u64).sum();
+        reps[victim].release(tokens);
+        me.charge(tokens);
         self.steals.fetch_add(1, Ordering::Relaxed);
         self.stolen_reqs.fetch_add(n as u64, Ordering::Relaxed);
         // the work moved, so the sticky owner moves with it: later
@@ -618,79 +581,68 @@ impl<T> Router<T> {
         // not prefill cold on the victim
         if self.cfg.policy != RoutePolicy::Fifo {
             let mut sticky = self.sticky.lock().unwrap();
-            for r in &out {
+            for r in &stolen {
                 sticky.insert(self.fingerprint(&r.tokens), replica);
             }
         }
-        Pulled { reqs: out, stolen: Some((victim, n)) }
+        Pulled { reqs: stolen, stolen: Some((victim, n)) }
     }
 
-    /// Drain pending control messages for `replica`.
+    /// Drain pending control messages for `replica` at its current epoch
+    /// (a dead replica hears nothing). Convenience for callers whose slot
+    /// tenancy never changes; a worker life that can be fenced out must
+    /// use [`Router::take_control_at`] with its own epoch.
     pub fn take_control(&self, replica: usize) -> Vec<Control> {
-        match self.replica(replica) {
-            Some(r) => r.inbox.lock().unwrap().ctrl.drain(..).collect(),
+        let epoch = self.epoch(replica);
+        self.take_control_at(replica, epoch)
+    }
+
+    /// Epoch-fenced control drain: serves only the given slot tenancy, so
+    /// a stale worker can never consume a Drain/UpdateWeights broadcast
+    /// meant for the successor that reclaimed its slot.
+    pub fn take_control_at(&self, replica: usize, epoch: u64) -> Vec<Control> {
+        match self.transport(replica) {
+            Some(t) => t.take_ctrl_at(epoch),
             None => Vec::new(),
         }
     }
 
     /// Fan a control message out to every alive replica inbox.
     pub fn broadcast(&self, c: Control) {
-        for r in self.snapshot() {
-            if r.alive.load(Ordering::Acquire) {
-                r.inbox.lock().unwrap().ctrl.push_back(c);
-            }
-        }
+        self.each_open(|_, t| t.push_ctrl(c));
     }
 
     /// A replica finished serving a request it pulled: release its load
     /// charge (`tokens` = the request's token count).
     pub fn complete(&self, replica: usize, tokens: usize) {
-        if let Some(r) = self.replica(replica) {
-            sat_sub(&r.outstanding, tokens as u64);
+        if let Some(t) = self.transport(replica) {
+            t.release(tokens as u64);
         }
     }
 
     pub fn queued(&self, replica: usize) -> usize {
-        self.replica(replica)
-            .map(|r| r.queued.load(Ordering::Relaxed))
-            .unwrap_or(0)
+        self.transport(replica).map(|t| t.queued()).unwrap_or(0)
     }
 
     pub fn queued_total(&self) -> usize {
-        self.snapshot()
-            .iter()
-            .map(|r| r.queued.load(Ordering::Relaxed))
-            .sum()
+        self.snapshot().iter().map(|t| t.queued()).sum()
     }
 
     pub fn outstanding_tokens(&self, replica: usize) -> u64 {
-        self.replica(replica)
-            .map(|r| r.outstanding.load(Ordering::Relaxed))
-            .unwrap_or(0)
+        self.transport(replica).map(|t| t.outstanding()).unwrap_or(0)
     }
 
     pub fn stats(&self) -> RouterStats {
         let reps = self.snapshot();
         RouterStats {
-            routed: reps.iter().map(|r| r.routed.load(Ordering::Relaxed)).collect(),
+            routed: reps.iter().map(|t| t.routed()).collect(),
             steals: self.steals.load(Ordering::Relaxed),
             stolen_reqs: self.stolen_reqs.load(Ordering::Relaxed),
-            queued: reps.iter().map(|r| r.queued.load(Ordering::Relaxed)).collect(),
-            alive: reps.iter().map(|r| r.alive.load(Ordering::Acquire)).collect(),
+            queued: reps.iter().map(|t| t.queued()).collect(),
+            alive: reps.iter().map(|t| t.is_open()).collect(),
+            transports: reps.iter().map(|t| t.kind()).collect(),
             removed: self.removed.load(Ordering::Relaxed),
             requeued: self.requeued.load(Ordering::Relaxed),
-        }
-    }
-}
-
-/// Saturating atomic subtract (completion reports can race steals).
-fn sat_sub(a: &AtomicU64, v: u64) {
-    let mut cur = a.load(Ordering::Relaxed);
-    loop {
-        let next = cur.saturating_sub(v);
-        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
-            Ok(_) => return,
-            Err(now) => cur = now,
         }
     }
 }
@@ -821,6 +773,7 @@ mod tests {
         let stats = r.stats();
         assert_eq!(stats.steals, 1);
         assert_eq!(stats.stolen_reqs, 2);
+        assert_eq!(stats.transports, vec!["local", "local"]);
         // completion releases the thief's charge
         for q in &p.reqs {
             r.complete(1, q.tokens.len());
@@ -972,6 +925,24 @@ mod tests {
     }
 
     #[test]
+    fn stale_epoch_removal_cannot_kill_a_successor() {
+        // a failure path acting for a dead worker life (disconnect
+        // supervision, a crashed thread) removes via remove_replica_at
+        // with that life's epoch — once the slot has been removed and
+        // revived for a successor, the late removal must be refused
+        let r = router(2, RoutePolicy::Affinity, 0);
+        let old_epoch = r.epoch(0);
+        r.remove_replica(0).unwrap();
+        let (slot, new_epoch) = r.add_replica();
+        assert_eq!(slot, 0);
+        assert_eq!(r.remove_replica_at(0, old_epoch), None, "stale removal refused");
+        assert!(r.is_alive(0), "successor survives the stale removal");
+        // the fenced form still works for the current tenant
+        assert!(r.remove_replica_at(0, new_epoch).is_some());
+        assert!(!r.is_alive(0));
+    }
+
+    #[test]
     fn stale_epoch_pull_is_fenced() {
         let r = router(2, RoutePolicy::Affinity, 0);
         let old_epoch = r.epoch(0);
@@ -1076,16 +1047,19 @@ mod tests {
     /// prompt), so load-driven placement interleaves families on a replica
     /// and thrashes its radix cache; probe routing measures the surviving
     /// prefix and partitions families onto steady replicas. Returns
-    /// aggregate (computed, cached) prefill tokens.
+    /// aggregate (computed, cached) prefill tokens. `probe_ttl_us` selects
+    /// live probing (0) or snapshot sampling (>0, ISSUE-4 satellite).
     fn run_family_fleet(policy: RoutePolicy, replicas: usize, groups: usize,
-                        g: usize, steal_max: usize) -> (u64, u64) {
+                        g: usize, steal_max: usize, probe_ttl_us: u64) -> (u64, u64) {
         const FAMILY_LEN: usize = 64;
         const TAIL_LEN: usize = 4;
         const GEN_LEN: usize = 4;
         let prompt_len = FAMILY_LEN + TAIL_LEN;
         let target_len = prompt_len + GEN_LEN;
-        let router: Router<()> =
-            Router::new(replicas, RouterCfg::new(policy, BS, steal_max));
+        let router: Router<()> = Router::new(
+            replicas,
+            RouterCfg::new(policy, BS, steal_max).probe_ttl(probe_ttl_us),
+        );
         // pool sized so one family prefix stays resident but a cold
         // admission wave of the other family evicts it (thrash pressure)
         let num_blocks = 2 * (target_len + 1).div_ceil(BS) + 2;
@@ -1149,9 +1123,9 @@ mod tests {
         // steal moves the real cache state out from under the sticky map
         for replicas in [2usize, 3] {
             let (probe_c, probe_h) =
-                run_family_fleet(RoutePolicy::Probe, replicas, 24, 4, 1);
+                run_family_fleet(RoutePolicy::Probe, replicas, 24, 4, 1, 0);
             let (aff_c, aff_h) =
-                run_family_fleet(RoutePolicy::Affinity, replicas, 24, 4, 1);
+                run_family_fleet(RoutePolicy::Affinity, replicas, 24, 4, 1, 0);
             assert!(
                 probe_c < aff_c,
                 "W={replicas}: probe computed {probe_c} !< affinity {aff_c}"
@@ -1160,6 +1134,32 @@ mod tests {
             assert!(
                 hit(probe_c, probe_h) > hit(aff_c, aff_h),
                 "W={replicas}: probe hit {:.3} !> affinity {:.3}",
+                hit(probe_c, probe_h),
+                hit(aff_c, aff_h)
+            );
+        }
+    }
+
+    #[test]
+    fn ttl_sampled_probes_still_beat_affinity() {
+        // ISSUE-4 satellite regression: with probe sampling on (a huge
+        // TTL, so the router scores from snapshots refreshed only by the
+        // workers' own pulls and never locks a scheduler at submission
+        // time), stale-but-fresh-enough probes must still beat affinity
+        // in the family-thrash workload
+        for replicas in [2usize, 3] {
+            let (probe_c, probe_h) =
+                run_family_fleet(RoutePolicy::Probe, replicas, 24, 4, 1, 1_000_000);
+            let (aff_c, aff_h) =
+                run_family_fleet(RoutePolicy::Affinity, replicas, 24, 4, 1, 1_000_000);
+            assert!(
+                probe_c < aff_c,
+                "W={replicas}: ttl-sampled probe computed {probe_c} !< affinity {aff_c}"
+            );
+            let hit = |c: u64, h: u64| h as f64 / (c + h).max(1) as f64;
+            assert!(
+                hit(probe_c, probe_h) > hit(aff_c, aff_h),
+                "W={replicas}: ttl-sampled probe hit {:.3} !> affinity {:.3}",
                 hit(probe_c, probe_h),
                 hit(aff_c, aff_h)
             );

@@ -209,6 +209,26 @@ impl Scheduler {
             + self.waiting.iter().map(|(_, t)| t.len()).sum::<usize>()
     }
 
+    /// Compact measured-state snapshot (transport layer, DESIGN.md §6):
+    /// outstanding load plus a rolling-FNV enumeration of every cached
+    /// block-aligned prefix under the current weights. Answers the same
+    /// query as [`Scheduler::probe_cached_tokens`] without holding this
+    /// scheduler's lock at routing time — TTL-sampled local probing reads
+    /// it from a cache, remote probing ships it piggybacked on pull
+    /// frames.
+    pub fn probe_snapshot(&self) -> crate::serve::ProbeSnapshot {
+        let mut prefixes = std::collections::HashMap::new();
+        if self.cfg.prefix_cache {
+            for (h, len) in self.cache.prefix_hashes(self.version, self.bm.block_size()) {
+                prefixes.insert(h, len);
+            }
+        }
+        crate::serve::ProbeSnapshot {
+            outstanding: self.outstanding_tokens() as u64,
+            prefixes,
+        }
+    }
+
     /// Queue a sequence (a fresh prompt, or the committed tokens of a
     /// preempted rollout) for admission. Returns false — without queueing —
     /// if the sequence could never fit the pool even when it is the sole
@@ -480,8 +500,9 @@ impl Scheduler {
 /// A scheduler behind a mutex *is* a live replica probe: the rollout
 /// worker shares its scheduler handle with the router
 /// (`Router::register_probe`), and the `probe` routing policy reads the
-/// measured cache/load state through it on every placement.
-impl super::router::ReplicaProbe for std::sync::Mutex<Scheduler> {
+/// measured cache/load state through it on every placement (or through
+/// TTL-sampled snapshots — `probe_snapshot` — when probe sampling is on).
+impl super::transport::ReplicaProbe for std::sync::Mutex<Scheduler> {
     fn probe_cached_tokens(&self, tokens: &[i32]) -> usize {
         // a poisoned lock means the owning worker panicked mid-serve; the
         // replica is about to be retired, so measure it as stone cold
@@ -498,6 +519,17 @@ impl super::router::ReplicaProbe for std::sync::Mutex<Scheduler> {
         match self.lock() {
             Ok(s) => s.outstanding_tokens() as u64,
             Err(_) => u64::MAX,
+        }
+    }
+
+    fn probe_snapshot(&self) -> crate::serve::ProbeSnapshot {
+        match self.lock() {
+            Ok(s) => s.probe_snapshot(),
+            // poisoned => stone cold + infinite load, never picked
+            Err(_) => crate::serve::ProbeSnapshot {
+                outstanding: u64::MAX,
+                prefixes: std::collections::HashMap::new(),
+            },
         }
     }
 }
@@ -582,6 +614,42 @@ mod tests {
         // stale probes never hit
         s.on_update_weights(1);
         assert_eq!(s.probe_cached_tokens(&p), 0);
+    }
+
+    #[test]
+    fn probe_snapshot_matches_live_probe() {
+        // the transport-layer snapshot must answer exactly what the live
+        // probe answers, for hits, partial hits, misses, and staleness
+        let mut s = Scheduler::new(cfg(64, 2, true));
+        let mut rng = Rng::new(29);
+        let a = prompt(&mut rng, 16);
+        let b = prompt(&mut rng, 12);
+        for (id, p) in [(1u64, &a), (2, &b)] {
+            assert!(s.submit(id, p.clone()));
+            s.schedule();
+            s.note_prefilled(id, p);
+            s.finish(id, p, p.len());
+        }
+        let snap = s.probe_snapshot();
+        assert_eq!(snap.outstanding, s.outstanding_tokens() as u64);
+        // full hits, a diverging tail (partial hit), and a cold query
+        let mut tail = a[..8].to_vec();
+        tail.extend([99, 98, 97, 96]);
+        let cold: Vec<i32> = (200..216).collect();
+        for q in [&a, &b, &tail, &cold] {
+            assert_eq!(
+                snap.cached_tokens(q, BS),
+                s.probe_cached_tokens(q),
+                "snapshot diverged from live probe for {q:?}"
+            );
+        }
+        // update_weights invalidates: a fresh snapshot goes cold with the
+        // cache, and the stale snapshot's entries no longer match reality
+        s.on_update_weights(1);
+        let snap2 = s.probe_snapshot();
+        assert_eq!(snap2.cached_tokens(&a, BS), 0);
+        assert_eq!(s.probe_cached_tokens(&a), 0);
+        s.check().unwrap();
     }
 
     #[test]

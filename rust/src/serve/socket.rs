@@ -1,0 +1,853 @@
+//! Socket replica transport (DESIGN.md §6): the [`ReplicaTransport`]
+//! queue mechanics fronted by a per-replica connection actor speaking
+//! length-prefixed JSON frames (`util/json.rs`) over loopback TCP, so a
+//! rollout worker can serve its inbox from another process or node.
+//!
+//! Topology: the *router side* owns the endpoint — the inbox lives in the
+//! router process (submit, steal, and removal salvage stay local and
+//! lock-cheap, exactly as with [`LocalTransport`]) — and each endpoint
+//! listens on its own socket. The *worker side* connects a
+//! [`SocketWorker`] and drives the request protocol:
+//!
+//! | frame (worker → router)                  | reply                        |
+//! |------------------------------------------|------------------------------|
+//! | `{"t":"hello"}`                          | current epoch + open flag    |
+//! | `{"t":"pull","epoch":E,"max":N,"probe"…}`| requests + control + steal   |
+//! | `{"t":"complete","tokens":N}`            | ack (releases the charge)    |
+//! | `{"t":"bye"}`                            | ack, clean close             |
+//!
+//! Every pull frame carries the worker's [`ProbeSnapshot`], so the
+//! router's `probe` policy always has a recent measured view of a remote
+//! replica without issuing a probe round-trip of its own. Every frame
+//! carries the worker's membership epoch and is fenced against the
+//! endpoint's current epoch, which makes the fence *reconnect-aware*: a
+//! worker that reconnects after its slot was removed and revived for a
+//! successor learns the new epoch from `hello` but cannot serve under it —
+//! its pulls report `fenced` and it retires.
+//!
+//! Failure contract: a connection that drops without `bye` fires the
+//! endpoint's disconnect hook (the system wires it to
+//! `Router::remove_replica`, i.e. the standard salvage path); a pull
+//! reply that cannot be written back is restored to the *front* of the
+//! inbox first, so mid-stream disconnects lose zero requests.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::time::Duration;
+
+use anyhow::{bail, Context as AnyhowContext, Result};
+
+use crate::util::json::Json;
+
+use super::router::Pulled;
+use super::transport::{
+    Control, ProbeSnapshot, QueueCore, ReplicaProbe, ReplicaTransport, Request, Wire,
+};
+
+/// Fleet-side pull hook: the system wires this to `Router::pull_at` so a
+/// remote worker's pulls go through the same steal-capable path as a
+/// local worker's.
+pub type PullFn<T> = Box<dyn Fn(u64, usize) -> Pulled<T> + Send + Sync>;
+
+/// Fired when a connection drops without a clean `bye` while the endpoint
+/// is open *at the epoch the connection served under* (a connection whose
+/// worker was already retired — epoch moved on — normally fires nothing,
+/// so a late disconnect cannot take down a successor replica). Arguments:
+/// the connection's epoch (pass it to `Router::remove_replica_at` so the
+/// removal stays fenced), plus any requests from a final undeliverable
+/// reply that a closed inbox refused to take back — the hook must
+/// re-route those, and is invoked even from a stale connection when (and
+/// only when) it carries such orphans, since nobody else holds them.
+pub type DisconnectFn<T> = Box<dyn Fn(u64, Vec<Request<T>>) + Send + Sync>;
+
+/// Server poll tick (accept poll + read-timeout granularity).
+const TICK: Duration = Duration::from_millis(25);
+/// Client-side RPC read timeout per tick, and how many ticks to wait.
+const CLIENT_TICK: Duration = Duration::from_millis(500);
+const CLIENT_TICKS: u32 = 20;
+
+/// Router-side socket endpoint: [`QueueCore`] mechanics plus a listener
+/// actor that serves the frame protocol.
+pub struct SocketTransport<T: Wire> {
+    core: QueueCore<T>,
+    snap: Mutex<Option<Arc<ProbeSnapshot>>>,
+    addr: SocketAddr,
+    max_frame: usize,
+    shutdown: AtomicBool,
+    pull_fn: RwLock<Option<PullFn<T>>>,
+    disconnect_fn: RwLock<Option<DisconnectFn<T>>>,
+    connects: AtomicU64,
+}
+
+impl<T: Wire> SocketTransport<T> {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback port)
+    /// and spawn the connection actor. The endpoint serves until it is
+    /// dropped or [`SocketTransport::shutdown`] is called.
+    pub fn listen(addr: &str, max_frame: usize) -> io::Result<Arc<SocketTransport<T>>> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let t = Arc::new(SocketTransport {
+            core: QueueCore::new(),
+            snap: Mutex::new(None),
+            addr,
+            max_frame: max_frame.max(1024),
+            shutdown: AtomicBool::new(false),
+            pull_fn: RwLock::new(None),
+            disconnect_fn: RwLock::new(None),
+            connects: AtomicU64::new(0),
+        });
+        let weak = Arc::downgrade(&t);
+        std::thread::Builder::new()
+            .name(format!("transport-{}", addr.port()))
+            .spawn(move || accept_loop(weak, listener))
+            .expect("spawn transport actor");
+        Ok(t)
+    }
+
+    /// The bound address workers connect to.
+    pub fn local_addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Connections accepted over the endpoint's lifetime.
+    pub fn connects(&self) -> u64 {
+        self.connects.load(Ordering::Relaxed)
+    }
+
+    /// Route remote pulls through the fleet (work stealing); without a
+    /// hook, pulls serve this endpoint's own inbox only.
+    pub fn set_pull_fn(&self, f: PullFn<T>) {
+        *self.pull_fn.write().unwrap() = Some(f);
+    }
+
+    /// Called when a worker connection drops without `bye` (see module
+    /// docs for the zero-loss contract).
+    pub fn set_disconnect_fn(&self, f: DisconnectFn<T>) {
+        *self.disconnect_fn.write().unwrap() = Some(f);
+    }
+
+    /// Stop the actor (the listener thread exits within one tick).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+
+    fn handle_simple(&self, kind: &str, msg: &Json) -> Json {
+        match kind {
+            "hello" => Json::obj(vec![
+                ("t", Json::str("hello")),
+                ("epoch", Json::num(self.core.epoch() as f64)),
+                ("open", Json::Bool(self.core.is_open())),
+            ]),
+            "complete" => {
+                // epoch-fenced like pull: a stale worker's late completion
+                // must not release the successor replica's load charge
+                let epoch = msg.get_f64("epoch").unwrap_or(-1.0);
+                if epoch >= 0.0 && epoch as u64 == self.core.epoch() && self.core.is_open()
+                {
+                    let tokens = msg.get_f64("tokens").unwrap_or(0.0).max(0.0) as u64;
+                    self.core.release(tokens);
+                }
+                Json::obj(vec![("t", Json::str("ok"))])
+            }
+            "bye" => Json::obj(vec![("t", Json::str("ok"))]),
+            other => Json::obj(vec![
+                ("t", Json::str("err")),
+                ("msg", Json::str(&format!("unknown frame '{other}'"))),
+            ]),
+        }
+    }
+
+    /// Serve a pull frame. Returns the reply, the requests it delivers
+    /// (restored to the inbox if the reply cannot be written), and any
+    /// frame-budget leftovers a concurrently closed inbox refused to take
+    /// back (the connection loop must route those to the disconnect hook).
+    fn handle_pull(&self, msg: &Json) -> (Json, Vec<Request<T>>, Vec<Request<T>>) {
+        let cur = self.core.epoch();
+        let epoch = msg.get_f64("epoch").unwrap_or(-1.0);
+        let fenced =
+            epoch < 0.0 || epoch as u64 != cur || !self.core.is_open();
+        if fenced {
+            let reply = Json::obj(vec![
+                ("t", Json::str("reqs")),
+                ("fenced", Json::Bool(true)),
+                ("epoch", Json::num(cur as f64)),
+            ]);
+            return (reply, Vec::new(), Vec::new());
+        }
+        let epoch = epoch as u64;
+        // probe piggyback: the worker's snapshot rides every pull, so the
+        // router never pays a probe round-trip for a remote replica. The
+        // store re-checks the fence (and reopen() clears the slot), so a
+        // frame racing removal/revival cannot resurrect a dead worker's
+        // measured state onto a cold successor.
+        if let Some(p) = msg.get("probe") {
+            if let Some(snap) = ProbeSnapshot::from_json(p) {
+                let mut slot = self.snap.lock().unwrap();
+                if self.core.is_open() && self.core.epoch() == epoch {
+                    *slot = Some(Arc::new(snap));
+                }
+            }
+        }
+        let max_n = msg.get_usize("max").unwrap_or(0);
+        let pulled = match self.pull_fn.read().unwrap().as_ref() {
+            Some(f) => f(epoch, max_n),
+            None => Pulled { reqs: self.core.pull(epoch, max_n), stolen: None },
+        };
+        let ctrl = self.core.take_ctrl_at(epoch);
+        // cap the reply at the frame budget: requests past the first that
+        // would overflow go back to the inbox front for the next pull —
+        // an uncapped batch would fail the write deterministically and
+        // livelock the replica through remove/requeue/respawn. (The first
+        // request is always included; the system validates at startup
+        // that any single max-length request fits one frame.)
+        let mut reqs = pulled.reqs;
+        let mut reqs_json: Vec<Json> = Vec::new();
+        let mut cut = reqs.len();
+        let mut size = 512usize; // envelope slack: epoch/ctrl/stolen fields
+        for (i, r) in reqs.iter().enumerate() {
+            let j = request_to_json(r);
+            // sizing stringifies each request once more than the final
+            // frame write — bounded by max_frame and cheap next to the
+            // TCP round-trip it sits on (Json has no raw-splice form)
+            let s = j.to_string().len() + 16;
+            if i > 0 && size + s > self.max_frame {
+                cut = i;
+                break;
+            }
+            size += s;
+            reqs_json.push(j);
+        }
+        let leftover: Vec<Request<T>> = reqs.split_off(cut);
+        // a concurrently closed inbox refuses the leftovers: they are
+        // orphans the connection loop must hand to the disconnect hook
+        let orphans = self.core.restore_front(leftover);
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("t", Json::str("reqs")),
+            ("epoch", Json::num(cur as f64)),
+            ("reqs", Json::Arr(reqs_json)),
+            ("ctrl", Json::Arr(ctrl.iter().map(control_to_json).collect())),
+        ];
+        if let Some((victim, n)) = pulled.stolen {
+            fields.push((
+                "stolen",
+                Json::Arr(vec![Json::num(victim as f64), Json::num(n as f64)]),
+            ));
+        }
+        (Json::obj(fields), reqs, orphans)
+    }
+}
+
+impl<T: Wire> ReplicaTransport<T> for SocketTransport<T> {
+    fn submit(&self, req: Request<T>) -> Result<(), Request<T>> {
+        self.core.submit(req)
+    }
+
+    fn pull(&self, epoch: u64, max_n: usize) -> Vec<Request<T>> {
+        self.core.pull(epoch, max_n)
+    }
+
+    fn steal_back(&self, max_n: usize) -> Vec<Request<T>> {
+        self.core.steal_back(max_n)
+    }
+
+    fn restore_back(&self, reqs: Vec<Request<T>>) -> Vec<Request<T>> {
+        self.core.restore_back(reqs)
+    }
+
+    fn push_ctrl(&self, c: Control) {
+        self.core.push_ctrl(c);
+    }
+
+    fn take_ctrl_at(&self, epoch: u64) -> Vec<Control> {
+        self.core.take_ctrl_at(epoch)
+    }
+
+    fn close_salvage_at(&self, epoch: u64) -> Option<Vec<Request<T>>> {
+        self.core.close_salvage_at(epoch)
+    }
+
+    fn reopen(&self) -> u64 {
+        // a revived successor starts probe-cold: the predecessor's
+        // snapshot must never score the fresh replica as cache-warm
+        *self.snap.lock().unwrap() = None;
+        self.core.reopen()
+    }
+
+    fn is_open(&self) -> bool {
+        self.core.is_open()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.core.epoch()
+    }
+
+    fn queued(&self) -> usize {
+        self.core.queued()
+    }
+
+    fn routed(&self) -> u64 {
+        self.core.routed()
+    }
+
+    fn charge(&self, tokens: u64) {
+        self.core.charge(tokens);
+    }
+
+    fn release(&self, tokens: u64) {
+        self.core.release(tokens);
+    }
+
+    fn outstanding(&self) -> u64 {
+        self.core.outstanding()
+    }
+
+    fn register_probe(&self, _probe: Arc<dyn ReplicaProbe>) {
+        // remote probe state arrives piggybacked on pull frames
+    }
+
+    fn clear_probe(&self) {
+        *self.snap.lock().unwrap() = None;
+    }
+
+    fn probe_live(&self, _tokens: &[i32]) -> Option<(usize, u64)> {
+        None // a live remote probe would be a round-trip per submission
+    }
+
+    fn probe_snapshot(&self, _max_age_us: u64) -> Option<Arc<ProbeSnapshot>> {
+        // freshness is governed by the worker's pull cadence, not a TTL
+        self.snap.lock().unwrap().clone()
+    }
+
+    fn kind(&self) -> &'static str {
+        "socket"
+    }
+}
+
+fn accept_loop<T: Wire>(weak: Weak<SocketTransport<T>>, listener: TcpListener) {
+    loop {
+        {
+            let Some(t) = weak.upgrade() else { return };
+            if t.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let weak = weak.clone();
+                // one thread per connection: a stale worker that lingers
+                // must not block its successor's connect
+                std::thread::Builder::new()
+                    .name("transport-conn".into())
+                    .spawn(move || serve_conn(&weak, stream))
+                    .expect("spawn transport connection");
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(TICK);
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn serve_conn<T: Wire>(weak: &Weak<SocketTransport<T>>, mut stream: TcpStream) {
+    let (max_frame, conn_epoch) = {
+        let Some(t) = weak.upgrade() else { return };
+        t.connects.fetch_add(1, Ordering::Relaxed);
+        (t.max_frame, t.core.epoch())
+    };
+    stream.set_nonblocking(false).ok();
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(TICK)).ok();
+    let mut clean = false;
+    loop {
+        let mut alive = || match weak.upgrade() {
+            Some(t) => !t.shutdown.load(Ordering::Acquire),
+            None => false,
+        };
+        let msg = match read_frame(&mut stream, max_frame, &mut alive) {
+            Ok(Some(m)) => m,
+            Ok(None) => {
+                if alive() {
+                    continue; // idle tick
+                }
+                return; // endpoint gone: no disconnect event
+            }
+            Err(_) => break, // EOF / IO error => disconnect
+        };
+        let Some(t) = weak.upgrade() else { return };
+        let kind = msg.get_str("t").unwrap_or("").to_string();
+        let (reply, pulled, mut orphans) = match kind.as_str() {
+            "pull" => t.handle_pull(&msg),
+            other => (t.handle_simple(other, &msg), Vec::new(), Vec::new()),
+        };
+        if write_frame(&mut stream, &reply, max_frame).is_err() {
+            // an undeliverable pull reply must not lose its requests:
+            // restore to the front (FIFO order preserved); a concurrently
+            // closed inbox refuses them and the disconnect hook re-routes
+            orphans.extend(t.core.restore_front(pulled));
+            fire_disconnect(&t, conn_epoch, orphans);
+            return;
+        }
+        if !orphans.is_empty() {
+            // frame-budget leftovers refused by a concurrently closed
+            // inbox: the connection is healthy, but these requests exist
+            // nowhere else — route them through the hook's re-route path
+            fire_disconnect(&t, conn_epoch, orphans);
+        }
+        if kind == "bye" {
+            clean = true;
+            break;
+        }
+    }
+    if !clean {
+        if let Some(t) = weak.upgrade() {
+            fire_disconnect(&t, conn_epoch, Vec::new());
+        }
+    }
+}
+
+fn fire_disconnect<T: Wire>(t: &Arc<SocketTransport<T>>, conn_epoch: u64,
+                            orphans: Vec<Request<T>>) {
+    if t.shutdown.load(Ordering::Acquire) {
+        return;
+    }
+    // only a connection whose worker is still the slot's current tenant
+    // reports a loss: if the epoch moved on, this worker was already
+    // retired (its own failure path, a concurrent removal) and firing
+    // would take down the successor that reclaimed the slot. Refused
+    // orphans are the one exception — they exist precisely because the
+    // endpoint closed while the reply was in flight, nobody else holds
+    // them, and the hook's removal is epoch-fenced on its own — so they
+    // must reach the hook for re-routing even from a stale connection.
+    let stale = !t.core.is_open() || t.core.epoch() != conn_epoch;
+    if stale && orphans.is_empty() {
+        return;
+    }
+    let f = t.disconnect_fn.read().unwrap();
+    if let Some(f) = f.as_ref() {
+        f(conn_epoch, orphans);
+    }
+}
+
+// ---------------------------------------------------------------------
+// frame codec: u32 big-endian length + JSON bytes
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Read one frame. `Ok(None)` = timeout with zero bytes consumed (an idle
+/// poll tick). Mid-frame timeouts keep waiting while `keep_waiting()`
+/// allows, then error out — the stream is desynchronized at that point.
+fn read_frame(stream: &mut TcpStream, max_frame: usize,
+              keep_waiting: &mut dyn FnMut() -> bool) -> io::Result<Option<Json>> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match stream.read(&mut hdr[got..]) {
+            Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => got += n,
+            Err(e) if is_timeout(&e) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                if !keep_waiting() {
+                    return Err(io::ErrorKind::TimedOut.into());
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_be_bytes(hdr) as usize;
+    if len > max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds max_frame {max_frame}"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    let mut got = 0usize;
+    while got < len {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => return Err(io::ErrorKind::UnexpectedEof.into()),
+            Ok(n) => got += n,
+            Err(e) if is_timeout(&e) => {
+                if !keep_waiting() {
+                    return Err(io::ErrorKind::TimedOut.into());
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let s = std::str::from_utf8(&buf)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame not utf-8"))?;
+    let j = Json::parse(s)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e.to_string()))?;
+    Ok(Some(j))
+}
+
+fn write_frame(stream: &mut TcpStream, j: &Json, max_frame: usize) -> io::Result<()> {
+    let body = j.to_string();
+    write_frame_bytes(stream, body.as_bytes(), max_frame)
+}
+
+fn write_frame_bytes(stream: &mut TcpStream, bytes: &[u8],
+                     max_frame: usize) -> io::Result<()> {
+    if bytes.len() > max_frame {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {} bytes exceeds max_frame {max_frame}", bytes.len()),
+        ));
+    }
+    stream.write_all(&(bytes.len() as u32).to_be_bytes())?;
+    stream.write_all(bytes)?;
+    stream.flush()
+}
+
+fn request_to_json<T: Wire>(r: &Request<T>) -> Json {
+    Json::obj(vec![
+        ("g", Json::num(r.group as f64)),
+        ("k", Json::Arr(r.tokens.iter().map(|&t| Json::num(t as f64)).collect())),
+        ("p", r.payload.to_json()),
+    ])
+}
+
+fn request_from_json<T: Wire>(j: &Json) -> Option<Request<T>> {
+    let group = j.get_f64("g")? as u64;
+    let tokens = j
+        .get("k")?
+        .as_arr()?
+        .iter()
+        .map(|t| t.as_f64().map(|f| f as i32))
+        .collect::<Option<Vec<i32>>>()?;
+    let payload = T::from_json(j.get("p")?)?;
+    Some(Request { group, tokens, payload })
+}
+
+fn control_to_json(c: &Control) -> Json {
+    match c {
+        Control::UpdateWeights(v) => Json::obj(vec![
+            ("c", Json::str("uw")),
+            ("v", Json::num(*v as f64)),
+        ]),
+        Control::Drain => Json::obj(vec![("c", Json::str("drain"))]),
+    }
+}
+
+fn control_from_json(j: &Json) -> Option<Control> {
+    match j.get_str("c")? {
+        "uw" => Some(Control::UpdateWeights(j.get_f64("v")? as u64)),
+        "drain" => Some(Control::Drain),
+        _ => None,
+    }
+}
+
+/// One worker pull over the wire.
+#[derive(Debug)]
+pub struct PulledWire<T> {
+    pub reqs: Vec<Request<T>>,
+    pub ctrl: Vec<Control>,
+    /// `Some((victim, n))` if the fleet-side pull stole for us
+    pub stolen: Option<(usize, usize)>,
+    /// the endpoint refused our epoch: the slot was removed (and possibly
+    /// revived for a successor) — retire
+    pub fenced: bool,
+}
+
+/// Worker-side client: connects to a replica endpoint and drives the
+/// frame protocol. Owned by one worker thread (methods take `&mut self`).
+pub struct SocketWorker<T: Wire> {
+    stream: TcpStream,
+    epoch: u64,
+    max_frame: usize,
+    _p: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T: Wire> SocketWorker<T> {
+    pub fn connect(addr: &str, max_frame: usize) -> Result<SocketWorker<T>> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting replica transport {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(CLIENT_TICK)).ok();
+        let mut w = SocketWorker {
+            stream,
+            epoch: 0,
+            max_frame: max_frame.max(1024),
+            _p: std::marker::PhantomData,
+        };
+        let hello = w.rpc(&Json::obj(vec![("t", Json::str("hello"))]))?;
+        w.epoch = hello
+            .get_f64("epoch")
+            .context("hello reply missing epoch")? as u64;
+        Ok(w)
+    }
+
+    /// The membership epoch this worker serves under (learned at connect).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn rpc(&mut self, req: &Json) -> Result<Json> {
+        let body = req.to_string();
+        self.rpc_body(&body)
+    }
+
+    /// RPC over a pre-serialized frame body (lets hot callers serialize
+    /// exactly once).
+    fn rpc_body(&mut self, body: &str) -> Result<Json> {
+        write_frame_bytes(&mut self.stream, body.as_bytes(), self.max_frame)
+            .context("transport send")?;
+        let mut ticks = 0u32;
+        loop {
+            let got = {
+                let mut keep_waiting = || {
+                    ticks += 1;
+                    ticks < CLIENT_TICKS
+                };
+                read_frame(&mut self.stream, self.max_frame, &mut keep_waiting)
+                    .context("transport receive")?
+            };
+            match got {
+                Some(j) => return Ok(j),
+                None => {
+                    ticks += 1;
+                    if ticks >= CLIENT_TICKS {
+                        bail!("transport reply timed out");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Pull up to `max_n` requests, shipping our probe snapshot along.
+    /// A snapshot too large for the frame budget is dropped rather than
+    /// fatal — the endpoint keeps scoring this replica from its previous
+    /// snapshot. (Snapshot size is bounded by the replica's KV pool —
+    /// one entry per cached block — so this only triggers on extreme
+    /// `kv_blocks` vs `socket_max_frame` configurations.)
+    pub fn pull(&mut self, max_n: usize,
+                probe: Option<&ProbeSnapshot>) -> Result<PulledWire<T>> {
+        let base: Vec<(&str, Json)> = vec![
+            ("t", Json::str("pull")),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("max", Json::num(max_n as f64)),
+        ];
+        let msg = match probe {
+            Some(p) => {
+                let mut fields = base.clone();
+                fields.push(("probe", p.to_json()));
+                Json::obj(fields)
+            }
+            None => Json::obj(base.clone()),
+        };
+        // serialize once; fall back to a probe-less frame if the snapshot
+        // would overflow the frame budget
+        let mut body = msg.to_string();
+        if probe.is_some() && body.len() > self.max_frame {
+            body = Json::obj(base).to_string();
+        }
+        let reply = self.rpc_body(&body)?;
+        if reply.get("fenced").and_then(Json::as_bool).unwrap_or(false) {
+            return Ok(PulledWire {
+                reqs: Vec::new(),
+                ctrl: Vec::new(),
+                stolen: None,
+                fenced: true,
+            });
+        }
+        let mut reqs = Vec::new();
+        if let Some(arr) = reply.get("reqs").and_then(Json::as_arr) {
+            for r in arr {
+                reqs.push(request_from_json(r).context("malformed request frame")?);
+            }
+        }
+        let mut ctrl = Vec::new();
+        if let Some(arr) = reply.get("ctrl").and_then(Json::as_arr) {
+            for c in arr {
+                ctrl.push(control_from_json(c).context("malformed control frame")?);
+            }
+        }
+        let stolen = reply.get("stolen").and_then(Json::as_arr).and_then(|a| {
+            match (a.first().and_then(Json::as_usize), a.get(1).and_then(Json::as_usize)) {
+                (Some(v), Some(n)) => Some((v, n)),
+                _ => None,
+            }
+        });
+        Ok(PulledWire { reqs, ctrl, stolen, fenced: false })
+    }
+
+    /// Report a served request's token count (releases the load charge;
+    /// fenced by our epoch, so a late completion from a retired worker
+    /// cannot touch a successor's accounting).
+    pub fn complete(&mut self, tokens: usize) -> Result<()> {
+        self.rpc(&Json::obj(vec![
+            ("t", Json::str("complete")),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("tokens", Json::num(tokens as f64)),
+        ]))?;
+        Ok(())
+    }
+
+    /// Clean goodbye: tells the endpoint this close is not a failure (no
+    /// disconnect salvage fires). Best-effort.
+    pub fn bye(&mut self) {
+        let _ = self.rpc(&Json::obj(vec![("t", Json::str("bye"))]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(group: u64, tokens: Vec<i32>) -> Request<()> {
+        Request { group, tokens, payload: () }
+    }
+
+    fn wait_until(mut f: impl FnMut() -> bool) {
+        let t0 = Instant::now();
+        while !f() {
+            assert!(t0.elapsed() < Duration::from_secs(5), "timed out waiting");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn submit_pull_complete_roundtrip() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        for g in 0..3u64 {
+            t.charge(2);
+            ReplicaTransport::submit(&*t, req(g, vec![1, 2])).unwrap();
+        }
+        t.push_ctrl(Control::UpdateWeights(3));
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        assert_eq!(w.epoch(), 0);
+        let p = w.pull(2, None).unwrap();
+        assert!(!p.fenced);
+        assert_eq!(p.reqs.iter().map(|r| r.group).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(p.reqs[0].tokens, vec![1, 2]);
+        assert_eq!(p.ctrl, vec![Control::UpdateWeights(3)]);
+        assert_eq!(t.queued(), 1);
+        w.complete(2).unwrap();
+        assert_eq!(t.outstanding(), 4);
+        w.bye();
+        wait_until(|| t.connects() == 1);
+    }
+
+    #[test]
+    fn probe_snapshot_piggybacks_on_pull() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        assert!(ReplicaTransport::<()>::probe_snapshot(&*t, 0).is_none());
+        let mut snap = ProbeSnapshot { outstanding: 17, ..Default::default() };
+        snap.prefixes.insert(super::super::transport::fnv_tokens(&[1, 2, 3, 4]), 4);
+        w.pull(0, Some(&snap)).unwrap();
+        let got = ReplicaTransport::<()>::probe_snapshot(&*t, 0).expect("piggybacked");
+        assert_eq!(got.outstanding, 17);
+        assert_eq!(got.cached_tokens(&[1, 2, 3, 4, 5], 4), 4);
+    }
+
+    #[test]
+    fn fencing_is_reconnect_aware() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let mut old = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        assert_eq!(old.epoch(), 0);
+        // slot removed and revived for a successor
+        ReplicaTransport::submit(&*t, req(1, vec![1])).unwrap();
+        let salvaged = t.close_salvage_at(0).expect("current epoch");
+        assert_eq!(salvaged.len(), 1);
+        assert_eq!(t.reopen(), 2);
+        ReplicaTransport::submit(&*t, req(2, vec![1])).unwrap();
+        // the stale worker is fenced even after its reconnect
+        let p = old.pull(4, None).unwrap();
+        assert!(p.fenced, "old epoch must be fenced");
+        assert_eq!(t.queued(), 1, "fenced pull serves nothing");
+        // a stale completion must not release the successor's load charge
+        t.charge(5);
+        old.complete(3).unwrap();
+        assert_eq!(t.outstanding(), 5, "stale complete fenced");
+        // the successor serves under the new epoch
+        let mut new = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        assert_eq!(new.epoch(), 2);
+        let p = new.pull(4, None).unwrap();
+        assert!(!p.fenced);
+        assert_eq!(p.reqs.len(), 1);
+        new.complete(3).unwrap();
+        assert_eq!(t.outstanding(), 2, "current-epoch complete releases");
+        new.bye();
+    }
+
+    #[test]
+    fn disconnect_without_bye_fires_hook() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let fired = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&fired);
+        t.set_disconnect_fn(Box::new(move |epoch, orphans| {
+            assert_eq!(epoch, 0, "hook carries the connection's epoch");
+            assert!(orphans.is_empty());
+            f2.store(true, Ordering::Release);
+        }));
+        {
+            let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+            w.pull(1, None).unwrap();
+            // dropped without bye: a mid-stream crash
+        }
+        wait_until(|| fired.load(Ordering::Acquire));
+        // a clean bye must NOT fire the hook
+        fired.store(false, Ordering::Release);
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        w.bye();
+        drop(w);
+        wait_until(|| t.connects() == 2);
+        std::thread::sleep(Duration::from_millis(100));
+        assert!(!fired.load(Ordering::Acquire), "bye is a clean close");
+    }
+
+    #[test]
+    fn pull_reply_is_capped_at_the_frame_budget() {
+        // many small requests whose combined reply would exceed max_frame:
+        // the reply delivers a FIFO prefix and the rest stays queued for
+        // the next pull — no connection death, no lost requests
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 2048).unwrap();
+        for g in 0..64u64 {
+            ReplicaTransport::submit(&*t, req(g, (0..16).collect())).unwrap();
+        }
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        let p = w.pull(64, None).unwrap();
+        assert!(!p.fenced);
+        assert!(
+            !p.reqs.is_empty() && p.reqs.len() < 64,
+            "reply capped, not dropped: {}",
+            p.reqs.len()
+        );
+        for (i, r) in p.reqs.iter().enumerate() {
+            assert_eq!(r.group, i as u64, "FIFO preserved across the cap");
+        }
+        let delivered = p.reqs.len();
+        let p2 = w.pull(64, None).unwrap();
+        assert_eq!(
+            p2.reqs.first().map(|r| r.group),
+            Some(delivered as u64),
+            "the capped tail is served by the next pull"
+        );
+        assert_eq!(t.queued() + delivered + p2.reqs.len(), 64, "zero lost");
+        w.bye();
+    }
+
+    #[test]
+    fn undeliverable_pull_reply_restores_requests() {
+        // a reply bigger than max_frame cannot be written back — the
+        // pulled requests must return to the inbox, not vanish
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1024).unwrap();
+        let big: Vec<i32> = (0..2000).collect();
+        ReplicaTransport::submit(&*t, req(7, big)).unwrap();
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        assert!(w.pull(1, None).is_err(), "connection dies on oversized reply");
+        wait_until(|| t.queued() == 1);
+        // the request is still there for a future (or salvage) pull
+        assert_eq!(t.core.pull(0, 4).len(), 1);
+    }
+}

@@ -1,0 +1,730 @@
+//! Replica delivery transports (DESIGN.md §6) — the seam that lets the
+//! router's routing *policy* (placement, accounting, membership) run
+//! against replica inboxes it does not own.
+//!
+//! The router used to hard-wire every replica to an in-process
+//! `Mutex<Inbox>` slot, which confined the whole rollout plane to one
+//! process. This module lifts the per-replica delivery mechanics behind
+//! the [`ReplicaTransport`] trait — submit, pull, steal, control fan-in,
+//! probe state, and salvage-on-removal — with two backends:
+//!
+//! - [`LocalTransport`]: today's mutex inbox, behavior-identical to the
+//!   pre-trait router (`serve/transport.rs` is where the inbox moved, not
+//!   where it changed);
+//! - [`super::socket::SocketTransport`]: the same queue mechanics fronted
+//!   by a per-replica connection actor speaking length-prefixed JSON
+//!   frames over loopback TCP, so a rollout worker can live in another
+//!   process/node (the paper's 64-node deployment shape).
+//!
+//! **Ordering contract.** Per replica, `submit` → `pull` is FIFO;
+//! `steal_back` pops newest-first from the back (preserving the victim's
+//! queue-head locality); `close_salvage_at` linearizes against both under the
+//! inbox lock: after it returns, every previously-submitted request has
+//! either been pulled or is in the returned salvage vector — none can
+//! strand in a closed inbox, which is what makes replica removal lose
+//! zero requests.
+//!
+//! **Epoch fencing.** Each endpoint carries a membership epoch, bumped on
+//! every close (removal) and reopen (revival). `pull`/`take_ctrl_at`
+//! serve only the current epoch, re-checked under the inbox lock, so a
+//! stale worker for a revived slot can never serve (or steal control
+//! from) its successor. The socket backend carries the worker's epoch in
+//! every frame, which makes the fence reconnect-aware for free.
+//!
+//! **Probe state.** Measured cache/load state flows as a
+//! [`ProbeSnapshot`]: the scheduler's cached block-aligned prefixes
+//! (rolling-FNV hashed) plus its outstanding tokens. Local endpoints
+//! refresh the snapshot from their registered [`ReplicaProbe`] on every
+//! pull and on demand when older than the router's `probe_ttl_us`;
+//! socket endpoints receive it piggybacked on every pull frame, so
+//! remote probing costs no extra round-trip.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One typed `generate` request: token ids (BOS + prompt), the GRPO group
+/// it belongs to, and an opaque payload for the caller.
+#[derive(Debug)]
+pub struct Request<T> {
+    pub group: u64,
+    pub tokens: Vec<i32>,
+    pub payload: T,
+}
+
+/// Control traffic fanned out through the frontend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    /// the paper's `update_weights`: version `v` is published, sync when
+    /// your interrupt policy allows
+    UpdateWeights(crate::runtime::Version),
+    /// finish in-flight work, then stop serving
+    Drain,
+}
+
+/// Measured per-replica serving state, answered by the replica's
+/// scheduler. Rollout workers register one per local slot
+/// (`Router::register_probe`); the `probe` policy scores placements with
+/// it. `Mutex<Scheduler>` implements this directly (see `serve/scheduler`),
+/// so a worker shares its scheduler handle as its probe.
+pub trait ReplicaProbe: Send + Sync {
+    /// Longest prefix of `tokens` this replica's cache would serve at
+    /// admission right now, in tokens (non-mutating).
+    fn probe_cached_tokens(&self, tokens: &[i32]) -> usize;
+    /// This replica's measured outstanding work (running + waiting
+    /// tokens), the load term of the probe score.
+    fn probe_outstanding_tokens(&self) -> u64;
+    /// Compact snapshot of the measured state for TTL-sampled and remote
+    /// probing. The default covers load-only test doubles: live load, no
+    /// prefix knowledge (`Mutex<Scheduler>` overrides with the real radix
+    /// enumeration).
+    fn probe_snapshot(&self) -> ProbeSnapshot {
+        ProbeSnapshot {
+            outstanding: self.probe_outstanding_tokens(),
+            prefixes: HashMap::new(),
+        }
+    }
+}
+
+// FNV-1a over token ids — the one hash shared by the router's prefix
+// fingerprints, the scheduler's snapshot enumeration, and the snapshot's
+// query side, so all three agree on what "the same prefix" means.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+pub(crate) const FNV_PRIME: u64 = 0x100000001b3;
+
+pub(crate) fn fnv_push(h: u64, t: i32) -> u64 {
+    (h ^ (t as u32 as u64)).wrapping_mul(FNV_PRIME)
+}
+
+pub(crate) fn fnv_tokens(tokens: &[i32]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &t in tokens {
+        h = fnv_push(h, t);
+    }
+    h
+}
+
+/// Measured replica state at a point in time: outstanding tokens plus a
+/// rolling-FNV enumeration of every cached block-aligned prefix
+/// (`hash(prefix) -> prefix token count`). Answers the same query
+/// `Scheduler::probe_cached_tokens` answers — `cached_tokens` walks the
+/// query's block boundaries and takes the longest hash present — without
+/// holding the scheduler lock, which is what makes TTL-sampled local
+/// probing and piggybacked remote probing possible.
+#[derive(Debug, Clone, Default)]
+pub struct ProbeSnapshot {
+    /// running + waiting tokens at snapshot time
+    pub outstanding: u64,
+    /// FNV-1a hash of each cached block-aligned prefix -> its token count
+    pub prefixes: HashMap<u64, usize>,
+}
+
+impl ProbeSnapshot {
+    /// Longest cached prefix of `tokens` this snapshot records, in tokens.
+    pub fn cached_tokens(&self, tokens: &[i32], block_size: usize) -> usize {
+        let bs = block_size.max(1);
+        let mut h = FNV_OFFSET;
+        let mut best = 0usize;
+        for (i, &t) in tokens.iter().enumerate() {
+            h = fnv_push(h, t);
+            let len = i + 1;
+            if len % bs == 0 {
+                if let Some(&n) = self.prefixes.get(&h) {
+                    best = best.max(n.min(len));
+                }
+            }
+        }
+        best
+    }
+
+    /// Wire form (hashes as hex strings: JSON numbers are f64 and would
+    /// truncate a full-range u64).
+    pub fn to_json(&self) -> Json {
+        let prefixes: Vec<Json> = self
+            .prefixes
+            .iter()
+            .map(|(h, n)| {
+                Json::Arr(vec![Json::str(&format!("{h:016x}")), Json::num(*n as f64)])
+            })
+            .collect();
+        Json::obj(vec![
+            ("outstanding", Json::num(self.outstanding as f64)),
+            ("prefixes", Json::Arr(prefixes)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ProbeSnapshot> {
+        let outstanding = j.get_f64("outstanding")? as u64;
+        let mut prefixes = HashMap::new();
+        for e in j.get("prefixes")?.as_arr()? {
+            let pair = e.as_arr()?;
+            if pair.len() != 2 {
+                return None;
+            }
+            let h = u64::from_str_radix(pair[0].as_str()?, 16).ok()?;
+            prefixes.insert(h, pair[1].as_usize()?);
+        }
+        Some(ProbeSnapshot { outstanding, prefixes })
+    }
+}
+
+/// Wire-serializable request payloads (the socket backend's bound; the
+/// in-process backend never serializes). Implemented for `()` (tests,
+/// benches) and `tasks::Prompt` (the coordinator).
+pub trait Wire: Sized + Send + 'static {
+    fn to_json(&self) -> Json;
+    fn from_json(j: &Json) -> Option<Self>;
+}
+
+impl Wire for () {
+    fn to_json(&self) -> Json {
+        Json::Null
+    }
+
+    fn from_json(_: &Json) -> Option<()> {
+        Some(())
+    }
+}
+
+/// A replica delivery endpoint the router talks through. One instance per
+/// replica slot; the router layers placement policy, steal victim
+/// selection, sticky ownership, and membership bookkeeping on top.
+pub trait ReplicaTransport<T>: Send + Sync {
+    // -- delivery ----------------------------------------------------
+    /// Enqueue a request; `Err` hands it back when the endpoint is closed
+    /// (the submitter re-routes — linearized with `close_salvage_at` so a
+    /// request can never strand in a dead inbox).
+    fn submit(&self, req: Request<T>) -> Result<(), Request<T>>;
+    /// Epoch-fenced FIFO pop of up to `max_n` requests.
+    fn pull(&self, epoch: u64, max_n: usize) -> Vec<Request<T>>;
+    /// Steal up to `max_n` requests from the back (newest first).
+    fn steal_back(&self, max_n: usize) -> Vec<Request<T>>;
+    /// Give stolen requests back (a fenced-out thief restores its loot in
+    /// the victim's original order). Returns any the endpoint refused
+    /// because it closed in between — the caller must re-route those.
+    fn restore_back(&self, reqs: Vec<Request<T>>) -> Vec<Request<T>>;
+
+    // -- control -----------------------------------------------------
+    /// Queue a control message (dropped if closed).
+    fn push_ctrl(&self, c: Control);
+    /// Drain pending control messages under the epoch fence.
+    fn take_ctrl_at(&self, epoch: u64) -> Vec<Control>;
+
+    // -- membership --------------------------------------------------
+    /// Epoch-fenced close: if the endpoint is open *and* still at
+    /// `epoch`, refuse further submits, bump the epoch, clear control,
+    /// reset the outstanding charge, and drain + return every queued
+    /// request (the removal salvage). `None` means the endpoint was
+    /// already closed or has moved past `epoch` (someone else removed —
+    /// and possibly revived — it first), so the caller must not treat
+    /// the slot as retired by *this* call: an unfenced removal could
+    /// kill a successor replica that reclaimed the slot.
+    fn close_salvage_at(&self, epoch: u64) -> Option<Vec<Request<T>>>;
+    /// Revive a closed endpoint; bumps and returns the new epoch.
+    fn reopen(&self) -> u64;
+    fn is_open(&self) -> bool;
+    fn epoch(&self) -> u64;
+
+    // -- accounting --------------------------------------------------
+    /// Currently queued requests (readable without the inbox lock).
+    fn queued(&self) -> usize;
+    /// Requests ever routed here (submission-time placement counter).
+    fn routed(&self) -> u64;
+    /// Charge `tokens` of outstanding load (submit-side).
+    fn charge(&self, tokens: u64);
+    /// Release outstanding load (completion / steal transfer), saturating.
+    fn release(&self, tokens: u64);
+    fn outstanding(&self) -> u64;
+
+    // -- probe state -------------------------------------------------
+    /// Register the replica's live measured-state probe (local backends;
+    /// socket backends receive snapshots over the wire instead).
+    fn register_probe(&self, probe: Arc<dyn ReplicaProbe>);
+    /// Drop probe state (removal).
+    fn clear_probe(&self);
+    /// Exact per-query probe when the backend can afford one (local
+    /// replicas with probe sampling off); `None` means use
+    /// `probe_snapshot`. Returns `(cached_tokens, outstanding)`.
+    fn probe_live(&self, tokens: &[i32]) -> Option<(usize, u64)>;
+    /// Latest snapshot, refreshed by the backend if it can and the cached
+    /// one is older than `max_age_us`.
+    fn probe_snapshot(&self, max_age_us: u64) -> Option<Arc<ProbeSnapshot>>;
+
+    /// Backend label for stats and traces.
+    fn kind(&self) -> &'static str;
+}
+
+struct InboxQ<T> {
+    reqs: VecDeque<Request<T>>,
+    ctrl: VecDeque<Control>,
+}
+
+/// The shared queue mechanics both backends build on: a mutex inbox with
+/// lock-free counters and the open/epoch membership state, every
+/// transition linearized under the inbox lock (see the module contract).
+pub(crate) struct QueueCore<T> {
+    inbox: Mutex<InboxQ<T>>,
+    /// queued-request count, readable without the inbox lock; every
+    /// update happens under the lock so racing pulls/steals/salvage can
+    /// never wrap it
+    queued: AtomicUsize,
+    /// tokens routed here and not yet reported complete
+    outstanding: AtomicU64,
+    routed: AtomicU64,
+    open: AtomicBool,
+    /// bumped on every close/reopen; `pull` fences stale epochs
+    epoch: AtomicU64,
+}
+
+impl<T> QueueCore<T> {
+    pub(crate) fn new() -> QueueCore<T> {
+        QueueCore {
+            inbox: Mutex::new(InboxQ { reqs: VecDeque::new(), ctrl: VecDeque::new() }),
+            queued: AtomicUsize::new(0),
+            outstanding: AtomicU64::new(0),
+            routed: AtomicU64::new(0),
+            open: AtomicBool::new(true),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn is_open(&self) -> bool {
+        self.open.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    pub(crate) fn queued(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn routed(&self) -> u64 {
+        self.routed.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn charge(&self, tokens: u64) {
+        self.outstanding.fetch_add(tokens, Ordering::Relaxed);
+    }
+
+    pub(crate) fn release(&self, tokens: u64) {
+        sat_sub(&self.outstanding, tokens);
+    }
+
+    pub(crate) fn outstanding(&self) -> u64 {
+        self.outstanding.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn submit(&self, req: Request<T>) -> Result<(), Request<T>> {
+        let mut inbox = self.inbox.lock().unwrap();
+        // linearize against `close_salvage_at`: it flips the flag and drains
+        // under this same lock, so either we land before the drain (and
+        // get salvaged) or we see the flag and hand the request back
+        if !self.open.load(Ordering::Acquire) {
+            return Err(req);
+        }
+        inbox.reqs.push_back(req);
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub(crate) fn pull(&self, epoch: u64, max_n: usize) -> Vec<Request<T>> {
+        let mut out = Vec::new();
+        if max_n == 0 {
+            return out;
+        }
+        let mut inbox = self.inbox.lock().unwrap();
+        // fence under the lock: close/reopen bumps the epoch under this
+        // same lock, so a stale worker cannot drain a successor's requests
+        if !self.open.load(Ordering::Acquire) || self.epoch.load(Ordering::Acquire) != epoch
+        {
+            return out;
+        }
+        while out.len() < max_n {
+            let Some(r) = inbox.reqs.pop_front() else { break };
+            out.push(r);
+        }
+        if !out.is_empty() {
+            self.queued.fetch_sub(out.len(), Ordering::Relaxed);
+        }
+        out
+    }
+
+    pub(crate) fn steal_back(&self, max_n: usize) -> Vec<Request<T>> {
+        let mut out = Vec::new();
+        if max_n == 0 {
+            return out;
+        }
+        let mut inbox = self.inbox.lock().unwrap();
+        if !self.open.load(Ordering::Acquire) {
+            return out;
+        }
+        while out.len() < max_n {
+            let Some(r) = inbox.reqs.pop_back() else { break };
+            out.push(r);
+        }
+        if !out.is_empty() {
+            self.queued.fetch_sub(out.len(), Ordering::Relaxed);
+        }
+        out
+    }
+
+    pub(crate) fn restore_back(&self, reqs: Vec<Request<T>>) -> Vec<Request<T>> {
+        if reqs.is_empty() {
+            return reqs;
+        }
+        let mut inbox = self.inbox.lock().unwrap();
+        if !self.open.load(Ordering::Acquire) {
+            // closed while the loot was out: hand it back for re-routing
+            return reqs;
+        }
+        let n = reqs.len();
+        // reverse of the pop order restores the victim's original order
+        for r in reqs.into_iter().rev() {
+            inbox.reqs.push_back(r);
+        }
+        self.queued.fetch_add(n, Ordering::Relaxed);
+        Vec::new()
+    }
+
+    /// Put pulled requests back at the *front* in their original order (a
+    /// socket reply that failed to reach the worker). Returns refusals as
+    /// in [`QueueCore::restore_back`].
+    pub(crate) fn restore_front(&self, reqs: Vec<Request<T>>) -> Vec<Request<T>> {
+        if reqs.is_empty() {
+            return reqs;
+        }
+        let mut inbox = self.inbox.lock().unwrap();
+        if !self.open.load(Ordering::Acquire) {
+            return reqs;
+        }
+        let n = reqs.len();
+        for r in reqs.into_iter().rev() {
+            inbox.reqs.push_front(r);
+        }
+        self.queued.fetch_add(n, Ordering::Relaxed);
+        Vec::new()
+    }
+
+    pub(crate) fn push_ctrl(&self, c: Control) {
+        let mut inbox = self.inbox.lock().unwrap();
+        if self.open.load(Ordering::Acquire) {
+            inbox.ctrl.push_back(c);
+        }
+    }
+
+    pub(crate) fn take_ctrl_at(&self, epoch: u64) -> Vec<Control> {
+        let mut inbox = self.inbox.lock().unwrap();
+        if !self.open.load(Ordering::Acquire) || self.epoch.load(Ordering::Acquire) != epoch
+        {
+            return Vec::new();
+        }
+        inbox.ctrl.drain(..).collect()
+    }
+
+    pub(crate) fn close_salvage_at(&self, epoch: u64) -> Option<Vec<Request<T>>> {
+        let mut inbox = self.inbox.lock().unwrap();
+        // the epoch fence and the flip happen under the same lock, so a
+        // removal aimed at a dead worker's epoch can never close the slot
+        // out from under a revived successor
+        if !self.open.load(Ordering::Acquire) || self.epoch.load(Ordering::Acquire) != epoch
+        {
+            return None;
+        }
+        // flip + bump before draining, all under the lock: submits and
+        // stale pulls are linearized out (see the module contract)
+        self.open.store(false, Ordering::Release);
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        inbox.ctrl.clear();
+        let out: Vec<Request<T>> = inbox.reqs.drain(..).collect();
+        if !out.is_empty() {
+            self.queued.fetch_sub(out.len(), Ordering::Relaxed);
+        }
+        // in-flight work died with the replica; its load charge goes too
+        self.outstanding.store(0, Ordering::Release);
+        Some(out)
+    }
+
+    pub(crate) fn reopen(&self) -> u64 {
+        let _inbox = self.inbox.lock().unwrap();
+        let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+        self.open.store(true, Ordering::Release);
+        epoch
+    }
+}
+
+/// Saturating atomic subtract (completion reports can race steals).
+pub(crate) fn sat_sub(a: &AtomicU64, v: u64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_sub(v);
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// The in-process backend: the pre-trait mutex inbox, verbatim, plus the
+/// probe registry and an optional snapshot cache for TTL-sampled probing
+/// (`snap_on_pull` refreshes the snapshot on every worker pull so the
+/// router's cached view tracks the serving loop at zero router-side cost).
+pub struct LocalTransport<T> {
+    core: QueueCore<T>,
+    probe: RwLock<Option<Arc<dyn ReplicaProbe>>>,
+    snap: Mutex<Option<(Instant, Arc<ProbeSnapshot>)>>,
+    snap_on_pull: bool,
+}
+
+impl<T: Send + 'static> LocalTransport<T> {
+    pub fn new(snap_on_pull: bool) -> LocalTransport<T> {
+        LocalTransport {
+            core: QueueCore::new(),
+            probe: RwLock::new(None),
+            snap: Mutex::new(None),
+            snap_on_pull,
+        }
+    }
+
+    fn refresh_snapshot(&self) -> Option<Arc<ProbeSnapshot>> {
+        let probe = self.probe.read().unwrap().clone()?;
+        let snap = Arc::new(probe.probe_snapshot());
+        *self.snap.lock().unwrap() = Some((Instant::now(), Arc::clone(&snap)));
+        Some(snap)
+    }
+}
+
+impl<T: Send + 'static> ReplicaTransport<T> for LocalTransport<T> {
+    fn submit(&self, req: Request<T>) -> Result<(), Request<T>> {
+        self.core.submit(req)
+    }
+
+    fn pull(&self, epoch: u64, max_n: usize) -> Vec<Request<T>> {
+        let out = self.core.pull(epoch, max_n);
+        if self.snap_on_pull {
+            // the worker pays for its own snapshot at its own cadence —
+            // the router never has to lock this replica's scheduler. The
+            // walk is bounded by the replica's KV pool (at most one
+            // cached boundary per physical block), i.e. small next to
+            // the prefill/decode work a pull precedes.
+            self.refresh_snapshot();
+        }
+        out
+    }
+
+    fn steal_back(&self, max_n: usize) -> Vec<Request<T>> {
+        self.core.steal_back(max_n)
+    }
+
+    fn restore_back(&self, reqs: Vec<Request<T>>) -> Vec<Request<T>> {
+        self.core.restore_back(reqs)
+    }
+
+    fn push_ctrl(&self, c: Control) {
+        self.core.push_ctrl(c);
+    }
+
+    fn take_ctrl_at(&self, epoch: u64) -> Vec<Control> {
+        self.core.take_ctrl_at(epoch)
+    }
+
+    fn close_salvage_at(&self, epoch: u64) -> Option<Vec<Request<T>>> {
+        self.core.close_salvage_at(epoch)
+    }
+
+    fn reopen(&self) -> u64 {
+        self.core.reopen()
+    }
+
+    fn is_open(&self) -> bool {
+        self.core.is_open()
+    }
+
+    fn epoch(&self) -> u64 {
+        self.core.epoch()
+    }
+
+    fn queued(&self) -> usize {
+        self.core.queued()
+    }
+
+    fn routed(&self) -> u64 {
+        self.core.routed()
+    }
+
+    fn charge(&self, tokens: u64) {
+        self.core.charge(tokens);
+    }
+
+    fn release(&self, tokens: u64) {
+        self.core.release(tokens);
+    }
+
+    fn outstanding(&self) -> u64 {
+        self.core.outstanding()
+    }
+
+    fn register_probe(&self, probe: Arc<dyn ReplicaProbe>) {
+        *self.probe.write().unwrap() = Some(probe);
+    }
+
+    fn clear_probe(&self) {
+        *self.probe.write().unwrap() = None;
+        *self.snap.lock().unwrap() = None;
+    }
+
+    fn probe_live(&self, tokens: &[i32]) -> Option<(usize, u64)> {
+        let probe = self.probe.read().unwrap().clone()?;
+        Some((probe.probe_cached_tokens(tokens), probe.probe_outstanding_tokens()))
+    }
+
+    fn probe_snapshot(&self, max_age_us: u64) -> Option<Arc<ProbeSnapshot>> {
+        {
+            let snap = self.snap.lock().unwrap();
+            if let Some((at, s)) = snap.as_ref() {
+                if at.elapsed().as_micros() <= max_age_us as u128 {
+                    return Some(Arc::clone(s));
+                }
+            }
+        }
+        // stale or absent: refresh from the live probe (one scheduler
+        // lock per TTL window, not per submission)
+        self.refresh_snapshot()
+    }
+
+    fn kind(&self) -> &'static str {
+        "local"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(group: u64, tokens: Vec<i32>) -> Request<()> {
+        Request { group, tokens, payload: () }
+    }
+
+    #[test]
+    fn core_fifo_and_counters() {
+        let c: QueueCore<()> = QueueCore::new();
+        for g in 0..4u64 {
+            assert!(c.submit(req(g, vec![1, 2])).is_ok());
+        }
+        assert_eq!(c.queued(), 4);
+        assert_eq!(c.routed(), 4);
+        let out = c.pull(0, 3);
+        assert_eq!(out.iter().map(|r| r.group).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(c.queued(), 1);
+    }
+
+    #[test]
+    fn core_steal_back_is_lifo_and_restore_preserves_order() {
+        let c: QueueCore<()> = QueueCore::new();
+        for g in 0..4u64 {
+            c.submit(req(g, vec![1])).unwrap();
+        }
+        let stolen = c.steal_back(2);
+        assert_eq!(stolen.iter().map(|r| r.group).collect::<Vec<_>>(), vec![3, 2]);
+        assert_eq!(c.queued(), 2);
+        assert!(c.restore_back(stolen).is_empty());
+        assert_eq!(c.queued(), 4);
+        let out = c.pull(0, 4);
+        assert_eq!(out.iter().map(|r| r.group).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn core_close_salvage_fences_and_drains() {
+        let c: QueueCore<()> = QueueCore::new();
+        c.submit(req(1, vec![1])).unwrap();
+        c.push_ctrl(Control::Drain);
+        c.charge(10);
+        // a removal fenced at the wrong epoch must not close the slot
+        assert!(c.close_salvage_at(7).is_none(), "stale-epoch close refused");
+        assert!(c.is_open());
+        let salvaged = c.close_salvage_at(0).expect("current-epoch close");
+        assert_eq!(salvaged.len(), 1);
+        assert!(!c.is_open());
+        assert_eq!(c.epoch(), 1);
+        assert_eq!(c.queued(), 0);
+        assert_eq!(c.outstanding(), 0, "charge released with the replica");
+        // closed endpoint refuses everything
+        assert!(c.submit(req(2, vec![1])).is_err());
+        assert!(c.pull(1, 4).is_empty());
+        assert!(c.take_ctrl_at(1).is_empty());
+        assert!(c.close_salvage_at(1).is_none(), "double close is refused");
+        // revive bumps the epoch again; the old epoch stays fenced
+        let e = c.reopen();
+        assert_eq!(e, 2);
+        c.submit(req(3, vec![1])).unwrap();
+        assert!(c.pull(1, 4).is_empty(), "stale epoch fenced");
+        assert_eq!(c.pull(2, 4).len(), 1);
+        // and a removal aimed at the dead worker's old epoch cannot kill
+        // the revived successor
+        assert!(c.close_salvage_at(1).is_none());
+        assert!(c.is_open(), "successor survives a stale removal");
+    }
+
+    #[test]
+    fn restore_on_closed_endpoint_hands_requests_back() {
+        let c: QueueCore<()> = QueueCore::new();
+        for g in 0..3u64 {
+            c.submit(req(g, vec![1])).unwrap();
+        }
+        let stolen = c.steal_back(2);
+        let _ = c.close_salvage_at(0);
+        let refused = c.restore_back(stolen);
+        assert_eq!(refused.len(), 2, "closed endpoint refuses restored loot");
+        assert_eq!(c.queued(), 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let mut prefixes = HashMap::new();
+        prefixes.insert(fnv_tokens(&[1, 2, 3, 4]), 4);
+        prefixes.insert(fnv_tokens(&[1, 2, 3, 4, 5, 6, 7, 8]), 8);
+        let s = ProbeSnapshot { outstanding: 42, prefixes };
+        let j = s.to_json();
+        let back = ProbeSnapshot::from_json(&j).expect("roundtrip");
+        assert_eq!(back.outstanding, 42);
+        assert_eq!(back.prefixes, s.prefixes);
+        // the query side finds the longest recorded boundary
+        assert_eq!(back.cached_tokens(&[1, 2, 3, 4, 5, 6, 7, 8, 9], 4), 8);
+        assert_eq!(back.cached_tokens(&[1, 2, 3, 4, 9, 9, 9, 9], 4), 4);
+        assert_eq!(back.cached_tokens(&[9, 2, 3, 4], 4), 0);
+    }
+
+    #[test]
+    fn local_transport_snapshot_refreshes_on_pull() {
+        struct FakeProbe(AtomicU64);
+        impl ReplicaProbe for FakeProbe {
+            fn probe_cached_tokens(&self, _: &[i32]) -> usize {
+                0
+            }
+            fn probe_outstanding_tokens(&self) -> u64 {
+                self.0.load(Ordering::Relaxed)
+            }
+        }
+        let t: LocalTransport<()> = LocalTransport::new(true);
+        let probe = Arc::new(FakeProbe(AtomicU64::new(7)));
+        t.register_probe(probe.clone());
+        // never-stale TTL: the snapshot only moves when a pull refreshes it
+        let s = t.probe_snapshot(u64::MAX).expect("probe registered");
+        assert_eq!(s.outstanding, 7);
+        probe.0.store(9, Ordering::Relaxed);
+        let s = t.probe_snapshot(u64::MAX).expect("cached");
+        assert_eq!(s.outstanding, 7, "cached snapshot served within TTL");
+        t.pull(0, 1);
+        let s = t.probe_snapshot(u64::MAX).expect("refreshed");
+        assert_eq!(s.outstanding, 9, "pull refreshed the snapshot");
+        // TTL 0 forces a live refresh
+        probe.0.store(11, Ordering::Relaxed);
+        let s = t.probe_snapshot(0).expect("live");
+        assert_eq!(s.outstanding, 11);
+    }
+}

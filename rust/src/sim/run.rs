@@ -65,6 +65,12 @@ pub struct SimConfig {
     /// requeue through the router onto the survivors (zero lost, no
     /// double-charge against the Eq. 3 gate)
     pub fail_replica: Option<(usize, u64)>,
+    /// per-hop router↔replica transport latency in seconds (0 = the
+    /// in-process inbox model): every productive refill pull pays one
+    /// request/response round-trip — two hops — before decode resumes.
+    /// This is the `SocketTransport` / multi-node deployment model; sweep
+    /// it to predict when remote replicas stop paying off
+    pub transport_hop_s: f64,
     pub seed: u64,
 }
 
@@ -92,6 +98,7 @@ impl SimConfig {
             n_prompt_families: 1,
             family_prefix_frac: 0.0,
             fail_replica: None,
+            transport_hop_s: 0.0,
             seed: 1,
         }
     }
@@ -147,6 +154,9 @@ pub struct SimReport {
     /// queued/in-flight requests requeued by replica removals — every one
     /// re-routed onto a survivor, none lost
     pub requeued_requests: u64,
+    /// refill pull round-trips that paid transport latency
+    /// (`transport_hop_s > 0` only)
+    pub transport_hops: u64,
     pub timeline: Vec<Interval>,
 }
 
@@ -245,6 +255,7 @@ pub fn run_sync(cfg: &SimConfig) -> SimReport {
         stolen_requests: 0,
         failed_replicas: 0,
         requeued_requests: 0,
+        transport_hops: 0,
         timeline,
     }
 }
@@ -317,6 +328,7 @@ pub fn run_overlap(cfg: &SimConfig) -> SimReport {
         stolen_requests: 0,
         failed_replicas: 0,
         requeued_requests: 0,
+        transport_hops: 0,
         timeline,
     }
 }
@@ -495,6 +507,8 @@ struct RefillOutcome {
     paid_prompt_tokens: f64,
     cached_prompt_tokens: f64,
     stolen: u64,
+    /// transport round-trips paid by this wave (remote-replica model)
+    hops: u64,
 }
 
 /// Refill replica `d`'s empty slots from its router inbox. When the inbox
@@ -523,6 +537,7 @@ fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
     let mut paid = 0.0;
     let mut cached = 0.0;
     let mut stolen = 0u64;
+    let mut popped = false;
     let mut steal_budget = cfg.route_steal_max;
     while devices[d].slots.len() < slots_per_dev {
         let Some(gid) = router.inboxes[d].pop_front() else {
@@ -576,6 +591,7 @@ fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
             produced: 0.0,
             born_version: version,
         });
+        popped = true;
     }
     if paid > 0.0 {
         // prefill cost for the uncached prompt tokens only
@@ -583,7 +599,17 @@ fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
         let dev = &mut devices[d];
         dev.resume_at = dev.resume_at.max(now) + t;
     }
-    RefillOutcome { paid_prompt_tokens: paid, cached_prompt_tokens: cached, stolen }
+    let mut hops = 0u64;
+    if popped && cfg.transport_hop_s > 0.0 {
+        // remote-replica model: a productive refill is one pull RPC —
+        // request out, requests back — before decode resumes on this
+        // device (submission-side hops are pipelined by the router and
+        // never block a replica, so pulls are the latency that matters)
+        hops = 1;
+        let dev = &mut devices[d];
+        dev.resume_at = dev.resume_at.max(now) + 2.0 * cfg.transport_hop_s;
+    }
+    RefillOutcome { paid_prompt_tokens: paid, cached_prompt_tokens: cached, stolen, hops }
 }
 
 /// One refill pass over the whole fleet — every alive replica serves its
@@ -593,8 +619,12 @@ fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
 fn refill_all(devices: &mut [GenDevice], router: &mut SimRouter, rng: &mut Rng,
               submitted: &mut u64, version: u64, now: f64, sampler: &LenSampler,
               cfg: &SimConfig, slots_per_dev: usize) -> RefillOutcome {
-    let mut out =
-        RefillOutcome { paid_prompt_tokens: 0.0, cached_prompt_tokens: 0.0, stolen: 0 };
+    let mut out = RefillOutcome {
+        paid_prompt_tokens: 0.0,
+        cached_prompt_tokens: 0.0,
+        stolen: 0,
+        hops: 0,
+    };
     for d in 0..devices.len() {
         if !router.alive[d] {
             continue;
@@ -612,6 +642,7 @@ fn refill_all(devices: &mut [GenDevice], router: &mut SimRouter, rng: &mut Rng,
             out.paid_prompt_tokens += o.paid_prompt_tokens;
             out.cached_prompt_tokens += o.cached_prompt_tokens;
             out.stolen += o.stolen;
+            out.hops += o.hops;
         }
     }
     out
@@ -692,6 +723,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         .collect();
     let mut router = SimRouter::new(n_gen, cfg.route_policy);
     let mut stolen_requests = 0u64;
+    let mut transport_hops = 0u64;
     let mut failed_replicas = 0u64;
     let mut requeued_requests = 0u64;
 
@@ -716,6 +748,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
     prefill_tokens += o.paid_prompt_tokens;
     cached_prefill_tokens += o.cached_prompt_tokens;
     stolen_requests += o.stolen;
+    transport_hops += o.hops;
 
     let max_iters = cfg.n_steps * cfg.batch_seqs * 4 + 10_000;
     let mut iters = 0;
@@ -770,6 +803,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                 prefill_tokens += o.paid_prompt_tokens;
                 cached_prefill_tokens += o.cached_prompt_tokens;
                 stolen_requests += o.stolen;
+                transport_hops += o.hops;
                 continue;
             }
             // all devices empty, all inboxes dry, trainer idle: gate
@@ -860,6 +894,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         prefill_tokens += o.paid_prompt_tokens;
         cached_prefill_tokens += o.cached_prompt_tokens;
         stolen_requests += o.stolen;
+        transport_hops += o.hops;
     }
 
     let busy: f64 = devices.iter().map(|d| d.busy_s).sum();
@@ -887,6 +922,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         stolen_requests,
         failed_replicas,
         requeued_requests,
+        transport_hops,
         timeline,
     }
 }
@@ -1155,6 +1191,42 @@ mod tests {
             assert_eq!(clean.failed_replicas, 0);
             assert_eq!(clean.requeued_requests, 0);
         }
+    }
+
+    #[test]
+    fn transport_hop_latency_predicts_remote_replica_cost() {
+        // ISSUE-4 tentpole, sim leg: model per-hop submit/pull latency so
+        // the sim predicts when remote replicas stop paying off. Loopback
+        // (socket-transport) hops are within noise of the in-process
+        // model; WAN-grade hops serialize every refill behind a
+        // round-trip and throughput collapses.
+        let mut cfg = small_cfg(MODEL_1_5B);
+        let local = run_async(&cfg);
+        assert_eq!(local.transport_hops, 0, "hop accounting off at hop=0");
+        cfg.transport_hop_s = 1e-4; // ~100us loopback socket
+        let cheap = run_async(&cfg);
+        assert!(cheap.transport_hops > 0);
+        cfg.transport_hop_s = 60.0; // remote replicas far past paying off
+        let dear = run_async(&cfg);
+        assert!(
+            cheap.effective_tps >= 0.95 * local.effective_tps,
+            "loopback hops must be ~free: {} vs {}",
+            cheap.effective_tps,
+            local.effective_tps
+        );
+        assert!(
+            dear.effective_tps < cheap.effective_tps,
+            "hop cost must be monotone: {} !< {}",
+            dear.effective_tps,
+            cheap.effective_tps
+        );
+        assert!(
+            dear.effective_tps < 0.9 * local.effective_tps,
+            "60s hops must visibly hurt: {} vs {}",
+            dear.effective_tps,
+            local.effective_tps
+        );
+        assert!(dear.total_s > local.total_s);
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Bench regression diff (ISSUE 4 satellite): compares the BENCH_*.json
+//! records emitted by the bench suites against a committed baseline and
+//! fails (exit 1) on a throughput regression beyond the tolerance.
+//!
+//!     cargo run --release --bin bench_diff -- \
+//!         [--baseline benches/baseline] [--tolerance 0.15] BENCH_*.json
+//!
+//! Only *deterministic* metrics participate in the gate: prefill-token
+//! counts, savings/hit-rate ratios, and the simulator's (simulated-time)
+//! throughputs and hours. Wall-clock metrics (`mean_s`, `p50_s`, `p95_s`,
+//! `throughput`, `wall_s`) and thread-timing-dependent records (the
+//! `transport` sweep) vary by machine and are reported but never gated.
+//!
+//! A missing baseline file passes with a warning — seed the baseline by
+//! copying a trusted run's BENCH_*.json into `benches/baseline/`.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use areal::util::json::Json;
+
+/// Metric direction: does bigger mean better?
+fn direction(key: &str) -> Option<bool> {
+    match key {
+        // higher is better
+        "savings" | "hit_rate" | "speedup" | "effective_tps"
+        | "effective_tps_nocache" | "areal_tps" | "sync_tps"
+        | "gen_tps_interruptible" | "gen_tps_drain" => Some(true),
+        // lower is better
+        "computed_tokens" | "computed_tokens_nocache" | "areal_hours"
+        | "sync_hours" => Some(false),
+        // identity fields, counters, and wall-clock metrics: not gated
+        _ => None,
+    }
+}
+
+/// Records whose metrics depend on live thread timing — never gated.
+/// (The `sim_*` timing records are already ungated because their only
+/// metrics are wall-clock keys `direction` ignores.)
+fn nondeterministic(name: &str) -> bool {
+    name == "transport"
+}
+
+/// Identity of a record within its file: its name plus every string field
+/// and the integer-valued sweep discriminators.
+fn record_key(r: &Json) -> String {
+    let Some(obj) = r.as_obj() else { return String::from("<malformed>") };
+    let mut parts: Vec<String> = Vec::new();
+    for (k, v) in obj {
+        match v {
+            Json::Str(s) => parts.push(format!("{k}={s}")),
+            Json::Num(n)
+                if matches!(
+                    k.as_str(),
+                    "group_size" | "replicas" | "gpus" | "nodes"
+                ) =>
+            {
+                parts.push(format!("{k}={n}"))
+            }
+            _ => {}
+        }
+    }
+    parts.join(",")
+}
+
+fn records_by_key(file: &Json) -> BTreeMap<String, &Json> {
+    let mut out = BTreeMap::new();
+    if let Some(arr) = file.get("records").and_then(Json::as_arr) {
+        for r in arr {
+            out.insert(record_key(r), r);
+        }
+    }
+    out
+}
+
+struct Outcome {
+    compared: usize,
+    regressions: usize,
+    warnings: usize,
+}
+
+fn diff_file(path: &str, baseline_dir: &str, tolerance: f64) -> Outcome {
+    let mut out = Outcome { compared: 0, regressions: 0, warnings: 0 };
+    let cur_text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("FAIL {path}: unreadable ({e})");
+            out.regressions += 1;
+            return out;
+        }
+    };
+    let cur = match Json::parse(&cur_text) {
+        Ok(j) => j,
+        Err(e) => {
+            println!("FAIL {path}: bad json ({e})");
+            out.regressions += 1;
+            return out;
+        }
+    };
+    let base_name = std::path::Path::new(path)
+        .file_name()
+        .map(|f| f.to_string_lossy().into_owned())
+        .unwrap_or_else(|| path.to_string());
+    let base_path = format!("{baseline_dir}/{base_name}");
+    let base_text = match std::fs::read_to_string(&base_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "WARN {path}: no committed baseline at {base_path} — skipping \
+                 (copy a trusted run's {base_name} there to arm the gate)"
+            );
+            out.warnings += 1;
+            return out;
+        }
+    };
+    let base = match Json::parse(&base_text) {
+        Ok(j) => j,
+        Err(e) => {
+            println!("FAIL {base_path}: bad baseline json ({e})");
+            out.regressions += 1;
+            return out;
+        }
+    };
+    let cur_recs = records_by_key(&cur);
+    let base_recs = records_by_key(&base);
+    for (key, b) in &base_recs {
+        let Some(c) = cur_recs.get(key) else {
+            println!("WARN {path}: record gone vs baseline: {key}");
+            out.warnings += 1;
+            continue;
+        };
+        let name = b.get_str("name").unwrap_or("");
+        let gated = !nondeterministic(name);
+        let Some(bobj) = b.as_obj() else { continue };
+        for (metric, bval) in bobj {
+            let Some(bigger_better) = direction(metric) else { continue };
+            let (Some(bv), Some(cv)) = (bval.as_f64(), c.get_f64(metric)) else {
+                continue;
+            };
+            if bv == 0.0 {
+                continue;
+            }
+            let ratio = cv / bv;
+            let regressed = if bigger_better {
+                ratio < 1.0 - tolerance
+            } else {
+                ratio > 1.0 + tolerance
+            };
+            if regressed && gated {
+                println!(
+                    "FAIL {path}: {key} :: {metric} {bv:.4} -> {cv:.4} \
+                     ({:+.1}% vs {:.0}% tolerance)",
+                    (ratio - 1.0) * 100.0,
+                    tolerance * 100.0
+                );
+                out.regressions += 1;
+            } else if regressed {
+                println!(
+                    "note {path}: {key} :: {metric} {bv:.4} -> {cv:.4} \
+                     (ungated wall-clock/threaded record)"
+                );
+            }
+            out.compared += 1;
+        }
+    }
+    for key in cur_recs.keys() {
+        if !base_recs.contains_key(key) {
+            println!("note {path}: new record (no baseline): {key}");
+        }
+    }
+    out
+}
+
+fn main() -> ExitCode {
+    let mut baseline_dir = String::from("benches/baseline");
+    let mut tolerance = 0.15f64;
+    let mut files: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--baseline" => baseline_dir = args.next().expect("--baseline DIR"),
+            "--tolerance" => {
+                tolerance = args
+                    .next()
+                    .expect("--tolerance F")
+                    .parse()
+                    .expect("tolerance must be a float")
+            }
+            other => files.push(other.to_string()),
+        }
+    }
+    if files.is_empty() {
+        eprintln!(
+            "usage: bench_diff [--baseline DIR] [--tolerance F] BENCH_*.json"
+        );
+        return ExitCode::from(2);
+    }
+    let mut total = Outcome { compared: 0, regressions: 0, warnings: 0 };
+    for f in &files {
+        let o = diff_file(f, &baseline_dir, tolerance);
+        total.compared += o.compared;
+        total.regressions += o.regressions;
+        total.warnings += o.warnings;
+    }
+    println!(
+        "bench_diff: {} metrics compared, {} regressions, {} warnings \
+         (tolerance {:.0}%)",
+        total.compared,
+        total.regressions,
+        total.warnings,
+        tolerance * 100.0
+    );
+    if total.regressions > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
