@@ -87,6 +87,42 @@ fn main() {
         ]));
     }
 
+    println!("\n== gen/train rebalancing on a drifting workload (64 GPUs) ==");
+    {
+        // ISSUE-5 acceptance sweep: output lengths collapse mid-run; every
+        // static gen_fraction is tuned for one phase, the
+        // staleness-headroom rebalancer re-splits at the drift
+        // the exact acceptance-test workload (one constructor, so these
+        // baseline records always correspond to the tested scenario)
+        let drift_cfg = SimConfig::drift_rebalance_workload;
+        let mut best_static = f64::NEG_INFINITY;
+        for frac in [0.5_f64, 0.625, 0.75, 0.875] {
+            let r = sim::run_async(&drift_cfg(frac, false));
+            best_static = best_static.max(r.effective_tps);
+            println!("  static {frac:>5}: {:>8.1} ktok/s", r.effective_tps / 1e3);
+            records.push(Json::obj(vec![
+                ("name", Json::str("rebalance_drift")),
+                ("policy", Json::str(&format!("static_{frac}"))),
+                ("effective_tps", Json::num(r.effective_tps)),
+            ]));
+        }
+        let dyn_r = sim::run_async(&drift_cfg(0.75, true));
+        println!(
+            "  dynamic     : {:>8.1} ktok/s ({:+.1}% vs best static; {} gen->train, \
+             {} train->gen)",
+            dyn_r.effective_tps / 1e3,
+            100.0 * (dyn_r.effective_tps / best_static - 1.0),
+            dyn_r.gen_to_train,
+            dyn_r.train_to_gen
+        );
+        records.push(Json::obj(vec![
+            ("name", Json::str("rebalance_drift")),
+            ("policy", Json::str("dynamic")),
+            ("effective_tps", Json::num(dyn_r.effective_tps)),
+            ("speedup", Json::num(dyn_r.effective_tps / best_static)),
+        ]));
+    }
+
     println!("\n== simulator cost itself ==");
     let bench = Bench::quick();
     let cfg = {

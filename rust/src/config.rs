@@ -66,6 +66,35 @@ impl TransportKind {
     }
 }
 
+/// Gen/train replica rebalancing policy (DESIGN.md §7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceMode {
+    /// static fleet: the startup split never changes
+    Off,
+    /// staleness-headroom threshold policy with hysteresis: a control
+    /// loop retires gen replicas into the train role when the Eq. 3
+    /// headroom collapses, and re-adds them when the gate is persistently
+    /// open with deep inboxes
+    Threshold,
+}
+
+impl RebalanceMode {
+    pub fn parse(s: &str) -> Result<RebalanceMode> {
+        Ok(match s {
+            "off" => RebalanceMode::Off,
+            "threshold" => RebalanceMode::Threshold,
+            other => bail!("unknown rebalance mode '{other}' (off|threshold)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RebalanceMode::Off => "off",
+            RebalanceMode::Threshold => "threshold",
+        }
+    }
+}
+
 /// Advantage baseline selection (paper §B.1 + Appendix C.4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BaselineCfg {
@@ -132,6 +161,21 @@ pub struct Config {
     /// re-added through `add_replica` behind the epoch fence this many
     /// times before its failure is final (0 = no restart)
     pub replica_restarts: usize,
+    /// gen/train rebalancing: `off` (static fleet) or `threshold`
+    /// (staleness-headroom-driven conversion of replicas between the
+    /// generation and training roles)
+    pub rebalance: RebalanceMode,
+    /// rebalancer observation interval in seconds
+    pub rebalance_interval_s: f64,
+    /// floor on alive generation replicas under `rebalance=threshold`
+    pub rebalance_min_gen: usize,
+    /// ceiling on generation replicas under `rebalance=threshold`
+    /// (0 = the full `n_rollout_workers` fleet)
+    pub rebalance_max_gen: usize,
+    /// hysteresis band in units of training batches: the gate counts as
+    /// collapsed at headroom <= 1 batch and as open at
+    /// >= 1 + this many batches; observations in between never convert
+    pub rebalance_hysteresis: f64,
 
     // rollout
     pub task: String,
@@ -191,6 +235,11 @@ impl Default for Config {
             socket_addr: "127.0.0.1:0".into(),
             socket_max_frame: 1 << 20,
             replica_restarts: 0,
+            rebalance: RebalanceMode::Off,
+            rebalance_interval_s: 0.25,
+            rebalance_min_gen: 1,
+            rebalance_max_gen: 0,
+            rebalance_hysteresis: 1.0,
             task: "math".into(),
             level_lo: 1,
             level_hi: 3,
@@ -215,6 +264,63 @@ impl Default for Config {
 }
 
 impl Config {
+    /// The canonical config-key inventory: every primary key accepted by
+    /// [`Config::set`] (aliases like `eta`/`workers`/`steps` excluded),
+    /// paired with a sample value `set` accepts. Drift is closed in both
+    /// directions: `set` rejects any key missing from this list (so a new
+    /// match arm is dead until its entry — and therefore its
+    /// docs/CONFIG.md row, via `tests::config_md_documents_every_key` —
+    /// exists), and `tests::keys_inventory_matches_set` feeds every entry
+    /// back through `set` (so a listed key without an arm fails too).
+    // explicit 'static: elided lifetimes in associated consts are not
+    // portable across toolchains
+    #[allow(clippy::redundant_static_lifetimes)]
+    pub const KEYS: &'static [(&'static str, &'static str)] = &[
+        ("artifacts_dir", "artifacts"),
+        ("tier", "tiny"),
+        ("mode", "async"),
+        ("max_staleness", "4"),
+        ("interruptible", "true"),
+        ("n_rollout_workers", "2"),
+        ("reward_threads", "2"),
+        ("seed", "1"),
+        ("kv_block_size", "0"),
+        ("kv_blocks", "0"),
+        ("prefix_cache", "true"),
+        ("route_policy", "probe"),
+        ("route_steal_max", "4"),
+        ("route_probe_penalty", "0.05"),
+        ("route_probe_ttl_us", "500"),
+        ("replica_transport", "local"),
+        ("socket_addr", "127.0.0.1:0"),
+        ("socket_max_frame", "1048576"),
+        ("replica_restarts", "0"),
+        ("rebalance", "threshold"),
+        ("rebalance_interval_s", "0.25"),
+        ("rebalance_min_gen", "1"),
+        ("rebalance_max_gen", "0"),
+        ("rebalance_hysteresis", "1.0"),
+        ("task", "math"),
+        ("level_lo", "1"),
+        ("level_hi", "3"),
+        ("temperature", "1.0"),
+        ("group_size", "4"),
+        ("refill_fraction", "0.25"),
+        ("global_batch", "32"),
+        ("ppo_minibatches", "4"),
+        ("ppo_steps", "50"),
+        ("lr", "0.0002"),
+        ("baseline", "group"),
+        ("decoupled", "true"),
+        ("dynamic_batching", "true"),
+        ("token_budget", "2048"),
+        ("sft_steps", "0"),
+        ("sft_lr", "0.001"),
+        ("out_dir", "runs/default"),
+        ("checkpoint_every", "0"),
+        ("eval_samples", "4"),
+    ];
+
     /// Load from a JSON file then apply `key=value` overrides.
     pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Config> {
         let mut cfg = Config::default();
@@ -237,8 +343,16 @@ impl Config {
         Ok(cfg)
     }
 
-    /// Set a single field by name.
+    /// Set a single field by name. Membership is checked against
+    /// [`Config::KEYS`] (plus the aliases) *before* the match, so a new
+    /// match arm added without a `KEYS` entry is dead on arrival — the
+    /// key is rejected here until the inventory (and therefore
+    /// docs/CONFIG.md, via `config_md_documents_every_key`) is updated.
     pub fn set(&mut self, key: &str, val: &str) -> Result<()> {
+        const ALIASES: &[&str] = &["eta", "workers", "steps"];
+        if !ALIASES.contains(&key) && !Config::KEYS.iter().any(|(k, _)| *k == key) {
+            bail!("unknown config key '{key}'");
+        }
         let u = |v: &str| -> Result<usize> {
             v.parse().with_context(|| format!("bad usize for {key}: {v}"))
         };
@@ -278,6 +392,11 @@ impl Config {
             "socket_addr" => self.socket_addr = val.to_string(),
             "socket_max_frame" => self.socket_max_frame = u(val)?,
             "replica_restarts" => self.replica_restarts = u(val)?,
+            "rebalance" => self.rebalance = RebalanceMode::parse(val)?,
+            "rebalance_interval_s" => self.rebalance_interval_s = f(val)?,
+            "rebalance_min_gen" => self.rebalance_min_gen = u(val)?,
+            "rebalance_max_gen" => self.rebalance_max_gen = u(val)?,
+            "rebalance_hysteresis" => self.rebalance_hysteresis = f(val)?,
             "task" => self.task = val.to_string(),
             "level_lo" => self.level_lo = u(val)?,
             "level_hi" => self.level_hi = u(val)?,
@@ -297,7 +416,9 @@ impl Config {
             "out_dir" => self.out_dir = PathBuf::from(val),
             "checkpoint_every" => self.checkpoint_every = u(val)?,
             "eval_samples" => self.eval_samples = u(val)?,
-            other => bail!("unknown config key '{other}'"),
+            // reachable only for a key listed in KEYS without a match arm
+            // — the inverse drift, caught by `keys_inventory_matches_set`
+            other => bail!("config key '{other}' is in Config::KEYS but has no set() arm"),
         }
         Ok(())
     }
@@ -337,6 +458,47 @@ impl Config {
                 self.socket_addr,
                 self.n_rollout_workers
             );
+        }
+        if self.rebalance == RebalanceMode::Threshold {
+            if self.rebalance_interval_s <= 0.0 {
+                bail!("rebalance_interval_s must be > 0");
+            }
+            if self.rebalance_hysteresis < 0.0 {
+                bail!("rebalance_hysteresis must be >= 0");
+            }
+            // the generation-bound signal is "headroom >= 1 + hysteresis
+            // batches": with η < hysteresis + 1 the Eq. 3 budget B·(η+1)
+            // can never show that much headroom while inboxes are deep, so
+            // the rebalancer could only ever retire generation replicas —
+            // a one-way ratchet down to min_gen. Reject instead of
+            // silently crippling the fleet (sync/overlap force η ∈ {0,1}
+            // and are rejected at the default hysteresis).
+            let (eta, _) = self.effective_schedule();
+            if let Some(eta) = eta {
+                if (eta as f64) < self.rebalance_hysteresis + 1.0 {
+                    bail!(
+                        "rebalance=threshold needs max_staleness >= \
+                         rebalance_hysteresis + 1 (= {}) so the generation-bound \
+                         signal is reachable; effective eta is {} — the \
+                         rebalancer would be a one-way gen->train ratchet",
+                        self.rebalance_hysteresis + 1.0,
+                        eta
+                    );
+                }
+            }
+            if self.rebalance_min_gen == 0 {
+                bail!("rebalance_min_gen must be >= 1 (the fleet cannot \
+                       rebalance itself to zero generation capacity)");
+            }
+            if self.rebalance_max_gen != 0
+                && self.rebalance_max_gen < self.rebalance_min_gen
+            {
+                bail!(
+                    "rebalance_max_gen ({}) < rebalance_min_gen ({})",
+                    self.rebalance_max_gen,
+                    self.rebalance_min_gen
+                );
+            }
         }
         // whole GRPO groups are reserved atomically against the Eq. 3 gate
         // (⌊i/B⌋ ≤ v + η for every reserved index): a group larger than
@@ -495,6 +657,123 @@ mod tests {
             &["replica_transport=socket".into(), "workers=4".into()]
         )
         .is_ok());
+    }
+
+    #[test]
+    fn rebalance_keys_apply() {
+        let cfg = Config::load(
+            None,
+            &["rebalance=threshold".into(), "rebalance_interval_s=0.05".into(),
+              "rebalance_min_gen=2".into(), "rebalance_max_gen=6".into(),
+              "rebalance_hysteresis=0.5".into(), "workers=6".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.rebalance, RebalanceMode::Threshold);
+        assert!((cfg.rebalance_interval_s - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.rebalance_min_gen, 2);
+        assert_eq!(cfg.rebalance_max_gen, 6);
+        assert!((cfg.rebalance_hysteresis - 0.5).abs() < 1e-12);
+        // defaults: rebalancing off, sane thresholds
+        let d = Config::default();
+        assert_eq!(d.rebalance, RebalanceMode::Off);
+        assert_eq!(d.rebalance_max_gen, 0, "0 = whole fleet");
+        assert!(Config::load(None, &["rebalance=sometimes".into()]).is_err());
+        // invalid threshold configs are rejected at load time
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "rebalance_min_gen=0".into()]
+        )
+        .is_err());
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "rebalance_interval_s=0".into()]
+        )
+        .is_err());
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "rebalance_min_gen=3".into(),
+              "rebalance_max_gen=2".into()]
+        )
+        .is_err());
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "rebalance_hysteresis=-1".into()]
+        )
+        .is_err());
+        // η too tight for the configured hysteresis: the generation-bound
+        // signal would be unreachable (one-way ratchet) — rejected, for
+        // sync/overlap modes and for explicit small eta alike
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "mode=sync".into()]
+        )
+        .is_err());
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "eta=1".into()]
+        )
+        .is_err());
+        // eta=2 satisfies the default hysteresis band of 1.0; unbounded
+        // eta is always open and always fine
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "eta=2".into()]
+        )
+        .is_ok());
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "eta=inf".into()]
+        )
+        .is_ok());
+        // with rebalancing off the same values are inert, not errors
+        assert!(Config::load(None, &["rebalance_min_gen=0".into()]).is_ok());
+    }
+
+    #[test]
+    fn keys_inventory_matches_set() {
+        // every inventory entry must round-trip through set() — the KEYS
+        // table can never name a key set() rejects (or drop one it
+        // accepts without the CONFIG.md test below noticing)
+        let mut cfg = Config::default();
+        for (key, sample) in Config::KEYS {
+            cfg.set(key, sample)
+                .unwrap_or_else(|e| panic!("KEYS entry {key}={sample} rejected: {e}"));
+        }
+        // and the aliases keep working
+        for (alias, sample) in [("eta", "2"), ("workers", "3"), ("steps", "7")] {
+            cfg.set(alias, sample).unwrap();
+        }
+    }
+
+    #[test]
+    fn config_md_documents_every_key() {
+        // the ISSUE-5 acceptance bar: docs/CONFIG.md covers 100% of the
+        // config keys — diff the documented key list against the
+        // canonical inventory, both directions
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/docs/CONFIG.md");
+        let text = std::fs::read_to_string(path).expect("docs/CONFIG.md readable");
+        let mut documented = std::collections::BTreeSet::new();
+        for line in text.lines() {
+            // table rows document one key each: | `key` | type | ...
+            let Some(rest) = line.strip_prefix("| `") else { continue };
+            let Some(end) = rest.find('`') else { continue };
+            documented.insert(&rest[..end]);
+        }
+        let inventory: std::collections::BTreeSet<&str> =
+            Config::KEYS.iter().map(|(k, _)| *k).collect();
+        for key in &inventory {
+            assert!(
+                documented.contains(key),
+                "config key '{key}' is not documented in docs/CONFIG.md"
+            );
+        }
+        for key in &documented {
+            assert!(
+                inventory.contains(key),
+                "docs/CONFIG.md documents unknown key '{key}' \
+                 (stale row, or Config::KEYS not updated)"
+            );
+        }
     }
 
     #[test]

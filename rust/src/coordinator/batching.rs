@@ -11,7 +11,7 @@
 //! ([train_batch, T] or the half-context [train_batch, T/2] variant), so the
 //! payoff shows up as (a) fewer calls and (b) short micro-batches routed to
 //! the cheap executable — the fixed-shape analogue of the paper's
-//! padding-free packing (DESIGN.md §7 / Fig 6a).
+//! padding-free packing (DESIGN.md §8 / Fig 6a).
 
 /// One allocated micro-batch: indices into the caller's sequence list.
 #[derive(Debug, Clone, PartialEq, Eq)]

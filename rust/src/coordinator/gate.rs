@@ -80,6 +80,47 @@ impl StalenessGate {
     pub fn eta(&self) -> Option<u64> {
         self.eta
     }
+
+    pub fn batch_size(&self) -> u64 {
+        self.batch_size
+    }
+
+    /// Eq. 3 ceiling on total submissions at policy version `version`:
+    /// `B·(version + η + 1)` — the first submission index the gate would
+    /// refuse. `None` when η is unbounded.
+    pub fn ceiling(&self, version: u64) -> Option<u64> {
+        self.eta.map(|eta| self.batch_size * (version + eta + 1))
+    }
+
+    /// Staleness **headroom**: how many more submissions Eq. 3 admits at
+    /// `version` before the gate closes (`try_submit_n(version, n)`
+    /// succeeds iff `n <= headroom(version)`). `None` = unbounded η. This
+    /// is the rebalancer's primary signal: headroom pinned near zero means
+    /// generation has outrun training (the trainer is the bottleneck);
+    /// persistent headroom means the gate is open and generation capacity
+    /// is what bounds throughput.
+    pub fn headroom(&self, version: u64) -> Option<u64> {
+        self.ceiling(version).map(|c| c.saturating_sub(self.submitted()))
+    }
+
+    /// Headroom in units of training batches: `headroom / B`. The
+    /// version-independent form the rebalancer thresholds on (a pinned
+    /// gate re-opens to exactly 1.0 batches right after a version bump,
+    /// at any version).
+    pub fn headroom_batches(&self, version: u64) -> Option<f64> {
+        self.headroom(version).map(|h| h as f64 / self.batch_size as f64)
+    }
+
+    /// Gate **occupancy** at `version`: `submitted / ceiling`, clamped to
+    /// [0, 1]. 1.0 means the gate is closed; 0.0 for an unbounded gate
+    /// (which never closes).
+    pub fn occupancy(&self, version: u64) -> f64 {
+        match self.ceiling(version) {
+            None => 0.0,
+            // B > 0 and version + η + 1 >= 1, so the ceiling is positive
+            Some(c) => (self.submitted() as f64 / c as f64).min(1.0),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -147,6 +188,91 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn headroom_tracks_admissions_exactly() {
+        // headroom(v) is the precise count of single submissions the gate
+        // still admits at v: it shrinks by n on a successful reservation,
+        // is untouched by a failed one, and grows by exactly B per
+        // version bump
+        let g = StalenessGate::new(8, Some(1));
+        assert_eq!(g.ceiling(0), Some(16));
+        assert_eq!(g.headroom(0), Some(16));
+        assert_eq!(g.headroom_batches(0), Some(2.0));
+        assert_eq!(g.occupancy(0), 0.0);
+        assert!(g.try_submit_n(0, 5));
+        assert_eq!(g.headroom(0), Some(11), "submit shrinks headroom by n");
+        // a failed whole-group reservation must not move the headroom
+        assert!(!g.try_submit_n(0, 12));
+        assert_eq!(g.headroom(0), Some(11), "failed reservation is free");
+        // drain the rest: headroom hits zero exactly when the gate closes
+        assert!(g.try_submit_n(0, 11));
+        assert_eq!(g.headroom(0), Some(0));
+        assert_eq!(g.occupancy(0), 1.0);
+        assert!(!g.try_submit(0), "zero headroom = closed gate");
+        // one version bump reopens exactly one batch of headroom
+        assert_eq!(g.headroom(1), Some(8));
+        assert_eq!(g.headroom_batches(1), Some(1.0));
+        assert!((g.occupancy(1) - 16.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn headroom_is_monotone_across_submits_and_version_bumps() {
+        // property sweep: headroom never increases on a submit, never
+        // decreases on a version bump, and always equals the number of
+        // further single submissions the gate admits
+        prop_check(50, |rng| {
+            let b = rng.range_usize(1, 8);
+            let eta = rng.range_usize(0, 4) as u64;
+            let g = StalenessGate::new(b, Some(eta));
+            let mut version = 0u64;
+            for _ in 0..100 {
+                let before = g.headroom(version).unwrap();
+                if rng.chance(0.2) {
+                    version += 1;
+                    let after = g.headroom(version).unwrap();
+                    crate::prop_assert!(
+                        after >= before,
+                        "version bump shrank headroom {before} -> {after}"
+                    );
+                    crate::prop_assert!(
+                        after == before + b as u64,
+                        "bump must add exactly B: {before} -> {after} (B={b})"
+                    );
+                } else {
+                    let n = rng.range_usize(1, 4);
+                    let ok = g.try_submit_n(version, n);
+                    let after = g.headroom(version).unwrap();
+                    crate::prop_assert!(
+                        ok == (n as u64 <= before),
+                        "admission must match headroom: n={n} headroom={before}"
+                    );
+                    let expect = if ok { before - n as u64 } else { before };
+                    crate::prop_assert!(
+                        after == expect,
+                        "headroom {before} -> {after}, expected {expect}"
+                    );
+                }
+                let occ = g.occupancy(version);
+                crate::prop_assert!(
+                    (0.0..=1.0).contains(&occ),
+                    "occupancy {occ} out of range"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unbounded_gate_reports_infinite_headroom() {
+        let g = StalenessGate::new(4, None);
+        assert_eq!(g.ceiling(0), None);
+        assert_eq!(g.headroom(7), None);
+        assert_eq!(g.headroom_batches(7), None);
+        assert_eq!(g.occupancy(7), 0.0, "an unbounded gate never closes");
+        assert!(g.try_submit_n(0, 1000));
+        assert_eq!(g.occupancy(0), 0.0);
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //! interruptible rollout workers, rollout controller with the Eq. 3
 //! staleness gate, replay buffer with use-once/oldest-first semantics,
 //! trainer worker running decoupled-PPO minibatch updates, parameter
-//! server, Algorithm-1 dynamic micro-batching, and the mode wiring that
-//! turns the same machinery into the sync / one-step-overlap / async
-//! systems the paper compares.
+//! server, Algorithm-1 dynamic micro-batching, the staleness-driven
+//! gen/train rebalancer (`rebalance`), and the mode wiring that turns the
+//! same machinery into the sync / one-step-overlap / async systems the
+//! paper compares.
 
 pub mod batching;
 pub mod buffer;
@@ -14,6 +15,7 @@ pub mod gate;
 pub mod gen_engine;
 pub mod messages;
 pub mod param_server;
+pub mod rebalance;
 pub mod rollout;
 pub mod system;
 pub mod trace;
@@ -24,6 +26,9 @@ pub use gate::StalenessGate;
 pub use gen_engine::GenEngine;
 pub use messages::{GenRequest, GenRouter, StepMetrics, Trajectory};
 pub use param_server::ParamServer;
+pub use rebalance::{
+    Decision, Observation, RebalanceCfg, RebalanceCtl, RebalanceReason, RoleBoard,
+};
 pub use system::{RunReport, System};
 pub use trace::{Event, Trace};
 pub use trainer::{Trainer, TrainerCfg};

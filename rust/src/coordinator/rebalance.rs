@@ -1,0 +1,515 @@
+//! Staleness-driven gen/train rebalancer (DESIGN.md §7) — the control
+//! loop that closes the paper's workload-balancing claim: AReaL "balances
+//! the workload of rollout and training workers to control data
+//! staleness" (§4). The split between generation and training capacity is
+//! no longer fixed at startup; it follows the Eq. 3 **staleness headroom**
+//! at run time.
+//!
+//! **Signal.** [`StalenessGate::headroom_batches`] measures how far total
+//! submissions lag the `B·(version+η+1)` ceiling, in units of training
+//! batches. The two steady states are unambiguous:
+//!
+//! - *headroom pinned at ≤ 1 batch*: generation keeps the gate closed —
+//!   every version bump reopens exactly one batch of headroom and
+//!   generation immediately consumes it. The trainer is the bottleneck;
+//!   generation capacity is surplus. Convert a gen replica to the
+//!   training role.
+//! - *headroom persistently open (≥ collapse + hysteresis band) with deep
+//!   inboxes*: the gate admits more than generation can serve — the
+//!   system is generation-bound. Convert training capacity back.
+//!
+//! **Hysteresis.** Conversions are expensive (a retirement salvages an
+//! inbox; a rejoin pays cold caches), so the controller acts only after
+//! `patience` *consecutive* agreeing observations, and the two thresholds
+//! are separated by a dead band (`open_above − collapse_below`) in which
+//! it never acts. A queue depth or headroom oscillating around either
+//! threshold resets the streak each time it crosses back, so no
+//! add/remove thrash (`tests::no_thrash_when_signal_oscillates`).
+//!
+//! **Mechanics.** The rebalancer thread ([`run_rebalancer`]) only writes
+//! a *target* gen-fleet size to the shared [`RoleBoard`]; the conversions
+//! themselves are executed by the rollout workers at safe points:
+//!
+//! - gen → train: an **idle** worker (empty slots, nothing waiting) calls
+//!   [`RoleBoard::try_retire`], which retires its slot through the
+//!   epoch-fenced [`Router::remove_replica_at`] salvage path from PR 3/4
+//!   — queued requests requeue onto the survivors (zero lost, whole
+//!   requests only, so no GRPO group is ever left partial) — and the
+//!   worker parks in the train role.
+//! - train → gen: a parked worker calls [`RoleBoard::try_rejoin`], which
+//!   revives a slot through [`Router::add_replica`] behind the epoch
+//!   fence, and the worker serves a fresh life on it.
+//!
+//! Both paths log [`Event::Rebalance`] with the triggering reason. The
+//! board serializes conversions under one lock, so racing volunteers
+//! cannot overshoot the target, and `remove_replica`'s last-alive refusal
+//! plus the `min_gen` floor guarantee the fleet can never rebalance
+//! itself to zero generation capacity.
+//!
+//! The same [`RebalanceCtl`] policy drives the cluster simulator
+//! (`sim/run.rs`), where the static `gen_fraction` split is replaced by
+//! live conversion of simulated devices — the static-vs-dynamic sweep
+//! under a drifting output-length workload is the acceptance experiment.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::serve::Router;
+
+use super::controller::queue_cap;
+use super::gate::StalenessGate;
+use super::messages::GenRouter;
+use super::param_server::ParamServer;
+use super::trace::{Event, Trace};
+
+/// Why the rebalancer last moved the target (carried into
+/// [`Event::Rebalance`] by the conversion that executes the move).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RebalanceReason {
+    /// staleness headroom collapsed: generation outruns training
+    HeadroomCollapsed,
+    /// gate persistently open with deep inboxes: generation-bound
+    GenerationBound,
+}
+
+impl RebalanceReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RebalanceReason::HeadroomCollapsed => "headroom_collapsed",
+            RebalanceReason::GenerationBound => "generation_bound",
+        }
+    }
+}
+
+/// Threshold policy configuration (config keys `rebalance_*`).
+#[derive(Debug, Clone)]
+pub struct RebalanceCfg {
+    /// floor on alive generation replicas (>= 1)
+    pub min_gen: usize,
+    /// ceiling on alive generation replicas
+    pub max_gen: usize,
+    /// headroom (in batches) at/below which the gate counts as collapsed
+    pub collapse_below: f64,
+    /// headroom (in batches) at/above which the gate counts as open;
+    /// `collapse_below + hysteresis band` — observations between the two
+    /// thresholds never trigger a conversion
+    pub open_above: f64,
+    /// consecutive agreeing observations required before converting
+    pub patience: u32,
+}
+
+impl RebalanceCfg {
+    /// Default thresholds: collapsed at ≤ 1 batch (a pinned gate reopens
+    /// to exactly 1.0 right after a version bump), open at ≥ 1 +
+    /// `hysteresis` batches, two agreeing observations before acting.
+    pub fn new(min_gen: usize, max_gen: usize, hysteresis: f64) -> RebalanceCfg {
+        let min_gen = min_gen.max(1);
+        RebalanceCfg {
+            min_gen,
+            max_gen: max_gen.max(min_gen),
+            collapse_below: 1.0,
+            open_above: 1.0 + hysteresis.max(0.0),
+            patience: 2,
+        }
+    }
+}
+
+/// One observation of the system, fed to [`RebalanceCtl::observe`]. The
+/// caller computes the generation-side backlog signal its own way: the
+/// live system compares router inbox depth against the controller's
+/// `queue_cap`; the simulator uses trainer starvation at the version bump.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    /// Eq. 3 headroom in batches (`None` = unbounded η, which never
+    /// collapses and always counts as open)
+    pub headroom_batches: Option<f64>,
+    /// is generation visibly behind demand?
+    pub gen_backlogged: bool,
+    /// alive generation replicas right now
+    pub n_gen: usize,
+}
+
+/// What the policy wants done (the caller executes it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Hold,
+    /// convert one generation replica to the training role
+    GenToTrain,
+    /// convert training capacity back to a generation replica
+    TrainToGen,
+}
+
+/// The pure threshold-with-hysteresis controller. Deterministic and
+/// synchronous: feed it observations, execute its decisions. Shared by
+/// the live rebalancer thread and the cluster simulator.
+pub struct RebalanceCtl {
+    cfg: RebalanceCfg,
+    collapse_streak: u32,
+    open_streak: u32,
+}
+
+impl RebalanceCtl {
+    pub fn new(cfg: RebalanceCfg) -> RebalanceCtl {
+        RebalanceCtl { cfg, collapse_streak: 0, open_streak: 0 }
+    }
+
+    pub fn cfg(&self) -> &RebalanceCfg {
+        &self.cfg
+    }
+
+    /// Classify one observation and decide. A conversion resets both
+    /// streaks, so the next one needs `patience` fresh agreeing
+    /// observations (the post-conversion cooldown).
+    pub fn observe(&mut self, o: Observation) -> Decision {
+        let collapsed = o.headroom_batches.is_some_and(|h| h <= self.cfg.collapse_below);
+        let open = !o.headroom_batches.is_some_and(|h| h < self.cfg.open_above);
+        if collapsed && !o.gen_backlogged {
+            // trainer-bound: generation pinned the gate and the inboxes
+            // have drained — generation capacity is surplus
+            self.open_streak = 0;
+            if o.n_gen <= self.cfg.min_gen {
+                self.collapse_streak = 0;
+                return Decision::Hold;
+            }
+            self.collapse_streak += 1;
+            if self.collapse_streak >= self.cfg.patience {
+                self.collapse_streak = 0;
+                return Decision::GenToTrain;
+            }
+        } else if open && o.gen_backlogged {
+            // generation-bound: the gate admits more than the fleet serves
+            self.collapse_streak = 0;
+            if o.n_gen >= self.cfg.max_gen {
+                self.open_streak = 0;
+                return Decision::Hold;
+            }
+            self.open_streak += 1;
+            if self.open_streak >= self.cfg.patience {
+                self.open_streak = 0;
+                return Decision::TrainToGen;
+            }
+        } else {
+            // dead band (or a mixed signal): hold, and forget any streak —
+            // an oscillating signal must re-earn its patience
+            self.collapse_streak = 0;
+            self.open_streak = 0;
+        }
+        Decision::Hold
+    }
+}
+
+/// Shared gen/train role state: the rebalancer writes a target gen-fleet
+/// size; workers execute conversions against it at safe points. One lock
+/// serializes conversions, so racing volunteers never overshoot.
+pub struct RoleBoard {
+    min_gen: usize,
+    max_gen: usize,
+    target_gen: AtomicUsize,
+    /// replicas currently parked in the train role
+    parked: AtomicUsize,
+    /// reason of the most recent target move (0 = collapsed, 1 = bound)
+    reason: AtomicU8,
+    /// serializes retire/rejoin so the fleet converges on the target
+    convert: Mutex<()>,
+}
+
+impl RoleBoard {
+    /// `initial_gen` is the startup fleet size (the target until the
+    /// rebalancer first moves it). Bounds are clamped to sane values.
+    pub fn new(min_gen: usize, max_gen: usize, initial_gen: usize) -> RoleBoard {
+        let min_gen = min_gen.max(1);
+        let max_gen = max_gen.max(min_gen);
+        RoleBoard {
+            min_gen,
+            max_gen,
+            target_gen: AtomicUsize::new(initial_gen.clamp(min_gen, max_gen)),
+            parked: AtomicUsize::new(0),
+            reason: AtomicU8::new(0),
+            convert: Mutex::new(()),
+        }
+    }
+
+    pub fn min_gen(&self) -> usize {
+        self.min_gen
+    }
+
+    pub fn max_gen(&self) -> usize {
+        self.max_gen
+    }
+
+    /// Desired number of alive generation replicas.
+    pub fn target_gen(&self) -> usize {
+        self.target_gen.load(Ordering::Acquire)
+    }
+
+    /// Replicas currently parked in the train role.
+    pub fn parked(&self) -> usize {
+        self.parked.load(Ordering::Acquire)
+    }
+
+    /// Move the target (rebalancer only); clamped to `[min_gen, max_gen]`.
+    pub fn set_target(&self, n: usize, reason: RebalanceReason) {
+        self.reason.store(reason as u8, Ordering::Release);
+        self.target_gen
+            .store(n.clamp(self.min_gen, self.max_gen), Ordering::Release);
+    }
+
+    fn reason_name(&self) -> &'static str {
+        if self.reason.load(Ordering::Acquire) == RebalanceReason::GenerationBound as u8 {
+            RebalanceReason::GenerationBound.name()
+        } else {
+            RebalanceReason::HeadroomCollapsed.name()
+        }
+    }
+
+    /// A gen worker offers to convert to the train role. Succeeds only
+    /// while the alive fleet exceeds the target (and the `min_gen`
+    /// floor); the retirement itself rides the epoch-fenced
+    /// `remove_replica_at` salvage path, so the worker's queued requests
+    /// requeue whole onto the survivors — zero lost, no partial GRPO
+    /// group — and a stale epoch (the slot already moved on) refuses.
+    /// Call only when the engine is idle: in-flight work should drain
+    /// before capacity leaves the fleet. Returns true when the caller is
+    /// now a train-role (parked) worker and must stop serving this slot.
+    pub fn try_retire<T: Send + 'static>(&self, router: &Router<T>, slot: usize,
+                                         epoch: u64, trace: &Trace) -> bool {
+        let _serial = self.convert.lock().unwrap();
+        let floor = self.target_gen().max(self.min_gen);
+        if router.n_alive() <= floor {
+            return false;
+        }
+        if router.remove_replica_at(slot, epoch).is_none() {
+            return false; // stale epoch, already dead, or last alive
+        }
+        self.parked.fetch_add(1, Ordering::AcqRel);
+        trace.log(Event::Rebalance {
+            replica: slot,
+            from: "gen",
+            to: "train",
+            reason: self.reason_name(),
+        });
+        true
+    }
+
+    /// A parked (train-role) worker offers to rejoin generation. Succeeds
+    /// only while the alive fleet is below the target; the revival goes
+    /// through `add_replica` behind the epoch fence (lowest dead slot, its
+    /// transport backend kept). Returns the `(slot, epoch)` the caller
+    /// now owns and must serve.
+    pub fn try_rejoin<T: Send + 'static>(&self, router: &Router<T>,
+                                         trace: &Trace) -> Option<(usize, u64)> {
+        let _serial = self.convert.lock().unwrap();
+        if router.n_alive() >= self.target_gen() {
+            return None;
+        }
+        let (slot, epoch) = router.add_replica();
+        self.parked
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |p| Some(p.saturating_sub(1)))
+            .ok();
+        trace.log(Event::Rebalance {
+            replica: slot,
+            from: "train",
+            to: "gen",
+            reason: self.reason_name(),
+        });
+        Some((slot, epoch))
+    }
+}
+
+/// The rebalancer thread body: every `interval`, observe the gate's
+/// headroom and the router's backlog, run the threshold policy, and move
+/// the board's target by at most one replica. Exits as soon as the system
+/// raises `stop` or `draining` (a draining system must not convert — the
+/// one-shot Drain broadcast only reaches inboxes that are open when it
+/// fires).
+#[allow(clippy::too_many_arguments)]
+pub fn run_rebalancer(gate: Arc<StalenessGate>, server: Arc<ParamServer>,
+                      router: Arc<GenRouter>, board: Arc<RoleBoard>,
+                      stop: Arc<AtomicBool>, draining: Arc<AtomicBool>,
+                      cfg: RebalanceCfg, interval: Duration, group_size: usize) {
+    let mut ctl = RebalanceCtl::new(cfg);
+    let shutting_down =
+        || stop.load(Ordering::Acquire) || draining.load(Ordering::Acquire);
+    loop {
+        // responsive sleep: a long interval must not delay shutdown
+        let deadline = Instant::now() + interval;
+        while Instant::now() < deadline {
+            if shutting_down() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(2).min(interval));
+        }
+        if shutting_down() {
+            return;
+        }
+        let n_gen = router.n_alive();
+        let cap = queue_cap(n_gen, group_size);
+        let o = Observation {
+            headroom_batches: gate.headroom_batches(server.version()),
+            // "deep" = the controller-facing inboxes hold at least half
+            // the depth the controller is willing to queue
+            gen_backlogged: 2 * router.queued_total() >= cap,
+            n_gen,
+        };
+        match ctl.observe(o) {
+            Decision::Hold => {}
+            Decision::GenToTrain => {
+                board.set_target(n_gen.saturating_sub(1),
+                                 RebalanceReason::HeadroomCollapsed);
+            }
+            Decision::TrainToGen => {
+                board.set_target(n_gen + 1, RebalanceReason::GenerationBound);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{RoutePolicy, RouterCfg};
+
+    fn ob(headroom: f64, backlogged: bool, n_gen: usize) -> Observation {
+        Observation { headroom_batches: Some(headroom), gen_backlogged: backlogged, n_gen }
+    }
+
+    #[test]
+    fn collapse_converts_gen_to_train_after_patience() {
+        let mut ctl = RebalanceCtl::new(RebalanceCfg::new(1, 4, 1.0));
+        // one collapsed observation is not enough (patience 2)
+        assert_eq!(ctl.observe(ob(0.5, false, 4)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(0.0, false, 4)), Decision::GenToTrain);
+        // cooldown: the conversion reset the streak, patience restarts
+        assert_eq!(ctl.observe(ob(0.0, false, 3)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(0.0, false, 3)), Decision::GenToTrain);
+        // the min_gen floor refuses further shrinking forever
+        assert_eq!(ctl.observe(ob(0.0, false, 1)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(0.0, false, 1)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(0.0, false, 1)), Decision::Hold);
+    }
+
+    #[test]
+    fn open_gate_with_backlog_converts_train_to_gen() {
+        let mut ctl = RebalanceCtl::new(RebalanceCfg::new(1, 4, 1.0));
+        // open headroom alone is not a signal — generation must also be
+        // visibly behind
+        assert_eq!(ctl.observe(ob(5.0, false, 2)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(5.0, false, 2)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(5.0, true, 2)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(5.0, true, 2)), Decision::TrainToGen);
+        // max_gen ceiling refuses growth
+        assert_eq!(ctl.observe(ob(5.0, true, 4)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(5.0, true, 4)), Decision::Hold);
+        // unbounded η counts as open
+        let mut ctl = RebalanceCtl::new(RebalanceCfg::new(1, 4, 1.0));
+        let unbounded =
+            Observation { headroom_batches: None, gen_backlogged: true, n_gen: 2 };
+        assert_eq!(ctl.observe(unbounded), Decision::Hold);
+        assert_eq!(ctl.observe(unbounded), Decision::TrainToGen);
+        // and an unbounded gate can never look collapsed
+        let idle = Observation { headroom_batches: None, gen_backlogged: false, n_gen: 4 };
+        for _ in 0..10 {
+            assert_eq!(ctl.observe(idle), Decision::Hold);
+        }
+    }
+
+    #[test]
+    fn no_thrash_when_signal_oscillates() {
+        // the ISSUE-5 satellite bar: a queue depth (or headroom)
+        // oscillating around the threshold must not produce add/remove
+        // churn — every crossing resets the patience streak, and the dead
+        // band between the thresholds is inert
+        let mut ctl = RebalanceCtl::new(RebalanceCfg::new(1, 4, 1.0));
+        // backlog flips every tick while the gate is open: the open
+        // streak can never reach patience=2
+        for i in 0..50 {
+            let d = ctl.observe(ob(5.0, i % 2 == 0, 2));
+            assert_eq!(d, Decision::Hold, "tick {i} converted under oscillation");
+        }
+        // headroom flips between collapsed and the dead band: same story
+        for i in 0..50 {
+            let h = if i % 2 == 0 { 0.5 } else { 1.5 };
+            let d = ctl.observe(ob(h, false, 3));
+            assert_eq!(d, Decision::Hold, "tick {i} converted under oscillation");
+        }
+        // the whole dead band is inert even when sustained
+        for _ in 0..50 {
+            assert_eq!(ctl.observe(ob(1.5, false, 3)), Decision::Hold);
+            assert_eq!(ctl.observe(ob(1.5, true, 3)), Decision::Hold);
+        }
+        // sanity: a *sustained* signal does still convert
+        assert_eq!(ctl.observe(ob(0.0, false, 3)), Decision::Hold);
+        assert_eq!(ctl.observe(ob(0.0, false, 3)), Decision::GenToTrain);
+    }
+
+    #[test]
+    fn board_serializes_conversions_and_respects_bounds() {
+        let router: Router<()> =
+            Router::new(3, RouterCfg::new(RoutePolicy::Affinity, 4, 0));
+        let trace = Trace::new(true);
+        let board = RoleBoard::new(1, 3, 3);
+        // target equals the fleet: nobody may retire, nobody may rejoin
+        assert!(!board.try_retire(&router, 0, router.epoch(0), &trace));
+        assert!(board.try_rejoin(&router, &trace).is_none());
+        // shrink the target: exactly one retirement per unit of gap
+        board.set_target(2, RebalanceReason::HeadroomCollapsed);
+        assert!(board.try_retire(&router, 0, router.epoch(0), &trace));
+        assert_eq!(board.parked(), 1);
+        assert_eq!(router.n_alive(), 2);
+        // fleet is at target now: the next volunteer is refused
+        assert!(!board.try_retire(&router, 1, router.epoch(1), &trace));
+        // a stale epoch is refused even when the target allows it
+        board.set_target(1, RebalanceReason::HeadroomCollapsed);
+        assert!(!board.try_retire(&router, 1, router.epoch(1) + 1, &trace));
+        assert!(router.is_alive(1), "stale-epoch retirement must not fire");
+        assert!(board.try_retire(&router, 1, router.epoch(1), &trace));
+        assert_eq!(router.n_alive(), 1);
+        // the floor: with the fleet at the min_gen target, the last
+        // volunteer is refused (and remove_replica's last-alive guard
+        // backstops even a corrupted target)
+        assert!(!board.try_retire(&router, 2, router.epoch(2), &trace));
+        assert!(router.is_alive(2));
+        // grow back: rejoin revives the lowest dead slot with a new epoch
+        board.set_target(3, RebalanceReason::GenerationBound);
+        let (slot, epoch) = board.try_rejoin(&router, &trace).expect("rejoin");
+        assert_eq!(slot, 0);
+        assert_eq!(router.epoch(0), epoch);
+        assert!(router.is_alive(0));
+        let (slot2, _) = board.try_rejoin(&router, &trace).expect("second rejoin");
+        assert_eq!(slot2, 1);
+        assert_eq!(board.parked(), 0);
+        // fleet is back at target: no further rejoin
+        assert!(board.try_rejoin(&router, &trace).is_none());
+        // four conversions logged, two each way
+        let to_train = trace.count(|e| {
+            matches!(e, Event::Rebalance { from: "gen", to: "train", .. })
+        });
+        let to_gen = trace.count(|e| {
+            matches!(e, Event::Rebalance { from: "train", to: "gen", .. })
+        });
+        assert_eq!((to_train, to_gen), (2, 2));
+    }
+
+    #[test]
+    fn retirement_salvages_queued_requests_whole() {
+        use crate::serve::Request;
+        let router: Router<()> =
+            Router::new(2, RouterCfg::new(RoutePolicy::Affinity, 4, 0));
+        let trace = Trace::new(false);
+        let board = RoleBoard::new(1, 2, 2);
+        // queue a whole group onto one replica (affinity colocates)
+        let tokens: Vec<i32> = (0..8).collect();
+        let home = router.submit(Request { group: 1, tokens: tokens.clone(), payload: () });
+        for _ in 0..3 {
+            router.submit(Request { group: 1, tokens: tokens.clone(), payload: () });
+        }
+        assert_eq!(router.queued(home), 4);
+        board.set_target(1, RebalanceReason::HeadroomCollapsed);
+        assert!(board.try_retire(&router, home, router.epoch(home), &trace));
+        // zero lost: all four siblings requeued whole onto the survivor
+        assert_eq!(router.queued_total(), 4);
+        assert_eq!(router.queued(1 - home), 4);
+        assert_eq!(router.stats().requeued, 4);
+    }
+}

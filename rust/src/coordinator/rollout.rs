@@ -25,6 +25,15 @@
 //! re-joins the fleet through `add_replica` — the epoch fence makes the
 //! revived slot safe — and serves a fresh life, up to the configured
 //! restart budget.
+//!
+//! **Role conversion (DESIGN.md §7).** With `rebalance=threshold` the
+//! worker also serves the gen/train rebalancer: an idle life offers
+//! itself to the [`RoleBoard`] and, when the board's target says the gen
+//! fleet is over-provisioned, exits [`LifeExit::Converted`] — its slot
+//! retired through the same epoch-fenced salvage path a failure uses, so
+//! zero requests are lost and no GRPO group is left partial — and the
+//! worker parks in the train role until [`RoleBoard::try_rejoin`] revives
+//! a slot for it or the system shuts down.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -40,6 +49,7 @@ use super::buffer::ReplayBuffer;
 use super::gen_engine::GenEngine;
 use super::messages::{GenRequest, GenRouter};
 use super::param_server::ParamServer;
+use super::rebalance::RoleBoard;
 use super::trace::{Event, Trace};
 
 /// Everything a rollout worker shares with the rest of the system.
@@ -58,6 +68,21 @@ pub struct RolloutShared {
     pub trace: Arc<Trace>,
     /// completion tokens generated across all workers (gen throughput)
     pub gen_tokens: Arc<AtomicU64>,
+    /// gen/train role board when `rebalance=threshold` (DESIGN.md §7):
+    /// an idle worker retires into the train role through it, a parked
+    /// worker rejoins generation through it. `None` = static fleet.
+    pub board: Option<Arc<RoleBoard>>,
+}
+
+/// How a worker life ended (errors travel separately as `Err`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LifeExit {
+    /// clean shutdown: the frontend said Drain (or the stop flag rose)
+    Drained,
+    /// the rebalancer converted this replica to the train role: its slot
+    /// is already retired (inbox salvaged through the epoch fence) and
+    /// the worker should park until rejoined or shut down
+    Converted,
 }
 
 /// How this worker reaches the dispatch plane (see module docs).
@@ -192,7 +217,7 @@ impl Plane {
 /// the caller's failure path can retire exactly this life's slot tenancy
 /// (`Router::remove_replica_at`) and never a successor's.
 fn worker_life(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
-               cfg: &RolloutCfg, life_epoch: &mut u64) -> Result<()> {
+               cfg: &RolloutCfg, life_epoch: &mut u64) -> Result<LifeExit> {
     let mut plane = match &cfg.link {
         WorkerLink::Direct => {
             // expose this replica's measured cache/load state to the
@@ -260,7 +285,7 @@ impl Drop for LifeGuard<'_> {
 /// Body of one rollout worker life.
 pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                           shared: RolloutShared, cfg: RolloutCfg, seed: u64)
-    -> Result<()> {
+    -> Result<LifeExit> {
     // if the life dies before linking up, it served (at most) the slot's
     // current epoch — a removal fenced there is still exactly ours
     let mut life_epoch = shared.router.epoch(worker_id);
@@ -275,6 +300,16 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                                         seed, cfg.serve.clone());
     let res = worker_life(worker_id, &mut gen, &shared, &cfg, &mut life_epoch);
     guard.epoch = life_epoch;
+    if matches!(res, Ok(LifeExit::Converted)) {
+        // role conversion: the board already retired this slot through the
+        // epoch-fenced salvage path (inbox requeued, zero lost). The
+        // conversion only fires at idle, so the engine should hold
+        // nothing — but hand back anything it does hold (defense in
+        // depth: a request that slipped in can't be allowed to vanish)
+        for q in gen.salvage_requests() {
+            shared.router.submit(q);
+        }
+    }
     if res.is_err() {
         // this replica is done for: retire it FIRST so nothing routes back
         // here, then hand back every request the engine still holds —
@@ -321,7 +356,7 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
 /// [`run_rollout_worker`], which retires the replica and salvages its
 /// remaining requests.
 fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
-              cfg: &RolloutCfg, plane: &mut Plane) -> Result<()> {
+              cfg: &RolloutCfg, plane: &mut Plane) -> Result<LifeExit> {
     let b = gen.n_slots();
     // weight sync deferred until drain completes (non-interruptible mode)
     let mut pending_sync = false;
@@ -434,13 +469,23 @@ fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
                 // past the training budget — the frontend said stop
                 break;
             }
+            // idle is the rebalancer's safe conversion point: no in-flight
+            // work to strand, so retiring here is a pure inbox salvage.
+            // try_retire checks the board target under its own lock and
+            // rides the epoch-fenced remove_replica_at path.
+            if let Some(board) = &shared.board {
+                if board.try_retire(shared.router.as_ref(), worker_id,
+                                    plane.epoch(), &shared.trace) {
+                    return Ok(LifeExit::Converted);
+                }
+            }
             // nothing to do: either gated by staleness control or shutting
             // down — idle briefly (this is the idleness the paper's Fig. 1
             // shows for synchronous systems)
             std::thread::sleep(Duration::from_millis(2));
         }
     }
-    Ok(())
+    Ok(LifeExit::Drained)
 }
 
 /// Supervised replica lifecycle (ISSUE 4 satellite): run worker lives
@@ -455,12 +500,13 @@ fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
 pub fn supervise_replica(router: &GenRouter, stop: &AtomicBool,
                          draining: &AtomicBool, slot0: usize,
                          max_restarts: usize,
-                         mut life: impl FnMut(usize) -> Result<()>) -> Result<()> {
+                         mut life: impl FnMut(usize) -> Result<LifeExit>)
+    -> Result<LifeExit> {
     let mut slot = slot0;
     let mut restarts = 0usize;
     loop {
         match life(slot) {
-            Ok(()) => return Ok(()),
+            Ok(exit) => return Ok(exit),
             Err(e) => {
                 if restarts >= max_restarts
                     || stop.load(Ordering::Acquire)
@@ -500,6 +546,15 @@ pub fn supervise_replica(router: &GenRouter, stop: &AtomicBool,
 /// the failure is final and our still-alive slot is the fleet's last,
 /// the supervisor closes the replay buffer so the trainer fails fast
 /// instead of blocking in `pop_batch` forever.
+///
+/// **Role conversions** (DESIGN.md §7): a life that exits
+/// [`LifeExit::Converted`] was retired by the rebalancer — the worker
+/// parks in the train role, polling the [`RoleBoard`] until the
+/// rebalancer wants generation capacity back ([`RoleBoard::try_rejoin`]
+/// revives a slot behind the epoch fence and a fresh life serves it) or
+/// the system shuts down. The restart budget is per role stint: a rejoin
+/// starts a fresh `supervise_replica` scope, but `ReplicaRestart` life
+/// numbering stays monotone across stints.
 pub fn run_supervised_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                                      shared: RolloutShared, cfg: RolloutCfg,
                                      seed: u64, max_restarts: usize) -> Result<()> {
@@ -508,36 +563,88 @@ pub fn run_supervised_rollout_worker(worker_id: usize, engine: Arc<Engine>,
     let draining = Arc::clone(&shared.draining);
     let trace = Arc::clone(&shared.trace);
     let buffer = Arc::clone(&shared.buffer);
-    let router_c = Arc::clone(&router);
+    let board = shared.board.clone();
     let last_slot = std::cell::Cell::new(worker_id);
-    let mut life_n = 0usize;
-    let res = supervise_replica(&router, &stop, &draining, worker_id, max_restarts, {
-        let last_slot = &last_slot;
-        move |slot| {
-            last_slot.set(slot);
-            let life = life_n;
-            life_n += 1;
-            if life > 0 {
-                trace.log(Event::ReplicaRestart {
-                    replica: slot,
-                    epoch: router_c.epoch(slot),
-                    life,
-                });
+    let life_n = std::cell::Cell::new(0usize);
+    let mut slot0 = worker_id;
+    loop {
+        let res = supervise_replica(&router, &stop, &draining, slot0, max_restarts, {
+            let last_slot = &last_slot;
+            let life_n = &life_n;
+            let trace = &trace;
+            let router_c = &router;
+            let engine = &engine;
+            let shared = &shared;
+            let cfg = &cfg;
+            move |slot| {
+                last_slot.set(slot);
+                let life = life_n.get();
+                life_n.set(life + 1);
+                if life > 0 {
+                    trace.log(Event::ReplicaRestart {
+                        replica: slot,
+                        epoch: router_c.epoch(slot),
+                        life,
+                    });
+                }
+                // life 0 keeps the configured seed (bit-identical to
+                // unsupervised runs); respawns re-salt so a deterministic
+                // crash cannot loop
+                let s = seed ^ (life as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                run_rollout_worker(slot, Arc::clone(engine), shared.clone(),
+                                   cfg.clone(), s)
             }
-            // life 0 keeps the configured seed (bit-identical to
-            // unsupervised runs); respawns re-salt so a deterministic
-            // crash cannot loop
-            let s = seed ^ (life as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
-            run_rollout_worker(slot, Arc::clone(&engine), shared.clone(), cfg.clone(), s)
+        });
+        match res {
+            Ok(LifeExit::Drained) => return Ok(()),
+            Ok(LifeExit::Converted) => {
+                let Some(board) = &board else {
+                    // unreachable without a board (nothing else returns
+                    // Converted), but never spin on a state we can't leave
+                    return Ok(());
+                };
+                // train role: park until the rebalancer wants generation
+                // capacity back or the system shuts down. Parked workers
+                // hear no Drain broadcast (their inbox is closed), so the
+                // draining flag is their shutdown signal.
+                loop {
+                    if stop.load(Ordering::Acquire) || draining.load(Ordering::Acquire)
+                    {
+                        return Ok(());
+                    }
+                    if let Some((slot, epoch)) =
+                        board.try_rejoin(router.as_ref(), &trace)
+                    {
+                        // re-validate AFTER reopening, like the respawn
+                        // path: the one-shot Drain broadcast may have run
+                        // between the check above and the reopen — it
+                        // skipped our then-closed inbox, so a life started
+                        // now would never hear it and the shutdown join
+                        // would hang. Retire the fresh tenancy instead.
+                        if stop.load(Ordering::Acquire)
+                            || draining.load(Ordering::Acquire)
+                        {
+                            let _ = router.remove_replica_at(slot, epoch);
+                            return Ok(());
+                        }
+                        slot0 = slot;
+                        break; // serve a fresh life on the revived slot
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            Err(e) => {
+                if router.is_alive(last_slot.get()) && router.n_alive() == 1 {
+                    // our final life died with its slot still alive
+                    // (last-alive removal refused) and nothing else
+                    // serves: nothing can ever fill a batch again, so
+                    // fail the trainer fast
+                    buffer.close();
+                }
+                return Err(e);
+            }
         }
-    });
-    if res.is_err() && router.is_alive(last_slot.get()) && router.n_alive() == 1 {
-        // our final life died with its slot still alive (last-alive
-        // removal refused) and nothing else serves: nothing can ever fill
-        // a batch again, so fail the trainer fast
-        buffer.close();
     }
-    res
 }
 
 /// Hand a finished trajectory to the reward service; the verification job
@@ -627,7 +734,7 @@ mod tests {
                 }
                 served += p.reqs.len();
             }
-            Ok(())
+            Ok(LifeExit::Drained)
         });
         res.unwrap();
         assert_eq!(lives, 2, "exactly one restart");
@@ -642,6 +749,30 @@ mod tests {
             2,
             "ReplicaUp fires for the original life and the respawn"
         );
+    }
+
+    #[test]
+    fn conversion_exits_supervision_without_consuming_restarts() {
+        // a Converted life is not a failure: it must surface immediately
+        // (no respawn, no restart budget spent) so the outer park loop
+        // can take over
+        let router: GenRouter =
+            GenRouter::new(2, RouterCfg::new(RoutePolicy::Affinity, 4, 0));
+        let stop = AtomicBool::new(false);
+        let draining = AtomicBool::new(false);
+        let mut lives = 0usize;
+        let res = supervise_replica(&router, &stop, &draining, 0, 5, |_slot| {
+            lives += 1;
+            if lives == 1 {
+                // first life crashes (consumes one restart)...
+                router.remove_replica(0);
+                bail!("injected crash");
+            }
+            // ...the respawned life is converted by the rebalancer
+            Ok(LifeExit::Converted)
+        });
+        assert_eq!(res.unwrap(), LifeExit::Converted);
+        assert_eq!(lives, 2, "conversion ends the stint, not the budget");
     }
 
     #[test]

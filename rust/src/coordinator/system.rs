@@ -15,11 +15,11 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::config::{Config, TransportKind};
+use crate::config::{Config, RebalanceMode, TransportKind};
 use crate::reward::RewardService;
 use crate::runtime::{Engine, Manifest, ParamSet, TrainState};
 use crate::serve::{Control, Pulled, ReplicaTransport, RouterCfg, ServeCfg, SocketTransport};
@@ -32,6 +32,7 @@ use super::controller::{run_controller, ControllerCfg};
 use super::evalgen;
 use super::gate::StalenessGate;
 use super::param_server::ParamServer;
+use super::rebalance::{run_rebalancer, RebalanceCfg, RoleBoard};
 use super::rollout::{run_supervised_rollout_worker, RolloutCfg, RolloutShared, WorkerLink};
 use super::trace::{Event, Trace};
 use super::trainer::{Trainer, TrainerCfg};
@@ -47,12 +48,19 @@ use super::messages::{GenRouter, StepMetrics};
 fn drain_and_join(router: &GenRouter, buffer: &ReplayBuffer,
                   stop: &AtomicBool, draining: &AtomicBool,
                   handles: Vec<std::thread::JoinHandle<Result<()>>>,
-                  controller: std::thread::JoinHandle<Result<()>>) -> Result<()> {
+                  controller: std::thread::JoinHandle<Result<()>>,
+                  rebalancer: Option<std::thread::JoinHandle<()>>) -> Result<()> {
     // raise the draining flag BEFORE the one-shot Drain broadcast: a
     // worker that errors after this point must not be respawned by its
     // supervisor — the respawned life's fresh inbox would never hear a
-    // second Drain and the joins below would hang forever
+    // second Drain and the joins below would hang forever. The draining
+    // flag is also what stops the rebalancer (no conversions may race the
+    // one-shot broadcast) and what releases parked train-role workers
+    // (their inboxes are closed, so the broadcast cannot reach them).
     draining.store(true, Ordering::Release);
+    if let Some(h) = rebalancer {
+        let _ = h.join(); // exits promptly on the draining flag
+    }
     router.broadcast(Control::Drain);
     buffer.close();
     let mut first_err: Option<anyhow::Error> = None;
@@ -304,6 +312,24 @@ impl System {
             }
         };
 
+        // staleness-driven gen/train rebalancer (DESIGN.md §7): a control
+        // thread watches the gate's Eq. 3 headroom and the router's
+        // backlog and moves the RoleBoard's target gen-fleet size; the
+        // workers execute the conversions at idle points through the
+        // epoch-fenced membership lifecycle
+        let board = match cfg.rebalance {
+            RebalanceMode::Off => None,
+            RebalanceMode::Threshold => {
+                let max = if cfg.rebalance_max_gen == 0 {
+                    cfg.n_rollout_workers
+                } else {
+                    cfg.rebalance_max_gen.min(cfg.n_rollout_workers)
+                };
+                let min = cfg.rebalance_min_gen.clamp(1, max);
+                Some(Arc::new(RoleBoard::new(min, max, cfg.n_rollout_workers)))
+            }
+        };
+
         let t0 = Instant::now();
         let mut handles = Vec::new();
 
@@ -326,6 +352,28 @@ impl System {
                 .unwrap()
         };
 
+        // rebalancer thread (joined first in drain_and_join: it exits on
+        // the draining flag, before the one-shot Drain broadcast)
+        let rebalancer_handle = board.as_ref().map(|b| {
+            let gate = Arc::clone(&gate);
+            let server = Arc::clone(&server);
+            let router = Arc::clone(&router);
+            let board = Arc::clone(b);
+            let stop = Arc::clone(&stop);
+            let draining = Arc::clone(&draining);
+            let rcfg = RebalanceCfg::new(b.min_gen(), b.max_gen(),
+                                         cfg.rebalance_hysteresis);
+            let interval = Duration::from_secs_f64(cfg.rebalance_interval_s.max(1e-3));
+            let group = cfg.group_size;
+            std::thread::Builder::new()
+                .name("rebalancer".into())
+                .spawn(move || {
+                    run_rebalancer(gate, server, router, board, stop, draining,
+                                   rcfg, interval, group)
+                })
+                .unwrap()
+        });
+
         // rollout workers. A worker that dies on an error removes itself
         // from the router's membership first: its queued requests requeue
         // onto the survivors (zero lost), its outstanding/sticky state is
@@ -340,6 +388,7 @@ impl System {
                 draining: Arc::clone(&draining),
                 trace: Arc::clone(&self.trace),
                 gen_tokens: Arc::clone(&gen_tokens),
+                board: board.clone(),
             };
             let rcfg = RolloutCfg {
                 interruptible,
@@ -407,8 +456,8 @@ impl System {
         let wall_s = t0.elapsed().as_secs_f64();
         let gen_tokens_total = gen_tokens.load(Ordering::Relaxed);
 
-        let join_res =
-            drain_and_join(&router, &buffer, &stop, &draining, handles, controller_handle);
+        let join_res = drain_and_join(&router, &buffer, &stop, &draining, handles,
+                                      controller_handle, rebalancer_handle);
         // the root cause outranks secondary join noise in the report
         if let Some(e) = train_err {
             return Err(e);
@@ -417,8 +466,10 @@ impl System {
         let rstats = router.stats();
         crate::info!(
             "system",
-            "router: policy={} routed={:?} steals={} stolen_reqs={}",
-            cfg.route_policy.name(), rstats.routed, rstats.steals, rstats.stolen_reqs
+            "router: policy={} routed={:?} steals={} stolen_reqs={} \
+             alive={}/{} rebalance={}",
+            cfg.route_policy.name(), rstats.routed, rstats.steals, rstats.stolen_reqs,
+            rstats.n_alive(), rstats.n_slots(), cfg.rebalance.name()
         );
 
         // --- eval ---------------------------------------------------------
@@ -527,7 +578,8 @@ mod tests {
         // the trainer "failed" here: the error path must still shut the
         // whole topology down
         let draining = AtomicBool::new(false);
-        drain_and_join(&router, &buffer, &stop, &draining, handles, controller).unwrap();
+        drain_and_join(&router, &buffer, &stop, &draining, handles, controller, None)
+            .unwrap();
         assert!(stop.load(Ordering::Acquire), "stop raised for the controller");
         assert!(draining.load(Ordering::Acquire), "draining raised before the broadcast");
     }

@@ -40,6 +40,16 @@ pub enum Event {
     /// a socket replica's connection dropped without a clean bye; the
     /// disconnect supervision retires the slot via `remove_replica`
     SocketDisconnect { replica: usize },
+    /// the staleness-driven rebalancer converted a replica between the
+    /// generation and training roles (`from`/`to` are the role names,
+    /// "gen"/"train"); `reason` names the triggering signal
+    /// ("headroom_collapsed" | "generation_bound")
+    Rebalance {
+        replica: usize,
+        from: &'static str,
+        to: &'static str,
+        reason: &'static str,
+    },
 }
 
 #[derive(Debug, Clone)]
@@ -126,6 +136,12 @@ impl Trace {
                 Event::SocketDisconnect { replica } => {
                     ("socket_disconnect", *replica, 0, 0)
                 }
+                Event::Rebalance { replica, to, reason, .. } => (
+                    if *to == "train" { "rebalance_to_train" } else { "rebalance_to_gen" },
+                    *replica,
+                    i64::from(*reason == "generation_bound"),
+                    0,
+                ),
             };
             out.push_str(&format!("{:.6},{kind},{actor},{a},{b}\n", s.t));
         }
@@ -190,6 +206,26 @@ mod tests {
         let csv = tr.to_csv();
         assert!(csv.contains("replica_restart,1,4,2"));
         assert!(csv.contains("socket_disconnect,3,0,0"));
+    }
+
+    #[test]
+    fn rebalance_events_render() {
+        let tr = Trace::new(true);
+        tr.log(Event::Rebalance {
+            replica: 2,
+            from: "gen",
+            to: "train",
+            reason: "headroom_collapsed",
+        });
+        tr.log(Event::Rebalance {
+            replica: 2,
+            from: "train",
+            to: "gen",
+            reason: "generation_bound",
+        });
+        let csv = tr.to_csv();
+        assert!(csv.contains("rebalance_to_train,2,0,0"));
+        assert!(csv.contains("rebalance_to_gen,2,1,0"));
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Experiment drivers — one per paper table/figure (DESIGN.md §7). Each
+//! Experiment drivers — one per paper table/figure (DESIGN.md §8). Each
 //! driver prints the paper-style rows and writes CSVs under `runs/exp/`.
 
 pub mod common;

@@ -1,10 +1,13 @@
 //! `areal` — CLI for the AReaL reproduction.
 //!
 //! Subcommands:
-//!   train [key=value ...]          run a training session (see config.rs)
-//!   eval  tier=<t> task=<t> checkpoint=<path> [samples=N]
-//!   sim   model=<1.5B|7B|14B|32B> gpus=N ctx=N mode=<sync|overlap|async>
-//!   exp   <fig1|fig3|fig4|fig5|fig6a|fig6b|table1|table2|table45|table6|table7|table8> [key=value ...]
+//!
+//! ```text
+//! train [key=value ...]          run a training session (see config.rs)
+//! eval  tier=<t> task=<t> checkpoint=<path> [samples=N]
+//! sim   model=<1.5B|7B|14B|32B> gpus=N ctx=N mode=<sync|overlap|async>
+//! exp   <fig1|fig3|fig4|fig5|fig6a|fig6b|table1|table2|table45|table6|table7|table8> [key=value ...]
+//! ```
 //!
 //! No clap in the offline vendor set — arguments are `key=value` pairs.
 

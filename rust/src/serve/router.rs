@@ -175,6 +175,20 @@ pub struct RouterStats {
     pub requeued: u64,
 }
 
+impl RouterStats {
+    /// Currently-alive slots — under gen/train rebalancing (DESIGN.md §7)
+    /// this is the generation side of the split; `n_slots() - n_alive()`
+    /// slots are parked in the train role or lost.
+    pub fn n_alive(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    /// Total replica slots ever created (alive + dead/parked).
+    pub fn n_slots(&self) -> usize {
+        self.alive.len()
+    }
+}
+
 /// Cache-aware request router over a dynamic fleet of engine replicas,
 /// reached only through their [`ReplicaTransport`] endpoints.
 pub struct Router<T> {

@@ -68,8 +68,8 @@ const TICK: Duration = Duration::from_millis(25);
 const CLIENT_TICK: Duration = Duration::from_millis(500);
 const CLIENT_TICKS: u32 = 20;
 
-/// Router-side socket endpoint: [`QueueCore`] mechanics plus a listener
-/// actor that serves the frame protocol.
+/// Router-side socket endpoint: the crate-internal `QueueCore` inbox
+/// mechanics plus a listener actor that serves the frame protocol.
 pub struct SocketTransport<T: Wire> {
     core: QueueCore<T>,
     snap: Mutex<Option<Arc<ProbeSnapshot>>>,

@@ -6,6 +6,7 @@
 use std::collections::HashMap;
 use std::collections::VecDeque;
 
+use crate::coordinator::rebalance::{Decision, Observation, RebalanceCfg, RebalanceCtl};
 use crate::serve::RoutePolicy;
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -71,6 +72,19 @@ pub struct SimConfig {
     /// This is the `SocketTransport` / multi-node deployment model; sweep
     /// it to predict when remote replicas stop paying off
     pub transport_hop_s: f64,
+    /// dynamic gen/train rebalancing (async policy only): replace the
+    /// static `gen_fraction` split with the coordinator's
+    /// staleness-headroom threshold policy (`coordinator::rebalance`,
+    /// DESIGN.md §7) — at every version bump the policy may gracefully
+    /// retire a burst of generation devices into the training pool
+    /// (drain, then move their GPUs) or convert training GPUs back into
+    /// generation devices (cold caches, one weight broadcast)
+    pub rebalance: bool,
+    /// mid-run output-length drift: at `.0` of the run's steps the
+    /// sampler's mean length is scaled by `.1` (spread and truncation
+    /// unchanged) — the workload shape that makes any static
+    /// `gen_fraction` wrong in one of the two phases
+    pub len_drift: Option<(f64, f64)>,
     pub seed: u64,
 }
 
@@ -99,8 +113,34 @@ impl SimConfig {
             family_prefix_frac: 0.0,
             fail_replica: None,
             transport_hop_s: 0.0,
+            rebalance: false,
+            len_drift: None,
             seed: 1,
         }
+    }
+
+    /// The ISSUE-5 drift acceptance workload, shared verbatim by
+    /// `sim::run::tests::dynamic_rebalance_beats_static_fractions_on_drift`
+    /// and `bench_sim`'s `rebalance_drift` records (one constructor, so
+    /// the committed baseline numbers always correspond to the tested
+    /// scenario): 64 GPUs, 4 long-output steps (mean ≈ 7.9k tokens, the
+    /// KV-bound long-CoT regime where generation wants ~0.87 of the
+    /// cluster) drifting into 28 short-output steps (mean ≈ 160 tokens,
+    /// decode weight-amortized and the trainer's allreduce floor
+    /// dominant — balance near half the cluster). Short prompts keep the
+    /// per-bump interrupt-recompute tax proportionate, and η = 8 keeps
+    /// the gate budget above the fleet's slot capacity so the headroom
+    /// signal can swing both ways.
+    pub fn drift_rebalance_workload(gen_fraction: f64, rebalance: bool) -> SimConfig {
+        let mut c = SimConfig::paper_default(super::profile::MODEL_1_5B, 64, 32768.0);
+        c.gen_fraction = gen_fraction;
+        c.prompt_len = 128.0;
+        c.n_steps = 32;
+        c.eta = Some(8);
+        c.slot_cap = 64;
+        c.len_drift = Some((0.125, 0.02));
+        c.rebalance = rebalance;
+        c
     }
 
     /// Tokens of a prompt covered by its family-shared prefix.
@@ -157,6 +197,12 @@ pub struct SimReport {
     /// refill pull round-trips that paid transport latency
     /// (`transport_hop_s > 0` only)
     pub transport_hops: u64,
+    /// rebalancer conversions: generation devices drained into the
+    /// training pool
+    pub gen_to_train: u64,
+    /// rebalancer conversions: training GPUs brought back as generation
+    /// devices
+    pub train_to_gen: u64,
     pub timeline: Vec<Interval>,
 }
 
@@ -256,6 +302,8 @@ pub fn run_sync(cfg: &SimConfig) -> SimReport {
         failed_replicas: 0,
         requeued_requests: 0,
         transport_hops: 0,
+        gen_to_train: 0,
+        train_to_gen: 0,
         timeline,
     }
 }
@@ -329,6 +377,8 @@ pub fn run_overlap(cfg: &SimConfig) -> SimReport {
         failed_replicas: 0,
         requeued_requests: 0,
         transport_hops: 0,
+        gen_to_train: 0,
+        train_to_gen: 0,
         timeline,
     }
 }
@@ -699,19 +749,37 @@ impl GenDevice {
 
 pub fn run_async(cfg: &SimConfig) -> SimReport {
     let mut rng = Rng::new(cfg.seed);
-    let sampler = LenSampler::for_context(cfg.ctx);
+    let base_sampler = LenSampler::for_context(cfg.ctx);
+    let mut sampler = base_sampler.clone();
+    let mut drifted = false;
     let hw = &cfg.hw;
     let m = &cfg.model;
     let n_gen_gpus = ((cfg.n_gpus as f64) * cfg.gen_fraction).round().max(1.0) as usize;
-    let n_train = (cfg.n_gpus - n_gen_gpus).max(1);
+    // training GPUs are a *pool* under rebalancing: a drained gen device
+    // moves its tp GPUs here, a reactivation takes them back
+    let mut n_train = (cfg.n_gpus - n_gen_gpus).max(1);
     // tp GPUs form one logical generation device (weights sharded)
     let n_gen = (n_gen_gpus / m.tp).max(1);
+    // with rebalancing on, pre-build device slots up to the cluster
+    // ceiling — everything but a training-pool floor of one eighth of the
+    // GPUs (at least one tp group), which keeps a runaway grow decision
+    // from starving training into pathologically long steps. Devices
+    // beyond the startup split begin parked: dead to the router, their
+    // GPUs counted in the training pool, so the dynamic policy can
+    // *exceed* the static split in a generation-bound phase, not just
+    // undercut it.
+    let train_floor = (cfg.n_gpus / 8).max(m.tp);
+    let n_dev = if cfg.rebalance {
+        n_gen.max((cfg.n_gpus.saturating_sub(train_floor) / m.tp).max(1))
+    } else {
+        n_gen
+    };
     let slots_per_dev = cfg.slot_cap.min(max_slots(hw, m, cfg.ctx)).max(1);
 
     let mut submitted: u64 = 0;
     let mut version: u64 = 0;
 
-    let mut devices: Vec<GenDevice> = (0..n_gen)
+    let mut devices: Vec<GenDevice> = (0..n_dev)
         .map(|_| GenDevice {
             slots: Vec::with_capacity(slots_per_dev),
             resume_at: 0.0,
@@ -721,7 +789,28 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
             family_cached: None,
         })
         .collect();
-    let mut router = SimRouter::new(n_gen, cfg.route_policy);
+    let mut router = SimRouter::new(n_dev, cfg.route_policy);
+    // devices beyond the startup split start in the training pool
+    let mut parked: Vec<usize> = Vec::new();
+    for d in n_gen..n_dev {
+        router.alive[d] = false;
+        parked.push(d);
+    }
+    // gen devices draining toward the training pool (alive already false:
+    // no refills, no routing; their in-flight slots finish first)
+    let mut retiring = vec![false; n_dev];
+    let mut ctl = cfg.rebalance.then(|| {
+        let mut rcfg = RebalanceCfg::new(1, n_dev, 1.0);
+        // the sim evaluates once per version bump (coarse ticks), so one
+        // agreeing observation acts; the dead band still blocks thrash
+        rcfg.patience = 1;
+        RebalanceCtl::new(rcfg)
+    });
+    // conversions move a burst per decision: at version-bump cadence,
+    // single-device steps could never track a mid-run workload drift
+    let convert_burst = (n_dev / 8).max(1);
+    let mut gen_to_train = 0u64;
+    let mut train_to_gen = 0u64;
     let mut stolen_requests = 0u64;
     let mut transport_hops = 0u64;
     let mut failed_replicas = 0u64;
@@ -732,6 +821,9 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
     let mut trainer_busy_until: Option<f64> = None;
     let mut steps_done = 0usize;
     let mut now = 0.0;
+    // generation-device-seconds actually in the gen role (denominator of
+    // gen_util; equals n_gen·total_s when the fleet never changes)
+    let mut gen_dev_seconds = 0.0;
     let mut tokens_trained = 0.0;
     let mut gen_tokens = 0.0;
     let mut interrupts = 0u64;
@@ -768,8 +860,12 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                 staleness_samples.push(s as f64);
                 max_stale = max_stale.max(s);
             }
+            // live counts: the training pool and the broadcast fan-out
+            // both follow the rebalancer's conversions
+            let gen_now = router.alive.iter().filter(|a| **a).count()
+                + retiring.iter().filter(|r| **r).count();
             let dur = train_step_s(hw, m, toks, n_train)
-                + weight_broadcast_s(hw, m, n_gen);
+                + weight_broadcast_s(hw, m, gen_now.max(1));
             trainer_busy_until = Some(now + dur);
             tokens_trained += toks;
             if steps_done < TIMELINE_STEPS {
@@ -826,7 +922,28 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                 buffer.push((done.produced, done.born_version));
             }
         }
+        gen_dev_seconds += (router
+            .alive
+            .iter()
+            .zip(&retiring)
+            .filter(|(a, r)| **a || **r)
+            .count() as f64)
+            * (t_next - now);
         now = t_next;
+
+        // a retiring device whose slots have drained completes its
+        // conversion: its GPUs join the training pool, its caches go cold
+        for d in 0..n_dev {
+            if retiring[d] && devices[d].slots.is_empty() {
+                retiring[d] = false;
+                devices[d].cached.clear();
+                devices[d].family_cached = None;
+                devices[d].pending_weights = false;
+                parked.push(d);
+                n_train += m.tp;
+                gen_to_train += 1;
+            }
+        }
 
         // trainer completion => new version => weight update
         if trainer_busy_until.is_some_and(|t| t <= now + 1e-12) {
@@ -839,7 +956,13 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
             // through normal placement onto the survivors; the gate is
             // not re-charged (they were already submitted)
             if let Some((fd, fv)) = cfg.fail_replica {
-                if version == fv && fd < n_gen && router.alive[fd] && n_gen > 1 {
+                // guard on the LIVE alive count, not the startup split:
+                // under rebalancing the fleet is dynamic, and the failure
+                // sweep must never take down the last serving device
+                let alive_now = router.alive.iter().filter(|a| **a).count();
+                if version == fv && fd < devices.len() && router.alive[fd]
+                    && alive_now > 1
+                {
                     let orphans: Vec<u64> =
                         devices[fd].slots.drain(..).map(|s| s.gid).collect();
                     requeued_requests +=
@@ -886,6 +1009,103 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                     dev.pending_weights = true;
                 }
             }
+
+            // mid-run workload drift: the output-length distribution
+            // shifts once, at the configured fraction of the run
+            if let Some((frac, scale)) = cfg.len_drift {
+                if !drifted && steps_done as f64 >= frac * cfg.n_steps as f64 {
+                    sampler = base_sampler.scale_mean(scale);
+                    drifted = true;
+                }
+            }
+
+            // staleness-driven rebalancing (DESIGN.md §7), evaluated at
+            // the version bump — the cadence at which the Eq. 3 headroom
+            // signal is well-defined. Same threshold policy as the live
+            // coordinator; the sim's generation-backlog signal is trainer
+            // starvation (the buffer cannot seed the next step).
+            if let Some(ctl) = ctl.as_mut() {
+                if steps_done < cfg.n_steps {
+                    let b = cfg.batch_seqs as u64;
+                    let headroom = cfg.eta.map(|eta| {
+                        let ceiling = b * (version + eta + 1);
+                        ceiling.saturating_sub(submitted) as f64 / b as f64
+                    });
+                    let alive_count = router.alive.iter().filter(|a| **a).count();
+                    let gen_capacity =
+                        alive_count + retiring.iter().filter(|r| **r).count();
+                    let o = Observation {
+                        headroom_batches: headroom,
+                        gen_backlogged: buffer.len() < cfg.batch_seqs,
+                        n_gen: gen_capacity,
+                    };
+                    match ctl.observe(o) {
+                        Decision::Hold => {}
+                        Decision::GenToTrain => {
+                            // gracefully retire the emptiest alive devices:
+                            // no more routing or refills now (their queued
+                            // requests requeue whole onto the survivors),
+                            // GPUs move once the in-flight slots drain. At
+                            // least one serving device always remains, and
+                            // only one wave drains at a time — starting new
+                            // retirements while a wave is still draining
+                            // would cascade far past the target on a stale
+                            // capacity signal.
+                            let mut burst = if retiring.iter().any(|r| *r) {
+                                0
+                            } else {
+                                convert_burst.min(alive_count.saturating_sub(1))
+                            };
+                            while burst > 0 {
+                                let victim = (0..n_dev)
+                                    .filter(|&d| router.alive[d] && !retiring[d])
+                                    .min_by_key(|&d| devices[d].slots.len());
+                                let Some(v) = victim else { break };
+                                requeued_requests += router.remove_replica(
+                                    v,
+                                    Vec::new(),
+                                    &devices,
+                                    version,
+                                    cfg,
+                                );
+                                retiring[v] = true;
+                                burst -= 1;
+                            }
+                        }
+                        Decision::TrainToGen => {
+                            let mut burst = convert_burst;
+                            while burst > 0 {
+                                // cancel an in-progress retirement first —
+                                // free (caches intact, GPUs never moved)
+                                if let Some(d) = (0..n_dev).find(|&d| retiring[d]) {
+                                    retiring[d] = false;
+                                    router.alive[d] = true;
+                                    burst -= 1;
+                                    continue;
+                                }
+                                // then reactivate parked devices while the
+                                // training pool keeps its floor (a whole tp
+                                // group must come out without dipping below)
+                                if n_train < train_floor + m.tp {
+                                    break;
+                                }
+                                let Some(d) = parked.pop() else { break };
+                                router.alive[d] = true;
+                                devices[d].cached.clear();
+                                devices[d].family_cached = None;
+                                devices[d].pending_weights = false;
+                                // cold join: one weight broadcast before the
+                                // reactivated device can decode
+                                devices[d].resume_at = devices[d].resume_at.max(now)
+                                    + weight_broadcast_s(hw, m, 1);
+                                n_train -= m.tp;
+                                train_to_gen += 1;
+                                burst -= 1;
+                            }
+                        }
+                    }
+                }
+            }
         }
 
         // refills
@@ -906,7 +1126,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         tokens_trained,
         effective_tps: tokens_trained / now,
         gen_tokens,
-        gen_util: busy / (n_gen as f64 * now),
+        gen_util: busy / gen_dev_seconds.max(1e-12),
         interrupts,
         mean_staleness: stats::mean(&staleness_samples),
         max_staleness: max_stale,
@@ -923,6 +1143,8 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         failed_replicas,
         requeued_requests,
         transport_hops,
+        gen_to_train,
+        train_to_gen,
         timeline,
     }
 }
@@ -1227,6 +1449,65 @@ mod tests {
             local.effective_tps
         );
         assert!(dear.total_s > local.total_s);
+    }
+
+    /// The ISSUE-5 drift workload — see
+    /// [`SimConfig::drift_rebalance_workload`] (one constructor shared
+    /// with `bench_sim`, so the bench's `rebalance_drift` baseline always
+    /// matches the tested scenario). The short phase carries most of the
+    /// steps: every static split is badly wrong in at least one phase.
+    fn drift_cfg(frac: f64, rebalance: bool) -> SimConfig {
+        SimConfig::drift_rebalance_workload(frac, rebalance)
+    }
+
+    #[test]
+    fn dynamic_rebalance_beats_static_fractions_on_drift() {
+        // the ISSUE-5 acceptance sweep: on a workload whose output-length
+        // distribution drifts mid-run, the staleness-headroom rebalancer
+        // must match-or-beat EVERY static gen_fraction on simulated
+        // effective throughput — a static split is tuned for one phase
+        // and pays for it in the other; the dynamic policy re-splits at
+        // the drift
+        let mut best_static = f64::NEG_INFINITY;
+        let mut best_frac = 0.0;
+        for frac in [0.5, 0.625, 0.75, 0.875] {
+            let r = run_async(&drift_cfg(frac, false));
+            assert_eq!(r.steps, 32, "static {frac} must complete");
+            assert_eq!(r.gen_to_train + r.train_to_gen, 0, "static fleet moved");
+            if r.effective_tps > best_static {
+                best_static = r.effective_tps;
+                best_frac = frac;
+            }
+        }
+        let dynamic = run_async(&drift_cfg(0.75, true));
+        assert_eq!(dynamic.steps, 32, "dynamic run must complete");
+        assert!(
+            dynamic.effective_tps >= 0.999 * best_static,
+            "dynamic {:.0} tps must be >= best static {:.0} tps (frac {best_frac})",
+            dynamic.effective_tps,
+            best_static
+        );
+        // and it must have actually rebalanced, both directions: grown
+        // past the startup split in the generation-bound long phase,
+        // shed capacity back to training in the short phase
+        assert!(dynamic.train_to_gen > 0, "no train->gen conversion happened");
+        assert!(dynamic.gen_to_train > 0, "no gen->train conversion happened");
+        // conservation still holds across every conversion
+        assert!(dynamic.tokens_trained <= dynamic.gen_tokens + 1e-6);
+    }
+
+    #[test]
+    fn rebalanced_run_is_deterministic_and_conservative() {
+        let mut cfg = drift_cfg(0.75, true);
+        cfg.n_steps = 10;
+        cfg.len_drift = Some((0.4, 0.02));
+        let a = run_async(&cfg);
+        let b = run_async(&cfg);
+        assert_eq!(a.total_s, b.total_s);
+        assert_eq!(a.tokens_trained, b.tokens_trained);
+        assert_eq!(a.gen_to_train, b.gen_to_train);
+        assert_eq!(a.train_to_gen, b.train_to_gen);
+        assert!(a.gen_util > 0.0 && a.gen_util <= 1.0 + 1e-9, "{}", a.gen_util);
     }
 
     #[test]

@@ -33,6 +33,20 @@ impl LenSampler {
         LenSampler::new(max_gen / 4.0, 0.9, 64.0, max_gen)
     }
 
+    /// The same distribution with the (pre-truncation) mean scaled by
+    /// `k` — the sim's mid-run output-length drift: a lognormal's mean is
+    /// `exp(mu + sigma²/2)`, so scaling the mean by `k` is a `ln k` shift
+    /// of `mu` with the spread and the truncation window unchanged.
+    pub fn scale_mean(&self, k: f64) -> LenSampler {
+        assert!(k > 0.0, "mean scale must be positive");
+        LenSampler {
+            mu: self.mu + k.ln(),
+            sigma: self.sigma,
+            min_len: self.min_len,
+            max_len: self.max_len,
+        }
+    }
+
     pub fn sample(&self, rng: &mut Rng) -> f64 {
         rng.lognormal(self.mu, self.sigma)
             .clamp(self.min_len, self.max_len)
@@ -63,6 +77,21 @@ mod tests {
         let mut rng = Rng::new(2);
         for x in s.sample_n(&mut rng, 5000) {
             assert!((64.0..=15360.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn scale_mean_shifts_the_distribution() {
+        let s = LenSampler::new(2000.0, 0.5, 1.0, 1e9);
+        let quarter = s.scale_mean(0.25);
+        let mut rng = Rng::new(7);
+        let m = stats::mean(&quarter.sample_n(&mut rng, 20_000));
+        assert!((m - 500.0).abs() / 500.0 < 0.05, "{m}");
+        // clamps are preserved, not rescaled
+        let capped = LenSampler::new(100.0, 0.5, 64.0, 256.0).scale_mean(100.0);
+        let mut rng = Rng::new(8);
+        for x in capped.sample_n(&mut rng, 2000) {
+            assert!((64.0..=256.0).contains(&x), "{x}");
         }
     }
 

@@ -1,0 +1,238 @@
+//! Live rebalancing acceptance (ISSUE 5): drive a drifting workload
+//! through the real control plane — `run_controller` submitting GRPO
+//! groups under the Eq. 3 gate, the real `run_rebalancer` thread watching
+//! headroom/backlog, and workers executing conversions through the
+//! `RoleBoard` exactly as `rollout::serve_loop` does (retire at idle via
+//! the epoch-fenced salvage path, park, rejoin through `add_replica`).
+//! The workers here serve their inboxes with a mock "engine" (recording
+//! served requests instead of decoding — the real engine needs AOT
+//! artifacts), but every router/board/gate/trace interaction is the
+//! production code path.
+//!
+//! Acceptance: at least one gen→train and one train→gen conversion occurs
+//! (observed via `Event::Rebalance`), zero requests are lost and no GRPO
+//! group is left partial across the conversions.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use areal::coordinator::controller::{run_controller, ControllerCfg};
+use areal::coordinator::rebalance::{run_rebalancer, RebalanceCfg, RoleBoard};
+use areal::coordinator::{Event, GenRouter, ParamServer, StalenessGate, Trace};
+use areal::runtime::executor::SendLiteral;
+use areal::runtime::{HostTensor, ParamSet};
+use areal::serve::{Control, RoutePolicy, RouterCfg};
+use areal::tasks::dataset::LevelMix;
+use areal::tasks::{AdditionTask, Dataset};
+
+const GROUP: usize = 4;
+const BATCH: usize = 8;
+const BUDGET: u64 = 160; // 40 whole groups
+
+fn pset(v: u64) -> Arc<ParamSet> {
+    let lit = HostTensor::scalar_f32(0.0).to_literal().unwrap();
+    ParamSet::with_version(vec![SendLiteral(lit)], v)
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for: {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// A rollout worker reduced to its dispatch-plane contract: serve the
+/// epoch-fenced inbox, honor Drain, and at idle offer the replica to the
+/// rebalancer (`try_retire` → park → `try_rejoin`) — the exact
+/// conversion protocol of `rollout::serve_loop` +
+/// `run_supervised_rollout_worker`.
+#[allow(clippy::too_many_arguments)]
+fn mock_worker(w: usize, router: Arc<GenRouter>, board: Arc<RoleBoard>,
+               trace: Arc<Trace>, stop: Arc<AtomicBool>, draining: Arc<AtomicBool>,
+               served: Arc<Mutex<HashMap<u64, usize>>>, slow_ms: Arc<AtomicU64>) {
+    let mut slot = w;
+    'serve: loop {
+        let epoch = router.epoch(slot);
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            if router
+                .take_control_at(slot, epoch)
+                .iter()
+                .any(|c| *c == Control::Drain)
+            {
+                return;
+            }
+            let p = router.pull_at(slot, epoch, GROUP);
+            if p.reqs.is_empty() {
+                if !draining.load(Ordering::Acquire)
+                    && board.try_retire(router.as_ref(), slot, epoch, &trace)
+                {
+                    // train role: park until rejoined or shut down
+                    loop {
+                        if stop.load(Ordering::Acquire)
+                            || draining.load(Ordering::Acquire)
+                        {
+                            return;
+                        }
+                        if let Some((s, _epoch)) =
+                            board.try_rejoin(router.as_ref(), &trace)
+                        {
+                            slot = s;
+                            continue 'serve;
+                        }
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            for q in p.reqs {
+                let ms = slow_ms.load(Ordering::Acquire);
+                if ms > 0 {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                *served.lock().unwrap().entry(q.group).or_default() += 1;
+                router.complete(slot, q.tokens.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn rebalancer_converts_both_ways_with_no_lost_requests() {
+    let router: Arc<GenRouter> =
+        Arc::new(GenRouter::new(3, RouterCfg::new(RoutePolicy::Affinity, 8, 0)));
+    let gate = Arc::new(StalenessGate::new(BATCH, Some(1)));
+    let server = ParamServer::new(pset(0));
+    let board = Arc::new(RoleBoard::new(1, 3, 3));
+    let trace = Arc::new(Trace::new(true));
+    let stop = Arc::new(AtomicBool::new(false));
+    let draining = Arc::new(AtomicBool::new(false));
+    let served: Arc<Mutex<HashMap<u64, usize>>> = Arc::new(Mutex::new(HashMap::new()));
+    let slow_ms = Arc::new(AtomicU64::new(0));
+
+    // the real controller thread: tokenize once, atomic whole-group
+    // reservation against the gate, router submission
+    let controller = {
+        let ds = Dataset::new(Arc::new(AdditionTask), 1, LevelMix::single(1));
+        let (gate, server, router, stop, trace) = (
+            Arc::clone(&gate),
+            Arc::clone(&server),
+            Arc::clone(&router),
+            Arc::clone(&stop),
+            Arc::clone(&trace),
+        );
+        std::thread::Builder::new()
+            .name("controller".into())
+            .spawn(move || {
+                run_controller(
+                    ds, gate, server, router, stop,
+                    ControllerCfg { group_size: GROUP, max_submissions: Some(BUDGET) },
+                    trace,
+                )
+            })
+            .unwrap()
+    };
+
+    // the real rebalancer thread, on a fast observation interval
+    let rebalancer = {
+        let (gate, server, router, board, stop, draining) = (
+            Arc::clone(&gate),
+            Arc::clone(&server),
+            Arc::clone(&router),
+            Arc::clone(&board),
+            Arc::clone(&stop),
+            Arc::clone(&draining),
+        );
+        std::thread::Builder::new()
+            .name("rebalancer".into())
+            .spawn(move || {
+                run_rebalancer(gate, server, router, board, stop, draining,
+                               RebalanceCfg::new(1, 3, 1.0),
+                               Duration::from_millis(5), GROUP)
+            })
+            .unwrap()
+    };
+
+    let workers: Vec<_> = (0..3)
+        .map(|w| {
+            let (router, board, trace, stop, draining, served, slow_ms) = (
+                Arc::clone(&router),
+                Arc::clone(&board),
+                Arc::clone(&trace),
+                Arc::clone(&stop),
+                Arc::clone(&draining),
+                Arc::clone(&served),
+                Arc::clone(&slow_ms),
+            );
+            std::thread::Builder::new()
+                .name(format!("rollout-{w}"))
+                .spawn(move || {
+                    mock_worker(w, router, board, trace, stop, draining, served,
+                                slow_ms)
+                })
+                .unwrap()
+        })
+        .collect();
+
+    // --- phase 1: the trainer "stalls" at version 0. Eq. 3 admits
+    // exactly B·(η+1) = 16 submissions, the fleet drains them fast, the
+    // headroom pins at zero with shallow inboxes — the rebalancer must
+    // shed generation capacity down to min_gen through idle retirements.
+    wait_until("phase-1 submissions gated at 16", || gate.submitted() == 16);
+    wait_until("gen fleet shed to min_gen", || router.n_alive() == 1);
+    let to_train_p1 = trace.count(|e| {
+        matches!(e, Event::Rebalance { from: "gen", to: "train", .. })
+    });
+    assert!(to_train_p1 >= 2, "expected >= 2 gen->train conversions, got {to_train_p1}");
+
+    // --- phase 2: the "trainer" leaps ahead (version 50 opens ~50
+    // batches of headroom) while serving turns slow — deep inboxes on an
+    // open gate are the generation-bound signal, and the rebalancer must
+    // bring parked capacity back.
+    slow_ms.store(25, Ordering::Release);
+    server.publish(pset(50));
+    wait_until("a parked worker rejoined generation", || {
+        trace.count(|e| matches!(e, Event::Rebalance { from: "train", to: "gen", .. }))
+            >= 1
+    });
+
+    // --- run to quiescence: full submission budget served, nothing lost
+    slow_ms.store(0, Ordering::Release);
+    wait_until("all 160 submissions served", || {
+        served.lock().unwrap().values().sum::<usize>() as u64 == BUDGET
+    });
+    assert_eq!(gate.submitted(), BUDGET, "controller stopped at its budget");
+    assert_eq!(router.queued_total(), 0, "nothing stranded in any inbox");
+
+    // --- shutdown: the drain_and_join discipline
+    draining.store(true, Ordering::Release);
+    rebalancer.join().unwrap();
+    router.broadcast(Control::Drain);
+    for h in workers {
+        h.join().unwrap();
+    }
+    stop.store(true, Ordering::Release);
+    controller.join().unwrap();
+
+    // zero lost requests and no partial GRPO group across conversions:
+    // every one of the 40 groups was served exactly G=4 times
+    let served = served.lock().unwrap();
+    assert_eq!(served.len(), 40, "all 40 groups reached the fleet");
+    for (gid, n) in served.iter() {
+        assert_eq!(*n, GROUP, "group {gid} served {n} != {GROUP} siblings");
+    }
+    let to_train = trace
+        .count(|e| matches!(e, Event::Rebalance { from: "gen", to: "train", .. }));
+    let to_gen = trace
+        .count(|e| matches!(e, Event::Rebalance { from: "train", to: "gen", .. }));
+    assert!(to_train >= 2 && to_gen >= 1,
+            "conversions: {to_train} gen->train, {to_gen} train->gen");
+    // conversions are clean role changes, not failures
+    assert_eq!(trace.count(|e| matches!(e, Event::ReplicaDown { .. })), 0);
+}

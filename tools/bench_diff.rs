@@ -174,6 +174,7 @@ fn diff_file(path: &str, baseline_dir: &str, tolerance: f64) -> Outcome {
 fn main() -> ExitCode {
     let mut baseline_dir = String::from("benches/baseline");
     let mut tolerance = 0.15f64;
+    let mut update = false;
     let mut files: Vec<String> = Vec::new();
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -186,14 +187,37 @@ fn main() -> ExitCode {
                     .parse()
                     .expect("tolerance must be a float")
             }
+            "--update-baseline" => update = true,
             other => files.push(other.to_string()),
         }
     }
     if files.is_empty() {
         eprintln!(
-            "usage: bench_diff [--baseline DIR] [--tolerance F] BENCH_*.json"
+            "usage: bench_diff [--baseline DIR] [--tolerance F] \
+             [--update-baseline] BENCH_*.json"
         );
         return ExitCode::from(2);
+    }
+    if update {
+        // seed/refresh the committed baseline from the given run: one
+        // command instead of hand-copying files (see
+        // benches/baseline/README.md for when a refresh is legitimate)
+        std::fs::create_dir_all(&baseline_dir).expect("create baseline dir");
+        for f in &files {
+            let name = std::path::Path::new(f)
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| f.clone());
+            let dst = format!("{baseline_dir}/{name}");
+            match std::fs::copy(f, &dst) {
+                Ok(_) => println!("baseline updated: {dst}"),
+                Err(e) => {
+                    eprintln!("FAIL copying {f} -> {dst}: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+        return ExitCode::SUCCESS;
     }
     let mut total = Outcome { compared: 0, regressions: 0, warnings: 0 };
     for f in &files {
