@@ -188,7 +188,7 @@ fn run_routed_fleet(policy: RoutePolicy, replicas: usize, groups: usize, g: usiz
             (0..FAMILY_LEN).map(|i| (family as i32 * 13 + i as i32) % 43 + 3).collect();
         tokens.extend((0..TAIL_LEN).map(|i| (gid as i32 * 29 + i as i32) % 89 + 3));
         for _ in 0..g {
-            router.submit(Request { group: gid, tokens: tokens.clone(), payload: () });
+            router.submit(Request::new(gid, tokens.clone(), ()));
         }
         for w in 0..replicas {
             let rounds = if w == 0 { 6 } else { 3 };
@@ -385,7 +385,7 @@ fn run_transport_fleet(socket: bool, replicas: usize, groups: usize,
             .collect();
         tokens.extend((0..TAIL_LEN).map(|i| (gid as i32 * 29 + i as i32) % 89 + 3));
         for _ in 0..g {
-            router.submit(Request { group: gid, tokens: tokens.clone(), payload: () });
+            router.submit(Request::new(gid, tokens.clone(), ()));
         }
     }
     // drained = every request pulled AND its completion reported back
@@ -522,7 +522,7 @@ fn main() {
             for gid in 0..64u64 {
                 let p = random_tokens(&mut rng, 32);
                 for _ in 0..4 {
-                    router.submit(Request { group: gid, tokens: p.clone(), payload: () });
+                    router.submit(Request::new(gid, p.clone(), ()));
                 }
             }
             let before = router.queued_total();

@@ -211,6 +211,22 @@ pub struct Config {
     pub out_dir: PathBuf,
     pub checkpoint_every: usize,
     pub eval_samples: usize,
+
+    // observability (DESIGN.md "Observability")
+    /// live telemetry plane: registry recording, the periodic JSONL
+    /// exporter and the /metrics endpoint (off = every instrument write
+    /// is a single relaxed load + branch)
+    pub metrics: bool,
+    /// bind address for the Prometheus-text `GET /metrics` listener
+    /// (port 0 = ephemeral; the bound address is logged at startup)
+    pub metrics_addr: String,
+    /// interval between JSONL snapshots appended to
+    /// `out_dir/metrics_live.jsonl` (a final snapshot is always written
+    /// at shutdown)
+    pub metrics_interval_s: f64,
+    /// max events the in-memory trace ring retains (oldest dropped first;
+    /// drops surface as `areal_trace_dropped_total`)
+    pub trace_cap: usize,
 }
 
 impl Default for Config {
@@ -259,6 +275,10 @@ impl Default for Config {
             out_dir: PathBuf::from("runs/default"),
             checkpoint_every: 0,
             eval_samples: 4,
+            metrics: true,
+            metrics_addr: "127.0.0.1:0".into(),
+            metrics_interval_s: 1.0,
+            trace_cap: 262_144,
         }
     }
 }
@@ -319,6 +339,10 @@ impl Config {
         ("out_dir", "runs/default"),
         ("checkpoint_every", "0"),
         ("eval_samples", "4"),
+        ("metrics", "true"),
+        ("metrics_addr", "127.0.0.1:0"),
+        ("metrics_interval_s", "1.0"),
+        ("trace_cap", "262144"),
     ];
 
     /// Load from a JSON file then apply `key=value` overrides.
@@ -416,6 +440,10 @@ impl Config {
             "out_dir" => self.out_dir = PathBuf::from(val),
             "checkpoint_every" => self.checkpoint_every = u(val)?,
             "eval_samples" => self.eval_samples = u(val)?,
+            "metrics" => self.metrics = parse_bool(val)?,
+            "metrics_addr" => self.metrics_addr = val.to_string(),
+            "metrics_interval_s" => self.metrics_interval_s = f(val)?,
+            "trace_cap" => self.trace_cap = u(val)?,
             // reachable only for a key listed in KEYS without a match arm
             // — the inverse drift, caught by `keys_inventory_matches_set`
             other => bail!("config key '{other}' is in Config::KEYS but has no set() arm"),
@@ -439,6 +467,23 @@ impl Config {
         }
         if self.level_lo > self.level_hi {
             bail!("level_lo > level_hi");
+        }
+        if self.metrics {
+            if self.metrics_interval_s <= 0.0 {
+                bail!(
+                    "metrics_interval_s ({}) must be > 0",
+                    self.metrics_interval_s
+                );
+            }
+            if !self.metrics_addr.contains(':') {
+                bail!(
+                    "metrics_addr '{}' is not host:port (e.g. 127.0.0.1:0)",
+                    self.metrics_addr
+                );
+            }
+        }
+        if self.trace_cap == 0 {
+            bail!("trace_cap must be >= 1 (the trace ring needs capacity)");
         }
         // a socket frame must hold a max-length request (tokens serialize
         // to a handful of bytes each); far below that is a misconfiguration
@@ -727,6 +772,35 @@ mod tests {
         .is_ok());
         // with rebalancing off the same values are inert, not errors
         assert!(Config::load(None, &["rebalance_min_gen=0".into()]).is_ok());
+    }
+
+    #[test]
+    fn metrics_keys_apply() {
+        let cfg = Config::load(
+            None,
+            &["metrics=false".into(), "metrics_addr=127.0.0.1:9100".into(),
+              "metrics_interval_s=0.25".into(), "trace_cap=1024".into()],
+        )
+        .unwrap();
+        assert!(!cfg.metrics);
+        assert_eq!(cfg.metrics_addr, "127.0.0.1:9100");
+        assert!((cfg.metrics_interval_s - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.trace_cap, 1024);
+        // defaults: telemetry on, ephemeral port, 1s cadence, roomy ring
+        let d = Config::default();
+        assert!(d.metrics);
+        assert_eq!(d.metrics_addr, "127.0.0.1:0");
+        assert!(d.trace_cap >= 65536, "default trace_cap should be generous");
+        // invalid values are rejected at load time
+        assert!(Config::load(None, &["metrics_interval_s=0".into()]).is_err());
+        assert!(Config::load(None, &["metrics_addr=nonsense".into()]).is_err());
+        assert!(Config::load(None, &["trace_cap=0".into()]).is_err());
+        // with metrics off the exporter knobs are inert, not errors
+        assert!(Config::load(
+            None,
+            &["metrics=false".into(), "metrics_interval_s=0".into()]
+        )
+        .is_ok());
     }
 
     #[test]

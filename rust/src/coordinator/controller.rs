@@ -70,11 +70,13 @@ pub fn run_controller(dataset: Dataset, gate: Arc<StalenessGate>,
             next_idx += 1;
             let tokens = tokenizer.encode_bos(&prompt.text);
             for _ in 0..cfg.group_size {
-                let replica = router.submit(Request {
-                    group: prompt.group,
-                    tokens: tokens.clone(),
-                    payload: prompt.clone(),
-                });
+                // Request::new stamps the submit instant — the origin of
+                // the TTFT / e2e lifecycle span
+                let replica = router.submit(Request::new(
+                    prompt.group,
+                    tokens.clone(),
+                    prompt.clone(),
+                ));
                 trace.log(Event::Route {
                     replica,
                     group: prompt.group,

@@ -28,7 +28,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{Engine, HostTensor, ParamSet, SendLiteral, Version};
-use crate::serve::{Grow, ReplicaProbe, Scheduler, SeqId, ServeCfg, ServeStats};
+use crate::serve::{Grow, ReplicaProbe, ReqSpan, Request, Scheduler, SeqId, ServeCfg,
+                   ServeStats};
 use crate::tasks::Prompt;
 use crate::text::tokenizer::{Tokenizer, BOS, EOS};
 use crate::util::rng::Rng;
@@ -48,6 +49,9 @@ struct ActiveSeq {
     /// (version, tokens sampled under it)
     segments: Vec<(Version, usize)>,
     version_born: Version,
+    /// lifecycle span carried from the originating request; survives
+    /// preemption/park cycles and rides into the trajectory
+    span: ReqSpan,
 }
 
 impl ActiveSeq {
@@ -72,6 +76,7 @@ impl ActiveSeq {
             correct: false,
             truncated,
             worker,
+            span: self.span,
         }
     }
 }
@@ -96,8 +101,8 @@ pub struct GenEngine {
     /// measured cache/load state through [`GenEngine::probe`] while the
     /// worker thread serves requests.
     serve: Arc<Mutex<Scheduler>>,
-    /// prompts submitted but not yet admitted
-    pending_fresh: HashMap<SeqId, Prompt>,
+    /// prompts submitted but not yet admitted (with their lifecycle spans)
+    pending_fresh: HashMap<SeqId, (Prompt, ReqSpan)>,
     /// preempted sequences awaiting re-admission (committed state intact)
     parked: HashMap<SeqId, ActiveSeq>,
     next_seq: SeqId,
@@ -258,7 +263,7 @@ impl GenEngine {
                     );
                 }
             }
-            self.pending_fresh.insert(id, r.payload);
+            self.pending_fresh.insert(id, (r.payload, r.span));
         }
         if n > 0 {
             self.needs_prefill = true;
@@ -275,7 +280,7 @@ impl GenEngine {
         while reqs.len() < capacity {
             let Some(p) = prompts.pop() else { break };
             let tokens = self.tokenizer.encode_bos(&p.text);
-            reqs.push(GenRequest { group: p.group, tokens, payload: p });
+            reqs.push(Request::new(p.group, tokens, p));
         }
         self.fill_requests(reqs)
     }
@@ -289,17 +294,18 @@ impl GenEngine {
     /// intact). Leaves the engine empty.
     pub fn salvage_requests(&mut self) -> Vec<GenRequest> {
         let mut out = Vec::new();
-        for (_, prompt) in self.pending_fresh.drain() {
+        for (_, (prompt, span)) in self.pending_fresh.drain() {
             // the token copy went to the scheduler; re-encode (the same
             // deterministic encoding the controller used)
             let tokens = self.tokenizer.encode_bos(&prompt.text);
-            out.push(GenRequest { group: prompt.group, tokens, payload: prompt });
+            out.push(GenRequest { group: prompt.group, tokens, payload: prompt, span });
         }
         for (_, s) in self.parked.drain() {
             out.push(GenRequest {
                 group: s.prompt.group,
                 tokens: s.tokens[..s.prompt_len].to_vec(),
                 payload: s.prompt,
+                span: s.span,
             });
         }
         for slot in self.slots.iter_mut() {
@@ -308,6 +314,7 @@ impl GenEngine {
                     group: s.prompt.group,
                     tokens: s.tokens[..s.prompt_len].to_vec(),
                     payload: s.prompt,
+                    span: s.span,
                 });
             }
         }
@@ -343,11 +350,11 @@ impl GenEngine {
         // --- admission wave (paged-KV + prefix-cache aware) --------------
         let admitted = self.serve.lock().unwrap().schedule();
         for a in admitted {
-            let seq = if let Some(parked) = self.parked.remove(&a.id) {
+            let mut seq = if let Some(parked) = self.parked.remove(&a.id) {
                 debug_assert_eq!(parked.tokens.len(), a.tokens.len());
                 parked
             } else {
-                let prompt = self
+                let (prompt, span) = self
                     .pending_fresh
                     .remove(&a.id)
                     .context("scheduler admitted an unknown sequence")?;
@@ -360,8 +367,12 @@ impl GenEngine {
                     behav_logp: Vec::new(),
                     segments: Vec::new(),
                     version_born: self.params.version,
+                    span,
                 }
             };
+            // first admission into a slot (stamp-if-None keeps the earliest
+            // across re-prefills after interrupts and preemption resumes)
+            seq.span.stamp_prefill_start();
             let slot = self
                 .slots
                 .iter()
@@ -405,6 +416,7 @@ impl GenEngine {
         let version = self.params.version;
         for (i, slot) in self.slots.iter_mut().enumerate() {
             if let Some(s) = slot {
+                s.span.stamp_first_token();
                 s.push_token(toks[i], logps[i], version);
                 self.tokens_generated += 1;
             }

@@ -69,6 +69,9 @@ pub struct Trajectory {
     pub truncated: bool,
     /// rollout worker that produced it (traces/metrics)
     pub worker: usize,
+    /// lifecycle span carried from the originating request (TTFT / e2e
+    /// latency histograms); unstamped for synthetic trajectories
+    pub span: crate::serve::ReqSpan,
 }
 
 impl Trajectory {
@@ -129,6 +132,7 @@ mod tests {
             correct: true,
             truncated: false,
             worker: 0,
+            span: Default::default(),
         }
     }
 

@@ -283,6 +283,7 @@ impl RoleBoard {
             return false; // stale epoch, already dead, or last alive
         }
         self.parked.fetch_add(1, Ordering::AcqRel);
+        crate::util::metrics::inc("areal_rebalance_to_train_total", 1);
         trace.log(Event::Rebalance {
             replica: slot,
             from: "gen",
@@ -307,6 +308,7 @@ impl RoleBoard {
         self.parked
             .fetch_update(Ordering::AcqRel, Ordering::Acquire, |p| Some(p.saturating_sub(1)))
             .ok();
+        crate::util::metrics::inc("areal_rebalance_to_gen_total", 1);
         trace.log(Event::Rebalance {
             replica: slot,
             from: "train",
@@ -500,9 +502,9 @@ mod tests {
         let board = RoleBoard::new(1, 2, 2);
         // queue a whole group onto one replica (affinity colocates)
         let tokens: Vec<i32> = (0..8).collect();
-        let home = router.submit(Request { group: 1, tokens: tokens.clone(), payload: () });
+        let home = router.submit(Request::new(1, tokens.clone(), ()));
         for _ in 0..3 {
-            router.submit(Request { group: 1, tokens: tokens.clone(), payload: () });
+            router.submit(Request::new(1, tokens.clone(), ()));
         }
         assert_eq!(router.queued(home), 4);
         board.set_target(1, RebalanceReason::HeadroomCollapsed);

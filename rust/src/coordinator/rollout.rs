@@ -414,8 +414,11 @@ fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
                 || (empties as f64) >= (b as f64) * cfg.refill_fraction);
         if refill_wave {
             if capacity > 0 && !draining {
-                let (reqs, stolen) =
+                let (mut reqs, stolen) =
                     plane.pull(shared, worker_id, capacity, || gen.probe_snapshot())?;
+                for r in &mut reqs {
+                    r.span.stamp_admit();
+                }
                 if let Some((victim, n)) = stolen {
                     shared.trace.log(Event::Steal { thief: worker_id, victim, reqs: n });
                 }
@@ -441,9 +444,9 @@ fn serve_loop(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
         if !gen.all_empty() && !gen.needs_prefill() {
             let before = gen.tokens_generated;
             let finished = gen.decode_chunk()?;
-            shared
-                .gen_tokens
-                .fetch_add(gen.tokens_generated - before, Ordering::Relaxed);
+            let delta = gen.tokens_generated - before;
+            shared.gen_tokens.fetch_add(delta, Ordering::Relaxed);
+            crate::util::metrics::inc("areal_gen_tokens_total", delta);
             let preemptions = gen.preemptions();
             if preemptions > seen_preemptions {
                 shared.trace.log(Event::Preempt {
@@ -652,6 +655,20 @@ pub fn run_supervised_rollout_worker(worker_id: usize, engine: Arc<Engine>,
 /// blocks on CPU-side verification — §6).
 fn submit_for_reward(shared: &RolloutShared, gen: &GenEngine,
                      mut traj: super::messages::Trajectory) {
+    if crate::util::metrics::enabled() {
+        // per-policy latency histograms from the request's lifecycle span:
+        // TTFT = submit -> first sampled token, e2e = submit -> reward
+        // hand-off (the rollout plane's full residence time)
+        let policy = shared.router.policy().name();
+        if let Some(ttft) = traj.span.ttft_s() {
+            crate::util::metrics::observe(
+                &format!("areal_ttft_seconds{{policy=\"{policy}\"}}"), ttft);
+        }
+        if let Some(e2e) = traj.span.e2e_s() {
+            crate::util::metrics::observe(
+                &format!("areal_e2e_seconds{{policy=\"{policy}\"}}"), e2e);
+        }
+    }
     let completion = gen.completion_text(&traj);
     let req = RewardRequest {
         id: traj.prompt.group,
@@ -681,16 +698,16 @@ mod tests {
     use crate::tasks::Prompt;
 
     fn preq(group: u64, tokens: Vec<i32>) -> GenRequest {
-        Request {
+        Request::new(
             group,
             tokens,
-            payload: Prompt {
+            Prompt {
                 text: "Q".into(),
                 meta: "m".into(),
                 level: 1,
                 group,
             },
-        }
+        )
     }
 
     #[test]

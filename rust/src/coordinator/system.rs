@@ -25,6 +25,7 @@ use crate::runtime::{Engine, Manifest, ParamSet, TrainState};
 use crate::serve::{Control, Pulled, ReplicaTransport, RouterCfg, ServeCfg, SocketTransport};
 use crate::tasks::{self, dataset::LevelMix, Dataset, SuiteResult};
 use crate::text::tokenizer::{Tokenizer, EOS};
+use crate::util::metrics;
 use crate::util::rng::Rng;
 
 use super::buffer::ReplayBuffer;
@@ -114,7 +115,8 @@ impl System {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let spec = manifest.tier(&cfg.tier)?;
         let engine = Arc::new(Engine::load(spec).context("compiling artifacts")?);
-        Ok(System { cfg, engine, trace: Arc::new(Trace::new(true)) })
+        let trace = Arc::new(Trace::with_cap(true, cfg.trace_cap));
+        Ok(System { cfg, engine, trace })
     }
 
     fn dataset(&self) -> Result<Dataset> {
@@ -176,6 +178,10 @@ impl System {
     pub fn run(&self) -> Result<RunReport> {
         let cfg = &self.cfg;
         let spec = &self.engine.spec;
+        // arm the telemetry plane before any instrumented path runs (the
+        // flag is process-global; `metrics=false` keeps every instrument
+        // write a relaxed load + branch)
+        metrics::set_enabled(cfg.metrics);
         let (eta, interruptible) = cfg.effective_schedule();
         crate::info!(
             "system",
@@ -330,6 +336,56 @@ impl System {
             }
         };
 
+        // --- telemetry exporters (ISSUE 6 tentpole) --------------------
+        // The poll closure samples point-in-time state (gate headroom /
+        // occupancy, per-replica inbox depth) just before every export, so
+        // scrapes and JSONL lines carry fresh values without any component
+        // pushing them on its own hot path.
+        let telemetry = if cfg.metrics {
+            let poll: metrics::PollFn = {
+                let gate = Arc::clone(&gate);
+                let server = Arc::clone(&server);
+                let router = Arc::clone(&router);
+                let n_slots = cfg.n_rollout_workers;
+                Arc::new(move || {
+                    let v = server.version();
+                    if let Some(h) = gate.headroom_batches(v) {
+                        metrics::set("areal_gate_headroom_batches", h);
+                    }
+                    metrics::set("areal_gate_occupancy", gate.occupancy(v));
+                    for w in 0..n_slots {
+                        metrics::set(
+                            &format!("areal_inbox_depth{{replica=\"{w}\"}}"),
+                            router.queued(w) as f64,
+                        );
+                    }
+                })
+            };
+            let http = match metrics::MetricsServer::serve(
+                &cfg.metrics_addr,
+                Some(Arc::clone(&poll)),
+            ) {
+                Ok(s) => {
+                    crate::info!("metrics", "GET /metrics at http://{}", s.local_addr());
+                    Some(s)
+                }
+                Err(e) => {
+                    // a busy port must not kill the run — the JSONL stream
+                    // still captures everything the scrape would have
+                    crate::warn_log!("metrics", "cannot bind {}: {e}", cfg.metrics_addr);
+                    None
+                }
+            };
+            let jsonl = metrics::JsonlExporter::start(
+                cfg.out_dir.join("metrics_live.jsonl"),
+                Duration::from_secs_f64(cfg.metrics_interval_s.max(0.02)),
+                Some(poll),
+            );
+            Some((http, jsonl))
+        } else {
+            None
+        };
+
         let t0 = Instant::now();
         let mut handles = Vec::new();
 
@@ -458,6 +514,15 @@ impl System {
 
         let join_res = drain_and_join(&router, &buffer, &stop, &draining, handles,
                                       controller_handle, rebalancer_handle);
+        // stop the exporters only after the drain: the final JSONL
+        // snapshot records the drained end state (the train-error early
+        // return below stops them through Drop instead)
+        if let Some((http, mut jsonl)) = telemetry {
+            jsonl.stop();
+            if let Some(mut s) = http {
+                s.stop();
+            }
+        }
         // the root cause outranks secondary join noise in the report
         if let Some(e) = train_err {
             return Err(e);

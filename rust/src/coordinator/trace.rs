@@ -2,6 +2,8 @@
 //! (time, actor, event) tuples; experiment drivers render them as ASCII
 //! timelines or CSV.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -15,7 +17,7 @@ pub enum Event {
     TrajDone { worker: usize, tokens: usize, version_born: Version },
     /// worker w interrupted generation to load version v (blue cross, Fig 3)
     Interrupt { worker: usize, version: Version, active_slots: usize },
-    /// worker w loaded weights v without interrupting (между waves)
+    /// worker w loaded weights v without interrupting (between waves)
     WeightSync { worker: usize, version: Version },
     TrainStart { version: Version, batch: usize },
     TrainEnd { version: Version, tokens: usize },
@@ -58,15 +60,35 @@ pub struct Stamped {
     pub event: Event,
 }
 
+/// Default ring capacity — matches the `trace_cap` config default: generous
+/// enough that a full training run keeps every event, but a runaway event
+/// source wraps instead of growing without bound.
+pub const DEFAULT_TRACE_CAP: usize = 262_144;
+
 pub struct Trace {
     start: Instant,
-    events: Mutex<Vec<Stamped>>,
+    /// bounded ring: at `cap`, the oldest event is dropped to admit the new
+    /// one — recent history is what the timeline renders care about
+    events: Mutex<VecDeque<Stamped>>,
+    cap: usize,
+    dropped: AtomicU64,
     enabled: bool,
 }
 
 impl Trace {
     pub fn new(enabled: bool) -> Self {
-        Trace { start: Instant::now(), events: Mutex::new(Vec::new()), enabled }
+        Trace::with_cap(enabled, DEFAULT_TRACE_CAP)
+    }
+
+    /// Ring-buffered trace holding at most `cap` events (config `trace_cap`).
+    pub fn with_cap(enabled: bool, cap: usize) -> Self {
+        Trace {
+            start: Instant::now(),
+            events: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+            dropped: AtomicU64::new(0),
+            enabled,
+        }
     }
 
     pub fn log(&self, event: Event) {
@@ -74,11 +96,22 @@ impl Trace {
             return;
         }
         let t = self.start.elapsed().as_secs_f64();
-        self.events.lock().unwrap().push(Stamped { t, event });
+        let mut ev = self.events.lock().unwrap();
+        if ev.len() >= self.cap {
+            ev.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            crate::util::metrics::inc("areal_trace_dropped_total", 1);
+        }
+        ev.push_back(Stamped { t, event });
+    }
+
+    /// Events dropped off the front of the ring since construction.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
     }
 
     pub fn snapshot(&self) -> Vec<Stamped> {
-        self.events.lock().unwrap().clone()
+        self.events.lock().unwrap().iter().cloned().collect()
     }
 
     pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
@@ -90,10 +123,16 @@ impl Trace {
             .count()
     }
 
-    /// CSV rows: t,kind,actor,a,b
+    /// CSV rows: t,kind,actor,a,b,c — `c` is free-text (empty for numeric
+    /// events); `rebalance` rows carry the full from/to/reason strings.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("t,kind,actor,a,b\n");
+        let mut out = String::from("t,kind,actor,a,b,c\n");
         for s in self.events.lock().unwrap().iter() {
+            if let Event::Rebalance { replica, from, to, reason } = &s.event {
+                out.push_str(&format!(
+                    "{:.6},rebalance,{replica},{from},{to},{reason}\n", s.t));
+                continue;
+            }
             let (kind, actor, a, b) = match &s.event {
                 Event::GenStart { worker, slots } => ("gen_start", *worker, *slots as i64, 0),
                 Event::TrajDone { worker, tokens, version_born } => {
@@ -136,14 +175,9 @@ impl Trace {
                 Event::SocketDisconnect { replica } => {
                     ("socket_disconnect", *replica, 0, 0)
                 }
-                Event::Rebalance { replica, to, reason, .. } => (
-                    if *to == "train" { "rebalance_to_train" } else { "rebalance_to_gen" },
-                    *replica,
-                    i64::from(*reason == "generation_bound"),
-                    0,
-                ),
+                Event::Rebalance { .. } => unreachable!("handled above"),
             };
-            out.push_str(&format!("{:.6},{kind},{actor},{a},{b}\n", s.t));
+            out.push_str(&format!("{:.6},{kind},{actor},{a},{b},\n", s.t));
         }
         out
     }
@@ -224,8 +258,27 @@ mod tests {
             reason: "generation_bound",
         });
         let csv = tr.to_csv();
-        assert!(csv.contains("rebalance_to_train,2,0,0"));
-        assert!(csv.contains("rebalance_to_gen,2,1,0"));
+        // the row carries the full from/to/reason — the old encoding dropped
+        // `from` and collapsed the reason to a 0/1 flag
+        assert!(csv.contains("rebalance,2,gen,train,headroom_collapsed"));
+        assert!(csv.contains("rebalance,2,train,gen,generation_bound"));
+    }
+
+    #[test]
+    fn ring_caps_and_counts_drops() {
+        let tr = Trace::with_cap(true, 4);
+        for w in 0..10 {
+            tr.log(Event::GenStart { worker: w, slots: 1 });
+        }
+        let snap = tr.snapshot();
+        assert_eq!(snap.len(), 4, "ring holds at most cap events");
+        assert_eq!(tr.dropped(), 6);
+        // the survivors are the MOST RECENT events (oldest dropped first)
+        for (i, s) in snap.iter().enumerate() {
+            assert_eq!(s.event, Event::GenStart { worker: 6 + i, slots: 1 });
+        }
+        // a fresh trace has dropped nothing
+        assert_eq!(Trace::new(true).dropped(), 0);
     }
 
     #[test]

@@ -210,6 +210,18 @@ impl Trainer {
             .collect();
         let clens: Vec<f64> = batch.iter().map(|t| t.completion_len() as f64).collect();
         let elapsed_total = self.start.elapsed().as_secs_f64();
+        if crate::util::metrics::enabled() {
+            crate::util::metrics::observe("areal_train_step_seconds",
+                                          t0.elapsed().as_secs_f64());
+            crate::util::metrics::inc("areal_train_tokens_total", total_tokens as u64);
+            crate::util::metrics::set("areal_train_tokens_per_s",
+                                      self.tokens_consumed_total as f64 / elapsed_total);
+            // staleness distribution of the batch actually consumed — the
+            // Eq. 3 bound shows up as this histogram's hard right edge
+            for &s in &stale {
+                crate::util::metrics::observe("areal_staleness_versions", s);
+            }
+        }
         Ok(StepMetrics {
             step: step_idx,
             version: version + 1,

@@ -76,6 +76,13 @@ pub fn fig3(overrides: &[String]) -> Result<()> {
             .collect::<Vec<_>>()
     );
     println!("wrote {:?}", out_dir().join("fig3_real_trace.csv"));
+    // the live run populated the telemetry registry (TTFT/e2e spans, gate
+    // and scheduler gauges) — print the end-of-run rollup alongside the
+    // trace so the figure's latency numbers are reproducible at a glance
+    print!(
+        "{}",
+        crate::util::metrics::render_summary(&crate::util::metrics::snapshot())
+    );
     Ok(())
 }
 

@@ -93,6 +93,16 @@ fn cmd_train(args: &[String]) -> Result<()> {
     }
     w.flush()?;
     std::fs::write(out_dir.join("trace.csv"), report.trace.to_csv())?;
+    if sys.cfg.metrics {
+        // final registry scrape in Prometheus text format, archived next
+        // to the live JSONL stream the exporter appended during the run
+        let snap = areal::util::metrics::snapshot();
+        std::fs::write(
+            out_dir.join("metrics.prom"),
+            areal::util::metrics::to_prometheus(&snap),
+        )?;
+        print!("{}", areal::util::metrics::render_summary(&snap));
+    }
     println!(
         "\ndone: {} steps in {:.1}s — eff {:.0} tok/s, gen {} tok, train {} tok",
         report.steps.len(), report.wall_s, report.effective_tps,
@@ -102,6 +112,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         println!("  {}: pass@1 {:.3} ({} prompts)", r.suite, r.pass_at_1, r.n_prompts);
     }
     println!("metrics: {:?}", out_dir.join("metrics.csv"));
+    if sys.cfg.metrics {
+        println!(
+            "telemetry: {:?} + {:?}",
+            out_dir.join("metrics_live.jsonl"),
+            out_dir.join("metrics.prom")
+        );
+    }
     Ok(())
 }
 
@@ -142,6 +159,9 @@ fn cmd_sim(args: &[String]) -> Result<()> {
     if let Some(p) = kv(args, "prefix_cache") {
         cfg.prefix_cache = areal::config::parse_bool(&p)?;
     }
+    // the sim emits the same metric names as live runs, stamped from its
+    // modeled clock — enable the registry so the summary below has data
+    areal::util::metrics::set_enabled(true);
     let r = sim::run_policy(&mode, &cfg);
     println!(
         "policy={} model={} gpus={} ctx={}\n  total {:.1}s for {} steps — \
@@ -154,5 +174,9 @@ fn cmd_sim(args: &[String]) -> Result<()> {
         100.0 * r.cache_hit_rate, r.recompute_tokens / 1e6
     );
     print!("{}", sim::timeline::render(&r.timeline, 72));
+    print!(
+        "{}",
+        areal::util::metrics::render_summary(&areal::util::metrics::snapshot())
+    );
     Ok(())
 }

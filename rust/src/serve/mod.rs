@@ -47,5 +47,6 @@ pub use router::{Pulled, RoutePolicy, Router, RouterCfg, RouterStats};
 pub use scheduler::{Admitted, Grow, Scheduler, SeqId, ServeCfg, ServeStats};
 pub use socket::{PulledWire, SocketTransport, SocketWorker};
 pub use transport::{
-    Control, LocalTransport, ProbeSnapshot, ReplicaProbe, ReplicaTransport, Request, Wire,
+    Control, LocalTransport, ProbeSnapshot, ReplicaProbe, ReplicaTransport, ReqSpan,
+    Request, Wire,
 };

@@ -69,6 +69,9 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+use crate::util::metrics;
 
 use super::transport::{fnv_tokens, LocalTransport, ReplicaTransport};
 
@@ -513,17 +516,25 @@ impl<T: Send + 'static> Router<T> {
 
     /// Route one request; returns the chosen replica.
     pub fn submit(&self, req: Request<T>) -> usize {
+        let t0 = if metrics::enabled() { Some(Instant::now()) } else { None };
         let mut slot = Some(req);
         loop {
             // fresh snapshot per attempt: a retry after racing a removal
             // must see replicas added since, not spin over a stale fleet
             let reps = self.snapshot();
-            let req = slot.take().expect("request in flight");
+            let mut req = slot.take().expect("request in flight");
+            req.span.stamp_route();
             let tokens = req.tokens.len() as u64;
             let r = self.pick_replica(&reps, &req.tokens);
             reps[r].charge(tokens);
             match reps[r].submit(req) {
-                Ok(()) => return r,
+                Ok(()) => {
+                    if let Some(t0) = t0 {
+                        metrics::observe("areal_route_place_seconds",
+                                         t0.elapsed().as_secs_f64());
+                    }
+                    return r;
+                }
                 // picked a replica that died mid-flight: undo and re-route
                 Err(back) => {
                     reps[r].release(tokens);
@@ -563,6 +574,7 @@ impl<T: Send + 'static> Router<T> {
         if budget == 0 {
             return Pulled { reqs: out, stolen: None };
         }
+        let t0 = if metrics::enabled() { Some(Instant::now()) } else { None };
         let victim = (0..reps.len())
             .filter(|&i| i != replica && reps[i].is_open())
             .max_by_key(|&i| reps[i].queued());
@@ -598,6 +610,9 @@ impl<T: Send + 'static> Router<T> {
             for r in &stolen {
                 sticky.insert(self.fingerprint(&r.tokens), replica);
             }
+        }
+        if let Some(t0) = t0 {
+            metrics::observe("areal_route_steal_seconds", t0.elapsed().as_secs_f64());
         }
         Pulled { reqs: stolen, stolen: Some((victim, n)) }
     }
@@ -674,7 +689,7 @@ mod tests {
     }
 
     fn req(group: u64, tokens: Vec<i32>) -> Request<()> {
-        Request { group, tokens, payload: () }
+        Request::new(group, tokens, ())
     }
 
     /// G sibling requests of one GRPO group (identical prompt tokens).
@@ -1096,7 +1111,7 @@ mod tests {
                 (0..FAMILY_LEN).map(|i| (family as i32 * 13 + i as i32) % 43 + 3).collect();
             tokens.extend((0..TAIL_LEN).map(|i| (gid as i32 * 29 + i as i32) % 89 + 3));
             for _ in 0..g {
-                router.submit(Request { group: gid, tokens: tokens.clone(), payload: () });
+                router.submit(Request::new(gid, tokens.clone(), ()));
             }
             for w in 0..replicas {
                 // replica 0 is faster: it drains its inbox, then steals

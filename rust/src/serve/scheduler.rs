@@ -25,6 +25,7 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::runtime::Version;
+use crate::util::metrics;
 
 use super::blocks::{BlockId, BlockManager};
 use super::radix::{PrefixMatch, RadixCache};
@@ -315,6 +316,8 @@ impl Scheduler {
         self.prefill_tokens_cached += m.tokens as u64;
         self.prefill_tokens_computed += (tokens.len() - m.tokens) as u64;
         self.admit_clock += 1;
+        metrics::inc("areal_sched_admitted_total", 1);
+        self.publish_occupancy();
         self.running.insert(
             id,
             SeqState {
@@ -418,6 +421,7 @@ impl Scheduler {
         self.release_seq(id, tokens, cache_upto);
         self.waiting.push_front((id, tokens.to_vec()));
         self.preemptions += 1;
+        metrics::inc("areal_sched_preemptions_total", 1);
     }
 
     fn release_seq(&mut self, id: SeqId, tokens: &[i32], cache_upto: usize) {
@@ -441,6 +445,21 @@ impl Scheduler {
         for b in all {
             self.bm.release(b);
         }
+        self.publish_occupancy();
+    }
+
+    /// Sample KV-pool and radix-cache occupancy into the metrics registry.
+    /// Gauges are last-writer-wins, so with several replicas the exported
+    /// value is a sample of whichever scheduler moved last — the right
+    /// granularity for an occupancy trend line, and free when metrics are
+    /// off.
+    fn publish_occupancy(&self) {
+        if !metrics::enabled() {
+            return;
+        }
+        metrics::set("areal_kv_blocks_in_use", self.bm.blocks_in_use() as f64);
+        metrics::set("areal_kv_blocks_free", self.bm.free_blocks() as f64);
+        metrics::set("areal_radix_cached_tokens", self.cache.cached_tokens() as f64);
     }
 
     /// The paper's `update_weights`: KV computed under older weights is

@@ -40,10 +40,12 @@ use std::time::Duration;
 use anyhow::{bail, Context as AnyhowContext, Result};
 
 use crate::util::json::Json;
+use crate::util::metrics;
 
 use super::router::Pulled;
 use super::transport::{
-    Control, ProbeSnapshot, QueueCore, ReplicaProbe, ReplicaTransport, Request, Wire,
+    Control, ProbeSnapshot, QueueCore, ReplicaProbe, ReplicaTransport, ReqSpan, Request,
+    Wire,
 };
 
 /// Fleet-side pull hook: the system wires this to `Router::pull_at` so a
@@ -355,7 +357,12 @@ fn accept_loop<T: Wire>(weak: Weak<SocketTransport<T>>, listener: TcpListener) {
 fn serve_conn<T: Wire>(weak: &Weak<SocketTransport<T>>, mut stream: TcpStream) {
     let (max_frame, conn_epoch) = {
         let Some(t) = weak.upgrade() else { return };
-        t.connects.fetch_add(1, Ordering::Relaxed);
+        // every accepted connection past the first is a reconnect: a healthy
+        // endpoint serves one worker for its whole life, so this series is
+        // flat at 0 unless workers are churning
+        if t.connects.fetch_add(1, Ordering::Relaxed) > 0 {
+            metrics::inc("areal_socket_reconnects_total", 1);
+        }
         (t.max_frame, t.core.epoch())
     };
     stream.set_nonblocking(false).ok();
@@ -512,6 +519,7 @@ fn request_to_json<T: Wire>(r: &Request<T>) -> Json {
         ("g", Json::num(r.group as f64)),
         ("k", Json::Arr(r.tokens.iter().map(|&t| Json::num(t as f64)).collect())),
         ("p", r.payload.to_json()),
+        ("s", r.span.to_json()),
     ])
 }
 
@@ -524,7 +532,10 @@ fn request_from_json<T: Wire>(j: &Json) -> Option<Request<T>> {
         .map(|t| t.as_f64().map(|f| f as i32))
         .collect::<Option<Vec<i32>>>()?;
     let payload = T::from_json(j.get("p")?)?;
-    Some(Request { group, tokens, payload })
+    // span is optional on the wire: frames from older peers decode to an
+    // unstamped span rather than failing the whole request
+    let span = j.get("s").map(ReqSpan::from_json).unwrap_or_default();
+    Some(Request { group, tokens, payload, span })
 }
 
 fn control_to_json(c: &Control) -> Json {
@@ -598,6 +609,7 @@ impl<T: Wire> SocketWorker<T> {
     /// RPC over a pre-serialized frame body (lets hot callers serialize
     /// exactly once).
     fn rpc_body(&mut self, body: &str) -> Result<Json> {
+        let t0 = if metrics::enabled() { Some(std::time::Instant::now()) } else { None };
         write_frame_bytes(&mut self.stream, body.as_bytes(), self.max_frame)
             .context("transport send")?;
         let mut ticks = 0u32;
@@ -611,7 +623,13 @@ impl<T: Wire> SocketWorker<T> {
                     .context("transport receive")?
             };
             match got {
-                Some(j) => return Ok(j),
+                Some(j) => {
+                    if let Some(t0) = t0 {
+                        metrics::observe("areal_frame_rtt_seconds",
+                                         t0.elapsed().as_secs_f64());
+                    }
+                    return Ok(j);
+                }
                 None => {
                     ticks += 1;
                     if ticks >= CLIENT_TICKS {
@@ -704,7 +722,7 @@ mod tests {
     use std::time::Instant;
 
     fn req(group: u64, tokens: Vec<i32>) -> Request<()> {
-        Request { group, tokens, payload: () }
+        Request::new(group, tokens, ())
     }
 
     fn wait_until(mut f: impl FnMut() -> bool) {

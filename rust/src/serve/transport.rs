@@ -47,12 +47,115 @@ use std::time::Instant;
 use crate::util::json::Json;
 
 /// One typed `generate` request: token ids (BOS + prompt), the GRPO group
-/// it belongs to, and an opaque payload for the caller.
+/// it belongs to, an opaque payload for the caller, and the lifecycle
+/// span stamped as the request moves through the plane.
 #[derive(Debug)]
 pub struct Request<T> {
     pub group: u64,
     pub tokens: Vec<i32>,
     pub payload: T,
+    pub span: ReqSpan,
+}
+
+impl<T> Request<T> {
+    /// Construct with the `submit` stamp taken now — the canonical way to
+    /// birth a request so TTFT/e2e latency is measured from creation.
+    pub fn new(group: u64, tokens: Vec<i32>, payload: T) -> Request<T> {
+        Request { group, tokens, payload, span: ReqSpan::submitted() }
+    }
+}
+
+/// Per-request lifecycle timestamps (ISSUE 6):
+/// submit → route → admit → prefill-start → first-token, each stamped at
+/// most once (`stamp_*` keeps the earliest), so TTFT
+/// (`first_token − submit`) and e2e latency (`complete − submit`)
+/// histograms come out per routing policy. `Copy` and all-`Option` so it
+/// rides every `Request` for free and survives steals, salvage, and
+/// requeues — a re-routed request keeps its original submit time, which
+/// is exactly what the latency a caller observes includes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReqSpan {
+    pub submit: Option<Instant>,
+    pub route: Option<Instant>,
+    pub admit: Option<Instant>,
+    pub prefill_start: Option<Instant>,
+    pub first_token: Option<Instant>,
+}
+
+impl ReqSpan {
+    pub fn submitted() -> ReqSpan {
+        ReqSpan { submit: Some(Instant::now()), ..ReqSpan::default() }
+    }
+
+    pub fn stamp_route(&mut self) {
+        if self.route.is_none() {
+            self.route = Some(Instant::now());
+        }
+    }
+
+    pub fn stamp_admit(&mut self) {
+        if self.admit.is_none() {
+            self.admit = Some(Instant::now());
+        }
+    }
+
+    pub fn stamp_prefill_start(&mut self) {
+        if self.prefill_start.is_none() {
+            self.prefill_start = Some(Instant::now());
+        }
+    }
+
+    pub fn stamp_first_token(&mut self) {
+        if self.first_token.is_none() {
+            self.first_token = Some(Instant::now());
+        }
+    }
+
+    /// Time-to-first-token in seconds, if both ends are stamped.
+    pub fn ttft_s(&self) -> Option<f64> {
+        let (s, f) = (self.submit?, self.first_token?);
+        Some(f.saturating_duration_since(s).as_secs_f64())
+    }
+
+    /// End-to-end latency from submit to now, in seconds.
+    pub fn e2e_s(&self) -> Option<f64> {
+        Some(self.submit?.elapsed().as_secs_f64())
+    }
+
+    /// Wire form: each stamp as its age in microseconds at encode time
+    /// (`Instant` itself has no portable wire form). Decoding re-anchors
+    /// against the receiver's clock, preserving relative timing across
+    /// the socket hop within one machine — exact for the loopback
+    /// deployments this transport targets.
+    pub fn to_json(&self) -> Json {
+        let now = Instant::now();
+        let age = |t: &Option<Instant>| match t {
+            Some(t) => Json::num(now.saturating_duration_since(*t).as_micros() as f64),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("submit", age(&self.submit)),
+            ("route", age(&self.route)),
+            ("admit", age(&self.admit)),
+            ("prefill", age(&self.prefill_start)),
+            ("first_tok", age(&self.first_token)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ReqSpan {
+        let now = Instant::now();
+        let stamp = |key: &str| -> Option<Instant> {
+            let us = j.get_f64(key)?;
+            now.checked_sub(std::time::Duration::from_micros(us.max(0.0) as u64))
+        };
+        ReqSpan {
+            submit: stamp("submit"),
+            route: stamp("route"),
+            admit: stamp("admit"),
+            prefill_start: stamp("prefill"),
+            first_token: stamp("first_tok"),
+        }
+    }
 }
 
 /// Control traffic fanned out through the frontend.
@@ -607,7 +710,41 @@ mod tests {
     use super::*;
 
     fn req(group: u64, tokens: Vec<i32>) -> Request<()> {
-        Request { group, tokens, payload: () }
+        Request::new(group, tokens, ())
+    }
+
+    #[test]
+    fn span_stamps_once_and_measures() {
+        let mut s = ReqSpan::submitted();
+        assert!(s.submit.is_some());
+        assert!(s.first_token.is_none());
+        s.stamp_first_token();
+        let first = s.first_token;
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        s.stamp_first_token();
+        assert_eq!(s.first_token, first, "stamps keep the earliest time");
+        let ttft = s.ttft_s().expect("both ends stamped");
+        assert!(ttft >= 0.0);
+        assert!(s.e2e_s().expect("submitted") >= ttft);
+    }
+
+    #[test]
+    fn span_wire_roundtrip_preserves_relative_ages() {
+        let mut s = ReqSpan::submitted();
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        s.stamp_route();
+        let j = s.to_json();
+        let back = ReqSpan::from_json(&j);
+        assert!(back.submit.is_some());
+        assert!(back.route.is_some());
+        assert!(back.admit.is_none(), "unstamped fields stay unstamped");
+        // relative order survives the hop: submit happened before route
+        let (sub, route) = (back.submit.unwrap(), back.route.unwrap());
+        assert!(sub <= route, "submit age >= route age after decode");
+        // a frame with no span field decodes to an empty span (backward
+        // compatible with pre-span peers)
+        let empty = ReqSpan::from_json(&Json::Null);
+        assert!(empty.submit.is_none());
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::collections::VecDeque;
 
 use crate::coordinator::rebalance::{Decision, Observation, RebalanceCfg, RebalanceCtl};
 use crate::serve::RoutePolicy;
+use crate::util::metrics;
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -859,6 +860,9 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                 let s = version.saturating_sub(born);
                 staleness_samples.push(s as f64);
                 max_stale = max_stale.max(s);
+                // same series the live trainer records, from the modeled
+                // clock — `areal sim` summaries line up with live runs
+                metrics::observe("areal_staleness_versions", s as f64);
             }
             // live counts: the training pool and the broadcast fan-out
             // both follow the rebalancer's conversions
@@ -868,6 +872,8 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                 + weight_broadcast_s(hw, m, gen_now.max(1));
             trainer_busy_until = Some(now + dur);
             tokens_trained += toks;
+            metrics::observe("areal_train_step_seconds", dur);
+            metrics::inc("areal_train_tokens_total", toks as u64);
             if steps_done < TIMELINE_STEPS {
                 timeline.push(Interval {
                     device: "trainer".into(),
@@ -1119,6 +1125,12 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
 
     let busy: f64 = devices.iter().map(|d| d.busy_s).sum();
     let prompt_total = prefill_tokens + cached_prefill_tokens;
+    if metrics::enabled() {
+        metrics::inc("areal_gen_tokens_total", gen_tokens as u64);
+        metrics::inc("areal_rebalance_to_train_total", gen_to_train);
+        metrics::inc("areal_rebalance_to_gen_total", train_to_gen);
+        metrics::set("areal_train_tokens_per_s", tokens_trained / now);
+    }
     SimReport {
         policy: "async",
         total_s: now,

@@ -9,10 +9,8 @@ use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -37,8 +35,8 @@ impl fmt::Display for Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
-static START: Lazy<Instant> = Lazy::new(Instant::now);
-static SINK: Lazy<Mutex<()>> = Lazy::new(|| Mutex::new(()));
+static START: OnceLock<Instant> = OnceLock::new();
+static SINK: Mutex<()> = Mutex::new(());
 
 pub fn init_from_env() {
     if let Ok(v) = std::env::var("AREAL_LOG") {
@@ -66,7 +64,7 @@ pub fn log(l: Level, target: &str, msg: fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
     }
-    let t = START.elapsed().as_secs_f64();
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let _g = SINK.lock().unwrap();
     eprintln!("[{t:9.3}s {l} {target}] {msg}");
 }

@@ -1,0 +1,910 @@
+//! Process-global, lock-light metrics registry (ISSUE 6 tentpole): the
+//! telemetry plane every subsystem reports into.
+//!
+//! Three instrument kinds, all writable concurrently without stopping
+//! writers or taking the registry lock on the hot path:
+//!
+//! - [`Counter`]: a monotone `AtomicU64`;
+//! - [`Gauge`]: an `f64` stored as atomic bits (last-write-wins);
+//! - [`Histogram`]: fixed log-scale buckets (4 sub-buckets per octave
+//!   covering ~2⁻²⁰..2⁴⁴, i.e. microseconds to days when the unit is
+//!   seconds) of `AtomicU64` counts, with p50/p90/p99 extraction by
+//!   cumulative-rank walk + intra-bucket linear interpolation, mirroring
+//!   `util/stats.rs::percentile`'s `rank = (p/100)·(n−1)` convention.
+//!
+//! Metrics are named; a label set is carried *in* the name
+//! (`areal_ttft_seconds{policy="probe"}`) so the registry stays a flat
+//! string-keyed map. Registration takes a `Mutex` once per name; hot
+//! writers hold a cached `Arc` handle and pay one relaxed atomic op per
+//! write. The whole plane is gated by a process-global enable flag,
+//! default **off**: with metrics off every write is a relaxed load + a
+//! branch, so benches and library users who never call [`set_enabled`]
+//! pay noise-level overhead. Call sites that would otherwise pay for
+//! timestamps should guard them with [`enabled`].
+//!
+//! Exporters:
+//! - [`to_prometheus`]: Prometheus text exposition (counters, gauges, and
+//!   histograms as summaries with `quantile` labels);
+//! - [`to_jsonl`]: one JSON object per snapshot, for the
+//!   `out_dir/metrics_live.jsonl` stream;
+//! - [`MetricsServer`]: a loopback `GET /metrics` listener;
+//! - [`JsonlExporter`]: the periodic snapshot thread.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------
+// instruments
+
+/// Monotone counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins f64 gauge (bits in an `AtomicU64`).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.0.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-scale histogram geometry: SUB sub-buckets per octave over
+/// [2^MIN_EXP, 2^(MIN_EXP + NB/SUB)). Bucket width is 2^(1/SUB) ≈ 1.19×,
+/// which bounds the relative error of percentile extraction.
+const SUB: usize = 4;
+const NB: usize = 256;
+const MIN_EXP: f64 = -20.0;
+
+fn bucket_of(v: f64) -> usize {
+    if v <= 0.0 || !v.is_finite() {
+        return 0;
+    }
+    let i = ((v.log2() - MIN_EXP) * SUB as f64).floor() as i64;
+    i.clamp(0, NB as i64 - 1) as usize
+}
+
+fn bucket_lo(i: usize) -> f64 {
+    (MIN_EXP + i as f64 / SUB as f64).exp2()
+}
+
+/// Fixed-bucket log-scale histogram, writable by any number of threads
+/// concurrently and snapshot-able without stopping them.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// f64 bits, CAS-accumulated
+    sum: AtomicU64,
+    /// f64 bits, CAS-min / CAS-max
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..NB).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0.0f64.to_bits()),
+            min: AtomicU64::new(f64::INFINITY.to_bits()),
+            max: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !enabled() || !v.is_finite() {
+            return;
+        }
+        self.record(v);
+    }
+
+    /// Unconditional record (tests and oracles; normal call sites use
+    /// [`Histogram::observe`], which respects the global enable flag).
+    pub fn record(&self, v: f64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        cas_f64(&self.sum, |s| s + v);
+        cas_f64(&self.min, |m| m.min(v));
+        cas_f64(&self.max, |m| m.max(v));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        // bucket reads race with writers; each read is atomic, so the
+        // snapshot is a slightly-torn but well-formed view (percentiles
+        // use the bucket sum, so they are self-consistent)
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: f64::from_bits(self.sum.load(Ordering::Relaxed)),
+            min: f64::from_bits(self.min.load(Ordering::Relaxed)),
+            max: f64::from_bits(self.max.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+fn cas_f64(a: &AtomicU64, f: impl Fn(f64) -> f64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        let next = f(f64::from_bits(cur)).to_bits();
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Point-in-time view of one histogram.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            f64::NAN
+        } else {
+            self.sum / n as f64
+        }
+    }
+
+    /// Percentile by cumulative-rank walk with intra-bucket linear
+    /// interpolation — `stats::percentile`'s `rank = (p/100)·(n−1)`
+    /// convention, accurate to one bucket width (≈19% relative). The
+    /// extremes are exact: p=0 returns the tracked min, p=100 the max.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if p <= 0.0 {
+            return self.min;
+        }
+        if p >= 100.0 {
+            return self.max;
+        }
+        let rank = (p / 100.0) * (n - 1) as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if rank < (cum + c) as f64 {
+                let frac = (rank - cum as f64) / c as f64;
+                let lo = bucket_lo(i).max(self.min);
+                let hi = bucket_lo(i + 1).min(self.max);
+                let (lo, hi) = if lo <= hi { (lo, hi) } else { (hi, lo) };
+                return lo + frac * (hi - lo);
+            }
+            cum += c;
+        }
+        self.max
+    }
+}
+
+// ---------------------------------------------------------------------
+// registry
+
+// const-constructible statics — no lazy-init machinery needed
+// (`Mutex::new` and `BTreeMap::new` are both const fns)
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static COUNTERS: Mutex<BTreeMap<String, Arc<Counter>>> = Mutex::new(BTreeMap::new());
+static GAUGES: Mutex<BTreeMap<String, Arc<Gauge>>> = Mutex::new(BTreeMap::new());
+static HISTS: Mutex<BTreeMap<String, Arc<Histogram>>> = Mutex::new(BTreeMap::new());
+
+/// Is the telemetry plane recording? Call sites that would pay for a
+/// timestamp or a label `format!` should check this first.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the whole plane on or off (process-global; default off).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Register-or-get a counter handle (one registry lock per call — cache
+/// the handle on hot paths).
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut m = COUNTERS.lock().unwrap();
+    Arc::clone(m.entry(name.to_string()).or_default())
+}
+
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut m = GAUGES.lock().unwrap();
+    Arc::clone(m.entry(name.to_string()).or_default())
+}
+
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut m = HISTS.lock().unwrap();
+    Arc::clone(m.entry(name.to_string()).or_default())
+}
+
+/// Convenience one-shot writes for cold call sites (per-trajectory,
+/// per-step). They early-return with metrics off, before any lock.
+pub fn inc(name: &str, n: u64) {
+    if enabled() {
+        counter(name).add(n);
+    }
+}
+
+pub fn set(name: &str, v: f64) {
+    if enabled() {
+        gauge(name).set(v);
+    }
+}
+
+pub fn observe(name: &str, v: f64) {
+    if enabled() {
+        histogram(name).observe(v);
+    }
+}
+
+/// Point-in-time view of the whole registry, taken without stopping
+/// writers (each map lock is held only to clone the `Arc` list).
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+impl Snapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(k, _)| k == name).map(|(_, h)| h)
+    }
+}
+
+pub fn snapshot() -> Snapshot {
+    let counters: Vec<(String, Arc<Counter>)> = {
+        let m = COUNTERS.lock().unwrap();
+        m.iter().map(|(k, v)| (k.clone(), Arc::clone(v))).collect()
+    };
+    let gauges: Vec<(String, Arc<Gauge>)> = {
+        let m = GAUGES.lock().unwrap();
+        m.iter().map(|(k, v)| (k.clone(), Arc::clone(v))).collect()
+    };
+    let hists: Vec<(String, Arc<Histogram>)> = {
+        let m = HISTS.lock().unwrap();
+        m.iter().map(|(k, v)| (k.clone(), Arc::clone(v))).collect()
+    };
+    Snapshot {
+        counters: counters.into_iter().map(|(k, c)| (k, c.get())).collect(),
+        gauges: gauges.into_iter().map(|(k, g)| (k, g.get())).collect(),
+        hists: hists.into_iter().map(|(k, h)| (k, h.snapshot())).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// exposition
+
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.split_once('{') {
+        Some((base, rest)) => (base, Some(rest.trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+fn series(name: &str, extra: Option<&str>) -> String {
+    let (base, labels) = split_labels(name);
+    match (labels, extra) {
+        (None, None) => base.to_string(),
+        (Some(l), None) => format!("{base}{{{l}}}"),
+        (None, Some(e)) => format!("{base}{{{e}}}"),
+        (Some(l), Some(e)) => format!("{base}{{{l},{e}}}"),
+    }
+}
+
+fn label_suffix(name: &str) -> String {
+    match split_labels(name) {
+        (_, Some(l)) => format!("{{{l}}}"),
+        (_, None) => String::new(),
+    }
+}
+
+/// Prometheus text exposition format, version 0.0.4. Histograms render as
+/// summaries (quantile series + `_sum` + `_count`). Series sharing a base
+/// name (label variants) get one `# TYPE` line thanks to sorted iteration.
+pub fn to_prometheus(s: &Snapshot) -> String {
+    fn typed(
+        out: &mut String,
+        last: &mut Option<(String, &'static str)>,
+        base: &str,
+        kind: &'static str,
+    ) {
+        let same = match last {
+            Some((b, k)) => b == base && *k == kind,
+            None => false,
+        };
+        if !same {
+            out.push_str(&format!("# TYPE {base} {kind}\n"));
+            *last = Some((base.to_string(), kind));
+        }
+    }
+    let mut out = String::new();
+    let mut last_type: Option<(String, &'static str)> = None;
+    for (name, v) in &s.counters {
+        let (base, _) = split_labels(name);
+        typed(&mut out, &mut last_type, base, "counter");
+        out.push_str(&format!("{} {v}\n", series(name, None)));
+    }
+    for (name, v) in &s.gauges {
+        let (base, _) = split_labels(name);
+        typed(&mut out, &mut last_type, base, "gauge");
+        out.push_str(&format!("{} {}\n", series(name, None), sanitize(*v)));
+    }
+    for (name, h) in &s.hists {
+        let (base, _) = split_labels(name);
+        typed(&mut out, &mut last_type, base, "summary");
+        for (q, p) in [("0.5", 50.0), ("0.9", 90.0), ("0.99", 99.0)] {
+            out.push_str(&format!(
+                "{} {}\n",
+                series(name, Some(&format!("quantile=\"{q}\""))),
+                sanitize(h.percentile(p))
+            ));
+        }
+        out.push_str(&format!(
+            "{}_sum{} {}\n",
+            base,
+            label_suffix(name),
+            sanitize(h.sum)
+        ));
+        out.push_str(&format!(
+            "{}_count{} {}\n",
+            base,
+            label_suffix(name),
+            h.count()
+        ));
+    }
+    out
+}
+
+/// One JSONL line: `{"t":…, "counters":{…}, "gauges":{…}, "hists":{name:
+/// {"count","mean","p50","p90","p99","max"}}}`.
+pub fn to_jsonl(s: &Snapshot, t_s: f64) -> String {
+    let counters = Json::obj(
+        s.counters
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::num(*v as f64)))
+            .collect::<Vec<_>>(),
+    );
+    let gauges = Json::obj(
+        s.gauges
+            .iter()
+            .map(|(k, v)| (k.as_str(), Json::num(sanitize(*v))))
+            .collect::<Vec<_>>(),
+    );
+    let hists = Json::obj(
+        s.hists
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.as_str(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean", Json::num(sanitize(h.mean()))),
+                        ("p50", Json::num(sanitize(h.percentile(50.0)))),
+                        ("p90", Json::num(sanitize(h.percentile(90.0)))),
+                        ("p99", Json::num(sanitize(h.percentile(99.0)))),
+                        ("max", Json::num(sanitize(h.max))),
+                    ]),
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    Json::obj(vec![
+        ("t", Json::num(t_s)),
+        ("counters", counters),
+        ("gauges", gauges),
+        ("hists", hists),
+    ])
+    .to_string()
+}
+
+fn sanitize(v: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        0.0
+    }
+}
+
+/// Human end-of-run summary: every counter and gauge, plus
+/// count/mean/p50/p99/max per histogram.
+pub fn render_summary(s: &Snapshot) -> String {
+    let mut out = String::new();
+    if s.counters.is_empty() && s.gauges.is_empty() && s.hists.is_empty() {
+        return out;
+    }
+    out.push_str("-- telemetry summary ------------------------------------\n");
+    for (k, v) in &s.counters {
+        out.push_str(&format!("  {k:<44} {v}\n"));
+    }
+    for (k, v) in &s.gauges {
+        out.push_str(&format!("  {k:<44} {:.4}\n", sanitize(*v)));
+    }
+    for (k, h) in &s.hists {
+        if h.count() == 0 {
+            continue;
+        }
+        out.push_str(&format!(
+            "  {k:<44} n={} mean={:.4} p50={:.4} p99={:.4} max={:.4}\n",
+            h.count(),
+            h.mean(),
+            h.percentile(50.0),
+            h.percentile(99.0),
+            h.max
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// exporters
+
+/// A callback run just before every snapshot is taken, so point-in-time
+/// gauges (gate headroom, inbox depth) are fresh in each export.
+pub type PollFn = Arc<dyn Fn() + Send + Sync>;
+
+/// Loopback `GET /metrics` endpoint (Prometheus text format).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+const HTTP_TICK: Duration = Duration::from_millis(25);
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve until
+    /// [`MetricsServer::stop`].
+    pub fn serve(addr: &str, poll: Option<PollFn>) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name(format!("metrics-http-{}", addr.port()))
+            .spawn(move || {
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _)) => serve_scrape(stream, poll.as_ref()),
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(HTTP_TICK);
+                        }
+                        Err(_) => return,
+                    }
+                }
+            })
+            .expect("spawn metrics server");
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_scrape(mut stream: TcpStream, poll: Option<&PollFn>) {
+    // the accepted socket may inherit the listener's nonblocking mode
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    // read the request head (the request line is all we route on)
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let path = head.split_whitespace().nth(1).unwrap_or("");
+    let (status, body) = if path == "/metrics" || path.starts_with("/metrics?") {
+        if let Some(p) = poll {
+            p();
+        }
+        ("200 OK", to_prometheus(&snapshot()))
+    } else {
+        ("404 Not Found", String::from("not found\n"))
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let _ = stream.write_all(resp.as_bytes());
+    let _ = stream.flush();
+}
+
+/// Scrape `GET /metrics` from `addr`, returning the body (test oracle and
+/// the end-of-run scrape the CI job archives).
+pub fn scrape(addr: &str) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    stream.write_all(
+        format!("GET /metrics HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n")
+            .as_bytes(),
+    )?;
+    let mut out = String::new();
+    stream.read_to_string(&mut out)?;
+    match out.split_once("\r\n\r\n") {
+        Some((_, body)) => Ok(body.to_string()),
+        None => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "no http body in scrape reply",
+        )),
+    }
+}
+
+/// Periodic snapshot thread appending JSONL to a file. A final snapshot is
+/// always written at [`JsonlExporter::stop`], so even a run shorter than
+/// one interval produces a line.
+pub struct JsonlExporter {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl JsonlExporter {
+    pub fn start(path: PathBuf, interval: Duration, poll: Option<PollFn>) -> JsonlExporter {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("metrics-jsonl".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                if let Some(dir) = path.parent() {
+                    let _ = std::fs::create_dir_all(dir);
+                }
+                let mut file = std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(&path)
+                    .ok();
+                let tick = Duration::from_millis(20).min(interval);
+                let mut next = t0 + interval;
+                loop {
+                    let stopping = stop2.load(Ordering::Acquire);
+                    if stopping || Instant::now() >= next {
+                        if let Some(p) = &poll {
+                            p();
+                        }
+                        if let Some(f) = file.as_mut() {
+                            let line = to_jsonl(&snapshot(), t0.elapsed().as_secs_f64());
+                            let _ = writeln!(f, "{line}");
+                            let _ = f.flush();
+                        }
+                        if stopping {
+                            return;
+                        }
+                        next = Instant::now() + interval;
+                    }
+                    std::thread::sleep(tick);
+                }
+            })
+            .expect("spawn jsonl exporter");
+        JsonlExporter { stop, handle: Some(handle) }
+    }
+
+    /// Write one final snapshot and join the thread.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for JsonlExporter {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats;
+
+    // NOTE: the enable flag is process-global and unit tests run in
+    // parallel threads, so tests here only ever turn it ON (idempotent) —
+    // the disabled path is covered race-free in `rust/tests/metrics_live.rs`
+    // before that binary enables the plane.
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        set_enabled(true);
+        let c = counter("test_ctr_roundtrip");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert_eq!(counter("test_ctr_roundtrip").get(), 5, "same handle by name");
+        let g = gauge("test_gauge_roundtrip");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_percentiles_match_oracle_single_threaded() {
+        let h = Histogram::new();
+        let mut rng = Rng::new(42);
+        let mut xs = Vec::new();
+        for _ in 0..5000 {
+            // log-uniform over ~4 decades, the latency shape we care about
+            let v = (rng.next_f64() * 12.0 - 6.0).exp2();
+            xs.push(v);
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), 5000);
+        for p in [50.0, 90.0, 99.0] {
+            let want = stats::percentile(&xs, p);
+            let got = snap.percentile(p);
+            let rel = (got - want).abs() / want;
+            // one bucket is 2^(1/4) ≈ 1.19x wide; allow one full bucket
+            assert!(rel < 0.20, "p{p}: got {got} want {want} (rel err {rel:.3})");
+        }
+        assert!((snap.mean() - stats::mean(&xs)).abs() / stats::mean(&xs) < 1e-9);
+        assert_eq!(snap.percentile(0.0), snap.min);
+        assert_eq!(snap.percentile(100.0), snap.max);
+    }
+
+    #[test]
+    fn histogram_concurrent_writers_match_oracle() {
+        // ISSUE 6 satellite: N threads push, snapshot percentiles match a
+        // single-threaded oracle within bucket resolution
+        let h = Arc::new(Histogram::new());
+        let n_threads = 8;
+        let per = 2000;
+        let mut oracle = Vec::new();
+        for t in 0..n_threads {
+            let mut rng = Rng::new(1000 + t as u64);
+            for _ in 0..per {
+                oracle.push((rng.next_f64() * 10.0 - 5.0).exp2());
+            }
+        }
+        let handles: Vec<_> = (0..n_threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(1000 + t as u64);
+                    for _ in 0..per {
+                        h.record((rng.next_f64() * 10.0 - 5.0).exp2());
+                    }
+                })
+            })
+            .collect();
+        for th in handles {
+            th.join().unwrap();
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), (n_threads * per) as u64);
+        for p in [50.0, 90.0, 99.0] {
+            let want = stats::percentile(&oracle, p);
+            let got = snap.percentile(p);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.20, "p{p}: got {got} want {want} (rel err {rel:.3})");
+        }
+        let want_sum: f64 = oracle.iter().sum();
+        assert!((snap.sum - want_sum).abs() / want_sum < 1e-9, "CAS sum is exact");
+    }
+
+    #[test]
+    fn snapshot_while_writing_is_safe_and_monotone() {
+        // ISSUE 6 satellite: snapshots race live writers without panics,
+        // and every observed count is monotone non-decreasing
+        set_enabled(true);
+        let stop = Arc::new(AtomicBool::new(false));
+        let writers: Vec<_> = (0..4)
+            .map(|t| {
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    let c = counter("test_snap_race_ctr");
+                    let h = histogram("test_snap_race_hist");
+                    let mut rng = Rng::new(7 + t as u64);
+                    while !stop.load(Ordering::Acquire) {
+                        c.inc();
+                        h.observe(rng.next_f64() + 0.01);
+                    }
+                })
+            })
+            .collect();
+        let mut last_c = 0u64;
+        let mut last_h = 0u64;
+        for _ in 0..200 {
+            let s = snapshot();
+            let c = s.counter("test_snap_race_ctr").unwrap_or(0);
+            let hc = s.hist("test_snap_race_hist").map_or(0, |h| h.count());
+            assert!(c >= last_c, "counter went backwards: {c} < {last_c}");
+            assert!(hc >= last_h, "hist count went backwards");
+            last_c = c;
+            last_h = hc;
+        }
+        stop.store(true, Ordering::Release);
+        for w in writers {
+            w.join().unwrap();
+        }
+        assert!(last_c > 0, "writers made progress under snapshots");
+    }
+
+    #[test]
+    fn prometheus_exposition_format() {
+        set_enabled(true);
+        counter("test_promfmt_total{policy=\"probe\"}").add(3);
+        gauge("test_promfmt_gauge").set(1.5);
+        let h = histogram("test_promfmt_lat{policy=\"probe\"}");
+        for i in 1..=100 {
+            h.observe(i as f64 / 100.0);
+        }
+        let text = to_prometheus(&snapshot());
+        assert!(text.contains("# TYPE test_promfmt_total counter"));
+        assert!(text.contains("test_promfmt_total{policy=\"probe\"} 3"));
+        assert!(text.contains("# TYPE test_promfmt_gauge gauge"));
+        assert!(text.contains("test_promfmt_gauge 1.5"));
+        assert!(text.contains("# TYPE test_promfmt_lat summary"));
+        assert!(
+            text.contains("test_promfmt_lat{policy=\"probe\",quantile=\"0.5\"}"),
+            "quantile label merges into the existing label set:\n{text}"
+        );
+        assert!(text.contains("test_promfmt_lat_count{policy=\"probe\"} 100"));
+    }
+
+    #[test]
+    fn jsonl_line_parses_back() {
+        set_enabled(true);
+        counter("test_jsonl_ctr").add(2);
+        histogram("test_jsonl_hist").observe(0.25);
+        let line = to_jsonl(&snapshot(), 1.25);
+        let j = Json::parse(&line).expect("jsonl line parses");
+        assert_eq!(j.get_f64("t"), Some(1.25));
+        assert!(
+            j.get("counters").and_then(|c| c.get_f64("test_jsonl_ctr")).unwrap() >= 2.0
+        );
+        let h = j.get("hists").and_then(|h| h.get("test_jsonl_hist")).unwrap();
+        assert!(h.get_f64("count").unwrap() >= 1.0);
+        assert!(h.get_f64("p50").is_some());
+    }
+
+    #[test]
+    fn http_endpoint_serves_metrics_and_404() {
+        set_enabled(true);
+        counter("test_http_ctr").add(9);
+        let polled = Arc::new(AtomicU64::new(0));
+        let p2 = Arc::clone(&polled);
+        let mut srv = MetricsServer::serve(
+            "127.0.0.1:0",
+            Some(Arc::new(move || {
+                p2.fetch_add(1, Ordering::Relaxed);
+            })),
+        )
+        .expect("bind");
+        let body = scrape(&srv.local_addr()).expect("scrape");
+        assert!(body.contains("test_http_ctr 9"), "{body}");
+        assert!(polled.load(Ordering::Relaxed) >= 1, "poll ran before render");
+        // non-/metrics path 404s
+        let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+        s.write_all(b"GET /nope HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 404"));
+        srv.stop();
+    }
+
+    #[test]
+    fn jsonl_exporter_appends_snapshots() {
+        set_enabled(true);
+        let dir = std::env::temp_dir()
+            .join(format!("areal_metrics_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("metrics_live.jsonl");
+        let _ = std::fs::remove_file(&path);
+        counter("test_exporter_ctr").add(1);
+        let mut ex = JsonlExporter::start(path.clone(), Duration::from_millis(30), None);
+        std::thread::sleep(Duration::from_millis(100));
+        ex.stop();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(lines.len() >= 2, "periodic + final snapshots: {}", lines.len());
+        for l in lines {
+            Json::parse(l).expect("every line is valid json");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bucket_geometry_is_monotone() {
+        let mut last = 0usize;
+        for e in -25..40 {
+            let v = (e as f64).exp2();
+            let b = bucket_of(v);
+            assert!(b >= last, "bucket index monotone in value");
+            last = b;
+        }
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_of(f64::MAX), NB - 1);
+        for i in 0..NB - 1 {
+            assert!(bucket_lo(i) < bucket_lo(i + 1));
+        }
+    }
+}

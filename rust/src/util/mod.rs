@@ -4,6 +4,7 @@
 
 pub mod json;
 pub mod logging;
+pub mod metrics;
 pub mod minibench;
 pub mod prop;
 pub mod rng;

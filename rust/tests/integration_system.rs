@@ -33,6 +33,10 @@ fn base_cfg() -> Config {
     cfg.sft_steps = 2;
     cfg.eval_samples = 0;
     cfg.token_budget = 256;
+    // keep these tests hermetic: no exporter threads, no metrics_live.jsonl
+    // in the working tree (the live telemetry path is covered end-to-end by
+    // rust/tests/metrics_live.rs against a temp out_dir)
+    cfg.metrics = false;
     cfg.validate().unwrap();
     cfg
 }

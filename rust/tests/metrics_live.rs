@@ -1,0 +1,145 @@
+//! Live end-to-end telemetry test (ISSUE 6): a real nano-tier training run
+//! with the metrics plane ON must produce per-policy TTFT/e2e latency
+//! histograms, a scrapeable Prometheus `/metrics` body, and a JSONL stream
+//! carrying gate headroom and per-replica inbox depth.
+//!
+//! ONE `#[test]` on purpose: the enable flag is process-global, and the
+//! disabled-path assertions must run before anything in this process turns
+//! the plane on. Phases are ordered inside the single test body.
+
+use std::path::PathBuf;
+
+use areal::config::{Config, Mode};
+use areal::coordinator::System;
+use areal::runtime::artifacts::test_artifacts_dir;
+use areal::util::json::Json;
+use areal::util::metrics;
+
+macro_rules! require_artifacts {
+    () => {
+        if test_artifacts_dir().is_none() {
+            eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn telemetry_plane_end_to_end() {
+    // ---- phase 1: with the plane off (process default), every write is
+    // dropped — one-shots and held handles alike --------------------------
+    assert!(!metrics::enabled(), "plane must start disabled");
+    metrics::inc("live_disabled_ctr", 3);
+    metrics::set("live_disabled_gauge", 1.5);
+    metrics::observe("live_disabled_hist", 0.5);
+    let held = metrics::counter("live_disabled_held");
+    held.add(7);
+    let s = metrics::snapshot();
+    assert_eq!(s.counter("live_disabled_ctr").unwrap_or(0), 0);
+    assert_eq!(s.gauge("live_disabled_gauge").map(|_| 1).unwrap_or(0), 0);
+    assert_eq!(s.hist("live_disabled_hist").map_or(0, |h| h.count()), 0);
+    assert_eq!(held.get(), 0, "held handle also gated by the global flag");
+
+    // ---- phase 2: live system run with the plane on ---------------------
+    require_artifacts!();
+    let out = std::env::temp_dir()
+        .join(format!("areal_metrics_live_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    cfg.tier = "nano".into();
+    cfg.task = "sort".into();
+    cfg.level_lo = 2;
+    cfg.level_hi = 3;
+    cfg.group_size = 4;
+    cfg.global_batch = 8;
+    cfg.ppo_minibatches = 2;
+    cfg.ppo_steps = 3;
+    cfg.n_rollout_workers = 1;
+    cfg.reward_threads = 1;
+    cfg.sft_steps = 2;
+    cfg.eval_samples = 0;
+    cfg.token_budget = 256;
+    cfg.mode = Mode::Async;
+    cfg.max_staleness = Some(4);
+    cfg.metrics = true;
+    cfg.metrics_interval_s = 0.05; // several JSONL snapshots even in a short run
+    cfg.out_dir = out.clone();
+    cfg.validate().unwrap();
+    let sys = System::build(cfg).expect("build (run `make artifacts` first)");
+    let report = sys.run().expect("run");
+    assert_eq!(report.steps.len(), 3);
+
+    // ---- phase 3: registry contents -------------------------------------
+    let snap = metrics::snapshot();
+    assert!(
+        snap.counter("areal_sched_admitted_total").unwrap_or(0) > 0,
+        "scheduler admissions recorded"
+    );
+    assert!(snap.counter("areal_gen_tokens_total").unwrap_or(0) > 0);
+    assert!(snap.counter("areal_train_tokens_total").unwrap_or(0) > 0);
+    let steps_hist = snap.hist("areal_train_step_seconds").expect("train step hist");
+    assert_eq!(steps_hist.count(), 3, "one sample per PPO step");
+    assert!(snap.hist("areal_staleness_versions").map_or(0, |h| h.count()) >= 24);
+
+    // the tentpole: per-policy latency histograms from the request spans
+    let ttft = snap
+        .hists
+        .iter()
+        .find(|(k, _)| k.starts_with("areal_ttft_seconds"))
+        .map(|(k, h)| {
+            assert!(k.contains("policy=\""), "TTFT series labeled by policy: {k}");
+            h
+        })
+        .expect("TTFT histogram recorded");
+    let e2e = snap
+        .hists
+        .iter()
+        .find(|(k, _)| k.starts_with("areal_e2e_seconds"))
+        .map(|(_, h)| h)
+        .expect("e2e histogram recorded");
+    assert!(ttft.count() > 0 && e2e.count() > 0);
+    // structural oracle on the percentile walk: finite, positive, ordered
+    for h in [ttft, e2e] {
+        let (p50, p90, p99) =
+            (h.percentile(50.0), h.percentile(90.0), h.percentile(99.0));
+        assert!(p50.is_finite() && p50 > 0.0, "p50 {p50}");
+        assert!(h.min <= p50 && p50 <= p90 && p90 <= p99 && p99 <= h.max,
+                "ordered percentiles: min={} p50={p50} p90={p90} p99={p99} max={}",
+                h.min, h.max);
+    }
+    // every trajectory observes both series, and per-sample e2e (submit ->
+    // reward hand-off) strictly contains TTFT (submit -> first token), so
+    // the exact CAS-accumulated means must respect the same order
+    assert_eq!(ttft.count(), e2e.count(), "paired observations");
+    assert!(e2e.mean() >= ttft.mean(), "e2e {} < ttft {}", e2e.mean(), ttft.mean());
+
+    // ---- phase 4: Prometheus /metrics over a live listener --------------
+    // (the in-run listener bound an ephemeral port; a fresh one serves the
+    // same process-global registry)
+    let mut srv = metrics::MetricsServer::serve("127.0.0.1:0", None).expect("bind");
+    let body = metrics::scrape(&srv.local_addr()).expect("scrape");
+    srv.stop();
+    assert!(body.contains("areal_ttft_seconds"), "{body}");
+    assert!(body.contains("quantile=\"0.99\""));
+    assert!(body.contains("areal_sched_admitted_total"));
+    assert!(body.contains("# TYPE areal_train_step_seconds summary"));
+
+    // ---- phase 5: the JSONL stream the exporter appended during the run -
+    let text = std::fs::read_to_string(out.join("metrics_live.jsonl"))
+        .expect("exporter wrote metrics_live.jsonl");
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines.len() >= 2, "periodic + final snapshots, got {}", lines.len());
+    for l in &lines {
+        Json::parse(l).expect("every line is valid json");
+    }
+    // the quotes in labeled names are escaped inside the JSON text, so
+    // check through the parsed object, not substring search
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    let gauges = last.get("gauges").expect("gauges object");
+    assert!(gauges.get("areal_gate_headroom_batches").is_some(),
+            "poll closure sampled the gate");
+    assert!(gauges.get("areal_inbox_depth{replica=\"0\"}").is_some(),
+            "poll closure sampled inbox depth");
+    let _ = std::fs::remove_dir_all(&out);
+}

@@ -107,7 +107,7 @@ impl Fleet {
     }
 
     fn submit(&self, gid: u64, tokens: Vec<i32>) -> usize {
-        self.router.submit(Request { group: gid, tokens, payload: () })
+        self.router.submit(Request::new(gid, tokens, ()))
     }
 
     /// Worker pull. The socket hop ships this replica's fresh probe
