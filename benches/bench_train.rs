@@ -1,0 +1,208 @@
+//! Elastic data-parallel training benchmarks (DESIGN.md §11).
+//!
+//! Two views of the same question — does growing the train pool raise
+//! trained-batches/s?
+//!
+//!   1. simulated: the drift workload at static gen fractions, so the
+//!      train pool is 8 / 16 / 32 of 64 GPUs (deterministic, gated);
+//!   2. live nano: real `ppo_step` wall time for the fused path, the DP
+//!      split at dp=1, and dp=2 with one pool rank on its own engine
+//!      (wall-clock, reported but never gated). Skipped without artifacts.
+//!
+//! Emits `BENCH_train.json`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use areal::config::BaselineCfg;
+use areal::coordinator::{DpPool, ParamServer, Trace, Trainer, TrainerCfg, Trajectory};
+use areal::runtime::artifacts::test_artifacts_dir;
+use areal::runtime::{Engine, Manifest, ParamSet, TrainState};
+use areal::sim::{self, SimConfig};
+use areal::tasks::Prompt;
+use areal::util::json::Json;
+
+fn main() {
+    let mut records: Vec<Json> = Vec::new();
+
+    println!("== simulated train-pool scaling (drift workload, 64 GPUs, 1.5B) ==");
+    // static splits of the ISSUE-5 acceptance workload: gen_fraction
+    // 0.875 / 0.75 / 0.5 leaves 8 / 16 / 32 GPUs in the train pool
+    let drift_cfg = SimConfig::drift_rebalance_workload;
+    for frac in [0.875f64, 0.75, 0.5] {
+        let r = sim::run_async(&drift_cfg(frac, false));
+        let train_gpus = (64.0 * (1.0 - frac)).round();
+        println!(
+            "  {train_gpus:>4.0} train GPUs: {:>7.3} batches/s  {:>8.1} ktok/s active",
+            r.batches_per_s,
+            r.effective_tps_active / 1e3
+        );
+        records.push(Json::obj(vec![
+            ("name", Json::str("train_pool_scaling")),
+            ("train_gpus", Json::num(train_gpus)),
+            ("batches_per_s", Json::num(r.batches_per_s)),
+            ("effective_tps_active", Json::num(r.effective_tps_active)),
+            ("effective_tps", Json::num(r.effective_tps)),
+        ]));
+    }
+    // the rebalancer converting gen->train replicas mid-run: the elastic
+    // pool is what turns those conversions into batch-rate
+    let dyn_r = sim::run_async(&drift_cfg(0.75, true));
+    println!(
+        "  dynamic rebalance: {:>7.3} batches/s  {:>8.1} ktok/s active  \
+         ({} gen->train, {} train->gen)",
+        dyn_r.batches_per_s,
+        dyn_r.effective_tps_active / 1e3,
+        dyn_r.gen_to_train,
+        dyn_r.train_to_gen
+    );
+    records.push(Json::obj(vec![
+        ("name", Json::str("train_pool_dynamic")),
+        ("batches_per_s", Json::num(dyn_r.batches_per_s)),
+        ("effective_tps_active", Json::num(dyn_r.effective_tps_active)),
+        ("gen_to_train", Json::num(dyn_r.gen_to_train as f64)),
+    ]));
+
+    println!("\n== live nano ppo_step (wall clock, ungated) ==");
+    match live_nano_records() {
+        Some(mut live) => records.append(&mut live),
+        None => println!("  skipped: AOT artifacts not built (run `make artifacts`)"),
+    }
+
+    let n = records.len();
+    let out = Json::obj(vec![
+        ("bench", Json::str("train")),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("BENCH_train.json", format!("{out}\n")).expect("write BENCH_train.json");
+    println!("\nwrote BENCH_train.json ({n} records)");
+}
+
+/// Time real `ppo_step`s on the nano artifact: fused vs dp=1 (split-path
+/// overhead) vs dp=2 with one pool rank serving shards from a second
+/// engine on another thread (actual parallelism on multicore CPU).
+fn live_nano_records() -> Option<Vec<Json>> {
+    let dir = test_artifacts_dir()?;
+    let manifest = Manifest::load(&dir).expect("manifest load");
+    let spec = manifest.tier("nano").expect("nano tier");
+    let engine = Arc::new(Engine::load(spec).expect("engine load"));
+    let steps = 4usize;
+    let mut out = Vec::new();
+
+    let variant = |label: &str, train_dp: usize, with_rank: bool| {
+        let params = ParamSet::init(&engine, [7, 0x9e37]).expect("init params");
+        let server = ParamServer::new(Arc::clone(&params));
+        let state = TrainState::fresh(&engine.spec, params).expect("fresh state");
+        let mut trainer = Trainer::new(
+            Arc::clone(&engine),
+            state,
+            server,
+            TrainerCfg {
+                global_batch: 8,
+                ppo_minibatches: 2,
+                lr: 1e-3,
+                decoupled: true,
+                dynamic_batching: true,
+                token_budget: 256,
+                train_dp,
+                train_dp_max: if with_rank { 2 } else { 0 },
+            },
+            BaselineCfg::GroupMean,
+        );
+        let pool = with_rank.then(|| Arc::new(DpPool::new()));
+        let rank_thread = pool.as_ref().map(|pool| {
+            trainer.set_dp_pool(Arc::clone(pool));
+            let pool = Arc::clone(pool);
+            let rank_engine = Engine::load_subset(
+                &engine.spec,
+                Some(&["grad_step", "grad_step_h"]),
+            )
+            .expect("rank engine");
+            std::thread::spawn(move || {
+                let rank = pool.register();
+                while !rank.pool_closed() {
+                    if !rank.serve_one(&rank_engine) {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                    }
+                }
+            })
+        });
+        if let Some(pool) = &pool {
+            while pool.workers() == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        let trace = Trace::new(false);
+        // one warmup step primes executable caches, then timed steps
+        trainer.ppo_step(synth_batch(0), 0, &trace).expect("warmup");
+        let t0 = Instant::now();
+        for s in 0..steps {
+            trainer.ppo_step(synth_batch(s + 1), s + 1, &trace).expect("step");
+        }
+        let total = t0.elapsed().as_secs_f64();
+        if let Some(pool) = &pool {
+            pool.close();
+        }
+        if let Some(h) = rank_thread {
+            h.join().expect("rank thread");
+        }
+        let steps_per_s = steps as f64 / total;
+        println!(
+            "  {label:<12} {:>8.4} s/step  {:>7.2} steps/s",
+            total / steps as f64,
+            steps_per_s
+        );
+        Json::obj(vec![
+            ("name", Json::str("live_nano_ppo_step")),
+            ("variant", Json::str(label)),
+            ("mean_step_s", Json::num(total / steps as f64)),
+            ("steps_per_s", Json::num(steps_per_s)),
+        ])
+    };
+    out.push(variant("fused", 0, false));
+    out.push(variant("dp1", 1, false));
+    out.push(variant("dp2_pool", 1, true));
+    Some(out)
+}
+
+/// Deterministic synthetic nano batch (vocab 48, max_seq 64): 4 GRPO
+/// groups of 2 with mixed rewards and varied lengths. `salt` varies the
+/// content across steps without touching the shapes.
+fn synth_batch(salt: usize) -> Vec<Trajectory> {
+    let mut x: u64 = 0x243F_6A88_85A3_08D3 ^ (salt as u64).wrapping_mul(0x9E37_79B9);
+    let mut rng = move || {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (x >> 33) as u32
+    };
+    (0..8usize)
+        .map(|i| {
+            let prompt_len = 4;
+            let clen = 8 + (i * 5 + salt) % 17;
+            let tokens: Vec<i32> = (0..prompt_len + clen)
+                .map(|_| (rng() % 46 + 1) as i32)
+                .collect();
+            let behav_logp: Vec<f32> =
+                (0..clen).map(|_| -0.05 - (rng() % 100) as f32 * 0.01).collect();
+            Trajectory {
+                prompt: Prompt {
+                    text: format!("bench {i}"),
+                    meta: String::new(),
+                    level: 1,
+                    group: (i / 2) as u64,
+                },
+                tokens,
+                prompt_len,
+                behav_logp,
+                segments: vec![(0, clen)],
+                version_born: 0,
+                reward: if i % 2 == 0 { 5.0 } else { -5.0 },
+                correct: i % 2 == 0,
+                truncated: false,
+                worker: 0,
+                span: Default::default(),
+            }
+        })
+        .collect()
+}

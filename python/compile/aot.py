@@ -170,6 +170,45 @@ def build_entrypoints(tier):
         pnames + mnames + vnames + ["step", "metrics"],
     )
 
+    # Data-parallel split of train_step (DESIGN.md §11): `grad_step` is the
+    # per-shard forward+backward (no optimizer state in, raw gradients out),
+    # `apply_grads` is the optimizer tail run once by the lead on the
+    # combined gradient. grad_step gets full- and half-context variants like
+    # train_step; apply_grads is shape-independent of T so one variant
+    # serves both.
+    gnames = [f"grads.{n}" for n, _ in pspec]
+
+    eps["grad_step"] = (
+        lambda *a: model.grad_step(
+            tier, list(a[:nP]), a[nP], a[nP + 1], a[nP + 2], a[nP + 3],
+            a[nP + 4]),
+        pargs + [spec_of((Bt, T), i32), spec_of((Bt, T), f32),
+                 spec_of((Bt, T), f32), spec_of((Bt, T), f32),
+                 spec_of((Bt, T), f32)],
+        pnames + ["tokens", "loss_mask", "adv", "behav_logp", "prox_logp"],
+        gnames + ["metrics"],
+    )
+
+    eps["grad_step_h"] = (
+        lambda *a: model.grad_step(
+            tier, list(a[:nP]), a[nP], a[nP + 1], a[nP + 2], a[nP + 3],
+            a[nP + 4]),
+        pargs + [spec_of((Bt, Th), i32), spec_of((Bt, Th), f32),
+                 spec_of((Bt, Th), f32), spec_of((Bt, Th), f32),
+                 spec_of((Bt, Th), f32)],
+        pnames + ["tokens", "loss_mask", "adv", "behav_logp", "prox_logp"],
+        gnames + ["metrics"],
+    )
+
+    eps["apply_grads"] = (
+        lambda *a: model.apply_grads(
+            tier, list(a[:nP]), list(a[nP:2 * nP]), list(a[2 * nP:3 * nP]),
+            a[3 * nP], list(a[3 * nP + 1:4 * nP + 1]), a[4 * nP + 1]),
+        pargs * 3 + [spec_of((), i32)] + pargs + [spec_of((), f32)],
+        pnames + mnames + vnames + ["step"] + gnames + ["lr"],
+        pnames + mnames + vnames + ["step", "grad_norm"],
+    )
+
     eps["sft_step"] = (
         lambda *a: model.sft_step(
             tier, list(a[:nP]), list(a[nP:2 * nP]), list(a[2 * nP:3 * nP]),
@@ -239,7 +278,8 @@ def tier_manifest(tier, entry):
         },
         "params": [{"name": n, "shape": list(s)} for n, s in pspec],
         "entrypoints": entry,
-        "metrics": {"train_step": TRAIN_METRICS, "sft_step": SFT_METRICS},
+        "metrics": {"train_step": TRAIN_METRICS, "grad_step": TRAIN_METRICS,
+                    "sft_step": SFT_METRICS},
     }
 
 

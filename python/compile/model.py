@@ -16,6 +16,9 @@ Entrypoints (per tier; shapes fixed at lowering time, see aot.py):
     logprob(params.., tokens)                            -> logp[B,T]
     train_step(params.., m.., v.., step, tokens, mask,
                adv, behav_lp, prox_lp, lr)               -> params'.., m'.., v'.., step', metrics
+    grad_step(params.., tokens, mask, adv,
+              behav_lp, prox_lp)                         -> grads.., metrics
+    apply_grads(params.., m.., v.., step, grads.., lr)   -> params'.., m'.., v'.., step', grad_norm
     sft_step(params.., m.., v.., step, tokens, mask, lr) -> params'.., m'.., v'.., step', metrics
 
 The decoupled-PPO objective (paper Eq. 5) is inside train_step via the fused
@@ -321,14 +324,11 @@ def adamw_update(tier: Tier, params, m, v, step, grads, lr):
     return new_p, new_m, new_v, step1, gnorm
 
 
-def train_step(tier: Tier, params, m, v, step, tokens, loss_mask, adv,
-               behav_lp, prox_lp, lr):
-    """One PPO minibatch update with the decoupled objective (Eq. 5).
+def _ppo_grads(tier: Tier, params, tokens, loss_mask, adv, behav_lp, prox_lp):
+    """Shared PPO loss/grad core of train_step and grad_step.
 
-    tokens i32[B,T]; loss_mask/adv/behav_lp/prox_lp f32[B,T]; step i32[];
-    lr f32[]. Returns (*params', *m', *v', step', metrics f32[8]):
-    metrics = [loss, clip_frac, ratio_mean, approx_kl(prox||theta),
-               token_nll, grad_norm, w_mean, n_tokens]
+    Returns (loss, lp, grads, denom) with grads UNCLIPPED and already
+    normalized by this minibatch's own mask sum.
     """
     b, t = tokens.shape
     n = b * t
@@ -343,16 +343,21 @@ def train_step(tier: Tier, params, m, v, step, tokens, loss_mask, adv,
         return jnp.sum(per_tok) / denom, lp
 
     (loss, lp), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-    new_p, new_m, new_v, step1, gnorm = adamw_update(
-        tier, params, m, v, step, grads, lr)
+    return loss, lp, grads, denom
 
-    # diagnostics (masked means)
+
+def _ppo_metrics(tier: Tier, loss, lp, gnorm, loss_mask, behav_lp, prox_lp,
+                 denom):
+    """The f32[8] diagnostic vector shared by train_step and grad_step:
+    [loss, clip_frac, ratio_mean, approx_kl(prox||theta), token_nll,
+     grad_norm, w_mean, n_tokens] — all masked means except grad_norm and
+    n_tokens."""
     msum = lambda x: jnp.sum(x * loss_mask) / denom
     ratio = jnp.exp(lp - prox_lp)
     clipped = jnp.logical_or(ratio > 1.0 + tier.clip_eps,
                              ratio < 1.0 - tier.clip_eps).astype(jnp.float32)
     w = jnp.clip(jnp.exp(prox_lp - behav_lp), 0.0, tier.w_max)
-    metrics = jnp.stack([
+    return jnp.stack([
         loss,
         msum(clipped),
         msum(ratio),
@@ -362,7 +367,56 @@ def train_step(tier: Tier, params, m, v, step, tokens, loss_mask, adv,
         msum(w),
         jnp.sum(loss_mask),
     ])
+
+
+def train_step(tier: Tier, params, m, v, step, tokens, loss_mask, adv,
+               behav_lp, prox_lp, lr):
+    """One PPO minibatch update with the decoupled objective (Eq. 5).
+
+    tokens i32[B,T]; loss_mask/adv/behav_lp/prox_lp f32[B,T]; step i32[];
+    lr f32[]. Returns (*params', *m', *v', step', metrics f32[8]):
+    metrics = [loss, clip_frac, ratio_mean, approx_kl(prox||theta),
+               token_nll, grad_norm, w_mean, n_tokens]
+    """
+    loss, lp, grads, denom = _ppo_grads(tier, params, tokens, loss_mask, adv,
+                                        behav_lp, prox_lp)
+    new_p, new_m, new_v, step1, gnorm = adamw_update(
+        tier, params, m, v, step, grads, lr)
+    metrics = _ppo_metrics(tier, loss, lp, gnorm, loss_mask, behav_lp,
+                           prox_lp, denom)
     return (*new_p, *new_m, *new_v, step1, metrics)
+
+
+def grad_step(tier: Tier, params, tokens, loss_mask, adv, behav_lp, prox_lp):
+    """Gradient half of the data-parallel PPO step: forward+backward on one
+    shard, NO optimizer update.
+
+    Returns (*grads, metrics f32[8]). Gradients are raw (unclipped, locally
+    mask-normalized); the lead combines the shards as a token-weighted mean
+    (weight = metrics[7] = this shard's mask sum) and runs `apply_grads`
+    once, so at dp=1 the pipeline grad_step→apply_grads computes exactly the
+    same update as the fused train_step. metrics[5] is the shard-local raw
+    gradient norm — the lead overwrites it with apply_grads' pre-clip global
+    norm of the combined gradient.
+    """
+    loss, lp, grads, denom = _ppo_grads(tier, params, tokens, loss_mask, adv,
+                                        behav_lp, prox_lp)
+    metrics = _ppo_metrics(tier, loss, lp, _global_norm(grads), loss_mask,
+                           behav_lp, prox_lp, denom)
+    return (*grads, metrics)
+
+
+def apply_grads(tier: Tier, params, m, v, step, grads, lr):
+    """Optimizer half of the data-parallel PPO step: one AdamW update from
+    already-combined gradients (global-norm clip inside, identical to the
+    fused train_step's optimizer tail).
+
+    Returns (*params', *m', *v', step', grad_norm f32[]) where grad_norm is
+    the pre-clip global norm of the combined gradient.
+    """
+    new_p, new_m, new_v, step1, gnorm = adamw_update(
+        tier, params, m, v, step, grads, lr)
+    return (*new_p, *new_m, *new_v, step1, gnorm)
 
 
 def sft_step(tier: Tier, params, m, v, step, tokens, loss_mask, lr):

@@ -202,6 +202,15 @@ pub struct Config {
     pub dynamic_batching: bool,
     /// token budget per micro-batch for Algorithm 1
     pub token_budget: usize,
+    /// base data-parallel degree of the PPO step (counting the lead
+    /// trainer): each micro-batch is row-sharded this many ways through
+    /// `grad_step`, gradients tree-reduced, one `apply_grads` update.
+    /// 0 = legacy fused `train_step` path (no sharding machinery at all)
+    pub train_dp: usize,
+    /// elastic ceiling on the effective DP degree: RoleBoard-parked
+    /// train-role workers raise the degree above `train_dp` up to this
+    /// many ranks (0 = stay at `train_dp`, parked workers stay idle)
+    pub train_dp_max: usize,
 
     // sft warmup
     pub sft_steps: usize,
@@ -270,6 +279,8 @@ impl Default for Config {
             decoupled: true,
             dynamic_batching: true,
             token_budget: 2048,
+            train_dp: 0,
+            train_dp_max: 0,
             sft_steps: 0,
             sft_lr: 1e-3,
             out_dir: PathBuf::from("runs/default"),
@@ -334,6 +345,8 @@ impl Config {
         ("decoupled", "true"),
         ("dynamic_batching", "true"),
         ("token_budget", "2048"),
+        ("train_dp", "0"),
+        ("train_dp_max", "0"),
         ("sft_steps", "0"),
         ("sft_lr", "0.001"),
         ("out_dir", "runs/default"),
@@ -435,6 +448,8 @@ impl Config {
             "decoupled" => self.decoupled = parse_bool(val)?,
             "dynamic_batching" => self.dynamic_batching = parse_bool(val)?,
             "token_budget" => self.token_budget = u(val)?,
+            "train_dp" => self.train_dp = u(val)?,
+            "train_dp_max" => self.train_dp_max = u(val)?,
             "sft_steps" => self.sft_steps = u(val)?,
             "sft_lr" => self.sft_lr = f(val)?,
             "out_dir" => self.out_dir = PathBuf::from(val),
@@ -460,10 +475,43 @@ impl Config {
         }
         if self.global_batch % self.ppo_minibatches != 0 {
             bail!(
-                "global_batch ({}) must divide evenly into ppo_minibatches ({})",
-                self.global_batch,
-                self.ppo_minibatches
+                "ppo_minibatches ({}) must divide global_batch ({}) evenly",
+                self.ppo_minibatches,
+                self.global_batch
             );
+        }
+        // DP shards are rows of one minibatch: more ranks than rows means
+        // ranks with guaranteed-empty shards at every step
+        if self.train_dp > 0 {
+            let rows = self.global_batch / self.ppo_minibatches;
+            if self.train_dp > rows {
+                bail!(
+                    "train_dp ({}) exceeds the minibatch row count \
+                     global_batch/ppo_minibatches = {} — some DP ranks could \
+                     never receive a shard",
+                    self.train_dp,
+                    rows
+                );
+            }
+            if self.train_dp_max != 0 {
+                if self.train_dp_max < self.train_dp {
+                    bail!(
+                        "train_dp_max ({}) < train_dp ({})",
+                        self.train_dp_max,
+                        self.train_dp
+                    );
+                }
+                if self.train_dp_max > rows {
+                    bail!(
+                        "train_dp_max ({}) exceeds the minibatch row count \
+                         global_batch/ppo_minibatches = {}",
+                        self.train_dp_max,
+                        rows
+                    );
+                }
+            }
+        } else if self.train_dp_max != 0 {
+            bail!("train_dp_max ({}) requires train_dp >= 1", self.train_dp_max);
         }
         if self.level_lo > self.level_hi {
             bail!("level_lo > level_hi");
@@ -542,6 +590,17 @@ impl Config {
                     "rebalance_max_gen ({}) < rebalance_min_gen ({})",
                     self.rebalance_max_gen,
                     self.rebalance_min_gen
+                );
+            }
+            // not fatal — a freed device still relieves generation memory
+            // pressure — but half the feedback loop is missing, so say so
+            if self.train_dp == 0 {
+                crate::warn_log!(
+                    "config",
+                    "rebalance=threshold with train_dp=0: converted workers \
+                     only park — training throughput cannot rise from a \
+                     gen->train conversion (set train_dp>=1 and train_dp_max \
+                     to let parked workers join the DP pool)"
                 );
             }
         }
@@ -772,6 +831,52 @@ mod tests {
         .is_ok());
         // with rebalancing off the same values are inert, not errors
         assert!(Config::load(None, &["rebalance_min_gen=0".into()]).is_ok());
+    }
+
+    #[test]
+    fn dp_keys_apply() {
+        let cfg = Config::load(
+            None,
+            &["train_dp=2".into(), "train_dp_max=4".into(),
+              "global_batch=32".into(), "ppo_minibatches=4".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.train_dp, 2);
+        assert_eq!(cfg.train_dp_max, 4);
+        // defaults: legacy fused path
+        let d = Config::default();
+        assert_eq!(d.train_dp, 0);
+        assert_eq!(d.train_dp_max, 0);
+        // dp degrees are bounded by the minibatch row count (32/4 = 8 rows)
+        assert!(Config::load(
+            None,
+            &["train_dp=9".into(), "global_batch=32".into(),
+              "ppo_minibatches=4".into()]
+        )
+        .is_err());
+        assert!(Config::load(
+            None,
+            &["train_dp=2".into(), "train_dp_max=9".into(),
+              "global_batch=32".into(), "ppo_minibatches=4".into()]
+        )
+        .is_err());
+        // ceiling below base, or a ceiling with no base, is nonsense
+        assert!(Config::load(None, &["train_dp=4".into(), "train_dp_max=2".into()])
+            .is_err());
+        assert!(Config::load(None, &["train_dp_max=2".into()]).is_err());
+        // the full-row degree is the legal maximum
+        assert!(Config::load(
+            None,
+            &["train_dp=8".into(), "train_dp_max=8".into(),
+              "global_batch=32".into(), "ppo_minibatches=4".into()]
+        )
+        .is_ok());
+        // rebalance=threshold with train_dp=0 is a warning, not an error
+        assert!(Config::load(
+            None,
+            &["rebalance=threshold".into(), "eta=4".into()]
+        )
+        .is_ok());
     }
 
     #[test]

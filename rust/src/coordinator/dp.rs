@@ -1,0 +1,473 @@
+//! Elastic data-parallel training pool (DESIGN.md §11).
+//!
+//! The tentpole of the gen/train rebalancer (§7) is that a converted
+//! replica should *raise training throughput*, not merely free its device.
+//! This module is the mechanism: RoleBoard-parked workers register here as
+//! DP ranks, and the lead trainer shards each PPO micro-batch across the
+//! pool through the `grad_step` artifact (forward+backward, raw gradients
+//! out), combines the shard gradients in a **fixed tree order**, and runs
+//! one `apply_grads` update — so the trained model is independent of how
+//! many ranks happened to be parked and of the order their results arrive.
+//!
+//! Protocol per micro-batch (the lead drives, workers are stateless):
+//!   1. lead splits the micro-batch rows into `dp_eff` shards
+//!      (`dynamic_allocate` with an unbounded token budget → balanced
+//!      shards) and calls [`DpPool::run_job`];
+//!   2. parked workers claim shards ([`DpPool::try_claim`]) and run
+//!      `grad_step` on their own engines; the lead claims whatever is left
+//!      so it always makes progress — a pool of zero workers degenerates
+//!      to the lead computing every shard itself;
+//!   3. a worker that dies or rejoins generation mid-shard deregisters
+//!      (RAII [`DpWorker`] guard), which **requeues** its claimed shards —
+//!      the lead recomputes them, so a rank loss costs recompute time but
+//!      zero trajectories and zero determinism;
+//!   4. completed shards are sorted by shard index and reduced by
+//!      [`reduce_grads`] — arrival order never touches the arithmetic.
+//!
+//! Numerics: each shard's gradient comes back locally normalized by its
+//! own mask-token count (that is how `train_step` normalizes), so the
+//! combined gradient is the token-weighted mean `Σ wᵢ·gᵢ`, `wᵢ = nᵢ/Σn` —
+//! exactly the gradient the fused path computes over the whole micro-batch.
+//! With one shard the weight is exactly 1.0 and the reduction is a bitwise
+//! pass-through, which is what makes the dp=1 path bit-identical to the
+//! legacy fused `train_step` (asserted by `tests/dp_equiv.rs`).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Engine, HostTensor, ParamSet};
+
+/// Everything a DP rank needs to run `grad_step` on one shard: the
+/// step-start parameters and the shard's dense `[Bt, T]` tensors.
+pub struct ShardTask {
+    /// position in the micro-batch's fixed reduction order
+    pub shard_idx: usize,
+    /// `grad_step` or `grad_step_h` — must match the tensors' T
+    pub entry: &'static str,
+    /// step-start parameters (π_prox version the whole step trains from)
+    pub params: Arc<ParamSet>,
+    pub tokens: HostTensor,
+    pub mask: HostTensor,
+    pub adv: HostTensor,
+    pub behav: HostTensor,
+    pub prox: HostTensor,
+}
+
+/// A completed shard: raw (unclipped, locally normalized) gradients as
+/// host f32 buffers in `param_spec` order, plus the 8-metric vector.
+pub struct ShardOutput {
+    pub shard_idx: usize,
+    pub grads: Vec<Vec<f32>>,
+    pub metrics: Vec<f32>,
+}
+
+/// Run one shard on an engine — shared by the lead and pool workers so
+/// the execution path is identical no matter who computes a shard.
+pub fn run_shard(engine: &Engine, task: &ShardTask) -> Result<ShardOutput> {
+    let tokens_l = task.tokens.to_literal()?;
+    let mask_l = task.mask.to_literal()?;
+    let adv_l = task.adv.to_literal()?;
+    let behav_l = task.behav.to_literal()?;
+    let prox_l = task.prox.to_literal()?;
+    let mut inputs: Vec<&xla::Literal> = task.params.refs();
+    inputs.push(&tokens_l);
+    inputs.push(&mask_l);
+    inputs.push(&adv_l);
+    inputs.push(&behav_l);
+    inputs.push(&prox_l);
+    let mut outs = engine.run(task.entry, &inputs).context(task.entry)?;
+    let metrics_l = outs.pop().context("grad_step returned no outputs")?;
+    let metrics = HostTensor::from_literal(metrics_l.lit())?.as_f32()?.to_vec();
+    let mut grads = Vec::with_capacity(outs.len());
+    for g in &outs {
+        grads.push(HostTensor::from_literal(g.lit())?.as_f32()?.to_vec());
+    }
+    Ok(ShardOutput { shard_idx: task.shard_idx, grads, metrics })
+}
+
+/// Index of `grad_norm` in the train metric vector (the one entry the
+/// lead overwrites with `apply_grads`' combined pre-clip norm).
+pub const METRIC_GRAD_NORM: usize = 5;
+/// Index of `n_tokens` (the shard weight) in the train metric vector.
+pub const METRIC_N_TOKENS: usize = 7;
+
+/// Combine completed shards into one gradient + one metric vector.
+///
+/// Shards are sorted by `shard_idx`, each gradient scaled by its token
+/// weight `wᵢ = nᵢ/Σn`, then summed by a pairwise binary tree over shard
+/// index — `(0+1)+(2+3)`, … — so the float additions happen in the same
+/// order no matter which rank finished first. A single shard is returned
+/// bitwise untouched (its weight is exactly 1.0 and no addition runs).
+///
+/// Metrics are token-weighted means (matching the trainer's `MetricAgg`)
+/// except `grad_norm`, which is left as the first shard's local value for
+/// the caller to overwrite, and `n_tokens`, which sums.
+pub fn reduce_grads(mut shards: Vec<ShardOutput>) -> (Vec<Vec<f32>>, Vec<f32>) {
+    assert!(!shards.is_empty(), "reduce_grads on zero shards");
+    shards.sort_by_key(|s| s.shard_idx);
+    if shards.len() == 1 {
+        let s = shards.pop().unwrap();
+        return (s.grads, s.metrics);
+    }
+    let total: f32 = shards
+        .iter()
+        .map(|s| s.metrics.get(METRIC_N_TOKENS).copied().unwrap_or(0.0))
+        .sum();
+    let total = if total > 0.0 { total } else { 1.0 };
+
+    // scale each shard by its weight, then tree-fold pairs in index order
+    let mut level: Vec<Vec<Vec<f32>>> = shards
+        .iter()
+        .map(|s| {
+            let w = s.metrics.get(METRIC_N_TOKENS).copied().unwrap_or(0.0) / total;
+            s.grads
+                .iter()
+                .map(|g| g.iter().map(|&x| x * w).collect())
+                .collect()
+        })
+        .collect();
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity((level.len() + 1) / 2);
+        let mut it = level.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                for (ga, gb) in a.iter_mut().zip(&b) {
+                    for (x, y) in ga.iter_mut().zip(gb) {
+                        *x += *y;
+                    }
+                }
+            }
+            next.push(a);
+        }
+        level = next;
+    }
+    let combined = level.pop().unwrap();
+
+    // token-weighted metric means (grad_norm is overwritten by the caller
+    // with the combined norm from apply_grads; n_tokens sums)
+    let n_metrics = shards[0].metrics.len();
+    let mut metrics = vec![0f32; n_metrics];
+    for s in &shards {
+        let w = s.metrics.get(METRIC_N_TOKENS).copied().unwrap_or(0.0) / total;
+        for (k, m) in metrics.iter_mut().enumerate() {
+            *m += s.metrics.get(k).copied().unwrap_or(0.0) * w;
+        }
+    }
+    metrics[METRIC_N_TOKENS] = shards
+        .iter()
+        .map(|s| s.metrics.get(METRIC_N_TOKENS).copied().unwrap_or(0.0))
+        .sum();
+    metrics[METRIC_GRAD_NORM] = shards[0].metrics[METRIC_GRAD_NORM];
+    (combined, metrics)
+}
+
+struct PoolState {
+    /// job generation — stale completes from a previous job are discarded
+    job: u64,
+    queue: VecDeque<Arc<ShardTask>>,
+    /// (worker id, job, task) for shards claimed by pool workers
+    claimed: Vec<(u64, u64, Arc<ShardTask>)>,
+    done: Vec<ShardOutput>,
+    expected: usize,
+    workers: usize,
+    next_worker: u64,
+    closed: bool,
+}
+
+/// The shard dispatch plane shared between the lead trainer and the
+/// train-role (parked) rollout workers. One job — one micro-batch's shard
+/// set — is in flight at a time; the lead blocks in [`DpPool::run_job`]
+/// until every shard is accounted for.
+pub struct DpPool {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+impl Default for DpPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DpPool {
+    pub fn new() -> DpPool {
+        crate::util::metrics::set("areal_dp_workers", 0.0);
+        DpPool {
+            state: Mutex::new(PoolState {
+                job: 0,
+                queue: VecDeque::new(),
+                claimed: Vec::new(),
+                done: Vec::new(),
+                expected: 0,
+                workers: 0,
+                next_worker: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Number of registered (non-lead) DP ranks.
+    pub fn workers(&self) -> usize {
+        self.state.lock().unwrap().workers
+    }
+
+    /// Shut the pool down: wakes every waiter; workers observe
+    /// [`DpPool::is_closed`] and leave their serving loops.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Register the calling thread as a DP rank. The returned guard
+    /// deregisters on drop — including on panic — requeueing any shard
+    /// the rank still held, so a lost worker never loses work.
+    pub fn register(self: &Arc<Self>) -> DpWorker {
+        let id = {
+            let mut st = self.state.lock().unwrap();
+            st.workers += 1;
+            st.next_worker += 1;
+            crate::util::metrics::set("areal_dp_workers", st.workers as f64);
+            st.next_worker
+        };
+        self.cv.notify_all();
+        DpWorker { pool: Arc::clone(self), id }
+    }
+
+    fn deregister(&self, id: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.workers = st.workers.saturating_sub(1);
+        crate::util::metrics::set("areal_dp_workers", st.workers as f64);
+        // requeue anything this rank claimed but never completed — the
+        // lead (or a surviving rank) recomputes it
+        let mut i = 0;
+        while i < st.claimed.len() {
+            if st.claimed[i].0 == id {
+                let (_, job, task) = st.claimed.swap_remove(i);
+                if job == st.job {
+                    st.queue.push_back(task);
+                }
+            } else {
+                i += 1;
+            }
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Worker side: claim one shard of the current job, if any is queued.
+    fn try_claim(&self, worker: u64) -> Option<(u64, Arc<ShardTask>)> {
+        let mut st = self.state.lock().unwrap();
+        let task = st.queue.pop_front()?;
+        let job = st.job;
+        st.claimed.push((worker, job, Arc::clone(&task)));
+        Some((job, task))
+    }
+
+    /// Worker side: hand back a completed shard. Stale jobs and duplicate
+    /// shard indices (a shard requeued after a mid-flight deregister and
+    /// recomputed by the lead) are discarded silently.
+    fn complete(&self, worker: u64, job: u64, out: ShardOutput) {
+        let mut st = self.state.lock().unwrap();
+        st.claimed
+            .retain(|(w, j, t)| !(*w == worker && *j == job && t.shard_idx == out.shard_idx));
+        if job == st.job && !st.done.iter().any(|o| o.shard_idx == out.shard_idx) {
+            st.done.push(out);
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Lead side: dispatch one micro-batch's shards, serve unclaimed
+    /// shards on `lead_engine`, and block until all are complete.
+    /// Returns the outputs sorted by shard index.
+    pub fn run_job(&self, tasks: Vec<ShardTask>, lead_engine: &Engine)
+        -> Result<Vec<ShardOutput>> {
+        let expected = tasks.len();
+        {
+            let mut st = self.state.lock().unwrap();
+            st.job += 1;
+            st.queue = tasks.into_iter().map(Arc::new).collect();
+            st.claimed.clear();
+            st.done = Vec::with_capacity(expected);
+            st.expected = expected;
+        }
+        self.cv.notify_all();
+        loop {
+            // always claim for ourselves first: the lead never idles while
+            // work is queued, so zero pool workers still makes progress and
+            // a requeued shard from a dead rank is picked up immediately
+            let task = {
+                let mut st = self.state.lock().unwrap();
+                st.queue.pop_front()
+            };
+            if let Some(task) = task {
+                let out = run_shard(lead_engine, &task)?;
+                let mut st = self.state.lock().unwrap();
+                if !st.done.iter().any(|o| o.shard_idx == out.shard_idx) {
+                    st.done.push(out);
+                }
+                continue;
+            }
+            let mut st = self.state.lock().unwrap();
+            if st.done.len() >= st.expected {
+                let mut done = std::mem::take(&mut st.done);
+                st.expected = 0;
+                done.sort_by_key(|o| o.shard_idx);
+                return Ok(done);
+            }
+            // outstanding shards are with pool workers: wait for a
+            // completion or a deregister-requeue
+            let (guard, _) = self
+                .cv
+                .wait_timeout(st, Duration::from_millis(2))
+                .unwrap();
+            drop(guard);
+        }
+    }
+}
+
+/// RAII registration of one pool rank (see [`DpPool::register`]).
+pub struct DpWorker {
+    pool: Arc<DpPool>,
+    id: u64,
+}
+
+impl DpWorker {
+    /// Whether the pool this rank registered with has shut down.
+    pub fn pool_closed(&self) -> bool {
+        self.pool.is_closed()
+    }
+
+    /// Serve at most one queued shard on `engine`. Returns whether a
+    /// shard was served — callers interleave this with their own park
+    /// loop (rejoin polls, stop checks) between shards.
+    pub fn serve_one(&self, engine: &Engine) -> bool {
+        let Some((job, task)) = self.pool.try_claim(self.id) else {
+            return false;
+        };
+        match run_shard(engine, &task) {
+            Ok(out) => self.pool.complete(self.id, job, out),
+            Err(e) => {
+                // hand the shard back to the queue: the lead recomputes
+                crate::warn_log!("dp", "rank {} shard {} failed: {e:#}",
+                                 self.id, task.shard_idx);
+                let mut st = self.pool.state.lock().unwrap();
+                st.claimed.retain(|(w, j, t)| {
+                    !(*w == self.id && *j == job && t.shard_idx == task.shard_idx)
+                });
+                if job == st.job {
+                    st.queue.push_back(task);
+                }
+                drop(st);
+                self.pool.cv.notify_all();
+            }
+        }
+        true
+    }
+}
+
+impl Drop for DpWorker {
+    fn drop(&mut self) {
+        self.pool.deregister(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(idx: usize, n_tokens: f32, g: Vec<f32>) -> ShardOutput {
+        let mut metrics = vec![0.0; 8];
+        metrics[METRIC_N_TOKENS] = n_tokens;
+        metrics[0] = idx as f32; // distinguishable loss
+        ShardOutput { shard_idx: idx, grads: vec![g], metrics }
+    }
+
+    #[test]
+    fn single_shard_reduction_is_bitwise_identity() {
+        let g = vec![0.1f32, -0.25, 3.5e-7, f32::MIN_POSITIVE];
+        let (combined, metrics) = reduce_grads(vec![shard(0, 7.0, g.clone())]);
+        assert_eq!(combined[0], g, "one shard must pass through untouched");
+        assert_eq!(metrics[METRIC_N_TOKENS], 7.0);
+    }
+
+    #[test]
+    fn reduction_is_arrival_order_invariant() {
+        let mk = |order: &[usize]| {
+            let shards: Vec<ShardOutput> = order
+                .iter()
+                .map(|&i| shard(i, (i + 1) as f32, vec![i as f32 + 0.125, -(i as f32)]))
+                .collect();
+            reduce_grads(shards)
+        };
+        let (a, ma) = mk(&[0, 1, 2, 3, 4]);
+        let (b, mb) = mk(&[4, 2, 0, 3, 1]);
+        let (c, mc) = mk(&[1, 3, 0, 4, 2]);
+        assert_eq!(a, b, "tree reduction must not depend on arrival order");
+        assert_eq!(a, c);
+        assert_eq!(ma, mb);
+        assert_eq!(ma, mc);
+    }
+
+    #[test]
+    fn reduction_is_token_weighted_mean() {
+        // two shards, weights 3/4 and 1/4
+        let (combined, metrics) =
+            reduce_grads(vec![shard(0, 3.0, vec![1.0]), shard(1, 1.0, vec![5.0])]);
+        assert!((combined[0][0] - 2.0).abs() < 1e-6, "0.75*1 + 0.25*5 = 2");
+        assert_eq!(metrics[METRIC_N_TOKENS], 4.0);
+        // loss metric is the same weighted mean: 0.75*0 + 0.25*1
+        assert!((metrics[0] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn deregister_requeues_claimed_shards() {
+        let pool = Arc::new(DpPool::new());
+        {
+            let mut st = pool.state.lock().unwrap();
+            st.job = 1;
+            st.expected = 1;
+            st.queue.push_back(Arc::new(ShardTask {
+                shard_idx: 0,
+                entry: "grad_step",
+                params: crate::runtime::ParamSet::with_version(vec![], 0),
+                tokens: HostTensor::i32(vec![1], vec![0]),
+                mask: HostTensor::f32(vec![1], vec![0.0]),
+                adv: HostTensor::f32(vec![1], vec![0.0]),
+                behav: HostTensor::f32(vec![1], vec![0.0]),
+                prox: HostTensor::f32(vec![1], vec![0.0]),
+            }));
+        }
+        let w = pool.register();
+        assert_eq!(pool.workers(), 1);
+        let claimed = pool.try_claim(w.id);
+        assert!(claimed.is_some(), "worker claims the queued shard");
+        assert_eq!(pool.state.lock().unwrap().queue.len(), 0);
+        drop(w); // worker dies mid-shard
+        assert_eq!(pool.workers(), 0);
+        let st = pool.state.lock().unwrap();
+        assert_eq!(st.queue.len(), 1, "claimed shard requeued for the lead");
+        assert!(st.claimed.is_empty());
+    }
+
+    #[test]
+    fn stale_job_completions_are_discarded() {
+        let pool = Arc::new(DpPool::new());
+        pool.state.lock().unwrap().job = 5;
+        pool.complete(9, 4, shard(0, 1.0, vec![1.0])); // job 4 is stale
+        assert!(pool.state.lock().unwrap().done.is_empty());
+        pool.complete(9, 5, shard(0, 1.0, vec![1.0]));
+        assert_eq!(pool.state.lock().unwrap().done.len(), 1);
+        // duplicate shard index for the live job is also discarded
+        pool.complete(9, 5, shard(0, 9.0, vec![2.0]));
+        assert_eq!(pool.state.lock().unwrap().done.len(), 1);
+    }
+}

@@ -113,6 +113,12 @@ pub struct StepMetrics {
     /// tokens consumed per second since training started (the paper's
     /// "effective throughput" of Fig. 4/5c)
     pub effective_tps: f64,
+    /// tokens per second over time spent *inside* ppo_step only — the
+    /// wall-clock variant above dilutes step speed with SFT warmup and
+    /// buffer-wait idle, which would mask a DP rank joining mid-run
+    pub effective_tps_active: f64,
+    /// effective data-parallel degree this step trained at (1 = fused path)
+    pub dp: usize,
 }
 
 #[cfg(test)]

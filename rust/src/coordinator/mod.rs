@@ -10,6 +10,7 @@
 pub mod batching;
 pub mod buffer;
 pub mod controller;
+pub mod dp;
 pub mod evalgen;
 pub mod gate;
 pub mod gen_engine;
@@ -22,6 +23,7 @@ pub mod trace;
 pub mod trainer;
 
 pub use buffer::ReplayBuffer;
+pub use dp::{DpPool, DpWorker};
 pub use gate::StalenessGate;
 pub use gen_engine::GenEngine;
 pub use messages::{GenRequest, GenRouter, StepMetrics, Trajectory};

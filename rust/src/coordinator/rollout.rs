@@ -46,6 +46,7 @@ use crate::runtime::Engine;
 use crate::serve::{Control, ProbeSnapshot, ServeCfg, SocketWorker};
 
 use super::buffer::ReplayBuffer;
+use super::dp::{DpPool, DpWorker};
 use super::gen_engine::GenEngine;
 use super::messages::{GenRequest, GenRouter};
 use super::param_server::ParamServer;
@@ -72,6 +73,10 @@ pub struct RolloutShared {
     /// an idle worker retires into the train role through it, a parked
     /// worker rejoins generation through it. `None` = static fleet.
     pub board: Option<Arc<RoleBoard>>,
+    /// elastic DP plane when `train_dp >= 1` (DESIGN.md §11): a parked
+    /// train-role worker registers here and serves `grad_step` shards of
+    /// the lead trainer's micro-batches until it rejoins generation.
+    pub dp: Option<Arc<DpPool>>,
 }
 
 /// How a worker life ended (errors travel separately as `Err`).
@@ -570,6 +575,11 @@ pub fn run_supervised_rollout_worker(worker_id: usize, engine: Arc<Engine>,
     let last_slot = std::cell::Cell::new(worker_id);
     let life_n = std::cell::Cell::new(0usize);
     let mut slot0 = worker_id;
+    // lazily-built engine holding only the grad_step executables, cached
+    // across park stints: the shared engine serializes each entrypoint
+    // behind a per-entry lock, so DP ranks computing shards on it would
+    // run one at a time — a private compile is what makes them parallel
+    let mut dp_engine: Option<Arc<Engine>> = None;
     loop {
         let res = supervise_replica(&router, &stop, &draining, slot0, max_restarts, {
             let last_slot = &last_slot;
@@ -610,6 +620,37 @@ pub fn run_supervised_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                 // capacity back or the system shuts down. Parked workers
                 // hear no Drain broadcast (their inbox is closed), so the
                 // draining flag is their shutdown signal.
+                //
+                // While parked, register as a DP rank and serve grad_step
+                // shards (DESIGN.md §11) — this is what turns a gen→train
+                // conversion into actual training throughput instead of an
+                // idle device. The rank guard deregisters on every exit
+                // from this arm (rejoin, drain, stop), requeueing any
+                // shard still held so the lead recomputes it.
+                let rank: Option<(DpWorker, Arc<Engine>)> =
+                    shared.dp.as_ref().and_then(|pool| {
+                        if pool.is_closed()
+                            || engine.spec.entry("grad_step").is_err()
+                        {
+                            return None;
+                        }
+                        if dp_engine.is_none() {
+                            match Engine::load_subset(
+                                &engine.spec,
+                                Some(&["grad_step", "grad_step_h"]),
+                            ) {
+                                Ok(e) => dp_engine = Some(Arc::new(e)),
+                                Err(e) => crate::warn_log!(
+                                    "dp",
+                                    "worker {worker_id}: grad_step engine \
+                                     build failed, parking idle: {e:#}"
+                                ),
+                            }
+                        }
+                        dp_engine
+                            .as_ref()
+                            .map(|eng| (pool.register(), Arc::clone(eng)))
+                    });
                 loop {
                     if stop.load(Ordering::Acquire) || draining.load(Ordering::Acquire)
                     {
@@ -633,7 +674,16 @@ pub fn run_supervised_rollout_worker(worker_id: usize, engine: Arc<Engine>,
                         slot0 = slot;
                         break; // serve a fresh life on the revived slot
                     }
-                    std::thread::sleep(Duration::from_millis(2));
+                    match &rank {
+                        // serve one queued shard per poll; back off only
+                        // when the DP queue is empty
+                        Some((r, eng)) if !r.pool_closed() => {
+                            if !r.serve_one(eng) {
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                        }
+                        _ => std::thread::sleep(Duration::from_millis(2)),
+                    }
                 }
             }
             Err(e) => {

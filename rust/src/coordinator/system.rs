@@ -30,6 +30,7 @@ use crate::util::rng::Rng;
 
 use super::buffer::ReplayBuffer;
 use super::controller::{run_controller, ControllerCfg};
+use super::dp::DpPool;
 use super::evalgen;
 use super::gate::StalenessGate;
 use super::param_server::ParamServer;
@@ -201,6 +202,17 @@ impl System {
             TrainerCfg::from_config(cfg),
             cfg.baseline,
         );
+
+        // elastic DP plane (DESIGN.md §11): the lead trainer shards each
+        // PPO micro-batch across this pool; train-role (parked) rollout
+        // workers register as extra ranks while they hold no gen slot
+        let dp_pool = if cfg.train_dp >= 1 {
+            let p = Arc::new(DpPool::new());
+            trainer.set_dp_pool(Arc::clone(&p));
+            Some(p)
+        } else {
+            None
+        };
 
         // --- SFT warmup (before rollout workers start) ------------------
         self.sft_warmup(&mut trainer, cfg.sft_steps, 25)?;
@@ -445,6 +457,7 @@ impl System {
                 trace: Arc::clone(&self.trace),
                 gen_tokens: Arc::clone(&gen_tokens),
                 board: board.clone(),
+                dp: dp_pool.clone(),
             };
             let rcfg = RolloutCfg {
                 interruptible,
@@ -512,6 +525,12 @@ impl System {
         let wall_s = t0.elapsed().as_secs_f64();
         let gen_tokens_total = gen_tokens.load(Ordering::Relaxed);
 
+        // no further ppo_step will run: close the DP plane so parked
+        // train-role workers stop polling for shards and fall through to
+        // their drain path
+        if let Some(p) = &dp_pool {
+            p.close();
+        }
         let join_res = drain_and_join(&router, &buffer, &stop, &draining, handles,
                                       controller_handle, rebalancer_handle);
         // stop the exporters only after the drain: the final JSONL

@@ -27,6 +27,7 @@ use crate::util::stats;
 
 use super::batching::{dynamic_allocate, standard_allocate, MicroBatch};
 
+use super::dp::{self, DpPool, ShardOutput, ShardTask};
 use super::messages::{StepMetrics, Trajectory};
 use super::param_server::ParamServer;
 use super::trace::{Event, Trace};
@@ -38,7 +39,14 @@ pub struct Trainer {
     cfg: TrainerCfg,
     estimator: AdvantageEstimator,
     has_half: bool,
+    /// the artifact carries the split grad_step/apply_grads pair
+    has_dp_split: bool,
+    dp_pool: Option<Arc<DpPool>>,
+    dp_warned: bool,
     start: Instant,
+    /// wall time spent inside ppo_step only — excludes SFT warmup and
+    /// buffer-wait idle, so `*_active` throughput reflects step speed
+    active_s: f64,
     pub tokens_consumed_total: u64,
 }
 
@@ -50,6 +58,10 @@ pub struct TrainerCfg {
     pub decoupled: bool,
     pub dynamic_batching: bool,
     pub token_budget: usize,
+    /// base DP degree counting the lead (0 = legacy fused train_step)
+    pub train_dp: usize,
+    /// elastic ceiling the DP pool may raise the degree to (0 = train_dp)
+    pub train_dp_max: usize,
 }
 
 impl TrainerCfg {
@@ -61,6 +73,8 @@ impl TrainerCfg {
             decoupled: c.decoupled,
             dynamic_batching: c.dynamic_batching,
             token_budget: c.token_budget,
+            train_dp: c.train_dp,
+            train_dp_max: c.train_dp_max,
         }
     }
 }
@@ -79,6 +93,8 @@ impl Trainer {
     pub fn new(engine: Arc<Engine>, state: TrainState, server: Arc<ParamServer>,
                cfg: TrainerCfg, baseline: BaselineCfg) -> Self {
         let has_half = engine.entry_spec("train_step_h").is_ok();
+        let has_dp_split = engine.entry_spec("grad_step").is_ok()
+            && engine.entry_spec("apply_grads").is_ok();
         let estimator = AdvantageEstimator {
             baseline: match baseline {
                 BaselineCfg::GroupMean => Baseline::GroupMean,
@@ -94,9 +110,21 @@ impl Trainer {
             cfg,
             estimator,
             has_half,
+            has_dp_split,
+            dp_pool: None,
+            dp_warned: false,
             start: Instant::now(),
+            active_s: 0.0,
             tokens_consumed_total: 0,
         }
+    }
+
+    /// Attach the elastic DP pool (DESIGN.md §11): parked train-role
+    /// workers registered there serve `grad_step` shards of every
+    /// subsequent ppo_step, raising the effective degree up to
+    /// `train_dp_max`.
+    pub fn set_dp_pool(&mut self, pool: Arc<DpPool>) {
+        self.dp_pool = Some(pool);
     }
 
     /// Run one PPO step over a popped batch; publishes the new version.
@@ -145,49 +173,32 @@ impl Trainer {
             tensors.iter().map(|mt| mt.behav.clone()).collect()
         };
 
-        // 5. sequential minibatch updates
+        // 5. sequential minibatch updates — fused single-device path, or
+        //    the DP split (shard → grad_step on the pool → fixed-tree
+        //    reduce → one apply_grads) when train_dp >= 1 (DESIGN.md §11)
         let lr = HostTensor::scalar_f32(self.cfg.lr as f32).to_literal()?;
+        let use_dp = self.cfg.train_dp >= 1 && self.has_dp_split;
+        if self.cfg.train_dp >= 1 && !self.has_dp_split && !self.dp_warned {
+            crate::warn_log!(
+                "trainer",
+                "train_dp={} but this artifact has no grad_step/apply_grads \
+                 pair — falling back to the fused train_step path \
+                 (regenerate artifacts: python -m compile.aot)",
+                self.cfg.train_dp
+            );
+            self.dp_warned = true;
+        }
         let mut agg = MetricAgg::default();
-        for (mt, px) in tensors.iter().zip(&prox) {
-            let entry = if mt.half { "train_step_h" } else { "train_step" };
-            let tokens_l = mt.tokens.to_literal()?;
-            let mask_l = mt.mask.to_literal()?;
-            let adv_l = mt.adv.to_literal()?;
-            let behav_l = mt.behav.to_literal()?;
-            let prox_l = px.to_literal()?;
-            let step_l = HostTensor::scalar_i32(self.state.step).to_literal()?;
-
-            let mut inputs: Vec<&xla::Literal> = self.state.params.refs();
-            for m in &self.state.m {
-                inputs.push(m.lit());
-            }
-            for v in &self.state.v {
-                inputs.push(v.lit());
-            }
-            inputs.push(&step_l);
-            inputs.push(&tokens_l);
-            inputs.push(&mask_l);
-            inputs.push(&adv_l);
-            inputs.push(&behav_l);
-            inputs.push(&prox_l);
-            inputs.push(&lr);
-            let mut outs = self.engine.run(entry, &inputs).context(entry)?;
-
-            // outputs: params.., m.., v.., step, metrics
-            let metrics_l = outs.pop().unwrap();
-            let _step_l = outs.pop().unwrap();
-            let n = spec.n_params();
-            let v_new = outs.split_off(2 * n);
-            let m_new = outs.split_off(n);
-            let p_new = outs;
-            self.state.step += 1;
-            self.state.m = m_new;
-            self.state.v = v_new;
-            // keep the version number until the whole PPO step completes
-            self.state.params = ParamSet::with_version(p_new, version);
-
-            let met = HostTensor::from_literal(metrics_l.lit())?;
-            agg.add(met.as_f32()?, mt.n_tokens);
+        let mut dp_used = 1usize;
+        for ((mb, mt), px) in micro.iter().zip(&tensors).zip(&prox) {
+            let metrics = if use_dp {
+                let dp_eff = self.dp_degree(mb.indices.len());
+                dp_used = dp_used.max(dp_eff);
+                self.dp_update(&batch, &advs, mb, mt, px, &lr, version, dp_eff)?
+            } else {
+                self.fused_update(mt, px, &lr, version)?
+            };
+            agg.add(&metrics, mt.n_tokens);
         }
 
         // publish version+1
@@ -210,12 +221,18 @@ impl Trainer {
             .collect();
         let clens: Vec<f64> = batch.iter().map(|t| t.completion_len() as f64).collect();
         let elapsed_total = self.start.elapsed().as_secs_f64();
+        // active time counts ppo_step wall only: the wall-clock variant
+        // below dilutes throughput with SFT warmup and buffer-wait idle,
+        // which masks step-speed changes (e.g. a DP rank joining)
+        self.active_s += t0.elapsed().as_secs_f64();
+        let tps_active = self.tokens_consumed_total as f64 / self.active_s.max(1e-9);
         if crate::util::metrics::enabled() {
             crate::util::metrics::observe("areal_train_step_seconds",
                                           t0.elapsed().as_secs_f64());
             crate::util::metrics::inc("areal_train_tokens_total", total_tokens as u64);
             crate::util::metrics::set("areal_train_tokens_per_s",
                                       self.tokens_consumed_total as f64 / elapsed_total);
+            crate::util::metrics::set("areal_train_tokens_per_s_active", tps_active);
             // staleness distribution of the batch actually consumed — the
             // Eq. 3 bound shows up as this histogram's hard right edge
             for &s in &stale {
@@ -244,6 +261,8 @@ impl Trainer {
             mean_completion_len: stats::mean(&clens),
             wall_s: t0.elapsed().as_secs_f64(),
             effective_tps: self.tokens_consumed_total as f64 / elapsed_total,
+            effective_tps_active: tps_active,
+            dp: dp_used,
         })
     }
 
@@ -285,19 +304,28 @@ impl Trainer {
 
     fn build_micro(&self, batch: &[Trajectory], advs: &[f32], mb: &MicroBatch,
                    t_full: usize) -> Result<MicroTensors> {
-        let spec = &self.engine.spec;
-        let bt = spec.config.train_batch;
         let half = self.has_half && self.cfg.dynamic_batching && mb.max_len <= t_full / 2;
         let t = if half { t_full / 2 } else { t_full };
+        self.build_micro_at(batch, advs, &mb.indices, t)
+    }
+
+    /// Pack trajectory rows into dense `[Bt, t]` tensors at an explicit
+    /// sequence length — shard tasks force the parent micro-batch's `t`
+    /// rather than re-deciding the half-context route per shard.
+    fn build_micro_at(&self, batch: &[Trajectory], advs: &[f32],
+                      indices: &[usize], t: usize) -> Result<MicroTensors> {
+        let spec = &self.engine.spec;
+        let bt = spec.config.train_batch;
+        let half = t < spec.config.max_seq;
         let mut tokens = vec![0i32; bt * t];
         let mut mask = vec![0f32; bt * t];
         let mut adv = vec![0f32; bt * t];
         let mut behav = vec![0f32; bt * t];
-        if mb.indices.len() > bt {
-            bail!("micro-batch has {} rows, executable takes {bt}", mb.indices.len());
+        if indices.len() > bt {
+            bail!("micro-batch has {} rows, executable takes {bt}", indices.len());
         }
         let mut n_tokens = 0usize;
-        for (row, &idx) in mb.indices.iter().enumerate() {
+        for (row, &idx) in indices.iter().enumerate() {
             let tr = &batch[idx];
             if tr.tokens.len() > t {
                 bail!("sequence of len {} routed to T={t} variant", tr.tokens.len());
@@ -329,6 +357,195 @@ impl Trainer {
         inputs.push(&tokens_l);
         let outs = self.engine.run(entry, &inputs).context(entry)?;
         HostTensor::from_literal(outs[0].lit())
+    }
+
+    /// Legacy fused path: one `train_step` call computes gradients and
+    /// applies the Adam update in a single executable.
+    fn fused_update(&mut self, mt: &MicroTensors, px: &HostTensor,
+                    lr_l: &xla::Literal, version: u64) -> Result<Vec<f32>> {
+        let entry = if mt.half { "train_step_h" } else { "train_step" };
+        let tokens_l = mt.tokens.to_literal()?;
+        let mask_l = mt.mask.to_literal()?;
+        let adv_l = mt.adv.to_literal()?;
+        let behav_l = mt.behav.to_literal()?;
+        let prox_l = px.to_literal()?;
+        let step_l = HostTensor::scalar_i32(self.state.step).to_literal()?;
+
+        let mut inputs: Vec<&xla::Literal> = self.state.params.refs();
+        for m in &self.state.m {
+            inputs.push(m.lit());
+        }
+        for v in &self.state.v {
+            inputs.push(v.lit());
+        }
+        inputs.push(&step_l);
+        inputs.push(&tokens_l);
+        inputs.push(&mask_l);
+        inputs.push(&adv_l);
+        inputs.push(&behav_l);
+        inputs.push(&prox_l);
+        inputs.push(lr_l);
+        let mut outs = self.engine.run(entry, &inputs).context(entry)?;
+
+        // outputs: params.., m.., v.., step, metrics
+        let metrics_l = outs.pop().unwrap();
+        let _step_l = outs.pop().unwrap();
+        let n = self.engine.spec.n_params();
+        let v_new = outs.split_off(2 * n);
+        let m_new = outs.split_off(n);
+        let p_new = outs;
+        self.state.step += 1;
+        self.state.m = m_new;
+        self.state.v = v_new;
+        // keep the version number until the whole PPO step completes
+        self.state.params = ParamSet::with_version(p_new, version);
+
+        let met = HostTensor::from_literal(metrics_l.lit())?;
+        Ok(met.as_f32()?.to_vec())
+    }
+
+    /// Effective DP degree for a micro-batch of `rows` sequences: the
+    /// configured base, raised by registered pool workers up to the
+    /// elastic ceiling, never more than one rank per row.
+    fn dp_degree(&self, rows: usize) -> usize {
+        let base = self.cfg.train_dp.max(1);
+        let ceil = if self.cfg.train_dp_max == 0 {
+            base
+        } else {
+            self.cfg.train_dp_max.max(base)
+        };
+        let avail = 1 + self.dp_pool.as_ref().map(|p| p.workers()).unwrap_or(0);
+        base.max(avail.min(ceil)).min(rows.max(1))
+    }
+
+    /// DP split path for one micro-batch: shard rows `dp_eff` ways, run
+    /// `grad_step` across the pool (the lead serves unclaimed shards),
+    /// tree-reduce the gradients in fixed order, and apply one Adam
+    /// update. `grad_norm` in the returned metrics is the combined
+    /// pre-clip norm from `apply_grads` — the same value the fused path
+    /// reports.
+    #[allow(clippy::too_many_arguments)]
+    fn dp_update(&mut self, batch: &[Trajectory], advs: &[f32], mb: &MicroBatch,
+                 mt: &MicroTensors, px: &HostTensor, lr_l: &xla::Literal,
+                 version: u64, dp_eff: usize) -> Result<Vec<f32>> {
+        let tasks = self.build_shard_tasks(batch, advs, mb, mt, px, dp_eff)?;
+        let outs: Vec<ShardOutput> = if let Some(pool) = &self.dp_pool {
+            pool.run_job(tasks, &self.engine)?
+        } else {
+            let mut outs = Vec::with_capacity(tasks.len());
+            for t in &tasks {
+                outs.push(dp::run_shard(&self.engine, t)?);
+            }
+            outs
+        };
+        let (grads, mut metrics) = dp::reduce_grads(outs);
+        let gnorm = self.apply_grads(&grads, lr_l, version)?;
+        if metrics.len() > dp::METRIC_GRAD_NORM {
+            metrics[dp::METRIC_GRAD_NORM] = gnorm;
+        }
+        Ok(metrics)
+    }
+
+    /// Split one micro-batch into `dp_eff` balanced shard tasks at the
+    /// parent's sequence length. With one shard the parent tensors are
+    /// reused as-is (the bitwise dp=1 guarantee); otherwise the rows are
+    /// re-packed per shard and the already-computed π_prox rows are
+    /// scattered host-side, so the prox forward pass runs once per
+    /// micro-batch no matter the degree.
+    fn build_shard_tasks(&self, batch: &[Trajectory], advs: &[f32],
+                         mb: &MicroBatch, mt: &MicroTensors, px: &HostTensor,
+                         dp_eff: usize) -> Result<Vec<ShardTask>> {
+        let entry: &'static str = if mt.half { "grad_step_h" } else { "grad_step" };
+        let params = Arc::clone(&self.state.params);
+        if dp_eff <= 1 {
+            return Ok(vec![ShardTask {
+                shard_idx: 0,
+                entry,
+                params,
+                tokens: mt.tokens.clone(),
+                mask: mt.mask.clone(),
+                adv: mt.adv.clone(),
+                behav: mt.behav.clone(),
+                prox: px.clone(),
+            }]);
+        }
+        let spec = &self.engine.spec;
+        let bt = spec.config.train_batch;
+        let t_full = spec.config.max_seq;
+        let t = if mt.half { t_full / 2 } else { t_full };
+        // Algorithm 1 with an unbounded budget and k_min = dp_eff opens
+        // exactly dp_eff batches and fills them fewest-tokens-first —
+        // reused here as the balanced row split
+        let row_lens: Vec<usize> =
+            mb.indices.iter().map(|&i| batch[i].tokens.len()).collect();
+        let split = dynamic_allocate(&row_lens, usize::MAX, dp_eff, bt);
+        let px_data = px.as_f32()?;
+        let mut tasks = Vec::with_capacity(split.len());
+        for (shard_idx, s) in split.iter().enumerate() {
+            // s.indices are row positions within the parent micro-batch
+            let indices: Vec<usize> =
+                s.indices.iter().map(|&p| mb.indices[p]).collect();
+            let smt = self.build_micro_at(batch, advs, &indices, t)?;
+            // scatter the parent's prox rows into shard row order
+            let mut prox = vec![0f32; bt * t];
+            for (row, &p) in s.indices.iter().enumerate() {
+                prox[row * t..(row + 1) * t]
+                    .copy_from_slice(&px_data[p * t..(p + 1) * t]);
+            }
+            tasks.push(ShardTask {
+                shard_idx,
+                entry,
+                params: Arc::clone(&params),
+                tokens: smt.tokens,
+                mask: smt.mask,
+                adv: smt.adv,
+                behav: smt.behav,
+                prox: HostTensor::f32(vec![bt, t], prox),
+            });
+        }
+        Ok(tasks)
+    }
+
+    /// One Adam update from already-combined gradients (the `apply_grads`
+    /// artifact: clip → moments → params). Returns the combined pre-clip
+    /// gradient norm.
+    fn apply_grads(&mut self, grads: &[Vec<f32>], lr_l: &xla::Literal,
+                   version: u64) -> Result<f32> {
+        let step_l = HostTensor::scalar_i32(self.state.step).to_literal()?;
+        let mut grad_ls = Vec::with_capacity(grads.len());
+        for ((_, shape), g) in self.engine.spec.params.iter().zip(grads) {
+            grad_ls.push(HostTensor::f32(shape.clone(), g.clone()).to_literal()?);
+        }
+        let mut inputs: Vec<&xla::Literal> = self.state.params.refs();
+        for m in &self.state.m {
+            inputs.push(m.lit());
+        }
+        for v in &self.state.v {
+            inputs.push(v.lit());
+        }
+        inputs.push(&step_l);
+        for g in &grad_ls {
+            inputs.push(g);
+        }
+        inputs.push(lr_l);
+        let mut outs =
+            self.engine.run("apply_grads", &inputs).context("apply_grads")?;
+
+        // outputs: params.., m.., v.., step, grad_norm
+        let gnorm_l = outs.pop().unwrap();
+        let _step_l = outs.pop().unwrap();
+        let n = self.engine.spec.n_params();
+        let v_new = outs.split_off(2 * n);
+        let m_new = outs.split_off(n);
+        let p_new = outs;
+        self.state.step += 1;
+        self.state.m = m_new;
+        self.state.v = v_new;
+        // keep the version number until the whole PPO step completes
+        self.state.params = ParamSet::with_version(p_new, version);
+
+        let gnorm_t = HostTensor::from_literal(gnorm_l.lit())?;
+        Ok(gnorm_t.as_f32()?.first().copied().unwrap_or(f32::NAN))
     }
 }
 

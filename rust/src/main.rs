@@ -84,12 +84,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
     let mut w = areal::util::logging::CsvWriter::create(
         out_dir.join("metrics.csv"),
         &["step", "version", "loss", "reward", "correct", "kl", "clip_frac",
-          "staleness", "interrupted", "tokens", "eff_tps"],
+          "staleness", "interrupted", "tokens", "eff_tps", "eff_tps_active",
+          "dp"],
     )?;
     for m in &report.steps {
         w.row(&[m.step as f64, m.version as f64, m.loss, m.reward_mean,
                 m.correct_frac, m.approx_kl, m.clip_frac, m.mean_staleness,
-                m.interrupted_frac, m.tokens_consumed as f64, m.effective_tps])?;
+                m.interrupted_frac, m.tokens_consumed as f64, m.effective_tps,
+                m.effective_tps_active, m.dp as f64])?;
     }
     w.flush()?;
     std::fs::write(out_dir.join("trace.csv"), report.trace.to_csv())?;

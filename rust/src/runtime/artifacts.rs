@@ -270,7 +270,11 @@ mod tests {
         let m = Manifest::load(&artifacts_dir_or_skip!()).expect("manifest load");
         let tier = m.tier("nano").unwrap();
         assert_eq!(tier.config.vocab, 48);
-        assert_eq!(tier.entrypoints.len(), 9);
+        assert_eq!(tier.entrypoints.len(), 12);
+        // the DP split pair exists alongside the fused path
+        assert!(tier.entry("grad_step").is_ok());
+        assert!(tier.entry("grad_step_h").is_ok());
+        assert!(tier.entry("apply_grads").is_ok());
         let dec = tier.entry("decode").unwrap();
         // decode outputs start with toks/logps
         assert_eq!(dec.outputs[0].name, "toks");

@@ -1,0 +1,325 @@
+//! Elastic DP training equivalence (DESIGN.md §11): the split
+//! grad_step → tree-reduce → apply_grads path must train the *same model*
+//! as the legacy fused `train_step` — bitwise at dp=1, within float
+//! tolerance at dp>1 — and must survive a rank dying mid-step with zero
+//! lost work. Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use areal::config::BaselineCfg;
+use areal::coordinator::dp::{self, ShardOutput, ShardTask};
+use areal::coordinator::{DpPool, ParamServer, Trace, Trainer, TrainerCfg, Trajectory};
+use areal::runtime::artifacts::test_artifacts_dir;
+use areal::runtime::{Engine, HostTensor, Manifest, ParamSet, TrainState};
+use areal::tasks::Prompt;
+
+macro_rules! require_artifacts {
+    () => {
+        if test_artifacts_dir().is_none() {
+            eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn nano_engine() -> Arc<Engine> {
+    let dir = test_artifacts_dir().expect("gated by require_artifacts!");
+    let m = Manifest::load(&dir).expect("manifest load");
+    let spec = m.tier("nano").expect("nano tier");
+    Arc::new(Engine::load(spec).expect("engine load"))
+}
+
+/// Two trainers must start from identical state to be comparable, so the
+/// seed is fixed; they share one engine so every executable run goes
+/// through the same compiled artifact.
+fn make_trainer(engine: &Arc<Engine>, train_dp: usize, train_dp_max: usize) -> Trainer {
+    let params = ParamSet::init(engine, [7, 0x9e37]).expect("init params");
+    let server = ParamServer::new(Arc::clone(&params));
+    let state = TrainState::fresh(&engine.spec, params).expect("fresh state");
+    Trainer::new(
+        Arc::clone(engine),
+        state,
+        server,
+        TrainerCfg {
+            global_batch: 8,
+            ppo_minibatches: 2,
+            lr: 1e-2,
+            decoupled: true,
+            dynamic_batching: true,
+            token_budget: 256,
+            train_dp,
+            train_dp_max,
+        },
+        BaselineCfg::GroupMean,
+    )
+}
+
+/// Deterministic synthetic batch: 4 GRPO groups of 2, mixed rewards so
+/// group-mean advantages are non-zero, varied lengths so the shard split
+/// has real balancing to do. Nano tier: vocab 48, max_seq 64.
+fn synth_batch() -> Vec<Trajectory> {
+    let mut x: u64 = 0x243F_6A88_85A3_08D3;
+    let mut rng = move || {
+        x = x
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        (x >> 33) as u32
+    };
+    (0..8usize)
+        .map(|i| {
+            let prompt_len = 4;
+            let clen = 8 + (i * 5) % 17;
+            let tokens: Vec<i32> = (0..prompt_len + clen)
+                .map(|_| (rng() % 46 + 1) as i32)
+                .collect();
+            let behav_logp: Vec<f32> =
+                (0..clen).map(|_| -0.05 - (rng() % 100) as f32 * 0.01).collect();
+            Trajectory {
+                prompt: Prompt {
+                    text: format!("synthetic {i}"),
+                    meta: String::new(),
+                    level: 1,
+                    group: (i / 2) as u64,
+                },
+                tokens,
+                prompt_len,
+                behav_logp,
+                segments: vec![(0, clen)],
+                version_born: 0,
+                reward: if i % 2 == 0 { 5.0 } else { -5.0 },
+                correct: i % 2 == 0,
+                truncated: false,
+                worker: 0,
+                span: Default::default(),
+            }
+        })
+        .collect()
+}
+
+fn params_f32(t: &Trainer) -> Vec<Vec<f32>> {
+    t.state
+        .params
+        .tensors
+        .iter()
+        .map(|l| {
+            HostTensor::from_literal(l.lit())
+                .expect("host readback")
+                .as_f32()
+                .expect("f32 params")
+                .to_vec()
+        })
+        .collect()
+}
+
+fn max_abs_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    let mut worst = 0f32;
+    for (ta, tb) in a.iter().zip(b) {
+        assert_eq!(ta.len(), tb.len(), "param tensor shape mismatch");
+        for (&x, &y) in ta.iter().zip(tb) {
+            worst = worst.max((x - y).abs());
+        }
+    }
+    worst
+}
+
+fn bits_equal(a: &[Vec<f32>], b: &[Vec<f32>]) -> bool {
+    a.iter().zip(b).all(|(ta, tb)| {
+        ta.len() == tb.len()
+            && ta.iter().zip(tb).all(|(x, y)| x.to_bits() == y.to_bits())
+    })
+}
+
+#[test]
+fn dp1_is_bitwise_identical_to_fused() {
+    require_artifacts!();
+    let engine = nano_engine();
+    let mut fused = make_trainer(&engine, 0, 0);
+    let mut dp1 = make_trainer(&engine, 1, 0);
+    let trace = Trace::new(false);
+    let mf = fused.ppo_step(synth_batch(), 0, &trace).expect("fused step");
+    let md = dp1.ppo_step(synth_batch(), 0, &trace).expect("dp=1 step");
+    assert_eq!(md.dp, 1);
+    // single shard: weight exactly 1.0, no reduction arithmetic — the
+    // metric vector and the updated parameters must match to the bit
+    for (name, a, b) in [
+        ("loss", mf.loss, md.loss),
+        ("clip_frac", mf.clip_frac, md.clip_frac),
+        ("ratio_mean", mf.ratio_mean, md.ratio_mean),
+        ("approx_kl", mf.approx_kl, md.approx_kl),
+        ("grad_norm", mf.grad_norm, md.grad_norm),
+        ("w_mean", mf.w_mean, md.w_mean),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "{name}: fused {a} vs dp1 {b}");
+    }
+    assert_eq!(mf.tokens_consumed, md.tokens_consumed);
+    assert!(
+        bits_equal(&params_f32(&fused), &params_f32(&dp1)),
+        "dp=1 must produce bitwise-identical parameters to the fused path"
+    );
+}
+
+#[test]
+fn dp2_matches_fused_within_tolerance() {
+    require_artifacts!();
+    let engine = nano_engine();
+    let mut fused = make_trainer(&engine, 0, 0);
+    let mut dp2 = make_trainer(&engine, 2, 0);
+    let trace = Trace::new(false);
+    let mf = fused.ppo_step(synth_batch(), 0, &trace).expect("fused step");
+    let md = dp2.ppo_step(synth_batch(), 0, &trace).expect("dp=2 step");
+    assert_eq!(md.dp, 2, "both minibatches should shard 2-way");
+    // sharded grads are locally normalized then token-weight combined —
+    // same mathematical mean, different float summation order
+    assert!(
+        (mf.loss - md.loss).abs() < 1e-3,
+        "loss: fused {} vs dp2 {}",
+        mf.loss,
+        md.loss
+    );
+    assert!(
+        (mf.grad_norm - md.grad_norm).abs() < 1e-3 * mf.grad_norm.abs().max(1.0),
+        "grad_norm: fused {} vs dp2 {}",
+        mf.grad_norm,
+        md.grad_norm
+    );
+    assert!(
+        (mf.approx_kl - md.approx_kl).abs() < 1e-3,
+        "approx_kl: fused {} vs dp2 {}",
+        mf.approx_kl,
+        md.approx_kl
+    );
+    assert_eq!(mf.tokens_consumed, md.tokens_consumed);
+    let diff = max_abs_diff(&params_f32(&fused), &params_f32(&dp2));
+    assert!(
+        diff < 1e-4,
+        "dp=2 parameters drift {diff} from fused after one step"
+    );
+}
+
+#[test]
+fn worker_loss_mid_step_loses_nothing() {
+    require_artifacts!();
+    let engine = nano_engine();
+    let trace = Trace::new(false);
+
+    // reference: same degree, no pool — lead computes every shard inline
+    let mut reference = make_trainer(&engine, 2, 0);
+    let mr = reference.ppo_step(synth_batch(), 0, &trace).expect("ref step");
+
+    // pooled run with a rank whose engine cannot run grad_step: every
+    // shard it claims fails and is requeued, and the lead recomputes
+    let mut pooled = make_trainer(&engine, 2, 4);
+    let pool = Arc::new(DpPool::new());
+    pooled.set_dp_pool(Arc::clone(&pool));
+    let broken =
+        Engine::load_subset(&engine.spec, Some(&["init"])).expect("subset engine");
+    let pool2 = Arc::clone(&pool);
+    let handle = std::thread::spawn(move || {
+        let rank = pool2.register();
+        let mut attempts = 0usize;
+        // bounded attempts so the failing rank cannot starve the lead
+        while !rank.pool_closed() && attempts < 8 {
+            if rank.serve_one(&broken) {
+                attempts += 1;
+            } else {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+        }
+        attempts
+    });
+    // wait for the rank to register so dp_degree sees it
+    for _ in 0..1000 {
+        if pool.workers() == 1 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(pool.workers(), 1, "rank never registered");
+    let mp = pooled.ppo_step(synth_batch(), 0, &trace).expect("pooled step");
+    pool.close();
+    let attempts = handle.join().expect("worker thread");
+    eprintln!("broken rank claimed {attempts} shards (all requeued)");
+
+    // zero loss: every shard was computed (by the lead, after requeue) and
+    // the result is identical to the no-pool run — shard set, reduction
+    // order, and engine are all the same
+    assert_eq!(mp.dp, mr.dp);
+    assert_eq!(mp.tokens_consumed, mr.tokens_consumed);
+    assert_eq!(
+        mp.loss.to_bits(),
+        mr.loss.to_bits(),
+        "loss: pooled {} vs reference {}",
+        mp.loss,
+        mr.loss
+    );
+    assert_eq!(mp.grad_norm.to_bits(), mr.grad_norm.to_bits());
+    assert!(
+        bits_equal(&params_f32(&pooled), &params_f32(&reference)),
+        "a dying rank must not change the trained model"
+    );
+}
+
+#[test]
+fn tree_reduction_is_arrival_order_invariant_on_real_grads() {
+    require_artifacts!();
+    let dir = test_artifacts_dir().expect("gated");
+    let m = Manifest::load(&dir).expect("manifest load");
+    let spec = m.tier("nano").expect("nano tier");
+    let engine =
+        Engine::load_subset(spec, Some(&["init", "grad_step"])).expect("engine");
+    let params = ParamSet::init(&engine, [3, 5]).expect("init");
+    let bt = engine.spec.config.train_batch;
+    let t = engine.spec.config.max_seq;
+
+    // three hand-built shards with different contents and token counts
+    let mk = |idx: usize| -> ShardTask {
+        let mut tokens = vec![0i32; bt * t];
+        let mut mask = vec![0f32; bt * t];
+        let mut adv = vec![0f32; bt * t];
+        let mut behav = vec![0f32; bt * t];
+        let mut prox = vec![0f32; bt * t];
+        for row in 0..2usize {
+            let len = 12 + 3 * idx + row;
+            for pos in 0..len {
+                tokens[row * t + pos] = ((pos * 7 + idx * 13 + row * 29) % 46 + 1) as i32;
+            }
+            for pos in 4..len {
+                mask[row * t + pos] = 1.0;
+                adv[row * t + pos] = 0.5 - idx as f32 * 0.25;
+                behav[row * t + pos] = -0.3;
+                prox[row * t + pos] = -0.25;
+            }
+        }
+        ShardTask {
+            shard_idx: idx,
+            entry: "grad_step",
+            params: Arc::clone(&params),
+            tokens: HostTensor::i32(vec![bt, t], tokens),
+            mask: HostTensor::f32(vec![bt, t], mask),
+            adv: HostTensor::f32(vec![bt, t], adv),
+            behav: HostTensor::f32(vec![bt, t], behav),
+            prox: HostTensor::f32(vec![bt, t], prox),
+        }
+    };
+    let run = |idx: usize| dp::run_shard(&engine, &mk(idx)).expect("run_shard");
+    let reduce_in_order = |order: &[usize]| -> (Vec<Vec<f32>>, Vec<f32>) {
+        let shards: Vec<ShardOutput> = order.iter().map(|&i| run(i)).collect();
+        dp::reduce_grads(shards)
+    };
+    let (ga, ma) = reduce_in_order(&[0, 1, 2]);
+    let (gb, mb) = reduce_in_order(&[2, 0, 1]);
+    let (gc, mc) = reduce_in_order(&[1, 2, 0]);
+    assert!(
+        bits_equal(&ga, &gb) && bits_equal(&ga, &gc),
+        "combined gradient must be bitwise independent of arrival order"
+    );
+    assert_eq!(
+        ma.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        mb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    assert_eq!(
+        ma.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        mc.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    assert!(ma[dp::METRIC_N_TOKENS] > 0.0, "shards carried trained tokens");
+}

@@ -25,7 +25,8 @@ fn direction(key: &str) -> Option<bool> {
         // higher is better
         "savings" | "hit_rate" | "speedup" | "effective_tps"
         | "effective_tps_nocache" | "areal_tps" | "sync_tps"
-        | "gen_tps_interruptible" | "gen_tps_drain" => Some(true),
+        | "gen_tps_interruptible" | "gen_tps_drain" | "batches_per_s"
+        | "effective_tps_active" => Some(true),
         // lower is better
         "computed_tokens" | "computed_tokens_nocache" | "areal_hours"
         | "sync_hours" => Some(false),
@@ -52,7 +53,7 @@ fn record_key(r: &Json) -> String {
             Json::Num(n)
                 if matches!(
                     k.as_str(),
-                    "group_size" | "replicas" | "gpus" | "nodes"
+                    "group_size" | "replicas" | "gpus" | "nodes" | "train_gpus"
                 ) =>
             {
                 parts.push(format!("{k}={n}"))
