@@ -28,6 +28,7 @@ fn traj(version: u64, group: u64, len: usize) -> Trajectory {
         correct: true,
         truncated: false,
         worker: 0,
+        span: Default::default(),
     }
 }
 

@@ -248,7 +248,7 @@ fn run_transport_fleet(socket: bool, replicas: usize, groups: usize,
             let router = Arc::new(Router::new_with(transports, cfg));
             for (w, t) in endpoints.iter().enumerate() {
                 let weak = Arc::downgrade(&router);
-                t.set_pull_fn(Box::new(move |epoch, max_n| match weak.upgrade() {
+                t.set_pull_fn(Arc::new(move |epoch, max_n| match weak.upgrade() {
                     Some(r) => r.pull_at(w, epoch, max_n),
                     None => Pulled { reqs: Vec::new(), stolen: None },
                 }));

@@ -24,6 +24,7 @@ pub struct MicroBatch {
 /// Algorithm 1. `lens[i]` = token length of sequence i; `capacity` = C;
 /// `k_min` = minimum number of micro-batches; `max_rows` = hard per-batch
 /// sequence cap (the executable's fixed row count).
+// areal-lint: allow(index, reason="indices come from the allocation loop over the same buffers")
 pub fn dynamic_allocate(lens: &[usize], capacity: usize, k_min: usize,
                         max_rows: usize) -> Vec<MicroBatch> {
     assert!(max_rows > 0);
@@ -98,7 +99,7 @@ pub fn padded_cost(batches: &[MicroBatch], variants: &[usize], rows: usize) -> u
                 .iter()
                 .find(|&&v| v >= b.max_len)
                 .copied()
-                .unwrap_or(*variants.last().unwrap());
+                .unwrap_or(*variants.last().unwrap()); // areal-lint: allow(panic, reason="variants is validated non-empty at config load")
             rows * t
         })
         .sum()

@@ -12,6 +12,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use super::messages::Trajectory;
+use crate::util::sync::{CondvarExt, MutexExt};
 
 #[derive(Debug, Default)]
 struct Inner {
@@ -40,7 +41,7 @@ impl ReplayBuffer {
 
     /// Insert a finished trajectory, keeping oldest-first order.
     pub fn push(&self, t: Trajectory) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         if g.closed {
             return;
         }
@@ -60,7 +61,7 @@ impl ReplayBuffer {
     /// Blocking pop of exactly `n` oldest trajectories. Returns None if the
     /// buffer is closed before `n` are available.
     pub fn pop_batch(&self, n: usize) -> Option<Vec<Trajectory>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.plock();
         loop {
             if g.items.len() >= n {
                 g.popped += n as u64;
@@ -71,15 +72,14 @@ impl ReplayBuffer {
             }
             let (g2, _timeout) = self
                 .ready
-                .wait_timeout(g, Duration::from_millis(100))
-                .unwrap();
+                .pwait_timeout(g, Duration::from_millis(100));
             g = g2;
         }
     }
 
     /// Non-blocking size.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.inner.plock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -87,12 +87,12 @@ impl ReplayBuffer {
     }
 
     pub fn pushed(&self) -> u64 {
-        self.inner.lock().unwrap().pushed
+        self.inner.plock().pushed
     }
 
     /// Close: unblock any waiting trainer (used at shutdown).
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.inner.plock().closed = true;
         self.ready.notify_all();
     }
 }
@@ -115,6 +115,7 @@ mod tests {
             correct: true,
             truncated: false,
             worker: 0,
+            span: Default::default(),
         }
     }
 

@@ -39,6 +39,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::runtime::{Engine, HostTensor, ParamSet};
+use crate::util::sync::{CondvarExt, MutexExt};
 
 /// Everything a DP rank needs to run `grad_step` on one shard: the
 /// step-start parameters and the shard's dense `[Bt, T]` tensors.
@@ -105,11 +106,12 @@ pub const METRIC_N_TOKENS: usize = 7;
 /// Metrics are token-weighted means (matching the trainer's `MetricAgg`)
 /// except `grad_norm`, which is left as the first shard's local value for
 /// the caller to overwrite, and `n_tokens`, which sums.
+// areal-lint: allow(index, reason="metric slots form a fixed-arity array indexed by const ids")
 pub fn reduce_grads(mut shards: Vec<ShardOutput>) -> (Vec<Vec<f32>>, Vec<f32>) {
     assert!(!shards.is_empty(), "reduce_grads on zero shards");
     shards.sort_by_key(|s| s.shard_idx);
     if shards.len() == 1 {
-        let s = shards.pop().unwrap();
+        let s = shards.pop().unwrap(); // areal-lint: allow(panic, reason="pop follows the non-empty assert above")
         return (s.grads, s.metrics);
     }
     let total: f32 = shards
@@ -144,7 +146,7 @@ pub fn reduce_grads(mut shards: Vec<ShardOutput>) -> (Vec<Vec<f32>>, Vec<f32>) {
         }
         level = next;
     }
-    let combined = level.pop().unwrap();
+    let combined = level.pop().unwrap(); // areal-lint: allow(panic, reason="reduce tree levels are built non-empty")
 
     // token-weighted metric means (grad_norm is overwritten by the caller
     // with the combined norm from apply_grads; n_tokens sums)
@@ -212,18 +214,18 @@ impl DpPool {
 
     /// Number of registered (non-lead) DP ranks.
     pub fn workers(&self) -> usize {
-        self.state.lock().unwrap().workers
+        self.state.plock().workers
     }
 
     /// Shut the pool down: wakes every waiter; workers observe
     /// [`DpPool::is_closed`] and leave their serving loops.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.state.plock().closed = true;
         self.cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        self.state.plock().closed
     }
 
     /// Register the calling thread as a DP rank. The returned guard
@@ -231,7 +233,7 @@ impl DpPool {
     /// the rank still held, so a lost worker never loses work.
     pub fn register(self: &Arc<Self>) -> DpWorker {
         let id = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.plock();
             st.workers += 1;
             st.next_worker += 1;
             crate::util::metrics::set("areal_dp_workers", st.workers as f64);
@@ -241,8 +243,9 @@ impl DpPool {
         DpWorker { pool: Arc::clone(self), id }
     }
 
+    // areal-lint: allow(index, reason="worker slots are scanned by index under the state lock")
     fn deregister(&self, id: u64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.plock();
         st.workers = st.workers.saturating_sub(1);
         crate::util::metrics::set("areal_dp_workers", st.workers as f64);
         // requeue anything this rank claimed but never completed — the
@@ -264,7 +267,7 @@ impl DpPool {
 
     /// Worker side: claim one shard of the current job, if any is queued.
     fn try_claim(&self, worker: u64) -> Option<(u64, Arc<ShardTask>)> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.plock();
         let task = st.queue.pop_front()?;
         let job = st.job;
         st.claimed.push((worker, job, Arc::clone(&task)));
@@ -275,7 +278,7 @@ impl DpPool {
     /// shard indices (a shard requeued after a mid-flight deregister and
     /// recomputed by the lead) are discarded silently.
     fn complete(&self, worker: u64, job: u64, out: ShardOutput) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.plock();
         st.claimed
             .retain(|(w, j, t)| !(*w == worker && *j == job && t.shard_idx == out.shard_idx));
         if job == st.job && !st.done.iter().any(|o| o.shard_idx == out.shard_idx) {
@@ -292,7 +295,7 @@ impl DpPool {
         -> Result<Vec<ShardOutput>> {
         let expected = tasks.len();
         {
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.plock();
             st.job += 1;
             st.queue = tasks.into_iter().map(Arc::new).collect();
             st.claimed.clear();
@@ -305,18 +308,18 @@ impl DpPool {
             // work is queued, so zero pool workers still makes progress and
             // a requeued shard from a dead rank is picked up immediately
             let task = {
-                let mut st = self.state.lock().unwrap();
+                let mut st = self.state.plock();
                 st.queue.pop_front()
             };
             if let Some(task) = task {
                 let out = run_shard(lead_engine, &task)?;
-                let mut st = self.state.lock().unwrap();
+                let mut st = self.state.plock();
                 if !st.done.iter().any(|o| o.shard_idx == out.shard_idx) {
                     st.done.push(out);
                 }
                 continue;
             }
-            let mut st = self.state.lock().unwrap();
+            let mut st = self.state.plock();
             if st.done.len() >= st.expected {
                 let mut done = std::mem::take(&mut st.done);
                 st.expected = 0;
@@ -327,8 +330,7 @@ impl DpPool {
             // completion or a deregister-requeue
             let (guard, _) = self
                 .cv
-                .wait_timeout(st, Duration::from_millis(2))
-                .unwrap();
+                .pwait_timeout(st, Duration::from_millis(2));
             drop(guard);
         }
     }
@@ -359,7 +361,7 @@ impl DpWorker {
                 // hand the shard back to the queue: the lead recomputes
                 crate::warn_log!("dp", "rank {} shard {} failed: {e:#}",
                                  self.id, task.shard_idx);
-                let mut st = self.pool.state.lock().unwrap();
+                let mut st = self.pool.state.plock();
                 st.claimed.retain(|(w, j, t)| {
                     !(*w == self.id && *j == job && t.shard_idx == task.shard_idx)
                 });
@@ -432,7 +434,7 @@ mod tests {
     fn deregister_requeues_claimed_shards() {
         let pool = Arc::new(DpPool::new());
         {
-            let mut st = pool.state.lock().unwrap();
+            let mut st = pool.state.plock();
             st.job = 1;
             st.expected = 1;
             st.queue.push_back(Arc::new(ShardTask {
@@ -450,10 +452,10 @@ mod tests {
         assert_eq!(pool.workers(), 1);
         let claimed = pool.try_claim(w.id);
         assert!(claimed.is_some(), "worker claims the queued shard");
-        assert_eq!(pool.state.lock().unwrap().queue.len(), 0);
+        assert_eq!(pool.state.plock().queue.len(), 0);
         drop(w); // worker dies mid-shard
         assert_eq!(pool.workers(), 0);
-        let st = pool.state.lock().unwrap();
+        let st = pool.state.plock();
         assert_eq!(st.queue.len(), 1, "claimed shard requeued for the lead");
         assert!(st.claimed.is_empty());
     }
@@ -461,13 +463,13 @@ mod tests {
     #[test]
     fn stale_job_completions_are_discarded() {
         let pool = Arc::new(DpPool::new());
-        pool.state.lock().unwrap().job = 5;
+        pool.state.plock().job = 5;
         pool.complete(9, 4, shard(0, 1.0, vec![1.0])); // job 4 is stale
-        assert!(pool.state.lock().unwrap().done.is_empty());
+        assert!(pool.state.plock().done.is_empty());
         pool.complete(9, 5, shard(0, 1.0, vec![1.0]));
-        assert_eq!(pool.state.lock().unwrap().done.len(), 1);
+        assert_eq!(pool.state.plock().done.len(), 1);
         // duplicate shard index for the live job is also discarded
         pool.complete(9, 5, shard(0, 9.0, vec![2.0]));
-        assert_eq!(pool.state.lock().unwrap().done.len(), 1);
+        assert_eq!(pool.state.plock().done.len(), 1);
     }
 }

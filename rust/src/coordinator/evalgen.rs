@@ -14,6 +14,7 @@ use super::gen_engine::GenEngine;
 
 /// Generate completions for all prompts (wave-batched over the engine's
 /// slot count). Returns completion text per prompt, in order.
+// areal-lint: allow(index, reason="group ids are validated against the suite at construction")
 pub fn generate_all(engine: &Arc<Engine>, params: &Arc<ParamSet>,
                     prompts: &[Prompt], temperature: f32, seed: u64)
     -> Result<Vec<String>> {
@@ -46,6 +47,7 @@ pub fn generate_all(engine: &Arc<Engine>, params: &Arc<ParamSet>,
 
 /// Evaluate one suite: `samples_per_prompt` stochastic samples (or one
 /// greedy pass when temperature < 1e-3).
+// areal-lint: allow(index, reason="group ids are validated against the suite at construction")
 pub fn eval_suite(engine: &Arc<Engine>, params: &Arc<ParamSet>, suite: &EvalSuite,
                   samples_per_prompt: usize, temperature: f32, seed: u64)
     -> Result<SuiteResult> {

@@ -35,6 +35,7 @@ use crate::text::tokenizer::{Tokenizer, BOS, EOS};
 use crate::util::rng::Rng;
 
 use super::messages::{GenRequest, Trajectory};
+use crate::util::sync::MutexExt;
 
 /// One in-flight sequence.
 #[derive(Debug)]
@@ -179,18 +180,18 @@ impl GenEngine {
     /// Prompts `fill` can accept right now without over-buffering: slots
     /// not yet spoken for by running or waiting sequences.
     pub fn fill_capacity(&self) -> usize {
-        let s = self.serve.lock().unwrap();
+        let s = self.serve.plock();
         self.b.saturating_sub(s.running_len() + s.waiting_len())
     }
 
     /// Serving-layer statistics (prefix-cache hit rate, preemptions, block
     /// occupancy).
     pub fn serve_stats(&self) -> ServeStats {
-        self.serve.lock().unwrap().stats()
+        self.serve.plock().stats()
     }
 
     pub fn preemptions(&self) -> u64 {
-        self.serve.lock().unwrap().preemptions
+        self.serve.plock().preemptions
     }
 
     /// This replica's live-measurement handle for the router's `probe`
@@ -205,7 +206,7 @@ impl GenEngine {
     /// pull so the remote router's `probe` policy sees fresh state without
     /// a probe round-trip (DESIGN.md §6).
     pub fn probe_snapshot(&self) -> crate::serve::ProbeSnapshot {
-        self.serve.lock().unwrap().probe_snapshot()
+        self.serve.plock().probe_snapshot()
     }
 
     /// The paper's `update_weights`: swap parameters; any in-flight
@@ -216,7 +217,7 @@ impl GenEngine {
         assert!(params.version >= self.params.version, "weight version regressed");
         let interrupted = self.active_slots();
         self.params = params;
-        self.serve.lock().unwrap().on_update_weights(self.params.version);
+        self.serve.plock().on_update_weights(self.params.version);
         if interrupted > 0 {
             self.interruptions += 1;
             self.needs_prefill = true; // KV under old weights is invalid
@@ -254,7 +255,7 @@ impl GenEngine {
             let id = self.next_seq;
             self.next_seq += 1;
             {
-                let mut s = self.serve.lock().unwrap();
+                let mut s = self.serve.plock();
                 if !s.submit(id, r.tokens) {
                     bail!(
                         "prompt does not fit the KV pool ({} blocks of {}) — raise kv_blocks",
@@ -334,21 +335,22 @@ impl GenEngine {
 
     /// Waiting sequences (submitted or preempted) not yet admitted.
     pub fn waiting(&self) -> usize {
-        self.serve.lock().unwrap().waiting_len()
+        self.serve.plock().waiting_len()
     }
 
     /// Whether the next admission wave could actually admit something (a
     /// dense prefill wave is expensive — don't request one that admits 0).
     pub fn admission_feasible(&self) -> bool {
-        self.empty_slots() > 0 && self.serve.lock().unwrap().admission_feasible()
+        self.empty_slots() > 0 && self.serve.plock().admission_feasible()
     }
 
     /// Admit waiting sequences (through the scheduler), then rebuild the KV
     /// cache for all slots and sample one token per active slot (from the
     /// current weights). Called after fills and weight updates.
+    // areal-lint: allow(index, reason="slot and lane indices are bounded by the batch layout fixed at construction")
     pub fn prefill(&mut self) -> Result<()> {
         // --- admission wave (paged-KV + prefix-cache aware) --------------
-        let admitted = self.serve.lock().unwrap().schedule();
+        let admitted = self.serve.plock().schedule();
         for a in admitted {
             let mut seq = if let Some(parked) = self.parked.remove(&a.id) {
                 debug_assert_eq!(parked.tokens.len(), a.tokens.len());
@@ -407,8 +409,8 @@ impl GenEngine {
         inputs.push(&temp_l);
         let mut outs = self.engine.run("prefill", &inputs).context("prefill")?;
         // outputs: kv.. , tok, logp
-        let logp_l = outs.pop().unwrap();
-        let tok_l = outs.pop().unwrap();
+        let logp_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
+        let tok_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
         let toks = HostTensor::from_literal(tok_l.lit())?;
         let logps = HostTensor::from_literal(logp_l.lit())?;
         let toks = toks.as_i32()?;
@@ -430,7 +432,7 @@ impl GenEngine {
         // (everything but the pending token) into the radix cache so GRPO
         // siblings and resumed rollouts reuse it
         {
-            let mut serve = self.serve.lock().unwrap();
+            let mut serve = self.serve.plock();
             for slot in self.slots.iter() {
                 if let Some(s) = slot {
                     let committed = &s.tokens[..s.tokens.len() - 1];
@@ -445,11 +447,12 @@ impl GenEngine {
     /// scheduler's chosen victims on OOM. A preempted sequence keeps its
     /// committed tokens and logprobs in `parked` and re-enters through the
     /// waiting queue (its prefix mostly a cache hit).
+    // areal-lint: allow(index, reason="slot and lane indices are bounded by the batch layout fixed at construction")
     fn grow_with_preemption(&mut self, id: SeqId, new_len: usize) -> Result<()> {
         loop {
             // bind the outcome so the scheduler lock is released before
             // the arms take it again
-            let grow = self.serve.lock().unwrap().grow_to(id, new_len);
+            let grow = self.serve.plock().grow_to(id, new_len);
             match grow {
                 Grow::Ok => return Ok(()),
                 Grow::Preempt(victim) => {
@@ -458,9 +461,9 @@ impl GenEngine {
                         .iter()
                         .position(|s| s.as_ref().is_some_and(|x| x.seq_id == victim))
                         .context("preemption victim not in any slot")?;
-                    let vs = self.slots[vi].take().unwrap();
+                    let vs = self.slots[vi].take().unwrap(); // areal-lint: allow(panic, reason="victim indices are drawn from occupied slots")
                     // exclude the pending token — its KV was never computed
-                    self.serve.lock().unwrap().preempt(
+                    self.serve.plock().preempt(
                         victim,
                         &vs.tokens,
                         vs.tokens.len().saturating_sub(1),
@@ -471,7 +474,7 @@ impl GenEngine {
                 }
                 Grow::Fail => {
                     let (num_blocks, block_size) = {
-                        let s = self.serve.lock().unwrap();
+                        let s = self.serve.plock();
                         (s.cfg().num_blocks, s.cfg().block_size)
                     };
                     bail!(
@@ -488,6 +491,7 @@ impl GenEngine {
 
     /// Decode one chunk for all slots. Returns finished trajectories
     /// (EOS, answer-terminated, or truncated at max_seq).
+    // areal-lint: allow(index, reason="slot and lane indices are bounded by the batch layout fixed at construction")
     pub fn decode_chunk(&mut self) -> Result<Vec<Trajectory>> {
         assert!(!self.needs_prefill, "prefill required before decode");
         let kv = self.kv.take().context("decode before first prefill")?;
@@ -497,7 +501,7 @@ impl GenEngine {
         for (i, slot) in self.slots.iter().enumerate() {
             if let Some(s) = slot {
                 lens[i] = (s.tokens.len() - 1) as i32;
-                toks[i] = *s.tokens.last().unwrap();
+                toks[i] = *s.tokens.last().unwrap(); // areal-lint: allow(panic, reason="a running sequence always holds its prompt tokens")
             }
         }
         let lens_l = HostTensor::i32(vec![self.b], lens).to_literal()?;
@@ -516,7 +520,7 @@ impl GenEngine {
         inputs.push(&temp_l);
         let mut outs = self.engine.run("decode", &inputs).context("decode")?;
         // outputs: toks [C,B], logps [C,B], kv.., lens
-        let _lens_out = outs.pop().unwrap();
+        let _lens_out = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
         let kv_new: Vec<SendLiteral> = outs.split_off(2);
         let logps = HostTensor::from_literal(outs[1].lit())?;
         let new_toks = HostTensor::from_literal(outs[0].lit())?;
@@ -550,7 +554,7 @@ impl GenEngine {
             if let Some(truncated) = done {
                 // the final token (EOS/truncation boundary) is committed but
                 // its KV was never computed — keep it out of the cache
-                self.serve.lock().unwrap().finish(
+                self.serve.plock().finish(
                     s.seq_id,
                     &s.tokens,
                     s.tokens.len().saturating_sub(1),

@@ -9,6 +9,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::runtime::{ParamSet, Version};
+use crate::util::sync::RwLockExt;
 
 pub struct ParamServer {
     current: RwLock<Arc<ParamSet>>,
@@ -32,14 +33,14 @@ impl ParamServer {
 
     /// Fetch the latest weights.
     pub fn get(&self) -> Arc<ParamSet> {
-        Arc::clone(&self.current.read().unwrap())
+        Arc::clone(&self.current.pread())
     }
 
     /// Publish new weights; must be monotone in version.
     pub fn publish(&self, params: Arc<ParamSet>) {
         let v = params.version;
         {
-            let mut g = self.current.write().unwrap();
+            let mut g = self.current.pwrite();
             assert!(
                 v >= g.version,
                 "param server version must be monotone ({} -> {v})",

@@ -62,6 +62,7 @@ use super::gate::StalenessGate;
 use super::messages::GenRouter;
 use super::param_server::ParamServer;
 use super::trace::{Event, Trace};
+use crate::util::sync::MutexExt;
 
 /// Why the rebalancer last moved the target (carried into
 /// [`Event::Rebalance`] by the conversion that executes the move).
@@ -274,7 +275,7 @@ impl RoleBoard {
     /// now a train-role (parked) worker and must stop serving this slot.
     pub fn try_retire<T: Send + 'static>(&self, router: &Router<T>, slot: usize,
                                          epoch: u64, trace: &Trace) -> bool {
-        let _serial = self.convert.lock().unwrap();
+        let _serial = self.convert.plock();
         let floor = self.target_gen().max(self.min_gen);
         if router.n_alive() <= floor {
             return false;
@@ -300,7 +301,7 @@ impl RoleBoard {
     /// now owns and must serve.
     pub fn try_rejoin<T: Send + 'static>(&self, router: &Router<T>,
                                          trace: &Trace) -> Option<(usize, u64)> {
-        let _serial = self.convert.lock().unwrap();
+        let _serial = self.convert.plock();
         if router.n_alive() >= self.target_gen() {
             return None;
         }

@@ -131,6 +131,7 @@ impl System {
     }
 
     /// SFT warmup on gold traces — produces the "distilled base model".
+    // areal-lint: allow(index, reason="token gather over a window sized by the same loop")
     pub fn sft_warmup(&self, trainer: &mut Trainer, steps: usize,
                       log_every: usize) -> Result<Vec<f32>> {
         if steps == 0 {
@@ -298,7 +299,7 @@ impl System {
                     // remote pulls go through the fleet path (stealing
                     // included), exactly like a local worker's
                     let weak = Arc::downgrade(&router);
-                    t.set_pull_fn(Box::new(move |epoch, max_n| match weak.upgrade() {
+                    t.set_pull_fn(Arc::new(move |epoch, max_n| match weak.upgrade() {
                         Some(r) => r.pull_at(w, epoch, max_n),
                         None => Pulled { reqs: Vec::new(), stolen: None },
                     }));
@@ -309,7 +310,7 @@ impl System {
                     // never take down a successor on a revived slot
                     let weak = Arc::downgrade(&router);
                     let trace = Arc::clone(&self.trace);
-                    t.set_disconnect_fn(Box::new(move |epoch, orphans| {
+                    t.set_disconnect_fn(Arc::new(move |epoch, orphans| {
                         let Some(r) = weak.upgrade() else { return };
                         trace.log(Event::SocketDisconnect { replica: w });
                         if let Some(requeued) = r.remove_replica_at(w, epoch) {
@@ -417,7 +418,7 @@ impl System {
                     run_controller(ds, gate, server, router, stop, ccfg, trace);
                     Ok(())
                 })
-                .unwrap()
+                .unwrap() // areal-lint: allow(panic, reason="thread spawn fails only on resource exhaustion at startup")
         };
 
         // rebalancer thread (joined first in drain_and_join: it exits on
@@ -439,7 +440,7 @@ impl System {
                     run_rebalancer(gate, server, router, board, stop, draining,
                                    rcfg, interval, group)
                 })
-                .unwrap()
+                .unwrap() // areal-lint: allow(panic, reason="thread spawn fails only on resource exhaustion at startup")
         });
 
         // rollout workers. A worker that dies on an error removes itself
@@ -480,6 +481,7 @@ impl System {
                     .spawn(move || {
                         run_supervised_rollout_worker(w, engine, shared, rcfg, seed, restarts)
                     })
+                    // areal-lint: allow(panic, reason="thread spawn fails only on resource exhaustion at startup")
                     .unwrap(),
             );
         }

@@ -8,6 +8,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::runtime::Version;
+use crate::util::sync::MutexExt;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
@@ -96,11 +97,11 @@ impl Trace {
             return;
         }
         let t = self.start.elapsed().as_secs_f64();
-        let mut ev = self.events.lock().unwrap();
+        let mut ev = self.events.plock();
         if ev.len() >= self.cap {
             ev.pop_front();
             self.dropped.fetch_add(1, Ordering::Relaxed);
-            crate::util::metrics::inc("areal_trace_dropped_total", 1);
+            crate::util::metrics::inc("areal_trace_dropped_total", 1); // areal-lint: allow(metric-sim, reason="the sim has no bounded trace ring")
         }
         ev.push_back(Stamped { t, event });
     }
@@ -111,76 +112,85 @@ impl Trace {
     }
 
     pub fn snapshot(&self) -> Vec<Stamped> {
-        self.events.lock().unwrap().iter().cloned().collect()
+        self.events.plock().iter().cloned().collect()
     }
 
     pub fn count(&self, pred: impl Fn(&Event) -> bool) -> usize {
-        self.events
-            .lock()
-            .unwrap()
-            .iter()
-            .filter(|s| pred(&s.event))
-            .count()
+        self.events.plock().iter().filter(|s| pred(&s.event)).count()
     }
 
     /// CSV rows: t,kind,actor,a,b,c — `c` is free-text (empty for numeric
     /// events); `rebalance` rows carry the full from/to/reason strings.
+    ///
+    /// One exhaustive match with no catch-all arm, on purpose: adding an
+    /// `Event` variant without deciding its CSV encoding must fail to
+    /// compile here, not silently truncate the timeline (the PR 6
+    /// `Rebalance` drift bug class). `areal-lint`'s drift pass checks the
+    /// same property plus a decode test per variant.
     pub fn to_csv(&self) -> String {
         let mut out = String::from("t,kind,actor,a,b,c\n");
-        for s in self.events.lock().unwrap().iter() {
-            if let Event::Rebalance { replica, from, to, reason } = &s.event {
-                out.push_str(&format!(
-                    "{:.6},rebalance,{replica},{from},{to},{reason}\n", s.t));
-                continue;
-            }
-            let (kind, actor, a, b) = match &s.event {
-                Event::GenStart { worker, slots } => ("gen_start", *worker, *slots as i64, 0),
+        for s in self.events.plock().iter() {
+            let row = match &s.event {
+                Event::GenStart { worker, slots } => {
+                    num_row(s.t, "gen_start", *worker, *slots as i64, 0)
+                }
                 Event::TrajDone { worker, tokens, version_born } => {
-                    ("traj_done", *worker, *tokens as i64, *version_born as i64)
+                    num_row(s.t, "traj_done", *worker, *tokens as i64, *version_born as i64)
                 }
                 Event::Interrupt { worker, version, active_slots } => {
-                    ("interrupt", *worker, *version as i64, *active_slots as i64)
+                    num_row(s.t, "interrupt", *worker, *version as i64, *active_slots as i64)
                 }
                 Event::WeightSync { worker, version } => {
-                    ("weight_sync", *worker, *version as i64, 0)
+                    num_row(s.t, "weight_sync", *worker, *version as i64, 0)
                 }
                 Event::TrainStart { version, batch } => {
-                    ("train_start", usize::MAX, *version as i64, *batch as i64)
+                    num_row(s.t, "train_start", usize::MAX, *version as i64, *batch as i64)
                 }
                 Event::TrainEnd { version, tokens } => {
-                    ("train_end", usize::MAX, *version as i64, *tokens as i64)
+                    num_row(s.t, "train_end", usize::MAX, *version as i64, *tokens as i64)
                 }
                 Event::RewardDone { worker, correct } => {
-                    ("reward_done", *worker, *correct as i64, 0)
+                    num_row(s.t, "reward_done", *worker, *correct as i64, 0)
                 }
-                Event::Preempt { worker, seqs } => ("preempt", *worker, *seqs as i64, 0),
+                Event::Preempt { worker, seqs } => {
+                    num_row(s.t, "preempt", *worker, *seqs as i64, 0)
+                }
                 Event::CacheStat { worker, cached_tokens, computed_tokens } => {
-                    ("cache_stat", *worker, *cached_tokens as i64, *computed_tokens as i64)
+                    num_row(s.t, "cache_stat", *worker, *cached_tokens as i64,
+                            *computed_tokens as i64)
                 }
                 Event::Route { replica, group, queued } => {
-                    ("route", *replica, *group as i64, *queued as i64)
+                    num_row(s.t, "route", *replica, *group as i64, *queued as i64)
                 }
                 Event::Steal { thief, victim, reqs } => {
-                    ("steal", *thief, *victim as i64, *reqs as i64)
+                    num_row(s.t, "steal", *thief, *victim as i64, *reqs as i64)
                 }
                 Event::ReplicaDown { replica, requeued } => {
-                    ("replica_down", *replica, *requeued as i64, 0)
+                    num_row(s.t, "replica_down", *replica, *requeued as i64, 0)
                 }
                 Event::ReplicaUp { replica, epoch } => {
-                    ("replica_up", *replica, *epoch as i64, 0)
+                    num_row(s.t, "replica_up", *replica, *epoch as i64, 0)
                 }
                 Event::ReplicaRestart { replica, epoch, life } => {
-                    ("replica_restart", *replica, *epoch as i64, *life as i64)
+                    num_row(s.t, "replica_restart", *replica, *epoch as i64, *life as i64)
                 }
                 Event::SocketDisconnect { replica } => {
-                    ("socket_disconnect", *replica, 0, 0)
+                    num_row(s.t, "socket_disconnect", *replica, 0, 0)
                 }
-                Event::Rebalance { .. } => unreachable!("handled above"),
+                Event::Rebalance { replica, from, to, reason } => {
+                    format!("{:.6},rebalance,{replica},{from},{to},{reason}\n", s.t)
+                }
             };
-            out.push_str(&format!("{:.6},{kind},{actor},{a},{b},\n", s.t));
+            out.push_str(&row);
         }
         out
     }
+}
+
+/// Numeric CSV row (the common shape: every variant except `Rebalance`,
+/// whose `c` column carries free text).
+fn num_row(t: f64, kind: &str, actor: usize, a: i64, b: i64) -> String {
+    format!("{t:.6},{kind},{actor},{a},{b},\n")
 }
 
 #[cfg(test)]
@@ -279,6 +289,36 @@ mod tests {
         }
         // a fresh trace has dropped nothing
         assert_eq!(Trace::new(true).dropped(), 0);
+    }
+
+    #[test]
+    fn generation_events_render() {
+        let tr = Trace::new(true);
+        tr.log(Event::GenStart { worker: 1, slots: 4 });
+        tr.log(Event::TrajDone { worker: 1, tokens: 9, version_born: 2 });
+        tr.log(Event::WeightSync { worker: 1, version: 3 });
+        tr.log(Event::Preempt { worker: 1, seqs: 2 });
+        tr.log(Event::CacheStat { worker: 1, cached_tokens: 8, computed_tokens: 5 });
+        let csv = tr.to_csv();
+        assert!(csv.contains("gen_start,1,4,0"));
+        assert!(csv.contains("traj_done,1,9,2"));
+        assert!(csv.contains("weight_sync,1,3,0"));
+        assert!(csv.contains("preempt,1,2,0"));
+        assert!(csv.contains("cache_stat,1,8,5"));
+    }
+
+    #[test]
+    fn training_events_render() {
+        let tr = Trace::new(true);
+        tr.log(Event::TrainStart { version: 4, batch: 16 });
+        tr.log(Event::TrainEnd { version: 4, tokens: 512 });
+        tr.log(Event::RewardDone { worker: 2, correct: true });
+        let csv = tr.to_csv();
+        assert!(csv.contains("train_start,"));
+        assert!(csv.contains(",4,16,"));
+        assert!(csv.contains("train_end,"));
+        assert!(csv.contains(",4,512,"));
+        assert!(csv.contains("reward_done,2,1,0"));
     }
 
     #[test]

@@ -204,7 +204,7 @@ impl Trainer {
         // publish version+1
         let new_params = ParamSet::with_version(
             std::mem::take(&mut Arc::get_mut(&mut self.state.params)
-                .expect("trainer owns params between steps")
+                .expect("trainer owns params between steps") // areal-lint: allow(panic, reason="params Arc has a single owner between steps by construction")
                 .tensors),
             version + 1,
         );
@@ -286,8 +286,8 @@ impl Trainer {
         inputs.push(&mask_l);
         inputs.push(&lr_l);
         let mut outs = self.engine.run("sft_step", &inputs)?;
-        let metrics_l = outs.pop().unwrap();
-        let _ = outs.pop().unwrap();
+        let metrics_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
+        let _ = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
         let n = spec.n_params();
         let v_new = outs.split_off(2 * n);
         let m_new = outs.split_off(n);
@@ -312,6 +312,7 @@ impl Trainer {
     /// Pack trajectory rows into dense `[Bt, t]` tensors at an explicit
     /// sequence length — shard tasks force the parent micro-batch's `t`
     /// rather than re-deciding the half-context route per shard.
+    // areal-lint: allow(index, reason="micro-batch gather indices are bounded by the layout computed above")
     fn build_micro_at(&self, batch: &[Trajectory], advs: &[f32],
                       indices: &[usize], t: usize) -> Result<MicroTensors> {
         let spec = &self.engine.spec;
@@ -388,8 +389,8 @@ impl Trainer {
         let mut outs = self.engine.run(entry, &inputs).context(entry)?;
 
         // outputs: params.., m.., v.., step, metrics
-        let metrics_l = outs.pop().unwrap();
-        let _step_l = outs.pop().unwrap();
+        let metrics_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
+        let _step_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
         let n = self.engine.spec.n_params();
         let v_new = outs.split_off(2 * n);
         let m_new = outs.split_off(n);
@@ -425,6 +426,7 @@ impl Trainer {
     /// pre-clip norm from `apply_grads` — the same value the fused path
     /// reports.
     #[allow(clippy::too_many_arguments)]
+    // areal-lint: allow(index, reason="metric slots form a fixed-arity array indexed by const ids")
     fn dp_update(&mut self, batch: &[Trajectory], advs: &[f32], mb: &MicroBatch,
                  mt: &MicroTensors, px: &HostTensor, lr_l: &xla::Literal,
                  version: u64, dp_eff: usize) -> Result<Vec<f32>> {
@@ -452,6 +454,7 @@ impl Trainer {
     /// re-packed per shard and the already-computed π_prox rows are
     /// scattered host-side, so the prox forward pass runs once per
     /// micro-batch no matter the degree.
+    // areal-lint: allow(index, reason="micro-batch gather indices are bounded by the layout computed above")
     fn build_shard_tasks(&self, batch: &[Trajectory], advs: &[f32],
                          mb: &MicroBatch, mt: &MicroTensors, px: &HostTensor,
                          dp_eff: usize) -> Result<Vec<ShardTask>> {
@@ -532,8 +535,8 @@ impl Trainer {
             self.engine.run("apply_grads", &inputs).context("apply_grads")?;
 
         // outputs: params.., m.., v.., step, grad_norm
-        let gnorm_l = outs.pop().unwrap();
-        let _step_l = outs.pop().unwrap();
+        let gnorm_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
+        let _step_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
         let n = self.engine.spec.n_params();
         let v_new = outs.split_off(2 * n);
         let m_new = outs.split_off(n);

@@ -9,6 +9,7 @@ pub mod algo;
 pub mod config;
 pub mod coordinator;
 pub mod interp;
+pub mod lint;
 pub mod reward;
 pub mod runtime;
 pub mod serve;

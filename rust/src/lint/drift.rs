@@ -1,0 +1,321 @@
+//! Drift-exhaustiveness rules: facts stated in one place must be restated
+//! everywhere the project promises to restate them.
+//!
+//! event-csv: every `Event::` variant has an arm in `Tracer::to_csv` (no
+//!   catch-all), and every kind string it emits is asserted by a decode
+//!   test in the same file.
+//! metric-doc: every `areal_*` metric-name literal at a metrics call site
+//!   appears in the DESIGN.md §10 inventory (full or unprefixed form).
+//! metric-sim: the same name is emitted by the simulator (`sim/run.rs`),
+//!   so live runs and sim runs stay plottable on one dashboard.
+//! config-doc: every `Config::KEYS` entry is documented in docs/CONFIG.md.
+
+use std::path::Path;
+
+use super::lexer::{allowed, lex, test_cut, Kind};
+use super::{Finding, SourceFile};
+
+const METRIC_API: &[&str] = &["inc", "set", "observe", "counter", "gauge", "histogram"];
+
+/// event-csv rule: runs on `rust/src/coordinator/trace.rs` under `root`.
+pub fn event_csv(root: &Path) -> Vec<Finding> {
+    let rel = "rust/src/coordinator/trace.rs";
+    let mut out: Vec<Finding> = Vec::new();
+    let src = match std::fs::read_to_string(root.join(rel)) {
+        Ok(s) => s,
+        Err(_) => return out, // tree without a tracer: rule does not apply
+    };
+    let lx = lex(&src);
+    let cut = test_cut(&lx.toks);
+    let body = &lx.toks[..cut];
+    let tests = &lx.toks[cut..];
+    let n = body.len();
+
+    // enum Event variants: depth-1 idents right after `{` or `,`
+    let mut variants: Vec<(String, usize)> = Vec::new();
+    for i in 0..n.saturating_sub(2) {
+        if body[i].text == "enum" && body[i + 1].text == "Event" {
+            let mut d = 0isize;
+            let mut k = i + 2;
+            while k < n {
+                if body[k].text == "{" {
+                    d += 1;
+                } else if body[k].text == "}" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                } else if d == 1
+                    && body[k].kind == Kind::Ident
+                    && k > 0
+                    && (body[k - 1].text == "{" || body[k - 1].text == ",")
+                {
+                    variants.push((body[k].text.clone(), body[k].line));
+                }
+                k += 1;
+            }
+            break;
+        }
+    }
+
+    // to_csv body span
+    let mut span: Option<(usize, usize)> = None;
+    for i in 0..n.saturating_sub(1) {
+        if body[i].text == "fn" && body[i + 1].text == "to_csv" {
+            let mut d = 0isize;
+            let mut k = i + 2;
+            while k < n {
+                if body[k].text == "{" {
+                    d += 1;
+                } else if body[k].text == "}" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                k += 1;
+            }
+            span = Some((i, k.min(n)));
+            break;
+        }
+    }
+    let (lo, hi) = match span {
+        Some(s) => s,
+        None => {
+            if !variants.is_empty() {
+                out.push(Finding::new(
+                    "event-csv",
+                    rel,
+                    1,
+                    "enum Event exists but no to_csv fn found".to_string(),
+                ));
+            }
+            return out;
+        }
+    };
+    let seg = &body[lo..hi];
+
+    // `Event::Name` arm heads
+    let mut arm_names: Vec<String> = Vec::new();
+    for j in 3..seg.len() {
+        if seg[j].kind == Kind::Ident
+            && seg[j - 1].text == ":"
+            && seg[j - 2].text == ":"
+            && seg[j - 3].text == "Event"
+        {
+            arm_names.push(seg[j].text.clone());
+        }
+    }
+    for (v, ln) in &variants {
+        if !arm_names.iter().any(|a| a == v) {
+            out.push(Finding::new(
+                "event-csv",
+                rel,
+                *ln,
+                format!("Event::{v} has no to_csv arm — traces would silently drop it"),
+            ));
+        }
+    }
+
+    // catch-all arm `_ =>` defeats the exhaustiveness guarantee
+    for j in 0..seg.len().saturating_sub(2) {
+        if seg[j].text == "_" && seg[j + 1].text == "=" && seg[j + 2].text == ">" {
+            out.push(Finding::new(
+                "event-csv",
+                rel,
+                seg[j].line,
+                "catch-all `_ =>` arm in to_csv — new variants would not be flagged".to_string(),
+            ));
+        }
+    }
+
+    // every bare kind literal emitted must be asserted by a decode test
+    let mut test_blob = String::new();
+    for t in tests {
+        if t.kind == Kind::Str {
+            test_blob.push_str(&t.text);
+            test_blob.push(' ');
+        }
+    }
+    for t in seg {
+        if t.kind == Kind::Str {
+            let ks = t.text.trim_matches('"');
+            if !ks.is_empty() && !ks.contains(',') && !ks.contains('{') && !test_blob.contains(ks) {
+                out.push(Finding::new(
+                    "event-csv",
+                    rel,
+                    t.line,
+                    format!("kind \"{ks}\" never asserted in a decode test"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// metric-doc + metric-sim: `files` is the full rust/src scan.
+pub fn metrics(root: &Path, files: &[SourceFile]) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    let design = std::fs::read_to_string(root.join("DESIGN.md")).unwrap_or_default();
+    let simsrc =
+        std::fs::read_to_string(root.join("rust/src/sim/run.rs")).unwrap_or_default();
+    for f in files {
+        let n = f.toks.len();
+        for q in 0..n {
+            let t = &f.toks[q];
+            if t.kind != Kind::Str || !t.text.starts_with("\"areal_") {
+                continue;
+            }
+            let lo = q.saturating_sub(6);
+            let near_api = f.toks[lo..q]
+                .iter()
+                .any(|x| x.kind == Kind::Ident && METRIC_API.contains(&x.text.as_str()));
+            if !near_api {
+                continue;
+            }
+            let full = t.text.trim_matches('"');
+            let name = full.split('{').next().unwrap_or(full);
+            let base = name.strip_prefix("areal_").unwrap_or(name);
+            if !design.contains(name)
+                && !design.contains(base)
+                && !allowed(&f.allows, "metric-doc", t.line)
+            {
+                out.push(Finding::new(
+                    "metric-doc",
+                    &f.rel,
+                    t.line,
+                    format!("{name} not in the DESIGN.md §10 metric inventory"),
+                ));
+            }
+            if f.rel != "rust/src/sim/run.rs"
+                && !simsrc.contains(name)
+                && !allowed(&f.allows, "metric-sim", t.line)
+            {
+                out.push(Finding::new(
+                    "metric-sim",
+                    &f.rel,
+                    t.line,
+                    format!("{name} never emitted by sim/run.rs — sim and live dashboards drift"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// config-doc: every key in `Config::KEYS` is documented in docs/CONFIG.md.
+pub fn config_doc(root: &Path) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    let rel = "rust/src/config.rs";
+    let src = match std::fs::read_to_string(root.join(rel)) {
+        Ok(s) => s,
+        Err(_) => return out,
+    };
+    let confmd = std::fs::read_to_string(root.join("docs/CONFIG.md")).unwrap_or_default();
+    let lx = lex(&src);
+    let toks = &lx.toks[..test_cut(&lx.toks)];
+    let n = toks.len();
+    for i in 0..n {
+        if toks[i].text == "KEYS" {
+            // skip the const's type annotation: scan from the `=`
+            let mut k = i;
+            while k < n && toks[k].text != "=" {
+                k += 1;
+            }
+            let mut d = 0isize;
+            while k < n {
+                if toks[k].text == "[" {
+                    d += 1;
+                } else if toks[k].text == "]" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                } else if d == 1
+                    && toks[k].text == "("
+                    && k + 1 < n
+                    && toks[k + 1].kind == Kind::Str
+                {
+                    let key = toks[k + 1].text.trim_matches('"').to_string();
+                    let backticked = format!("`{key}`");
+                    let spaced = format!("{key} ");
+                    if !confmd.contains(&backticked) && !confmd.contains(&spaced) {
+                        out.push(Finding::new(
+                            "config-doc",
+                            rel,
+                            toks[k + 1].line,
+                            format!("Config key {key} not documented in docs/CONFIG.md"),
+                        ));
+                    }
+                }
+                k += 1;
+            }
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+
+    fn tree(dir: &str, files: &[(&str, &str)]) -> std::path::PathBuf {
+        let root = std::env::temp_dir().join(format!("areal_lint_drift_{dir}"));
+        let _ = fs::remove_dir_all(&root);
+        for (rel, body) in files {
+            let p = root.join(rel);
+            fs::create_dir_all(p.parent().unwrap()).unwrap();
+            fs::write(p, body).unwrap();
+        }
+        root
+    }
+
+    #[test]
+    fn missing_arm_and_catch_all_flagged() {
+        let trace = "pub enum Event { A { t: f64 }, B { t: f64 } }\n\
+                     impl T { fn to_csv(&self) -> String {\n\
+                       match e { Event::A { t } => \"a_kind\".into(), _ => String::new() }\n\
+                     } }\n\
+                     #[cfg(test)]\nmod tests { fn d() { assert!(c.contains(\"a_kind,1\")); } }\n";
+        let root = tree("ec1", &[("rust/src/coordinator/trace.rs", trace)]);
+        let got = event_csv(&root);
+        assert!(got.iter().any(|f| f.msg.contains("Event::B")));
+        assert!(got.iter().any(|f| f.msg.contains("catch-all")));
+    }
+
+    #[test]
+    fn undocumented_metric_flagged() {
+        let root = tree(
+            "m1",
+            &[
+                ("DESIGN.md", "inventory: `known_total`\n"),
+                ("rust/src/sim/run.rs", "// emits areal_known_total\n"),
+            ],
+        );
+        let f = crate::lint::source_from_str(
+            "rust/src/serve/x.rs",
+            "fn f() { metrics::inc(\"areal_mystery_total\", 1); metrics::inc(\"areal_known_total\", 1); }",
+        );
+        let got = metrics(&root, &[f]);
+        assert_eq!(got.iter().filter(|f| f.rule == "metric-doc").count(), 1);
+        assert!(got[0].msg.contains("areal_mystery_total"));
+    }
+
+    #[test]
+    fn undocumented_config_key_flagged() {
+        let cfg = "impl Config { pub const KEYS: &'static [(&'static str, &'static str)] = &[\n\
+                   (\"documented_key\", \"1\"), (\"mystery_key\", \"2\")]; }\n";
+        let root = tree(
+            "c1",
+            &[
+                ("rust/src/config.rs", cfg),
+                ("docs/CONFIG.md", "| `documented_key` | ... |\n"),
+            ],
+        );
+        let got = config_doc(&root);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("mystery_key"));
+    }
+}

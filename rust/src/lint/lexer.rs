@@ -1,0 +1,337 @@
+//! A lightweight Rust token lexer — just enough structure for areal-lint's
+//! per-function analyses. Produces a flat token stream (identifiers,
+//! numbers, strings, punctuation) with line numbers, plus the set of
+//! `// areal-lint: allow(<rule>, ...)` escape hatches keyed by line.
+//!
+//! Deliberately NOT a full Rust lexer: no parse tree, no macro expansion.
+//! Comments and string contents are opaque; raw strings and nested block
+//! comments are skipped correctly so line numbers stay exact.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// Lines carrying `// areal-lint: allow(<rule>, ...)` comments, keyed by
+/// the line the comment sits on. An allow covers findings on its own line
+/// and on the line immediately below (comment-above form).
+pub type Allows = HashMap<usize, Vec<String>>;
+
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Allows,
+}
+
+fn push(toks: &mut Vec<Tok>, kind: Kind, text: String, line: usize) {
+    toks.push(Tok { kind, text, line });
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut allows: Allows = HashMap::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment — the only place allow annotations live
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            let text: String = cs[start..i].iter().collect();
+            if let Some(pos) = text.find("areal-lint:") {
+                let rest = &text[pos..];
+                if let Some(ap) = rest.find("allow(") {
+                    let mut rule = String::new();
+                    for ch in rest[ap + 6..].chars() {
+                        if ch.is_ascii_alphanumeric() || ch == '-' || ch == '_' {
+                            rule.push(ch);
+                        } else {
+                            break;
+                        }
+                    }
+                    if !rule.is_empty() {
+                        allows.entry(line).or_default().push(rule);
+                    }
+                }
+            }
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // identifier — or the r"/br" prefix of a raw string
+        if c.is_ascii_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (cs[i].is_ascii_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            let text: String = cs[start..i].iter().collect();
+            if (text == "r" || text == "br" || text == "b") && i < n {
+                // peek for a raw/byte string without consuming
+                let mut j = i;
+                let mut hashes = 0usize;
+                while j < n && cs[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                let is_raw = (text != "b" || hashes == 0) && j < n && cs[j] == '"';
+                if is_raw {
+                    let tok_line = line;
+                    j += 1; // past opening quote
+                    if hashes == 0 && (text == "b") {
+                        // byte string b"...": escape-aware scan
+                        while j < n {
+                            if cs[j] == '\\' {
+                                j += 2;
+                            } else if cs[j] == '"' {
+                                break;
+                            } else {
+                                if cs[j] == '\n' {
+                                    line += 1;
+                                }
+                                j += 1;
+                            }
+                        }
+                        j += 1;
+                    } else {
+                        // raw string: ends at quote followed by `hashes` #s
+                        loop {
+                            if j >= n {
+                                break;
+                            }
+                            if cs[j] == '"' {
+                                let mut k = 0usize;
+                                while k < hashes && j + 1 + k < n && cs[j + 1 + k] == '#' {
+                                    k += 1;
+                                }
+                                if k == hashes {
+                                    j += 1 + hashes;
+                                    break;
+                                }
+                            }
+                            if cs[j] == '\n' {
+                                line += 1;
+                            }
+                            j += 1;
+                        }
+                    }
+                    let full: String = cs[start..j.min(n)].iter().collect();
+                    push(&mut toks, Kind::Str, full, tok_line);
+                    i = j.min(n);
+                    continue;
+                }
+            }
+            push(&mut toks, Kind::Ident, text, line);
+            continue;
+        }
+        // number: digits plus alphanumeric/underscore tail (hex, suffixes);
+        // '.' excluded so ranges like `0..n` lex as num..num
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (cs[i].is_ascii_alphanumeric() || cs[i] == '_') {
+                i += 1;
+            }
+            let text: String = cs[start..i].iter().collect();
+            push(&mut toks, Kind::Num, text, line);
+            continue;
+        }
+        // string literal
+        if c == '"' {
+            let start = i;
+            let tok_line = line;
+            i += 1;
+            while i < n {
+                if cs[i] == '\\' {
+                    i += 2;
+                } else if cs[i] == '"' {
+                    break;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            i = (i + 1).min(n);
+            let full: String = cs[start..i.min(n)].iter().collect();
+            push(&mut toks, Kind::Str, full, tok_line);
+            continue;
+        }
+        // char literal or lifetime
+        if c == '\'' {
+            // 'a' is a char, 'abc (no closing quote right after) is a lifetime
+            if i + 1 < n && (cs[i + 1].is_ascii_alphabetic() || cs[i + 1] == '_') {
+                let mut j = i + 1;
+                while j < n && (cs[j].is_ascii_alphanumeric() || cs[j] == '_') {
+                    j += 1;
+                }
+                if j == i + 2 && j < n && cs[j] == '\'' {
+                    let full: String = cs[i..j + 1].iter().collect();
+                    push(&mut toks, Kind::Char, full, line);
+                    i = j + 1;
+                    continue;
+                }
+                let full: String = cs[i..j].iter().collect();
+                push(&mut toks, Kind::Lifetime, full, line);
+                i = j;
+                continue;
+            }
+            // escaped or punctuation char literal: '\n', '\\', '{', ...
+            let start = i;
+            i += 1;
+            if i < n && cs[i] == '\\' {
+                i += 2;
+            } else {
+                i += 1;
+            }
+            while i < n && cs[i] != '\'' {
+                if cs[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i = (i + 1).min(n);
+            let full: String = cs[start..i.min(n)].iter().collect();
+            push(&mut toks, Kind::Char, full, line);
+            continue;
+        }
+        push(&mut toks, Kind::Punct, c.to_string(), line);
+        i += 1;
+    }
+    Lexed { toks, allows }
+}
+
+/// Index of the `#[cfg(test)]` module marker — tokens from there on are
+/// test code, exempt from every rule. Returns `toks.len()` if absent.
+pub fn test_cut(toks: &[Tok]) -> usize {
+    if toks.len() < 6 {
+        return toks.len();
+    }
+    for k in 0..toks.len() - 5 {
+        if toks[k].text == "#"
+            && toks[k + 1].text == "["
+            && toks[k + 2].text == "cfg"
+            && toks[k + 3].text == "("
+            && toks[k + 4].text == "test"
+        {
+            let hi = (k + 12).min(toks.len());
+            for j in k + 6..hi {
+                if toks[j].text == "mod" {
+                    return k;
+                }
+            }
+        }
+    }
+    toks.len()
+}
+
+/// An allow on line `ln` or the line above suppresses a finding at `ln`.
+pub fn allowed(allows: &Allows, rule: &str, ln: usize) -> bool {
+    for probe in [ln, ln.saturating_sub(1)] {
+        if let Some(rules) = allows.get(&probe) {
+            if rules.iter().any(|r| r == rule) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_idents_strings_and_comments() {
+        let lx = lex("fn a() { let s = \"x,y\"; } // areal-lint: allow(panic, reason=\"z\")\n");
+        let idents: Vec<&str> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["fn", "a", "let", "s"]);
+        assert!(allowed(&lx.allows, "panic", 1));
+        assert!(allowed(&lx.allows, "panic", 2)); // line-above form
+        assert!(!allowed(&lx.allows, "index", 1));
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes() {
+        let lx = lex("let r = r#\"no \" end\"#; fn f<'a>(x: &'a str) {}");
+        let strs: Vec<&str> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs.len(), 1);
+        assert!(strs[0].contains("no \" end"));
+        assert!(lx.toks.iter().any(|t| t.kind == Kind::Lifetime));
+    }
+
+    #[test]
+    fn test_cut_finds_cfg_test_module() {
+        let lx = lex("fn a() {}\n#[cfg(test)]\nmod tests { fn b() {} }\n");
+        let cut = test_cut(&lx.toks);
+        let before: Vec<&str> = lx.toks[..cut].iter().map(|t| t.text.as_str()).collect();
+        assert!(before.contains(&"a"));
+        assert!(!before.contains(&"b"));
+    }
+
+    #[test]
+    fn ranges_lex_as_separate_tokens() {
+        let lx = lex("let x = &v[0..10];");
+        let nums: Vec<&str> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "10"]);
+    }
+}

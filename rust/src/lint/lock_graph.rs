@@ -1,0 +1,459 @@
+//! Lock-order discipline over the coordinator/ and serve/ planes.
+//!
+//! Finds every point where a lock guard is still live when another lock is
+//! acquired — in the same function, or one call deep through an
+//! unambiguously-named callee — and checks the resulting edge against the
+//! canonical DAG declared in `lint/lock_order.txt`. Also flags guards held
+//! across blocking operations (`send(`, `write_all(`, `flush(`, zero-arg
+//! `.join()`).
+//!
+//! Heuristics (documented limits, not bugs):
+//! - A lock acquisition is a zero-arg `.lock()/.read()/.write()` or the
+//!   poison-recovering `.plock()/.pread()/.pwrite()` from `util::sync`.
+//! - The lock's name is the last field identifier in the receiver chain
+//!   (`self.convert.plock()` → `convert`); a bare `self.lock()` uses the
+//!   file stem.
+//! - Let-bound guards live to the end of their block (or `drop(var)`);
+//!   expression temporaries live to the end of their statement.
+//! - Callee propagation is one level deep and only through function names
+//!   defined exactly once in the scanned tree, excluding names that
+//!   collide with std-library methods (`len`, `get`, `count`, ...).
+
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::path::Path;
+
+use super::lexer::{allowed, Kind};
+use super::{Finding, SourceFile};
+
+const ACQ: &[&str] = &["lock", "plock", "read", "pread", "write", "pwrite"];
+const BLOCKING: &[&str] = &["send", "write_all", "flush"];
+/// Names that collide with std-library methods: never propagated through,
+/// because a call site cannot be attributed to the repo's own definition.
+const STD_DENY: &[&str] = &[
+    "len", "is_empty", "count", "get", "push", "pop", "insert", "remove", "clone", "take",
+    "clear", "contains", "drain", "iter", "next", "send", "write", "read", "lock", "flush",
+    "join",
+];
+
+fn is_acq(name: &str) -> bool {
+    ACQ.contains(&name)
+}
+
+fn zero_arg_call(f: &SourceFile, i: usize) -> bool {
+    i + 2 < f.toks.len() && f.toks[i + 1].text == "(" && f.toks[i + 2].text == ")"
+}
+
+/// Walk the `.`-chain left of the acquisition method: the lock name is the
+/// innermost field before the method, or the file stem for bare `self`.
+fn receiver_name(f: &SourceFile, i: usize) -> Option<String> {
+    let mut names: Vec<String> = Vec::new();
+    let mut j = i as isize - 1;
+    while j >= 1 && f.toks[j as usize].text == "." {
+        let k = (j - 1) as usize;
+        if f.toks[k].kind == Kind::Ident {
+            names.push(f.toks[k].text.clone());
+            j = k as isize - 1;
+        } else {
+            break;
+        }
+    }
+    if names.is_empty() {
+        return None;
+    }
+    for nm in &names {
+        if nm != "self" {
+            return Some(nm.clone());
+        }
+    }
+    Some(f.stem.clone())
+}
+
+/// A function body: token span `[open_brace, close_brace]` within its file.
+struct FnSpan {
+    file: usize,
+    open: usize,
+    close: usize,
+}
+
+struct Guard {
+    lock: String,
+    var: Option<String>,
+    depth: usize,
+    temp: bool,
+}
+
+pub struct LockReport {
+    pub findings: Vec<Finding>,
+    /// observed edge -> first witnessing site `(file, line, via)`
+    pub edges: BTreeMap<(String, String), (String, usize, String)>,
+}
+
+/// Locks acquired directly by each fn name, for callee propagation.
+type FnLocks = HashMap<String, BTreeSet<String>>;
+
+/// Scan fn definitions: spans, per-name definition counts, and the set of
+/// locks each (uniquely named) fn acquires directly.
+fn pass1(files: &[SourceFile]) -> (Vec<FnSpan>, HashMap<String, usize>, FnLocks) {
+    let mut spans: Vec<FnSpan> = Vec::new();
+    let mut defs: HashMap<String, usize> = HashMap::new();
+    let mut locks: FnLocks = HashMap::new();
+    for (fi, f) in files.iter().enumerate() {
+        let n = f.toks.len();
+        let mut i = 0usize;
+        while i < n {
+            if f.toks[i].text == "fn" && i + 1 < n && f.toks[i + 1].kind == Kind::Ident {
+                let name = f.toks[i + 1].text.clone();
+                // find the body's opening brace; a `;` first means a trait decl
+                let mut j = i + 2;
+                let mut open: Option<usize> = None;
+                while j < n {
+                    if f.toks[j].text == "{" {
+                        open = Some(j);
+                        break;
+                    }
+                    if f.toks[j].text == ";" {
+                        break;
+                    }
+                    j += 1;
+                }
+                let open = match open {
+                    Some(o) => o,
+                    None => {
+                        i += 2;
+                        continue;
+                    }
+                };
+                let mut d = 0isize;
+                let mut k = open;
+                while k < n {
+                    if f.toks[k].text == "{" {
+                        d += 1;
+                    } else if f.toks[k].text == "}" {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                let close = k.min(n - 1);
+                *defs.entry(name.clone()).or_insert(0) += 1;
+                for q in open..close.min(n) {
+                    if f.toks[q].kind == Kind::Ident
+                        && is_acq(&f.toks[q].text)
+                        && q > 0
+                        && f.toks[q - 1].text == "."
+                        && zero_arg_call(f, q)
+                    {
+                        if let Some(nm) = receiver_name(f, q) {
+                            locks.entry(name.clone()).or_default().insert(nm);
+                        }
+                    }
+                }
+                spans.push(FnSpan { file: fi, open, close });
+                i = close;
+            }
+            i += 1;
+        }
+    }
+    (spans, defs, locks)
+}
+
+/// Walk each function body tracking live guards; record lock→lock edges
+/// (direct and one-callee-deep) and guards held across blocking ops.
+pub fn analyze(files: &[SourceFile]) -> LockReport {
+    let (spans, defs, fn_locks) = pass1(files);
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut edges: BTreeMap<(String, String), (String, usize, String)> = BTreeMap::new();
+    let mut note_edge = |a: &str, b: &str, rel: &str, line: usize, via: &str| {
+        edges
+            .entry((a.to_string(), b.to_string()))
+            .or_insert((rel.to_string(), line, via.to_string()));
+    };
+    for span in &spans {
+        let f = &files[span.file];
+        let n = f.toks.len();
+        let mut guards: Vec<Guard> = Vec::new();
+        let mut depth = 0usize;
+        let mut q = span.open;
+        while q <= span.close && q < n {
+            let t = &f.toks[q];
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                guards.retain(|g| g.depth < depth);
+                depth = depth.saturating_sub(1);
+            } else if t.text == ";" {
+                guards.retain(|g| !g.temp);
+            } else if t.kind == Kind::Ident
+                && t.text == "drop"
+                && q + 2 < n
+                && f.toks[q + 1].text == "("
+                && f.toks[q + 2].kind == Kind::Ident
+            {
+                let v = f.toks[q + 2].text.clone();
+                guards.retain(|g| g.var.as_deref() != Some(v.as_str()));
+            } else if t.kind == Kind::Ident
+                && is_acq(&t.text)
+                && q > 0
+                && f.toks[q - 1].text == "."
+                && zero_arg_call(f, q)
+            {
+                if let Some(nm) = receiver_name(f, q) {
+                    if !allowed(&f.allows, "lock-order", t.line) {
+                        for g in &guards {
+                            if g.lock != nm {
+                                note_edge(&g.lock, &nm, &f.rel, t.line, "direct");
+                            }
+                        }
+                    }
+                    // let-bound iff `let [mut] v = <chain>.acq();` exactly
+                    let mut var: Option<String> = None;
+                    let mut b = q as isize - 1;
+                    while b >= span.open as isize
+                        && !matches!(f.toks[b as usize].text.as_str(), ";" | "{" | "}")
+                    {
+                        b -= 1;
+                    }
+                    let s = (b + 1) as usize;
+                    if s < n && f.toks[s].text == "let" {
+                        let mut vi = s + 1;
+                        if vi < n && f.toks[vi].text == "mut" {
+                            vi += 1;
+                        }
+                        if vi < n && f.toks[vi].kind == Kind::Ident {
+                            var = Some(f.toks[vi].text.clone());
+                        }
+                    }
+                    let stmt_ends_here = q + 3 < n && f.toks[q + 3].text == ";";
+                    let temp = !(var.is_some() && stmt_ends_here);
+                    guards.push(Guard {
+                        lock: nm,
+                        var: if temp { None } else { var },
+                        depth,
+                        temp,
+                    });
+                }
+            } else if t.kind == Kind::Ident
+                && BLOCKING.contains(&t.text.as_str())
+                && q + 1 < n
+                && f.toks[q + 1].text == "("
+            {
+                if let Some(g) = guards.last() {
+                    if !allowed(&f.allows, "lock-order", t.line) {
+                        findings.push(Finding::new(
+                            "lock-order",
+                            &f.rel,
+                            t.line,
+                            format!("`{}(` called while guard of `{}` is live", t.text, g.lock),
+                        ));
+                    }
+                }
+            } else if t.kind == Kind::Ident
+                && t.text == "join"
+                && q > 0
+                && f.toks[q - 1].text == "."
+                && zero_arg_call(f, q)
+            {
+                if let Some(g) = guards.last() {
+                    if !allowed(&f.allows, "lock-order", t.line) {
+                        findings.push(Finding::new(
+                            "lock-order",
+                            &f.rel,
+                            t.line,
+                            format!("`.join()` called while guard of `{}` is live", g.lock),
+                        ));
+                    }
+                }
+            }
+            // one-level callee propagation through unambiguous names
+            if t.kind == Kind::Ident
+                && !is_acq(&t.text)
+                && !STD_DENY.contains(&t.text.as_str())
+                && defs.get(&t.text).copied() == Some(1)
+                && q + 1 < n
+                && f.toks[q + 1].text == "("
+                && (q == 0 || f.toks[q - 1].text != "fn")
+            {
+                if let Some(callee_locks) = fn_locks.get(&t.text) {
+                    if !allowed(&f.allows, "lock-order", t.line) {
+                        for g in &guards {
+                            for cl in callee_locks {
+                                if *cl != g.lock {
+                                    note_edge(&g.lock, cl, &f.rel, t.line, &t.text);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            q += 1;
+        }
+    }
+    LockReport { findings, edges }
+}
+
+/// The declared canonical order: `A -> B` lines from lint/lock_order.txt.
+pub struct Manifest {
+    pub edges: Vec<(String, String)>,
+    pub nodes: BTreeSet<String>,
+}
+
+pub fn parse_manifest(text: &str) -> Manifest {
+    let mut edges = Vec::new();
+    let mut nodes = BTreeSet::new();
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split("->").collect();
+        if parts.len() == 2 {
+            let a = parts[0].trim().to_string();
+            let b = parts[1].trim().to_string();
+            nodes.insert(a.clone());
+            nodes.insert(b.clone());
+            edges.push((a, b));
+        }
+    }
+    Manifest { edges, nodes }
+}
+
+/// Transitive closure: every node reachable from `from` in the declared DAG.
+fn reachable(m: &Manifest, from: &str) -> HashSet<String> {
+    let mut seen: HashSet<String> = HashSet::new();
+    let mut stack: Vec<String> = vec![from.to_string()];
+    while let Some(cur) = stack.pop() {
+        for (a, b) in &m.edges {
+            if *a == cur && !seen.contains(b) {
+                seen.insert(b.clone());
+                stack.push(b.clone());
+            }
+        }
+    }
+    seen
+}
+
+fn has_cycle(m: &Manifest) -> Option<String> {
+    for node in &m.nodes {
+        if reachable(m, node).contains(node) {
+            return Some(node.clone());
+        }
+    }
+    None
+}
+
+/// Full lock-order rule: analyze the scanned plane, then check every
+/// observed edge against the manifest's transitive closure.
+pub fn check(root: &Path, files: &[SourceFile]) -> Vec<Finding> {
+    let rep = analyze(files);
+    let mut findings = rep.findings;
+    let manifest_rel = "lint/lock_order.txt";
+    let text = std::fs::read_to_string(root.join(manifest_rel)).unwrap_or_default();
+    let manifest = parse_manifest(&text);
+    if let Some(node) = has_cycle(&manifest) {
+        findings.push(Finding::new(
+            "lock-order",
+            manifest_rel,
+            1,
+            format!("declared lock order contains a cycle through `{node}`"),
+        ));
+    }
+    for ((a, b), (rel, line, via)) in &rep.edges {
+        if text.is_empty() {
+            findings.push(Finding::new(
+                "lock-order",
+                rel,
+                *line,
+                format!("`{b}` acquired under guard of `{a}` but {manifest_rel} is missing"),
+            ));
+            continue;
+        }
+        let ok = manifest.nodes.contains(a)
+            && manifest.nodes.contains(b)
+            && reachable(&manifest, a).contains(b);
+        if !ok {
+            let how = if via == "direct" {
+                String::new()
+            } else {
+                format!(" (via `{via}()`)")
+            };
+            findings.push(Finding::new(
+                "lock-order",
+                rel,
+                *line,
+                format!("`{b}` acquired while guard of `{a}` is live{how} — edge not declared in {manifest_rel}"),
+            ));
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::source_from_str;
+
+    #[test]
+    fn nested_acquisition_yields_edge() {
+        let src = "fn f(&self) { let g = self.alpha.plock(); let h = self.beta.plock(); }";
+        let files = vec![source_from_str("x/a.rs", src)];
+        let rep = analyze(&files);
+        assert!(rep
+            .edges
+            .contains_key(&("alpha".to_string(), "beta".to_string())));
+    }
+
+    #[test]
+    fn scoped_guards_yield_no_edge() {
+        let src = "fn f(&self) { { let g = self.alpha.plock(); } let h = self.beta.plock(); }";
+        let files = vec![source_from_str("x/a.rs", src)];
+        let rep = analyze(&files);
+        assert!(rep.edges.is_empty());
+    }
+
+    #[test]
+    fn drop_releases_guard() {
+        let src = "fn f(&self) { let g = self.alpha.plock(); drop(g); let h = self.beta.plock(); }";
+        let files = vec![source_from_str("x/a.rs", src)];
+        let rep = analyze(&files);
+        assert!(rep.edges.is_empty());
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_statement_end() {
+        let src = "fn f(&self) { let v = self.alpha.plock().len(); let h = self.beta.plock(); }";
+        let files = vec![source_from_str("x/a.rs", src)];
+        let rep = analyze(&files);
+        assert!(rep.edges.is_empty());
+    }
+
+    #[test]
+    fn callee_propagation_one_level() {
+        let src = "fn inner(&self) { let g = self.beta.plock(); }\n\
+                   fn outer(&self) { let g = self.alpha.plock(); self.inner(); }";
+        let files = vec![source_from_str("x/a.rs", src)];
+        let rep = analyze(&files);
+        let key = ("alpha".to_string(), "beta".to_string());
+        assert!(rep.edges.contains_key(&key));
+        assert_eq!(rep.edges[&key].2, "inner");
+    }
+
+    #[test]
+    fn blocking_op_under_guard_flagged() {
+        let src = "fn f(&self) { let g = self.alpha.plock(); tx.send(1); }";
+        let files = vec![source_from_str("x/a.rs", src)];
+        let rep = analyze(&files);
+        assert_eq!(rep.findings.len(), 1);
+        assert_eq!(rep.findings[0].rule, "lock-order");
+    }
+
+    #[test]
+    fn manifest_closure_accepts_transitive_edges() {
+        let m = parse_manifest("# comment\na -> b\nb -> c\n");
+        assert!(reachable(&m, "a").contains("c"));
+        assert!(has_cycle(&m).is_none());
+        let cyc = parse_manifest("a -> b\nb -> a\n");
+        assert!(has_cycle(&cyc).is_some());
+    }
+}

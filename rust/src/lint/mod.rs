@@ -1,0 +1,115 @@
+//! areal-lint: project-invariant static analysis for the concurrent
+//! rollout/train planes (DESIGN.md §12).
+//!
+//! Four rule families, each with an inline escape hatch
+//! `// areal-lint: allow(<rule>, reason="...")`:
+//!
+//! - `lock-order` — lock acquired while another guard is live must follow
+//!   the canonical DAG in `lint/lock_order.txt`; guards must not be held
+//!   across channel sends / socket writes / thread joins.
+//! - `panic` / `index` — no unannotated `.unwrap()` / `.expect(` /
+//!   `panic!` / unchecked slice index in non-test serve/ + coordinator/.
+//! - `event-csv` / `metric-doc` / `metric-sim` / `config-doc` — drift
+//!   exhaustiveness between code and its restatements (trace CSV arms and
+//!   decode tests, the DESIGN.md metric inventory, the simulator's metric
+//!   emissions, docs/CONFIG.md).
+//! - `epoch-fence` — replica teardown calls must flow an epoch argument,
+//!   and `reopen()` epochs must not be discarded.
+//!
+//! Run with `cargo run --release --bin areal_lint` from the repo root.
+
+pub mod drift;
+pub mod lexer;
+pub mod lock_graph;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub use report::{render, Finding};
+
+/// One lexed source file with its test region already removed.
+pub struct SourceFile {
+    /// path relative to the lint root, with `/` separators
+    pub rel: String,
+    /// file stem, used as the lock name for bare `self.lock()`
+    pub stem: String,
+    pub toks: Vec<lexer::Tok>,
+    pub allows: lexer::Allows,
+}
+
+pub fn source_from_str(rel: &str, src: &str) -> SourceFile {
+    let lx = lexer::lex(src);
+    let cut = lexer::test_cut(&lx.toks);
+    let stem = Path::new(rel)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("file")
+        .to_string();
+    SourceFile { rel: rel.to_string(), stem, toks: lx.toks[..cut].to_vec(), allows: lx.allows }
+}
+
+fn load(root: &Path, rel: &str) -> Option<SourceFile> {
+    let src = std::fs::read_to_string(root.join(rel)).ok()?;
+    Some(source_from_str(rel, &src))
+}
+
+/// All `.rs` files under `root/<dir>`, recursively, sorted, as root-relative
+/// `/`-separated paths.
+fn rs_files(root: &Path, dir: &str) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    let mut stack: Vec<PathBuf> = vec![root.join(dir)];
+    while let Some(d) = stack.pop() {
+        let entries = match std::fs::read_dir(&d) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                if let Ok(rel) = p.strip_prefix(root) {
+                    out.push(rel.to_string_lossy().replace('\\', "/"));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Lint a tree laid out like this repository (rust/src/{serve,coordinator},
+/// lint/lock_order.txt, DESIGN.md, docs/CONFIG.md). Fixture trees in tests
+/// use the same shape; rules whose anchor files are absent do not fire.
+pub fn lint_tree(root: &Path) -> Vec<Finding> {
+    let mut findings: Vec<Finding> = Vec::new();
+
+    // the concurrent plane: lock-order + panic/index scope
+    let mut plane: Vec<SourceFile> = Vec::new();
+    for dir in ["rust/src/serve", "rust/src/coordinator"] {
+        for rel in rs_files(root, dir) {
+            if let Some(sf) = load(root, &rel) {
+                plane.push(sf);
+            }
+        }
+    }
+    findings.extend(lock_graph::check(root, &plane));
+    findings.extend(rules::panic_index(&plane));
+
+    // whole-crate scans: metric drift + epoch fences
+    let mut all: Vec<SourceFile> = Vec::new();
+    for rel in rs_files(root, "rust/src") {
+        if let Some(sf) = load(root, &rel) {
+            all.push(sf);
+        }
+    }
+    findings.extend(drift::metrics(root, &all));
+    findings.extend(rules::epoch_fence(&all));
+
+    findings.extend(drift::event_csv(root));
+    findings.extend(drift::config_doc(root));
+
+    report::sort(&mut findings);
+    findings
+}

@@ -1,0 +1,69 @@
+//! Finding type and the text report renderer shared by the `areal_lint`
+//! binary and the self-test suite.
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn new(rule: &str, file: &str, line: usize, msg: String) -> Self {
+        Finding { rule: rule.to_string(), file: file.to_string(), line, msg }
+    }
+}
+
+/// Stable order: file, then line, then rule — so CI diffs are meaningful.
+pub fn sort(findings: &mut [Finding]) {
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+}
+
+/// Render the human/CI report: one `file:line: [rule] msg` per finding,
+/// then a per-rule tally and the verdict line.
+pub fn render(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.msg));
+    }
+    let mut rules: Vec<&str> = findings.iter().map(|f| f.rule.as_str()).collect();
+    rules.sort();
+    rules.dedup();
+    if findings.is_empty() {
+        out.push_str("areal-lint: clean (0 findings)\n");
+    } else {
+        out.push('\n');
+        for r in rules {
+            let n = findings.iter().filter(|f| f.rule == r).count();
+            out.push_str(&format!("  {r}: {n}\n"));
+        }
+        out.push_str(&format!("areal-lint: {} finding(s)\n", findings.len()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_sorted_and_tallied() {
+        let mut fs = vec![
+            Finding::new("panic", "b.rs", 3, "x".to_string()),
+            Finding::new("index", "a.rs", 9, "y".to_string()),
+        ];
+        sort(&mut fs);
+        let r = render(&fs);
+        assert!(r.starts_with("a.rs:9: [index] y\n"));
+        assert!(r.contains("panic: 1"));
+        assert!(r.contains("2 finding(s)"));
+    }
+
+    #[test]
+    fn clean_report() {
+        assert!(render(&[]).contains("clean"));
+    }
+}

@@ -1,0 +1,288 @@
+//! Panic-path and epoch-fence rules.
+//!
+//! panic: no unannotated `.unwrap()` / `.expect(` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` in non-test serve/ and
+//!   coordinator/ code.
+//! index: no unannotated postfix indexing `x[i]` there either — ranges
+//!   (`x[a..b]`) and integer-literal indices (`x[0]`) are exempt.
+//! epoch-fence: `close_salvage_at(..)` / `remove_replica_at(..)` call
+//!   sites must flow an `epoch` argument, and a `reopen()` result (the new
+//!   epoch) must not be discarded.
+//!
+//! Escape hatch scopes for `// areal-lint: allow(<rule>, reason="...")`:
+//! same line, the line above, above a `fn` (covers the body), or above an
+//! `impl` (covers the whole impl block).
+
+use super::lexer::{allowed, Kind};
+use super::{Finding, SourceFile};
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// `(start_line, end_line, rule)` spans from fn- and impl-scope allows.
+fn scoped_allows(f: &SourceFile) -> Vec<(usize, usize, String)> {
+    let mut out: Vec<(usize, usize, String)> = Vec::new();
+    let n = f.toks.len();
+    let mut i = 0usize;
+    while i < n {
+        let is_fn = f.toks[i].text == "fn" && i + 1 < n && f.toks[i + 1].kind == Kind::Ident;
+        let is_impl = f.toks[i].text == "impl";
+        if is_fn || is_impl {
+            let hdr = f.toks[i].line;
+            let mut rules: Vec<String> = Vec::new();
+            for probe in [hdr.saturating_sub(1), hdr] {
+                if let Some(rs) = f.allows.get(&probe) {
+                    for r in rs {
+                        rules.push(r.clone());
+                    }
+                }
+            }
+            if !rules.is_empty() {
+                let mut j = i + 1;
+                while j < n && f.toks[j].text != "{" && f.toks[j].text != ";" {
+                    j += 1;
+                }
+                if j < n && f.toks[j].text == "{" {
+                    let mut d = 0isize;
+                    let mut k = j;
+                    while k < n {
+                        if f.toks[k].text == "{" {
+                            d += 1;
+                        } else if f.toks[k].text == "}" {
+                            d -= 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    let end = f.toks[k.min(n - 1)].line;
+                    for r in rules {
+                        out.push((hdr, end, r));
+                    }
+                    if is_fn {
+                        i = j;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+fn span_allowed(spans: &[(usize, usize, String)], rule: &str, ln: usize) -> bool {
+    spans.iter().any(|(a, b, r)| *a <= ln && ln <= *b && r == rule)
+}
+
+/// panic + index rules over the serve/coordinator plane.
+pub fn panic_index(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    for f in files {
+        let spans = scoped_allows(f);
+        let n = f.toks.len();
+        let ok = |rule: &str, ln: usize| {
+            allowed(&f.allows, rule, ln) || span_allowed(&spans, rule, ln)
+        };
+        for q in 0..n {
+            let t = &f.toks[q];
+            if t.kind == Kind::Ident
+                && (t.text == "unwrap" || t.text == "expect")
+                && q > 0
+                && f.toks[q - 1].text == "."
+                && q + 1 < n
+                && f.toks[q + 1].text == "("
+                && !ok("panic", t.line)
+            {
+                out.push(Finding::new(
+                    "panic",
+                    &f.rel,
+                    t.line,
+                    format!(".{}( in non-test code — convert to `?` or annotate the invariant", t.text),
+                ));
+            }
+            if t.kind == Kind::Ident
+                && PANIC_MACROS.contains(&t.text.as_str())
+                && q + 1 < n
+                && f.toks[q + 1].text == "!"
+                && !ok("panic", t.line)
+            {
+                out.push(Finding::new(
+                    "panic",
+                    &f.rel,
+                    t.line,
+                    format!("{}! in non-test code", t.text),
+                ));
+            }
+            if t.text == "[" && q > 0 {
+                let p = &f.toks[q - 1];
+                let postfix = p.kind == Kind::Ident || p.text == ")" || p.text == "]";
+                if postfix {
+                    let mut d = 0isize;
+                    let mut k = q;
+                    while k < n {
+                        if f.toks[k].text == "[" {
+                            d += 1;
+                        } else if f.toks[k].text == "]" {
+                            d -= 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        k += 1;
+                    }
+                    let inner: Vec<&super::lexer::Tok> = f.toks[q + 1..k.min(n)].iter().collect();
+                    let txt: String = inner.iter().map(|t| t.text.as_str()).collect();
+                    let is_range = txt.contains("..");
+                    let is_const = inner.len() == 1 && inner[0].kind == Kind::Num;
+                    if !is_range && !is_const && !inner.is_empty() && !ok("index", t.line) {
+                        out.push(Finding::new(
+                            "index",
+                            &f.rel,
+                            t.line,
+                            format!("unchecked index `[{txt}]` — out-of-range panics at runtime"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// epoch-fence rule over the full rust/src tree.
+pub fn epoch_fence(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out: Vec<Finding> = Vec::new();
+    for f in files {
+        let n = f.toks.len();
+        for q in 0..n {
+            let t = &f.toks[q];
+            if t.kind == Kind::Ident
+                && (t.text == "close_salvage_at" || t.text == "remove_replica_at")
+            {
+                if q > 0 && f.toks[q - 1].text == "fn" {
+                    continue; // definition, not a call site
+                }
+                if q + 1 >= n || f.toks[q + 1].text != "(" {
+                    continue;
+                }
+                let mut d = 0isize;
+                let mut k = q + 1;
+                let mut has_epoch = false;
+                while k < n {
+                    if f.toks[k].text == "(" {
+                        d += 1;
+                    } else if f.toks[k].text == ")" {
+                        d -= 1;
+                        if d == 0 {
+                            break;
+                        }
+                    } else if f.toks[k].kind == Kind::Ident && f.toks[k].text.contains("epoch") {
+                        has_epoch = true;
+                    }
+                    k += 1;
+                }
+                if !has_epoch && !allowed(&f.allows, "epoch-fence", t.line) {
+                    out.push(Finding::new(
+                        "epoch-fence",
+                        &f.rel,
+                        t.line,
+                        format!(
+                            "{}( call without an epoch argument — bare slot indices race with slot reuse",
+                            t.text
+                        ),
+                    ));
+                }
+            }
+            if t.kind == Kind::Ident
+                && t.text == "reopen"
+                && q > 0
+                && f.toks[q - 1].text == "."
+                && q + 2 < n
+                && f.toks[q + 1].text == "("
+                && f.toks[q + 2].text == ")"
+                && q + 3 < n
+                && f.toks[q + 3].text == ";"
+            {
+                // result (the new epoch) discarded: a statement that is just
+                // `<chain>.reopen();`
+                let mut b = q as isize - 1;
+                while b >= 0 && !matches!(f.toks[b as usize].text.as_str(), ";" | "{" | "}") {
+                    b -= 1;
+                }
+                let s = (b + 1) as usize;
+                let plain_chain =
+                    (s..q).all(|x| f.toks[x].kind == Kind::Ident || f.toks[x].text == ".");
+                if s < q
+                    && f.toks[s].text != "let"
+                    && plain_chain
+                    && !allowed(&f.allows, "epoch-fence", t.line)
+                {
+                    out.push(Finding::new(
+                        "epoch-fence",
+                        &f.rel,
+                        t.line,
+                        "reopen() epoch discarded — callers must fence pulls on the new epoch"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::source_from_str;
+
+    #[test]
+    fn bare_unwrap_flagged_annotated_passes() {
+        let bad = source_from_str("x/a.rs", "fn f() { y.unwrap(); }");
+        assert_eq!(panic_index(&[bad]).len(), 1);
+        let good = source_from_str(
+            "x/a.rs",
+            "fn f() { y.unwrap(); // areal-lint: allow(panic, reason=\"ok\")\n }",
+        );
+        assert!(panic_index(&[good]).is_empty());
+    }
+
+    #[test]
+    fn index_rule_exempts_ranges_and_consts() {
+        let src = "fn f() { let a = v[i]; let b = v[0]; let c = &v[1..3]; }";
+        let got = panic_index(&[source_from_str("x/a.rs", src)]);
+        assert_eq!(got.len(), 1);
+        assert!(got[0].msg.contains("[i]"));
+    }
+
+    #[test]
+    fn fn_scope_allow_covers_body() {
+        let src = "// areal-lint: allow(index, reason=\"arena ids\")\n\
+                   fn f() { let a = v[i]; let b = w[j]; }";
+        assert!(panic_index(&[source_from_str("x/a.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn impl_scope_allow_covers_all_fns() {
+        let src = "// areal-lint: allow(index, reason=\"arena ids\")\n\
+                   impl T {\n fn f(&self) { v[i]; }\n fn g(&self) { w[j]; }\n }";
+        assert!(panic_index(&[source_from_str("x/a.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn fence_requires_epoch_argument() {
+        let bad = source_from_str("x/a.rs", "fn f() { t.close_salvage_at(slot); }");
+        let got = epoch_fence(&[bad]);
+        assert_eq!(got.len(), 1);
+        let good = source_from_str("x/a.rs", "fn f() { t.close_salvage_at(epoch); }");
+        assert!(epoch_fence(&[good]).is_empty());
+    }
+
+    #[test]
+    fn discarded_reopen_flagged() {
+        let bad = source_from_str("x/a.rs", "fn f() { t.reopen(); }");
+        assert_eq!(epoch_fence(&[bad]).len(), 1);
+        let good = source_from_str("x/a.rs", "fn f() { let e = t.reopen(); }");
+        assert!(epoch_fence(&[good]).is_empty());
+    }
+}

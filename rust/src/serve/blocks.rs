@@ -42,6 +42,7 @@ pub struct BlockManager {
     peak_in_use: usize,
 }
 
+// areal-lint: allow(index, reason="block ids are arena indices owned by the pool; a bad id is corruption worth crashing on")
 impl BlockManager {
     pub fn new(num_blocks: usize, block_size: usize) -> Self {
         assert!(num_blocks > 0, "need at least one KV block");

@@ -79,6 +79,7 @@ impl Default for RadixCache {
     }
 }
 
+// areal-lint: allow(index, reason="node ids are arena indices; freed ids never escape the tree")
 impl RadixCache {
     pub fn new() -> Self {
         let root = Node {
@@ -101,11 +102,11 @@ impl RadixCache {
     }
 
     fn node(&self, id: NodeId) -> &Node {
-        self.nodes[id].as_ref().expect("dangling node id")
+        self.nodes[id].as_ref().expect("dangling node id") // areal-lint: allow(panic, reason="node ids are arena indices; freed ids never escape")
     }
 
     fn node_mut(&mut self, id: NodeId) -> &mut Node {
-        self.nodes[id].as_mut().expect("dangling node id")
+        self.nodes[id].as_mut().expect("dangling node id") // areal-lint: allow(panic, reason="node ids are arena indices; freed ids never escape")
     }
 
     fn alloc_node(&mut self, node: Node) -> NodeId {
@@ -373,7 +374,7 @@ impl RadixCache {
         let mut released = 0usize;
         let mut stack = vec![id];
         while let Some(nid) = stack.pop() {
-            let node = self.nodes[nid].take().expect("dangling node in subtree");
+            let node = self.nodes[nid].take().expect("dangling node in subtree"); // areal-lint: allow(panic, reason="subtree walk only visits live arena nodes")
             self.free_nodes.push(nid);
             for &b in &node.blocks {
                 bm.release(b);

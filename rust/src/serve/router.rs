@@ -74,6 +74,7 @@ use std::time::Instant;
 use crate::util::metrics;
 
 use super::transport::{fnv_tokens, LocalTransport, ReplicaTransport};
+use crate::util::sync::{MutexExt, RwLockExt};
 
 pub use super::transport::{Control, ProbeSnapshot, ReplicaProbe, Request};
 
@@ -250,7 +251,7 @@ impl<T: Send + 'static> Router<T> {
 
     /// Total replica slots ever created (alive + dead).
     pub fn n_replicas(&self) -> usize {
-        self.replicas.read().unwrap().len()
+        self.replicas.pread().len()
     }
 
     /// Currently alive replicas.
@@ -274,11 +275,11 @@ impl<T: Send + 'static> Router<T> {
     }
 
     fn transport(&self, i: usize) -> Option<Arc<dyn ReplicaTransport<T>>> {
-        self.replicas.read().unwrap().get(i).cloned()
+        self.replicas.pread().get(i).cloned()
     }
 
     fn snapshot(&self) -> Vec<Arc<dyn ReplicaTransport<T>>> {
-        self.replicas.read().unwrap().clone()
+        self.replicas.pread().clone()
     }
 
     /// The single whole-fleet iteration helper: every walk that visits
@@ -309,7 +310,7 @@ impl<T: Send + 'static> Router<T> {
     /// that epoch. A revived slot keeps its transport backend, so a
     /// socket replica's successor reconnects to the same endpoint.
     pub fn add_replica(&self) -> (usize, u64) {
-        let mut reps = self.replicas.write().unwrap();
+        let mut reps = self.replicas.pwrite();
         for (i, t) in reps.iter().enumerate() {
             if !t.is_open() {
                 let epoch = t.reopen();
@@ -323,7 +324,7 @@ impl<T: Send + 'static> Router<T> {
 
     /// Append a new replica slot over a caller-supplied endpoint.
     pub fn add_replica_with(&self, t: Arc<dyn ReplicaTransport<T>>) -> (usize, u64) {
-        let mut reps = self.replicas.write().unwrap();
+        let mut reps = self.replicas.pwrite();
         let epoch = t.epoch();
         reps.push(t);
         (reps.len() - 1, epoch)
@@ -355,7 +356,7 @@ impl<T: Send + 'static> Router<T> {
         // drains here or is re-routed by its submitter — none can strand
         // in a dead inbox, and a stale removal closes nothing.
         let (t, orphans) = {
-            let reps = self.replicas.write().unwrap();
+            let reps = self.replicas.pwrite();
             let t = reps.get(replica)?.clone();
             if !t.is_open() {
                 return None;
@@ -368,7 +369,7 @@ impl<T: Send + 'static> Router<T> {
             (t, orphans)
         };
         t.clear_probe();
-        self.sticky.lock().unwrap().retain(|_, owner| *owner != replica);
+        self.sticky.plock().retain(|_, owner| *owner != replica);
         self.removed.fetch_add(1, Ordering::Relaxed);
         let n = orphans.len();
         for req in orphans {
@@ -430,6 +431,7 @@ impl<T: Send + 'static> Router<T> {
         }
     }
 
+    // areal-lint: allow(index, reason="replica indices come from the alive set built under the same snapshot")
     fn pick_replica(&self, reps: &[Arc<dyn ReplicaTransport<T>>], tokens: &[i32]) -> usize {
         let alive: Vec<usize> = reps
             .iter()
@@ -443,12 +445,12 @@ impl<T: Send + 'static> Router<T> {
             RoutePolicy::Fifo => alive[self.rr.fetch_add(1, Ordering::Relaxed) % n],
             RoutePolicy::Affinity => {
                 let fp = self.fingerprint(tokens);
-                let mut sticky = self.sticky.lock().unwrap();
+                let mut sticky = self.sticky.plock();
                 let least = alive
                     .iter()
                     .copied()
                     .min_by_key(|&i| reps[i].outstanding())
-                    .unwrap();
+                    .unwrap(); // areal-lint: allow(panic, reason="alive is non-empty before policy dispatch")
                 // a sticky owner that died (removal races the sticky map)
                 // is treated as a fresh prefix, never returned
                 let owner = sticky.get(&fp).copied().filter(|&o| {
@@ -487,7 +489,7 @@ impl<T: Send + 'static> Router<T> {
                     .collect();
                 let fp = self.fingerprint(tokens);
                 let bonus = self.aligned_len(tokens) as f64;
-                let mut sticky = self.sticky.lock().unwrap();
+                let mut sticky = self.sticky.plock();
                 let hint = sticky.get(&fp).copied().filter(|&h| {
                     reps.get(h).is_some_and(|t| t.is_open())
                 });
@@ -515,6 +517,7 @@ impl<T: Send + 'static> Router<T> {
     }
 
     /// Route one request; returns the chosen replica.
+    // areal-lint: allow(index, reason="replica indices come from the alive set built under the same snapshot")
     pub fn submit(&self, req: Request<T>) -> usize {
         let t0 = if metrics::enabled() { Some(Instant::now()) } else { None };
         let mut slot = Some(req);
@@ -522,7 +525,7 @@ impl<T: Send + 'static> Router<T> {
             // fresh snapshot per attempt: a retry after racing a removal
             // must see replicas added since, not spin over a stale fleet
             let reps = self.snapshot();
-            let mut req = slot.take().expect("request in flight");
+            let mut req = slot.take().expect("request in flight"); // areal-lint: allow(panic, reason="the slot is refilled on every retry path below")
             req.span.stamp_route();
             let tokens = req.tokens.len() as u64;
             let r = self.pick_replica(&reps, &req.tokens);
@@ -556,6 +559,7 @@ impl<T: Send + 'static> Router<T> {
     /// current epoch (re-checked by the endpoint under its inbox lock),
     /// so a worker whose slot was removed (and possibly revived for a
     /// successor) can never serve the new epoch's requests.
+    // areal-lint: allow(index, reason="replica indices come from the alive set built under the same snapshot")
     pub fn pull_at(&self, replica: usize, epoch: u64, max_n: usize) -> Pulled<T> {
         let reps = self.snapshot();
         let Some(me) = reps.get(replica) else {
@@ -606,7 +610,7 @@ impl<T: Send + 'static> Router<T> {
         // siblings of a stolen group must follow the thief's warm cache,
         // not prefill cold on the victim
         if self.cfg.policy != RoutePolicy::Fifo {
-            let mut sticky = self.sticky.lock().unwrap();
+            let mut sticky = self.sticky.plock();
             for r in &stolen {
                 sticky.insert(self.fingerprint(&r.tokens), replica);
             }
@@ -1026,17 +1030,17 @@ mod tests {
     ) {
         for _ in 0..rounds {
             let cap = {
-                let s = sched.lock().unwrap();
+                let s = sched.plock();
                 4usize.saturating_sub(s.running_len() + s.waiting_len())
             };
             for q in router.pull(w, cap).reqs {
-                let mut s = sched.lock().unwrap();
+                let mut s = sched.plock();
                 let plen = q.tokens.len();
                 assert!(s.submit(*next_id, q.tokens));
                 targets.insert(*next_id, (target_len.max(plen + 1), plen));
                 *next_id += 1;
             }
-            let mut s = sched.lock().unwrap();
+            let mut s = sched.plock();
             for a in s.schedule() {
                 s.note_prefilled(a.id, &a.tokens);
                 active.insert(a.id, a.tokens);
@@ -1127,7 +1131,7 @@ mod tests {
                              &mut targets[w], &mut active[w], target_len);
             }
             let idle = (0..replicas).all(|w| {
-                active[w].is_empty() && scheds[w].lock().unwrap().waiting_len() == 0
+                active[w].is_empty() && scheds[w].plock().waiting_len() == 0
             });
             if idle && router.queued_total() == 0 {
                 break;
@@ -1136,7 +1140,7 @@ mod tests {
         let mut computed = 0u64;
         let mut cached = 0u64;
         for s in &scheds {
-            let s = s.lock().unwrap();
+            let s = s.plock();
             computed += s.prefill_tokens_computed;
             cached += s.prefill_tokens_cached;
         }
@@ -1205,7 +1209,7 @@ mod tests {
         let p: Vec<i32> = (0..16).collect();
         // replica 0: warm cache for p, but heavy outstanding load
         {
-            let mut s = scheds[0].lock().unwrap();
+            let mut s = scheds[0].plock();
             assert!(s.submit(0, p.clone()));
             s.schedule();
             s.note_prefilled(0, &p);
@@ -1214,7 +1218,7 @@ mod tests {
                 assert!(s.submit(i, (0..64).map(|x| x + i as i32).collect()));
             }
         }
-        assert!(scheds[0].lock().unwrap().probe_cached_tokens(&p) > 0);
+        assert!(scheds[0].plock().probe_cached_tokens(&p) > 0);
         let placed = r.submit(req(1, p));
         assert_eq!(placed, 1, "penalty must override the warm-but-loaded owner");
     }

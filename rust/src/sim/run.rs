@@ -848,6 +848,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
     let mut tokens_trained = 0.0;
     let mut train_active_s = 0.0;
     let mut gen_tokens = 0.0;
+    let mut completions = 0u64;
     let mut interrupts = 0u64;
     let mut staleness_samples: Vec<f64> = Vec::new();
     let mut max_stale = 0u64;
@@ -947,6 +948,7 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         for dev in devices.iter_mut() {
             for done in dev.advance_to(hw, m, now, t_next, cfg.prompt_len) {
                 gen_tokens += done.produced;
+                completions += 1;
                 buffer.push((done.produced, done.born_version));
             }
         }
@@ -978,6 +980,23 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
             trainer_busy_until = None;
             version += 1;
             steps_done += 1;
+            if metrics::enabled() {
+                // live-name parity (DESIGN.md §10): the gate and router
+                // gauges the coordinator emits, fed from the modeled state
+                // at the same cadence (the version bump)
+                if let Some(eta) = cfg.eta {
+                    let b = cfg.batch_seqs as u64;
+                    let ceiling = b * (version + eta + 1);
+                    let headroom = ceiling.saturating_sub(submitted) as f64 / b as f64;
+                    metrics::set("areal_gate_headroom_batches", headroom);
+                    metrics::set(
+                        "areal_gate_occupancy",
+                        (1.0 - headroom / (eta + 1) as f64).clamp(0.0, 1.0),
+                    );
+                }
+                let depth: usize = router.inboxes.iter().map(|q| q.len()).sum();
+                metrics::set("areal_inbox_depth", depth as f64);
+            }
             // replica-failure sweep: the scheduled device leaves the fleet
             // now — its in-flight decode is lost (the work, not the
             // requests), and every queued/in-flight request requeues
@@ -1158,6 +1177,26 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         // lead count as registered DP ranks (final value of the run)
         metrics::set("areal_dp_workers",
                      ((n_train / m.tp).max(1) - 1) as f64);
+        // modeled request-latency series: time-to-first-token is the cold
+        // prefill of one prompt; a mean-length completion's e2e adds its
+        // share of device decode time (S slots share each busy second)
+        let ttft = prefill_s(hw, m, cfg.prompt_len);
+        metrics::observe("areal_ttft_seconds", ttft);
+        if completions > 0 {
+            let mean_decode = busy * slots_per_dev as f64 / completions as f64;
+            metrics::observe("areal_e2e_seconds", ttft + mean_decode);
+        }
+        // transport analogs: the hop-cost model is what the live router
+        // and frame codec measure (place = one hop, steal/RTT = two)
+        let hop = cfg.transport_hop_s.max(0.0);
+        metrics::observe("areal_route_place_seconds", hop);
+        if stolen_requests > 0 {
+            metrics::observe("areal_route_steal_seconds", 2.0 * hop);
+        }
+        metrics::observe("areal_frame_rtt_seconds", 2.0 * hop);
+        // admission + failure counters, live-name parity
+        metrics::inc("areal_sched_admitted_total", submitted);
+        metrics::inc("areal_socket_reconnects_total", failed_replicas);
     }
     SimReport {
         policy: "async",

@@ -9,4 +9,5 @@ pub mod minibench;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;

@@ -1,0 +1,120 @@
+//! Poison-recovering lock helpers — the project-wide answer to the
+//! panic-path policy enforced by `areal-lint` (DESIGN.md §12).
+//!
+//! `Mutex::lock().unwrap()` turns one panicked writer into a cascade:
+//! every later thread that touches the lock dies on the poison flag even
+//! though the protected data is still structurally sound (every guarded
+//! region in this codebase either finishes its mutation or panics before
+//! starting it). The helpers below recover the inner guard instead, so a
+//! crashed rollout worker degrades to *its* replica being retired rather
+//! than poisoning the router, the trace ring, or the metrics registry for
+//! everyone else.
+//!
+//! Naming: `plock`/`pread`/`pwrite` ("poison-tolerant lock/read/write")
+//! are what `areal-lint`'s lock-order pass recognises as acquisitions, so
+//! converted call sites stay visible to the static analysis.
+
+use std::sync::{
+    Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    WaitTimeoutResult,
+};
+use std::time::Duration;
+
+/// Poison-tolerant `Mutex` access.
+pub trait MutexExt<T> {
+    /// Like [`Mutex::lock`], but recovers the guard from a poisoned lock
+    /// instead of panicking the caller.
+    fn plock(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T> MutexExt<T> for Mutex<T> {
+    fn plock(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Poison-tolerant `RwLock` access.
+pub trait RwLockExt<T> {
+    /// Like [`RwLock::read`], recovering from poison.
+    fn pread(&self) -> RwLockReadGuard<'_, T>;
+    /// Like [`RwLock::write`], recovering from poison.
+    fn pwrite(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T> RwLockExt<T> for RwLock<T> {
+    fn pread(&self) -> RwLockReadGuard<'_, T> {
+        self.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn pwrite(&self) -> RwLockWriteGuard<'_, T> {
+        self.write().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Poison-tolerant `Condvar` waits (the guard re-acquisition after a wait
+/// carries the same poison flag as a direct `lock()`).
+pub trait CondvarExt {
+    fn pwait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T>;
+    fn pwait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult);
+}
+
+impl CondvarExt for Condvar {
+    fn pwait<'a, T>(&self, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+        self.wait(guard).unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn pwait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        self.wait_timeout(guard, dur)
+            .unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn plock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7usize));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock really is poisoned");
+        assert_eq!(*m.plock(), 7, "plock recovers the data");
+    }
+
+    #[test]
+    fn pread_pwrite_recover_from_poison() {
+        let l = Arc::new(RwLock::new(3usize));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert_eq!(*l.pread(), 3);
+        *l.pwrite() = 4;
+        assert_eq!(*l.pread(), 4);
+    }
+
+    #[test]
+    fn pwait_timeout_times_out() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = m.plock();
+        let (_g, res) = cv.pwait_timeout(g, Duration::from_millis(1));
+        assert!(res.timed_out());
+    }
+}

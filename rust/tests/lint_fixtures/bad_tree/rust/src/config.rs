@@ -1,0 +1,8 @@
+pub struct Config;
+
+impl Config {
+    pub const KEYS: &'static [(&'static str, &'static str)] = &[
+        ("documented_key", "1"),
+        ("mystery_key", "2"),
+    ];
+}

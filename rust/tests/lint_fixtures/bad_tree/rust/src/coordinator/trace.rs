@@ -1,0 +1,17 @@
+// Drift fixture: Event::Beta has no to_csv arm and the match hides the
+// gap behind a catch-all. Line numbers are asserted by lint_self.rs.
+pub enum Event {
+    Alpha { t: f64 },
+    Beta { t: f64 },
+}
+
+pub struct Tracer;
+
+impl Tracer {
+    fn to_csv(&self, e: &Event) -> String {
+        match e {
+            Event::Alpha { t } => format!("{t},alpha_kind"),
+            _ => String::new(),
+        }
+    }
+}

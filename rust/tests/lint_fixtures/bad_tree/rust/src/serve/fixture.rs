@@ -1,0 +1,36 @@
+// Seeded-violation fixture for areal-lint's self-test. Every finding's
+// file:line is asserted by rust/tests/lint_self.rs — keep line numbers
+// stable when editing.
+pub struct Fx;
+
+impl Fx {
+    fn bad_lock_order(&self) {
+        let g = self.beta.plock();
+        let h = self.alpha.plock();
+    }
+
+    fn bad_unwrap(&self) {
+        let v = self.maybe.unwrap();
+    }
+
+    fn bad_index(&self, i: usize) {
+        let x = self.items[i];
+    }
+
+    fn bad_fence(&self, slot: usize) {
+        self.t.close_salvage_at(slot);
+    }
+
+    fn bad_send(&self) {
+        let g = self.beta.plock();
+        self.tx.send(1);
+    }
+
+    fn bad_metric(&self) {
+        metrics::inc("areal_phantom_total", 1);
+    }
+
+    fn bad_reopen(&self) {
+        self.t.reopen();
+    }
+}

@@ -1,0 +1,41 @@
+// Compliant fixture: the same shapes as bad_tree, written the way the
+// lint wants them — declared lock order, annotated invariants, fenced
+// epochs, documented metrics.
+pub struct Fx;
+
+impl Fx {
+    fn good_lock_order(&self) {
+        let g = self.alpha.plock();
+        let h = self.beta.plock();
+    }
+
+    fn good_unwrap(&self) {
+        let v = self.maybe.unwrap(); // areal-lint: allow(panic, reason="set at construction")
+    }
+
+    fn good_index(&self) {
+        let x = &self.items[1..3];
+        let y = self.items[0];
+    }
+
+    fn good_fence(&self, slot: usize, epoch: u64) {
+        self.t.close_salvage_at(epoch);
+    }
+
+    fn good_send(&self) {
+        let msg = {
+            let g = self.alpha.plock();
+            g.front()
+        };
+        self.tx.send(msg);
+    }
+
+    fn good_metric(&self) {
+        metrics::inc("areal_documented_total", 1);
+    }
+
+    fn good_reopen(&self) -> u64 {
+        let epoch = self.t.reopen();
+        epoch
+    }
+}

@@ -1,0 +1,4 @@
+// Fixture simulator: emits the documented metric.
+pub fn run() {
+    metrics::inc("areal_documented_total", 1);
+}

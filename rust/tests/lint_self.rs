@@ -1,0 +1,70 @@
+//! areal-lint self-test: the seeded bad fixtures are flagged with the
+//! right rule at the right file:line, the compliant fixtures pass, and —
+//! the actual gate — the real tree is clean.
+
+use std::path::{Path, PathBuf};
+
+use areal::lint;
+
+fn fixtures(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/lint_fixtures")
+        .join(name)
+}
+
+fn has(findings: &[lint::Finding], rule: &str, file: &str, line: usize) -> bool {
+    findings
+        .iter()
+        .any(|f| f.rule == rule && f.file == file && f.line == line)
+}
+
+#[test]
+fn bad_fixtures_are_flagged_with_file_and_line() {
+    let findings = lint::lint_tree(&fixtures("bad_tree"));
+    let report = lint::render(&findings);
+    let fx = "rust/src/serve/fixture.rs";
+    // undeclared lock edge: beta acquired, then alpha under beta's guard
+    assert!(has(&findings, "lock-order", fx, 9), "missing lock edge finding:\n{report}");
+    // bare unwrap
+    assert!(has(&findings, "panic", fx, 13), "missing panic finding:\n{report}");
+    // unchecked index
+    assert!(has(&findings, "index", fx, 17), "missing index finding:\n{report}");
+    // bare-index fence call
+    assert!(has(&findings, "epoch-fence", fx, 21), "missing fence finding:\n{report}");
+    // channel send under a live guard
+    assert!(has(&findings, "lock-order", fx, 26), "missing send-under-guard finding:\n{report}");
+    // undocumented + sim-absent metric
+    assert!(has(&findings, "metric-doc", fx, 30), "missing metric-doc finding:\n{report}");
+    assert!(has(&findings, "metric-sim", fx, 30), "missing metric-sim finding:\n{report}");
+    // discarded reopen epoch
+    assert!(has(&findings, "epoch-fence", fx, 34), "missing reopen finding:\n{report}");
+    // missing Event CSV arm + catch-all
+    let tr = "rust/src/coordinator/trace.rs";
+    assert!(has(&findings, "event-csv", tr, 5), "missing event arm finding:\n{report}");
+    assert!(has(&findings, "event-csv", tr, 14), "missing catch-all finding:\n{report}");
+    // undocumented config key
+    assert!(
+        has(&findings, "config-doc", "rust/src/config.rs", 6),
+        "missing config-doc finding:\n{report}"
+    );
+}
+
+#[test]
+fn clean_fixtures_pass() {
+    let findings = lint::lint_tree(&fixtures("clean_tree"));
+    assert!(
+        findings.is_empty(),
+        "clean fixture tree should have no findings:\n{}",
+        lint::render(&findings)
+    );
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let findings = lint::lint_tree(Path::new(env!("CARGO_MANIFEST_DIR")));
+    assert!(
+        findings.is_empty(),
+        "the real tree must lint clean — fix the code or annotate the invariant:\n{}",
+        lint::render(&findings)
+    );
+}

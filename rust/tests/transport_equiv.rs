@@ -82,7 +82,7 @@ fn fleet(socket: bool, w: usize) -> Fleet {
     let router = Arc::new(Router::new_with(transports, cfg));
     for (i, t) in endpoints.iter().enumerate() {
         let weak: Weak<Router<()>> = Arc::downgrade(&router);
-        t.set_pull_fn(Box::new(move |epoch, max_n| match weak.upgrade() {
+        t.set_pull_fn(Arc::new(move |epoch, max_n| match weak.upgrade() {
             Some(r) => r.pull_at(i, epoch, max_n),
             None => Pulled { reqs: Vec::new(), stolen: None },
         }));
@@ -359,7 +359,7 @@ fn mid_stream_replica_failure_loses_nothing_on_both_backends() {
             // dropped connection retires the replica through the standard
             // salvage path, fenced by the connection's epoch
             let weak = Arc::downgrade(&f.router);
-            f.endpoints[0].set_disconnect_fn(Box::new(move |epoch, orphans| {
+            f.endpoints[0].set_disconnect_fn(Arc::new(move |epoch, orphans| {
                 if let Some(r) = weak.upgrade() {
                     let _ = r.remove_replica_at(0, epoch);
                     for q in orphans {

@@ -1,0 +1,53 @@
+//! areal-lint: project-invariant static analysis for the concurrent
+//! rollout/train planes. See DESIGN.md §12 and rust/src/lint/.
+//!
+//!     cargo run --release --bin areal_lint -- [--root DIR] [--report FILE]
+//!
+//! Exits 0 when the tree is clean, 1 when any finding survives its
+//! escape-hatch check (`// areal-lint: allow(<rule>, reason="...")`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use areal::lint;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut report_path: Option<PathBuf> = None;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0usize;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--root" if i + 1 < args.len() => {
+                root = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            "--report" if i + 1 < args.len() => {
+                report_path = Some(PathBuf::from(&args[i + 1]));
+                i += 2;
+            }
+            "--help" | "-h" => {
+                eprintln!("usage: areal_lint [--root DIR] [--report FILE]");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("areal_lint: unknown argument `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let findings = lint::lint_tree(&root);
+    let report = lint::render(&findings);
+    print!("{report}");
+    if let Some(p) = report_path {
+        if let Err(e) = std::fs::write(&p, &report) {
+            eprintln!("areal_lint: cannot write report {}: {e}", p.display());
+            return ExitCode::from(2);
+        }
+    }
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
