@@ -1,17 +1,77 @@
 //! Real-runtime benchmarks over the AOT artifacts (nano tier): per-call
-//! wall time of prefill / decode-chunk / logprob / train_step, the
-//! generation engine's tokens/s, and the Fig-6a dynamic-vs-standard
-//! train-phase comparison on the real executor. These are the numbers the
-//! §Perf pass in EXPERIMENTS.md tracks.
+//! wall time of prefill / the bucketed `prefill_p{Tb}` family /
+//! decode-chunk / logprob / train_step, the generation engine's tokens/s,
+//! and the warm-vs-cold prefill-wave comparison that shows the radix
+//! cache paying in measured kernel time, not just token accounting.
+//! These are the numbers the §Perf pass in EXPERIMENTS.md tracks.
+//!
+//! Emits `BENCH_runtime.json` (same shape as `BENCH_serve.json`): one
+//! record per entrypoint with wall-clock percentiles, plus the warm/cold
+//! wave records with their deterministic token counts. Wall-clock keys
+//! are reported but never gated by `bench_diff` (machine-dependent); the
+//! token counts are.
+//!
+//!     cargo bench --bench bench_runtime
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 use areal::coordinator::GenEngine;
 use areal::runtime::{Engine, HostTensor, Manifest, ParamSet};
-use areal::tasks::{SortTask, Task};
-use areal::util::minibench::{black_box, Bench};
+use areal::tasks::{Prompt, SortTask, Task};
+use areal::util::json::Json;
+use areal::util::minibench::{black_box, Bench, BenchResult};
 use areal::util::rng::Rng;
+
+/// One wall-clock record for the perf trajectory. `bench_diff` reports
+/// these keys but never gates on them (see tools/bench_diff.rs).
+fn wall_record(entry: &str, shape: &str, r: &BenchResult) -> Json {
+    let mut fields = vec![
+        ("name", Json::str("entry")),
+        ("entry", Json::str(entry)),
+        ("shape", Json::str(shape)),
+        ("mean_s", Json::num(r.mean_s)),
+        ("p50_s", Json::num(r.p50_s)),
+        ("p95_s", Json::num(r.p95_s)),
+        ("iters", Json::num(r.iters as f64)),
+    ];
+    if let Some(t) = r.throughput {
+        fields.push(("tokens_per_s", Json::num(t)));
+    }
+    Json::obj(fields)
+}
+
+/// Zero-filled input literals for the `pool.*` arguments of a bucketed
+/// prefill entrypoint (fp16 zeros are all-zero bytes).
+fn zero_pools(engine: &Engine, entry: &str) -> anyhow::Result<Vec<xla::Literal>> {
+    let spec = engine.entry_spec(entry)?;
+    let mut pools = Vec::new();
+    for arg in &spec.inputs {
+        if arg.name.starts_with("pool.") {
+            let n: usize = arg.shape.iter().product();
+            let bytes = vec![0u8; n * arg.dtype.size_bytes()];
+            pools.push(xla::Literal::create_from_shape_and_untyped_data(
+                arg.dtype.element_type(),
+                &arg.shape,
+                &bytes,
+            )?);
+        }
+    }
+    Ok(pools)
+}
+
+/// A GRPO group-sampling prompt long enough that a cold admission wave
+/// needs a 32-token bucket while a warm wave (24 cached tokens, 2 fresh)
+/// fits the smallest one.
+fn group_prompt() -> Prompt {
+    Prompt {
+        text: format!("Q{}=", "1234567890123456789+123"),
+        meta: String::new(),
+        level: 1,
+        group: 0,
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -23,11 +83,14 @@ fn main() -> anyhow::Result<()> {
     let params = ParamSet::init(&engine, [1, 2])?;
     let cfg = &engine.spec.config;
     let (b, t, bt, chunk) = (cfg.gen_batch, cfg.max_seq, cfg.train_batch, cfg.chunk);
+    let buckets = cfg.prefill_buckets.clone();
+    let (mb, pool_blocks) = (cfg.kv_table_width, cfg.kv_pool_blocks);
 
     let bench = Bench::quick();
     let mut rng = Rng::new(3);
+    let mut records: Vec<Json> = Vec::new();
 
-    // prefill
+    // dense full-T prefill
     let tokens = HostTensor::i32(
         vec![b, t],
         (0..b * t).map(|i| ((i % 40) + 3) as i32).collect(),
@@ -41,11 +104,112 @@ fn main() -> anyhow::Result<()> {
     inputs.push(&lens);
     inputs.push(&seed);
     inputs.push(&temp);
-    bench
-        .run(&format!("prefill [{b}x{t}]"), || {
-            black_box(engine.run("prefill", &inputs).unwrap());
-        })
-        .report();
+    let r = bench.run_throughput(&format!("prefill [{b}x{t}]"), (b * t) as f64, || {
+        black_box(engine.run("prefill", &inputs).unwrap());
+    });
+    r.report();
+    records.push(wall_record("prefill", &format!("[{b}x{t}]"), &r));
+
+    // the bucketed prefix-skipping family: every slot fully fresh at the
+    // bucket width, so the per-bucket cost scales with Tb, not max_seq
+    if buckets.is_empty() {
+        println!("  (artifact predates the prefill_p family — skipping)");
+    }
+    for &tb in &buckets {
+        let entry = format!("prefill_p{tb}");
+        let pools = zero_pools(&engine, &entry)?;
+        // distinct pool blocks per slot (b * mb <= pool capacity)
+        assert!(b * mb <= pool_blocks, "bench table overflows the pool");
+        let table = HostTensor::i32(
+            vec![b, mb],
+            (0..b * mb).map(|i| i as i32).collect(),
+        )
+        .to_literal()?;
+        let toks = HostTensor::i32(
+            vec![b, tb],
+            (0..b * tb).map(|i| ((i % 40) + 3) as i32).collect(),
+        )
+        .to_literal()?;
+        let cached = HostTensor::i32(vec![b], vec![0; b]).to_literal()?;
+        let fresh = HostTensor::i32(vec![b], vec![tb as i32; b]).to_literal()?;
+        let mut inputs: Vec<&xla::Literal> = params.refs();
+        inputs.extend(pools.iter());
+        inputs.push(&table);
+        inputs.push(&toks);
+        inputs.push(&cached);
+        inputs.push(&fresh);
+        inputs.push(&seed);
+        inputs.push(&temp);
+        let r = bench.run_throughput(
+            &format!("{entry} [{b}x{tb}]"),
+            (b * tb) as f64,
+            || {
+                black_box(engine.run(&entry, &inputs).unwrap());
+            },
+        );
+        r.report();
+        records.push(wall_record(&entry, &format!("[{b}x{tb}]"), &r));
+    }
+
+    // warm vs cold prefill waves through the generation engine: G=4
+    // siblings of one prompt. The cold wave pays the whole prompt; after
+    // the group drains, a second batch of siblings hits the radix cache
+    // and must issue a strictly smaller bucket in strictly less time.
+    {
+        const ITERS: usize = 3;
+        let mut wall = [0.0f64; 2]; // [cold, warm]
+        let mut bucket = [0usize; 2];
+        let mut toks = [0u64; 2]; // computed prefill tokens per wave
+        let mut cached = [0u64; 2];
+        for it in 0..ITERS {
+            let mut g = GenEngine::new(
+                Arc::clone(&engine),
+                Arc::clone(&params),
+                0,
+                1.0,
+                29 + it as u64,
+            );
+            for phase in 0..2 {
+                let mut ps: Vec<Prompt> =
+                    (0..4).map(|_| group_prompt()).collect();
+                g.fill(&mut ps)?;
+                let before = g.serve_stats();
+                let t0 = Instant::now();
+                g.prefill()?;
+                wall[phase] += t0.elapsed().as_secs_f64();
+                let after = g.serve_stats();
+                if it == 0 {
+                    toks[phase] =
+                        after.prefill_tokens_computed - before.prefill_tokens_computed;
+                    cached[phase] =
+                        after.prefill_tokens_cached - before.prefill_tokens_cached;
+                }
+                bucket[phase] = g.last_prefill_bucket.unwrap_or(t);
+                g.drain()?;
+            }
+        }
+        let (cold_s, warm_s) = (wall[0] / ITERS as f64, wall[1] / ITERS as f64);
+        let speedup = cold_s / warm_s.max(1e-12);
+        let bar = if warm_s < cold_s { "PASS" } else { "FAIL" };
+        println!(
+            "prefill wave G=4: cold {:8.3} ms (bucket {}, {} tok computed) vs \
+             warm {:8.3} ms (bucket {}, {} tok computed, {} cached) — \
+             {speedup:.2}x [warm < cold: {bar}]",
+            cold_s * 1e3, bucket[0], toks[0],
+            warm_s * 1e3, bucket[1], toks[1], cached[1]
+        );
+        for (phase, mode) in ["cold", "warm"].iter().enumerate() {
+            records.push(Json::obj(vec![
+                ("name", Json::str("prefill_wave")),
+                ("mode", Json::str(mode)),
+                ("group_size", Json::num(4.0)),
+                ("bucket", Json::num(bucket[phase] as f64)),
+                ("wall_mean_s", Json::num(wall[phase] / ITERS as f64)),
+                ("computed_tokens", Json::num(toks[phase] as f64)),
+                ("cached_tokens", Json::num(cached[phase] as f64)),
+            ]));
+        }
+    }
 
     // decode chunk via the generation engine (includes host bookkeeping)
     let task = SortTask;
@@ -72,6 +236,7 @@ fn main() -> anyhow::Result<()> {
         },
     );
     r.report();
+    records.push(wall_record("decode_chunk", &format!("[{b}x{chunk}]"), &r));
 
     // logprob (π_prox recompute)
     let ttok = HostTensor::i32(
@@ -81,11 +246,11 @@ fn main() -> anyhow::Result<()> {
     .to_literal()?;
     let mut inputs: Vec<&xla::Literal> = params.refs();
     inputs.push(&ttok);
-    bench
-        .run(&format!("logprob [{bt}x{t}]"), || {
-            black_box(engine.run("logprob", &inputs).unwrap());
-        })
-        .report();
+    let r = bench.run_throughput(&format!("logprob [{bt}x{t}]"), (bt * t) as f64, || {
+        black_box(engine.run("logprob", &inputs).unwrap());
+    });
+    r.report();
+    records.push(wall_record("logprob", &format!("[{bt}x{t}]"), &r));
 
     // train_step full-T vs half-T (the Fig-6a routing delta)
     for entry in ["train_step", "train_step_h"] {
@@ -123,11 +288,15 @@ fn main() -> anyhow::Result<()> {
         inputs.push(&zeros); // behav
         inputs.push(&zeros); // prox
         inputs.push(&lr);
-        bench
-            .run_throughput(&format!("{entry} [{bt}x{tt}]"), (bt * tt) as f64, || {
+        let r = bench.run_throughput(
+            &format!("{entry} [{bt}x{tt}]"),
+            (bt * tt) as f64,
+            || {
                 black_box(engine.run(entry, &inputs).unwrap());
-            })
-            .report();
+            },
+        );
+        r.report();
+        records.push(wall_record(entry, &format!("[{bt}x{tt}]"), &r));
     }
 
     // per-entrypoint cumulative stats
@@ -142,5 +311,15 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+
+    // machine-readable perf trajectory, tracked across PRs
+    let n = records.len();
+    let out = Json::obj(vec![
+        ("bench", Json::str("runtime")),
+        ("records", Json::Arr(records)),
+    ]);
+    std::fs::write("BENCH_runtime.json", format!("{out}\n"))
+        .expect("write BENCH_runtime.json");
+    println!("\nwrote BENCH_runtime.json ({n} records)");
     Ok(())
 }

@@ -118,6 +118,40 @@ def build_entrypoints(tier):
         ["toks", "logps"] + kv_names + ["lens"],
     )
 
+    # Bucketed prefix-skipping prefill family (DESIGN.md §5): one executable
+    # per fresh-token width in tier.prefill_buckets. The coordinator picks
+    # the smallest bucket covering an admission wave's *uncached* remainder,
+    # so a radix-cache hit shortens the issued executable instead of only
+    # the accounting. KV flows through the persistent paged pool: cached
+    # prefixes are read via the serve layer's block table, fresh KV is
+    # scattered back into the pool and also returned as the dense cache the
+    # unchanged `decode` entrypoint consumes.
+    bs_kv = tier.kv_block_size
+    Pkv = tier.kv_pool_blocks
+    MB = tier.kv_table_width
+    pool_names = []
+    for l in range(L):
+        pool_names += [f"pool.k{l}", f"pool.v{l}"]
+    pool_args = [spec_of((Pkv, bs_kv, H, Dh), jnp.float16)
+                 for _ in range(2 * L)]
+
+    def paged_entry(tb):
+        return (
+            lambda *a: model.paged_prefill(
+                tier, list(a[:nP]), list(a[nP:nP + 2 * L]), a[nP + 2 * L],
+                a[nP + 2 * L + 1], a[nP + 2 * L + 2], a[nP + 2 * L + 3],
+                a[nP + 2 * L + 4], a[nP + 2 * L + 5]),
+            pargs + pool_args + [spec_of((B, MB), i32), spec_of((B, tb), i32),
+                                 spec_of((B,), i32), spec_of((B,), i32),
+                                 spec_of((2,), u32), spec_of((), f32)],
+            pnames + pool_names + ["block_table", "tokens", "cached_lens",
+                                   "new_lens", "seed", "temp"],
+            pool_names + kv_names + ["tok", "logp"],
+        )
+
+    for tb in tier.prefill_buckets:
+        eps[f"prefill_p{tb}"] = paged_entry(tb)
+
     # `_h` variants run at half context length: Algorithm-1 dynamic batching
     # routes micro-batches whose max sequence length fits T/2 through these
     # cheaper executables (the fixed-shape analogue of the paper's
@@ -275,6 +309,10 @@ def tier_manifest(tier, entry):
             "adam": list(tier.adam), "grad_clip": tier.grad_clip,
             "param_count": tier.param_count(),
             "paper_analogue": tier.paper_analogue,
+            "kv_block_size": tier.kv_block_size,
+            "kv_pool_blocks": tier.kv_pool_blocks,
+            "kv_table_width": tier.kv_table_width,
+            "prefill_buckets": tier.prefill_buckets,
         },
         "params": [{"name": n, "shape": list(s)} for n, s in pspec],
         "entrypoints": entry,

@@ -1,0 +1,147 @@
+"""Prefix-skipping paged-attention prefill (Pallas kernel).
+
+The radix cache (serve/scheduler.rs) proves which prompt prefixes already
+have KV in the paged pool; this kernel is what turns that accounting into
+skipped FLOPs. An admission wave's *fresh* (uncached) tokens attend over
+
+  1. the sequence's cached prefix KV — gathered from the paged pool via the
+     scheduler's block table, fp16, masked by `cached_len`, and
+  2. their own fresh KV — causal within the bucket,
+
+without ever recomputing the cached prefix. The query/key geometry is the
+bucketed `[B, T_bucket]` shape picked by the coordinator: the whole point is
+that T_bucket covers only the uncached remainder, so an 80%-cached prompt
+pays ~20% of the prefill attention (and none of the prefix MLP/QKV work,
+which simply is not issued at the smaller bucket).
+
+Same schedule idiom as attention.py: grid over (batch*head, query-block),
+online softmax carried across key blocks, f16 prefix upcast to f32 in VMEM
+(the decode_attn idiom). Two key phases share one set of m/l/acc carries:
+phase 1 walks the prefix rows masked by `cached_len`, phase 2 walks the
+fresh rows with the local causal mask. Phase 1 can be *entirely* masked
+(cached_len = 0 — a cold prompt), so probabilities are zeroed through the
+mask rather than relying on s == NEG_INF alone; otherwise an all-masked
+block at m == NEG_INF would contribute exp(0) mass.
+
+Lowered with interpret=True (CPU PJRT cannot execute Mosaic custom-calls);
+on a real TPU the same kernel compiles with interpret=False.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+DEFAULT_BLOCK_K = 128
+DEFAULT_BLOCK_Q = 64
+
+
+def _ppf_kernel(len_ref, q_ref, kp_ref, vp_ref, kf_ref, vf_ref, o_ref, *,
+                block_kp, block_kf, scale):
+    """One fresh query block against prefix rows then fresh rows.
+
+    len_ref: i32[1] cached prefix length for this (batch, head);
+    q_ref: f32[Bq, Dh]; kp_ref/vp_ref: f16[Tp, Dh] (paged-pool gather);
+    kf_ref/vf_ref: f32[Tf, Dh] (this bucket's fresh KV); o_ref: f32[Bq, Dh].
+    """
+    bq, dh = q_ref.shape
+    tp = kp_ref.shape[0]
+    tf = kf_ref.shape[0]
+    qi = pl.program_id(1)
+    q = q_ref[...] * scale
+    # query positions local to the fresh bucket (absolute = cached_len + qj)
+    qj = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def step(k, v, valid, carry):
+        m, l, acc = carry
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [Bq, Bk]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        # explicit mask multiply: survives the all-masked phase-1 case where
+        # m_new is still NEG_INF and s - m_new == 0
+        p = jnp.exp(s - m_new) * valid.astype(jnp.float32)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = alpha * acc + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    def prefix_body(j, carry):
+        k = jax.lax.dynamic_slice_in_dim(kp_ref[...], j * block_kp, block_kp, 0)
+        v = jax.lax.dynamic_slice_in_dim(vp_ref[...], j * block_kp, block_kp, 0)
+        kpos = j * block_kp + jax.lax.broadcasted_iota(jnp.int32, (1, block_kp), 1)
+        valid = kpos < len_ref[0]
+        return step(k.astype(jnp.float32), v.astype(jnp.float32), valid, carry)
+
+    def fresh_body(j, carry):
+        k = jax.lax.dynamic_slice_in_dim(kf_ref[...], j * block_kf, block_kf, 0)
+        v = jax.lax.dynamic_slice_in_dim(vf_ref[...], j * block_kf, block_kf, 0)
+        kj = j * block_kf + jax.lax.broadcasted_iota(jnp.int32, (1, block_kf), 1)
+        return step(k, v, kj <= qj, carry)
+
+    m0 = jnp.full((bq, 1), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((bq, 1), dtype=jnp.float32)
+    acc0 = jnp.zeros((bq, dh), dtype=jnp.float32)
+    carry = jax.lax.fori_loop(0, tp // block_kp, prefix_body, (m0, l0, acc0))
+    _, l, acc = jax.lax.fori_loop(0, tf // block_kf, fresh_body, carry)
+    # every query row attends at least to itself (fresh causal diagonal),
+    # so l > 0 even for padding rows beyond the sequence's real length
+    o_ref[...] = acc / l
+
+
+def prefix_prefill_attention(q, k_prefix, v_prefix, k_fresh, v_fresh,
+                             cached_len, block_q=DEFAULT_BLOCK_Q,
+                             block_k=DEFAULT_BLOCK_K, interpret=True):
+    """Fresh-token attention over cached prefix + fresh KV.
+
+    q:        f32[B, H, Tf, Dh]   queries for the bucket's fresh tokens
+    k_prefix: f16/f32[B, Tp, H, Dh] prefix KV gathered from the paged pool
+    v_prefix: f16/f32[B, Tp, H, Dh]
+    k_fresh:  f32[B, H, Tf, Dh]   KV of the fresh tokens themselves
+    v_fresh:  f32[B, H, Tf, Dh]
+    cached_len: i32[B]            valid prefix rows; fresh token j sits at
+                                  absolute position cached_len[b] + j and
+                                  attends prefix [0, cached_len[b]) plus
+                                  fresh [0, j].
+    returns   f32[B, H, Tf, Dh]
+    """
+    b, h, tf, dh = q.shape
+    tp = k_prefix.shape[1]
+    bq = min(block_q, tf)
+    assert tf % bq == 0, f"Tf={tf} must be a multiple of block_q={bq}"
+    assert tp >= 1, "prefix buffer must have at least one row (mask handles emptiness)"
+    # dynamic_slice clamps out-of-range starts, which would mislabel key
+    # positions in a ragged tail block — so block sizes must divide exactly
+    bkp = min(block_k, tp)
+    while tp % bkp != 0:
+        bkp -= 1
+    bkf = min(block_k, tf)
+    while tf % bkf != 0:
+        bkf -= 1
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.reshape(b * h, tf, dh)
+    kpf = jnp.transpose(k_prefix, (0, 2, 1, 3)).reshape(b * h, tp, dh)
+    vpf = jnp.transpose(v_prefix, (0, 2, 1, 3)).reshape(b * h, tp, dh)
+    kff = k_fresh.reshape(b * h, tf, dh)
+    vff = v_fresh.reshape(b * h, tf, dh)
+    lensf = jnp.repeat(cached_len.astype(jnp.int32), h).reshape(b * h, 1)
+    kernel = functools.partial(_ppf_kernel, block_kp=bkp, block_kf=bkf,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, tf // bq),
+        in_specs=[
+            pl.BlockSpec((None, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((None, tp, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, tp, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, tf, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, tf, dh), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, tf, dh), jnp.float32),
+        interpret=interpret,
+    )(lensf, qf, kpf, vpf, kff, vff)
+    return out.reshape(b, h, tf, dh)

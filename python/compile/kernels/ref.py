@@ -51,6 +51,43 @@ def decode_attention_ref(q, k_cache, v_cache, lens):
     return jnp.einsum("bht,bthd->bhd", p, vf)
 
 
+def prefix_prefill_attention_ref(q, k_prefix, v_prefix, k_fresh, v_fresh,
+                                 cached_len):
+    """Prefix-skipping prefill attention (paged_prefill.py oracle).
+
+    q:        f32[B, H, Tf, Dh]    queries for the fresh (uncached) tokens
+    k_prefix: f16/f32[B, Tp, H, Dh] cached prefix KV (valid rows [0, cached_len))
+    v_prefix: f16/f32[B, Tp, H, Dh]
+    k_fresh:  f32[B, H, Tf, Dh]    KV of the fresh tokens themselves
+    v_fresh:  f32[B, H, Tf, Dh]
+    cached_len: i32[B]
+    returns   f32[B, H, Tf, Dh]
+
+    Fresh token j (absolute position cached_len[b] + j) attends to prefix
+    positions [0, cached_len[b]) and fresh positions [0, j]. Equivalent to
+    rows [cached_len, cached_len + Tf) of full causal attention over the
+    concatenated sequence.
+    """
+    dh = q.shape[-1]
+    tp = k_prefix.shape[1]
+    tf = q.shape[2]
+    kp = jnp.transpose(k_prefix.astype(jnp.float32), (0, 2, 1, 3))
+    vp = jnp.transpose(v_prefix.astype(jnp.float32), (0, 2, 1, 3))
+    k_all = jnp.concatenate([kp, k_fresh], axis=2)   # [B, H, Tp+Tf, Dh]
+    v_all = jnp.concatenate([vp, v_fresh], axis=2)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k_all) / jnp.sqrt(jnp.float32(dh))
+    prefix_ok = (jnp.arange(tp)[None, :] < cached_len[:, None])  # [B, Tp]
+    prefix_mask = jnp.broadcast_to(prefix_ok[:, None, None, :],
+                                   scores.shape[:3] + (tp,))
+    causal = jnp.tril(jnp.ones((tf, tf), dtype=bool))
+    fresh_mask = jnp.broadcast_to(causal[None, None],
+                                  scores.shape[:3] + (tf,))
+    mask = jnp.concatenate([prefix_mask, fresh_mask], axis=-1)
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v_all)
+
+
 def ppo_loss_ref(logp, prox, behav, adv, mask, clip_eps, w_max):
     """Decoupled PPO objective, paper Eq. (5), per token.
 

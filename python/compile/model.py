@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from .tiers import Tier
 from .kernels.attention import causal_attention
 from .kernels.decode_attn import decode_attention
+from .kernels.paged_prefill import prefix_prefill_attention
 from .kernels.ppo_loss import ppo_token_loss
 
 # ---------------------------------------------------------------------------
@@ -217,6 +218,90 @@ def prefill(tier: Tier, params, tokens, lens, seed, temp):
                                    impl="threefry2x32")
     tok, lp = _sample(last, key, temp)
     return (*kvs, tok, lp)
+
+
+def paged_prefill(tier: Tier, params, pools, block_table, new_tokens,
+                  cached_lens, new_lens, seed, temp):
+    """Prefix-skipping prefill over the paged KV pool (the bucketed
+    `prefill_p{Tb}` entrypoint family).
+
+    pools:       2*L fp16 arrays [P, bs, H, Dh] — the persistent paged KV
+                 pool, k then v per layer; valid prefix rows are addressed
+                 through `block_table`.
+    block_table: i32[B, MB]  per-slot pool-block ids, prefix-ordered
+                 (absolute position a lives in pool block
+                 block_table[b, a // bs] at row a % bs); unused entries hold
+                 the sentinel P (reads clamp, writes drop).
+    new_tokens:  i32[B, Tb]  the *uncached* tokens only (PAD beyond
+                 new_lens); fresh token j sits at absolute position
+                 cached_lens[b] + j.
+    cached_lens: i32[B]  radix-cache-hit prefix length (0 = cold).
+    new_lens:    i32[B]  valid fresh tokens; cached_lens + new_lens <= T.
+
+    Unlike dense `prefill`, only the Tb fresh positions pay QKV/MLP/attention
+    compute; the cached prefix enters attention as fp16 pool rows. Fresh KV
+    is scattered back into the pool (so a later wave can hit on it) AND into
+    a dense [B, T, H, Dh] cache assembled from prefix + fresh rows, which
+    hands off to the unchanged `decode` entrypoint. Samples the first new
+    token from the logits at fresh position new_lens[b]-1.
+
+    Returns (*pools', *kv, tok i32[B], logp f32[B]).
+    """
+    idx = _index(tier)
+    B, Tb = new_tokens.shape
+    T = tier.max_seq
+    bs = tier.kv_block_size
+    P = tier.kv_pool_blocks
+    MB = block_table.shape[1]
+    j = jnp.arange(Tb)[None, :]
+    a = cached_lens[:, None] + j                 # absolute positions [B, Tb]
+    valid = j < new_lens[:, None]
+    pos = jnp.clip(a, 0, T - 1)
+    h = params[idx["embed"]][new_tokens] + jnp.take(params[idx["pos"]], pos,
+                                                    axis=0)
+    brow = jnp.arange(B)[:, None]
+    mb = jnp.clip(a // bs, 0, MB - 1)
+    pb = jnp.take_along_axis(block_table, mb, axis=1)    # [B, Tb] pool block
+    flat = jnp.where(valid, pb * bs + a % bs, P * bs)    # OOB rows -> drop
+    arow = jnp.where(valid, a, T)                        # OOB rows -> drop
+    new_pools = list(pools)
+    dense = []
+    for l in range(tier.n_layers):
+        p = f"layer{l}."
+        if tier.arch == "llama":
+            x = _norm(tier, h, params[idx[p + "rms1_w"]], None)
+        else:
+            x = _norm(tier, h, params[idx[p + "ln1_w"]], params[idx[p + "ln1_b"]])
+        q = _split_heads(x @ params[idx[p + "wq"]], tier.n_heads)
+        k = _split_heads(x @ params[idx[p + "wk"]], tier.n_heads)
+        v = _split_heads(x @ params[idx[p + "wv"]], tier.n_heads)
+        kpool, vpool = pools[2 * l], pools[2 * l + 1]
+        # dense fp16 view of the cached prefix, absolute positions [0, T)
+        gk = kpool[block_table].reshape(B, MB * bs, -1, tier.head_dim)[:, :T]
+        gv = vpool[block_table].reshape(B, MB * bs, -1, tier.head_dim)[:, :T]
+        att = prefix_prefill_attention(q, gk, gv, k, v, cached_lens)
+        h = h + _merge_heads(att) @ params[idx[p + "wo"]]
+        if tier.arch == "llama":
+            x = _norm(tier, h, params[idx[p + "rms2_w"]], None)
+        else:
+            x = _norm(tier, h, params[idx[p + "ln2_w"]], params[idx[p + "ln2_b"]])
+        h = h + _mlp(tier, params, idx, l, x)
+        kf16 = k.transpose(0, 2, 1, 3).astype(jnp.float16)   # [B, Tb, H, Dh]
+        vf16 = v.transpose(0, 2, 1, 3).astype(jnp.float16)
+        shape = kpool.shape
+        new_pools[2 * l] = kpool.reshape(P * bs, *shape[2:]) \
+            .at[flat].set(kf16, mode="drop").reshape(shape)
+        new_pools[2 * l + 1] = vpool.reshape(P * bs, *shape[2:]) \
+            .at[flat].set(vf16, mode="drop").reshape(shape)
+        dense.append(gk.at[brow, arow].set(kf16, mode="drop"))
+        dense.append(gv.at[brow, arow].set(vf16, mode="drop"))
+    last_h = jnp.take_along_axis(
+        h, jnp.maximum(new_lens - 1, 0)[:, None, None], axis=1)
+    logits = logits_from_hidden(tier, params, last_h)[:, 0]   # [B, V]
+    key = jax.random.wrap_key_data(seed.astype(jnp.uint32),
+                                   impl="threefry2x32")
+    tok, lp = _sample(logits, key, temp)
+    return (*new_pools, *dense, tok, lp)
 
 
 def _sample(logits, key, temp):

@@ -49,6 +49,42 @@ class Tier:
         assert self.d_model % self.n_heads == 0
         return self.d_model // self.n_heads
 
+    # -- paged-KV geometry (prefix-skipping prefill; must mirror the Rust
+    #    serve layer: ServeCfg::default_block_size / ServeCfg::for_engine) --
+
+    @property
+    def kv_block_size(self) -> int:
+        """Tokens per KV block in the paged pool."""
+        return 8 if self.max_seq <= 256 else 16
+
+    @property
+    def kv_table_width(self) -> int:
+        """Block-table entries per slot: blocks covering max_seq+1 positions
+        (the serve layer allocates len+1 so the next decode token has KV
+        room)."""
+        return -(-(self.max_seq + 1) // self.kv_block_size)
+
+    @property
+    def kv_pool_blocks(self) -> int:
+        """Pool capacity: 2x headroom over gen_batch full-length sequences,
+        mirroring ServeCfg::for_engine."""
+        return 2 * self.kv_table_width * self.gen_batch
+
+    @property
+    def prefill_buckets(self):
+        """Fresh-token widths of the bucketed prefill family, descending:
+        max_seq plus powers of two below it, floored at 16. An admission
+        wave runs the smallest bucket covering its uncached remainder."""
+        out = [self.max_seq]
+        b = 1
+        while b * 2 < self.max_seq:
+            b *= 2
+        while b >= 16:
+            if b < self.max_seq:
+                out.append(b)
+            b //= 2
+        return out
+
     def param_count(self) -> int:
         """Approximate parameter count (used for roofline estimates)."""
         V, D, L, F = self.vocab, self.d_model, self.n_layers, self.d_ff

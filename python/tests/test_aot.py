@@ -46,9 +46,12 @@ class TestManifest:
     def test_all_entrypoints_present(self, built):
         _, manifest = built
         eps = manifest["tiers"]["nano"]["entrypoints"]
-        assert set(eps) == {"init", "prefill", "decode", "logprob",
-                            "logprob_h", "train_step", "train_step_h",
-                            "sft_step", "sft_step_h"}
+        expected = {"init", "prefill", "decode", "logprob",
+                    "logprob_h", "train_step", "train_step_h",
+                    "sft_step", "sft_step_h",
+                    "grad_step", "grad_step_h", "apply_grads"}
+        expected |= {f"prefill_p{tb}" for tb in TIERS["nano"].prefill_buckets}
+        assert set(eps) == expected
 
     def test_files_exist_and_parse_as_hlo(self, built):
         out, manifest = built

@@ -207,6 +207,149 @@ class TestGeneration:
         assert int(d[-1].max()) <= T - 1  # never overflows the cache
 
 
+class TestPagedPrefill:
+    """Prefix-skipping prefill (paged_prefill + prefill_p{Tb} family) against
+    the dense prefill path it replaces on warm-cache admission waves."""
+
+    SENT = property(lambda self: TIER.kv_pool_blocks)  # sentinel table entry
+
+    def _empty_pools(self):
+        bs, P = TIER.kv_block_size, TIER.kv_pool_blocks
+        H, Dh = TIER.n_heads, TIER.head_dim
+        return [jnp.zeros((P, bs, H, Dh), jnp.float16)
+                for _ in range(2 * TIER.n_layers)]
+
+    def _table(self, rows):
+        """rows: list of block-id lists, padded with the sentinel."""
+        S = TIER.kv_pool_blocks
+        MB = TIER.kv_table_width
+        t = np.full((TIER.gen_batch, MB), S, np.int32)
+        for b, ids in enumerate(rows):
+            t[b, :len(ids)] = ids
+        return jnp.asarray(t)
+
+    def test_cold_wave_matches_dense_prefill(self, params):
+        """cached_len = 0 everywhere: the paged path must reproduce dense
+        prefill exactly (same tokens, same KV at valid positions)."""
+        rng = np.random.default_rng(20)
+        B, T = TIER.gen_batch, TIER.max_seq
+        toks = rand_tokens(rng, B, T)
+        lens = np.array([3, 5, 7, 11], np.int32)
+        dense = model.prefill(TIER, params, toks, jnp.asarray(lens), SEED,
+                              jnp.float32(0.0))
+        dkvs, dtok = list(dense[:-2]), dense[-2]
+
+        bs = TIER.kv_block_size
+        rows = []
+        nb = 0
+        for b in range(B):
+            need = -(-(int(lens[b]) + 1) // bs)
+            rows.append(list(range(nb, nb + need)))
+            nb += need
+        out = model.paged_prefill(
+            TIER, params, self._empty_pools(), self._table(rows), toks,
+            jnp.zeros(B, jnp.int32), jnp.asarray(lens), SEED, jnp.float32(0.0))
+        nkv = 2 * TIER.n_layers
+        pools2 = list(out[:nkv])
+        pkvs, ptok = list(out[nkv:2 * nkv]), out[-2]
+        np.testing.assert_array_equal(np.asarray(ptok), np.asarray(dtok))
+        for l in range(nkv):
+            for b in range(B):
+                L = int(lens[b])
+                np.testing.assert_allclose(
+                    np.asarray(pkvs[l][b, :L], np.float32),
+                    np.asarray(dkvs[l][b, :L], np.float32),
+                    rtol=2e-2, atol=2e-2)
+        # fresh KV landed in the pool at the block-table addresses
+        for b in range(B):
+            L = int(lens[b])
+            flat = np.asarray(pools2[0]).reshape(-1, TIER.n_heads,
+                                                 TIER.head_dim)
+            for apos in range(L):
+                pb = rows[b][apos // bs]
+                np.testing.assert_array_equal(
+                    flat[pb * bs + apos % bs],
+                    np.asarray(pkvs[0][b, apos]))
+
+    def test_warm_wave_matches_dense_full_prefill(self, params):
+        """Prefill a shared prefix, then prefill only the suffix with
+        cached_len set: greedy continuation and KV must match a dense prefill
+        of the full prompt (f16-prefix tolerance)."""
+        rng = np.random.default_rng(21)
+        B, T = TIER.gen_batch, TIER.max_seq
+        bs = TIER.kv_block_size
+        c, full_len = 2 * bs, 2 * bs + 8           # 16 cached + 8 fresh
+        prompt = rand_tokens(rng, 1, full_len)[0]
+        bos = jnp.ones((B, T), jnp.int32)
+
+        # wave 1: cold prefill of the prefix into blocks [0, 1]
+        toks1 = bos.at[0, :c].set(prompt[:c])
+        lens1 = jnp.asarray(np.array([c, 1, 1, 1], np.int32))
+        out1 = model.paged_prefill(
+            TIER, params, self._empty_pools(), self._table([[0, 1, 2]]),
+            toks1, jnp.zeros(B, jnp.int32), lens1, SEED, jnp.float32(0.0))
+        nkv = 2 * TIER.n_layers
+        pools = list(out1[:nkv])
+
+        # wave 2: warm — only the 8-token suffix is fresh
+        toks2 = bos.at[0, :full_len - c].set(prompt[c:])
+        cached2 = jnp.asarray(np.array([c, 0, 0, 0], np.int32))
+        lens2 = jnp.asarray(np.array([full_len - c, 1, 1, 1], np.int32))
+        out2 = model.paged_prefill(
+            TIER, params, pools, self._table([[0, 1, 2, 3]]), toks2, cached2,
+            lens2, SEED, jnp.float32(0.0))
+        pkvs, ptok = list(out2[nkv:2 * nkv]), out2[-2]
+
+        toks_d = bos.at[0, :full_len].set(prompt)
+        lens_d = jnp.asarray(np.array([full_len, 1, 1, 1], np.int32))
+        dense = model.prefill(TIER, params, toks_d, lens_d, SEED,
+                              jnp.float32(0.0))
+        dkvs, dtok = list(dense[:-2]), dense[-2]
+        assert int(ptok[0]) == int(dtok[0])
+        for l in range(nkv):
+            np.testing.assert_allclose(
+                np.asarray(pkvs[l][0, :full_len], np.float32),
+                np.asarray(dkvs[l][0, :full_len], np.float32),
+                rtol=4e-2, atol=4e-2)
+
+        # decode continues identically from either cache (greedy)
+        dd = model.decode(TIER, params, dkvs, lens_d, dtok, SEED,
+                          jnp.float32(0.0))
+        dp = model.decode(TIER, params, pkvs, lens_d, ptok, SEED,
+                          jnp.float32(0.0))
+        np.testing.assert_array_equal(np.asarray(dd[0][:, 0]),
+                                      np.asarray(dp[0][:, 0]))
+
+    def test_smaller_bucket_equivalence(self, params):
+        """The same warm wave run at bucket Tb=16 (suffix padded) and at the
+        full-width bucket produces the same next token — bucket choice is a
+        cost knob, not a semantics knob."""
+        rng = np.random.default_rng(22)
+        B, T = TIER.gen_batch, TIER.max_seq
+        bs = TIER.kv_block_size
+        c = 2 * bs
+        prompt = rand_tokens(rng, 1, c + 6)[0]
+        bos = jnp.ones((B, T), jnp.int32)
+        toks1 = bos.at[0, :c].set(prompt[:c])
+        out1 = model.paged_prefill(
+            TIER, params, self._empty_pools(), self._table([[0, 1, 2]]),
+            toks1, jnp.zeros(B, jnp.int32),
+            jnp.asarray(np.array([c, 1, 1, 1], np.int32)), SEED,
+            jnp.float32(0.0))
+        pools = list(out1[:2 * TIER.n_layers])
+
+        cached = jnp.asarray(np.array([c, 0, 0, 0], np.int32))
+        lens = jnp.asarray(np.array([6, 1, 1, 1], np.int32))
+        table = self._table([[0, 1, 2, 3]])
+        toks = {}
+        for tb in (16, T):
+            suffix = bos[:, :tb].at[0, :6].set(prompt[c:])
+            out = model.paged_prefill(TIER, params, pools, table, suffix,
+                                      cached, lens, SEED, jnp.float32(0.0))
+            toks[tb] = int(out[-2][0])
+        assert toks[16] == toks[T]
+
+
 class TestTraining:
     def _opt_state(self, params):
         return ([jnp.zeros_like(p) for p in params],

@@ -136,6 +136,13 @@ pub struct Config {
     pub kv_blocks: usize,
     /// radix prefix cache (GRPO siblings / resumed rollouts reuse prefills)
     pub prefix_cache: bool,
+    /// prefix-skipping bucketed prefill: admission waves run the
+    /// `prefill_p{Tb}` entrypoints, attending over cached pool KV instead
+    /// of recomputing it (falls back to the dense `prefill` executable when
+    /// the artifact lacks the family or the serve geometry mismatches)
+    pub prefix_prefill: bool,
+    /// smallest fresh-token bucket a paged prefill wave may issue
+    pub prefill_bucket_min: usize,
     /// request routing across rollout replicas: `fifo` (round-robin
     /// baseline), `affinity` (sticky prefix affinity) or `probe`
     /// (measured cached-prefix minus load penalty, the default)
@@ -252,6 +259,8 @@ impl Default for Config {
             kv_block_size: 0,
             kv_blocks: 0,
             prefix_cache: true,
+            prefix_prefill: true,
+            prefill_bucket_min: 16,
             route_policy: RoutePolicy::Probe,
             route_steal_max: 4,
             route_probe_penalty: 0.05,
@@ -318,6 +327,8 @@ impl Config {
         ("kv_block_size", "0"),
         ("kv_blocks", "0"),
         ("prefix_cache", "true"),
+        ("prefix_prefill", "true"),
+        ("prefill_bucket_min", "16"),
         ("route_policy", "probe"),
         ("route_steal_max", "4"),
         ("route_probe_penalty", "0.05"),
@@ -414,6 +425,8 @@ impl Config {
             "kv_block_size" => self.kv_block_size = u(val)?,
             "kv_blocks" => self.kv_blocks = u(val)?,
             "prefix_cache" => self.prefix_cache = parse_bool(val)?,
+            "prefix_prefill" => self.prefix_prefill = parse_bool(val)?,
+            "prefill_bucket_min" => self.prefill_bucket_min = u(val)?,
             "route_policy" => {
                 self.route_policy = RoutePolicy::parse(val).with_context(|| {
                     format!("unknown route_policy '{val}' (fifo|affinity|probe)")

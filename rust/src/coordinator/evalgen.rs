@@ -77,8 +77,9 @@ mod tests {
         let dir = test_artifacts_dir()?;
         let m = Manifest::load(&dir).expect("manifest load");
         let spec = m.tier("nano").unwrap();
-        let engine =
-            Arc::new(Engine::load_subset(spec, Some(&["init", "prefill", "decode"])).unwrap());
+        let names = spec.config.generation_entrypoints();
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let engine = Arc::new(Engine::load_subset(spec, Some(&refs)).unwrap());
         let params = ParamSet::init(&engine, [1, 2]).unwrap();
         Some((engine, params))
     }

@@ -50,6 +50,13 @@ struct ActiveSeq {
     /// (version, tokens sampled under it)
     segments: Vec<(Version, usize)>,
     version_born: Version,
+    /// committed tokens whose KV currently lives in the paged pool (written
+    /// by the last prefill wave under the current weights); the paged
+    /// prefix-skipping path bounds both its `cached_len` operand and the
+    /// `cache_upto` it reports to the scheduler by this, so a radix-cache
+    /// hit is always backed by real pool contents. Stays 0 on the dense
+    /// fallback path.
+    pool_len: usize,
     /// lifecycle span carried from the originating request; survives
     /// preemption/park cycles and rides into the trajectory
     span: ReqSpan,
@@ -94,6 +101,21 @@ pub struct GenEngine {
     slots: Vec<Option<ActiveSeq>>,
     /// fp16 KV literals (2 * n_layers), None until the first prefill
     kv: Option<Vec<SendLiteral>>,
+    /// persistent paged KV pool literals (2 * n_layers, fp16
+    /// `[pool_blocks, block_size, heads, head_dim]`), threaded through the
+    /// bucketed `prefill_p{Tb}` entrypoints; None until the first paged
+    /// prefill (and always None on the dense fallback path)
+    pools: Option<Vec<SendLiteral>>,
+    /// the artifact family + serve geometry support prefix-skipping prefill
+    paged_supported: bool,
+    /// config switch (`prefix_prefill`); the paged path runs only when both
+    /// this and `paged_supported` hold
+    paged_enabled: bool,
+    /// smallest fresh-token bucket the engine will issue (`prefill_bucket_min`)
+    prefill_bucket_min: usize,
+    /// fresh-token width of the most recent prefill wave (None before the
+    /// first wave, and on dense waves) — exposed for tests and benches
+    pub last_prefill_bucket: Option<usize>,
     params: Arc<ParamSet>,
     needs_prefill: bool,
     rng: Rng,
@@ -132,6 +154,18 @@ impl GenEngine {
         let mut serve_cfg = serve
             .unwrap_or_else(|| ServeCfg::for_engine(b, t, ServeCfg::default_block_size(t)));
         serve_cfg.max_seqs = serve_cfg.max_seqs.min(b).max(1);
+        // prefix-skipping prefill needs (a) the bucketed entrypoint family in
+        // the loaded artifact, and (b) a serving layer whose block geometry
+        // matches the pool the kernels were lowered against — block ids feed
+        // straight into the kernel's table lookups, so a mismatched layout
+        // must fall back to the dense `prefill` executable, not misindex
+        let paged_supported = cfg.prefill_buckets.first() == Some(&t)
+            && cfg
+                .prefill_buckets
+                .iter()
+                .all(|tb| engine.has_entry(&format!("prefill_p{tb}")))
+            && serve_cfg.block_size == cfg.kv_block_size
+            && serve_cfg.num_blocks <= cfg.kv_pool_blocks;
         GenEngine {
             engine,
             tokenizer: Tokenizer::new(),
@@ -142,6 +176,11 @@ impl GenEngine {
             temperature,
             slots: (0..b).map(|_| None).collect(),
             kv: None,
+            pools: None,
+            paged_supported,
+            paged_enabled: true,
+            prefill_bucket_min: 16,
+            last_prefill_bucket: None,
             params,
             needs_prefill: false,
             rng: Rng::new(seed),
@@ -159,6 +198,22 @@ impl GenEngine {
 
     pub fn version(&self) -> Version {
         self.params.version
+    }
+
+    /// Whether prefill waves run through the bucketed prefix-skipping
+    /// entrypoints (artifact family present, serve geometry compatible, and
+    /// not disabled by config).
+    pub fn paged_prefill_active(&self) -> bool {
+        self.paged_supported && self.paged_enabled
+    }
+
+    /// Apply the `prefix_prefill` / `prefill_bucket_min` config knobs.
+    /// Disabling routes every wave through the dense `prefill` executable;
+    /// `bucket_min` floors the issued bucket so tiny admission waves still
+    /// amortize executable dispatch.
+    pub fn configure_prefix_prefill(&mut self, enabled: bool, bucket_min: usize) {
+        self.paged_enabled = enabled;
+        self.prefill_bucket_min = bucket_min.max(1);
     }
 
     pub fn n_slots(&self) -> usize {
@@ -228,6 +283,12 @@ impl GenEngine {
                 .flatten()
                 .map(|s| s.tokens.len() as u64)
                 .sum::<u64>();
+        }
+        // pool KV was computed under the old weights: the re-prefill wave
+        // must treat every slot as fully uncached (the scheduler dropped
+        // the stale radix entries above for the same reason)
+        for s in self.slots.iter_mut().flatten() {
+            s.pool_len = 0;
         }
         interrupted
     }
@@ -326,6 +387,20 @@ impl GenEngine {
         self.needs_prefill
     }
 
+    /// How many leading tokens of a sequence may enter the radix cache when
+    /// it leaves its slot. The dense path recomputes any prefix at
+    /// admission, so accounting may cache everything committed; the paged
+    /// path serves cached prefixes straight from pool KV, so only tokens a
+    /// prefill wave actually wrote there are safe to re-serve.
+    fn cacheable_len(&self, s: &ActiveSeq) -> usize {
+        let committed = s.tokens.len().saturating_sub(1);
+        if self.paged_prefill_active() {
+            s.pool_len.min(committed)
+        } else {
+            committed
+        }
+    }
+
     /// Ask for an admission wave at the next `prefill` (used by the rollout
     /// loop when waiting sequences and free slots exist but no fill/preempt
     /// set the flag — e.g. an OOM-deferred sequence after slots drained).
@@ -369,9 +444,15 @@ impl GenEngine {
                     behav_logp: Vec::new(),
                     segments: Vec::new(),
                     version_born: self.params.version,
+                    pool_len: 0,
                     span,
                 }
             };
+            // the radix-matched prefix is real pool KV under the current
+            // weights — the paged wave may skip it. Clamped so at least one
+            // token stays fresh (the wave must produce last-position logits
+            // to sample from, even on a full-prompt cache hit).
+            seq.pool_len = a.cached_tokens.min(seq.tokens.len().saturating_sub(1));
             // first admission into a slot (stamp-if-None keeps the earliest
             // across re-prefills after interrupts and preemption resumes)
             seq.span.stamp_prefill_start();
@@ -383,7 +464,51 @@ impl GenEngine {
             self.slots[slot] = Some(seq);
         }
 
-        // --- dense prefill over the slot batch ---------------------------
+        // --- prefill over the slot batch ---------------------------------
+        let (toks, logps) = if self.paged_prefill_active() {
+            self.run_prefill_paged().context("paged prefill wave")?
+        } else {
+            self.run_prefill_dense().context("prefill")?
+        };
+        let paged = self.paged_prefill_active();
+        let version = self.params.version;
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(s) = slot {
+                s.span.stamp_first_token();
+                s.push_token(toks[i], logps[i], version);
+                self.tokens_generated += 1;
+            }
+        }
+        self.needs_prefill = false;
+        self.prefills_run += 1;
+
+        // --- serving-layer bookkeeping: every active slot's committed KV
+        // is now valid under the current weights; fold the committed prefix
+        // (everything but the pending token) into the radix cache so GRPO
+        // siblings and resumed rollouts reuse it
+        {
+            let mut serve = self.serve.plock();
+            for slot in self.slots.iter_mut() {
+                if let Some(s) = slot {
+                    let committed = s.tokens.len() - 1;
+                    if paged {
+                        // the wave just wrote KV for every committed token
+                        // into the pool blocks of this sequence
+                        s.pool_len = committed;
+                    }
+                    serve.note_prefilled(s.seq_id, &s.tokens[..committed]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Dense full-recompute prefill over the fixed `[B, max_seq]` executable
+    /// (the fallback when the bucketed family is absent or disabled).
+    /// Returns the sampled (token, logprob) per slot and installs the dense
+    /// KV literals.
+    // areal-lint: allow(index, reason="slot and lane indices are bounded by the batch layout fixed at construction")
+    fn run_prefill_dense(&mut self) -> Result<(Vec<i32>, Vec<f32>)> {
         let mut tok_mat = vec![0i32; self.b * self.t];
         let mut lens = vec![1i32; self.b];
         for (i, slot) in self.slots.iter().enumerate() {
@@ -407,40 +532,140 @@ impl GenEngine {
         inputs.push(&lens_l);
         inputs.push(&seed_l);
         inputs.push(&temp_l);
-        let mut outs = self.engine.run("prefill", &inputs).context("prefill")?;
+        let mut outs = self.engine.run("prefill", &inputs)?;
         // outputs: kv.. , tok, logp
         let logp_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
         let tok_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
-        let toks = HostTensor::from_literal(tok_l.lit())?;
-        let logps = HostTensor::from_literal(logp_l.lit())?;
-        let toks = toks.as_i32()?;
-        let logps = logps.as_f32()?;
-        let version = self.params.version;
-        for (i, slot) in self.slots.iter_mut().enumerate() {
+        let toks = HostTensor::from_literal(tok_l.lit())?.as_i32()?.to_vec();
+        let logps = HostTensor::from_literal(logp_l.lit())?.as_f32()?.to_vec();
+        self.kv = Some(outs);
+        self.last_prefill_bucket = None;
+        Ok((toks, logps))
+    }
+
+    /// Prefix-skipping prefill: pick the smallest `prefill_p{Tb}` bucket
+    /// covering the longest uncached remainder in the wave, hand the kernel
+    /// each slot's block table and cached-prefix length, and let it attend
+    /// over pool KV instead of recomputing it (DESIGN.md §5). Installs both
+    /// the updated pool literals and the dense KV the decode path consumes.
+    // areal-lint: allow(index, reason="slot and lane indices are bounded by the batch layout fixed at construction")
+    fn run_prefill_paged(&mut self) -> Result<(Vec<i32>, Vec<f32>)> {
+        let cfg = &self.engine.spec.config;
+        let n_kv = 2 * cfg.n_layers;
+        let mb = cfg.kv_table_width;
+        // out-of-range table entries park reads/writes on the sentinel row
+        // past the last pool block (reads are masked by cached_len, writes
+        // are dropped in-kernel)
+        let sentinel = cfg.kv_pool_blocks as i32;
+
+        // per-slot cached/fresh split; inert rows prefill one BOS token
+        let mut cached = vec![0i32; self.b];
+        let mut max_fresh = 1usize;
+        for (i, slot) in self.slots.iter().enumerate() {
             if let Some(s) = slot {
-                s.span.stamp_first_token();
-                s.push_token(toks[i], logps[i], version);
-                self.tokens_generated += 1;
+                let c = s.pool_len.min(s.tokens.len() - 1);
+                cached[i] = c as i32;
+                max_fresh = max_fresh.max(s.tokens.len() - c);
             }
         }
-        self.kv = Some(outs);
-        self.needs_prefill = false;
-        self.prefills_run += 1;
+        let want = max_fresh.max(self.prefill_bucket_min);
+        // buckets are stored descending; smallest one covering the wave
+        let tb = cfg
+            .prefill_buckets
+            .iter()
+            .copied()
+            .filter(|&w| w >= want)
+            .min()
+            .unwrap_or(self.t);
 
-        // --- serving-layer bookkeeping: every active slot's committed KV
-        // is now valid under the current weights; fold the committed prefix
-        // (everything but the pending token) into the radix cache so GRPO
-        // siblings and resumed rollouts reuse it
+        let mut tok_mat = vec![0i32; self.b * tb];
+        let mut new_lens = vec![1i32; self.b];
+        let mut table = vec![sentinel; self.b * mb];
+        let mut skipped: u64 = 0;
         {
-            let mut serve = self.serve.plock();
-            for slot in self.slots.iter() {
-                if let Some(s) = slot {
-                    let committed = &s.tokens[..s.tokens.len() - 1];
-                    serve.note_prefilled(s.seq_id, committed);
+            let serve = self.serve.plock();
+            for (i, slot) in self.slots.iter().enumerate() {
+                let row = &mut tok_mat[i * tb..(i + 1) * tb];
+                let Some(s) = slot else {
+                    row[0] = BOS; // inert row: 1 fresh BOS, sentinel table
+                    continue;
+                };
+                let c = cached[i] as usize;
+                let fresh = &s.tokens[c..];
+                row[..fresh.len()].copy_from_slice(fresh);
+                new_lens[i] = fresh.len() as i32;
+                skipped += c as u64;
+                let blocks = serve.seq_blocks(s.seq_id);
+                debug_assert!(blocks.len() <= mb, "block table overflows manifest width");
+                for (j, &b) in blocks.iter().take(mb).enumerate() {
+                    table[i * mb + j] = b as i32;
                 }
             }
         }
-        Ok(())
+        crate::util::metrics::inc("areal_prefill_skipped_tokens_total", skipped);
+
+        let pools = match self.pools.take() {
+            Some(p) => p,
+            None => self.init_pools(&format!("prefill_p{tb}"))?,
+        };
+        let table_l = HostTensor::i32(vec![self.b, mb], table).to_literal()?;
+        let tokens_l = HostTensor::i32(vec![self.b, tb], tok_mat).to_literal()?;
+        let cached_l = HostTensor::i32(vec![self.b], cached).to_literal()?;
+        let new_l = HostTensor::i32(vec![self.b], new_lens).to_literal()?;
+        let seed = self.rng.jax_seed();
+        let seed_l = HostTensor::u32(vec![2], seed.to_vec()).to_literal()?;
+        let temp_l = HostTensor::scalar_f32(self.temperature).to_literal()?;
+
+        let mut inputs: Vec<&xla::Literal> = self.params.refs();
+        for p in &pools {
+            inputs.push(p.lit());
+        }
+        inputs.push(&table_l);
+        inputs.push(&tokens_l);
+        inputs.push(&cached_l);
+        inputs.push(&new_l);
+        inputs.push(&seed_l);
+        inputs.push(&temp_l);
+        let name = format!("prefill_p{tb}");
+        let mut outs = self.engine.run(&name, &inputs).with_context(|| name.clone())?;
+        // outputs: pool.. (2L), kv.. (2L), tok, logp
+        let logp_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
+        let tok_l = outs.pop().unwrap(); // areal-lint: allow(panic, reason="AOT entrypoint output arity is fixed")
+        let kv = outs.split_off(n_kv);
+        let toks = HostTensor::from_literal(tok_l.lit())?.as_i32()?.to_vec();
+        let logps = HostTensor::from_literal(logp_l.lit())?.as_f32()?.to_vec();
+        self.pools = Some(outs);
+        self.kv = Some(kv);
+        self.last_prefill_bucket = Some(tb);
+        Ok((toks, logps))
+    }
+
+    /// Zero-initialized pool literals, shaped from the entrypoint manifest
+    /// (fp16 zeros are all-zero bytes).
+    fn init_pools(&self, entry: &str) -> Result<Vec<SendLiteral>> {
+        let spec = self.engine.entry_spec(entry)?;
+        let mut pools = Vec::new();
+        for arg in &spec.inputs {
+            if arg.name.starts_with("pool.") {
+                let n: usize = arg.shape.iter().product();
+                let bytes = vec![0u8; n * arg.dtype.size_bytes()];
+                let lit = xla::Literal::create_from_shape_and_untyped_data(
+                    arg.dtype.element_type(),
+                    &arg.shape,
+                    &bytes,
+                )
+                .with_context(|| format!("init pool literal {}", arg.name))?;
+                pools.push(SendLiteral::from(lit));
+            }
+        }
+        if pools.len() != 2 * self.engine.spec.config.n_layers {
+            bail!(
+                "{entry}: expected {} pool inputs, manifest lists {}",
+                2 * self.engine.spec.config.n_layers,
+                pools.len()
+            );
+        }
+        Ok(pools)
     }
 
     /// Extend the paged block table for `id` to `new_len`, preempting the
@@ -463,11 +688,8 @@ impl GenEngine {
                         .context("preemption victim not in any slot")?;
                     let vs = self.slots[vi].take().unwrap(); // areal-lint: allow(panic, reason="victim indices are drawn from occupied slots")
                     // exclude the pending token — its KV was never computed
-                    self.serve.plock().preempt(
-                        victim,
-                        &vs.tokens,
-                        vs.tokens.len().saturating_sub(1),
-                    );
+                    let upto = self.cacheable_len(&vs);
+                    self.serve.plock().preempt(victim, &vs.tokens, upto);
                     self.parked.insert(victim, vs);
                     // the freed slot refills at the next prefill wave
                     self.needs_prefill = true;
@@ -554,11 +776,8 @@ impl GenEngine {
             if let Some(truncated) = done {
                 // the final token (EOS/truncation boundary) is committed but
                 // its KV was never computed — keep it out of the cache
-                self.serve.plock().finish(
-                    s.seq_id,
-                    &s.tokens,
-                    s.tokens.len().saturating_sub(1),
-                );
+                let upto = self.cacheable_len(&s);
+                self.serve.plock().finish(s.seq_id, &s.tokens, upto);
                 finished.push(s.into_trajectory(truncated, self.worker_id));
             } else {
                 self.slots[i] = Some(s);
@@ -608,8 +827,9 @@ mod tests {
         let dir = test_artifacts_dir()?;
         let m = Manifest::load(&dir).expect("manifest load");
         let spec = m.tier("nano").unwrap();
-        let engine =
-            Arc::new(Engine::load_subset(spec, Some(&["init", "prefill", "decode"])).unwrap());
+        let names = spec.config.generation_entrypoints();
+        let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+        let engine = Arc::new(Engine::load_subset(spec, Some(&refs)).unwrap());
         let params = ParamSet::init(&engine, [1, 2]).unwrap();
         Some((engine, params))
     }
@@ -775,6 +995,69 @@ mod tests {
             stats.prefill_tokens_cached > 0,
             "siblings should reuse the shared prompt prefix: {stats:?}"
         );
+    }
+
+    #[test]
+    fn warm_cache_wave_issues_smaller_prefill_bucket() {
+        let (engine, params) = require_artifacts!(setup());
+        // a prompt long enough that a cold admission wave overflows the
+        // 16-token bucket (26 tokens with BOS -> bucket 32), while a warm
+        // wave's uncached remainder (2 tokens past the block-aligned cached
+        // prefix of 24) fits the smallest bucket. Greedy decoding makes the
+        // paged and dense runs directly comparable.
+        let long = Prompt {
+            text: format!("Q{}=", "1234567890123456789+123"),
+            meta: String::new(),
+            level: 1,
+            group: 0,
+        };
+        let run = |paged: bool| {
+            let mut g = GenEngine::new(engine.clone(), params.clone(), 0, 0.0, 5);
+            g.configure_prefix_prefill(paged, 16);
+            assert_eq!(
+                g.paged_prefill_active(),
+                paged,
+                "nano's default serve geometry should match the artifact family"
+            );
+            // cold: nothing cached, the wave pays the whole prompt
+            let mut first = vec![long.clone()];
+            g.fill(&mut first).unwrap();
+            g.prefill().unwrap();
+            let cold = g.last_prefill_bucket;
+            let mut out = g.drain().unwrap();
+            // warm: three GRPO siblings reuse the block-aligned prompt prefix
+            let mut rest: Vec<Prompt> = (0..3).map(|_| long.clone()).collect();
+            g.fill(&mut rest).unwrap();
+            g.prefill().unwrap();
+            let warm = g.last_prefill_bucket;
+            out.extend(g.drain().unwrap());
+            assert!(
+                g.serve_stats().prefill_tokens_cached > 0,
+                "siblings should hit the radix cache: {:?}",
+                g.serve_stats()
+            );
+            (cold, warm, out)
+        };
+        let (cold, warm, paged_out) = run(true);
+        let (cold_d, warm_d, dense_out) = run(false);
+        assert_eq!((cold_d, warm_d), (None, None), "dense waves report no bucket");
+        let (cold, warm) = (cold.expect("paged wave ran"), warm.expect("paged wave ran"));
+        assert!(
+            warm < cold,
+            "warm wave should issue a strictly smaller bucket (cold {cold}, warm {warm})"
+        );
+        // prefix-skipping must not change what gets sampled: same tokens,
+        // behavior logprobs within kernel tolerance of the full-recompute run
+        assert_eq!(paged_out.len(), dense_out.len());
+        for (p, d) in paged_out.iter().zip(&dense_out) {
+            assert_eq!(p.tokens, d.tokens, "greedy tokens diverged from dense reference");
+            for (lp, ld) in p.behav_logp.iter().zip(&d.behav_logp) {
+                assert!(
+                    (lp - ld).abs() < 2e-2,
+                    "behavior logp drifted: paged {lp} vs dense {ld}"
+                );
+            }
+        }
     }
 
     // helper: Vec<SendLiteral> clone via literal reshape (Literal has no Clone;

@@ -109,6 +109,11 @@ pub struct RolloutCfg {
     pub refill_fraction: f64,
     /// serving-layer configuration (KV block budget, prefix cache)
     pub serve: Option<ServeCfg>,
+    /// prefix-skipping bucketed prefill on/off (`prefix_prefill`); falls
+    /// back to the dense executable when off or unsupported by the artifact
+    pub prefix_prefill: bool,
+    /// smallest fresh-token bucket a paged wave may issue
+    pub prefill_bucket_min: usize,
     /// data-plane transport to this worker's replica endpoint
     pub link: WorkerLink,
 }
@@ -303,6 +308,7 @@ pub fn run_rollout_worker(worker_id: usize, engine: Arc<Engine>,
     let params = shared.server.get();
     let mut gen = GenEngine::with_serve(engine, params, worker_id, cfg.temperature,
                                         seed, cfg.serve.clone());
+    gen.configure_prefix_prefill(cfg.prefix_prefill, cfg.prefill_bucket_min);
     let res = worker_life(worker_id, &mut gen, &shared, &cfg, &mut life_epoch);
     guard.epoch = life_epoch;
     if matches!(res, Ok(LifeExit::Converted)) {

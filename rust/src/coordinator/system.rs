@@ -465,6 +465,8 @@ impl System {
                 temperature: cfg.temperature,
                 refill_fraction: cfg.refill_fraction,
                 serve: Some(serve.clone()),
+                prefix_prefill: cfg.prefix_prefill,
+                prefill_bucket_min: cfg.prefill_bucket_min,
                 link: link.clone(),
             };
             let engine = Arc::clone(&self.engine);

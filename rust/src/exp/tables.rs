@@ -249,10 +249,10 @@ pub fn eval_checkpoint(tier: &str, task: &str, ckpt: &std::path::Path,
                        artifacts: &std::path::Path, samples: usize) -> Result<()> {
     let manifest = crate::runtime::Manifest::load(artifacts)?;
     let spec = manifest.tier(tier)?;
-    let engine = std::sync::Arc::new(crate::runtime::Engine::load_subset(
-        spec,
-        Some(&["init", "prefill", "decode"]),
-    )?);
+    let names = spec.config.generation_entrypoints();
+    let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let engine =
+        std::sync::Arc::new(crate::runtime::Engine::load_subset(spec, Some(&refs))?);
     let state = crate::runtime::params::load_checkpoint(ckpt, spec)?;
     let mut rows = Vec::new();
     for suite in evalsuite::suites_for(task) {

@@ -161,6 +161,9 @@ fn cmd_sim(args: &[String]) -> Result<()> {
     if let Some(p) = kv(args, "prefix_cache") {
         cfg.prefix_cache = areal::config::parse_bool(&p)?;
     }
+    if let Some(p) = kv(args, "prefill_tok_s") {
+        cfg.prefill_tok_s = p.parse()?;
+    }
     // the sim emits the same metric names as live runs, stamped from its
     // modeled clock — enable the registry so the summary below has data
     areal::util::metrics::set_enabled(true);

@@ -57,11 +57,28 @@ pub struct TierConfig {
     pub grad_clip: f64,
     pub param_count: usize,
     pub paper_analogue: String,
+    /// paged-KV geometry of the prefix-skipping prefill family (mirrors
+    /// tiers.py; absent in pre-family manifests, then derived defaults)
+    pub kv_block_size: usize,
+    pub kv_pool_blocks: usize,
+    pub kv_table_width: usize,
+    /// fresh-token widths of the `prefill_p{Tb}` entrypoints, descending;
+    /// empty when the manifest predates the family
+    pub prefill_buckets: Vec<usize>,
 }
 
 impl TierConfig {
     pub fn head_dim(&self) -> usize {
         self.d_model / self.n_heads
+    }
+
+    /// Entrypoints a generation-only engine needs: the dense trio plus the
+    /// prefix-skipping `prefill_p{Tb}` family when the manifest carries one.
+    pub fn generation_entrypoints(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            ["init", "prefill", "decode"].iter().map(|s| s.to_string()).collect();
+        names.extend(self.prefill_buckets.iter().map(|tb| format!("prefill_p{tb}")));
+        names
     }
 }
 
@@ -174,6 +191,22 @@ fn parse_tier(name: &str, j: &Json, dir: &Path) -> Result<TierSpec> {
     }
     let get_usize =
         |k: &str| cfg.get_usize(k).with_context(|| format!("config missing {k}"));
+    // paged-KV geometry: older manifests predate these keys, so fall back to
+    // the same derivation tiers.py uses (must track ServeCfg::for_engine)
+    let max_seq = get_usize("max_seq")?;
+    let gen_batch = get_usize("gen_batch")?;
+    let bs_default = if max_seq <= 256 { 8 } else { 16 };
+    let kv_block_size = cfg.get_usize("kv_block_size").unwrap_or(bs_default);
+    let tw_default = (max_seq + 1).div_ceil(kv_block_size);
+    let kv_table_width = cfg.get_usize("kv_table_width").unwrap_or(tw_default);
+    let kv_pool_blocks = cfg
+        .get_usize("kv_pool_blocks")
+        .unwrap_or(2 * kv_table_width * gen_batch);
+    let prefill_buckets = cfg
+        .get("prefill_buckets")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default();
     let config = TierConfig {
         name: name.to_string(),
         vocab: get_usize("vocab")?,
@@ -181,8 +214,8 @@ fn parse_tier(name: &str, j: &Json, dir: &Path) -> Result<TierSpec> {
         n_layers: get_usize("n_layers")?,
         n_heads: get_usize("n_heads")?,
         d_ff: get_usize("d_ff")?,
-        max_seq: get_usize("max_seq")?,
-        gen_batch: get_usize("gen_batch")?,
+        max_seq,
+        gen_batch,
         chunk: get_usize("chunk")?,
         train_batch: get_usize("train_batch")?,
         arch: cfg.get_str("arch").unwrap_or("gpt").to_string(),
@@ -192,6 +225,10 @@ fn parse_tier(name: &str, j: &Json, dir: &Path) -> Result<TierSpec> {
         grad_clip: cfg.get_f64("grad_clip").context("missing grad_clip")?,
         param_count: get_usize("param_count")?,
         paper_analogue: cfg.get_str("paper_analogue").unwrap_or("").to_string(),
+        kv_block_size,
+        kv_pool_blocks,
+        kv_table_width,
+        prefill_buckets,
     };
 
     let params = j
@@ -270,11 +307,41 @@ mod tests {
         let m = Manifest::load(&artifacts_dir_or_skip!()).expect("manifest load");
         let tier = m.tier("nano").unwrap();
         assert_eq!(tier.config.vocab, 48);
-        assert_eq!(tier.entrypoints.len(), 12);
+        assert_eq!(tier.entrypoints.len(), 15);
         // the DP split pair exists alongside the fused path
         assert!(tier.entry("grad_step").is_ok());
         assert!(tier.entry("grad_step_h").is_ok());
         assert!(tier.entry("apply_grads").is_ok());
+        // the bucketed prefix-skipping prefill family is pinned by config
+        assert_eq!(tier.config.prefill_buckets, vec![64, 32, 16]);
+        assert_eq!(tier.config.kv_block_size, 8);
+        assert_eq!(tier.config.kv_table_width, 9);
+        assert_eq!(tier.config.kv_pool_blocks, 72);
+        for &tb in &tier.config.prefill_buckets {
+            let ep = tier.entry(&format!("prefill_p{tb}")).unwrap();
+            let ti = ep.input_index("tokens").unwrap();
+            assert_eq!(ep.inputs[ti].shape, vec![tier.config.gen_batch, tb]);
+            let bi = ep.input_index("block_table").unwrap();
+            assert_eq!(
+                ep.inputs[bi].shape,
+                vec![tier.config.gen_batch, tier.config.kv_table_width]
+            );
+            let pi = ep.input_index("pool.k0").unwrap();
+            assert_eq!(ep.inputs[pi].dtype, Dtype::F16);
+            assert_eq!(
+                ep.inputs[pi].shape,
+                vec![
+                    tier.config.kv_pool_blocks,
+                    tier.config.kv_block_size,
+                    tier.config.n_heads,
+                    tier.config.head_dim()
+                ]
+            );
+            // pools round-trip (in and out), dense kv + sampled token follow
+            assert_eq!(ep.outputs[0].name, "pool.k0");
+            assert_eq!(ep.output_index("kv.k0").is_some(), true);
+            assert_eq!(ep.outputs.last().unwrap().name, "logp");
+        }
         let dec = tier.entry("decode").unwrap();
         // decode outputs start with toks/logps
         assert_eq!(dec.outputs[0].name, "toks");

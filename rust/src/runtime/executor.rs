@@ -127,6 +127,13 @@ impl Engine {
         self.client.platform_name()
     }
 
+    /// Whether an entrypoint was loaded — used to feature-detect optional
+    /// families (e.g. the bucketed `prefill_p{Tb}` prefix-skipping path) so
+    /// callers can fall back to the dense executables on older artifacts.
+    pub fn has_entry(&self, name: &str) -> bool {
+        self.entries.contains_key(name)
+    }
+
     pub fn entry_spec(&self, name: &str) -> Result<&EntrySpec> {
         Ok(&self
             .entries

@@ -115,6 +115,42 @@ pub fn prefill_s(hw: &HardwareProfile, m: &ModelProfile, tokens: f64) -> f64 {
     2.0 * m.params * tokens / (hw.peak_flops * m.tp as f64 * hw.mfu)
 }
 
+/// Smallest fresh-token width a bucketed prefill wave issues (mirrors the
+/// engine's `prefill_bucket_min` default and the floor of the lowered
+/// `prefill_p{Tb}` family).
+pub const PREFILL_BUCKET_MIN: f64 = 16.0;
+
+/// Tokens actually charged for one sequence's uncached remainder under the
+/// bucketed prefix-skipping prefill: the executable family only exists at
+/// power-of-two widths, so a wave pays for the smallest bucket covering the
+/// remainder, never less than [`PREFILL_BUCKET_MIN`]. Zero stays zero (a
+/// fully cached admission joins a sibling's wave for free).
+pub fn prefill_bucket_tokens(fresh: f64) -> f64 {
+    if fresh <= 0.0 {
+        return 0.0;
+    }
+    let mut b = PREFILL_BUCKET_MIN;
+    while b < fresh {
+        b *= 2.0;
+    }
+    b
+}
+
+/// Wave cost for `charged` bucket-rounded prefill tokens: the measured
+/// per-token kernel cost when one is supplied (`prefill_tok_s` from a
+/// BENCH_runtime.json sweep of the `prefill_p{Tb}` family), the analytic
+/// FLOPs estimate otherwise. The analytic default keeps the sim
+/// deterministic across machines; the measured override is what ties the
+/// modeled prefill savings to kernel wall-clock.
+pub fn prefill_wave_s(hw: &HardwareProfile, m: &ModelProfile, charged: f64,
+                      tok_s: f64) -> f64 {
+    if tok_s > 0.0 {
+        charged * tok_s
+    } else {
+        prefill_s(hw, m, charged)
+    }
+}
+
 /// One PPO training step over `tokens` tokens on `n_gpus` training devices
 /// (fwd+bwd ≈ 6 flops/param/token, plus gradient allreduce).
 pub fn train_step_s(hw: &HardwareProfile, m: &ModelProfile, tokens: f64,

@@ -13,7 +13,8 @@ use crate::util::rng::Rng;
 use crate::util::stats;
 
 use super::profile::{
-    decode_round_s, max_slots, prefill_s, reshard_s, train_step_s,
+    decode_round_s, max_slots, prefill_bucket_tokens, prefill_s, prefill_wave_s, reshard_s,
+    train_step_s,
     weight_broadcast_s, HardwareProfile, ModelProfile,
 };
 use super::workload::LenSampler;
@@ -86,6 +87,11 @@ pub struct SimConfig {
     /// unchanged) — the workload shape that makes any static
     /// `gen_fraction` wrong in one of the two phases
     pub len_drift: Option<(f64, f64)>,
+    /// measured per-token prefill cost in seconds (e.g. the bucketed
+    /// `prefill_p{Tb}` wall-clock from BENCH_runtime.json divided by its
+    /// token width); 0 keeps the analytic FLOPs model, so default sim
+    /// outputs — and the bench_diff gate over them — stay machine-independent
+    pub prefill_tok_s: f64,
     pub seed: u64,
 }
 
@@ -116,6 +122,7 @@ impl SimConfig {
             transport_hop_s: 0.0,
             rebalance: false,
             len_drift: None,
+            prefill_tok_s: 0.0,
             seed: 1,
         }
     }
@@ -606,6 +613,11 @@ fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
     };
     let g = cfg.group_size.max(1) as u64;
     let mut paid = 0.0;
+    // bucket-rounded fresh tokens actually dispatched to the prefill
+    // executables (the paid tokens, each sequence rounded up to its
+    // `prefill_p{Tb}` bucket) — this is what the wave bills for, and what
+    // `areal_prefill_skipped_tokens_total` measures the complement of live
+    let mut charged = 0.0;
     let mut cached = 0.0;
     let mut stolen = 0u64;
     let mut popped = false;
@@ -651,6 +663,7 @@ fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
             let hit = if shared_hit { shared } else { 0.0 };
             cached += hit;
             paid += cfg.prompt_len - hit;
+            charged += prefill_bucket_tokens(cfg.prompt_len - hit);
             if cfg.prefix_cache {
                 dev.cached.insert(gid, version);
                 dev.family_cached = Some((fam, version));
@@ -665,8 +678,9 @@ fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
         popped = true;
     }
     if paid > 0.0 {
-        // prefill cost for the uncached prompt tokens only
-        let t = prefill_s(&cfg.hw, &cfg.model, paid);
+        // prefill cost for the uncached prompt tokens only, billed at
+        // bucket granularity (measured per-token kernel cost when supplied)
+        let t = prefill_wave_s(&cfg.hw, &cfg.model, charged, cfg.prefill_tok_s);
         let dev = &mut devices[d];
         dev.resume_at = dev.resume_at.max(now) + t;
     }
@@ -1039,7 +1053,15 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                             .map(|s| cfg.prompt_len + s.produced)
                             .sum();
                         recompute_tokens += committed;
-                        let t = prefill_s(hw, m, committed);
+                        // interrupt KV recompute is a fully-uncached wave
+                        // (stale pool entries were just invalidated), each
+                        // sequence billed at its bucket width
+                        let charged: f64 = dev
+                            .slots
+                            .iter()
+                            .map(|s| prefill_bucket_tokens(cfg.prompt_len + s.produced))
+                            .sum();
+                        let t = prefill_wave_s(hw, m, charged, cfg.prefill_tok_s);
                         dev.resume_at = dev.resume_at.max(now) + t;
                         if steps_done <= TIMELINE_STEPS && d < TIMELINE_DEVICES {
                             timeline.push(Interval {
@@ -1178,9 +1200,10 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
         metrics::set("areal_dp_workers",
                      ((n_train / m.tp).max(1) - 1) as f64);
         // modeled request-latency series: time-to-first-token is the cold
-        // prefill of one prompt; a mean-length completion's e2e adds its
-        // share of device decode time (S slots share each busy second)
-        let ttft = prefill_s(hw, m, cfg.prompt_len);
+        // prefill of one prompt — bucket-rounded like the paged executables,
+        // billed at the measured per-token rate when one is configured
+        let ttft = prefill_wave_s(hw, m, prefill_bucket_tokens(cfg.prompt_len),
+                                  cfg.prefill_tok_s);
         metrics::observe("areal_ttft_seconds", ttft);
         if completions > 0 {
             let mean_decode = busy * slots_per_dev as f64 / completions as f64;
