@@ -123,6 +123,45 @@ fn main() {
         ]));
     }
 
+    println!("\n== weight distribution: streamed shards vs rebroadcast (128 GPUs) ==");
+    {
+        // ISSUE-10 acceptance sweep: transport_hop_s × weight-distribution
+        // policy. The full-set rebroadcast sits on the trainer's critical
+        // path and is hop-free; the streamed shards move the cost to each
+        // replica's adoption stall, which grows with per-chunk round-trips
+        // — the records show where streaming stops paying off.
+        for (label, hop) in [("0", 0.0), ("100us", 1e-4), ("1ms", 1e-3), ("10ms", 1e-2)] {
+            let mut c = SimConfig::paper_default(sim::profile::MODEL_7B, 128, 16384.0);
+            c.n_steps = 6;
+            c.transport_hop_s = hop;
+            let broadcast = sim::run_async(&c);
+            c.weight_stream = true;
+            let streamed = sim::run_async(&c);
+            println!(
+                "  hop {label:>5}: rebroadcast {:>8.1}  streamed {:>8.1} ktok/s  ({:.2}x)",
+                broadcast.effective_tps / 1e3,
+                streamed.effective_tps / 1e3,
+                streamed.effective_tps / broadcast.effective_tps
+            );
+            records.push(Json::obj(vec![
+                ("name", Json::str("weight_stream")),
+                ("hop", Json::str(label)),
+                ("policy", Json::str("broadcast")),
+                ("effective_tps", Json::num(broadcast.effective_tps)),
+            ]));
+            records.push(Json::obj(vec![
+                ("name", Json::str("weight_stream")),
+                ("hop", Json::str(label)),
+                ("policy", Json::str("streamed")),
+                ("effective_tps", Json::num(streamed.effective_tps)),
+                (
+                    "speedup",
+                    Json::num(streamed.effective_tps / broadcast.effective_tps),
+                ),
+            ]));
+        }
+    }
+
     println!("\n== simulator cost itself ==");
     let bench = Bench::quick();
     let cfg = {

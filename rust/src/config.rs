@@ -164,6 +164,22 @@ pub struct Config {
     pub socket_addr: String,
     /// socket transport max frame size in bytes
     pub socket_max_frame: usize,
+    /// rollout worker slots served by OUT-OF-PROCESS `areal worker`
+    /// binaries instead of local threads (socket transport only; the
+    /// highest-numbered slots are the external ones)
+    pub workers_external: usize,
+    /// address an `areal worker` process dials for its replica endpoint
+    /// (`areal worker connect=HOST:PORT`; unused by the coordinator)
+    pub worker_connect: String,
+    /// streamed weight distribution: payload bytes per `wchunk` frame
+    /// (clamped so a hex-encoded chunk always fits `socket_max_frame`)
+    pub weight_chunk_bytes: usize,
+    /// resume an interrupted weight stream from the last acked chunk on
+    /// reconnect instead of restarting at chunk 0
+    pub weight_resume: bool,
+    /// shared-secret handshake token carried on every control frame of
+    /// the socket transport (empty = auth off)
+    pub auth_token: String,
     /// supervised auto-restarts per rollout worker: an erroring worker is
     /// re-added through `add_replica` behind the epoch fence this many
     /// times before its failure is final (0 = no restart)
@@ -268,6 +284,11 @@ impl Default for Config {
             replica_transport: TransportKind::Local,
             socket_addr: "127.0.0.1:0".into(),
             socket_max_frame: 1 << 20,
+            workers_external: 0,
+            worker_connect: String::new(),
+            weight_chunk_bytes: 262_144,
+            weight_resume: true,
+            auth_token: String::new(),
             replica_restarts: 0,
             rebalance: RebalanceMode::Off,
             rebalance_interval_s: 0.25,
@@ -336,6 +357,11 @@ impl Config {
         ("replica_transport", "local"),
         ("socket_addr", "127.0.0.1:0"),
         ("socket_max_frame", "1048576"),
+        ("workers_external", "0"),
+        ("worker_connect", "127.0.0.1:47311"),
+        ("weight_chunk_bytes", "262144"),
+        ("weight_resume", "true"),
+        ("auth_token", "sesame"),
         ("replica_restarts", "0"),
         ("rebalance", "threshold"),
         ("rebalance_interval_s", "0.25"),
@@ -441,6 +467,11 @@ impl Config {
             "replica_transport" => self.replica_transport = TransportKind::parse(val)?,
             "socket_addr" => self.socket_addr = val.to_string(),
             "socket_max_frame" => self.socket_max_frame = u(val)?,
+            "workers_external" => self.workers_external = u(val)?,
+            "worker_connect" => self.worker_connect = val.to_string(),
+            "weight_chunk_bytes" => self.weight_chunk_bytes = u(val)?,
+            "weight_resume" => self.weight_resume = parse_bool(val)?,
+            "auth_token" => self.auth_token = val.to_string(),
             "replica_restarts" => self.replica_restarts = u(val)?,
             "rebalance" => self.rebalance = RebalanceMode::parse(val)?,
             "rebalance_interval_s" => self.rebalance_interval_s = f(val)?,
@@ -564,6 +595,25 @@ impl Config {
                 self.socket_addr,
                 self.n_rollout_workers
             );
+        }
+        if self.workers_external > 0 {
+            if self.replica_transport != TransportKind::Socket {
+                bail!(
+                    "workers_external ({}) requires replica_transport=socket \
+                     (out-of-process workers dial a socket endpoint)",
+                    self.workers_external
+                );
+            }
+            if self.workers_external > self.n_rollout_workers {
+                bail!(
+                    "workers_external ({}) exceeds n_rollout_workers ({})",
+                    self.workers_external,
+                    self.n_rollout_workers
+                );
+            }
+        }
+        if self.weight_chunk_bytes == 0 {
+            bail!("weight_chunk_bytes must be >= 1");
         }
         if self.rebalance == RebalanceMode::Threshold {
             if self.rebalance_interval_s <= 0.0 {

@@ -79,6 +79,96 @@ impl Trajectory {
         self.tokens.len() - self.prompt_len
     }
 
+    /// Wire form for the `result` frames an out-of-process worker returns
+    /// (DESIGN.md §13). `behav_logp` ships as `f32::to_bits` integers so
+    /// the importance ratios the trainer derives from π_behav are
+    /// bit-exact across the socket hop; the span re-anchors on decode like
+    /// every other [`crate::serve::ReqSpan`] crossing.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::serve::Wire;
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("prompt", self.prompt.to_json()),
+            (
+                "tokens",
+                Json::Arr(self.tokens.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("plen", Json::num(self.prompt_len as f64)),
+            (
+                "logp",
+                Json::Arr(
+                    self.behav_logp.iter().map(|l| Json::num(l.to_bits() as f64)).collect(),
+                ),
+            ),
+            (
+                "segs",
+                Json::Arr(
+                    self.segments
+                        .iter()
+                        .map(|&(v, n)| {
+                            Json::Arr(vec![Json::num(v as f64), Json::num(n as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("born", Json::num(self.version_born as f64)),
+            ("reward", Json::num(self.reward as f64)),
+            ("correct", Json::Bool(self.correct)),
+            ("trunc", Json::Bool(self.truncated)),
+            ("worker", Json::num(self.worker as f64)),
+            ("span", self.span.to_json()),
+        ])
+    }
+
+    /// Inverse of [`Trajectory::to_json`]; `None` on any malformed field.
+    pub fn from_json(j: &crate::util::json::Json) -> Option<Trajectory> {
+        use crate::serve::Wire;
+        let tokens = j
+            .get("tokens")?
+            .as_arr()?
+            .iter()
+            .map(|t| t.as_f64().map(|f| f as i32))
+            .collect::<Option<Vec<_>>>()?;
+        let behav_logp = j
+            .get("logp")?
+            .as_arr()?
+            .iter()
+            .map(|l| l.as_f64().map(|f| f32::from_bits(f as u32)))
+            .collect::<Option<Vec<_>>>()?;
+        let segments = j
+            .get("segs")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                let p = s.as_arr()?;
+                if p.len() != 2 {
+                    return None;
+                }
+                Some((p[0].as_f64()? as Version, p[1].as_f64()? as usize))
+            })
+            .collect::<Option<Vec<_>>>()?;
+        let prompt_len = j.get_usize("plen")?;
+        if prompt_len > tokens.len() {
+            return None;
+        }
+        Some(Trajectory {
+            prompt: Prompt::from_json(j.get("prompt")?)?,
+            tokens,
+            prompt_len,
+            behav_logp,
+            segments,
+            version_born: j.get_f64("born")? as Version,
+            reward: j.get_f64("reward")? as f32,
+            correct: j.get("correct")?.as_bool()?,
+            truncated: j.get("trunc")?.as_bool()?,
+            worker: j.get_usize("worker")?,
+            span: j
+                .get("span")
+                .map(crate::serve::ReqSpan::from_json)
+                .unwrap_or_default(),
+        })
+    }
+
     /// Staleness of this sample at trainer version `v` (paper §5.1).
     pub fn staleness_at(&self, v: Version) -> u64 {
         v.saturating_sub(self.version_born)
@@ -151,6 +241,36 @@ mod tests {
         assert_eq!(back.meta, p.meta);
         assert_eq!(back.level, p.level);
         assert_eq!(back.group, p.group);
+    }
+
+    #[test]
+    fn trajectory_wire_roundtrip_is_bit_exact() {
+        let mut t = traj();
+        t.behav_logp = vec![-0.1, f32::MIN_POSITIVE, -123.456_79, 0.0];
+        t.tokens = vec![1, 5, 6, 7, 8, 9, 10, 2];
+        let back = Trajectory::from_json(&t.to_json()).expect("roundtrip");
+        assert_eq!(back.tokens, t.tokens);
+        assert_eq!(back.prompt_len, t.prompt_len);
+        // π_behav must cross the wire bit-exactly, not approximately
+        let bits = |v: &[f32]| v.iter().map(|l| l.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.behav_logp), bits(&t.behav_logp));
+        assert_eq!(back.segments, t.segments);
+        assert_eq!(back.version_born, t.version_born);
+        assert_eq!(back.reward, t.reward);
+        assert_eq!(back.correct, t.correct);
+        assert_eq!(back.truncated, t.truncated);
+        assert_eq!(back.worker, t.worker);
+        assert_eq!(back.prompt.text, t.prompt.text);
+    }
+
+    #[test]
+    fn trajectory_wire_rejects_inconsistent_prompt_len() {
+        let t = traj();
+        let mut j = t.to_json();
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            m.insert("plen".into(), crate::util::json::Json::num(99.0));
+        }
+        assert!(Trajectory::from_json(&j).is_none());
     }
 
     #[test]

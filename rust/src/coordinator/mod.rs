@@ -21,16 +21,18 @@ pub mod rollout;
 pub mod system;
 pub mod trace;
 pub mod trainer;
+pub mod worker;
 
 pub use buffer::ReplayBuffer;
 pub use dp::{DpPool, DpWorker};
 pub use gate::StalenessGate;
 pub use gen_engine::GenEngine;
 pub use messages::{GenRequest, GenRouter, StepMetrics, Trajectory};
-pub use param_server::ParamServer;
+pub use param_server::{ParamServer, WeightStreamer};
 pub use rebalance::{
     Decision, Observation, RebalanceCfg, RebalanceCtl, RebalanceReason, RoleBoard,
 };
 pub use system::{RunReport, System};
 pub use trace::{Event, Trace};
 pub use trainer::{Trainer, TrainerCfg};
+pub use worker::{run_worker, ResultSink};

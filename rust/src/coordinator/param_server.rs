@@ -5,11 +5,15 @@
 //! the `update_weights` request; pull-based, which composes naturally with
 //! interruptible generation).
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
+use crate::runtime::params::encode_param_set;
 use crate::runtime::{ParamSet, Version};
-use crate::util::sync::RwLockExt;
+use crate::serve::weights::{chunk_count, chunk_slice};
+use crate::util::metrics;
+use crate::util::sync::{MutexExt, RwLockExt};
 
 pub struct ParamServer {
     current: RwLock<Arc<ParamSet>>,
@@ -52,6 +56,132 @@ impl ParamServer {
     }
 }
 
+/// Chunked weight distribution over the socket transport (DESIGN.md §13):
+/// the server-side half of the streamed `ParamSet` hand-off that replaces
+/// shared memory for out-of-process workers.
+///
+/// The streamer lazily encodes the latest published set into a flat wire
+/// blob (cached per version — every replica streams from the same bytes)
+/// and serves it in `chunk_bytes` pieces through the endpoint's
+/// `wbegin`/`wpull` hooks. Per-replica cursors track how far each stream
+/// has progressed; they are transient connection bookkeeping, dropped when
+/// the connection ends — cleanly or not — via the endpoint's closed hook,
+/// so a worker that vanishes mid-broadcast cannot leak its cursor. Resume
+/// is client-driven: the worker quotes its partial assembly in `wbegin`
+/// and, when `resume` is on and the version is still current, the plan
+/// starts from that chunk instead of zero; a version retired mid-stream
+/// answers stale and the worker fast-forwards to the latest.
+pub struct WeightStreamer {
+    server: Arc<ParamServer>,
+    chunk_bytes: usize,
+    resume: bool,
+    /// encoded-blob cache for the newest streamed version
+    blob: Mutex<Option<(Version, Arc<Vec<u8>>)>>,
+    /// replica -> (version, next chunk) for in-flight streams
+    cursors: Mutex<HashMap<usize, (Version, usize)>>,
+    chunks_served: AtomicU64,
+}
+
+impl WeightStreamer {
+    pub fn new(server: Arc<ParamServer>, chunk_bytes: usize, resume: bool) -> Arc<Self> {
+        Arc::new(WeightStreamer {
+            server,
+            chunk_bytes: chunk_bytes.max(1),
+            resume,
+            blob: Mutex::new(None),
+            cursors: Mutex::new(HashMap::new()),
+            chunks_served: AtomicU64::new(0),
+        })
+    }
+
+    /// Encoded blob of the latest published set, cached per version. The
+    /// params are fetched and encoded outside the cache guard (encoding is
+    /// the expensive step, and the guard is a leaf lock).
+    fn latest_blob(&self) -> Option<(Version, Arc<Vec<u8>>)> {
+        let params = self.server.get();
+        let v = params.version;
+        {
+            let g = self.blob.plock();
+            if let Some((bv, b)) = g.as_ref() {
+                if *bv >= v {
+                    return Some((*bv, Arc::clone(b)));
+                }
+            }
+        }
+        let enc = match encode_param_set(&params) {
+            Ok(e) => Arc::new(e),
+            Err(_) => return None,
+        };
+        let mut g = self.blob.plock();
+        match g.as_ref() {
+            // a racing encoder published something newer: serve that
+            Some((bv, b)) if *bv > v => Some((*bv, Arc::clone(b))),
+            _ => {
+                *g = Some((v, Arc::clone(&enc)));
+                Some((v, enc))
+            }
+        }
+    }
+
+    /// `wbegin` negotiation for `replica`: plan `(version, total, start)`.
+    pub fn plan(
+        &self,
+        replica: usize,
+        have: Option<(Version, usize)>,
+    ) -> Option<(Version, usize, usize)> {
+        let (v, blob) = self.latest_blob()?;
+        let total = chunk_count(blob.len(), self.chunk_bytes);
+        let start = match have {
+            // resume only a partial assembly of the still-current version;
+            // anything else (older version, complete, resume off) streams
+            // from scratch at the latest — the fast-forward path
+            Some((hv, k)) if self.resume && hv == v && k < total => k,
+            _ => 0,
+        };
+        self.cursors.plock().insert(replica, (v, start));
+        Some((v, total, start))
+    }
+
+    /// `wpull` for `replica`: chunk `i` of `version`, or `None` once that
+    /// version is no longer the one being streamed (retired mid-stream).
+    pub fn chunk(&self, replica: usize, version: Version, i: usize) -> Option<(Vec<u8>, usize)> {
+        let (v, blob) = self.latest_blob()?;
+        if v != version {
+            return None;
+        }
+        let data = chunk_slice(&blob, self.chunk_bytes, i)?.to_vec();
+        let total = chunk_count(blob.len(), self.chunk_bytes);
+        self.cursors.plock().insert(replica, (version, i + 1));
+        self.chunks_served.fetch_add(1, Ordering::Relaxed);
+        metrics::inc("areal_weight_chunks_total", 1);
+        Some((data, total))
+    }
+
+    /// Connection-end cleanup: drop `replica`'s stream cursor. Wired to
+    /// the endpoint's closed hook, which fires on clean byes AND on
+    /// disconnect-without-bye — a worker lost mid-broadcast must not leak
+    /// its cursor (regression: `cursor_dies_with_its_connection`).
+    pub fn note_closed(&self, replica: usize) {
+        self.cursors.plock().remove(&replica);
+    }
+
+    /// In-flight stream cursors (replica count).
+    pub fn cursor_count(&self) -> usize {
+        self.cursors.plock().len()
+    }
+
+    /// `replica`'s cursor, if a stream is in flight.
+    pub fn cursor(&self, replica: usize) -> Option<(Version, usize)> {
+        self.cursors.plock().get(&replica).copied()
+    }
+
+    /// Total chunks served over the streamer's lifetime (the fault plane
+    /// asserts resumed transfers serve fewer chunks than restarts would).
+    pub fn chunks_served(&self) -> u64 {
+        self.chunks_served.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,6 +208,78 @@ mod tests {
     fn rejects_version_regression() {
         let ps = ParamServer::new(pset(5));
         ps.publish(pset(3));
+    }
+
+    #[test]
+    fn streamer_serves_resumes_and_fast_forwards() {
+        let ps = ParamServer::new(pset(3));
+        let ws = WeightStreamer::new(Arc::clone(&ps), 8, true);
+        let (v, total, start) = ws.plan(0, None).unwrap();
+        assert_eq!((v, start), (3, 0));
+        assert!(total > 1, "scalar set must span multiple 8-byte chunks");
+        let mut asm = crate::serve::weights::WeightAssembler::new();
+        let mut done = None;
+        for i in 0..total {
+            let (data, n) = ws.chunk(0, v, i).unwrap();
+            assert_eq!(n, total);
+            done = asm.offer(v, i, n, &data).unwrap();
+        }
+        let (dv, blob) = done.expect("stream completes");
+        let decoded = crate::runtime::params::decode_param_set(&blob).unwrap();
+        assert_eq!((dv, decoded.version), (3, 3));
+        assert_eq!(ws.cursor(0), Some((3, total)));
+        assert_eq!(ws.chunks_served(), total as u64);
+
+        // reconnect quoting partial progress of the current version: resume
+        let (_, _, s) = ws.plan(0, Some((3, 1))).unwrap();
+        assert_eq!(s, 1, "partial assembly of the live version resumes");
+        // a newer publish retires v3 mid-stream: chunk answers stale, and
+        // the next plan fast-forwards the worker to the latest version
+        ps.publish(pset(5));
+        assert!(ws.chunk(0, 3, 1).is_none(), "retired version is stale");
+        let (v2, _, s2) = ws.plan(0, Some((3, 2))).unwrap();
+        assert_eq!((v2, s2), (5, 0));
+    }
+
+    #[test]
+    fn resume_off_always_streams_from_zero() {
+        let ps = ParamServer::new(pset(1));
+        let ws = WeightStreamer::new(ps, 8, false);
+        let (_, total, _) = ws.plan(0, None).unwrap();
+        let (_, _, s) = ws.plan(0, Some((1, total - 1))).unwrap();
+        assert_eq!(s, 0);
+    }
+
+    /// Regression: a worker that vanishes mid-weight-broadcast without a
+    /// `bye` must not leak the param server's per-replica stream cursor.
+    #[test]
+    fn cursor_dies_with_its_connection() {
+        use crate::serve::{SocketTransport, SocketWorker};
+        let ps = ParamServer::new(pset(2));
+        let ws = WeightStreamer::new(ps, 8, true);
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let plan_ws = Arc::clone(&ws);
+        let chunk_ws = Arc::clone(&ws);
+        t.set_weight_source(
+            Arc::new(move |have| plan_ws.plan(0, have)),
+            Arc::new(move |v, i| chunk_ws.chunk(0, v, i)),
+        );
+        let closed_ws = Arc::clone(&ws);
+        t.set_closed_fn(Arc::new(move || closed_ws.note_closed(0)));
+        {
+            let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+            let (v, _, _) = w.weight_begin(None).unwrap().unwrap();
+            w.weight_pull(v, 0).unwrap().unwrap();
+            assert_eq!(ws.cursor_count(), 1);
+            // dropped here WITHOUT a bye: mid-broadcast disconnect
+        }
+        for _ in 0..200 {
+            if ws.cursor_count() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert_eq!(ws.cursor_count(), 0, "per-replica weight cursor leaked");
     }
 
     #[test]

@@ -97,8 +97,13 @@ pub enum WorkerLink {
     Direct,
     /// socket: frame protocol against `addrs[replica]` (one endpoint per
     /// slot, so a supervised respawn onto a revived slot reconnects to
-    /// that slot's endpoint)
-    Socket { addrs: Arc<Vec<String>>, max_frame: usize },
+    /// that slot's endpoint); `auth` is the shared-secret token carried
+    /// on every frame when the endpoints arm handshake auth
+    Socket {
+        addrs: Arc<Vec<String>>,
+        max_frame: usize,
+        auth: Option<Arc<String>>,
+    },
 }
 
 #[derive(Debug, Clone)]
@@ -235,13 +240,18 @@ fn worker_life(worker_id: usize, gen: &mut GenEngine, shared: &RolloutShared,
             shared.router.register_probe(worker_id, gen.probe());
             Plane::Direct { epoch: shared.router.epoch(worker_id) }
         }
-        WorkerLink::Socket { addrs, max_frame } => {
+        WorkerLink::Socket { addrs, max_frame, auth } => {
             let addr = addrs.get(worker_id).with_context(|| {
                 format!("no socket endpoint for replica {worker_id}")
             })?;
             // measured state piggybacks on every pull; the epoch arrives
             // with the hello (reconnect-aware fencing)
-            let client = SocketWorker::connect(addr, *max_frame)?;
+            let client = SocketWorker::connect_auth(
+                addr,
+                *max_frame,
+                auth.as_ref().map(|t| t.as_str()),
+                false,
+            )?;
             // start at the poll threshold so the first control sweep
             // hears any already-broadcast Drain/UpdateWeights immediately
             Plane::Socket {

@@ -33,12 +33,13 @@ use super::controller::{run_controller, ControllerCfg};
 use super::dp::DpPool;
 use super::evalgen;
 use super::gate::StalenessGate;
-use super::param_server::ParamServer;
+use super::param_server::{ParamServer, WeightStreamer};
 use super::rebalance::{run_rebalancer, RebalanceCfg, RoleBoard};
 use super::rollout::{run_supervised_rollout_worker, RolloutCfg, RolloutShared, WorkerLink};
 use super::trace::{Event, Trace};
 use super::trainer::{Trainer, TrainerCfg};
 use super::messages::{GenRouter, StepMetrics};
+use super::worker::ResultSink;
 
 /// Shutdown path shared by every exit from [`System::run`] — the clean
 /// finish AND the trainer-error path: drain through the frontend (each
@@ -295,7 +296,50 @@ impl System {
                         .map(|t| Arc::clone(t) as Arc<dyn ReplicaTransport<_>>)
                         .collect();
                 let router = Arc::new(GenRouter::new_with(transports, rcfg));
+                // out-of-process plane (DESIGN.md §13): versioned weight
+                // shards stream over the same endpoints the requests use,
+                // and `result`/`stats` frames from external workers land in
+                // the ResultSink — the same buffer/reward/trace path an
+                // in-process worker takes. Chunk size is clamped so one
+                // hex-encoded chunk plus envelope always fits a frame.
+                let chunk_bytes = cfg
+                    .weight_chunk_bytes
+                    .min(cfg.socket_max_frame.saturating_sub(512) / 2)
+                    .max(1);
+                let streamer =
+                    WeightStreamer::new(Arc::clone(&server), chunk_bytes, cfg.weight_resume);
+                let sink = ResultSink::new(
+                    Arc::clone(&buffer),
+                    Arc::clone(&reward),
+                    Arc::clone(&self.trace),
+                    Arc::clone(&gen_tokens),
+                    cfg.route_policy.name(),
+                );
                 for (w, t) in endpoints.iter().enumerate() {
+                    if !cfg.auth_token.is_empty() {
+                        t.set_auth(Some(&cfg.auth_token));
+                    }
+                    let s = Arc::clone(&streamer);
+                    let s2 = Arc::clone(&streamer);
+                    let s3 = Arc::clone(&streamer);
+                    t.set_weight_source(
+                        Arc::new(move |have| s.plan(w, have)),
+                        Arc::new(move |v, i| s2.chunk(w, v, i)),
+                    );
+                    t.set_closed_fn(Arc::new(move || s3.note_closed(w)));
+                    let sink_c = Arc::clone(&sink);
+                    t.set_msg_fn(Arc::new(move |kind, msg| sink_c.handle(w, kind, msg)));
+                    // a worker reconnecting after a dropped link revives
+                    // its slot via hello{join}; the endpoint owns its own
+                    // reopen (weak ref breaks the Arc cycle)
+                    let weak_t = Arc::downgrade(t);
+                    let trace = Arc::clone(&self.trace);
+                    t.set_join_fn(Arc::new(move || {
+                        let Some(ep) = weak_t.upgrade() else { return false };
+                        let epoch = ep.reopen();
+                        trace.log(Event::ReplicaUp { replica: w, epoch });
+                        true
+                    }));
                     // remote pulls go through the fleet path (stealing
                     // included), exactly like a local worker's
                     let weak = Arc::downgrade(&router);
@@ -321,11 +365,21 @@ impl System {
                         }
                     }));
                 }
+                // the highest-numbered slots are reserved for external
+                // `areal worker` processes — print where they should dial
+                if cfg.workers_external > 0 {
+                    let n_local = cfg.n_rollout_workers - cfg.workers_external;
+                    for (i, a) in addrs.iter().enumerate().skip(n_local) {
+                        crate::info!("system", "external worker slot {i}: connect={a}");
+                    }
+                }
                 (
                     router,
                     WorkerLink::Socket {
                         addrs: Arc::new(addrs),
                         max_frame: cfg.socket_max_frame,
+                        auth: (!cfg.auth_token.is_empty())
+                            .then(|| Arc::new(cfg.auth_token.clone())),
                     },
                 )
             }
@@ -446,8 +500,12 @@ impl System {
         // rollout workers. A worker that dies on an error removes itself
         // from the router's membership first: its queued requests requeue
         // onto the survivors (zero lost), its outstanding/sticky state is
-        // released, and the rest of the fleet keeps serving.
-        for w in 0..cfg.n_rollout_workers {
+        // released, and the rest of the fleet keeps serving. The last
+        // `workers_external` slots are NOT spawned here — they are served
+        // by out-of-process `areal worker` binaries dialing in over the
+        // socket endpoints printed above.
+        let n_local = cfg.n_rollout_workers - cfg.workers_external;
+        for w in 0..n_local {
             let shared = RolloutShared {
                 server: Arc::clone(&server),
                 buffer: Arc::clone(&buffer),

@@ -1,0 +1,703 @@
+//! Out-of-process rollout worker (DESIGN.md §13): the `areal worker
+//! connect=HOST:PORT` process and the coordinator-side [`ResultSink`]
+//! that receives its trajectories.
+//!
+//! The worker binary is a full rollout replica in its own address space:
+//! it compiles its own `GenEngine` from the artifact manifest, dials the
+//! coordinator's replica endpoint over [`SocketWorker`], streams the
+//! current weights chunk-by-chunk through the `wbegin`/`wpull` protocol
+//! (no shared-memory `ParamSet` hand-off exists across the process
+//! boundary), and then serves its inbox exactly like an in-process
+//! worker — pulls, control fan-out, probe snapshots — with finished
+//! trajectories returned as wire-encoded `result` frames.
+//!
+//! Fault posture:
+//!
+//! - **Lost link.** Every wire error salvages the engine-held requests
+//!   and reconnects with `hello{join}`: the old tenancy's requests are
+//!   handed back through `resub` under the OLD epoch (the coordinator's
+//!   fenced salvage path requeues them with zero lost, and a stale resub
+//!   can never hurt a successor), the weight stream fast-forwards to the
+//!   latest version — resumed from the last assembled chunk when the
+//!   version still matches — and unacknowledged results are resent.
+//! - **At-least-once results.** Each `result` frame carries a
+//!   process-unique `rid`; the sink deduplicates, so a resend after a
+//!   lost ack can never double-count a trajectory or leave a GRPO group
+//!   partial.
+//! - **Weight-version fencing.** A weight stream cut by a newer publish
+//!   answers stale mid-pull; the worker drops the partial assembly and
+//!   re-handshakes at the latest version (catch-up, not replay).
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Config;
+use crate::reward::{RewardRequest, RewardService};
+use crate::runtime::params::decode_param_set;
+use crate::runtime::{Engine, Manifest, ParamSet};
+use crate::serve::{Control, ServeCfg, SocketWorker, WeightAssembler};
+use crate::tasks::Prompt;
+use crate::text::tokenizer::Tokenizer;
+use crate::util::json::Json;
+use crate::util::metrics;
+use crate::util::sync::MutexExt;
+
+use super::buffer::ReplayBuffer;
+use super::gen_engine::GenEngine;
+use super::messages::Trajectory;
+use super::trace::{Event, Trace};
+
+/// Dedicated control-poll cadence, in serve-loop iterations (refill pulls
+/// piggyback control anyway; this bounds drain latency when busy).
+const CTRL_POLL_EVERY: u32 = 8;
+/// Reconnect attempts before the worker gives up on the coordinator.
+const RECONNECT_TRIES: usize = 40;
+/// Base backoff between reconnect attempts.
+const RECONNECT_BACKOFF_MS: u64 = 100;
+
+// ---------------------------------------------------------------------------
+// coordinator side: the result sink behind the endpoint's message hook
+// ---------------------------------------------------------------------------
+
+/// Receives `result`/`stats` frames from external workers and feeds them
+/// into the same reward → replay-buffer path an in-process worker uses.
+/// Results are deduplicated by `rid` (the wire contract is at-least-once:
+/// a worker resends anything it never saw the ack for).
+pub struct ResultSink {
+    buffer: Arc<ReplayBuffer>,
+    reward: Arc<RewardService>,
+    trace: Arc<Trace>,
+    gen_tokens: Arc<AtomicU64>,
+    tokenizer: Tokenizer,
+    policy: &'static str,
+    seen: Mutex<HashSet<u64>>,
+    accepted: AtomicU64,
+    duplicates: AtomicU64,
+}
+
+impl ResultSink {
+    pub fn new(
+        buffer: Arc<ReplayBuffer>,
+        reward: Arc<RewardService>,
+        trace: Arc<Trace>,
+        gen_tokens: Arc<AtomicU64>,
+        policy: &'static str,
+    ) -> Arc<Self> {
+        Arc::new(ResultSink {
+            buffer,
+            reward,
+            trace,
+            gen_tokens,
+            tokenizer: Tokenizer::new(),
+            policy,
+            seen: Mutex::new(HashSet::new()),
+            accepted: AtomicU64::new(0),
+            duplicates: AtomicU64::new(0),
+        })
+    }
+
+    /// Handle one message frame from the worker on replica `replica`.
+    /// Returns the reply for known kinds, `None` (→ an err reply) for
+    /// unknown or malformed frames.
+    pub fn handle(&self, replica: usize, kind: &str, msg: &Json) -> Option<Json> {
+        match kind {
+            "result" => {
+                let rid = msg.get_f64("rid")? as u64;
+                let traj = Trajectory::from_json(msg.get("traj")?)?;
+                if !traj.segments_consistent() {
+                    return None;
+                }
+                if !self.seen.plock().insert(rid) {
+                    // resend after a lost ack: already consumed
+                    self.duplicates.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    self.accepted.fetch_add(1, Ordering::Relaxed);
+                    self.accept(replica, traj);
+                }
+                Some(Json::obj(vec![
+                    ("t", Json::str("ok")),
+                    ("rid", Json::num(rid as f64)),
+                ]))
+            }
+            "stats" => {
+                let cached = msg.get_f64("cached")? as u64;
+                let computed = msg.get_f64("computed")? as u64;
+                self.trace.log(Event::CacheStat {
+                    worker: replica,
+                    cached_tokens: cached,
+                    computed_tokens: computed,
+                });
+                Some(Json::obj(vec![("t", Json::str("ok"))]))
+            }
+            _ => None,
+        }
+    }
+
+    /// Trajectories accepted (deduplicated).
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Duplicate `rid`s dropped.
+    pub fn duplicates(&self) -> u64 {
+        self.duplicates.load(Ordering::Relaxed)
+    }
+
+    /// The in-process tail of `rollout::submit_for_reward`, run on behalf
+    /// of a worker that has no handle to the buffer: reward verification
+    /// fills in the reward and pushes to the replay buffer.
+    fn accept(&self, replica: usize, mut traj: Trajectory) {
+        traj.worker = replica;
+        let tokens = traj.completion_len() as u64;
+        self.gen_tokens.fetch_add(tokens, Ordering::Relaxed);
+        metrics::inc("areal_gen_tokens_total", tokens);
+        if metrics::enabled() {
+            let policy = self.policy;
+            if let Some(ttft) = traj.span.ttft_s() {
+                metrics::observe(
+                    &format!("areal_ttft_seconds{{policy=\"{policy}\"}}"),
+                    ttft,
+                );
+            }
+            if let Some(e2e) = traj.span.e2e_s() {
+                metrics::observe(
+                    &format!("areal_e2e_seconds{{policy=\"{policy}\"}}"),
+                    e2e,
+                );
+            }
+        }
+        let completion = self.tokenizer.decode_completion(&traj.tokens, traj.prompt_len);
+        let req = RewardRequest {
+            id: traj.prompt.group,
+            meta: traj.prompt.meta.clone(),
+            completion,
+        };
+        let buffer = Arc::clone(&self.buffer);
+        let trace = Arc::clone(&self.trace);
+        self.reward.submit_callback(req, move |resp| {
+            traj.reward = resp.reward;
+            traj.correct = resp.correct;
+            trace.log(Event::TrajDone {
+                worker: replica,
+                tokens: traj.completion_len(),
+                version_born: traj.version_born,
+            });
+            trace.log(Event::RewardDone { worker: replica, correct: resp.correct });
+            buffer.push(traj);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker side: the standalone process loop
+// ---------------------------------------------------------------------------
+
+enum WorkerExit {
+    Drained,
+}
+
+/// Entry point for `areal worker`: build the engine from the artifact
+/// manifest, dial the coordinator, stream the weights, serve until Drain.
+pub fn run_worker(cfg: &Config) -> Result<()> {
+    if cfg.worker_connect.is_empty() {
+        bail!("worker mode needs connect=HOST:PORT (config key worker_connect)");
+    }
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let spec = manifest.tier(&cfg.tier)?;
+    let engine = Arc::new(Engine::load(spec).context("compiling artifacts")?);
+    let serve = {
+        let c = &engine.spec.config;
+        let bs = if cfg.kv_block_size == 0 {
+            ServeCfg::default_block_size(c.max_seq)
+        } else {
+            cfg.kv_block_size
+        };
+        let mut s = ServeCfg::for_engine(c.gen_batch, c.max_seq, bs);
+        if cfg.kv_blocks > 0 {
+            s.num_blocks = cfg.kv_blocks;
+        }
+        s.prefix_cache = cfg.prefix_cache;
+        s
+    };
+    let (_, interruptible) = cfg.effective_schedule();
+    let token = if cfg.auth_token.is_empty() {
+        None
+    } else {
+        Some(cfg.auth_token.as_str())
+    };
+    let addr = cfg.worker_connect.as_str();
+    let mf = cfg.socket_max_frame;
+
+    let mut client = SocketWorker::<Prompt>::connect_auth(addr, mf, token, false)
+        .with_context(|| format!("connecting to coordinator at {addr}"))?;
+    if !client.open() {
+        // the slot was retired before we arrived (e.g. a predecessor's
+        // disconnect already processed): revive it explicitly
+        client = SocketWorker::connect_auth(addr, mf, token, true)?;
+    }
+    crate::info!("worker", "connected to {addr} (epoch {})", client.epoch());
+
+    // initial weights arrive over the stream — there is no shared memory
+    let mut assembler = WeightAssembler::new();
+    let params = stream_to_latest(&mut client, &mut assembler)?
+        .context("coordinator advertised no weights to stream")?;
+    crate::info!("worker", "streamed weights v{}", params.version);
+    let mut gen = GenEngine::with_serve(
+        Arc::clone(&engine),
+        params,
+        0, // the coordinator stamps the replica id onto accepted results
+        cfg.temperature,
+        cfg.seed,
+        Some(serve),
+    );
+    gen.configure_prefix_prefill(cfg.prefix_prefill, cfg.prefill_bucket_min);
+
+    // at-least-once result delivery: rids are process-unique so a
+    // respawned worker can never collide with its predecessor's
+    let mut unacked: Vec<(u64, Trajectory)> = Vec::new();
+    let mut rid_next: u64 = (std::process::id() as u64) << 32;
+    let mut announced = gen.version();
+    let mut draining = false;
+    let mut reconnects = 0usize;
+
+    loop {
+        let res = serve_once(
+            &mut client,
+            &mut gen,
+            &mut assembler,
+            &mut unacked,
+            &mut rid_next,
+            cfg.refill_fraction,
+            interruptible,
+            &mut draining,
+            &mut announced,
+        );
+        match res {
+            Ok(WorkerExit::Drained) => {
+                let _ = send_stats(&mut client, &gen);
+                client.bye();
+                crate::info!("worker", "drained; exiting");
+                return Ok(());
+            }
+            Err(e) => {
+                reconnects += 1;
+                if reconnects > RECONNECT_TRIES {
+                    return Err(e.context("worker link lost beyond the reconnect budget"));
+                }
+                crate::warn_log!("worker", "link lost ({e:#}); reconnecting");
+                let old_epoch = client.epoch();
+                let salvaged = gen.salvage_requests();
+                client = reconnect(
+                    addr,
+                    mf,
+                    token,
+                    old_epoch,
+                    salvaged,
+                    &mut gen,
+                    &mut assembler,
+                    &mut unacked,
+                )?;
+                announced = gen.version();
+                // a fresh tenancy hears its own Drain through its inbox
+                draining = false;
+            }
+        }
+    }
+}
+
+/// Serve the inbox until Drain completes or the wire errors (the caller
+/// reconnects). Mirrors `rollout::serve_loop`, with the weight sync going
+/// through the chunked stream instead of the in-process param server.
+#[allow(clippy::too_many_arguments)]
+fn serve_once(
+    client: &mut SocketWorker<Prompt>,
+    gen: &mut GenEngine,
+    assembler: &mut WeightAssembler,
+    unacked: &mut Vec<(u64, Trajectory)>,
+    rid_next: &mut u64,
+    refill_fraction: f64,
+    interruptible: bool,
+    draining: &mut bool,
+    announced: &mut u64,
+) -> Result<WorkerExit> {
+    let b = gen.n_slots();
+    let mut pending_sync = false;
+    // start at the threshold so the first sweep hears any already-sent
+    // Drain/UpdateWeights immediately
+    let mut ctrl_tick: u32 = CTRL_POLL_EVERY;
+    loop {
+        // -- control -----------------------------------------------------
+        ctrl_tick += 1;
+        if ctrl_tick >= CTRL_POLL_EVERY {
+            ctrl_tick = 0;
+            let p = client.pull(0, None)?;
+            if p.fenced {
+                bail!("fenced by the transport (slot recycled)");
+            }
+            for c in p.ctrl {
+                match c {
+                    Control::UpdateWeights(v) => *announced = (*announced).max(v),
+                    Control::Drain => *draining = true,
+                }
+            }
+        }
+
+        // -- weight sync over the stream ----------------------------------
+        if *announced > gen.version() {
+            if interruptible || gen.all_empty() {
+                if let Some(params) = stream_to_latest(client, assembler)? {
+                    if params.version > gen.version() {
+                        let v = params.version;
+                        let interrupted = gen.update_weights(params);
+                        crate::info!(
+                            "worker",
+                            "synced to v{v} (interrupted {interrupted} slots)"
+                        );
+                        send_stats(client, gen)?;
+                    }
+                }
+                // never spin on a version the stream cannot produce yet;
+                // a later UpdateWeights raises the target again
+                *announced = gen.version();
+                pending_sync = false;
+            } else {
+                // finish in-flight sequences under the old weights first
+                pending_sync = true;
+            }
+        }
+
+        // -- refill -------------------------------------------------------
+        let capacity = gen.fill_capacity();
+        let empties = gen.empty_slots();
+        let refill_wave = !pending_sync
+            && (gen.all_empty()
+                || gen.needs_prefill()
+                || (empties as f64) >= (b as f64) * refill_fraction);
+        if refill_wave {
+            if capacity > 0 && !*draining {
+                let snap = gen.probe_snapshot();
+                let p = client.pull(capacity, Some(&snap))?;
+                if p.fenced {
+                    bail!("fenced by the transport (slot recycled)");
+                }
+                for c in p.ctrl {
+                    match c {
+                        Control::UpdateWeights(v) => *announced = (*announced).max(v),
+                        Control::Drain => *draining = true,
+                    }
+                }
+                let mut reqs = p.reqs;
+                for r in &mut reqs {
+                    r.span.stamp_admit();
+                }
+                if !reqs.is_empty() {
+                    gen.fill_requests(reqs)?;
+                }
+            }
+            if gen.admission_feasible() {
+                gen.request_prefill();
+            }
+        }
+
+        if gen.needs_prefill() && (gen.waiting() > 0 || !gen.all_empty()) {
+            gen.prefill()?;
+        }
+
+        // -- decode -------------------------------------------------------
+        if !gen.all_empty() && !gen.needs_prefill() {
+            let finished = gen.decode_chunk()?;
+            let mut released = 0usize;
+            for traj in finished {
+                released += traj.prompt_len;
+                *rid_next += 1;
+                unacked.push((*rid_next, traj));
+            }
+            flush_results(client, unacked)?;
+            if released > 0 {
+                client.complete(released)?;
+            }
+        } else if gen.all_empty() && gen.waiting() == 0 {
+            if !unacked.is_empty() {
+                flush_results(client, unacked)?;
+            }
+            if *draining && unacked.is_empty() {
+                return Ok(WorkerExit::Drained);
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// Stream the latest published weights to completion. `Ok(None)` when the
+/// endpoint has nothing (newer) to stream; a stale mid-stream answer
+/// drops the partial assembly and re-handshakes at the newest version.
+fn stream_to_latest(
+    client: &mut SocketWorker<Prompt>,
+    asm: &mut WeightAssembler,
+) -> Result<Option<Arc<ParamSet>>> {
+    loop {
+        // the handshake quotes partial progress — the server resumes the
+        // stream from that chunk when it can (weight_resume) instead of
+        // restarting at 0
+        let Some((v, _total, start)) = client.weight_begin(asm.progress())? else {
+            return Ok(None);
+        };
+        if asm.done_version().is_some_and(|d| v <= d) {
+            // already hold this version fully assembled
+            return Ok(None);
+        }
+        if start == 0 {
+            asm.reset_partial();
+        }
+        let mut i = start;
+        loop {
+            match client.weight_pull(v, i)? {
+                // offer under the ECHOED index: a duplicated reply frame
+                // shifts the RPC stream one reply behind, and the echoed
+                // index is what lets the assembler drop the duplicate and
+                // the cursor re-ask for the chunk it actually wants
+                Some((ri, n, data)) => match asm.offer(v, ri, n, &data) {
+                    Ok(Some((_dv, blob))) => {
+                        return Ok(Some(decode_param_set(&blob)?));
+                    }
+                    Ok(None) => {
+                        // normal progress OR an idempotently-dropped
+                        // duplicate: either way, ask for whatever the
+                        // assembler's cursor wants next
+                        i = asm.progress().map(|(_, k)| k).unwrap_or(0);
+                    }
+                    Err(e) => {
+                        // protocol hiccup (e.g. frames mangled by a flaky
+                        // path): restart this stream from scratch
+                        crate::warn_log!("worker", "weight stream reset: {e}");
+                        asm.reset_partial();
+                        break;
+                    }
+                },
+                None => {
+                    // wstale: the version retired mid-stream — drop the
+                    // partial assembly and fast-forward to the latest
+                    asm.reset_partial();
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Send every queued result; acked entries are dropped, the rest stay for
+/// a resend after reconnect (at-least-once + sink-side dedup).
+fn flush_results(
+    client: &mut SocketWorker<Prompt>,
+    unacked: &mut Vec<(u64, Trajectory)>,
+) -> Result<()> {
+    let mut acked: Vec<u64> = Vec::new();
+    for (rid, traj) in unacked.iter() {
+        let reply = client.send_msg(
+            "result",
+            vec![("rid", Json::num(*rid as f64)), ("traj", traj.to_json())],
+        )?;
+        if reply.get_str("t") == Some("ok") {
+            acked.push(*rid);
+        }
+    }
+    unacked.retain(|(r, _)| !acked.contains(r));
+    Ok(())
+}
+
+/// Report prefill-cache accounting (the external equivalent of the
+/// in-process worker's `CacheStat` trace event).
+fn send_stats(client: &mut SocketWorker<Prompt>, gen: &GenEngine) -> Result<()> {
+    let s = gen.serve_stats();
+    client.send_msg(
+        "stats",
+        vec![
+            ("cached", Json::num(s.prefill_tokens_cached as f64)),
+            ("computed", Json::num(s.prefill_tokens_computed as f64)),
+            ("gen", Json::num(gen.tokens_generated as f64)),
+        ],
+    )?;
+    Ok(())
+}
+
+/// Reconnect with catch-up: join the slot behind the epoch fence, hand
+/// the salvaged requests back (`resub` under the OLD epoch — the fenced
+/// salvage path requeues them with zero lost), fast-forward the weight
+/// stream, and resend unacked results.
+#[allow(clippy::too_many_arguments)]
+fn reconnect(
+    addr: &str,
+    max_frame: usize,
+    token: Option<&str>,
+    old_epoch: u64,
+    mut salvaged: Vec<crate::serve::Request<Prompt>>,
+    gen: &mut GenEngine,
+    asm: &mut WeightAssembler,
+    unacked: &mut Vec<(u64, Trajectory)>,
+) -> Result<SocketWorker<Prompt>> {
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..RECONNECT_TRIES {
+        std::thread::sleep(Duration::from_millis(
+            RECONNECT_BACKOFF_MS * (1 + attempt.min(4) as u64),
+        ));
+        let mut c = match SocketWorker::<Prompt>::connect_auth(addr, max_frame, token, true)
+        {
+            Ok(c) => c,
+            Err(e) => {
+                last = Some(e);
+                continue;
+            }
+        };
+        let attempt_res = (|| -> Result<()> {
+            if !salvaged.is_empty() {
+                if c.epoch() != old_epoch {
+                    // the slot noticed the loss and was recycled: hand the
+                    // requests back through the fence (the stale-epoch
+                    // removal is a no-op; the requests requeue)
+                    let n = c.resubmit(old_epoch, &salvaged)?;
+                    crate::info!("worker", "resubmitted {n} salvaged requests");
+                    salvaged.clear();
+                } else {
+                    // seamless swap: the tenancy never lapsed, the
+                    // requests are still ours — refill them locally
+                    let held = std::mem::take(&mut salvaged);
+                    gen.fill_requests(held)?;
+                }
+            }
+            // catch-up: a worker that missed N versions fast-forwards to
+            // the latest before rejoining the serving path
+            if let Some(params) = stream_to_latest(&mut c, asm)? {
+                if params.version > gen.version() {
+                    let v = params.version;
+                    gen.update_weights(params);
+                    crate::info!("worker", "caught up to v{v} after reconnect");
+                }
+            }
+            flush_results(&mut c, unacked)?;
+            Ok(())
+        })();
+        match attempt_res {
+            Ok(()) => {
+                crate::info!("worker", "rejoined at epoch {}", c.epoch());
+                return Ok(c);
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last
+        .unwrap_or_else(|| anyhow::anyhow!("no reconnect attempt ran"))
+        .context(format!("reconnecting to {addr}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{ReqSpan, SocketTransport};
+
+    fn traj(group: u64, rid_tokens: i32) -> Trajectory {
+        Trajectory {
+            prompt: Prompt {
+                text: "Q1+1=".into(),
+                meta: "add:1,1".into(),
+                level: 1,
+                group,
+            },
+            tokens: vec![1, 5, 6, 7, rid_tokens, 9, 2],
+            prompt_len: 4,
+            behav_logp: vec![-0.1, -0.2, -0.3],
+            segments: vec![(0, 3)],
+            version_born: 0,
+            reward: 0.0,
+            correct: false,
+            truncated: false,
+            worker: 0,
+            span: ReqSpan::default(),
+        }
+    }
+
+    fn sink() -> (Arc<ResultSink>, Arc<ReplayBuffer>, Arc<Trace>) {
+        let buffer = Arc::new(ReplayBuffer::new());
+        let reward = Arc::new(RewardService::new(
+            Arc::new(crate::tasks::AdditionTask),
+            1,
+        ));
+        let trace = Arc::new(Trace::new(true));
+        let s = ResultSink::new(
+            Arc::clone(&buffer),
+            reward,
+            Arc::clone(&trace),
+            Arc::new(AtomicU64::new(0)),
+            "probe",
+        );
+        (s, buffer, trace)
+    }
+
+    #[test]
+    fn sink_accepts_scores_and_deduplicates() {
+        let (sink, buffer, trace) = sink();
+        let t = traj(1, 8);
+        let frame = Json::obj(vec![("rid", Json::num(7.0)), ("traj", t.to_json())]);
+        let r1 = sink.handle(3, "result", &frame).expect("accepted");
+        assert_eq!(r1.get_str("t"), Some("ok"));
+        // duplicate rid: acked again, consumed once
+        let r2 = sink.handle(3, "result", &frame).expect("acked");
+        assert_eq!(r2.get_str("t"), Some("ok"));
+        assert_eq!(sink.accepted(), 1);
+        assert_eq!(sink.duplicates(), 1);
+        // the reward pipeline pushes exactly one trajectory, stamped with
+        // the replica id the coordinator knows (not the worker's local 0)
+        let batch = buffer.pop_batch(1).expect("one trajectory lands");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].worker, 3);
+        assert_eq!(trace.count(|e| matches!(e, Event::RewardDone { .. })), 1);
+    }
+
+    #[test]
+    fn sink_rejects_malformed_and_logs_stats() {
+        let (sink, _buffer, trace) = sink();
+        // malformed: missing traj
+        assert!(sink
+            .handle(0, "result", &Json::obj(vec![("rid", Json::num(1.0))]))
+            .is_none());
+        // inconsistent segment bookkeeping is refused, not scored
+        let mut t = traj(2, 8);
+        t.segments = vec![(0, 1)];
+        let frame = Json::obj(vec![("rid", Json::num(2.0)), ("traj", t.to_json())]);
+        assert!(sink.handle(0, "result", &frame).is_none());
+        assert_eq!(sink.accepted(), 0);
+        // stats frames become CacheStat trace events for this replica
+        let s = Json::obj(vec![
+            ("cached", Json::num(96.0)),
+            ("computed", Json::num(32.0)),
+        ]);
+        assert!(sink.handle(1, "stats", &s).is_some());
+        assert_eq!(
+            trace.count(|e| matches!(
+                e,
+                Event::CacheStat { worker: 1, cached_tokens: 96, computed_tokens: 32 }
+            )),
+            1
+        );
+        assert!(sink.handle(0, "unknown-kind", &Json::obj(vec![])).is_none());
+    }
+
+    #[test]
+    fn wired_endpoint_routes_results_from_a_socket_client() {
+        // the exact wiring system.rs installs: msg hook → sink.handle
+        let (sink, buffer, _trace) = sink();
+        let t = SocketTransport::<Prompt>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let s = Arc::clone(&sink);
+        t.set_msg_fn(Arc::new(move |kind, msg| s.handle(5, kind, msg)));
+        let mut w = SocketWorker::<Prompt>::connect(&t.local_addr(), 1 << 20).unwrap();
+        let mut unacked = vec![(101u64, traj(9, 8))];
+        flush_results(&mut w, &mut unacked).unwrap();
+        assert!(unacked.is_empty(), "acked result is dropped from the queue");
+        assert_eq!(sink.accepted(), 1);
+        assert!(buffer.pop_batch(1).is_some());
+        w.bye();
+    }
+}

@@ -3,10 +3,11 @@
 //! Subcommands:
 //!
 //! ```text
-//! train [key=value ...]          run a training session (see config.rs)
-//! eval  tier=<t> task=<t> checkpoint=<path> [samples=N]
-//! sim   model=<1.5B|7B|14B|32B> gpus=N ctx=N mode=<sync|overlap|async>
-//! exp   <fig1|fig3|fig4|fig5|fig6a|fig6b|table1|table2|table45|table6|table7|table8> [key=value ...]
+//! train  [key=value ...]          run a training session (see config.rs)
+//! worker connect=HOST:PORT [...]  out-of-process rollout worker (DESIGN.md §13)
+//! eval   tier=<t> task=<t> checkpoint=<path> [samples=N]
+//! sim    model=<1.5B|7B|14B|32B> gpus=N ctx=N mode=<sync|overlap|async>
+//! exp    <fig1|fig3|fig4|fig5|fig6a|fig6b|table1|table2|table45|table6|table7|table8> [key=value ...]
 //! ```
 //!
 //! No clap in the offline vendor set — arguments are `key=value` pairs.
@@ -29,6 +30,7 @@ fn main() -> Result<()> {
     let rest = &args[1..];
     match cmd.as_str() {
         "train" => cmd_train(rest),
+        "worker" => cmd_worker(rest),
         "eval" => cmd_eval(rest),
         "sim" => cmd_sim(rest),
         "exp" => {
@@ -49,6 +51,7 @@ fn print_usage() {
     println!(
         "areal — asynchronous RL training system (AReaL reproduction)\n\n\
          usage:\n  areal train [config=<file.json>] [key=value ...]\n  \
+         areal worker connect=HOST:PORT [config=<file.json>] [key=value ...]\n  \
          areal eval tier=<t> task=<math|code|sort> checkpoint=<p> [samples=N]\n  \
          areal sim model=<1.5B|7B|14B|32B> gpus=N ctx=N mode=<sync|overlap|async>\n  \
          areal exp <fig1|fig3|fig4|fig5|fig6a|fig6b|table1|table2|table45|table6|table7|table8> [key=value ...]\n\n\
@@ -124,6 +127,21 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_worker(args: &[String]) -> Result<()> {
+    // `connect=` is the ergonomic alias for the `worker_connect` config key
+    let config_path = kv(args, "config").map(std::path::PathBuf::from);
+    let overrides: Vec<String> = args
+        .iter()
+        .filter(|a| !a.starts_with("config="))
+        .map(|a| match a.strip_prefix("connect=") {
+            Some(addr) => format!("worker_connect={addr}"),
+            None => a.clone(),
+        })
+        .collect();
+    let cfg = Config::load(config_path.as_deref(), &overrides)?;
+    areal::coordinator::run_worker(&cfg)
+}
+
 fn cmd_eval(args: &[String]) -> Result<()> {
     let tier = kv(args, "tier").context("need tier=")?;
     let task = kv(args, "task").context("need task=")?;
@@ -163,6 +181,15 @@ fn cmd_sim(args: &[String]) -> Result<()> {
     }
     if let Some(p) = kv(args, "prefill_tok_s") {
         cfg.prefill_tok_s = p.parse()?;
+    }
+    if let Some(h) = kv(args, "transport_hop_s") {
+        cfg.transport_hop_s = h.parse()?;
+    }
+    if let Some(w) = kv(args, "weight_stream") {
+        cfg.weight_stream = areal::config::parse_bool(&w)?;
+    }
+    if let Some(c) = kv(args, "weight_chunk_bytes") {
+        cfg.weight_chunk_bytes = c.parse()?;
     }
     // the sim emits the same metric names as live runs, stamped from its
     // modeled clock — enable the registry so the summary below has data

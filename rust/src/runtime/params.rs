@@ -133,6 +133,84 @@ fn read_tensor<R: Read>(r: &mut R) -> Result<(String, HostTensor)> {
     Ok((name, HostTensor::f32(shape, data)))
 }
 
+// ---------------------------------------------------------------------------
+// wire blob format for streamed weight distribution (DESIGN.md §13):
+// "ARLWT1\0\0" | u64 version | u32 n | per tensor: u32 ndims, u64 dims...,
+// f32 data...   Tensors are positional (manifest order) — a ParamSet carries
+// no names, and both ends share the tier spec.
+
+const WIRE_MAGIC: &[u8; 8] = b"ARLWT1\0\0";
+
+/// Serialize a parameter set into the flat blob streamed to out-of-process
+/// workers in `weight_chunk_bytes` pieces (`serve::weights`).
+pub fn encode_param_set(params: &ParamSet) -> Result<Vec<u8>> {
+    let mut w = Vec::new();
+    w.extend_from_slice(WIRE_MAGIC);
+    w.extend_from_slice(&params.version.to_le_bytes());
+    w.extend_from_slice(&(params.tensors.len() as u32).to_le_bytes());
+    for lit in &params.tensors {
+        let t = HostTensor::from_literal(lit.lit())?;
+        let data = t.as_f32().context("streaming non-f32 tensor")?;
+        let shape = t.shape();
+        w.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+        for &d in shape {
+            w.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        for &x in data {
+            w.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    Ok(w)
+}
+
+/// Deserialize a streamed weight blob back into a shareable parameter set.
+/// Bit-exact inverse of [`encode_param_set`]; validates structure bounds the
+/// same way the checkpoint reader does.
+pub fn decode_param_set(blob: &[u8]) -> Result<Arc<ParamSet>> {
+    let mut r = blob;
+    let mut b4 = [0u8; 4];
+    let mut b8 = [0u8; 8];
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("weight blob truncated at magic")?;
+    if &magic != WIRE_MAGIC {
+        bail!("not an AReaL weight blob");
+    }
+    r.read_exact(&mut b8)?;
+    let version = u64::from_le_bytes(b8);
+    r.read_exact(&mut b4)?;
+    let n = u32::from_le_bytes(b4) as usize;
+    if n > 65536 {
+        bail!("corrupt weight blob: {n} tensors");
+    }
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        r.read_exact(&mut b4)?;
+        let ndims = u32::from_le_bytes(b4) as usize;
+        if ndims > 16 {
+            bail!("corrupt weight blob: ndims {ndims}");
+        }
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            r.read_exact(&mut b8)?;
+            shape.push(u64::from_le_bytes(b8) as usize);
+        }
+        let count: usize = shape.iter().product();
+        if count > r.len() / 4 {
+            bail!("corrupt weight blob: tensor larger than remaining bytes");
+        }
+        let mut data = vec![0f32; count];
+        for x in data.iter_mut() {
+            r.read_exact(&mut b4)?;
+            *x = f32::from_le_bytes(b4);
+        }
+        tensors.push(HostTensor::f32(shape, data).to_literal()?.into());
+    }
+    if !r.is_empty() {
+        bail!("corrupt weight blob: {} trailing bytes", r.len());
+    }
+    Ok(ParamSet::with_version(tensors, version))
+}
+
 /// Save trainer state (params + moments + step + version).
 pub fn save_checkpoint(path: &Path, spec: &TierSpec, state: &TrainState) -> Result<()> {
     if let Some(dir) = path.parent() {
@@ -253,6 +331,41 @@ mod tests {
         let a = HostTensor::from_literal(state.params.tensors[0].lit()).unwrap();
         let b = HostTensor::from_literal(loaded.params.tensors[0].lit()).unwrap();
         assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+
+    fn small_param_set(version: Version) -> Arc<ParamSet> {
+        let a = HostTensor::f32(vec![2, 3], vec![0.5, -1.25, 3.75, 0.0, 9.5, -0.125])
+            .to_literal()
+            .unwrap()
+            .into();
+        let b = HostTensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]).to_literal().unwrap().into();
+        ParamSet::with_version(vec![a, b], version)
+    }
+
+    #[test]
+    fn wire_blob_roundtrip_is_bit_exact() {
+        let params = small_param_set(17);
+        let blob = encode_param_set(&params).unwrap();
+        let back = decode_param_set(&blob).unwrap();
+        assert_eq!(back.version, 17);
+        assert_eq!(back.n(), params.n());
+        for (x, y) in params.tensors.iter().zip(back.tensors.iter()) {
+            let a = HostTensor::from_literal(x.lit()).unwrap();
+            let b = HostTensor::from_literal(y.lit()).unwrap();
+            assert_eq!(a.shape(), b.shape());
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+    }
+
+    #[test]
+    fn wire_blob_rejects_corruption() {
+        let params = small_param_set(3);
+        let blob = encode_param_set(&params).unwrap();
+        assert!(decode_param_set(b"junk").is_err());
+        assert!(decode_param_set(&blob[..blob.len() - 1]).is_err(), "truncated");
+        let mut extended = blob.clone();
+        extended.push(0);
+        assert!(decode_param_set(&extended).is_err(), "trailing bytes");
     }
 
     #[test]

@@ -15,7 +15,9 @@
 //!   endpoints behind the [`ReplicaTransport`] trait, with the in-process
 //!   [`LocalTransport`] mutex inbox and the cross-process
 //!   [`SocketTransport`] (length-prefixed JSON frames over loopback TCP,
-//!   reconnect-aware epoch fencing, probe snapshots piggybacked on pull);
+//!   reconnect-aware epoch fencing, probe snapshots piggybacked on pull,
+//!   and the [`weights`] chunked weight-stream codec for out-of-process
+//!   workers);
 //! - [`router`]: the request-routed dispatch plane over a dynamic fleet of
 //!   engine replicas — typed `generate` requests flow into epoch-tagged
 //!   per-replica endpoints chosen by a pluggable policy (`fifo` baseline,
@@ -40,6 +42,7 @@ pub mod router;
 pub mod scheduler;
 pub mod socket;
 pub mod transport;
+pub mod weights;
 
 pub use blocks::{BlockId, BlockManager};
 pub use radix::{InsertStats, PrefixMatch, RadixCache};
@@ -50,3 +53,4 @@ pub use transport::{
     Control, LocalTransport, ProbeSnapshot, ReplicaProbe, ReplicaTransport, ReqSpan,
     Request, Wire,
 };
+pub use weights::{chunk_count, chunk_slice, hex_decode, hex_encode, WeightAssembler};

@@ -11,10 +11,27 @@
 //!
 //! | frame (worker → router)                  | reply                        |
 //! |------------------------------------------|------------------------------|
-//! | `{"t":"hello"}`                          | current epoch + open flag    |
+//! | `{"t":"hello","join":bool}`              | current epoch + open flag    |
 //! | `{"t":"pull","epoch":E,"max":N,"probe"…}`| requests + control + steal   |
 //! | `{"t":"complete","tokens":N}`            | ack (releases the charge)    |
+//! | `{"t":"resub","epoch":E,"reqs":[…]}`     | ack (re-routes the requests) |
+//! | `{"t":"wbegin","have_v":V,"have_k":K}`   | `wplan` (version/total/start)|
+//! | `{"t":"wpull","v":V,"i":I}`              | `wchunk` (hex data) / `wstale`|
 //! | `{"t":"bye"}`                            | ack, clean close             |
+//!
+//! Weight distribution (DESIGN.md §13) rides the same connection: `wbegin`
+//! negotiates which published version to stream and where to start (a
+//! reconnecting worker quotes its partial assembly so the transfer
+//! *resumes* instead of restarting), then `wpull` fetches version-tagged
+//! chunks one frame at a time; a version retired mid-stream answers
+//! `wstale` and the worker re-negotiates, fast-forwarding to the latest.
+//! `resub` is the external worker's salvage path: requests it pulled
+//! before a connection loss return through the endpoint's disconnect hook
+//! (the same zero-loss re-route orphaned replies use), and `hello` with
+//! `join` asks the fleet to revive this endpoint's slot so the worker can
+//! rejoin under a fresh epoch. When an auth token is armed
+//! ([`SocketTransport::set_auth`]), every frame must carry it in `"tok"`
+//! — a mismatch is rejected before any state is touched.
 //!
 //! Every pull frame carries the worker's [`ProbeSnapshot`], so the
 //! router's `probe` policy always has a recent measured view of a remote
@@ -68,6 +85,38 @@ pub type PullFn<T> = Arc<dyn Fn(u64, usize) -> Pulled<T> + Send + Sync>;
 /// only when) it carries such orphans, since nobody else holds them.
 pub type DisconnectFn<T> = Arc<dyn Fn(u64, Vec<Request<T>>) + Send + Sync>;
 
+/// Weight-stream negotiation hook (`wbegin`): given the worker's resume
+/// point — `Some((version, chunks_held))` from a partial assembly, `None`
+/// for a cold start — returns the `(version, total_chunks, start_chunk)`
+/// plan to stream, or `None` when no weight source is wired. The system
+/// wires this to the param server's streamer; serve/ never sees tensors,
+/// only chunk counts.
+pub type WeightPlanFn =
+    Arc<dyn Fn(Option<(u64, usize)>) -> Option<(u64, usize, usize)> + Send + Sync>;
+
+/// Weight-chunk hook (`wpull`): `(version, index)` to
+/// `Some((chunk_bytes, total_chunks))`, or `None` when that version is no
+/// longer the published one (the worker re-negotiates via `wbegin`).
+pub type WeightChunkFn = Arc<dyn Fn(u64, usize) -> Option<(Vec<u8>, usize)> + Send + Sync>;
+
+/// Application-frame hook: unknown frame kinds are offered to this hook
+/// before the unknown-frame error fires. The system wires worker `result`
+/// and `stats` frames through it, keeping their payloads (trajectories,
+/// prefill accounting) out of the transport layer.
+pub type MsgFn = Arc<dyn Fn(&str, &Json) -> Option<Json> + Send + Sync>;
+
+/// Fired when a worker connection ends for any reason — clean `bye`,
+/// dropped mid-stream, or an undeliverable reply. Unlike [`DisconnectFn`]
+/// this is unconditional (no epoch staleness suppression): it exists for
+/// per-connection bookkeeping like the param server's weight-stream
+/// cursor, which must never outlive the connection it tracks.
+pub type ClosedFn = Arc<dyn Fn() + Send + Sync>;
+
+/// Rejoin hook (`hello` with `"join":true` on a closed endpoint): asks the
+/// fleet to revive this slot through the membership path. Returns whether
+/// a slot was revived; the hello reply then reports the fresh epoch.
+pub type JoinFn = Arc<dyn Fn() -> bool + Send + Sync>;
+
 /// Server poll tick (accept poll + read-timeout granularity).
 const TICK: Duration = Duration::from_millis(25);
 /// Client-side RPC read timeout per tick, and how many ticks to wait.
@@ -84,6 +133,12 @@ pub struct SocketTransport<T: Wire> {
     shutdown: AtomicBool,
     pull_fn: RwLock<Option<PullFn<T>>>,
     disconnect_fn: RwLock<Option<DisconnectFn<T>>>,
+    weight_plan_fn: RwLock<Option<WeightPlanFn>>,
+    weight_chunk_fn: RwLock<Option<WeightChunkFn>>,
+    msg_fn: RwLock<Option<MsgFn>>,
+    closed_fn: RwLock<Option<ClosedFn>>,
+    join_fn: RwLock<Option<JoinFn>>,
+    auth: RwLock<Option<String>>,
     connects: AtomicU64,
 }
 
@@ -103,6 +158,12 @@ impl<T: Wire> SocketTransport<T> {
             shutdown: AtomicBool::new(false),
             pull_fn: RwLock::new(None),
             disconnect_fn: RwLock::new(None),
+            weight_plan_fn: RwLock::new(None),
+            weight_chunk_fn: RwLock::new(None),
+            msg_fn: RwLock::new(None),
+            closed_fn: RwLock::new(None),
+            join_fn: RwLock::new(None),
+            auth: RwLock::new(None),
             connects: AtomicU64::new(0),
         });
         let weak = Arc::downgrade(&t);
@@ -134,6 +195,35 @@ impl<T: Wire> SocketTransport<T> {
         *self.disconnect_fn.pwrite() = Some(f);
     }
 
+    /// Arm the chunked weight stream: `plan` negotiates `wbegin`, `chunk`
+    /// serves `wpull`. Without these, `wbegin` answers `wnone`.
+    pub fn set_weight_source(&self, plan: WeightPlanFn, chunk: WeightChunkFn) {
+        *self.weight_plan_fn.pwrite() = Some(plan);
+        *self.weight_chunk_fn.pwrite() = Some(chunk);
+    }
+
+    /// Handle application frames (`result`, `stats`, …) the transport
+    /// itself does not interpret.
+    pub fn set_msg_fn(&self, f: MsgFn) {
+        *self.msg_fn.pwrite() = Some(f);
+    }
+
+    /// Per-connection cleanup, fired on every connection end (clean or
+    /// not) — see [`ClosedFn`].
+    pub fn set_closed_fn(&self, f: ClosedFn) {
+        *self.closed_fn.pwrite() = Some(f);
+    }
+
+    /// Revive-this-slot hook for `hello` frames carrying `"join":true`.
+    pub fn set_join_fn(&self, f: JoinFn) {
+        *self.join_fn.pwrite() = Some(f);
+    }
+
+    /// Require `token` in every frame's `"tok"` field; `None` disarms.
+    pub fn set_auth(&self, token: Option<&str>) {
+        *self.auth.pwrite() = token.map(str::to_string);
+    }
+
     /// Stop the actor (the listener thread exits within one tick).
     pub fn shutdown(&self) {
         self.shutdown.store(true, Ordering::Release);
@@ -141,11 +231,65 @@ impl<T: Wire> SocketTransport<T> {
 
     fn handle_simple(&self, kind: &str, msg: &Json) -> Json {
         match kind {
-            "hello" => Json::obj(vec![
-                ("t", Json::str("hello")),
-                ("epoch", Json::num(self.core.epoch() as f64)),
-                ("open", Json::Bool(self.core.is_open())),
-            ]),
+            "hello" => {
+                // a returning worker may ask the fleet to revive this slot
+                // before learning its epoch; the hook (wired to the
+                // membership path) reopens the endpoint, so the reply below
+                // reads the fresh epoch
+                if msg.get("join").and_then(Json::as_bool).unwrap_or(false)
+                    && !self.core.is_open()
+                {
+                    let hook = self.join_fn.pread().clone();
+                    if let Some(f) = hook {
+                        f();
+                    }
+                }
+                Json::obj(vec![
+                    ("t", Json::str("hello")),
+                    ("epoch", Json::num(self.core.epoch() as f64)),
+                    ("open", Json::Bool(self.core.is_open())),
+                ])
+            }
+            "wbegin" => {
+                let have = match (msg.get_f64("have_v"), msg.get_usize("have_k")) {
+                    (Some(v), Some(k)) if v >= 0.0 => Some((v as u64, k)),
+                    _ => None,
+                };
+                let hook = self.weight_plan_fn.pread().clone();
+                match hook.and_then(|f| f(have)) {
+                    Some((v, total, start)) => Json::obj(vec![
+                        ("t", Json::str("wplan")),
+                        ("v", Json::num(v as f64)),
+                        ("total", Json::num(total as f64)),
+                        ("start", Json::num(start as f64)),
+                    ]),
+                    None => Json::obj(vec![("t", Json::str("wnone"))]),
+                }
+            }
+            "wpull" => {
+                let (v, i) = (
+                    msg.get_f64("v").unwrap_or(-1.0),
+                    msg.get_usize("i").unwrap_or(0),
+                );
+                let hook = self.weight_chunk_fn.pread().clone();
+                let served = if v >= 0.0 {
+                    hook.and_then(|f| f(v as u64, i))
+                } else {
+                    None
+                };
+                match served {
+                    Some((data, total)) => Json::obj(vec![
+                        ("t", Json::str("wchunk")),
+                        ("v", Json::num(v)),
+                        ("i", Json::num(i as f64)),
+                        ("n", Json::num(total as f64)),
+                        ("d", Json::str(&super::weights::hex_encode(&data))),
+                    ]),
+                    // the requested version was retired (or never existed):
+                    // the worker re-negotiates and fast-forwards
+                    None => Json::obj(vec![("t", Json::str("wstale"))]),
+                }
+            }
             "complete" => {
                 // epoch-fenced like pull: a stale worker's late completion
                 // must not release the successor replica's load charge
@@ -158,10 +302,20 @@ impl<T: Wire> SocketTransport<T> {
                 Json::obj(vec![("t", Json::str("ok"))])
             }
             "bye" => Json::obj(vec![("t", Json::str("ok"))]),
-            other => Json::obj(vec![
-                ("t", Json::str("err")),
-                ("msg", Json::str(&format!("unknown frame '{other}'"))),
-            ]),
+            other => {
+                // application frames (result/stats/…) are interpreted by
+                // the system through the msg hook, not by the transport
+                let hook = self.msg_fn.pread().clone();
+                if let Some(f) = hook {
+                    if let Some(reply) = f(other, msg) {
+                        return reply;
+                    }
+                }
+                Json::obj(vec![
+                    ("t", Json::str("err")),
+                    ("msg", Json::str(&format!("unknown frame '{other}'"))),
+                ])
+            }
         }
     }
 
@@ -396,9 +550,55 @@ fn serve_conn<T: Wire>(weak: &Weak<SocketTransport<T>>, mut stream: TcpStream) {
         };
         let Some(t) = weak.upgrade() else { return };
         let kind = msg.get_str("t").unwrap_or("").to_string();
-        let (reply, pulled, mut orphans) = match kind.as_str() {
-            "pull" => t.handle_pull(&msg),
-            other => (t.handle_simple(other, &msg), Vec::new(), Vec::new()),
+        // handshake auth (DESIGN.md §13): when a token is armed, every
+        // frame must quote it — hello, weight, and application frames
+        // included — and a mismatch is rejected before any state changes
+        let authed = {
+            let want = t.auth.pread().clone();
+            match want {
+                Some(tok) => msg.get_str("tok") == Some(tok.as_str()),
+                None => true,
+            }
+        };
+        let (reply, pulled, mut orphans) = if !authed {
+            (
+                Json::obj(vec![
+                    ("t", Json::str("err")),
+                    ("msg", Json::str("auth token missing or wrong")),
+                ]),
+                Vec::new(),
+                Vec::new(),
+            )
+        } else {
+            match kind.as_str() {
+                "pull" => t.handle_pull(&msg),
+                "resub" => {
+                    // a reconnecting worker returns in-flight requests it
+                    // salvaged from a severed connection: nobody else holds
+                    // them, so they re-route through the disconnect hook
+                    // exactly like an orphaned undeliverable reply (the
+                    // hook's removal stays fenced by the quoted epoch)
+                    let epoch = msg.get_f64("epoch").unwrap_or(0.0).max(0.0) as u64;
+                    let mut reqs: Vec<Request<T>> = Vec::new();
+                    if let Some(arr) = msg.get("reqs").and_then(Json::as_arr) {
+                        for r in arr {
+                            if let Some(q) = request_from_json::<T>(r) {
+                                reqs.push(q);
+                            }
+                        }
+                    }
+                    let n = reqs.len();
+                    if !reqs.is_empty() {
+                        fire_disconnect(&t, epoch, reqs);
+                    }
+                    (
+                        Json::obj(vec![("t", Json::str("ok")), ("n", Json::num(n as f64))]),
+                        Vec::new(),
+                        Vec::new(),
+                    )
+                }
+                other => (t.handle_simple(other, &msg), Vec::new(), Vec::new()),
+            }
         };
         if write_frame(&mut stream, &reply, max_frame).is_err() {
             // an undeliverable pull reply must not lose its requests:
@@ -406,6 +606,7 @@ fn serve_conn<T: Wire>(weak: &Weak<SocketTransport<T>>, mut stream: TcpStream) {
             // closed inbox refuses them and the disconnect hook re-routes
             orphans.extend(t.core.restore_front(pulled));
             fire_disconnect(&t, conn_epoch, orphans);
+            fire_closed(&t);
             return;
         }
         if !orphans.is_empty() {
@@ -419,10 +620,20 @@ fn serve_conn<T: Wire>(weak: &Weak<SocketTransport<T>>, mut stream: TcpStream) {
             break;
         }
     }
-    if !clean {
-        if let Some(t) = weak.upgrade() {
+    if let Some(t) = weak.upgrade() {
+        if !clean {
             fire_disconnect(&t, conn_epoch, Vec::new());
         }
+        // unconditional per-connection cleanup (clean or not): a weight
+        // stream's server-side cursor must die with its connection
+        fire_closed(&t);
+    }
+}
+
+fn fire_closed<T: Wire>(t: &Arc<SocketTransport<T>>) {
+    let hook = t.closed_fn.pread().clone();
+    if let Some(f) = hook {
+        f();
     }
 }
 
@@ -587,12 +798,26 @@ pub struct PulledWire<T> {
 pub struct SocketWorker<T: Wire> {
     stream: TcpStream,
     epoch: u64,
+    open: bool,
     max_frame: usize,
+    tok: Option<String>,
     _p: std::marker::PhantomData<fn() -> T>,
 }
 
 impl<T: Wire> SocketWorker<T> {
     pub fn connect(addr: &str, max_frame: usize) -> Result<SocketWorker<T>> {
+        Self::connect_auth(addr, max_frame, None, false)
+    }
+
+    /// Connect with an auth token and/or a rejoin request: `join` asks a
+    /// closed endpoint to revive its slot through the fleet's membership
+    /// path before replying (reconnect-with-catch-up, DESIGN.md §13).
+    pub fn connect_auth(
+        addr: &str,
+        max_frame: usize,
+        token: Option<&str>,
+        join: bool,
+    ) -> Result<SocketWorker<T>> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting replica transport {addr}"))?;
         stream.set_nodelay(true).ok();
@@ -600,19 +825,40 @@ impl<T: Wire> SocketWorker<T> {
         let mut w = SocketWorker {
             stream,
             epoch: 0,
+            open: false,
             max_frame: max_frame.max(1024),
+            tok: token.map(str::to_string),
             _p: std::marker::PhantomData,
         };
-        let hello = w.rpc(&Json::obj(vec![("t", Json::str("hello"))]))?;
+        let mut fields = vec![("t", Json::str("hello"))];
+        if join {
+            fields.push(("join", Json::Bool(true)));
+        }
+        let msg = w.framed(fields);
+        let hello = w.rpc(&msg)?;
         w.epoch = hello
             .get_f64("epoch")
             .context("hello reply missing epoch")? as u64;
+        w.open = hello.get("open").and_then(Json::as_bool).unwrap_or(false);
         Ok(w)
     }
 
     /// The membership epoch this worker serves under (learned at connect).
     pub fn epoch(&self) -> u64 {
         self.epoch
+    }
+
+    /// Whether the endpoint reported itself open at the hello handshake.
+    pub fn open(&self) -> bool {
+        self.open
+    }
+
+    /// Stamp the auth token (when configured) onto a frame.
+    fn framed(&self, mut fields: Vec<(&str, Json)>) -> Json {
+        if let Some(tok) = &self.tok {
+            fields.push(("tok", Json::str(tok)));
+        }
+        Json::obj(fields)
     }
 
     fn rpc(&mut self, req: &Json) -> Result<Json> {
@@ -641,6 +887,12 @@ impl<T: Wire> SocketWorker<T> {
                     if let Some(t0) = t0 {
                         metrics::observe("areal_frame_rtt_seconds",
                                          t0.elapsed().as_secs_f64());
+                    }
+                    if j.get_str("t") == Some("err") {
+                        bail!(
+                            "endpoint rejected frame: {}",
+                            j.get_str("msg").unwrap_or("unknown error")
+                        );
                     }
                     return Ok(j);
                 }
@@ -671,15 +923,15 @@ impl<T: Wire> SocketWorker<T> {
             Some(p) => {
                 let mut fields = base.clone();
                 fields.push(("probe", p.to_json()));
-                Json::obj(fields)
+                self.framed(fields)
             }
-            None => Json::obj(base.clone()),
+            None => self.framed(base.clone()),
         };
         // serialize once; fall back to a probe-less frame if the snapshot
         // would overflow the frame budget
         let mut body = msg.to_string();
         if probe.is_some() && body.len() > self.max_frame {
-            body = Json::obj(base).to_string();
+            body = self.framed(base).to_string();
         }
         let reply = self.rpc_body(&body)?;
         if reply.get("fenced").and_then(Json::as_bool).unwrap_or(false) {
@@ -715,18 +967,98 @@ impl<T: Wire> SocketWorker<T> {
     /// fenced by our epoch, so a late completion from a retired worker
     /// cannot touch a successor's accounting).
     pub fn complete(&mut self, tokens: usize) -> Result<()> {
-        self.rpc(&Json::obj(vec![
+        let msg = self.framed(vec![
             ("t", Json::str("complete")),
             ("epoch", Json::num(self.epoch as f64)),
             ("tokens", Json::num(tokens as f64)),
-        ]))?;
+        ]);
+        self.rpc(&msg)?;
         Ok(())
+    }
+
+    /// Negotiate a weight stream (`wbegin`): quote our resume point (the
+    /// assembler's partial progress, if any) and learn the plan —
+    /// `Some((version, total_chunks, start_chunk))` — or `None` when the
+    /// endpoint has no weight source wired.
+    pub fn weight_begin(
+        &mut self,
+        have: Option<(u64, usize)>,
+    ) -> Result<Option<(u64, usize, usize)>> {
+        let mut fields = vec![("t", Json::str("wbegin"))];
+        if let Some((v, k)) = have {
+            fields.push(("have_v", Json::num(v as f64)));
+            fields.push(("have_k", Json::num(k as f64)));
+        }
+        let msg = self.framed(fields);
+        let reply = self.rpc(&msg)?;
+        if reply.get_str("t") == Some("wnone") {
+            return Ok(None);
+        }
+        let v = reply.get_f64("v").context("wplan missing version")? as u64;
+        let total = reply.get_usize("total").context("wplan missing total")?;
+        let start = reply.get_usize("start").unwrap_or(0);
+        Ok(Some((v, total, start)))
+    }
+
+    /// Fetch one weight chunk (`wpull`): `Some((index, total_chunks,
+    /// bytes))`, or `None` when the version was retired mid-stream
+    /// (`wstale`) — the caller re-negotiates via
+    /// [`SocketWorker::weight_begin`]. The index is the one ECHOED in the
+    /// reply frame, not the one requested: a duplicated frame on a flaky
+    /// path shifts the RPC stream by one reply, and feeding the echoed
+    /// index to the assembler is what lets its duplicate-drop cursor
+    /// realign the stream instead of accepting wrong bytes under the
+    /// requested index.
+    pub fn weight_pull(
+        &mut self,
+        version: u64,
+        index: usize,
+    ) -> Result<Option<(usize, usize, Vec<u8>)>> {
+        let msg = self.framed(vec![
+            ("t", Json::str("wpull")),
+            ("v", Json::num(version as f64)),
+            ("i", Json::num(index as f64)),
+        ]);
+        let reply = self.rpc(&msg)?;
+        if reply.get_str("t") == Some("wstale") {
+            return Ok(None);
+        }
+        let got = reply.get_usize("i").unwrap_or(index);
+        let total = reply.get_usize("n").context("wchunk missing total")?;
+        let data = reply
+            .get_str("d")
+            .and_then(super::weights::hex_decode)
+            .context("wchunk carries malformed hex data")?;
+        Ok(Some((got, total, data)))
+    }
+
+    /// Return in-flight requests salvaged from a severed connection: they
+    /// re-route through the endpoint's disconnect hook under the epoch the
+    /// old connection served (`resub` frame — the external analogue of the
+    /// in-process salvage-resubmit path).
+    pub fn resubmit(&mut self, epoch: u64, reqs: &[Request<T>]) -> Result<usize> {
+        let msg = self.framed(vec![
+            ("t", Json::str("resub")),
+            ("epoch", Json::num(epoch as f64)),
+            ("reqs", Json::Arr(reqs.iter().map(request_to_json).collect())),
+        ]);
+        let reply = self.rpc(&msg)?;
+        Ok(reply.get_usize("n").unwrap_or(0))
+    }
+
+    /// Send an application frame (`result`, `stats`, …) interpreted by the
+    /// system's msg hook on the endpoint side; returns the reply.
+    pub fn send_msg(&mut self, kind: &str, mut fields: Vec<(&str, Json)>) -> Result<Json> {
+        fields.insert(0, ("t", Json::str(kind)));
+        let msg = self.framed(fields);
+        self.rpc(&msg)
     }
 
     /// Clean goodbye: tells the endpoint this close is not a failure (no
     /// disconnect salvage fires). Best-effort.
     pub fn bye(&mut self) {
-        let _ = self.rpc(&Json::obj(vec![("t", Json::str("bye"))]));
+        let msg = self.framed(vec![("t", Json::str("bye"))]);
+        let _ = self.rpc(&msg);
     }
 }
 
@@ -927,5 +1259,159 @@ mod tests {
         wait_until(|| t.queued() == 1);
         // the request is still there for a future (or salvage) pull
         assert_eq!(t.core.pull(0, 4).len(), 1);
+    }
+
+    #[test]
+    fn auth_rejects_missing_or_wrong_token() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        t.set_auth(Some("sesame"));
+        ReplicaTransport::submit(&*t, req(1, vec![1])).unwrap();
+        // no token: even the hello handshake is refused
+        assert!(SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).is_err());
+        // wrong token
+        assert!(SocketWorker::<()>::connect_auth(
+            &t.local_addr(),
+            1 << 20,
+            Some("mellon"),
+            false
+        )
+        .is_err());
+        assert_eq!(t.queued(), 1, "unauthenticated frames touch no state");
+        // right token: the full protocol works
+        let mut w =
+            SocketWorker::<()>::connect_auth(&t.local_addr(), 1 << 20, Some("sesame"), false)
+                .unwrap();
+        let p = w.pull(4, None).unwrap();
+        assert_eq!(p.reqs.len(), 1);
+        w.complete(1).unwrap();
+        w.bye();
+    }
+
+    #[test]
+    fn weight_stream_serves_chunks_and_resumes() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let blob: Arc<Vec<u8>> = Arc::new((0..1000u32).map(|i| (i % 251) as u8).collect());
+        const CB: usize = 256;
+        let served = Arc::new(AtomicU64::new(0));
+        let (b1, b2, s2) = (Arc::clone(&blob), Arc::clone(&blob), Arc::clone(&served));
+        t.set_weight_source(
+            Arc::new(move |have| {
+                let total = super::super::weights::chunk_count(b1.len(), CB);
+                // resume only a partial assembly of the current version
+                let start = match have {
+                    Some((7, k)) if k < total => k,
+                    _ => 0,
+                };
+                Some((7, total, start))
+            }),
+            Arc::new(move |v, i| {
+                if v != 7 {
+                    return None;
+                }
+                s2.fetch_add(1, Ordering::Relaxed);
+                super::super::weights::chunk_slice(&b2, CB, i)
+                    .map(|c| (c.to_vec(), super::super::weights::chunk_count(b2.len(), CB)))
+            }),
+        );
+        let mut asm = super::super::weights::WeightAssembler::new();
+        // first connection: pull two chunks, then die mid-stream
+        {
+            let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+            let (v, total, start) = w.weight_begin(None).unwrap().expect("plan");
+            assert_eq!((v, start), (7, 0));
+            for i in 0..2usize {
+                let (ri, n, data) = w.weight_pull(v, i).unwrap().expect("chunk");
+                assert_eq!((ri, n), (i, total));
+                assert!(asm.offer(v, ri, n, &data).unwrap().is_none());
+            }
+            // dropped without bye
+        }
+        assert_eq!(asm.progress(), Some((7, 2)));
+        // reconnect: the stream resumes from the acked cursor, not chunk 0
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        let (v, total, start) = w.weight_begin(asm.progress()).unwrap().expect("plan");
+        assert_eq!(start, 2, "resumed, not restarted");
+        let mut done = None;
+        for i in start..total {
+            let (ri, n, data) = w.weight_pull(v, i).unwrap().expect("chunk");
+            done = asm.offer(v, ri, n, &data).unwrap();
+        }
+        assert_eq!(done, Some((7, (*blob).clone())));
+        // every chunk crossed the wire exactly once
+        assert_eq!(served.load(Ordering::Relaxed) as usize, total);
+        // an unknown version answers wstale, not an error
+        assert!(w.weight_pull(99, 0).unwrap().is_none());
+        // no weight source: wbegin reports wnone
+        let t2 = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let mut w2 = SocketWorker::<()>::connect(&t2.local_addr(), 1 << 20).unwrap();
+        assert!(w2.weight_begin(None).unwrap().is_none());
+        w.bye();
+        w2.bye();
+    }
+
+    #[test]
+    fn closed_hook_fires_on_every_connection_end() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let closed = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&closed);
+        t.set_closed_fn(Arc::new(move || {
+            c2.fetch_add(1, Ordering::Release);
+        }));
+        // clean bye
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        w.bye();
+        drop(w);
+        wait_until(|| closed.load(Ordering::Acquire) == 1);
+        // dropped without bye: still fires (cursor cleanup is unconditional)
+        {
+            let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+            w.pull(1, None).unwrap();
+        }
+        wait_until(|| closed.load(Ordering::Acquire) == 2);
+    }
+
+    #[test]
+    fn resub_reroutes_requests_through_the_disconnect_hook() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let got: Arc<Mutex<Vec<(u64, u64)>>> = Arc::new(Mutex::new(Vec::new()));
+        let g2 = Arc::clone(&got);
+        t.set_disconnect_fn(Arc::new(move |epoch, orphans| {
+            let mut g = g2.lock().unwrap();
+            for q in orphans {
+                g.push((epoch, q.group));
+            }
+        }));
+        // the worker "salvaged" these after a sever on an older connection
+        let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        let reqs = vec![req(4, vec![1, 2]), req(5, vec![3])];
+        let n = w.resubmit(0, &reqs).unwrap();
+        assert_eq!(n, 2);
+        let g = got.lock().unwrap().clone();
+        assert_eq!(g, vec![(0, 4), (0, 5)], "both re-routed under the quoted epoch");
+        w.bye();
+    }
+
+    #[test]
+    fn hello_join_revives_a_closed_endpoint() {
+        let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+        let weak = Arc::downgrade(&t);
+        t.set_join_fn(Arc::new(move || match weak.upgrade() {
+            Some(t) => {
+                let e = t.reopen();
+                e > 0
+            }
+            None => false,
+        }));
+        let salvaged = t.close_salvage_at(0).expect("current epoch");
+        assert!(salvaged.is_empty());
+        // plain hello on the closed slot: no revival
+        let w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+        assert!(!w.open(), "closed endpoint stays closed for a plain hello");
+        // join hello: the hook revives the slot and the reply carries the
+        // successor epoch
+        let w2 =
+            SocketWorker::<()>::connect_auth(&t.local_addr(), 1 << 20, None, true).unwrap();
+        assert!(w2.open());
+        assert_eq!(w2.epoch(), 2);
     }
 }

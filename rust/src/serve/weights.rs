@@ -1,0 +1,272 @@
+//! Streamed weight distribution: the chunked, version-tagged shard codec
+//! and the worker-side reassembler (DESIGN.md §13).
+//!
+//! The serving layer treats a published parameter set as an opaque byte
+//! blob (the runtime owns the tensor encoding); this module owns how that
+//! blob crosses the wire. A blob is cut into fixed-size chunks, each
+//! shipped in its own frame tagged with `(version, index, total)` — the
+//! same version tag the KV plane uses to fence stale work. Chunks arrive
+//! strictly in order per stream, so the assembler is a cursor, not a
+//! reorder buffer: duplicates behind the cursor are idempotent, gaps ahead
+//! of it are protocol errors, and a newer version restarts assembly from
+//! scratch while an older one is dropped (version-tag monotonicity). The
+//! cursor survives a connection loss, which is what makes a resumed — not
+//! restarted — transfer possible: the worker's reconnect handshake quotes
+//! `progress()` and the server slices the stream from that chunk onward.
+
+/// Number of chunks a blob of `blob_len` bytes cuts into at `chunk_bytes`
+/// per chunk. An empty blob still ships one (empty) chunk so every stream
+/// has a final frame.
+pub fn chunk_count(blob_len: usize, chunk_bytes: usize) -> usize {
+    let cb = chunk_bytes.max(1);
+    blob_len.div_ceil(cb).max(1)
+}
+
+/// Byte range of chunk `index`, or `None` past the end of the stream.
+pub fn chunk_slice(blob: &[u8], chunk_bytes: usize, index: usize) -> Option<&[u8]> {
+    let cb = chunk_bytes.max(1);
+    if index >= chunk_count(blob.len(), chunk_bytes) {
+        return None;
+    }
+    let lo = index * cb;
+    let hi = (lo + cb).min(blob.len());
+    Some(&blob[lo.min(blob.len())..hi])
+}
+
+/// Lowercase hex encoding for carrying chunk bytes inside a JSON frame.
+// areal-lint: allow(panic, reason="nibbles are < 16 by construction")
+pub fn hex_encode(data: &[u8]) -> String {
+    let mut s = String::with_capacity(data.len() * 2);
+    for &b in data {
+        s.push(char::from_digit((b >> 4) as u32, 16).unwrap());
+        s.push(char::from_digit((b & 0xf) as u32, 16).unwrap());
+    }
+    s
+}
+
+/// Inverse of [`hex_encode`]; `None` on odd length or a non-hex digit.
+pub fn hex_decode(s: &str) -> Option<Vec<u8>> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        let hi = (pair[0] as char).to_digit(16)?;
+        let lo = (pair[1] as char).to_digit(16)?;
+        out.push(((hi << 4) | lo) as u8);
+    }
+    Some(out)
+}
+
+struct Assembly {
+    version: u64,
+    total: usize,
+    chunks: usize,
+    buf: Vec<u8>,
+}
+
+/// Worker-side reassembly cursor for the chunked weight stream.
+#[derive(Default)]
+pub struct WeightAssembler {
+    cur: Option<Assembly>,
+    /// Highest version fully assembled so far (monotone floor).
+    done_version: Option<u64>,
+}
+
+impl WeightAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one received chunk. Returns the completed `(version, blob)`
+    /// when this chunk finishes a stream, `Ok(None)` for mid-stream
+    /// progress and for idempotently-dropped stale/duplicate chunks, and
+    /// `Err` on protocol violations (a gap or an inconsistent total) —
+    /// after which the caller should re-handshake from chunk 0.
+    pub fn offer(
+        &mut self,
+        version: u64,
+        index: usize,
+        total: usize,
+        data: &[u8],
+    ) -> Result<Option<(u64, Vec<u8>)>, String> {
+        if total == 0 {
+            return Err("weight stream advertised zero chunks".into());
+        }
+        // monotonicity: anything at or below the last assembled version is
+        // a stale straggler (e.g. duplicated frames landing after a
+        // fast-forward) — drop it without disturbing newer progress
+        if self.done_version.is_some_and(|d| version <= d) {
+            return Ok(None);
+        }
+        if let Some(a) = &self.cur {
+            let (cur_v, cur_total) = (a.version, a.total);
+            if version < cur_v {
+                return Ok(None);
+            }
+            if version > cur_v {
+                self.cur = None; // newer stream supersedes the partial one
+            } else if cur_total != total {
+                return Err(format!(
+                    "weight stream v{version} changed total {cur_total} -> {total}"
+                ));
+            }
+        }
+        if self.cur.is_none() {
+            if index != 0 {
+                return Err(format!(
+                    "weight stream v{version} started at chunk {index}, not 0"
+                ));
+            }
+            self.cur = Some(Assembly { version, total, chunks: 0, buf: Vec::new() });
+        }
+        let Some(a) = self.cur.as_mut() else {
+            return Err("weight assembler lost its stream state".into());
+        };
+        if index < a.chunks {
+            return Ok(None); // duplicate behind the cursor: idempotent
+        }
+        if index > a.chunks {
+            return Err(format!(
+                "weight stream v{version} gap: got chunk {index}, expected {}",
+                a.chunks
+            ));
+        }
+        a.buf.extend_from_slice(data);
+        a.chunks += 1;
+        if a.chunks == a.total {
+            if let Some(done) = self.cur.take() {
+                self.done_version = Some(done.version);
+                return Ok(Some((done.version, done.buf)));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Resume point for the reconnect handshake: `(version, chunks held)`
+    /// of the in-progress stream, if any.
+    pub fn progress(&self) -> Option<(u64, usize)> {
+        self.cur.as_ref().map(|a| (a.version, a.chunks))
+    }
+
+    /// Highest fully-assembled version, if any.
+    pub fn done_version(&self) -> Option<u64> {
+        self.done_version
+    }
+
+    /// Drop any partial stream (e.g. the server declared it stale).
+    pub fn reset_partial(&mut self) {
+        self.cur = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i * 31 % 251) as u8).collect()
+    }
+
+    fn feed_all(a: &mut WeightAssembler, v: u64, b: &[u8], cb: usize) -> Option<(u64, Vec<u8>)> {
+        let total = chunk_count(b.len(), cb);
+        let mut out = None;
+        for i in 0..total {
+            let c = chunk_slice(b, cb, i).unwrap();
+            if let Some(done) = a.offer(v, i, total, c).unwrap() {
+                out = Some(done);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn chunking_covers_the_blob_exactly() {
+        for (len, cb) in [(0, 8), (1, 8), (7, 8), (8, 8), (9, 8), (64, 8), (65, 8), (5, 1)] {
+            let b = blob(len);
+            let n = chunk_count(len, cb);
+            let mut joined = Vec::new();
+            for i in 0..n {
+                joined.extend_from_slice(chunk_slice(&b, cb, i).unwrap());
+            }
+            assert_eq!(joined, b, "len={len} cb={cb}");
+            assert!(chunk_slice(&b, cb, n).is_none());
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_duplicate_chunks_are_idempotent() {
+        let b = blob(100);
+        let mut a = WeightAssembler::new();
+        let total = chunk_count(b.len(), 16);
+        for i in 0..total {
+            let c = chunk_slice(&b, 16, i).unwrap();
+            // duplicate every frame: the second copy must be a no-op
+            let first = a.offer(7, i, total, c).unwrap();
+            if i + 1 < total {
+                assert!(first.is_none());
+                assert!(a.offer(7, i, total, c).unwrap().is_none());
+            } else {
+                assert_eq!(first, Some((7, b.clone())));
+            }
+        }
+        assert_eq!(a.done_version(), Some(7));
+        // a full stale replay of v7 after completion is dropped whole
+        assert!(feed_all(&mut a, 7, &b, 16).is_none());
+    }
+
+    #[test]
+    fn newer_version_restarts_and_older_is_dropped() {
+        let b7 = blob(64);
+        let b9 = blob(80);
+        let mut a = WeightAssembler::new();
+        let t7 = chunk_count(b7.len(), 16);
+        a.offer(7, 0, t7, chunk_slice(&b7, 16, 0).unwrap()).unwrap();
+        a.offer(7, 1, t7, chunk_slice(&b7, 16, 1).unwrap()).unwrap();
+        assert_eq!(a.progress(), Some((7, 2)));
+        // v9 arrives mid-v7: restart from scratch
+        let done = feed_all(&mut a, 9, &b9, 16).expect("v9 completes");
+        assert_eq!(done, (9, b9));
+        // late v7 chunks after v9 completed: monotone floor drops them
+        assert!(a.offer(7, 2, t7, chunk_slice(&b7, 16, 2).unwrap()).unwrap().is_none());
+        assert_eq!(a.done_version(), Some(9));
+    }
+
+    #[test]
+    fn gaps_and_cold_resume_are_protocol_errors() {
+        let b = blob(64);
+        let mut a = WeightAssembler::new();
+        let total = chunk_count(b.len(), 16);
+        assert!(a.offer(3, 1, total, &b[16..32]).is_err(), "cold start at chunk 1");
+        a.offer(3, 0, total, chunk_slice(&b, 16, 0).unwrap()).unwrap();
+        assert!(a.offer(3, 2, total, chunk_slice(&b, 16, 2).unwrap()).is_err(), "gap");
+    }
+
+    #[test]
+    fn progress_survives_for_resume() {
+        let b = blob(100);
+        let mut a = WeightAssembler::new();
+        let total = chunk_count(b.len(), 32);
+        a.offer(5, 0, total, chunk_slice(&b, 32, 0).unwrap()).unwrap();
+        a.offer(5, 1, total, chunk_slice(&b, 32, 1).unwrap()).unwrap();
+        // "reconnect": the cursor quotes where the resumed stream starts
+        let (v, k) = a.progress().unwrap();
+        assert_eq!((v, k), (5, 2));
+        let mut done = None;
+        for i in k..total {
+            done = a.offer(5, i, total, chunk_slice(&b, 32, i).unwrap()).unwrap();
+        }
+        assert_eq!(done, Some((5, b)));
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let b = blob(300);
+        let s = hex_encode(&b);
+        assert_eq!(hex_decode(&s).unwrap(), b);
+        assert_eq!(hex_decode("").unwrap(), Vec::<u8>::new());
+        assert!(hex_decode("abc").is_none());
+        assert!(hex_decode("zz").is_none());
+    }
+}

@@ -182,6 +182,25 @@ pub fn weight_broadcast_s(hw: &HardwareProfile, m: &ModelProfile, n_gen: usize) 
     m.weight_bytes() / hw.net_bw * stages / 8.0
 }
 
+/// Ack window of the chunked weight stream (DESIGN.md §13): the worker
+/// pipelines this many `wpull`s before waiting on acks, so the per-chunk
+/// RPC round-trip is paid once per window, not once per chunk.
+pub const WEIGHT_STREAM_WINDOW: f64 = 16.0;
+
+/// One replica adopting a streamed weight set (the out-of-process
+/// `wbegin`/`wpull` path): the full set crosses the wire once per
+/// receiver — no tree stages, each worker pulls straight from the param
+/// server — plus a windowed-ack RPC overhead proportional to the chunk
+/// count. Unlike [`weight_broadcast_s`] this never lands on the trainer's
+/// critical path; each replica pays its own stall, overlapped with the
+/// rest of the fleet's decode.
+pub fn weight_stream_stall_s(hw: &HardwareProfile, m: &ModelProfile,
+                             hop_s: f64, chunk_bytes: f64) -> f64 {
+    let chunks = (m.weight_bytes() / chunk_bytes.max(1.0)).ceil().max(1.0);
+    let transfer = m.weight_bytes() / (8.0 * hw.net_bw);
+    transfer + 2.0 * hop_s.max(0.0) * (chunks / WEIGHT_STREAM_WINDOW).ceil()
+}
+
 /// Max decoding slots per device given the KV budget at context `ctx`.
 pub fn max_slots(hw: &HardwareProfile, m: &ModelProfile, ctx: f64) -> usize {
     let tp = m.tp as f64;
@@ -247,6 +266,21 @@ mod tests {
         assert!(s32k >= 1);
         // 32B is tp=4: weights fit the logical device with room for KV
         assert!(s32k >= 8, "tp sharding should leave real KV room, got {s32k}");
+    }
+
+    #[test]
+    fn streamed_stall_vs_broadcast() {
+        // at hop=0 one receiver's streamed pull costs the same wire time
+        // as a single-stage broadcast — the win is structural (off the
+        // trainer's critical path), not a cheaper transfer
+        let stall = weight_stream_stall_s(&H800, &MODEL_7B, 0.0, 262_144.0);
+        assert!((stall - weight_broadcast_s(&H800, &MODEL_7B, 1)).abs() < 1e-9);
+        // expensive hops surface through the windowed-ack term
+        let dear = weight_stream_stall_s(&H800, &MODEL_7B, 0.1, 262_144.0);
+        assert!(dear > stall + 1.0);
+        // bigger chunks amortize the RPC overhead away
+        let big = weight_stream_stall_s(&H800, &MODEL_7B, 0.1, 16e6);
+        assert!(big < dear);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::util::stats;
 use super::profile::{
     decode_round_s, max_slots, prefill_bucket_tokens, prefill_s, prefill_wave_s, reshard_s,
     train_step_s,
-    weight_broadcast_s, HardwareProfile, ModelProfile,
+    weight_broadcast_s, weight_stream_stall_s, HardwareProfile, ModelProfile,
 };
 use super::workload::LenSampler;
 
@@ -74,6 +74,17 @@ pub struct SimConfig {
     /// This is the `SocketTransport` / multi-node deployment model; sweep
     /// it to predict when remote replicas stop paying off
     pub transport_hop_s: f64,
+    /// streamed weight distribution (DESIGN.md §13, async policy): the
+    /// trainer publishes and keeps training — each generation replica
+    /// pulls the new version as chunked shards over its own link, paying
+    /// `weight_stream_stall_s` at its next adoption point instead of the
+    /// fleet-wide `weight_broadcast_s` sitting on the trainer's critical
+    /// path. Sweep against `transport_hop_s` to find where streamed
+    /// shards beat the full-set rebroadcast
+    pub weight_stream: bool,
+    /// chunk size of the streamed weight shards (bytes; mirrors the live
+    /// `weight_chunk_bytes` config key)
+    pub weight_chunk_bytes: f64,
     /// dynamic gen/train rebalancing (async policy only): replace the
     /// static `gen_fraction` split with the coordinator's
     /// staleness-headroom threshold policy (`coordinator::rebalance`,
@@ -120,6 +131,8 @@ impl SimConfig {
             family_prefix_frac: 0.0,
             fail_replica: None,
             transport_hop_s: 0.0,
+            weight_stream: false,
+            weight_chunk_bytes: 262_144.0,
             rebalance: false,
             len_drift: None,
             prefill_tok_s: 0.0,
@@ -697,6 +710,17 @@ fn refill_device(d: usize, devices: &mut [GenDevice], router: &mut SimRouter,
     RefillOutcome { paid_prompt_tokens: paid, cached_prompt_tokens: cached, stolen, hops }
 }
 
+/// One streamed weight-set adoption (DESIGN.md §13): returns the stall
+/// the replica pays and accounts the chunks it pulled on the same
+/// `areal_weight_chunks_total` series the live `WeightStreamer`
+/// increments per served chunk.
+fn stream_adoption_s(cfg: &SimConfig) -> f64 {
+    let chunks =
+        (cfg.model.weight_bytes() / cfg.weight_chunk_bytes.max(1.0)).ceil() as u64;
+    metrics::inc("areal_weight_chunks_total", chunks.max(1));
+    weight_stream_stall_s(&cfg.hw, &cfg.model, cfg.transport_hop_s, cfg.weight_chunk_bytes)
+}
+
 /// One refill pass over the whole fleet — every alive replica serves its
 /// inbox (non-interruptible replicas waiting on a weight apply are
 /// skipped until they drain).
@@ -717,6 +741,12 @@ fn refill_all(devices: &mut [GenDevice], router: &mut SimRouter, rng: &mut Rng,
         if devices[d].pending_weights {
             if devices[d].slots.is_empty() {
                 devices[d].pending_weights = false; // weights applied
+                if cfg.weight_stream {
+                    // the drained replica pulls the new shards over its
+                    // own link before it can decode again
+                    let stall = stream_adoption_s(cfg);
+                    devices[d].resume_at = devices[d].resume_at.max(now) + stall;
+                }
             } else {
                 continue; // draining
             }
@@ -905,7 +935,14 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
             let gen_now = router.alive.iter().filter(|a| **a).count()
                 + retiring.iter().filter(|r| **r).count();
             let train_core = train_step_s(hw, m, toks, n_train);
-            let dur = train_core + weight_broadcast_s(hw, m, gen_now.max(1));
+            // streamed shards take the fan-out off the trainer's critical
+            // path entirely: the publish is pull-based, each replica pays
+            // its own adoption stall (charged at its adoption point below)
+            let dur = if cfg.weight_stream {
+                train_core
+            } else {
+                train_core + weight_broadcast_s(hw, m, gen_now.max(1))
+            };
             train_active_s += train_core;
             trainer_busy_until = Some(now + dur);
             tokens_trained += toks;
@@ -1042,6 +1079,15 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                 if matches!(dev.family_cached, Some((_, v)) if v < version) {
                     dev.family_cached = None;
                 }
+                if cfg.weight_stream && cfg.interruptible {
+                    // interruptible adoption happens now: the replica
+                    // pulls the new shards before resuming (idle replicas
+                    // too — their next admission runs under the new
+                    // version). Non-interruptible replicas adopt when
+                    // they drain (refill_all's pending_weights clear).
+                    let stall = stream_adoption_s(cfg);
+                    dev.resume_at = dev.resume_at.max(now) + stall;
+                }
                 if cfg.interruptible {
                     if !dev.slots.is_empty() {
                         interrupts += 1;
@@ -1163,10 +1209,17 @@ pub fn run_async(cfg: &SimConfig) -> SimReport {
                                 devices[d].cached.clear();
                                 devices[d].family_cached = None;
                                 devices[d].pending_weights = false;
-                                // cold join: one weight broadcast before the
-                                // reactivated device can decode
-                                devices[d].resume_at = devices[d].resume_at.max(now)
-                                    + weight_broadcast_s(hw, m, 1);
+                                // cold join: the full weight set crosses
+                                // the wire before the reactivated device
+                                // can decode — streamed as chunked shards
+                                // or as one point-to-point broadcast
+                                let join_s = if cfg.weight_stream {
+                                    stream_adoption_s(cfg)
+                                } else {
+                                    weight_broadcast_s(hw, m, 1)
+                                };
+                                devices[d].resume_at =
+                                    devices[d].resume_at.max(now) + join_s;
                                 n_train -= m.tp;
                                 train_to_gen += 1;
                                 burst -= 1;
@@ -1275,6 +1328,38 @@ mod tests {
         let mut c = SimConfig::paper_default(model, 64, 16384.0);
         c.n_steps = 12;
         c
+    }
+
+    #[test]
+    fn streamed_weights_track_broadcast_and_charge_chunks() {
+        // at loopback-grade hops the streamed plan must be competitive
+        // with the tree broadcast (the transfer itself costs the same;
+        // only where it lands differs), and the chunk accounting must
+        // flow to the same counter the live WeightStreamer uses
+        crate::util::metrics::set_enabled(true);
+        let mut cfg = small_cfg(MODEL_1_5B);
+        let broadcast = run_async(&cfg);
+        cfg.weight_stream = true;
+        cfg.transport_hop_s = 1e-4;
+        let before = crate::util::metrics::snapshot()
+            .counter("areal_weight_chunks_total")
+            .unwrap_or(0);
+        let streamed = run_async(&cfg);
+        let after = crate::util::metrics::snapshot()
+            .counter("areal_weight_chunks_total")
+            .unwrap_or(0);
+        assert!(after > before, "streamed adoptions must account chunks");
+        assert!(
+            streamed.effective_tps > 0.9 * broadcast.effective_tps,
+            "streamed {} vs broadcast {}",
+            streamed.effective_tps,
+            broadcast.effective_tps
+        );
+        // WAN-grade hops make per-chunk round-trips dominate: the sweep
+        // has a crossover, streaming is not uniformly better
+        cfg.transport_hop_s = 10.0;
+        let dear = run_async(&cfg);
+        assert!(dear.effective_tps < streamed.effective_tps);
     }
 
     #[test]

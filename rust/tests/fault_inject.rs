@@ -1,0 +1,338 @@
+//! Fault-injection test plane for the out-of-process worker path
+//! (ISSUE 10, DESIGN.md §13): a frame-aware TCP proxy (`support/proxy.rs`)
+//! sits between a [`SocketWorker`] and its [`SocketTransport`] endpoint
+//! and injects the failures a loopback test never sees on its own —
+//! severed links mid-pull and mid-weight-stream, torn (truncated) frames,
+//! duplicated frames, added latency. Each scenario asserts the designed
+//! recovery invariant, not just survival:
+//!
+//! - a kill mid-pull loses zero requests: the epoch fence salvages the
+//!   inbox and the worker's `resub` returns the in-flight ones, so every
+//!   GRPO group is served whole;
+//! - a kill mid-weight-stream resumes from the last assembled chunk (the
+//!   reconnect handshake quotes `WeightAssembler::progress`), it does not
+//!   restart — every chunk crosses the wire once;
+//! - a truncated frame desynchronizes only the connection, never the
+//!   assembly: the resumed stream completes bit-exact;
+//! - a version retired mid-stream answers stale and the worker
+//!   fast-forwards to the latest (catch-up, not replay);
+//! - a duplicated chunk frame shifts the RPC stream one reply behind; the
+//!   assembler's duplicate-drop cursor realigns it and the blob still
+//!   assembles bit-exact.
+//!
+//! These tests run the protocol machinery directly (no model artifacts
+//! needed); `worker_proc.rs` covers the same wire with a real child
+//! process and a real engine.
+
+#[path = "support/proxy.rs"]
+mod proxy;
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use areal::coordinator::{ParamServer, WeightStreamer};
+use areal::runtime::executor::SendLiteral;
+use areal::runtime::params::decode_param_set;
+use areal::runtime::{HostTensor, ParamSet, Version};
+use areal::serve::{
+    ReplicaTransport, Request, SocketTransport, SocketWorker, WeightAssembler,
+};
+
+use proxy::FaultProxy;
+
+fn req(group: u64, tokens: Vec<i32>) -> Request<()> {
+    Request::new(group, tokens, ())
+}
+
+fn pset(v: Version) -> Arc<ParamSet> {
+    let lit = HostTensor::scalar_f32(v as f32).to_literal().unwrap();
+    ParamSet::with_version(vec![SendLiteral(lit)], v)
+}
+
+fn wait_until(what: &str, mut f: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting: {what}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Stand-in for the fleet's salvage wiring on a single endpoint: the
+/// disconnect hook collects the fenced inbox salvage plus any orphaned
+/// in-flight requests into a shared stash the test re-routes, exactly the
+/// role `Router::remove_replica_at` plays in the full system.
+fn wire_salvage(t: &Arc<SocketTransport<()>>) -> Arc<Mutex<Vec<Request<()>>>> {
+    let stash: Arc<Mutex<Vec<Request<()>>>> = Arc::new(Mutex::new(Vec::new()));
+    let weak = Arc::downgrade(t);
+    let s2 = Arc::clone(&stash);
+    t.set_disconnect_fn(Arc::new(move |epoch, orphans| {
+        let mut s = s2.lock().unwrap();
+        if let Some(ep) = weak.upgrade() {
+            // fenced: salvages only if `epoch` is still the current tenancy
+            if let Some(salvaged) = ep.close_salvage_at(epoch) {
+                s.extend(salvaged);
+            }
+        }
+        s.extend(orphans);
+    }));
+    let weak = Arc::downgrade(t);
+    t.set_join_fn(Arc::new(move || match weak.upgrade() {
+        Some(ep) => {
+            ep.reopen();
+            true
+        }
+        None => false,
+    }));
+    stash
+}
+
+#[test]
+fn kill_mid_pull_salvages_every_request_and_groups_stay_whole() {
+    let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+    let stash = wire_salvage(&t);
+    // two GRPO groups of four: wholeness means each group id is served
+    // exactly four times across the failure
+    for g in 0..2u64 {
+        for k in 0..4i32 {
+            ReplicaTransport::submit(&*t, req(g, vec![10 * g as i32 + k])).unwrap();
+        }
+    }
+    let px = FaultProxy::start(&t.local_addr());
+
+    // the worker pulls three requests through the proxy, then the link dies
+    let mut w = SocketWorker::<()>::connect(px.addr(), 1 << 20).unwrap();
+    let old_epoch = w.epoch();
+    let pulled = w.pull(3, None).unwrap();
+    assert_eq!(pulled.reqs.len(), 3);
+    px.sever_now();
+
+    // the endpoint notices the disconnect, fences the tenancy, and the
+    // hook salvages the five still-queued requests
+    wait_until("disconnect salvage", || stash.lock().unwrap().len() == 5);
+    assert!(!t.is_open(), "lost tenancy is closed behind the fence");
+
+    // reconnect-with-catch-up: join revives the slot under a fresh epoch,
+    // and resub hands the three in-flight requests back through the same
+    // fenced re-route path (quoting the OLD epoch — stale removal is a
+    // no-op, the requests still land)
+    let mut w2 = SocketWorker::<()>::connect_auth(&t.local_addr(), 1 << 20, None, true)
+        .unwrap();
+    assert!(w2.open());
+    assert!(w2.epoch() > old_epoch, "revived slot serves a fresh epoch");
+    let n = w2.resubmit(old_epoch, &pulled.reqs).unwrap();
+    assert_eq!(n, 3);
+    wait_until("resub re-route", || stash.lock().unwrap().len() == 8);
+
+    // the fleet re-routes the stash (here: back into the revived inbox)
+    for r in stash.lock().unwrap().drain(..) {
+        ReplicaTransport::submit(&*t, r).unwrap();
+    }
+    let served = w2.pull(16, None).unwrap();
+    assert!(!served.fenced);
+    assert_eq!(served.reqs.len(), 8, "zero requests lost across the kill");
+    for g in 0..2u64 {
+        assert_eq!(
+            served.reqs.iter().filter(|r| r.group == g).count(),
+            4,
+            "GRPO group {g} left partial"
+        );
+    }
+    assert_eq!(t.queued(), 0);
+    w2.bye();
+}
+
+/// Wire a streamer to an endpoint the way `system.rs` does (weight source
+/// + closed hook for cursor cleanup), all for replica slot 0.
+fn wire_streamer(
+    t: &Arc<SocketTransport<()>>,
+    ws: &Arc<WeightStreamer>,
+) {
+    let plan_ws = Arc::clone(ws);
+    let chunk_ws = Arc::clone(ws);
+    t.set_weight_source(
+        Arc::new(move |have| plan_ws.plan(0, have)),
+        Arc::new(move |v, i| chunk_ws.chunk(0, v, i)),
+    );
+    let closed_ws = Arc::clone(ws);
+    t.set_closed_fn(Arc::new(move || closed_ws.note_closed(0)));
+}
+
+/// Drive a weight stream to completion the way the worker binary does
+/// (`stream_to_latest`): re-handshake on stale, offer under the echoed
+/// index, let the assembler cursor choose what to ask for next.
+fn stream_all(
+    w: &mut SocketWorker<()>,
+    asm: &mut WeightAssembler,
+) -> (Version, Vec<u8>) {
+    loop {
+        let (v, _total, start) = w
+            .weight_begin(asm.progress())
+            .unwrap()
+            .expect("endpoint has a weight source");
+        if start == 0 {
+            asm.reset_partial();
+        }
+        let mut i = start;
+        loop {
+            match w.weight_pull(v, i).unwrap() {
+                Some((ri, n, data)) => match asm.offer(v, ri, n, &data) {
+                    Ok(Some(done)) => return done,
+                    Ok(None) => i = asm.progress().map(|(_, k)| k).unwrap_or(0),
+                    Err(_) => {
+                        asm.reset_partial();
+                        break;
+                    }
+                },
+                None => {
+                    // wstale: fast-forward via a fresh handshake
+                    asm.reset_partial();
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kill_mid_weight_stream_resumes_from_last_acked_chunk() {
+    let ps = ParamServer::new(pset(3));
+    let ws = WeightStreamer::new(Arc::clone(&ps), 8, true);
+    let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+    wire_streamer(&t, &ws);
+    let px = FaultProxy::start(&t.local_addr());
+    px.ctl.delay_ms.store(2, Ordering::SeqCst); // a little wire latency
+
+    let mut asm = WeightAssembler::new();
+    let (v, total, start) = {
+        let mut w = SocketWorker::<()>::connect(px.addr(), 1 << 20).unwrap();
+        let (v, total, start) = w.weight_begin(None).unwrap().expect("plan");
+        assert_eq!(start, 0);
+        assert!(total >= 4, "scalar set must span several 8-byte chunks");
+        // two chunks land, then the link dies mid-broadcast
+        for i in 0..2usize {
+            let (ri, n, data) = w.weight_pull(v, i).unwrap().expect("chunk");
+            assert!(asm.offer(v, ri, n, &data).unwrap().is_none());
+        }
+        px.sever_now();
+        (v, total, start)
+    };
+    assert_eq!(asm.progress(), Some((v, 2)), "partial assembly survives the kill");
+    wait_until("cursor cleanup", || ws.cursor_count() == 0);
+
+    // reconnect straight to the endpoint: the handshake quotes the
+    // partial assembly and the plan RESUMES at chunk 2, not 0
+    px.ctl.delay_ms.store(0, Ordering::SeqCst);
+    let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+    let (v2, total2, start2) = w.weight_begin(asm.progress()).unwrap().expect("plan");
+    assert_eq!((v2, total2, start2), (v, total, 2), "resumed, not restarted");
+    let (dv, blob) = stream_all(&mut w, &mut asm);
+    assert_eq!(dv, 3);
+    assert_eq!(decode_param_set(&blob).unwrap().version, 3);
+    // every chunk crossed the wire exactly once across both connections
+    assert_eq!(ws.chunks_served(), total as u64);
+    w.bye();
+}
+
+#[test]
+fn truncated_weight_frame_kills_the_link_but_not_the_assembly() {
+    let ps = ParamServer::new(pset(9));
+    let ws = WeightStreamer::new(Arc::clone(&ps), 8, true);
+    let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+    wire_streamer(&t, &ws);
+    let px = FaultProxy::start(&t.local_addr());
+
+    let mut asm = WeightAssembler::new();
+    let mut w = SocketWorker::<()>::connect(px.addr(), 1 << 20).unwrap();
+    let (v, total, _) = w.weight_begin(None).unwrap().expect("plan");
+    let (ri, n, data) = w.weight_pull(v, 0).unwrap().expect("chunk");
+    asm.offer(v, ri, n, &data).unwrap();
+    // the next chunk frame is torn mid-body: its length prefix promises
+    // bytes that never arrive, so the read must fail — a short frame must
+    // never be delivered as if it were whole
+    px.ctl.truncate_next.store(true, Ordering::SeqCst);
+    assert!(w.weight_pull(v, 1).is_err(), "torn frame is a wire error");
+    assert_eq!(asm.progress(), Some((v, 1)), "assembly unaffected by the tear");
+
+    // reconnect and resume from the chunk the tear destroyed
+    let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+    let (v2, _, start2) = w.weight_begin(asm.progress()).unwrap().expect("plan");
+    assert_eq!((v2, start2), (v, 1));
+    let (dv, blob) = stream_all(&mut w, &mut asm);
+    assert_eq!(dv, 9);
+    assert_eq!(decode_param_set(&blob).unwrap().version, 9);
+    // the torn chunk was served server-side before the tear, so it (and
+    // only it) crosses the wire twice
+    assert_eq!(ws.chunks_served(), total as u64 + 1);
+    w.bye();
+}
+
+#[test]
+fn stale_version_mid_stream_fast_forwards_to_latest() {
+    let ps = ParamServer::new(pset(1));
+    let ws = WeightStreamer::new(Arc::clone(&ps), 8, true);
+    let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+    wire_streamer(&t, &ws);
+
+    let mut asm = WeightAssembler::new();
+    let mut w = SocketWorker::<()>::connect(&t.local_addr(), 1 << 20).unwrap();
+    let (v, _, _) = w.weight_begin(None).unwrap().expect("plan");
+    assert_eq!(v, 1);
+    for i in 0..2usize {
+        let (ri, n, data) = w.weight_pull(v, i).unwrap().expect("chunk");
+        asm.offer(v, ri, n, &data).unwrap();
+    }
+    // the trainer publishes v5 mid-stream: v1 is retired on the spot
+    ps.publish(pset(5));
+    assert!(w.weight_pull(v, 2).unwrap().is_none(), "retired version answers stale");
+    // the worker's catch-up loop re-handshakes and fast-forwards: the new
+    // plan streams v5 from scratch and completes
+    let (dv, blob) = stream_all(&mut w, &mut asm);
+    assert_eq!(dv, 5);
+    assert_eq!(decode_param_set(&blob).unwrap().version, 5);
+    assert_eq!(asm.done_version(), Some(5));
+    // late v1 chunks after the fast-forward are dropped, not assembled
+    assert!(asm.offer(1, 2, 4, &[0u8; 8]).unwrap().is_none());
+    w.bye();
+}
+
+#[test]
+fn duplicated_chunk_frames_realign_and_assemble_bit_exact() {
+    let ps = ParamServer::new(pset(4));
+    let ws = WeightStreamer::new(Arc::clone(&ps), 8, true);
+    let t = SocketTransport::<()>::listen("127.0.0.1:0", 1 << 20).unwrap();
+    wire_streamer(&t, &ws);
+    let px = FaultProxy::start(&t.local_addr());
+
+    let mut asm = WeightAssembler::new();
+    let mut w = SocketWorker::<()>::connect(px.addr(), 1 << 20).unwrap();
+    let (v, total, _) = w.weight_begin(None).unwrap().expect("plan");
+    let (ri, n, data) = w.weight_pull(v, 0).unwrap().expect("chunk");
+    asm.offer(v, ri, n, &data).unwrap();
+    // duplicate the next chunk frame: from here on every reply is one
+    // request behind — the assembler must drop the duplicates (keyed on
+    // the ECHOED index) and the cursor must keep re-asking until the
+    // stream realigns. Armed after the handshake so the duplicated frame
+    // is a wchunk, the interesting case.
+    px.ctl.duplicate_next.store(true, Ordering::SeqCst);
+    let mut done = None;
+    let mut i = asm.progress().map(|(_, k)| k).unwrap_or(0);
+    while done.is_none() {
+        let (ri, n, data) = w.weight_pull(v, i).unwrap().expect("chunk");
+        done = asm.offer(v, ri, n, &data).unwrap();
+        i = asm.progress().map(|(_, k)| k).unwrap_or(0);
+    }
+    let (dv, blob) = done.unwrap();
+    assert_eq!(dv, 4);
+    assert_eq!(decode_param_set(&blob).unwrap().version, 4);
+    assert_eq!(asm.done_version(), Some(4));
+    assert!(
+        ws.chunks_served() > total as u64,
+        "realignment re-pulls chunks; the duplicate cannot be free"
+    );
+    // the one extra injected reply still sits in the socket buffer; the
+    // connection is otherwise healthy — drop it without a bye and let the
+    // endpoint's disconnect path clean up
+    drop(w);
+    wait_until("cursor cleanup", || ws.cursor_count() == 0);
+}

@@ -7,11 +7,19 @@
 //! - eviction never frees a block an in-flight sequence still references;
 //! - insert-then-match returns the longest cached prefix (the block-aligned
 //!   prefix of what was inserted).
+//!
+//! Plus the weight-shard frame codec (ISSUE 10): chunking/reassembly
+//! round-trips at arbitrary chunk sizes (including the exact-divisible ±1
+//! boundaries), duplicated offers are idempotent, and version tags stay
+//! monotone under interleaved streams.
 
 use std::collections::HashMap;
 
 use areal::prop_assert;
-use areal::serve::{BlockId, BlockManager, RadixCache, Scheduler, SeqId, ServeCfg};
+use areal::serve::{
+    chunk_count, chunk_slice, hex_decode, hex_encode, BlockId, BlockManager, RadixCache,
+    Scheduler, SeqId, ServeCfg, WeightAssembler,
+};
 use areal::util::prop::prop_check;
 use areal::util::rng::Rng;
 
@@ -204,6 +212,134 @@ fn insert_then_match_returns_longest_cached_prefix() {
 
         if let Err(e) = cache.check(&bm) {
             return Err(e);
+        }
+        Ok(())
+    });
+}
+
+fn random_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.range_i64(0, 256) as u8).collect()
+}
+
+#[test]
+fn weight_chunking_round_trips_at_any_chunk_size() {
+    prop_check(300, |rng| {
+        let cb = rng.range_usize(1, 40);
+        // exercise the exact-divisible boundary and its neighbors: blob
+        // lengths k*cb - 1, k*cb, k*cb + 1 (clamped at 0), plus random
+        let len = match rng.range_usize(0, 4) {
+            0 => rng.range_usize(0, 5) * cb,
+            1 => (rng.range_usize(1, 5) * cb).saturating_sub(1),
+            2 => rng.range_usize(0, 5) * cb + 1,
+            _ => rng.range_usize(0, 4 * cb + 2),
+        };
+        let blob = random_bytes(rng, len);
+        let total = chunk_count(blob.len(), cb);
+        prop_assert!(total >= 1, "even an empty blob streams as one frame");
+        prop_assert!(
+            total == len.max(1).div_ceil(cb),
+            "chunk_count({len}, {cb}) = {total}"
+        );
+
+        // every in-range index yields a slice, one past the end yields none
+        let mut glued: Vec<u8> = Vec::new();
+        for i in 0..total {
+            let Some(s) = chunk_slice(&blob, cb, i) else {
+                return Err(format!("chunk {i}/{total} missing for len {len} cb {cb}"));
+            };
+            prop_assert!(
+                i + 1 == total || s.len() == cb,
+                "only the final chunk may be short (chunk {i} has {} bytes)",
+                s.len()
+            );
+            glued.extend_from_slice(s);
+        }
+        prop_assert!(
+            chunk_slice(&blob, cb, total).is_none(),
+            "index {total} is out of range"
+        );
+        prop_assert!(glued == blob, "reassembly must be bitwise round-trip");
+
+        // the assembler agrees, even when every chunk is offered twice
+        let v = rng.range_i64(1, 1 << 20) as u64;
+        let mut asm = WeightAssembler::new();
+        let mut done = None;
+        for i in 0..total {
+            let s = chunk_slice(&blob, cb, i).unwrap();
+            let r = asm.offer(v, i, total, s).map_err(|e| e.to_string())?;
+            if rng.chance(0.5) {
+                // duplicate delivery is idempotent: dropped, not an error
+                let dup = asm.offer(v, i, total, s).map_err(|e| e.to_string())?;
+                prop_assert!(dup.is_none(), "duplicate chunk re-completed a stream");
+            }
+            done = done.or(r);
+        }
+        let Some((dv, dblob)) = done else {
+            return Err("stream never completed".into());
+        };
+        prop_assert!(dv == v && dblob == blob, "assembled blob differs");
+        prop_assert!(asm.done_version() == Some(v), "done_version not recorded");
+
+        // hex transport encoding round-trips too
+        let hex = hex_encode(&blob);
+        prop_assert!(hex_decode(&hex).as_deref() == Some(&blob[..]), "hex round-trip");
+        Ok(())
+    });
+}
+
+#[test]
+fn weight_assembler_versions_stay_monotone() {
+    prop_check(200, |rng| {
+        let cb = rng.range_usize(1, 16);
+        let mut asm = WeightAssembler::new();
+        let mut highest_done: Option<u64> = None;
+        // a sequence of streams at random versions, some interrupted by a
+        // newer publish mid-flight — the assembler must only ever complete
+        // versions strictly above everything it already finished
+        for _ in 0..rng.range_usize(1, 12) {
+            let v = rng.range_i64(1, 64) as u64;
+            // deterministic content per version: a re-drawn version must
+            // stream the same bytes, as a real publisher would
+            let blob: Vec<u8> = (0..(v as usize * 7) % (3 * cb + 1))
+                .map(|j| (v as u8).wrapping_mul(31).wrapping_add(j as u8))
+                .collect();
+            let total = chunk_count(blob.len(), cb);
+            let abort_at = if rng.chance(0.3) && total > 1 {
+                rng.range_usize(1, total)
+            } else {
+                total
+            };
+            for i in 0..abort_at {
+                let s = chunk_slice(&blob, cb, i).unwrap();
+                match asm.offer(v, i, total, s) {
+                    Ok(Some((dv, db))) => {
+                        prop_assert!(
+                            highest_done.map_or(true, |h| dv > h),
+                            "completed v{dv} at or below finished v{highest_done:?}"
+                        );
+                        prop_assert!(dv == v && db == blob, "wrong blob for v{v}");
+                        highest_done = Some(dv);
+                    }
+                    Ok(None) => {}
+                    Err(_) => {
+                        // stale-version offers may be rejected; never mid-
+                        // stream of a version the assembler accepted
+                        prop_assert!(
+                            i == 0 || asm.progress().map_or(true, |(pv, _)| pv != v),
+                            "assembler errored mid-stream of an accepted version"
+                        );
+                        break;
+                    }
+                }
+            }
+            if rng.chance(0.2) {
+                asm.reset_partial();
+                prop_assert!(asm.progress().is_none(), "reset left a partial");
+            }
+            prop_assert!(
+                asm.done_version() == highest_done,
+                "done_version diverged from the model"
+            );
         }
         Ok(())
     });

@@ -1,0 +1,145 @@
+//! Frame-aware fault-injection proxy for the socket transport test plane
+//! (ISSUE 10): a TCP shim that sits between a `SocketWorker` and a
+//! `SocketTransport` endpoint, forwards the length-prefixed frames of the
+//! wire protocol in both directions, and injects faults on command —
+//! sever the link mid-frame, delay frames, truncate one frame's body,
+//! duplicate one frame. The coordinator sees an ordinary (misbehaving)
+//! client; the client sees an ordinary (flaky) coordinator — exactly the
+//! failure surface a multi-node deployment has and loopback tests
+//! otherwise never exercise.
+//!
+//! Fault switches apply to the downstream direction (endpoint → client):
+//! that is where pulled requests, weight chunks and result acks travel,
+//! i.e. where loss and duplication have observable protocol consequences.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Shared fault switches. Flip them from the test while traffic flows.
+#[derive(Default)]
+pub struct Controls {
+    /// added latency per forwarded frame, in milliseconds (both directions)
+    pub delay_ms: AtomicU64,
+    /// drop every live connection now; new connections are still accepted
+    /// once the flag is cleared
+    pub sever: AtomicBool,
+    /// truncate the next downstream frame mid-body, then drop the link
+    /// (a torn write: length prefix promises more bytes than arrive)
+    pub truncate_next: AtomicBool,
+    /// send the next downstream frame twice
+    pub duplicate_next: AtomicBool,
+    /// downstream frames forwarded intact (progress accounting)
+    pub frames_down: AtomicUsize,
+}
+
+pub struct FaultProxy {
+    addr: String,
+    pub ctl: Arc<Controls>,
+    live: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl FaultProxy {
+    /// Start a proxy in front of `upstream` (an endpoint's
+    /// `local_addr()`). Listens on an ephemeral loopback port.
+    pub fn start(upstream: &str) -> FaultProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind proxy");
+        let addr = listener.local_addr().expect("proxy addr").to_string();
+        let ctl = Arc::new(Controls::default());
+        let live: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let upstream = upstream.to_string();
+        let ctl_l = Arc::clone(&ctl);
+        let live_l = Arc::clone(&live);
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(client) = conn else { break };
+                let Ok(server) = TcpStream::connect(&upstream) else {
+                    let _ = client.shutdown(Shutdown::Both);
+                    continue;
+                };
+                client.set_nodelay(true).ok();
+                server.set_nodelay(true).ok();
+                {
+                    let mut l = live_l.lock().unwrap();
+                    l.push(client.try_clone().expect("clone client"));
+                    l.push(server.try_clone().expect("clone server"));
+                }
+                // upstream pump: client -> endpoint, no fault injection
+                let c_up = client.try_clone().expect("clone");
+                let s_up = server.try_clone().expect("clone");
+                let ctl_up = Arc::clone(&ctl_l);
+                std::thread::spawn(move || pump(c_up, s_up, ctl_up, false));
+                // downstream pump: endpoint -> client, faults apply here
+                let ctl_down = Arc::clone(&ctl_l);
+                std::thread::spawn(move || pump(server, client, ctl_down, true));
+            }
+        });
+        FaultProxy { addr, ctl, live }
+    }
+
+    /// Address clients should dial instead of the endpoint's.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Cut every live connection now (both directions, mid-whatever), and
+    /// let subsequent reconnects pass again.
+    pub fn sever_now(&self) {
+        self.ctl.sever.store(true, Ordering::SeqCst);
+        let mut l = self.live.lock().unwrap();
+        for s in l.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        self.ctl.sever.store(false, Ordering::SeqCst);
+    }
+}
+
+/// Read exactly one `u32`-BE length-prefixed frame. None on EOF/error.
+fn read_frame(s: &mut TcpStream) -> Option<Vec<u8>> {
+    let mut len = [0u8; 4];
+    s.read_exact(&mut len).ok()?;
+    let n = u32::from_be_bytes(len) as usize;
+    if n > 64 << 20 {
+        return None; // corrupt length: drop the link
+    }
+    let mut body = vec![0u8; n];
+    s.read_exact(&mut body).ok()?;
+    let mut frame = len.to_vec();
+    frame.extend_from_slice(&body);
+    Some(frame)
+}
+
+fn pump(mut from: TcpStream, mut to: TcpStream, ctl: Arc<Controls>, down: bool) {
+    while let Some(frame) = read_frame(&mut from) {
+        let d = ctl.delay_ms.load(Ordering::Relaxed);
+        if d > 0 {
+            std::thread::sleep(Duration::from_millis(d));
+        }
+        if ctl.sever.load(Ordering::SeqCst) {
+            break;
+        }
+        if down && ctl.truncate_next.swap(false, Ordering::SeqCst) {
+            // torn write: ship the length prefix and half the body, then
+            // kill the link — the reader's read_exact must error, never
+            // deliver a short frame as if it were whole
+            let cut = 4 + (frame.len() - 4) / 2;
+            let _ = to.write_all(&frame[..cut]);
+            break;
+        }
+        if down && ctl.duplicate_next.swap(false, Ordering::SeqCst) {
+            if to.write_all(&frame).is_err() {
+                break;
+            }
+        }
+        if to.write_all(&frame).is_err() {
+            break;
+        }
+        if down {
+            ctl.frames_down.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+    let _ = from.shutdown(Shutdown::Both);
+    let _ = to.shutdown(Shutdown::Both);
+}

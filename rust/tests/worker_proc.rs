@@ -1,0 +1,337 @@
+//! Out-of-process worker binary, end to end (ISSUE 10, DESIGN.md §13):
+//! spawn the real `areal` binary as a child process in worker mode, let it
+//! compile its own engine from the artifact manifest, stream the published
+//! weights chunk-by-chunk over loopback, serve a full rollout round, and
+//! exit cleanly on Drain. The coordinator side here is the exact wiring
+//! `system.rs` installs on a socket endpoint — router pull hook, weight
+//! streamer, result sink — assembled by hand so the test can watch every
+//! seam.
+//!
+//! Acceptance (vs an in-process baseline running the same engine, seed,
+//! and serve loop skeleton over a `LocalTransport` router):
+//!
+//! - zero lost requests: every submitted request comes back as exactly one
+//!   trajectory, no GRPO group left partial;
+//! - bitwise-equal routing: the placement trace matches;
+//! - bitwise-equal prefill accounting: the child's final `stats` frame
+//!   reports the same cached/computed prefill token counts the baseline
+//!   engine measures, and the sampled completions themselves are
+//!   identical — the process boundary changes delivery, not behavior;
+//! - the weights crossed the wire through the chunked stream (no shared
+//!   memory exists between the processes to hand a `ParamSet` over).
+//!
+//! Requires `make artifacts` (skips otherwise), like the other
+//! integration suites.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Weak};
+use std::time::{Duration, Instant};
+
+use areal::config::Config;
+use areal::coordinator::{
+    Event, GenEngine, GenRouter, ParamServer, ReplayBuffer, ResultSink, Trace, Trajectory,
+    WeightStreamer,
+};
+use areal::reward::RewardService;
+use areal::runtime::artifacts::test_artifacts_dir;
+use areal::runtime::{Engine, Manifest, ParamSet};
+use areal::serve::{
+    Control, Pulled, ReplicaTransport, Request, RoutePolicy, RouterCfg, ServeCfg,
+    SocketTransport,
+};
+use areal::tasks::{AdditionTask, Prompt};
+use areal::text::tokenizer::Tokenizer;
+
+macro_rules! require_artifacts {
+    () => {
+        if test_artifacts_dir().is_none() {
+            eprintln!("skipping: AOT artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The knobs both sides must agree on. Everything else stays at the
+/// config defaults the child also loads.
+fn shared_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = artifacts_dir();
+    cfg.tier = "nano".into();
+    cfg.seed = 11;
+    cfg
+}
+
+/// Replicates `run_worker`'s ServeCfg derivation so the baseline engine
+/// is configured exactly like the child's.
+fn serve_cfg(engine: &Engine, cfg: &Config) -> ServeCfg {
+    let c = &engine.spec.config;
+    let bs = if cfg.kv_block_size == 0 {
+        ServeCfg::default_block_size(c.max_seq)
+    } else {
+        cfg.kv_block_size
+    };
+    let mut s = ServeCfg::for_engine(c.gen_batch, c.max_seq, bs);
+    if cfg.kv_blocks > 0 {
+        s.num_blocks = cfg.kv_blocks;
+    }
+    s.prefix_cache = cfg.prefix_cache;
+    s
+}
+
+/// Two GRPO groups of four identical prompts each (the group-mean
+/// baseline samples the same prompt `group_size` times), in submission
+/// order.
+fn prompt_round() -> Vec<Prompt> {
+    let mut out = Vec::new();
+    for g in 0..2u64 {
+        let (a, b) = (g + 1, 2 * g + 3);
+        let p = Prompt {
+            text: format!("Q{a}+{b}="),
+            meta: format!("add:{a},{b}"),
+            level: 1,
+            group: g,
+        };
+        for _ in 0..4 {
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+fn rcfg(serve: &ServeCfg) -> RouterCfg {
+    RouterCfg::new(RoutePolicy::Probe, serve.block_size, 0).probe_ttl(u64::MAX)
+}
+
+/// Sorted multiset of (group, token stream) for order-insensitive
+/// bit-exact comparison of completions across the two runs.
+fn traj_key(trajs: &[Trajectory]) -> Vec<(u64, Vec<i32>)> {
+    let mut k: Vec<(u64, Vec<i32>)> =
+        trajs.iter().map(|t| (t.prompt.group, t.tokens.clone())).collect();
+    k.sort();
+    k
+}
+
+#[test]
+fn worker_binary_round_matches_in_process_baseline() {
+    require_artifacts!();
+    let cfg = shared_cfg();
+    let manifest = Manifest::load(&cfg.artifacts_dir).expect("manifest");
+    let spec = manifest.tier(&cfg.tier).expect("nano tier");
+    let engine = Arc::new(Engine::load(spec).expect("compile artifacts"));
+    let serve = serve_cfg(&engine, &cfg);
+    let prompts = prompt_round();
+    let total = prompts.len() as u64;
+
+    // ---- coordinator side: one socket endpoint, wired as system.rs does
+    let endpoint =
+        SocketTransport::<Prompt>::listen("127.0.0.1:0", cfg.socket_max_frame).unwrap();
+    let transports: Vec<Arc<dyn ReplicaTransport<Prompt>>> =
+        vec![Arc::clone(&endpoint) as Arc<dyn ReplicaTransport<Prompt>>];
+    let router = Arc::new(GenRouter::new_with(transports, rcfg(&serve)));
+    let weak: Weak<GenRouter> = Arc::downgrade(&router);
+    endpoint.set_pull_fn(Arc::new(move |epoch, max_n| match weak.upgrade() {
+        Some(r) => r.pull_at(0, epoch, max_n),
+        None => Pulled { reqs: Vec::new(), stolen: None },
+    }));
+    let params = ParamSet::init(&engine, [cfg.seed as u32, 0x9e37]).expect("init params");
+    let server = ParamServer::new(Arc::clone(&params));
+    let streamer = WeightStreamer::new(Arc::clone(&server), 4096, true);
+    let (s1, s2, s3) = (Arc::clone(&streamer), Arc::clone(&streamer), Arc::clone(&streamer));
+    endpoint.set_weight_source(
+        Arc::new(move |have| s1.plan(0, have)),
+        Arc::new(move |v, i| s2.chunk(0, v, i)),
+    );
+    endpoint.set_closed_fn(Arc::new(move || s3.note_closed(0)));
+    let buffer = Arc::new(ReplayBuffer::new());
+    let reward = Arc::new(RewardService::new(Arc::new(AdditionTask), 1));
+    let trace = Arc::new(Trace::new(true));
+    let sink = ResultSink::new(
+        Arc::clone(&buffer),
+        reward,
+        Arc::clone(&trace),
+        Arc::new(AtomicU64::new(0)),
+        "probe",
+    );
+    let sink_c = Arc::clone(&sink);
+    endpoint.set_msg_fn(Arc::new(move |kind, msg| sink_c.handle(0, kind, msg)));
+    let weak_t = Arc::downgrade(&endpoint);
+    endpoint.set_join_fn(Arc::new(move || match weak_t.upgrade() {
+        Some(ep) => {
+            ep.reopen();
+            true
+        }
+        None => false,
+    }));
+
+    // submit the whole round BEFORE the child connects, so its first
+    // refill pull sees the same queue the baseline's does
+    let tok = Tokenizer::new();
+    let mut socket_placements = Vec::new();
+    for p in &prompts {
+        let tokens = tok.encode_bos(&p.text);
+        socket_placements.push(router.submit(Request::new(p.group, tokens, p.clone())));
+    }
+
+    // ---- the real worker binary, as a separate OS process
+    let mut child = Command::new(env!("CARGO_BIN_EXE_areal"))
+        .arg("worker")
+        .arg(format!("connect={}", endpoint.local_addr()))
+        .arg(format!("artifacts_dir={}", cfg.artifacts_dir.display()))
+        .arg(format!("tier={}", cfg.tier))
+        .arg(format!("seed={}", cfg.seed))
+        .stdin(Stdio::null())
+        .stdout(Stdio::inherit())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn areal worker");
+
+    // every request comes back as exactly one accepted trajectory
+    let t0 = Instant::now();
+    while sink.accepted() < total {
+        if t0.elapsed() > Duration::from_secs(180) {
+            let _ = child.kill();
+            panic!("worker served {}/{total} results before timeout", sink.accepted());
+        }
+        if let Ok(Some(status)) = child.try_wait() {
+            panic!("worker exited early ({status}) after {} results", sink.accepted());
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // drain: the child finishes its inbox, reports stats, and exits 0
+    router.broadcast(Control::Drain);
+    let status = loop {
+        if let Some(s) = child.try_wait().expect("wait child") {
+            break s;
+        }
+        if t0.elapsed() > Duration::from_secs(240) {
+            let _ = child.kill();
+            panic!("worker never exited after Drain");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "worker exit status: {status}");
+    assert_eq!(sink.accepted(), total, "zero lost, zero extra");
+    assert_eq!(sink.duplicates(), 0, "clean run resends nothing");
+    assert!(
+        streamer.chunks_served() > 0,
+        "weights must cross the wire through the chunked stream"
+    );
+    assert_eq!(router.queued_total(), 0, "inbox fully served");
+
+    // reward verification lands every trajectory in the replay buffer
+    let socket_trajs = buffer.pop_batch(total as usize).expect("all trajectories land");
+    for g in 0..2u64 {
+        assert_eq!(
+            socket_trajs.iter().filter(|t| t.prompt.group == g).count(),
+            4,
+            "GRPO group {g} left partial"
+        );
+    }
+    // the child's final stats frame carries its prefill accounting
+    let mut child_stats: Option<(u64, u64)> = None;
+    for s in trace.snapshot() {
+        if let Event::CacheStat { cached_tokens, computed_tokens, .. } = s.event {
+            child_stats = Some((cached_tokens, computed_tokens));
+        }
+    }
+    let child_stats = child_stats.expect("worker reported prefill stats before exit");
+    endpoint.shutdown();
+
+    // ---- in-process baseline: same engine artifacts, same seed, same
+    // serve-loop skeleton, LocalTransport router
+    let router_b = Arc::new(GenRouter::new(1, rcfg(&serve)));
+    let mut local_placements = Vec::new();
+    for p in &prompts {
+        let tokens = tok.encode_bos(&p.text);
+        local_placements.push(router_b.submit(Request::new(p.group, tokens, p.clone())));
+    }
+    let params_b = ParamSet::init(&engine, [cfg.seed as u32, 0x9e37]).expect("init params");
+    let mut gen = GenEngine::with_serve(
+        Arc::clone(&engine),
+        params_b,
+        0,
+        cfg.temperature,
+        cfg.seed,
+        Some(serve),
+    );
+    gen.configure_prefix_prefill(cfg.prefix_prefill, cfg.prefill_bucket_min);
+    let b = gen.n_slots();
+    let mut baseline_trajs: Vec<Trajectory> = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(180);
+    while (baseline_trajs.len() as u64) < total {
+        assert!(Instant::now() < deadline, "baseline starved");
+        // the exact refill/prefill/decode skeleton `serve_once` runs; the
+        // engine-state conditions (and therefore the RNG cadence) evolve
+        // identically, which is what makes the comparison bitwise
+        let capacity = gen.fill_capacity();
+        let empties = gen.empty_slots();
+        let refill_wave = gen.all_empty()
+            || gen.needs_prefill()
+            || (empties as f64) >= (b as f64) * cfg.refill_fraction;
+        if refill_wave {
+            if capacity > 0 {
+                let epoch = router_b.epoch(0);
+                let mut reqs = router_b.pull_at(0, epoch, capacity).reqs;
+                for r in &mut reqs {
+                    r.span.stamp_admit();
+                }
+                if !reqs.is_empty() {
+                    gen.fill_requests(reqs).unwrap();
+                }
+            }
+            if gen.admission_feasible() {
+                gen.request_prefill();
+            }
+        }
+        if gen.needs_prefill() && (gen.waiting() > 0 || !gen.all_empty()) {
+            gen.prefill().unwrap();
+        }
+        if !gen.all_empty() && !gen.needs_prefill() {
+            baseline_trajs.extend(gen.decode_chunk().unwrap());
+        }
+    }
+
+    // ---- equivalence
+    assert_eq!(
+        socket_placements, local_placements,
+        "routing diverged across the process boundary"
+    );
+    let s = gen.serve_stats();
+    assert_eq!(
+        child_stats,
+        (s.prefill_tokens_cached, s.prefill_tokens_computed),
+        "prefill accounting diverged across the process boundary"
+    );
+    assert!(
+        s.prefill_tokens_cached > 0,
+        "the round must exercise the prefix cache (identical group prompts)"
+    );
+    assert_eq!(
+        traj_key(&socket_trajs),
+        traj_key(&baseline_trajs),
+        "sampled completions diverged across the process boundary"
+    );
+}
+
+#[test]
+fn worker_binary_refuses_to_start_without_connect() {
+    // no artifacts needed: the argument check fires before the manifest
+    // loads, and a clear error beats a hang for an operator typo
+    let out = Command::new(env!("CARGO_BIN_EXE_areal"))
+        .arg("worker")
+        .output()
+        .expect("run areal worker");
+    assert!(!out.status.success(), "worker without connect= must fail");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("connect"),
+        "error must name the missing key, got: {err}"
+    );
+}
